@@ -1,0 +1,70 @@
+//! High-speed network scenarios (the §5.2 / Figure 6 workloads).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example highspeed_scenarios
+//! ```
+//!
+//! Replays the three FABRIC-style throttled scenarios and shows the
+//! adaptive controller discovering the theoretical optimal concurrency
+//! `C* = link ÷ per-thread cap` from a cold start, against fixed 3/5.
+//! Hundreds of simulated seconds of 10–20 Gbps transfer replay in a
+//! couple of wall seconds.
+
+use fastbiodl::baselines::BaselineTool;
+use fastbiodl::experiments::runner::{run_tool_once, Tool};
+use fastbiodl::experiments::scenario;
+use fastbiodl::report::sparkline;
+use fastbiodl::runtime::XlaRuntime;
+use std::sync::Arc;
+
+fn main() -> fastbiodl::Result<()> {
+    let rt = Arc::new(XlaRuntime::load_default()?);
+    for which in ['a', 'b', 'c'] {
+        let sc = scenario::fabric(which, 7)?;
+        println!(
+            "\n=== {} : link {:.0} Mbps, per-thread {:.0} Mbps, C* = {:.1} ===",
+            sc.name,
+            sc.netsim.link_capacity_mbps,
+            sc.netsim.server.per_conn_cap_mbps,
+            sc.c_star_theoretical.unwrap()
+        );
+        let adaptive = run_tool_once(&sc, &Tool::fastbiodl(&sc), &rt, 7)?;
+        let fixed5 = run_tool_once(
+            &sc,
+            &Tool::Baseline(BaselineTool::fixed_fastbiodl(5, &sc.download)),
+            &rt,
+            7,
+        )?;
+        let fixed3 = run_tool_once(
+            &sc,
+            &Tool::Baseline(BaselineTool::fixed_fastbiodl(3, &sc.download)),
+            &rt,
+            7,
+        )?;
+        for r in [&adaptive, &fixed5, &fixed3] {
+            println!(
+                "  {:<10} {:>7.1}s  {:>8.0} Mbps  C̄={:>5.2}  {}",
+                r.tool,
+                r.duration_s,
+                r.mean_throughput_mbps,
+                r.mean_concurrency,
+                sparkline(&r.timeline.values, 40)
+            );
+        }
+        println!(
+            "  adaptive speedup: {:.2}x vs fixed-5, {:.2}x vs fixed-3",
+            fixed5.duration_s / adaptive.duration_s,
+            fixed3.duration_s / adaptive.duration_s
+        );
+        let late = adaptive
+            .concurrency_trace
+            .last()
+            .map(|&(_, c)| c)
+            .unwrap_or(0);
+        println!(
+            "  adaptive final target C = {late} (theoretical {:.1})",
+            sc.c_star_theoretical.unwrap()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""FastBioDL build-time compile path (L2 JAX model + L1 Pallas kernels).
+
+This package exists only at build time: ``make artifacts`` runs
+``python -m compile.aot`` once to lower the controller compute graphs to
+HLO text under ``artifacts/``, which the Rust runtime loads via PJRT.
+Nothing in here is imported on the request path.
+"""

@@ -1,0 +1,89 @@
+"""AOT lowering: L2 graphs → HLO text artifacts for the Rust runtime.
+
+Usage (normally via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and DESIGN.md §4.
+
+Besides the ``.hlo.txt`` files this writes ``manifest.json`` recording
+every artifact's input/output shapes and the model constants (WINDOW,
+GRID, SAMPLES), which ``rust/src/runtime/artifacts.rs`` checks at load
+time so a stale artifact directory fails fast instead of mis-executing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    """Lower every artifact in model.artifact_specs(); return the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text-v1",
+        "constants": {
+            "window": model.WINDOW,
+            "grid": model.GRID,
+            "samples": model.SAMPLES,
+        },
+        "artifacts": {},
+    }
+    for name, (fn, specs) in model.artifact_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_json(s) for s in specs],
+            "outputs": [_spec_json(s) for s in jax.tree_util.tree_leaves(out_specs)],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        if verbose:
+            print(f"  {name}: {len(text)} chars -> {path}", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    lower_all(args.out_dir, verbose=not args.quiet)
+    print(f"artifacts written to {os.path.abspath(args.out_dir)}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

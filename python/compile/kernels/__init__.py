@@ -1,0 +1,30 @@
+"""L1 Pallas kernels for the FastBioDL controller compute.
+
+Every kernel in this package is the compute hot-spot of one of the L2
+graphs in :mod:`compile.model` and has a pure-jnp oracle in
+:mod:`compile.kernels.ref` that pytest checks against (see
+``python/tests/``).
+
+All kernels are lowered with ``interpret=True``: the runtime executes
+them on the CPU PJRT client, which cannot run real-TPU Mosaic
+custom-calls.  The BlockSpec structure is still written the way a TPU
+lowering would want it (single-VMEM-block residency for the small
+controller windows; row-tiled blocks for the 2-D utility surface) so the
+kernels document their intended TPU schedule — see DESIGN.md §7.
+"""
+
+from compile.kernels.utility import (
+    utility_batch,
+    utility_surface,
+)
+from compile.kernels.grad_window import weighted_slope_sums
+from compile.kernels.rbf import rbf_matrix
+from compile.kernels.window_stats import window_stats
+
+__all__ = [
+    "utility_batch",
+    "utility_surface",
+    "weighted_slope_sums",
+    "rbf_matrix",
+    "window_stats",
+]

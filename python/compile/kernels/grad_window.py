@@ -1,0 +1,67 @@
+"""Pallas reduction kernel for the gradient-descent probe window.
+
+The gradient-descent controller (paper §4.2, Algorithm 1) estimates
+``dU/dC`` from the recent probe history.  Rather than the two-point
+finite difference of the last pair of probes — which the paper notes is
+noisy under "momentary disk or network spikes" — we fit a
+recency-weighted least-squares line ``U ≈ a + g·C`` over the whole
+window and take its slope ``g``.  That requires five weighted moments:
+
+    S_w   = Σ w_i
+    S_c   = Σ w_i c_i
+    S_u   = Σ w_i u_i
+    S_cc  = Σ w_i c_i²
+    S_cu  = Σ w_i c_i u_i
+
+from which the L2 graph computes ``g = (S_w·S_cu − S_c·S_u) /
+(S_w·S_cc − S_c² + ε)``.  This kernel computes the five moments in one
+pass over the window — on TPU a single-VMEM-block VPU reduction (the
+window is 16 floats; the whole working set is three 64-byte vectors).
+
+The weights ``w_i`` fold together the validity mask (ring buffer slots
+that have not been filled yet) and an exponential recency decay computed
+host-side, so the kernel stays a pure reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Number of moments produced by the kernel, in order
+#: (S_w, S_c, S_u, S_cc, S_cu).
+NUM_MOMENTS = 5
+
+
+def _weighted_slope_sums_kernel(c_ref, u_ref, w_ref, o_ref):
+    c = c_ref[...]
+    u = u_ref[...]
+    w = w_ref[...]
+    wc = w * c
+    o_ref[0] = jnp.sum(w)
+    o_ref[1] = jnp.sum(wc)
+    o_ref[2] = jnp.sum(w * u)
+    o_ref[3] = jnp.sum(wc * c)
+    o_ref[4] = jnp.sum(wc * u)
+
+
+def weighted_slope_sums(c: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
+    """Five weighted moments of the (concurrency, utility) window.
+
+    Args:
+      c: ``f32[n]`` concurrency of each probe.
+      u: ``f32[n]`` utility measured at that probe.
+      w: ``f32[n]`` combined validity × recency weight per probe
+        (0 for empty ring slots).
+
+    Returns:
+      ``f32[5]`` — ``(S_w, S_c, S_u, S_cc, S_cu)``.
+    """
+    if not (c.shape == u.shape == w.shape):
+        raise ValueError(f"shape mismatch: c={c.shape} u={u.shape} w={w.shape}")
+    return pl.pallas_call(
+        _weighted_slope_sums_kernel,
+        out_shape=jax.ShapeDtypeStruct((NUM_MOMENTS,), c.dtype),
+        interpret=True,
+    )(c, u, w)

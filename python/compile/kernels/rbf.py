@@ -1,0 +1,56 @@
+"""Pallas kernel for the Bayesian controller's RBF (Gaussian) kernel matrix.
+
+The paper's in-system baseline (§4.2, Figure 4) is Bayesian optimization
+with a Gaussian-process surrogate over concurrency.  Building the GP
+posterior needs two kernel matrices every step:
+
+* ``K_oo = rbf(c_obs, c_obs)`` — (W, W) over the observation window, and
+* ``K_og = rbf(c_obs, grid)``  — (W, G) against the candidate grid.
+
+Both are pairwise ``exp(−(x_i − y_j)² / (2ℓ²))`` evaluations — the
+matmul-shaped hot spot of the Bayesian step, so it lives at L1.  The
+kernel computes one full output tile per grid step with the row slice of
+``x`` and column slice of ``y`` resident (the same outer-product
+HBM→VMEM schedule as ``utility_surface``); distances and the
+exponential run on the VPU.
+
+Shapes here are tiny (W = 16, G = 64), so a single block covers each
+output; the BlockSpec tiling still expresses the schedule a larger
+deployment (bigger windows, 2-D configuration spaces as in Falcon-style
+transfer optimizers) would want.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbf_matrix_kernel(x_ref, y_ref, ls_ref, o_ref):
+    x = x_ref[...]  # (m,)
+    y = y_ref[...]  # (n,)
+    inv_two_ls2 = 0.5 / (ls_ref[0] * ls_ref[0])
+    d = x[:, None] - y[None, :]
+    o_ref[...] = jnp.exp(-(d * d) * inv_two_ls2)
+
+
+def rbf_matrix(x: jax.Array, y: jax.Array, lengthscale: jax.Array) -> jax.Array:
+    """Pairwise RBF kernel matrix ``K[i, j] = exp(−(x_i − y_j)²/(2ℓ²))``.
+
+    Args:
+      x: ``f32[m]`` first point set (observed concurrency levels).
+      y: ``f32[n]`` second point set (observations again, or the
+        candidate grid).
+      lengthscale: ``f32[1]`` GP lengthscale ``ℓ > 0``.
+
+    Returns:
+      ``f32[m, n]`` kernel matrix.
+    """
+    (m,) = x.shape
+    (n,) = y.shape
+    return pl.pallas_call(
+        _rbf_matrix_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y, lengthscale)

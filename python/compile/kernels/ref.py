@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: each function computes the same
+quantity as its Pallas twin using only ``jax.numpy`` primitives, with no
+pallas_call, no BlockSpec, no tiling.  ``python/tests/test_kernels.py``
+asserts ``allclose`` between kernel and oracle over hand-picked cases
+and hypothesis-generated shape/value sweeps.
+
+Keep these boring.  Any cleverness belongs in the kernels; the oracle's
+job is to be obviously correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def utility_batch_ref(throughput: jax.Array, concurrency: jax.Array, k: jax.Array) -> jax.Array:
+    """U = T / k^C, element-wise."""
+    return throughput / jnp.power(k[0], concurrency)
+
+
+def utility_surface_ref(t_grid: jax.Array, c_grid: jax.Array, k: jax.Array) -> jax.Array:
+    """U[i, j] = t_grid[i] / k**c_grid[j]."""
+    return t_grid[:, None] / jnp.power(k[0], c_grid[None, :])
+
+
+def weighted_slope_sums_ref(c: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
+    """(S_w, S_c, S_u, S_cc, S_cu) weighted moments."""
+    return jnp.stack(
+        [
+            jnp.sum(w),
+            jnp.sum(w * c),
+            jnp.sum(w * u),
+            jnp.sum(w * c * c),
+            jnp.sum(w * c * u),
+        ]
+    )
+
+
+def rbf_matrix_ref(x: jax.Array, y: jax.Array, lengthscale: jax.Array) -> jax.Array:
+    """K[i, j] = exp(-(x_i - y_j)^2 / (2 l^2))."""
+    d = x[:, None] - y[None, :]
+    return jnp.exp(-(d * d) / (2.0 * lengthscale[0] * lengthscale[0]))
+
+
+def window_stats_ref(samples: jax.Array, valid: jax.Array, weights: jax.Array) -> jax.Array:
+    """(count, Σx, Σx², min, max, Σw·x, Σw) with ±3e38 empty sentinels."""
+    xv = samples * valid
+    return jnp.stack(
+        [
+            jnp.sum(valid),
+            jnp.sum(xv),
+            jnp.sum(xv * samples),
+            jnp.min(jnp.where(valid > 0, samples, 3.0e38)),
+            jnp.max(jnp.where(valid > 0, samples, -3.0e38)),
+            jnp.sum(weights * samples * valid),
+            jnp.sum(weights * valid),
+        ]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph references for the L2 steps (used by python/tests/test_model.py;
+# the same math is mirrored in Rust by optimizer::mirror for cross-language
+# consistency tests).
+# ---------------------------------------------------------------------------
+
+
+def gd_next_concurrency_ref(
+    c_hist: jax.Array,
+    u_hist: jax.Array,
+    w: jax.Array,
+    c_now: jax.Array,
+    lr: float,
+    step_clip: float,
+    c_min: float,
+    c_max: float,
+    eps: float = 1e-6,
+):
+    """Reference for the weighted-least-squares GD update in model.gd_step.
+
+    Returns (next_c, grad, step) to match the artifact's diagnostic outputs.
+    """
+    s_w = jnp.sum(w)
+    s_c = jnp.sum(w * c_hist)
+    s_u = jnp.sum(w * u_hist)
+    s_cc = jnp.sum(w * c_hist * c_hist)
+    s_cu = jnp.sum(w * c_hist * u_hist)
+    var_c = s_w * s_cc - s_c * s_c
+    cov_cu = s_w * s_cu - s_c * s_u
+    grad = cov_cu / (var_c + eps)
+    # Degenerate window (all probes at one concurrency): explore upward.
+    # u_scale makes lr unitless: the step is relative to the window's
+    # mean |utility| so the same lr works at 30 Mbps and at 20 Gbps.
+    u_scale = jnp.abs(s_u) / jnp.maximum(s_w, eps) + eps
+    raw = jnp.where(var_c <= eps, jnp.asarray(u_scale, c_hist.dtype), lr * grad)
+    step = jnp.clip(raw / u_scale, -step_clip, step_clip)
+    next_c = jnp.clip(c_now + step, c_min, c_max)
+    return next_c, grad, step
+
+
+def gp_posterior_ref(
+    c_obs: jax.Array,
+    u_obs: jax.Array,
+    valid: jax.Array,
+    grid: jax.Array,
+    lengthscale: jax.Array,
+    noise: float,
+    dead_noise: float = 1.0e6,
+):
+    """GP posterior mean/std on the grid; invalid rows get huge noise."""
+    k_oo = rbf_matrix_ref(c_obs, c_obs, lengthscale)
+    jitter = noise + (1.0 - valid) * dead_noise
+    k_oo = k_oo + jnp.diag(jitter)
+    k_og = rbf_matrix_ref(c_obs, grid, lengthscale)
+    sol_u = jnp.linalg.solve(k_oo, u_obs * valid)
+    mu = k_og.T @ sol_u
+    sol_k = jnp.linalg.solve(k_oo, k_og)
+    var = 1.0 - jnp.sum(k_og * sol_k, axis=0)
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    return mu, std
+
+
+def expected_improvement_ref(
+    mu: jax.Array, std: jax.Array, best: jax.Array, xi: float
+) -> jax.Array:
+    """EI(x) = (mu - best - xi) Phi(z) + std phi(z), z = (mu - best - xi)/std."""
+    improve = mu - best - xi
+    z = improve / jnp.maximum(std, 1e-9)
+    phi = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    big_phi = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+    ei = improve * big_phi + std * phi
+    return jnp.where(std > 1e-9, ei, jnp.maximum(improve, 0.0))

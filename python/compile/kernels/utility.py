@@ -1,0 +1,120 @@
+"""Pallas kernels for the FastBioDL utility function ``U(T, C) = T / k^C``.
+
+The utility function is the core of the paper's §4.1: it rewards
+throughput while charging an exponential penalty ``k^C`` for concurrency,
+so concurrency only rises when the marginal throughput justifies the
+extra stream.  The controller maximizes ``U`` (the implementation
+minimizes ``-U``).
+
+Two kernels live here:
+
+* :func:`utility_batch` — element-wise ``U`` over paired
+  ``(throughput, concurrency)`` vectors.  Used inside the gradient-descent
+  step (utility of every probe in the history window) and the Bayesian
+  step (utility of every observation fed to the GP).
+* :func:`utility_surface` — the full outer product ``U[i, j] =
+  t_grid[i] / k**c_grid[j]``, tiled in blocks.  Used by the Table-1
+  ablation harness and by the ``fastbiodl utility-surface`` diagnostic
+  to visualize where ``C* = 1 / ln k`` falls.
+
+``k^C`` is computed as ``exp(C * ln k)`` — on real TPU hardware this maps
+onto the VPU transcendental unit; under ``interpret=True`` it is
+numerically identical to the ``jnp.power`` oracle in ``ref.py`` up to
+one ulp, which the pytest tolerance covers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block edge for the 2-D surface kernel.  64x64 f32 = 16 KiB per block,
+# three blocks (t, c broadcast rows + out) comfortably inside one VMEM
+# window on any TPU generation; on CPU interpret mode it is just a loop
+# bound.
+SURFACE_BLOCK = 64
+
+
+def _utility_batch_kernel(t_ref, c_ref, k_ref, o_ref):
+    """o[i] = t[i] * exp(-c[i] * ln k)."""
+    ln_k = jnp.log(k_ref[0])
+    o_ref[...] = t_ref[...] * jnp.exp(-c_ref[...] * ln_k)
+
+
+def utility_batch(throughput: jax.Array, concurrency: jax.Array, k: jax.Array) -> jax.Array:
+    """Element-wise utility ``U = T / k^C`` over 1-D vectors.
+
+    Args:
+      throughput: ``f32[n]`` aggregate throughput samples (Mbps).
+      concurrency: ``f32[n]`` concurrency levels the samples were taken at.
+      k: ``f32[1]`` penalty coefficient, ``k > 1`` (paper default 1.02).
+
+    Returns:
+      ``f32[n]`` utilities.
+    """
+    if throughput.shape != concurrency.shape:
+        raise ValueError(
+            f"throughput {throughput.shape} and concurrency {concurrency.shape} must match"
+        )
+    (n,) = throughput.shape
+    return pl.pallas_call(
+        _utility_batch_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), throughput.dtype),
+        interpret=True,
+    )(throughput, concurrency, k)
+
+
+def _utility_surface_kernel(t_ref, c_ref, k_ref, o_ref):
+    """One (BLOCK, BLOCK) tile of the outer-product utility surface.
+
+    ``t_ref`` holds a (BLOCK,) row slice of the throughput grid and
+    ``c_ref`` a (BLOCK,) column slice of the concurrency grid; the tile is
+    their outer product under the utility.  Broadcasting happens in
+    registers — no materialized (BLOCK, BLOCK) intermediate besides the
+    output tile itself.
+    """
+    ln_k = jnp.log(k_ref[0])
+    t = t_ref[...]  # (B,)
+    c = c_ref[...]  # (B,)
+    o_ref[...] = t[:, None] * jnp.exp(-c[None, :] * ln_k)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def utility_surface(
+    t_grid: jax.Array, c_grid: jax.Array, k: jax.Array, *, block: int = SURFACE_BLOCK
+) -> jax.Array:
+    """Full utility surface ``U[i, j] = t_grid[i] / k**c_grid[j]``.
+
+    The grid is tiled into ``(block, block)`` output tiles; each grid step
+    loads one row-slice of ``t_grid`` and one column-slice of ``c_grid``
+    (the HBM→VMEM schedule a TPU lowering would use for an outer
+    product — the inputs are tiny, the output dominates traffic).
+
+    Args:
+      t_grid: ``f32[m]`` throughput axis, ``m % block == 0``.
+      c_grid: ``f32[n]`` concurrency axis, ``n % block == 0``.
+      k: ``f32[1]`` penalty coefficient.
+
+    Returns:
+      ``f32[m, n]`` utility surface.
+    """
+    (m,) = t_grid.shape
+    (n,) = c_grid.shape
+    if m % block or n % block:
+        raise ValueError(f"grid sizes ({m}, {n}) must be multiples of block={block}")
+    grid = (m // block, n // block)
+    return pl.pallas_call(
+        _utility_surface_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i, j: (i,)),
+            pl.BlockSpec((block,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), t_grid.dtype),
+        interpret=True,
+    )(t_grid, c_grid, k)

@@ -1,0 +1,73 @@
+"""Pallas kernel for windowed throughput statistics.
+
+The monitor thread (paper §4.2) logs instantaneous throughput samples
+during each probing interval; the optimizer consumes *aggregates* of
+that log — the mean over the probe window for the utility, plus
+dispersion statistics used by the report/CI harness (Figure 5's 68%
+band) and by the controller's stall detector.
+
+This kernel reduces one probe window (up to 256 samples — e.g. 3–5 s of
+probing at the monitor's sampling rate, padded and masked) to its raw
+moments in a single pass:
+
+    (count, Σx, Σx², min, max, Σw·x, Σw)
+
+The L2 graph turns those into mean / std / exponentially-weighted mean.
+Like :mod:`compile.kernels.grad_window`, the exponential-decay weights
+``w`` are precomputed host-side so the kernel stays a pure masked
+reduction — a single-VMEM-block VPU job on TPU (256 f32 = 1 KiB per
+input vector).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Outputs, in order: (count, sum, sumsq, min, max, wsum, wtotal).
+NUM_STATS = 7
+
+_NEG_HUGE = -3.0e38
+_POS_HUGE = 3.0e38
+
+
+def _window_stats_kernel(x_ref, v_ref, w_ref, o_ref):
+    x = x_ref[...]
+    v = v_ref[...]  # 1.0 for live samples, 0.0 for padding
+    w = w_ref[...]
+    xv = x * v
+    o_ref[0] = jnp.sum(v)
+    o_ref[1] = jnp.sum(xv)
+    o_ref[2] = jnp.sum(xv * x)
+    o_ref[3] = jnp.min(jnp.where(v > 0, x, _POS_HUGE))
+    o_ref[4] = jnp.max(jnp.where(v > 0, x, _NEG_HUGE))
+    o_ref[5] = jnp.sum(w * x * v)
+    o_ref[6] = jnp.sum(w * v)
+
+
+def window_stats(samples: jax.Array, valid: jax.Array, weights: jax.Array) -> jax.Array:
+    """Masked single-pass moments of a throughput sample window.
+
+    Args:
+      samples: ``f32[n]`` instantaneous throughput samples (Mbps).
+      valid: ``f32[n]`` mask — 1.0 where ``samples`` holds a live sample,
+        0.0 for ring-buffer padding.
+      weights: ``f32[n]`` recency weights for the exponentially-weighted
+        mean (ignored where ``valid`` is 0).
+
+    Returns:
+      ``f32[7]`` — ``(count, Σx, Σx², min, max, Σw·x, Σw)``; ``min``/``max``
+      are ±3e38 sentinels when the window is empty (the L2 graph maps an
+      empty window to all-zero stats).
+    """
+    if not (samples.shape == valid.shape == weights.shape):
+        raise ValueError(
+            f"shape mismatch: samples={samples.shape} valid={valid.shape} "
+            f"weights={weights.shape}"
+        )
+    return pl.pallas_call(
+        _window_stats_kernel,
+        out_shape=jax.ShapeDtypeStruct((NUM_STATS,), samples.dtype),
+        interpret=True,
+    )(samples, valid, weights)

@@ -1,0 +1,304 @@
+"""L2 compute graphs for the FastBioDL adaptive-concurrency controller.
+
+Each public function here is one AOT artifact: ``compile.aot`` lowers it
+to HLO text once at build time, and the Rust optimizer loop executes it
+every probing interval through the PJRT runtime.  The graphs call the L1
+Pallas kernels in :mod:`compile.kernels` for their hot-spots and contain
+only fixed-shape, pure-HLO math besides that — in particular **no
+lax.linalg / lapack custom-calls** (xla_extension 0.5.1's CPU client
+cannot execute jax's FFI lapack calls, so the 16×16 GP solve is an
+unrolled Cholesky written in plain jnp ops) and **no jax.scipy erf**
+(approximated with the Abramowitz–Stegun 7.1.26 polynomial, max abs
+error 1.5e-7, well inside the controller's tolerance).
+
+Fixed shapes (padded + masked by the Rust side):
+
+* ``WINDOW = 16``   — probe-history ring (one entry per probing interval).
+* ``GRID = 64``     — candidate concurrency grid for the Bayesian step.
+* ``SAMPLES = 256`` — raw monitor samples per probe window.
+
+Parameter vectors are fixed-length f32 arrays so artifact signatures
+never change when a knob is added; see the per-function docstrings for
+slot layouts (mirrored in ``rust/src/runtime/artifacts.rs``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.grad_window import weighted_slope_sums
+from compile.kernels.rbf import rbf_matrix
+from compile.kernels.utility import utility_batch, utility_surface as utility_surface_kernel
+from compile.kernels.window_stats import window_stats
+
+WINDOW = 16
+GRID = 64
+SAMPLES = 256
+
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Shared numeric helpers (pure HLO)
+# ---------------------------------------------------------------------------
+
+
+def _erf(x: jax.Array) -> jax.Array:
+    """Abramowitz–Stegun 7.1.26 erf approximation (max abs err 1.5e-7).
+
+    Pure add/mul/exp — guaranteed to lower to plain HLO the 0.5.1 CPU
+    client can run, unlike ``jax.scipy.special.erf`` which may emit a
+    CHLO decomposition with unsupported ops on old runtimes.
+    """
+    a1, a2, a3, a4, a5 = 0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429
+    p = 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _cholesky_unrolled(a: jax.Array) -> jax.Array:
+    """Cholesky factor of a small SPD matrix, unrolled at trace time.
+
+    ``a`` is ``f32[n, n]`` with n = WINDOW (16): the loop nest unrolls to
+    ~136 scalar updates, which XLA fuses aggressively.  This replaces
+    ``jnp.linalg.cholesky`` to avoid lapack FFI custom-calls.
+    """
+    n = a.shape[0]
+    l = jnp.zeros_like(a)
+    for i in range(n):
+        for j in range(i + 1):
+            s = a[i, j] - jnp.dot(l[i, :j], l[j, :j]) if j > 0 else a[i, j]
+            if i == j:
+                l = l.at[i, j].set(jnp.sqrt(jnp.maximum(s, 1e-12)))
+            else:
+                l = l.at[i, j].set(s / l[j, j])
+    return l
+
+
+def _solve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L y = b (forward substitution, unrolled). b: f32[n] or f32[n, m]."""
+    n = l.shape[0]
+    y = jnp.zeros_like(b)
+    for i in range(n):
+        acc = b[i] - (l[i, :i] @ y[:i] if i > 0 else 0.0)
+        y = y.at[i].set(acc / l[i, i])
+    return y
+
+
+def _solve_upper_t(l: jax.Array, y: jax.Array) -> jax.Array:
+    """Solve Lᵀ x = y (back substitution, unrolled). y: f32[n] or f32[n, m]."""
+    n = l.shape[0]
+    x = jnp.zeros_like(y)
+    for i in reversed(range(n)):
+        acc = y[i] - (l[i + 1 :, i] @ x[i + 1 :] if i + 1 < n else 0.0)
+        x = x.at[i].set(acc / l[i, i])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Artifact: gd_step
+# ---------------------------------------------------------------------------
+
+
+def gd_step(
+    c_hist: jax.Array, t_hist: jax.Array, w: jax.Array, params: jax.Array
+) -> tuple[jax.Array]:
+    """One gradient-descent concurrency update (paper §4.2, Algorithm 1).
+
+    Inputs:
+      c_hist: ``f32[WINDOW]`` concurrency of each probe in the ring.
+      t_hist: ``f32[WINDOW]`` mean throughput (Mbps) measured at that probe.
+      w:      ``f32[WINDOW]`` validity × recency weight (0 = empty slot).
+      params: ``f32[8]`` — ``[k, lr, step_clip, c_min, c_max, c_now, _, _]``.
+
+    Output (1-tuple): ``f32[4]`` — ``[next_c, grad, step, u_weighted_mean]``.
+    ``next_c`` is continuous; the Rust controller rounds, applies
+    hysteresis and clamps to the live worker-pool bounds.
+
+    The gradient is the recency-weighted least-squares slope of
+    ``U = T/k^C`` against ``C`` over the window (see
+    :mod:`compile.kernels.grad_window` for why a slope beats the paper's
+    noisy two-point difference).  The step is normalized by the window's
+    mean |U| so ``lr`` is unitless and transfers across bandwidth scales.
+    """
+    k = params[0:1]
+    lr, step_clip, c_min, c_max, c_now = params[1], params[2], params[3], params[4], params[5]
+
+    u_hist = utility_batch(t_hist, c_hist, k)  # L1
+    s = weighted_slope_sums(c_hist, u_hist, w)  # L1
+    s_w, s_c, s_u, s_cc, s_cu = s[0], s[1], s[2], s[3], s[4]
+
+    var_c = s_w * s_cc - s_c * s_c
+    cov_cu = s_w * s_cu - s_c * s_u
+    grad = cov_cu / (var_c + _EPS)
+    u_mean = s_u / jnp.maximum(s_w, _EPS)
+    u_scale = jnp.abs(u_mean) + _EPS
+    # Degenerate window (no concurrency variation yet): force an upward
+    # exploration step of +1 so the optimizer leaves its start point.
+    raw = jnp.where(var_c <= _EPS, u_scale, lr * grad)
+    step = jnp.clip(raw / u_scale, -step_clip, step_clip)
+    next_c = jnp.clip(c_now + step, c_min, c_max)
+    return (jnp.stack([next_c, grad, step, u_mean]),)
+
+
+# ---------------------------------------------------------------------------
+# Artifact: bayes_step
+# ---------------------------------------------------------------------------
+
+
+def bayes_step(
+    c_obs: jax.Array, t_obs: jax.Array, valid: jax.Array, grid: jax.Array, params: jax.Array
+) -> tuple[jax.Array]:
+    """One Bayesian-optimization step: GP posterior + EI acquisition.
+
+    Inputs:
+      c_obs: ``f32[WINDOW]`` observed concurrency levels.
+      t_obs: ``f32[WINDOW]`` observed mean throughput (Mbps).
+      valid: ``f32[WINDOW]`` 1.0 = live observation, 0.0 = empty slot.
+      grid:  ``f32[GRID]``   candidate concurrency levels (1..GRID).
+      params: ``f32[8]`` — ``[k, lengthscale, noise, xi, c_min, c_max, u_norm, _]``.
+        ``u_norm`` rescales utilities to O(1) before GP fitting so the
+        unit-variance RBF prior is well-matched (Rust passes a running
+        max-utility estimate; 0 disables rescaling).
+
+    Output (1-tuple): ``f32[3*GRID + 2]`` —
+    ``[mu(GRID) | std(GRID) | ei(GRID) | best_idx | next_c]``.
+
+    Invalid observations are neutralized with a huge diagonal noise term
+    (1e6) instead of dynamic shapes, keeping the artifact signature fixed.
+    The 16×16 solve is the unrolled Cholesky above — no lapack FFI.
+    """
+    k = params[0:1]
+    lengthscale = params[1:2]
+    noise, xi = params[2], params[3]
+    c_min, c_max = params[4], params[5]
+    u_norm = params[6]
+
+    u_obs = utility_batch(t_obs, c_obs, k)  # L1
+    scale = jnp.where(u_norm > 0.0, 1.0 / (u_norm + _EPS), 1.0)
+    u_obs = u_obs * valid * scale
+
+    k_oo = rbf_matrix(c_obs, c_obs, lengthscale)  # L1
+    jitter = noise + (1.0 - valid) * 1.0e6
+    k_oo = k_oo + jnp.diag(jitter)
+    k_og = rbf_matrix(c_obs, grid, lengthscale)  # L1
+
+    l = _cholesky_unrolled(k_oo)
+    alpha = _solve_upper_t(l, _solve_lower(l, u_obs))
+    mu = k_og.T @ alpha
+    v = _solve_lower(l, k_og)
+    var = 1.0 - jnp.sum(v * v, axis=0)
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+
+    best = jnp.max(jnp.where(valid > 0, u_obs, -3.0e38))
+    best = jnp.where(jnp.sum(valid) > 0, best, 0.0)
+    improve = mu - best - xi
+    z = improve / jnp.maximum(std, 1e-9)
+    pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    cdf = 0.5 * (1.0 + _erf(z / jnp.sqrt(2.0)))
+    ei = jnp.where(std > 1e-9, improve * cdf + std * pdf, jnp.maximum(improve, 0.0))
+
+    # Mask grid points outside [c_min, c_max] out of the acquisition.
+    in_bounds = (grid >= c_min) & (grid <= c_max)
+    ei_masked = jnp.where(in_bounds, ei, -3.0e38)
+    best_idx = jnp.argmax(ei_masked)
+    next_c = grid[best_idx]
+    out = jnp.concatenate(
+        [mu, std, ei, jnp.stack([best_idx.astype(mu.dtype), next_c])]
+    )
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# Artifact: throughput_window
+# ---------------------------------------------------------------------------
+
+
+def throughput_window(
+    samples: jax.Array, valid: jax.Array, weights: jax.Array
+) -> tuple[jax.Array]:
+    """Aggregate one probe window of raw monitor samples.
+
+    Inputs: ``f32[SAMPLES]`` each — instantaneous throughput samples, the
+    validity mask, and host-precomputed exponential recency weights.
+
+    Output (1-tuple): ``f32[6]`` — ``[count, mean, std, min, max, wmean]``;
+    all zeros for an empty window.
+    """
+    raw = window_stats(samples, valid, weights)  # L1
+    count, s_x, s_xx, mn, mx, s_wx, s_w = (
+        raw[0], raw[1], raw[2], raw[3], raw[4], raw[5], raw[6],
+    )
+    safe_n = jnp.maximum(count, 1.0)
+    mean = s_x / safe_n
+    var = jnp.maximum(s_xx / safe_n - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    wmean = s_wx / jnp.maximum(s_w, _EPS)
+    empty = count <= 0.0
+    z = jnp.zeros((), samples.dtype)
+    out = jnp.stack(
+        [
+            count,
+            jnp.where(empty, z, mean),
+            jnp.where(empty, z, std),
+            jnp.where(empty, z, mn),
+            jnp.where(empty, z, mx),
+            jnp.where(empty, z, wmean),
+        ]
+    )
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# Artifact: utility_surface
+# ---------------------------------------------------------------------------
+
+
+def utility_surface(t_grid: jax.Array, c_grid: jax.Array, k: jax.Array) -> tuple[jax.Array]:
+    """Batched utility surface ``U[i, j] = t_grid[i] / k**c_grid[j]``.
+
+    Inputs: ``f32[GRID]`` throughput axis, ``f32[GRID]`` concurrency axis,
+    ``f32[1]`` penalty coefficient.  Output (1-tuple): ``f32[GRID, GRID]``.
+    Used by the Table-1 harness and the ``utility-surface`` CLI diagnostic.
+    """
+    return (utility_surface_kernel(t_grid, c_grid, k),)
+
+
+# ---------------------------------------------------------------------------
+# Example-argument registry consumed by compile.aot
+# ---------------------------------------------------------------------------
+
+_F32 = jnp.float32
+
+
+def artifact_specs() -> dict:
+    """Name → (fn, example ShapeDtypeStructs). Single source of truth for AOT."""
+    s = jax.ShapeDtypeStruct
+    return {
+        "gd_step": (
+            gd_step,
+            (s((WINDOW,), _F32), s((WINDOW,), _F32), s((WINDOW,), _F32), s((8,), _F32)),
+        ),
+        "bayes_step": (
+            bayes_step,
+            (
+                s((WINDOW,), _F32),
+                s((WINDOW,), _F32),
+                s((WINDOW,), _F32),
+                s((GRID,), _F32),
+                s((8,), _F32),
+            ),
+        ),
+        "throughput_window": (
+            throughput_window,
+            (s((SAMPLES,), _F32), s((SAMPLES,), _F32), s((SAMPLES,), _F32)),
+        ),
+        "utility_surface": (
+            utility_surface,
+            (s((GRID,), _F32), s((GRID,), _F32), s((1,), _F32)),
+        ),
+    }

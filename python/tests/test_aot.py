@@ -1,0 +1,92 @@
+"""AOT pipeline: lowering, manifest integrity, HLO-text properties.
+
+These pin the compile-path contract the Rust runtime depends on
+(`rust/src/runtime/artifacts.rs` re-checks the same facts at load time).
+"""
+
+import hashlib
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifact_dir():
+    with tempfile.TemporaryDirectory() as d:
+        aot.lower_all(d, verbose=False)
+        yield d
+
+
+class TestManifest:
+    def test_all_artifacts_present(self, artifact_dir):
+        with open(os.path.join(artifact_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["format"] == "hlo-text-v1"
+        assert set(manifest["artifacts"]) == {
+            "gd_step",
+            "bayes_step",
+            "throughput_window",
+            "utility_surface",
+        }
+        for entry in manifest["artifacts"].values():
+            path = os.path.join(artifact_dir, entry["file"])
+            assert os.path.exists(path), entry["file"]
+
+    def test_constants_match_model(self, artifact_dir):
+        with open(os.path.join(artifact_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["constants"] == {
+            "window": model.WINDOW,
+            "grid": model.GRID,
+            "samples": model.SAMPLES,
+        }
+
+    def test_sha256_integrity(self, artifact_dir):
+        with open(os.path.join(artifact_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        for name, entry in manifest["artifacts"].items():
+            with open(os.path.join(artifact_dir, entry["file"])) as f:
+                digest = hashlib.sha256(f.read().encode()).hexdigest()
+            assert digest == entry["sha256"], f"{name} hash drift"
+
+    def test_shapes_recorded(self, artifact_dir):
+        with open(os.path.join(artifact_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        gd = manifest["artifacts"]["gd_step"]
+        assert [i["shape"] for i in gd["inputs"]] == [[16], [16], [16], [8]]
+        assert [o["shape"] for o in gd["outputs"]] == [[4]]
+        bayes = manifest["artifacts"]["bayes_step"]
+        assert [o["shape"] for o in bayes["outputs"]] == [[3 * 64 + 2]]
+
+
+class TestHloText:
+    def test_artifacts_are_plain_hlo_text(self, artifact_dir):
+        """The interchange contract: parseable HLO text, no Mosaic
+        custom-calls (interpret=True must have lowered Pallas away),
+        and no lapack FFI custom-calls (the unrolled Cholesky must have
+        replaced jnp.linalg)."""
+        for name in ["gd_step", "bayes_step", "throughput_window", "utility_surface"]:
+            with open(os.path.join(artifact_dir, f"{name}.hlo.txt")) as f:
+                text = f.read()
+            assert text.startswith("HloModule"), f"{name}: not HLO text"
+            assert "ENTRY" in text, f"{name}: no entry computation"
+            lowered = text.lower()
+            assert "mosaic" not in lowered, f"{name}: TPU custom-call leaked"
+            for lapack_marker in ["getrf", "potrf", "lapack"]:
+                assert lapack_marker not in lowered, (
+                    f"{name}: lapack custom-call '{lapack_marker}' leaked — "
+                    "the 0.5.1 CPU client cannot execute it"
+                )
+
+    def test_lowering_is_deterministic(self):
+        with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+            m1 = aot.lower_all(d1, verbose=False)
+            m2 = aot.lower_all(d2, verbose=False)
+            for name in m1["artifacts"]:
+                assert (
+                    m1["artifacts"][name]["sha256"] == m2["artifacts"][name]["sha256"]
+                ), f"{name}: non-deterministic lowering"

@@ -1,0 +1,222 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hand-picked cases pin the semantics; hypothesis sweeps shapes, dtypes
+and value ranges. This is the CORE correctness signal for the compile
+path — if these pass, the kernels the artifacts embed compute what
+`ref.py` says they do.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.grad_window import weighted_slope_sums
+from compile.kernels.rbf import rbf_matrix
+from compile.kernels.utility import utility_batch, utility_surface
+from compile.kernels.window_stats import window_stats
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def assert_close(a, b, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# utility_batch
+# ---------------------------------------------------------------------------
+
+
+class TestUtilityBatch:
+    def test_simple_values(self):
+        t = jnp.array([100.0, 200.0, 400.0], jnp.float32)
+        c = jnp.array([1.0, 2.0, 4.0], jnp.float32)
+        k = jnp.array([1.02], jnp.float32)
+        got = utility_batch(t, c, k)
+        assert_close(got, [100 / 1.02, 200 / 1.02**2, 400 / 1.02**4])
+
+    def test_matches_ref_fixed(self):
+        t = jnp.linspace(0.0, 2000.0, 16).astype(jnp.float32)
+        c = jnp.arange(1, 17, dtype=jnp.float32)
+        k = jnp.array([1.05], jnp.float32)
+        assert_close(utility_batch(t, c, k), ref.utility_batch_ref(t, c, k))
+
+    def test_shape_mismatch_raises(self):
+        t = jnp.zeros(4, jnp.float32)
+        c = jnp.zeros(5, jnp.float32)
+        with pytest.raises(ValueError):
+            utility_batch(t, c, jnp.array([1.02], jnp.float32))
+
+    @given(
+        n=st.integers(1, 64),
+        k=st.floats(1.001, 1.5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        t = rng.uniform(0.0, 20_000.0, n).astype(np.float32)
+        c = rng.uniform(1.0, 64.0, n).astype(np.float32)
+        karr = jnp.array([k], jnp.float32)
+        got = utility_batch(jnp.array(t), jnp.array(c), karr)
+        want = ref.utility_batch_ref(jnp.array(t), jnp.array(c), karr)
+        assert_close(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_dtypes(self, dtype):
+        if dtype == jnp.float64 and not jax.config.read("jax_enable_x64"):
+            pytest.skip("x64 disabled")
+        t = jnp.array([128.0, 256.0], dtype)
+        c = jnp.array([2.0, 3.0], dtype)
+        k = jnp.array([1.02], dtype)
+        assert_close(utility_batch(t, c, k), ref.utility_batch_ref(t, c, k))
+
+
+# ---------------------------------------------------------------------------
+# utility_surface
+# ---------------------------------------------------------------------------
+
+
+class TestUtilitySurface:
+    def test_matches_ref_64(self):
+        t = jnp.linspace(10.0, 640.0, 64).astype(jnp.float32)
+        c = jnp.arange(1, 65, dtype=jnp.float32)
+        k = jnp.array([1.02], jnp.float32)
+        assert_close(utility_surface(t, c, k), ref.utility_surface_ref(t, c, k))
+
+    def test_tiling_multiple_blocks(self):
+        # 128x128 grid = 2x2 tiles of the 64-block kernel.
+        t = jnp.linspace(1.0, 128.0, 128).astype(jnp.float32)
+        c = jnp.linspace(1.0, 64.0, 128).astype(jnp.float32)
+        k = jnp.array([1.03], jnp.float32)
+        assert_close(utility_surface(t, c, k), ref.utility_surface_ref(t, c, k))
+
+    def test_rejects_non_multiple_of_block(self):
+        t = jnp.zeros(63, jnp.float32)
+        c = jnp.zeros(64, jnp.float32)
+        with pytest.raises(ValueError):
+            utility_surface(t, c, jnp.array([1.02], jnp.float32))
+
+    def test_unimodal_in_c_for_linear_throughput(self):
+        # §4.1: with T = alpha*C the utility has a unique max at 1/ln k.
+        k = 1.05
+        c = jnp.arange(1, 65, dtype=jnp.float32)
+        alpha = 50.0
+        u = np.asarray(
+            utility_batch(alpha * c, c, jnp.array([k], jnp.float32))
+        )
+        c_star = 1.0 / np.log(k)  # ~20.5
+        peak = np.argmax(u)
+        assert abs((peak + 1) - c_star) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# weighted_slope_sums
+# ---------------------------------------------------------------------------
+
+
+class TestWeightedSlopeSums:
+    def test_known_moments(self):
+        c = jnp.array([1.0, 2.0, 3.0], jnp.float32)
+        u = jnp.array([10.0, 20.0, 30.0], jnp.float32)
+        w = jnp.array([1.0, 1.0, 1.0], jnp.float32)
+        got = weighted_slope_sums(c, u, w)
+        assert_close(got, [3.0, 6.0, 60.0, 14.0, 140.0])
+
+    def test_zero_weights_vanish(self):
+        c = jnp.array([5.0, 7.0], jnp.float32)
+        u = jnp.array([50.0, 70.0], jnp.float32)
+        w = jnp.array([0.0, 0.0], jnp.float32)
+        assert_close(weighted_slope_sums(c, u, w), [0.0] * 5)
+
+    @given(n=st.integers(1, 128), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        c = rng.uniform(1, 64, n).astype(np.float32)
+        u = rng.uniform(-1e3, 1e3, n).astype(np.float32)
+        w = rng.uniform(0, 1, n).astype(np.float32)
+        got = weighted_slope_sums(jnp.array(c), jnp.array(u), jnp.array(w))
+        want = ref.weighted_slope_sums_ref(jnp.array(c), jnp.array(u), jnp.array(w))
+        assert_close(got, want, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# rbf_matrix
+# ---------------------------------------------------------------------------
+
+
+class TestRbfMatrix:
+    def test_diagonal_is_one(self):
+        x = jnp.array([1.0, 3.0, 9.0], jnp.float32)
+        k = rbf_matrix(x, x, jnp.array([2.0], jnp.float32))
+        assert_close(jnp.diagonal(k), [1.0, 1.0, 1.0])
+
+    def test_symmetry_and_range(self):
+        x = jnp.array([1.0, 2.0, 5.0, 8.0], jnp.float32)
+        k = np.asarray(rbf_matrix(x, x, jnp.array([1.5], jnp.float32)))
+        assert_close(k, k.T)
+        assert (k >= 0).all() and (k <= 1.0 + 1e-6).all()
+
+    def test_rectangular_cross(self):
+        x = jnp.array([1.0, 2.0], jnp.float32)
+        y = jnp.arange(1, 9, dtype=jnp.float32)
+        got = rbf_matrix(x, y, jnp.array([3.0], jnp.float32))
+        assert got.shape == (2, 8)
+        assert_close(got, ref.rbf_matrix_ref(x, y, jnp.array([3.0], jnp.float32)))
+
+    @given(
+        m=st.integers(1, 32),
+        n=st.integers(1, 64),
+        ls=st.floats(0.1, 20.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, m, n, ls, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(0, 64, m).astype(np.float32)
+        y = rng.uniform(0, 64, n).astype(np.float32)
+        lsa = jnp.array([ls], jnp.float32)
+        got = rbf_matrix(jnp.array(x), jnp.array(y), lsa)
+        want = ref.rbf_matrix_ref(jnp.array(x), jnp.array(y), lsa)
+        assert_close(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# window_stats
+# ---------------------------------------------------------------------------
+
+
+class TestWindowStats:
+    def test_known_window(self):
+        s = jnp.array([1.0, 2.0, 3.0, 99.0], jnp.float32)
+        v = jnp.array([1.0, 1.0, 1.0, 0.0], jnp.float32)
+        w = jnp.array([0.25, 0.5, 1.0, 1.0], jnp.float32)
+        got = np.asarray(window_stats(s, v, w))
+        assert got[0] == 3.0  # count
+        assert abs(got[1] - 6.0) < 1e-5  # sum
+        assert abs(got[2] - 14.0) < 1e-5  # sumsq
+        assert got[3] == 1.0 and got[4] == 3.0  # min/max ignore masked
+        assert abs(got[5] - (0.25 * 1 + 0.5 * 2 + 1.0 * 3)) < 1e-5
+        assert abs(got[6] - 1.75) < 1e-5
+
+    def test_empty_window_sentinels(self):
+        z = jnp.zeros(8, jnp.float32)
+        got = np.asarray(window_stats(z, z, z))
+        assert got[0] == 0.0
+        assert got[3] > 1e38 and got[4] < -1e38
+
+    @given(n=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        s = rng.uniform(0, 10_000, n).astype(np.float32)
+        v = (rng.uniform(0, 1, n) > 0.3).astype(np.float32)
+        w = rng.uniform(0, 1, n).astype(np.float32)
+        got = window_stats(jnp.array(s), jnp.array(v), jnp.array(w))
+        want = ref.window_stats_ref(jnp.array(s), jnp.array(v), jnp.array(w))
+        assert_close(got, want, rtol=1e-4, atol=1e-2)

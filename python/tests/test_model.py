@@ -1,0 +1,232 @@
+"""L2 correctness: the controller graphs against their references and
+their §4.1 analytic properties."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+W, G, S = model.WINDOW, model.GRID, model.SAMPLES
+
+
+def pad(xs, n):
+    out = np.zeros(n, np.float32)
+    out[: len(xs)] = xs
+    return out
+
+
+class TestGdStep:
+    def params(self, k=1.02, lr=3.0, clip=4.0, cmin=1.0, cmax=64.0, cnow=4.0):
+        return jnp.array([k, lr, clip, cmin, cmax, cnow, 0, 0], jnp.float32)
+
+    def run(self, c, t, w, **kw):
+        return np.asarray(
+            model.gd_step(
+                jnp.array(pad(c, W)),
+                jnp.array(pad(t, W)),
+                jnp.array(pad(w, W)),
+                self.params(**kw),
+            )[0]
+        )
+
+    def test_rising_utility_steps_up(self):
+        out = self.run([1, 2, 3, 4], [100, 200, 300, 400], [0.5, 0.7, 0.85, 1.0])
+        next_c, grad = out[0], out[1]
+        assert grad > 0
+        assert next_c > 4.0
+
+    def test_falling_utility_steps_down(self):
+        out = self.run(
+            [4, 5, 6],
+            [400, 402, 403],
+            [1, 1, 1],
+            k=1.2,
+            cnow=6.0,
+        )
+        assert out[1] < 0  # gradient
+        assert out[0] < 6.0
+
+    def test_degenerate_window_explores_up(self):
+        out = self.run([3, 3, 3], [300, 305, 295], [1, 1, 1], cnow=3.0)
+        assert abs(out[2] - 1.0) < 1e-5  # step == +1
+        assert abs(out[0] - 4.0) < 1e-5
+
+    def test_clamping(self):
+        out = self.run(
+            [62, 63, 64],
+            [100, 5000, 90000],
+            [1, 1, 1],
+            lr=100.0,
+            cnow=64.0,
+            cmax=64.0,
+        )
+        assert out[0] <= 64.0
+
+    def test_matches_whole_graph_ref(self):
+        c = pad([1, 2, 3, 5], W)
+        t = pad([120, 240, 300, 410], W)
+        w = pad([0.4, 0.6, 0.8, 1.0], W)
+        got = self.run([1, 2, 3, 5], [120, 240, 300, 410], [0.4, 0.6, 0.8, 1.0])
+        u = ref.utility_batch_ref(
+            jnp.array(t), jnp.array(c), jnp.array([1.02], jnp.float32)
+        )
+        want_next, want_grad, want_step = ref.gd_next_concurrency_ref(
+            jnp.array(c), u, jnp.array(w), jnp.asarray(4.0, jnp.float32),
+            lr=3.0, step_clip=4.0, c_min=1.0, c_max=64.0,
+        )
+        assert abs(got[0] - float(want_next)) < 1e-3
+        assert abs(got[1] - float(want_grad)) < max(1e-3, abs(float(want_grad)) * 1e-3)
+        assert abs(got[2] - float(want_step)) < 1e-3
+
+    @given(
+        n=st.integers(2, W),
+        k=st.floats(1.005, 1.2),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_bounded_output(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        c = rng.uniform(1, 32, n)
+        t = rng.uniform(0, 5000, n)
+        w = rng.uniform(0.01, 1, n)
+        out = self.run(c, t, w, k=k, cnow=float(c[-1]))
+        assert 1.0 <= out[0] <= 64.0
+        assert abs(out[2]) <= 4.0 + 1e-5  # step_clip
+        assert np.isfinite(out).all()
+
+
+class TestBayesStep:
+    def run(self, c, t, valid, k=1.02, ls=4.0, noise=1e-3, xi=0.01,
+            cmin=1.0, cmax=32.0, unorm=0.0):
+        grid = jnp.arange(1, G + 1, dtype=jnp.float32)
+        params = jnp.array([k, ls, noise, xi, cmin, cmax, unorm, 0], jnp.float32)
+        out = model.bayes_step(
+            jnp.array(pad(c, W)),
+            jnp.array(pad(t, W)),
+            jnp.array(pad(valid, W)),
+            grid,
+            params,
+        )[0]
+        return np.asarray(out)
+
+    def test_output_layout(self):
+        out = self.run([1, 2, 3], [100, 200, 300], [1, 1, 1], unorm=300.0)
+        assert out.shape == (3 * G + 2,)
+        best_idx, next_c = out[-2], out[-1]
+        assert 0 <= best_idx < G
+        assert 1.0 <= next_c <= 32.0
+        # next_c must equal grid[best_idx].
+        assert abs(next_c - (best_idx + 1)) < 1e-5
+
+    def test_respects_bounds_mask(self):
+        out = self.run([1, 2, 3], [100, 200, 300], [1, 1, 1], cmin=2.0, cmax=6.0,
+                       unorm=300.0)
+        assert 2.0 <= out[-1] <= 6.0
+
+    def test_posterior_matches_mirror_ref(self):
+        c = pad([2, 4, 8, 16], W)
+        t = pad([200, 380, 640, 900], W)
+        valid = pad([1, 1, 1, 1], W)
+        unorm = 900.0
+        out = self.run([2, 4, 8, 16], [200, 380, 640, 900], [1, 1, 1, 1],
+                       unorm=unorm)
+        mu_got, std_got = out[:G], out[G:2 * G]
+        u = ref.utility_batch_ref(
+            jnp.array(t), jnp.array(c), jnp.array([1.02], jnp.float32)
+        ) * jnp.array(valid) / (unorm + 1e-6)
+        grid = jnp.arange(1, G + 1, dtype=jnp.float32)
+        mu_want, std_want = ref.gp_posterior_ref(
+            jnp.array(c), u, jnp.array(valid), grid,
+            jnp.array([4.0], jnp.float32), 1e-3,
+        )
+        np.testing.assert_allclose(mu_got, np.asarray(mu_want), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(std_got, np.asarray(std_want), rtol=1e-2, atol=1e-3)
+
+    @given(n=st.integers(1, W), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_finite_and_bounded(self, n, seed):
+        rng = np.random.default_rng(seed)
+        c = rng.uniform(1, 32, n)
+        t = rng.uniform(1, 10_000, n)
+        valid = np.ones(n)
+        out = self.run(c, t, valid, unorm=float(t.max()))
+        assert np.isfinite(out).all()
+        assert 1.0 <= out[-1] <= 32.0
+
+
+class TestThroughputWindow:
+    def run(self, samples, valid, weights):
+        return np.asarray(
+            model.throughput_window(
+                jnp.array(pad(samples, S)),
+                jnp.array(pad(valid, S)),
+                jnp.array(pad(weights, S)),
+            )[0]
+        )
+
+    def test_basic_stats(self):
+        out = self.run([10, 20, 30], [1, 1, 1], [1, 1, 1])
+        count, mean, std, mn, mx, wmean = out
+        assert count == 3
+        assert abs(mean - 20) < 1e-4
+        assert abs(std - np.std([10, 20, 30])) < 1e-4
+        assert mn == 10 and mx == 30
+        assert abs(wmean - 20) < 1e-4
+
+    def test_empty_window_is_zeros(self):
+        out = self.run([], [], [])
+        np.testing.assert_allclose(out, np.zeros(6))
+
+    def test_recency_weighting(self):
+        out = self.run([10, 1000], [1, 1], [0.1, 1.0])
+        wmean = out[5]
+        assert wmean > 800  # dominated by the recent large sample
+
+
+class TestErfApprox:
+    def test_against_scipy_erf(self):
+        xs = jnp.linspace(-4, 4, 101)
+        got = np.asarray(model._erf(xs))
+        want = np.asarray(jax.scipy.special.erf(xs))
+        np.testing.assert_allclose(got, want, atol=2e-7)
+
+
+class TestCholeskyUnrolled:
+    @given(n=st.just(8), seed=st.integers(0, 2**31 - 1))
+    def test_reconstruction(self, n, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(n, n)).astype(np.float32)
+        spd = a @ a.T + n * np.eye(n, dtype=np.float32)
+        l = np.asarray(model._cholesky_unrolled(jnp.array(spd)))
+        np.testing.assert_allclose(l @ l.T, spd, rtol=1e-4, atol=1e-3)
+        # Solves: L y = b, L^T x = y must invert spd.
+        b = rng.normal(size=n).astype(np.float32)
+        y = model._solve_lower(jnp.array(l), jnp.array(b))
+        x = np.asarray(model._solve_upper_t(jnp.array(l), y))
+        np.testing.assert_allclose(spd @ x, b, rtol=1e-3, atol=1e-2)
+
+
+class TestArtifactSpecs:
+    def test_registry_complete(self):
+        specs = model.artifact_specs()
+        assert set(specs) == {
+            "gd_step",
+            "bayes_step",
+            "throughput_window",
+            "utility_surface",
+        }
+        for name, (fn, args) in specs.items():
+            out = jax.eval_shape(fn, *args)
+            leaves = jax.tree_util.tree_leaves(out)
+            assert leaves, f"{name} produces no outputs"
+            for leaf in leaves:
+                assert leaf.dtype == jnp.float32

@@ -1,0 +1,73 @@
+//! Shared helpers for the bench harnesses.
+//!
+//! criterion is unavailable offline, so every bench is a plain
+//! `harness = false` binary built on these helpers: deterministic
+//! multi-run experiment execution, paper-style table printing, CSV
+//! emission under `results/`, and simple wall-clock timing.
+
+// Each bench binary uses a subset of these helpers.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastbiodl::runtime::{SharedRuntime, XlaRuntime};
+
+/// Number of runs per configuration (paper: 5 round-robin runs).
+/// Override with `FASTBIODL_BENCH_RUNS` for quick iterations.
+pub fn bench_runs() -> usize {
+    std::env::var("FASTBIODL_BENCH_RUNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+}
+
+/// Base seed for the round-robin (fixed for reproducibility).
+pub const SEED_BASE: u64 = 1000;
+
+/// Load the XLA runtime once.
+pub fn runtime() -> SharedRuntime {
+    Arc::new(XlaRuntime::load_default().expect(
+        "artifacts missing — run `make artifacts` before `cargo bench`",
+    ))
+}
+
+/// Print the bench banner.
+pub fn banner(id: &str, paper_claim: &str) {
+    println!("\n================================================================");
+    println!("reproducing {id}");
+    println!("paper claim: {paper_claim}");
+    println!("================================================================");
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Report the wall cost of regenerating the artifact (the "bench" part
+/// of a paper-figure bench: how fast the harness replays the paper).
+pub fn report_wall(id: &str, wall_s: f64, sim_seconds: f64) {
+    if sim_seconds > 0.0 {
+        println!(
+            "\n[bench] {id}: regenerated in {wall_s:.2}s wall ({:.0}x real time)",
+            sim_seconds / wall_s
+        );
+    } else {
+        println!("\n[bench] {id}: regenerated in {wall_s:.2}s wall");
+    }
+}
+
+/// Shape-check outcome printer: benches never panic on shape drift —
+/// they report PASS/FAIL and exit nonzero so CI notices.
+pub fn finish(id: &str, shape: Result<(), String>) {
+    match shape {
+        Ok(()) => println!("[shape] {id}: PASS — paper-shape assertions hold"),
+        Err(e) => {
+            println!("[shape] {id}: FAIL — {e}");
+            std::process::exit(1);
+        }
+    }
+}

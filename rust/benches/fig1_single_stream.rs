@@ -1,0 +1,50 @@
+//! Bench: regenerate **Figure 1** — single-threaded downloads
+//! underutilize the network.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastbiodl::experiments::fig1;
+use fastbiodl::report::{sparkline, write_series_csv};
+
+fn main() {
+    common::banner(
+        "Figure 1 (single-stream underutilization)",
+        "a single-threaded FTP/HTTP download uses a small fraction of the \
+         bandwidth iperf3 reports available",
+    );
+    let duration = 120.0;
+    let (r, wall) = common::timed(|| fig1::run(duration, common::SEED_BASE).expect("fig1"));
+
+    println!("available  {}", sparkline(&r.available_mbps, 72));
+    println!("single     {}", sparkline(&r.single_stream_mbps, 72));
+    println!();
+    println!("mean available bandwidth : {:>8.1} Mbps", r.mean_available);
+    println!("mean single-stream       : {:>8.1} Mbps", r.mean_single);
+    println!(
+        "utilization              : {:>8.1} %  (the Figure 1 gap)",
+        r.utilization() * 100.0
+    );
+
+    write_series_csv(
+        "fig1_single_stream",
+        &["t_s", "single_stream_mbps", "available_mbps"],
+        r.t_s
+            .iter()
+            .zip(&r.single_stream_mbps)
+            .zip(&r.available_mbps)
+            .map(|((t, s), a)| vec![*t, *s, *a]),
+    )
+    .expect("csv");
+
+    common::report_wall("fig1", wall, duration);
+    let shape = if r.utilization() < 0.35 {
+        Ok(())
+    } else {
+        Err(format!(
+            "single stream used {:.0}% of available — not underutilized",
+            r.utilization() * 100.0
+        ))
+    };
+    common::finish("fig1", shape);
+}

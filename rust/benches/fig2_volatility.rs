@@ -1,0 +1,46 @@
+//! Bench: regenerate **Figure 2** — available bandwidth is volatile on
+//! probe timescales (the motivation for adaptive concurrency).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastbiodl::experiments::fig2;
+use fastbiodl::report::{sparkline, write_series_csv};
+
+fn main() {
+    common::banner(
+        "Figure 2 (bandwidth volatility over two minutes)",
+        "iperf3-measured available bandwidth moves substantially within \
+         seconds; any static concurrency is suboptimal most of the time",
+    );
+    let duration = 120.0;
+    let (r, wall) = common::timed(|| fig2::run(duration, common::SEED_BASE).expect("fig2"));
+
+    println!("available  {}", sparkline(&r.available_mbps, 72));
+    println!();
+    println!("mean  : {:>8.1} Mbps", r.mean);
+    println!("std   : {:>8.1} Mbps  (cv {:.1} %)", r.std, r.cv() * 100.0);
+    println!("range : {:>8.1} – {:.1} Mbps", r.min, r.max);
+
+    write_series_csv(
+        "fig2_volatility",
+        &["t_s", "available_mbps"],
+        r.t_s
+            .iter()
+            .zip(&r.available_mbps)
+            .map(|(t, a)| vec![*t, *a]),
+    )
+    .expect("csv");
+
+    common::report_wall("fig2", wall, duration);
+    let shape = if r.cv() > 0.03 && (r.max - r.min) / r.mean > 0.15 {
+        Ok(())
+    } else {
+        Err(format!(
+            "trace too flat: cv {:.3}, relative range {:.3}",
+            r.cv(),
+            (r.max - r.min) / r.mean
+        ))
+    };
+    common::finish("fig2", shape);
+}

@@ -1,0 +1,66 @@
+//! Bench: regenerate **Figure 4** — gradient descent vs Bayesian
+//! optimization as the concurrency controller.
+//!
+//! Paper: BO's surrogate never stabilizes under drifting conditions;
+//! total copy time ends ≈20 % behind gradient descent (average of 5).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastbiodl::experiments::fig4::{self, Fig4Result};
+use fastbiodl::report::{write_series_csv, Table};
+
+fn main() {
+    common::banner(
+        "Figure 4 (gradient descent vs Bayesian optimization)",
+        "GD's small local moves beat BO's surrogate-driven jumps by ~20% \
+         total copy time; BO's concurrency trace shows large swings",
+    );
+    let rt = common::runtime();
+    let runs = common::bench_runs();
+    let (r, wall) =
+        common::timed(|| fig4::run(&rt, runs, common::SEED_BASE).expect("fig4 failed"));
+
+    let mut t = Table::new(vec![
+        "Optimizer",
+        "Copy time (s)",
+        "Speed (Mbps)",
+        "Concurrency",
+        "ΣΔC (movement)",
+    ]);
+    for (s, label) in [(&r.gd, "gradient-descent"), (&r.bayes, "bayesian")] {
+        t.row(vec![
+            label.to_string(),
+            s.duration_s.to_string(),
+            s.speed_mbps.to_string(),
+            s.concurrency.to_string(),
+            format!("{:.1}", Fig4Result::movement(s)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Bayesian slowdown: {:.1}%  (paper ≈20%)",
+        (r.bayes_slowdown() - 1.0) * 100.0
+    );
+
+    // Per-second mean timelines for the figure.
+    let gd_tl = &r.gd.reports[0].timeline.values;
+    let bo_tl = &r.bayes.reports[0].timeline.values;
+    let horizon = gd_tl.len().max(bo_tl.len());
+    write_series_csv(
+        "fig4_gd_vs_bayes",
+        &["t_s", "gd_mbps", "bayes_mbps"],
+        (0..horizon).map(|i| {
+            vec![
+                i as f64,
+                gd_tl.get(i).copied().unwrap_or(0.0),
+                bo_tl.get(i).copied().unwrap_or(0.0),
+            ]
+        }),
+    )
+    .expect("csv");
+
+    let sim_s = (r.gd.duration_s.mean + r.bayes.duration_s.mean) * runs as f64;
+    common::report_wall("fig4", wall, sim_s);
+    common::finish("fig4", fig4::check_shape(&r));
+}

@@ -1,0 +1,77 @@
+//! Bench: regenerate **Figure 5** — per-second throughput with 68 %
+//! confidence bands for the three tools on Breast-RNA-seq.
+//!
+//! Paper: FastBioDL peaks ≈1800 Mbps (vs ≈1400), completes at ≈160 s —
+//! 38 % / 43 % faster than pysradb / prefetch.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastbiodl::experiments::fig5;
+use fastbiodl::report::{sparkline, write_series_csv, Table};
+
+fn main() {
+    common::banner(
+        "Figure 5 (throughput timelines + 68% CI, Breast-RNA-seq)",
+        "FastBioDL sustains the highest per-second throughput and finishes \
+         38%/43% sooner than pysradb/prefetch",
+    );
+    let rt = common::runtime();
+    let runs = common::bench_runs();
+    let (r, wall) =
+        common::timed(|| fig5::run(&rt, runs, common::SEED_BASE).expect("fig5 failed"));
+
+    for band in [&r.fastbiodl, &r.prefetch, &r.pysradb] {
+        println!("{:<10} {}", band.tool, sparkline(&band.mean, 64));
+    }
+    println!();
+    let mut t = Table::new(vec!["Tool", "Peak (Mbps)", "Completion (s)", "Speed (Mbps)"]);
+    for band in [&r.fastbiodl, &r.pysradb, &r.prefetch] {
+        t.row(vec![
+            band.tool.clone(),
+            format!("{:.0}", band.peak()),
+            band.summary.duration_s.to_string(),
+            band.summary.speed_mbps.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let f = r.fastbiodl.completion_s();
+    println!(
+        "completion advantage: {:.0}% vs pysradb (paper 38%), {:.0}% vs prefetch (paper 43%)",
+        (1.0 - f / r.pysradb.completion_s()) * 100.0,
+        (1.0 - f / r.prefetch.completion_s()) * 100.0,
+    );
+
+    // CSV: per-second mean + band for each tool.
+    let horizon = [&r.fastbiodl, &r.prefetch, &r.pysradb]
+        .iter()
+        .map(|b| b.mean.len())
+        .max()
+        .unwrap();
+    let get = |v: &Vec<f64>, i: usize| v.get(i).copied().unwrap_or(0.0);
+    write_series_csv(
+        "fig5_throughput_timeline",
+        &[
+            "t_s",
+            "fastbiodl_mean", "fastbiodl_lo", "fastbiodl_hi",
+            "prefetch_mean", "prefetch_lo", "prefetch_hi",
+            "pysradb_mean", "pysradb_lo", "pysradb_hi",
+        ],
+        (0..horizon).map(|i| {
+            vec![
+                i as f64,
+                get(&r.fastbiodl.mean, i), get(&r.fastbiodl.lo, i), get(&r.fastbiodl.hi, i),
+                get(&r.prefetch.mean, i), get(&r.prefetch.lo, i), get(&r.prefetch.hi, i),
+                get(&r.pysradb.mean, i), get(&r.pysradb.lo, i), get(&r.pysradb.hi, i),
+            ]
+        }),
+    )
+    .expect("csv");
+
+    let sim_s = [&r.fastbiodl, &r.prefetch, &r.pysradb]
+        .iter()
+        .map(|b| b.summary.duration_s.mean * runs as f64)
+        .sum();
+    common::report_wall("fig5", wall, sim_s);
+    common::finish("fig5", fig5::check_shape(&r));
+}

@@ -1,0 +1,182 @@
+//! Bench: §Perf hot-path microbenchmarks (not a paper artifact).
+//!
+//! Measures the latency/throughput of every component on the request
+//! path, per the performance deliverable:
+//!
+//! * L3: sim-engine step rate, fair-share allocation, scheduler ops,
+//!   recorder hot path;
+//! * runtime: per-call latency of each XLA artifact (the optimizer
+//!   executes `throughput_window` + one controller step per probe —
+//!   these must be ≪ the 3–5 s probing interval);
+//! * end-to-end: simulated seconds per wall second on the heaviest
+//!   scenario (fabric-c, 1 TB aggregate).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use fastbiodl::coordinator::scheduler::{ChunkScheduler, SchedulerMode};
+use fastbiodl::experiments::runner::{run_tool_once, Tool};
+use fastbiodl::experiments::scenario;
+use fastbiodl::metrics::recorder::ThroughputRecorder;
+use fastbiodl::netsim::link::max_min_fair;
+
+fn bench_loop(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per < 1e-6 {
+        format!("{:.0} ns", per * 1e9)
+    } else if per < 1e-3 {
+        format!("{:.2} µs", per * 1e6)
+    } else {
+        format!("{:.3} ms", per * 1e3)
+    };
+    println!("  {name:<44} {unit:>12}/iter  ({iters} iters)");
+    per
+}
+
+fn main() {
+    common::banner(
+        "§Perf hot-path microbenchmarks",
+        "controller step ≪ probing interval; sim ≫ real time",
+    );
+    let rt = common::runtime();
+
+    println!("[runtime] XLA artifact call latency:");
+    let c = vec![1.0f32; 16];
+    let t = vec![500.0f32; 16];
+    let w = vec![1.0f32; 16];
+    let params = [1.02f32, 3.0, 4.0, 1.0, 64.0, 4.0, 0.0, 0.0];
+    let gd_per = bench_loop("gd_step (L1 utility+slope kernels)", 2000, || {
+        rt.gd_step(&c, &t, &w, &params).unwrap();
+    });
+    let grid: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+    let bparams = [1.02f32, 4.0, 1e-3, 0.01, 1.0, 32.0, 500.0, 0.0];
+    bench_loop("bayes_step (L1 RBF + Cholesky)", 500, || {
+        rt.bayes_step(&c, &t, &w, &grid, &bparams).unwrap();
+    });
+    let samples = vec![100.0f32; 256];
+    let valid = vec![1.0f32; 256];
+    let weights = vec![1.0f32; 256];
+    bench_loop("throughput_window (L1 reduction)", 2000, || {
+        rt.throughput_window(&samples, &valid, &weights).unwrap();
+    });
+    let tg: Vec<f32> = (0..64).map(|i| 10.0 * i as f32).collect();
+    bench_loop("utility_surface 64x64 (L1 2-D tiles)", 500, || {
+        rt.utility_surface(&tg, &grid, 1.02).unwrap();
+    });
+    println!(
+        "  -> probe-interval budget used by one GD probe: {:.4}% of 5 s",
+        gd_per / 5.0 * 100.0
+    );
+
+    println!("\n[L3] coordinator primitives:");
+    let demands: Vec<f64> = (0..32).map(|i| 100.0 + 13.0 * i as f64).collect();
+    bench_loop("max_min_fair (32 flows)", 200_000, || {
+        std::hint::black_box(max_min_fair(2_000.0, &demands));
+    });
+    let recorder = ThroughputRecorder::new();
+    bench_loop("recorder.add_bytes (worker hot path)", 1_000_000, || {
+        recorder.add_bytes(4096);
+    });
+    let records: Vec<fastbiodl::accession::RunRecord> = (0..64)
+        .map(|i| fastbiodl::accession::RunRecord {
+            accession: format!("SRR{i:07}"),
+            project: "P".into(),
+            bytes: 1 << 30,
+            url: "sim://x".into(),
+        })
+        .collect();
+    bench_loop("scheduler next_chunk+done (32 MiB chunks)", 50_000, || {
+        let mut s = ChunkScheduler::new(
+            &records[..1],
+            SchedulerMode::Chunked {
+                chunk_bytes: 32 << 20,
+                max_open_files: 4,
+            },
+        );
+        while let Some(chk) = s.next_chunk() {
+            s.chunk_done(&chk);
+        }
+    });
+
+    println!("\n[L3] sim-engine raw step rate (20 active flows, post-optimization):");
+    {
+        use fastbiodl::netsim::engine::{BackgroundConfig, NetSim, NetSimConfig};
+        use fastbiodl::netsim::{ClientProfile, ServerProfile};
+        let cfg = NetSimConfig {
+            link_capacity_mbps: 20_000.0,
+            background: BackgroundConfig {
+                mean_mbps: 400.0,
+                theta: 0.3,
+                sigma: 100.0,
+                max_mbps: 1_000.0,
+            },
+            server: ServerProfile {
+                setup_latency_s: 0.1,
+                first_byte_latency_s: 0.0,
+                per_conn_cap_mbps: 1_400.0,
+                long_request_decay_per_min: 0.1,
+                decay_floor: 0.5,
+                max_connections: 64,
+            },
+            client: ClientProfile::default(),
+            flow_jitter_frac: 0.05,
+            flow_failure_rate_per_min: 0.0,
+            dt_s: 0.05,
+        };
+        let mut sim = NetSim::new(cfg, 1).unwrap();
+        let ids: Vec<_> = (0..20).map(|_| sim.open_flow().unwrap()).collect();
+        for _ in 0..100 {
+            sim.step(None);
+        }
+        for (i, id) in ids.iter().enumerate() {
+            sim.begin_request(*id, 1e15, false, i as u64).unwrap();
+        }
+        for _ in 0..10_000 {
+            sim.step(None);
+        }
+        let n = 500_000usize;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(sim.step(None));
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "  step: {:.0} ns ({:.0}x real time at dt=50ms)  [§Perf: 514 ns before optimization]",
+            per * 1e9,
+            0.05 / per
+        );
+    }
+
+    println!("\n[end-to-end] heaviest scenario (fabric-c, 1 TB):");
+    let s = scenario::fabric('c', 1).expect("scenario");
+    let t0 = Instant::now();
+    let report = run_tool_once(&s, &Tool::fastbiodl(&s), &rt, 99).expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  simulated {:.0}s of 20 Gbps transfer in {:.2}s wall -> {:.0}x real time",
+        report.duration_s,
+        wall,
+        report.duration_s / wall
+    );
+    println!("  mean {:.0} Mbps, C̄={:.1}", report.mean_throughput_mbps, report.mean_concurrency);
+
+    let shape = if report.duration_s / wall > 20.0 {
+        Ok(())
+    } else {
+        Err(format!(
+            "sim engine only {:.1}x real time (target ≥20x)",
+            report.duration_s / wall
+        ))
+    };
+    common::finish("perf_hotpath", shape);
+}

@@ -1,0 +1,57 @@
+//! Bench: regenerate **Table 1** — the penalty-coefficient sweep.
+//!
+//! Paper rows: k ∈ {1.01, 1.02, 1.05} → speed {701.2, 815.8, 743.9}
+//! Mbps, concurrency {6.77, 6.23, 4.64}; k = 1.02 selected.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastbiodl::experiments::table1;
+use fastbiodl::report::{write_series_csv, Table};
+
+fn main() {
+    common::banner(
+        "Table 1 (penalty coefficient k)",
+        "k=1.02 fastest; k=1.01 over-aggressive (more threads, less speed); \
+         k=1.05 conservative (fewest threads)",
+    );
+    let rt = common::runtime();
+    let runs = common::bench_runs();
+    let (rows, wall) = common::timed(|| {
+        table1::run(&rt, runs, common::SEED_BASE).expect("table1 failed")
+    });
+
+    let mut t = Table::new(vec!["K", "Avg Download Speed (Mbps)", "Avg Concurrency"]);
+    for r in &rows {
+        t.row(vec![
+            format!("{:.2}", r.k),
+            r.summary.speed_mbps.to_string(),
+            r.summary.concurrency.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper:   1.01 -> 701.2 Mbps @ C 6.77");
+    println!("paper:   1.02 -> 815.8 Mbps @ C 6.23   <- selected");
+    println!("paper:   1.05 -> 743.9 Mbps @ C 4.64");
+
+    let sim_s: f64 = rows
+        .iter()
+        .map(|r| r.summary.duration_s.mean * r.summary.reports.len() as f64)
+        .sum();
+    write_series_csv(
+        "table1_k_sweep",
+        &["k", "speed_mbps", "speed_std", "concurrency", "concurrency_std"],
+        rows.iter().map(|r| {
+            vec![
+                r.k,
+                r.summary.speed_mbps.mean,
+                r.summary.speed_mbps.std,
+                r.summary.concurrency.mean,
+                r.summary.concurrency.std,
+            ]
+        }),
+    )
+    .expect("csv");
+    common::report_wall("table1", wall, sim_s);
+    common::finish("table1", table1::check_shape(&rows));
+}

@@ -1,0 +1,96 @@
+//! Bench: regenerate **Table 3** (and Table 2's dataset inventory) —
+//! FastBioDL vs prefetch vs pysradb on the three public BioProjects.
+//!
+//! Paper: FastBioDL ≈1.9×/1.3× (Breast), ≈2.4×/2.7× (HiFi), ≈4×/4×
+//! (Amplicon) over prefetch/pysradb.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastbiodl::accession::datasets::TABLE2_PRESETS;
+use fastbiodl::experiments::table3;
+use fastbiodl::report::{write_series_csv, Table};
+
+fn main() {
+    common::banner(
+        "Table 3 (comparison with state-of-the-art)",
+        "FastBioDL wins on all three datasets; baselines tie on Amplicon; \
+         pysradb beats prefetch on Breast but not on HiFi",
+    );
+
+    println!("Table 2 — evaluation datasets (regenerated):");
+    for p in &TABLE2_PRESETS {
+        println!("  {}", p.describe());
+    }
+    println!();
+
+    let rt = common::runtime();
+    let runs = common::bench_runs();
+    let (rows, wall) = common::timed(|| {
+        table3::run(&rt, runs, common::SEED_BASE).expect("table3 failed")
+    });
+
+    let mut t = Table::new(vec!["Dataset", "Tool", "Concurrency", "Speed (Mbps)"]);
+    for r in &rows {
+        for s in [&r.prefetch, &r.pysradb, &r.fastbiodl] {
+            t.row(vec![
+                r.dataset.to_string(),
+                s.tool.clone(),
+                s.concurrency.to_string(),
+                s.speed_mbps.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    println!("speedups (FastBioDL vs baselines):");
+    for r in &rows {
+        println!(
+            "  {:<18} vs prefetch {:.2}x   vs pysradb {:.2}x   (paper: {})",
+            r.dataset,
+            r.speedup_vs(&r.prefetch),
+            r.speedup_vs(&r.pysradb),
+            match r.dataset {
+                "Breast-RNA-seq" => "1.9x / 1.3x",
+                "HiFi-WGS" => "2.4x / 2.7x",
+                _ => "4.0x / 4.0x",
+            }
+        );
+    }
+
+    let sim_s: f64 = rows
+        .iter()
+        .flat_map(|r| [&r.prefetch, &r.pysradb, &r.fastbiodl])
+        .map(|s| s.duration_s.mean * s.reports.len() as f64)
+        .sum();
+    write_series_csv(
+        "table3_sota",
+        &[
+            "dataset_idx",
+            "tool_idx",
+            "concurrency",
+            "concurrency_std",
+            "speed_mbps",
+            "speed_std",
+        ],
+        rows.iter().enumerate().flat_map(|(di, r)| {
+            [&r.prefetch, &r.pysradb, &r.fastbiodl]
+                .into_iter()
+                .enumerate()
+                .map(move |(ti, s)| {
+                    vec![
+                        di as f64,
+                        ti as f64,
+                        s.concurrency.mean,
+                        s.concurrency.std,
+                        s.speed_mbps.mean,
+                        s.speed_mbps.std,
+                    ]
+                })
+                .collect::<Vec<_>>()
+        }),
+    )
+    .expect("csv");
+    common::report_wall("table3", wall, sim_s);
+    common::finish("table3", table3::check_shape(&rows));
+}

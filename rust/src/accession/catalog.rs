@@ -1,0 +1,186 @@
+//! The simulated repository catalog (stands in for ENA/NCBI metadata).
+//!
+//! Maps BioProjects to their member runs with sizes and download URLs.
+//! The three Table 2 projects are built in; ad-hoc projects can be
+//! registered for tests and the FABRIC-style synthetic workloads
+//! (§5.2 used "several hundred gigabytes of randomly generated files" —
+//! [`Catalog::register_synthetic`] builds exactly that).
+
+use std::collections::BTreeMap;
+
+use crate::accession::datasets::{DatasetPreset, TABLE2_PRESETS};
+use crate::accession::id::Accession;
+use crate::{Error, Result};
+
+/// One downloadable run (a file in the repository).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunRecord {
+    /// Run accession (`SRR…`).
+    pub accession: String,
+    /// Parent project.
+    pub project: String,
+    /// Payload size (bytes).
+    pub bytes: u64,
+    /// Download URL (simulated ENA FTP/HTTPS path, or a real
+    /// `http://127.0.0.1:…` URL when serving from the local test server).
+    pub url: String,
+}
+
+/// Project → members index.
+#[derive(Debug, Default)]
+pub struct Catalog {
+    projects: BTreeMap<String, Vec<RunRecord>>,
+}
+
+impl Catalog {
+    /// Empty catalog (tests).
+    pub fn empty() -> Catalog {
+        Catalog::default()
+    }
+
+    /// Catalog with the three Table 2 BioProjects, file sizes
+    /// synthesized deterministically from `seed`.
+    pub fn with_table2(seed: u64) -> Catalog {
+        let mut cat = Catalog::default();
+        for preset in &TABLE2_PRESETS {
+            cat.register_preset(preset, seed);
+        }
+        cat
+    }
+
+    /// Register one preset's synthesized members.
+    pub fn register_preset(&mut self, preset: &DatasetPreset, seed: u64) {
+        let sizes = preset.generate(seed);
+        let runs = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &bytes)| RunRecord {
+                accession: format!("{}{:02}", preset.run_prefix, i + 1),
+                project: preset.project.to_string(),
+                bytes,
+                url: format!(
+                    "https://ftp.sra.ebi.ac.uk/vol1/srr/{}/{}{:02}",
+                    preset.project.to_ascii_lowercase(),
+                    preset.run_prefix,
+                    i + 1
+                ),
+            })
+            .collect();
+        self.projects.insert(preset.project.to_string(), runs);
+    }
+
+    /// Register a synthetic project of `files` equal-size files
+    /// (the §5.2 FABRIC workloads: 100 GB / 512 GB random files).
+    pub fn register_synthetic(&mut self, project: &str, files: usize, bytes_each: u64) {
+        let runs = (0..files)
+            .map(|i| RunRecord {
+                accession: format!("SYN{project}{i:03}"),
+                project: project.to_string(),
+                bytes: bytes_each,
+                url: format!("ftp://testbed/{project}/file{i:03}.bin"),
+            })
+            .collect();
+        self.projects.insert(project.to_string(), runs);
+    }
+
+    /// Register explicit records (real-transport tests point these at
+    /// the local HTTP server).
+    pub fn register_runs(&mut self, project: &str, runs: Vec<RunRecord>) {
+        self.projects.insert(project.to_string(), runs);
+    }
+
+    /// Member runs of a project.
+    pub fn project_runs(&self, project: &str) -> Result<&[RunRecord]> {
+        self.projects
+            .get(project)
+            .map(Vec::as_slice)
+            .ok_or_else(|| {
+                Error::Accession(format!("project '{project}' not found in catalog"))
+            })
+    }
+
+    /// Find a single run anywhere in the catalog.
+    pub fn find_run(&self, accession: &str) -> Option<&RunRecord> {
+        self.projects
+            .values()
+            .flatten()
+            .find(|r| r.accession == accession)
+    }
+
+    /// Expand an accession list into concrete run records.
+    pub fn expand(&self, accessions: &[Accession]) -> Result<Vec<RunRecord>> {
+        let mut out = Vec::new();
+        for acc in accessions {
+            match acc {
+                Accession::Project(p) => out.extend_from_slice(self.project_runs(p)?),
+                Accession::Run(r) => {
+                    let rec = self.find_run(r).ok_or_else(|| {
+                        Error::Accession(format!("run '{r}' not found in catalog"))
+                    })?;
+                    out.push(rec.clone());
+                }
+                Accession::Experiment(x) => {
+                    return Err(Error::Accession(format!(
+                        "experiment accessions ('{x}') must be expanded to runs first \
+                         (the simulated catalog indexes runs and projects)"
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total bytes across a record list.
+    pub fn total_bytes(records: &[RunRecord]) -> u64 {
+        records.iter().map(|r| r.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_projects_present() {
+        let cat = Catalog::with_table2(7);
+        for preset in &TABLE2_PRESETS {
+            let runs = cat.project_runs(preset.project).unwrap();
+            assert_eq!(runs.len(), preset.files);
+            let total: u64 = runs.iter().map(|r| r.bytes).sum();
+            let err = (total as i64 - preset.total_bytes as i64).abs();
+            assert!(err <= preset.files as i64);
+        }
+    }
+
+    #[test]
+    fn expand_projects_and_runs() {
+        let cat = Catalog::with_table2(7);
+        let accs = vec![
+            Accession::parse("PRJNA400087").unwrap(),
+            cat.project_runs("PRJNA762469").unwrap()[0]
+                .accession
+                .parse::<String>()
+                .map(|s| Accession::parse(&s).unwrap())
+                .unwrap(),
+        ];
+        let recs = cat.expand(&accs).unwrap();
+        assert_eq!(recs.len(), 43 + 1);
+    }
+
+    #[test]
+    fn unknown_project_errors() {
+        let cat = Catalog::with_table2(7);
+        assert!(cat.project_runs("PRJNA000000").is_err());
+        let accs = vec![Accession::parse("SRR9999999").unwrap()];
+        assert!(cat.expand(&accs).is_err());
+    }
+
+    #[test]
+    fn synthetic_projects() {
+        let mut cat = Catalog::empty();
+        cat.register_synthetic("FABRIC-A", 4, 100_000_000_000);
+        let runs = cat.project_runs("FABRIC-A").unwrap();
+        assert_eq!(runs.len(), 4);
+        assert_eq!(Catalog::total_bytes(runs), 400_000_000_000);
+    }
+}

@@ -1,0 +1,216 @@
+//! Table 2 dataset presets.
+//!
+//! The paper evaluates on three public BioProjects chosen to span file
+//! sizes and I/O profiles (paper §5.1, Table 2):
+//!
+//! | Alias             | BioProject  | Files | Total    | Range           |
+//! |-------------------|-------------|-------|----------|-----------------|
+//! | Breast-RNA-seq    | PRJNA762469 | 10    | 22.06 GB | 1.72–3.03 GB    |
+//! | HiFi-WGS          | PRJNA540705 | 6     | 56.15 GB | 8.10–10.81 GB   |
+//! | Amplicon-Digester | PRJNA400087 | 43    | 1.91 GB  | 13.43–66.47 MB  |
+//!
+//! We cannot fetch the real runs offline, so [`DatasetPreset::generate`]
+//! synthesizes a file-size population with the *exact* published count,
+//! total, and min/max — the only properties the downloader observes.
+//! Sizes are drawn deterministically (seeded), then affinely rescaled
+//! inside the published range so the total matches to the byte.
+
+use crate::util::prng::Prng;
+
+/// GB/MB in the paper's tables are decimal units.
+const GB: f64 = 1e9;
+const MB: f64 = 1e6;
+
+/// One evaluation dataset (a row of Table 2).
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetPreset {
+    /// Paper alias.
+    pub alias: &'static str,
+    /// BioProject accession.
+    pub project: &'static str,
+    /// Organism / sample type (documentation only).
+    pub organism: &'static str,
+    /// Number of runs taken.
+    pub files: usize,
+    /// Total size (bytes).
+    pub total_bytes: u64,
+    /// Per-file size range (bytes).
+    pub min_bytes: u64,
+    pub max_bytes: u64,
+    /// Run-accession prefix for synthesized members.
+    pub run_prefix: &'static str,
+}
+
+/// The three Table 2 presets.
+pub const TABLE2_PRESETS: [DatasetPreset; 3] = [
+    DatasetPreset {
+        alias: "Breast-RNA-seq",
+        project: "PRJNA762469",
+        organism: "Homo sapiens (breast transcriptome)",
+        files: 10,
+        total_bytes: 22_060_000_000,
+        min_bytes: 1_720_000_000,
+        max_bytes: 3_030_000_000,
+        run_prefix: "SRR157624",
+    },
+    DatasetPreset {
+        alias: "HiFi-WGS",
+        project: "PRJNA540705",
+        organism: "Homo sapiens (PacBio long-read WGS)",
+        files: 6,
+        total_bytes: 56_150_000_000,
+        min_bytes: 8_100_000_000,
+        max_bytes: 10_810_000_000,
+        run_prefix: "SRR902145",
+    },
+    DatasetPreset {
+        alias: "Amplicon-Digester",
+        project: "PRJNA400087",
+        organism: "anaerobic digester metagenome",
+        files: 43,
+        total_bytes: 1_910_000_000,
+        min_bytes: 13_430_000,
+        max_bytes: 66_470_000,
+        run_prefix: "SRR599871",
+    },
+];
+
+impl DatasetPreset {
+    /// Find a preset by alias (case-insensitive) or project id.
+    pub fn find(name: &str) -> Option<&'static DatasetPreset> {
+        TABLE2_PRESETS.iter().find(|p| {
+            p.alias.eq_ignore_ascii_case(name) || p.project.eq_ignore_ascii_case(name)
+        })
+    }
+
+    /// Synthesize the per-file sizes: `files` values inside
+    /// `[min_bytes, max_bytes]` summing to exactly `total_bytes`.
+    ///
+    /// Deterministic in `seed`. The construction draws uniform sizes,
+    /// then iteratively rescales deviations-from-mean so the sum and
+    /// the range constraints hold simultaneously (both always *can*
+    /// hold: the paper's mean lies inside the published range).
+    pub fn generate(&self, seed: u64) -> Vec<u64> {
+        let n = self.files;
+        let total = self.total_bytes as f64;
+        let lo = self.min_bytes as f64;
+        let hi = self.max_bytes as f64;
+        let mean = total / n as f64;
+        assert!(
+            lo <= mean && mean <= hi,
+            "{}: published mean {mean} outside range [{lo}, {hi}]",
+            self.alias
+        );
+
+        let mut rng = Prng::new(seed ^ 0xDA7A_5E7);
+        let mut sizes: Vec<f64> = (0..n).map(|_| rng.range_f64(lo, hi)).collect();
+        // Rescale deviations so the sum is exact, shrinking toward the
+        // mean whenever a value would escape the range.
+        for _ in 0..64 {
+            let sum: f64 = sizes.iter().sum();
+            let err = total - sum;
+            if err.abs() < 1.0 {
+                break;
+            }
+            let adj = err / n as f64;
+            for s in sizes.iter_mut() {
+                *s = (*s + adj).clamp(lo, hi);
+            }
+        }
+        // Final exact fix-up on the slack-iest element.
+        let sum: f64 = sizes.iter().sum();
+        let err = total - sum;
+        if err.abs() >= 1.0 {
+            // Put the residue on the element with the most headroom.
+            let idx = if err > 0.0 {
+                sizes
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| (hi - a.1).total_cmp(&(hi - b.1)))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            } else {
+                sizes
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| (a.1 - lo).total_cmp(&(b.1 - lo)))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            };
+            sizes[idx] = (sizes[idx] + err).clamp(lo, hi);
+        }
+        sizes.iter().map(|&s| s.round() as u64).collect()
+    }
+
+    /// Mean file size (bytes).
+    pub fn mean_bytes(&self) -> f64 {
+        self.total_bytes as f64 / self.files as f64
+    }
+
+    /// Human description line (Table 2 row).
+    pub fn describe(&self) -> String {
+        format!(
+            "{:<18} {:<12} {:>3} files  total {:>8.2} GB  range {:.2}–{:.2} GB",
+            self.alias,
+            self.project,
+            self.files,
+            self.total_bytes as f64 / GB,
+            self.min_bytes as f64 / GB,
+            self.max_bytes as f64 / GB,
+        )
+    }
+}
+
+/// Sanity helper for tests and docs: byte counts of the paper units.
+pub fn paper_units() -> (f64, f64) {
+    (GB, MB)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table2() {
+        assert_eq!(TABLE2_PRESETS.len(), 3);
+        let breast = DatasetPreset::find("Breast-RNA-seq").unwrap();
+        assert_eq!(breast.project, "PRJNA762469");
+        assert_eq!(breast.files, 10);
+        let hifi = DatasetPreset::find("prjna540705").unwrap();
+        assert_eq!(hifi.alias, "HiFi-WGS");
+        assert!(DatasetPreset::find("nope").is_none());
+    }
+
+    #[test]
+    fn generated_sizes_satisfy_published_constraints() {
+        for preset in &TABLE2_PRESETS {
+            for seed in 0..5 {
+                let sizes = preset.generate(seed);
+                assert_eq!(sizes.len(), preset.files, "{}", preset.alias);
+                let total: u64 = sizes.iter().sum();
+                let err = (total as i64 - preset.total_bytes as i64).abs();
+                assert!(
+                    err <= preset.files as i64,
+                    "{}: total off by {err} bytes",
+                    preset.alias
+                );
+                for &s in &sizes {
+                    assert!(
+                        s >= preset.min_bytes && s <= preset.max_bytes,
+                        "{}: size {s} outside [{}, {}]",
+                        preset.alias,
+                        preset.min_bytes,
+                        preset.max_bytes
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p = &TABLE2_PRESETS[0];
+        assert_ne!(p.generate(1), p.generate(2));
+        assert_eq!(p.generate(3), p.generate(3));
+    }
+}

@@ -1,0 +1,144 @@
+//! Accession identifier parsing and classification.
+//!
+//! Grammar (the subset used by SRA/ENA):
+//!
+//! * run accessions: `SRR`, `ERR`, `DRR` + 6–9 digits (NCBI, EBI, DDBJ)
+//! * experiment: `SRX`/`ERX`/`DRX` + digits (accepted, resolved to runs)
+//! * BioProjects: `PRJNA`/`PRJEB`/`PRJDB` + digits
+//!
+//! Case-insensitive on input, normalized to upper-case.
+
+use std::fmt;
+
+use crate::{Error, Result};
+
+/// A validated accession.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Accession {
+    /// A single sequencing run (`SRR1234567`).
+    Run(String),
+    /// An experiment grouping runs (`SRX1234567`).
+    Experiment(String),
+    /// A BioProject (`PRJNA762469`).
+    Project(String),
+}
+
+impl Accession {
+    /// Parse and validate one accession string.
+    pub fn parse(raw: &str) -> Result<Accession> {
+        let s = raw.trim().to_ascii_uppercase();
+        if s.is_empty() {
+            return Err(Error::Accession("empty accession".into()));
+        }
+        let (kind, digits): (fn(String) -> Accession, &str) = if let Some(rest) =
+            strip_any(&s, &["PRJNA", "PRJEB", "PRJDB"])
+        {
+            (Accession::Project, rest)
+        } else if let Some(rest) = strip_any(&s, &["SRR", "ERR", "DRR"]) {
+            (Accession::Run, rest)
+        } else if let Some(rest) = strip_any(&s, &["SRX", "ERX", "DRX"]) {
+            (Accession::Experiment, rest)
+        } else {
+            return Err(Error::Accession(format!(
+                "unrecognized accession '{raw}' (expected SRR/ERR/DRR, SRX/ERX/DRX or PRJNA/PRJEB/PRJDB prefix)"
+            )));
+        };
+        if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+            return Err(Error::Accession(format!(
+                "accession '{raw}' must be <prefix><digits>"
+            )));
+        }
+        if !(4..=12).contains(&digits.len()) {
+            return Err(Error::Accession(format!(
+                "accession '{raw}' has implausible digit count {}",
+                digits.len()
+            )));
+        }
+        Ok(kind(s))
+    }
+
+    /// Parse a whitespace/comma/newline-separated accession list (the
+    /// input format of the paper's workflow, Figure 3).
+    pub fn parse_list(text: &str) -> Result<Vec<Accession>> {
+        let mut out = Vec::new();
+        for line in text.lines() {
+            // Everything after '#' on a line is a comment.
+            let line = line.split('#').next().unwrap_or("");
+            for token in line.split(|c: char| c.is_whitespace() || c == ',') {
+                let token = token.trim();
+                if token.is_empty() {
+                    continue;
+                }
+                out.push(Accession::parse(token)?);
+            }
+        }
+        if out.is_empty() {
+            return Err(Error::Accession("accession list is empty".into()));
+        }
+        Ok(out)
+    }
+
+    /// The raw normalized string.
+    pub fn as_str(&self) -> &str {
+        match self {
+            Accession::Run(s) | Accession::Experiment(s) | Accession::Project(s) => s,
+        }
+    }
+
+    pub fn is_project(&self) -> bool {
+        matches!(self, Accession::Project(_))
+    }
+}
+
+impl fmt::Display for Accession {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+fn strip_any<'a>(s: &'a str, prefixes: &[&str]) -> Option<&'a str> {
+    prefixes.iter().find_map(|p| s.strip_prefix(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_accessions() {
+        assert_eq!(
+            Accession::parse("SRR1554534").unwrap(),
+            Accession::Run("SRR1554534".into())
+        );
+        assert_eq!(
+            Accession::parse("prjna762469").unwrap(),
+            Accession::Project("PRJNA762469".into())
+        );
+        assert_eq!(
+            Accession::parse("ERX123456").unwrap(),
+            Accession::Experiment("ERX123456".into())
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Accession::parse("").is_err());
+        assert!(Accession::parse("SRR").is_err());
+        assert!(Accession::parse("SRRabc").is_err());
+        assert!(Accession::parse("XYZ123456").is_err());
+        assert!(Accession::parse("SRR1234567890123").is_err());
+    }
+
+    #[test]
+    fn list_parsing_with_comments() {
+        let list = Accession::parse_list("SRR0000001, SRR0000002\n# comment\nPRJNA540705\n")
+            .unwrap();
+        assert_eq!(list.len(), 3);
+        assert!(list[2].is_project());
+    }
+
+    #[test]
+    fn empty_list_is_error() {
+        assert!(Accession::parse_list("# nothing\n").is_err());
+    }
+}

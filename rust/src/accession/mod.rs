@@ -1,0 +1,26 @@
+//! Accession handling: identifiers, the simulated repository catalog,
+//! and URL resolution.
+//!
+//! A FastBioDL transfer starts from an *accession list* (paper §4): run
+//! accessions (`SRR…`/`ERR…`/`DRR…`) or whole BioProjects (`PRJNA…`).
+//! The real system resolves these against the ENA Portal API or NCBI
+//! E-utilities; this reproduction resolves them against a deterministic
+//! in-process catalog ([`catalog`]) whose three built-in projects are
+//! the paper's Table 2 datasets, regenerated file-by-file with the
+//! exact published counts, total sizes, and per-file ranges
+//! ([`datasets`]).
+//!
+//! The resolver ([`resolver`]) also models the *cost* of resolution —
+//! the paper's baselines resolve metadata per file at download time
+//! (serialized, seconds each: the Amplicon-Digester killer), while
+//! FastBioDL batch-resolves the whole list up front.
+
+pub mod catalog;
+pub mod datasets;
+pub mod id;
+pub mod resolver;
+
+pub use catalog::{Catalog, RunRecord};
+pub use datasets::{DatasetPreset, TABLE2_PRESETS};
+pub use id::Accession;
+pub use resolver::{ResolutionCost, Resolver};

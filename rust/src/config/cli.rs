@@ -1,0 +1,155 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `fastbiodl <command> [positional...] [--flag value]...`.
+//! Flags may appear anywhere after the command; `--flag=value` and
+//! `--flag value` are both accepted; bare `--flag` is boolean `true`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        let Some(cmd) = it.next() else {
+            return Ok(out);
+        };
+        if cmd.starts_with('-') {
+            return Err(Error::Config(format!(
+                "expected a command first, got flag '{cmd}' (try `fastbiodl help`)"
+            )));
+        }
+        out.command = cmd;
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), "true".into());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                Error::Config(format!("--{name}='{v}' is not a number"))
+            }),
+        }
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                Error::Config(format!("--{name}='{v}' is not an integer"))
+            }),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                Error::Config(format!("--{name}='{v}' is not an integer"))
+            }),
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on unknown flags (catches typos early).
+    pub fn expect_flags(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown flag --{k} for '{}' (known: {})",
+                    self.command,
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_forms() {
+        let a = parse("download PRJNA762469 --k 1.05 --real --seed=42");
+        assert_eq!(a.command, "download");
+        assert_eq!(a.positional, vec!["PRJNA762469"]);
+        assert_eq!(a.flag_f64("k").unwrap(), Some(1.05));
+        assert!(a.flag_bool("real"));
+        assert_eq!(a.flag_u64("seed").unwrap(), Some(42));
+        assert_eq!(a.flag("missing"), None);
+    }
+
+    #[test]
+    fn flag_then_positional() {
+        let a = parse("experiment --runs 3 table3");
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.flag_usize("runs").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("download --chnk 5");
+        assert!(a.expect_flags(&["chunk"]).is_err());
+        assert!(a.expect_flags(&["chnk"]).is_ok());
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("x --n abc");
+        assert!(a.flag_usize("n").is_err());
+    }
+
+    #[test]
+    fn leading_flag_is_error() {
+        assert!(Args::parse(vec!["--help".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! TOML-subset config-file loader.
+//!
+//! Offline stand-in for the `toml` crate. Supports the subset real
+//! deployments need: `[section]` headers, `key = value` with string /
+//! float / integer / bool scalars, `#` comments, and flat arrays of
+//! scalars. No nested tables-in-arrays, no multi-line strings — config
+//! files here are knobs, not documents.
+//!
+//! ```toml
+//! # fastbiodl.toml
+//! [optimizer]
+//! kind = "gd"
+//! k = 1.02
+//! probe_interval_s = 5.0
+//!
+//! [download]
+//! chunk_bytes = 33554432
+//! max_open_files = 4
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::{DownloadConfig, OptimizerKind};
+use crate::{Error, Result};
+
+/// A scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed file: `section.key → value`. Keys before any `[section]`
+/// live in the "" section.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, Value>,
+}
+
+impl TomlDoc {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| bad(lineno, "unterminated [section]"))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(bad(lineno, "empty section name"));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| bad(lineno, "expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(bad(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    /// Read + parse a file.
+    pub fn load(path: &Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, dotted_key: &str) -> Option<&Value> {
+        self.values.get(dotted_key)
+    }
+
+    /// All keys (for unknown-key warnings).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn bad(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("config line {}: {msg}", lineno + 1))
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(bad(lineno, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| bad(lineno, "unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| bad(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| bad(lineno, &format!("cannot parse value '{s}'")))
+}
+
+fn split_array_items(s: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    items
+}
+
+/// Overlay a parsed file onto a [`DownloadConfig`].
+pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
+    let known_prefixes = ["optimizer.", "download."];
+    for key in doc.keys() {
+        if !known_prefixes.iter().any(|p| key.starts_with(p)) {
+            return Err(Error::Config(format!(
+                "unknown config key '{key}' (sections: [optimizer], [download])"
+            )));
+        }
+    }
+
+    macro_rules! f64_opt {
+        ($key:expr, $slot:expr) => {
+            if let Some(v) = doc.get($key) {
+                $slot = v
+                    .as_f64()
+                    .ok_or_else(|| Error::Config(format!("'{}' must be a number", $key)))?;
+            }
+        };
+    }
+    macro_rules! usize_opt {
+        ($key:expr, $slot:expr) => {
+            if let Some(v) = doc.get($key) {
+                $slot = v.as_usize().ok_or_else(|| {
+                    Error::Config(format!("'{}' must be a non-negative integer", $key))
+                })?;
+            }
+        };
+    }
+
+    if let Some(v) = doc.get("optimizer.kind") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| Error::Config("'optimizer.kind' must be a string".into()))?;
+        cfg.optimizer.kind = OptimizerKind::parse(s)?;
+    }
+    f64_opt!("optimizer.k", cfg.optimizer.k);
+    f64_opt!("optimizer.probe_interval_s", cfg.optimizer.probe_interval_s);
+    f64_opt!("optimizer.lr", cfg.optimizer.lr);
+    f64_opt!("optimizer.step_clip", cfg.optimizer.step_clip);
+    usize_opt!("optimizer.c_min", cfg.optimizer.c_min);
+    usize_opt!("optimizer.c_max", cfg.optimizer.c_max);
+    usize_opt!("optimizer.c_init", cfg.optimizer.c_init);
+    usize_opt!("optimizer.fixed_level", cfg.optimizer.fixed_level);
+    f64_opt!("optimizer.bayes_lengthscale", cfg.optimizer.bayes_lengthscale);
+    f64_opt!("optimizer.bayes_noise", cfg.optimizer.bayes_noise);
+    f64_opt!("optimizer.bayes_xi", cfg.optimizer.bayes_xi);
+    f64_opt!("optimizer.history_half_life", cfg.optimizer.history_half_life);
+
+    if let Some(v) = doc.get("download.chunk_bytes") {
+        cfg.chunk_bytes = v
+            .as_u64()
+            .ok_or_else(|| Error::Config("'download.chunk_bytes' must be an integer".into()))?;
+    }
+    f64_opt!("download.monitor_hz", cfg.monitor_hz);
+    usize_opt!("download.max_open_files", cfg.max_open_files);
+    f64_opt!("download.timeout_s", cfg.timeout_s);
+    if let Some(v) = doc.get("download.output_dir") {
+        cfg.output_dir = v
+            .as_str()
+            .ok_or_else(|| Error::Config("'download.output_dir' must be a string".into()))?
+            .to_string();
+    }
+    Ok(())
+}
+
+/// Load a config file and overlay it onto defaults.
+pub fn load_config(path: &Path) -> Result<DownloadConfig> {
+    let doc = TomlDoc::load(path)?;
+    let mut cfg = DownloadConfig::default();
+    apply_to_config(&doc, &mut cfg)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+            # top comment
+            [optimizer]
+            kind = "bayes"   # inline comment
+            k = 1.05
+            c_max = 32
+
+            [download]
+            output_dir = "/tmp/x"
+            chunk_bytes = 1_048_576
+            flag = true
+            arr = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("optimizer.kind").unwrap().as_str(), Some("bayes"));
+        assert_eq!(doc.get("optimizer.k").unwrap().as_f64(), Some(1.05));
+        assert_eq!(doc.get("download.chunk_bytes").unwrap().as_u64(), Some(1_048_576));
+        assert_eq!(doc.get("download.flag"), Some(&Value::Bool(true)));
+        assert_eq!(
+            doc.get("download.arr"),
+            Some(&Value::Arr(vec![
+                Value::Num(1.0),
+                Value::Num(2.0),
+                Value::Num(3.0)
+            ]))
+        );
+    }
+
+    #[test]
+    fn hash_in_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"key = "a#b""##).unwrap();
+        assert_eq!(doc.get("key").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn overlay_and_validate() {
+        let doc = TomlDoc::parse(
+            r#"
+            [optimizer]
+            kind = "gd"
+            k = 1.01
+            probe_interval_s = 3.0
+            [download]
+            max_open_files = 2
+            "#,
+        )
+        .unwrap();
+        let mut cfg = DownloadConfig::default();
+        apply_to_config(&doc, &mut cfg).unwrap();
+        assert_eq!(cfg.optimizer.k, 1.01);
+        assert_eq!(cfg.optimizer.probe_interval_s, 3.0);
+        assert_eq!(cfg.max_open_files, 2);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = TomlDoc::parse("[optimzer]\nk = 1.02").unwrap();
+        let mut cfg = DownloadConfig::default();
+        let err = apply_to_config(&doc, &mut cfg).unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let doc = TomlDoc::parse("[optimizer]\nk = \"high\"").unwrap();
+        let mut cfg = DownloadConfig::default();
+        assert!(apply_to_config(&doc, &mut cfg).is_err());
+    }
+
+    #[test]
+    fn parse_errors_have_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nnot a kv line").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+}

@@ -1,0 +1,284 @@
+//! Configuration system: typed knobs, a TOML-subset file format, and
+//! environment overrides.
+//!
+//! Precedence (lowest → highest): built-in defaults → config file
+//! (`--config path.toml`) → `FASTBIODL_*` environment variables → CLI
+//! flags. Everything validates before a transfer starts; invalid
+//! combinations fail with precise messages rather than mid-download.
+
+pub mod cli;
+pub mod file;
+
+use crate::{Error, Result};
+
+/// Which concurrency controller drives the transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Paper's chosen controller: online gradient descent on `-U`.
+    GradientDescent,
+    /// In-paper baseline: GP surrogate + expected improvement.
+    Bayesian,
+    /// Static concurrency (the baseline tools' behaviour).
+    Fixed,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gd" | "gradient" | "gradient-descent" => Ok(OptimizerKind::GradientDescent),
+            "bayes" | "bayesian" | "bo" => Ok(OptimizerKind::Bayesian),
+            "fixed" | "static" => Ok(OptimizerKind::Fixed),
+            other => Err(Error::Config(format!(
+                "unknown optimizer '{other}' (expected gd | bayes | fixed)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::GradientDescent => "gradient-descent",
+            OptimizerKind::Bayesian => "bayesian",
+            OptimizerKind::Fixed => "fixed",
+        }
+    }
+}
+
+/// Controller hyper-parameters (paper §4.1–4.2).
+#[derive(Clone, Debug)]
+pub struct OptimizerConfig {
+    /// Which controller to run.
+    pub kind: OptimizerKind,
+    /// Utility penalty coefficient `k` (> 1). Paper default 1.02
+    /// (Table 1 selects it over 1.01 / 1.05).
+    pub k: f64,
+    /// Probing interval (s): how long each concurrency level is
+    /// measured before the optimizer updates. Paper: 3 s default,
+    /// 5 s in the evaluation.
+    pub probe_interval_s: f64,
+    /// Gradient-descent learning rate (unitless — the step is
+    /// normalized by the window's mean utility; see `compile.model`).
+    pub lr: f64,
+    /// Max |Δconcurrency| per probe.
+    pub step_clip: f64,
+    /// Concurrency bounds.
+    pub c_min: usize,
+    pub c_max: usize,
+    /// Initial concurrency (paper: starts at 1).
+    pub c_init: usize,
+    /// Fixed level (only for `OptimizerKind::Fixed`).
+    pub fixed_level: usize,
+    /// GP lengthscale / noise / EI ξ (Bayesian controller only).
+    pub bayes_lengthscale: f64,
+    pub bayes_noise: f64,
+    pub bayes_xi: f64,
+    /// Probe-history recency half-life, in probes (weights the GD
+    /// window; older probes decay by 2^(-age/half_life)).
+    pub history_half_life: f64,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            kind: OptimizerKind::GradientDescent,
+            k: 1.02,
+            probe_interval_s: 5.0,
+            lr: 3.0,
+            step_clip: 4.0,
+            c_min: 1,
+            c_max: 64,
+            c_init: 1,
+            fixed_level: 3,
+            bayes_lengthscale: 4.0,
+            bayes_noise: 1e-3,
+            bayes_xi: 0.01,
+            history_half_life: 4.0,
+        }
+    }
+}
+
+impl OptimizerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.k <= 1.0 {
+            return Err(Error::Config(format!(
+                "k must be > 1 (got {}); k^C must penalize concurrency",
+                self.k
+            )));
+        }
+        if self.probe_interval_s <= 0.0 {
+            return Err(Error::Config("probe_interval_s must be > 0".into()));
+        }
+        if self.c_min < 1 || self.c_min > self.c_max {
+            return Err(Error::Config(format!(
+                "bad concurrency bounds [{}, {}]",
+                self.c_min, self.c_max
+            )));
+        }
+        if self.c_max > 64 {
+            // GRID=64 is the artifact's candidate grid; the Bayesian
+            // step cannot propose beyond it.
+            return Err(Error::Config("c_max may not exceed 64 (artifact grid)".into()));
+        }
+        if !(self.c_min..=self.c_max).contains(&self.c_init) {
+            return Err(Error::Config(format!(
+                "c_init {} outside [{}, {}]",
+                self.c_init, self.c_min, self.c_max
+            )));
+        }
+        if self.lr <= 0.0 || self.step_clip <= 0.0 {
+            return Err(Error::Config("lr and step_clip must be > 0".into()));
+        }
+        if self.bayes_lengthscale <= 0.0 || self.bayes_noise <= 0.0 {
+            return Err(Error::Config("bayes lengthscale/noise must be > 0".into()));
+        }
+        if self.history_half_life <= 0.0 {
+            return Err(Error::Config("history_half_life must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Theoretical concurrency ceiling `C* = 1 / ln k` (paper §4.1).
+    pub fn c_star(&self) -> f64 {
+        1.0 / self.k.ln()
+    }
+}
+
+/// Whole-transfer configuration.
+#[derive(Clone, Debug)]
+pub struct DownloadConfig {
+    pub optimizer: OptimizerConfig,
+    /// Range-request chunk size (bytes). Files smaller than one chunk
+    /// download in a single request.
+    pub chunk_bytes: u64,
+    /// Monitor sampling rate (Hz) — instantaneous throughput samples
+    /// per second feeding the probe window.
+    pub monitor_hz: f64,
+    /// Max distinct files in flight at once (chunked scheduling keeps
+    /// this small to bound sink-side interleaving; see netsim::client).
+    pub max_open_files: usize,
+    /// Output directory for downloaded payloads (real transport only).
+    pub output_dir: String,
+    /// Abort the whole transfer after this much time (s); 0 = no limit.
+    pub timeout_s: f64,
+}
+
+impl Default for DownloadConfig {
+    fn default() -> Self {
+        DownloadConfig {
+            optimizer: OptimizerConfig::default(),
+            chunk_bytes: 32 * 1024 * 1024,
+            monitor_hz: 4.0,
+            max_open_files: 4,
+            output_dir: "downloads".into(),
+            timeout_s: 0.0,
+        }
+    }
+}
+
+impl DownloadConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.optimizer.validate()?;
+        if self.chunk_bytes < 64 * 1024 {
+            return Err(Error::Config(format!(
+                "chunk_bytes {} too small (min 64 KiB)",
+                self.chunk_bytes
+            )));
+        }
+        if self.monitor_hz <= 0.0 || self.monitor_hz > 1000.0 {
+            return Err(Error::Config("monitor_hz must be in (0, 1000]".into()));
+        }
+        if self.max_open_files == 0 {
+            return Err(Error::Config("max_open_files must be >= 1".into()));
+        }
+        if self.timeout_s < 0.0 {
+            return Err(Error::Config("timeout_s must be >= 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Apply `FASTBIODL_*` environment overrides (documented in README).
+    pub fn apply_env(&mut self) -> Result<()> {
+        fn env_f64(name: &str) -> Result<Option<f64>> {
+            match std::env::var(name) {
+                Ok(v) => v
+                    .parse()
+                    .map(Some)
+                    .map_err(|_| Error::Config(format!("{name}='{v}' is not a number"))),
+                Err(_) => Ok(None),
+            }
+        }
+        if let Some(k) = env_f64("FASTBIODL_K")? {
+            self.optimizer.k = k;
+        }
+        if let Some(p) = env_f64("FASTBIODL_PROBE_INTERVAL")? {
+            self.optimizer.probe_interval_s = p;
+        }
+        if let Some(lr) = env_f64("FASTBIODL_LR")? {
+            self.optimizer.lr = lr;
+        }
+        if let Ok(kind) = std::env::var("FASTBIODL_OPTIMIZER") {
+            self.optimizer.kind = OptimizerKind::parse(&kind)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        DownloadConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn k_must_exceed_one() {
+        let mut c = OptimizerConfig::default();
+        c.k = 1.0;
+        assert!(c.validate().is_err());
+        c.k = 0.9;
+        assert!(c.validate().is_err());
+        c.k = 1.001;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn c_star_matches_paper() {
+        // Paper §4.1: C* = 1/ln k. For k=1.02, C* ≈ 50.5.
+        let c = OptimizerConfig {
+            k: 1.02,
+            ..Default::default()
+        };
+        assert!((c.c_star() - 50.497).abs() < 0.01);
+        // k=1.05 is much more conservative: C* ≈ 20.5.
+        let c = OptimizerConfig {
+            k: 1.05,
+            ..Default::default()
+        };
+        assert!((c.c_star() - 20.498).abs() < 0.01);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut c = OptimizerConfig::default();
+        c.c_min = 0;
+        assert!(c.validate().is_err());
+        c = OptimizerConfig::default();
+        c.c_max = 100;
+        assert!(c.validate().is_err());
+        c = OptimizerConfig::default();
+        c.c_init = 70;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn optimizer_kind_parses() {
+        assert_eq!(
+            OptimizerKind::parse("gd").unwrap(),
+            OptimizerKind::GradientDescent
+        );
+        assert_eq!(OptimizerKind::parse("BAYES").unwrap(), OptimizerKind::Bayesian);
+        assert_eq!(OptimizerKind::parse("fixed").unwrap(), OptimizerKind::Fixed);
+        assert!(OptimizerKind::parse("sgd").is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! The coordinator: everything between "a list of files" and "bytes on
+//! disk", minus the transport itself.
+//!
+//! This is the paper's Figure 3 pipeline and Algorithm 1 realized as
+//! composable pieces shared by both session drivers (virtual-time
+//! simulation and real sockets):
+//!
+//! * [`scheduler`] — splits resolved files into range-request chunks and
+//!   hands them to workers, bounding how many distinct files are in
+//!   flight (FastBioDL's file-ordered chunking) or running whole-file
+//!   mode (the baseline tools);
+//! * [`pool`] — the shared worker **status array** of Algorithm 1: the
+//!   optimizer sets the first `C` slots to run, workers observe their
+//!   slot each iteration and park/resume accordingly;
+//! * [`probe`] — the per-probe sample window: raw monitor samples in,
+//!   XLA-aggregated `(mean, std, …)` out, feeding the controller.
+
+pub mod pool;
+pub mod probe;
+pub mod resume;
+pub mod scheduler;
+
+pub use pool::StatusArray;
+pub use resume::ProgressJournal;
+pub use probe::ProbeWindow;
+pub use scheduler::{Chunk, ChunkScheduler, SchedulerMode};

@@ -1,0 +1,145 @@
+//! Worker status array — the shared control structure of the paper's
+//! Algorithm 1 ("Shared Process Status Arrays").
+//!
+//! The optimizer thread writes the target concurrency by flipping the
+//! first `C` slots to RUN and the rest to PARK; each worker polls its
+//! own slot between chunks and parks/resumes accordingly. On exit the
+//! optimizer "sets all worker statuses to 0" (Algorithm 1 line 9) —
+//! [`StatusArray::stop_all`].
+//!
+//! The array is plain atomics: one relaxed load per worker loop
+//! iteration, one batch of stores per probe interval. No locks touch
+//! the download hot path.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Worker slot states.
+pub const PARKED: u8 = 0;
+pub const RUNNING: u8 = 1;
+/// Terminal: the session is over, workers must exit.
+pub const STOPPED: u8 = 2;
+
+/// Shared status array.
+pub struct StatusArray {
+    slots: Vec<AtomicU8>,
+}
+
+impl StatusArray {
+    /// Create with `capacity` worker slots, all parked.
+    pub fn new(capacity: usize) -> StatusArray {
+        StatusArray {
+            slots: (0..capacity).map(|_| AtomicU8::new(PARKED)).collect(),
+        }
+    }
+
+    /// Max workers.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Set the target concurrency: slots `< target` run, the rest park.
+    /// Stopped slots stay stopped. Returns the applied target (clamped
+    /// to capacity).
+    pub fn set_target(&self, target: usize) -> usize {
+        let target = target.min(self.slots.len());
+        for (i, slot) in self.slots.iter().enumerate() {
+            let want = if i < target { RUNNING } else { PARKED };
+            // Don't resurrect stopped slots.
+            let _ = slot.compare_exchange(
+                if want == RUNNING { PARKED } else { RUNNING },
+                want,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+        }
+        target
+    }
+
+    /// Algorithm 1 line 9: ensure workers stop on exit.
+    pub fn stop_all(&self) {
+        for slot in &self.slots {
+            slot.store(STOPPED, Ordering::Release);
+        }
+    }
+
+    /// Worker-side: should worker `i` be transferring right now?
+    #[inline]
+    pub fn is_running(&self, i: usize) -> bool {
+        self.slots[i].load(Ordering::Acquire) == RUNNING
+    }
+
+    /// Worker-side: has the session ended?
+    #[inline]
+    pub fn is_stopped(&self, i: usize) -> bool {
+        self.slots[i].load(Ordering::Acquire) == STOPPED
+    }
+
+    /// Count of currently running slots (the live concurrency).
+    pub fn running(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.load(Ordering::Acquire) == RUNNING)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_sets_prefix() {
+        let a = StatusArray::new(8);
+        assert_eq!(a.set_target(3), 3);
+        assert_eq!(a.running(), 3);
+        assert!(a.is_running(0) && a.is_running(2));
+        assert!(!a.is_running(3));
+    }
+
+    #[test]
+    fn target_clamped_to_capacity() {
+        let a = StatusArray::new(4);
+        assert_eq!(a.set_target(100), 4);
+        assert_eq!(a.running(), 4);
+    }
+
+    #[test]
+    fn shrink_parks_tail() {
+        let a = StatusArray::new(8);
+        a.set_target(6);
+        a.set_target(2);
+        assert_eq!(a.running(), 2);
+        assert!(!a.is_running(5));
+    }
+
+    #[test]
+    fn stop_all_is_terminal() {
+        let a = StatusArray::new(4);
+        a.set_target(4);
+        a.stop_all();
+        assert_eq!(a.running(), 0);
+        assert!(a.is_stopped(0));
+        // set_target cannot resurrect.
+        a.set_target(4);
+        assert_eq!(a.running(), 0);
+        assert!(a.is_stopped(3));
+    }
+
+    #[test]
+    fn concurrent_workers_observe_changes() {
+        use std::sync::Arc;
+        let a = Arc::new(StatusArray::new(4));
+        a.set_target(4);
+        let a2 = a.clone();
+        let h = std::thread::spawn(move || {
+            // Spin until parked.
+            while a2.is_running(3) {
+                std::hint::spin_loop();
+            }
+            true
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        a.set_target(1);
+        assert!(h.join().unwrap());
+    }
+}

@@ -1,0 +1,165 @@
+//! Probe-window collection: raw monitor samples → XLA-aggregated stats.
+//!
+//! During each probing interval the monitor deposits instantaneous
+//! throughput samples here; at the probe boundary the optimizer loop
+//! aggregates them through the `throughput_window` artifact (count,
+//! mean, std, min, max, exponentially-weighted mean) and resets the
+//! window. The fixed artifact shape (`SAMPLES = 256`) comfortably holds
+//! a 5 s probe at the default 4 Hz monitor rate; if a window ever
+//! overflows, the oldest samples are dropped (the EW-mean weights make
+//! this nearly lossless).
+
+use crate::runtime::XlaRuntime;
+use crate::Result;
+
+/// Aggregated probe-window statistics (output of the
+/// `throughput_window` artifact).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowStats {
+    pub count: f64,
+    pub mean_mbps: f64,
+    pub std_mbps: f64,
+    pub min_mbps: f64,
+    pub max_mbps: f64,
+    /// Exponentially-weighted mean (recent samples count more).
+    pub ew_mean_mbps: f64,
+}
+
+/// Sample buffer for one probe window.
+#[derive(Debug)]
+pub struct ProbeWindow {
+    samples: Vec<f32>,
+    capacity: usize,
+    /// Per-sample EW decay (newest weight 1, previous ×decay, …).
+    decay: f32,
+    dropped: usize,
+}
+
+impl ProbeWindow {
+    /// `capacity` must equal the artifact's SAMPLES constant (256);
+    /// `decay` in (0, 1] sets the exponential recency weighting.
+    pub fn new(capacity: usize, decay: f64) -> ProbeWindow {
+        assert!(capacity > 0);
+        assert!((0.0..=1.0).contains(&decay) && decay > 0.0);
+        ProbeWindow {
+            samples: Vec::with_capacity(capacity),
+            capacity,
+            decay: decay as f32,
+            dropped: 0,
+        }
+    }
+
+    /// Deposit one instantaneous throughput sample (Mbps).
+    pub fn push(&mut self, mbps: f64) {
+        if self.samples.len() == self.capacity {
+            self.samples.remove(0);
+            self.dropped += 1;
+        }
+        self.samples.push(mbps as f32);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples dropped to overflow since the last reset (diagnostics).
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Aggregate through the XLA artifact and clear the window.
+    pub fn aggregate_and_reset(&mut self, rt: &XlaRuntime) -> Result<WindowStats> {
+        let n = self.samples.len();
+        let mut samples = vec![0.0f32; self.capacity];
+        let mut valid = vec![0.0f32; self.capacity];
+        let mut weights = vec![0.0f32; self.capacity];
+        samples[..n].copy_from_slice(&self.samples);
+        for i in 0..n {
+            valid[i] = 1.0;
+            // Newest sample (index n-1) has weight 1.
+            weights[i] = self.decay.powi((n - 1 - i) as i32);
+        }
+        let out = rt.throughput_window(&samples, &valid, &weights)?;
+        self.samples.clear();
+        self.dropped = 0;
+        Ok(WindowStats {
+            count: out[0] as f64,
+            mean_mbps: out[1] as f64,
+            std_mbps: out[2] as f64,
+            min_mbps: out[3] as f64,
+            max_mbps: out[4] as f64,
+            ew_mean_mbps: out[5] as f64,
+        })
+    }
+
+    /// Pure-Rust aggregation fallback used by unit tests that run
+    /// without artifacts (cross-checked against the XLA path in the
+    /// integration suite).
+    pub fn aggregate_mirror(&self) -> WindowStats {
+        let n = self.samples.len();
+        if n == 0 {
+            return WindowStats::default();
+        }
+        let xs: Vec<f64> = self.samples.iter().map(|&x| x as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut wsum = 0.0;
+        let mut wtot = 0.0;
+        for (i, x) in xs.iter().enumerate() {
+            let w = (self.decay as f64).powi((n - 1 - i) as i32);
+            wsum += w * x;
+            wtot += w;
+        }
+        WindowStats {
+            count: n as f64,
+            mean_mbps: mean,
+            std_mbps: var.sqrt(),
+            min_mbps: xs.iter().copied().fold(f64::INFINITY, f64::min),
+            max_mbps: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            ew_mean_mbps: wsum / wtot,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mirror_stats_correct() {
+        let mut w = ProbeWindow::new(256, 0.9);
+        for x in [10.0, 20.0, 30.0] {
+            w.push(x);
+        }
+        let s = w.aggregate_mirror();
+        assert_eq!(s.count, 3.0);
+        assert!((s.mean_mbps - 20.0).abs() < 1e-6);
+        assert_eq!(s.min_mbps, 10.0);
+        assert_eq!(s.max_mbps, 30.0);
+        // EW mean favors the most recent (30).
+        assert!(s.ew_mean_mbps > 20.0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest() {
+        let mut w = ProbeWindow::new(4, 1.0);
+        for x in 0..6 {
+            w.push(x as f64);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.dropped(), 2);
+        let s = w.aggregate_mirror();
+        assert_eq!(s.min_mbps, 2.0);
+        assert_eq!(s.max_mbps, 5.0);
+    }
+
+    #[test]
+    fn empty_window_is_zero() {
+        let w = ProbeWindow::new(16, 0.9);
+        assert_eq!(w.aggregate_mirror(), WindowStats::default());
+    }
+}

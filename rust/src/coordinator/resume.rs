@@ -1,0 +1,207 @@
+//! Resume support: the progress journal.
+//!
+//! `prefetch`'s headline reliability feature is resuming interrupted
+//! downloads (paper §2); FastBioDL matches it. The real-socket session
+//! periodically persists each file's *contiguous completed frontier*
+//! (chunks can finish out of order; the frontier is the prefix that is
+//! certainly on disk). On restart, [`ProgressJournal::load`] feeds the
+//! frontiers to [`crate::coordinator::scheduler::ChunkScheduler::new_with_progress`],
+//! which re-requests only the remainder — at most one chunk per file is
+//! re-downloaded.
+//!
+//! Format: a single JSON document (`<output_dir>/.fastbiodl-journal`),
+//! written atomically (temp file + rename) so a crash mid-write leaves
+//! the previous journal intact.
+
+use std::path::{Path, PathBuf};
+
+use crate::accession::RunRecord;
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// Journal file name inside the output directory.
+pub const JOURNAL_FILE: &str = ".fastbiodl-journal";
+
+/// Persistent transfer progress.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgressJournal {
+    /// Chunk size the transfer runs with (a changed chunk size would
+    /// invalidate in-flight assumptions; we only reuse frontiers, so a
+    /// mismatch is allowed but recorded).
+    pub chunk_bytes: u64,
+    /// `(accession, total_bytes, frontier)` per file.
+    pub files: Vec<(String, u64, u64)>,
+}
+
+impl ProgressJournal {
+    /// Snapshot from the live transfer state.
+    pub fn capture(records: &[RunRecord], frontiers: &[u64], chunk_bytes: u64) -> Self {
+        assert_eq!(records.len(), frontiers.len());
+        ProgressJournal {
+            chunk_bytes,
+            files: records
+                .iter()
+                .zip(frontiers)
+                .map(|(r, &f)| (r.accession.clone(), r.bytes, f.min(r.bytes)))
+                .collect(),
+        }
+    }
+
+    /// Journal path for an output directory.
+    pub fn path_for(dir: &Path) -> PathBuf {
+        dir.join(JOURNAL_FILE)
+    }
+
+    /// Atomic write (temp + rename).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let doc = obj(vec![
+            ("version", Json::Num(1.0)),
+            ("chunk_bytes", Json::Num(self.chunk_bytes as f64)),
+            (
+                "files",
+                Json::Arr(
+                    self.files
+                        .iter()
+                        .map(|(acc, bytes, frontier)| {
+                            obj(vec![
+                                ("accession", Json::Str(acc.clone())),
+                                ("bytes", Json::Num(*bytes as f64)),
+                                ("frontier", Json::Num(*frontier as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let tmp = dir.join(format!("{JOURNAL_FILE}.tmp"));
+        std::fs::write(&tmp, doc.to_string_compact())?;
+        std::fs::rename(&tmp, Self::path_for(dir))?;
+        Ok(())
+    }
+
+    /// Load a journal if one exists.
+    pub fn load(dir: &Path) -> Result<Option<ProgressJournal>> {
+        let path = Self::path_for(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| Error::Session(format!("corrupt journal {}: {e}", path.display())))?;
+        let chunk_bytes = j
+            .require("chunk_bytes")?
+            .as_u64()
+            .ok_or_else(|| Error::Session("journal: bad chunk_bytes".into()))?;
+        let mut files = Vec::new();
+        for f in j
+            .require("files")?
+            .as_arr()
+            .ok_or_else(|| Error::Session("journal: 'files' not an array".into()))?
+        {
+            let acc = f
+                .require("accession")?
+                .as_str()
+                .ok_or_else(|| Error::Session("journal: bad accession".into()))?
+                .to_string();
+            let bytes = f
+                .require("bytes")?
+                .as_u64()
+                .ok_or_else(|| Error::Session("journal: bad bytes".into()))?;
+            let frontier = f
+                .require("frontier")?
+                .as_u64()
+                .ok_or_else(|| Error::Session("journal: bad frontier".into()))?;
+            files.push((acc, bytes, frontier));
+        }
+        Ok(Some(ProgressJournal { chunk_bytes, files }))
+    }
+
+    /// Match this journal against a fresh record list; returns per-file
+    /// frontiers (0 for files the journal does not know or whose sizes
+    /// changed — those restart from scratch).
+    pub fn frontiers_for(&self, records: &[RunRecord]) -> Vec<u64> {
+        records
+            .iter()
+            .map(|r| {
+                self.files
+                    .iter()
+                    .find(|(acc, bytes, _)| acc == &r.accession && *bytes == r.bytes)
+                    .map(|&(_, _, frontier)| frontier)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Remove the journal (transfer completed).
+    pub fn remove(dir: &Path) -> Result<()> {
+        match std::fs::remove_file(Self::path_for(dir)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Bytes left to transfer according to the journal.
+    pub fn remaining_bytes(&self) -> u64 {
+        self.files
+            .iter()
+            .map(|(_, bytes, frontier)| bytes - frontier.min(bytes))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn records() -> Vec<RunRecord> {
+        (0..3)
+            .map(|i| RunRecord {
+                accession: format!("SRR000000{i}"),
+                project: "T".into(),
+                bytes: 1_000 * (i + 1) as u64,
+                url: format!("http://x/{i}"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("fbdl-journal-{}", std::process::id()));
+        let recs = records();
+        let j = ProgressJournal::capture(&recs, &[500, 2_000, 0], 256);
+        j.save(&dir).unwrap();
+        let loaded = ProgressJournal::load(&dir).unwrap().unwrap();
+        assert_eq!(loaded, j);
+        assert_eq!(loaded.frontiers_for(&recs), vec![500, 2_000, 0]);
+        assert_eq!(loaded.remaining_bytes(), 500 + 0 + 3_000);
+        ProgressJournal::remove(&dir).unwrap();
+        assert!(ProgressJournal::load(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_journal_is_none() {
+        let dir = std::env::temp_dir().join("fbdl-journal-none");
+        assert!(ProgressJournal::load(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn size_mismatch_restarts_file() {
+        let recs = records();
+        let mut j = ProgressJournal::capture(&recs, &[100, 200, 300], 256);
+        // Simulate the remote file having changed size.
+        j.files[1].1 = 9_999;
+        assert_eq!(j.frontiers_for(&recs), vec![100, 0, 300]);
+    }
+
+    #[test]
+    fn capture_clamps_frontier_to_size() {
+        let recs = records();
+        let j = ProgressJournal::capture(&recs, &[5_000, 5_000, 5_000], 256);
+        assert_eq!(j.files[0].2, 1_000);
+        assert_eq!(j.remaining_bytes(), 0);
+    }
+}

@@ -1,0 +1,470 @@
+//! Chunk scheduling: files → range requests → workers.
+//!
+//! Two modes mirror the two tool families in the paper:
+//!
+//! * [`SchedulerMode::Chunked`] — FastBioDL: every file is cut into
+//!   fixed-size range requests; at most `max_open_files` distinct files
+//!   are in flight, and chunks of the open files are served in file
+//!   order. This keeps sink-side writes near-sequential (few open
+//!   files) while still letting many connections share one big file.
+//!   The first chunk of each file is *cold* (pays the server's staging
+//!   latency); subsequent chunks of the same file are warm.
+//! * [`SchedulerMode::WholeFile`] — prefetch/pysradb: one request per
+//!   file, as many files open as there are workers.
+//!
+//! The scheduler is transport-agnostic and single-threaded by design;
+//! the real-socket driver wraps it in a mutex (it is touched once per
+//! chunk, i.e. a few times per second — nowhere near contention).
+//!
+//! Invariants (property-tested in `rust/tests/prop_coordinator.rs`):
+//! chunks of one file never overlap and exactly tile `[0, size)`; a
+//! chunk is outstanding at most once; `bytes_done` never exceeds the
+//! total; completion implies every chunk of every file was delivered.
+
+use crate::accession::RunRecord;
+
+/// One range request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    /// Index into the scheduler's file list.
+    pub file: usize,
+    /// Chunk ordinal within the file.
+    pub index: usize,
+    /// Byte offset of the range.
+    pub offset: u64,
+    /// Range length (bytes); > 0.
+    pub len: u64,
+    /// First chunk of its file (pays cold first-byte latency).
+    pub cold: bool,
+}
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Fixed-size range requests, bounded distinct open files.
+    Chunked {
+        chunk_bytes: u64,
+        max_open_files: usize,
+    },
+    /// One request per file (baseline tools).
+    WholeFile,
+}
+
+#[derive(Clone, Debug)]
+struct FileState {
+    bytes: u64,
+    /// Next not-yet-handed-out offset.
+    next_offset: u64,
+    /// Chunks handed out but not yet completed.
+    outstanding: usize,
+    /// Bytes confirmed delivered.
+    bytes_done: u64,
+    /// Chunks handed out so far (ordinal source).
+    chunks_issued: usize,
+    opened: bool,
+    completed: bool,
+    /// Completed byte spans, kept merged and sorted (resume support:
+    /// the contiguous-from-zero frontier is what the progress journal
+    /// persists).
+    spans: Vec<(u64, u64)>,
+}
+
+impl FileState {
+    /// Insert a completed span, merging adjacent/overlapping entries.
+    fn add_span(&mut self, offset: u64, len: u64) {
+        let (mut start, mut end) = (offset, offset + len);
+        let mut merged = Vec::with_capacity(self.spans.len() + 1);
+        for &(s, e) in &self.spans {
+            if e < start || s > end {
+                merged.push((s, e));
+            } else {
+                start = start.min(s);
+                end = end.max(e);
+            }
+        }
+        merged.push((start, end));
+        merged.sort_unstable();
+        self.spans = merged;
+    }
+
+    /// Contiguous completed prefix starting at byte 0.
+    fn frontier(&self) -> u64 {
+        match self.spans.first() {
+            Some(&(0, end)) => end,
+            _ => 0,
+        }
+    }
+}
+
+/// The scheduler.
+#[derive(Debug)]
+pub struct ChunkScheduler {
+    files: Vec<FileState>,
+    mode: SchedulerMode,
+    /// Indices of files currently open (chunked mode bookkeeping).
+    open: Vec<usize>,
+    /// Requeued chunks (failures / worker shutdowns) served first.
+    requeued: Vec<Chunk>,
+    total_bytes: u64,
+    bytes_done: u64,
+}
+
+impl ChunkScheduler {
+    /// Build from resolved records.
+    pub fn new(records: &[RunRecord], mode: SchedulerMode) -> ChunkScheduler {
+        Self::new_with_progress(records, mode, None)
+    }
+
+    /// Build with prior progress: `done_prefix[i]` bytes of file `i`
+    /// are already on disk (a resume journal's contiguous frontiers —
+    /// see [`crate::coordinator::resume`]). Those bytes are never
+    /// re-requested.
+    pub fn new_with_progress(
+        records: &[RunRecord],
+        mode: SchedulerMode,
+        done_prefix: Option<&[u64]>,
+    ) -> ChunkScheduler {
+        if let SchedulerMode::Chunked {
+            chunk_bytes,
+            max_open_files,
+        } = mode
+        {
+            assert!(chunk_bytes > 0, "chunk_bytes must be > 0");
+            assert!(max_open_files > 0, "max_open_files must be > 0");
+        }
+        if let Some(p) = done_prefix {
+            assert_eq!(p.len(), records.len(), "done_prefix arity mismatch");
+        }
+        let mut bytes_done_total = 0u64;
+        let files: Vec<FileState> = records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let prefix = done_prefix
+                    .map(|p| p[i].min(r.bytes))
+                    .unwrap_or(0);
+                bytes_done_total += prefix;
+                FileState {
+                    bytes: r.bytes,
+                    next_offset: prefix,
+                    outstanding: 0,
+                    bytes_done: prefix,
+                    chunks_issued: 0,
+                    opened: false,
+                    completed: prefix >= r.bytes,
+                    spans: if prefix > 0 {
+                        vec![(0, prefix)]
+                    } else {
+                        Vec::new()
+                    },
+                }
+            })
+            .collect();
+        let total_bytes = records.iter().map(|r| r.bytes).sum();
+        ChunkScheduler {
+            files,
+            mode,
+            open: Vec::new(),
+            requeued: Vec::new(),
+            total_bytes,
+            bytes_done: bytes_done_total,
+        }
+    }
+
+    /// Contiguous completed prefix of each file (what the resume
+    /// journal persists; restart re-requests only beyond these).
+    pub fn frontiers(&self) -> Vec<u64> {
+        self.files.iter().map(FileState::frontier).collect()
+    }
+
+    /// Pull the next chunk for a worker, or `None` if nothing is
+    /// currently available (either all work is in flight or done).
+    pub fn next_chunk(&mut self) -> Option<Chunk> {
+        if let Some(c) = self.requeued.pop() {
+            self.files[c.file].outstanding += 1;
+            return Some(c);
+        }
+        match self.mode {
+            SchedulerMode::WholeFile => self.next_whole_file(),
+            SchedulerMode::Chunked {
+                chunk_bytes,
+                max_open_files,
+            } => self.next_chunked(chunk_bytes, max_open_files),
+        }
+    }
+
+    fn next_whole_file(&mut self) -> Option<Chunk> {
+        let idx = self
+            .files
+            .iter()
+            .position(|f| !f.opened && !f.completed)?;
+        let f = &mut self.files[idx];
+        f.opened = true;
+        let offset = f.next_offset; // 0, or the resume frontier
+        f.next_offset = f.bytes;
+        f.outstanding = 1;
+        f.chunks_issued = 1;
+        Some(Chunk {
+            file: idx,
+            index: 0,
+            offset,
+            len: f.bytes - offset,
+            cold: true,
+        })
+    }
+
+    fn next_chunked(&mut self, chunk_bytes: u64, max_open_files: usize) -> Option<Chunk> {
+        // Prefer an already-open file with bytes left to hand out.
+        let pick = self
+            .open
+            .iter()
+            .copied()
+            .find(|&i| self.files[i].next_offset < self.files[i].bytes);
+        let idx = match pick {
+            Some(i) => i,
+            None => {
+                if self.open.len() >= max_open_files {
+                    return None; // all open files fully handed out, wait
+                }
+                let next = self
+                    .files
+                    .iter()
+                    .position(|f| !f.opened && !f.completed)?;
+                self.files[next].opened = true;
+                self.open.push(next);
+                next
+            }
+        };
+        let f = &mut self.files[idx];
+        let offset = f.next_offset;
+        let len = chunk_bytes.min(f.bytes - offset);
+        debug_assert!(len > 0);
+        f.next_offset += len;
+        let index = f.chunks_issued;
+        f.chunks_issued += 1;
+        f.outstanding += 1;
+        Some(Chunk {
+            file: idx,
+            index,
+            offset,
+            len,
+            cold: index == 0,
+        })
+    }
+
+    /// A chunk finished delivering all its bytes.
+    pub fn chunk_done(&mut self, chunk: &Chunk) {
+        let f = &mut self.files[chunk.file];
+        assert!(f.outstanding > 0, "chunk_done with no outstanding chunks");
+        f.outstanding -= 1;
+        f.bytes_done += chunk.len;
+        f.add_span(chunk.offset, chunk.len);
+        self.bytes_done += chunk.len;
+        debug_assert!(f.bytes_done <= f.bytes, "file over-delivered");
+        if f.bytes_done >= f.bytes && f.outstanding == 0 {
+            f.completed = true;
+            self.open.retain(|&i| i != chunk.file);
+        }
+    }
+
+    /// A chunk failed (connection died); requeue it for another worker.
+    pub fn chunk_failed(&mut self, chunk: Chunk) {
+        let f = &mut self.files[chunk.file];
+        assert!(f.outstanding > 0, "chunk_failed with no outstanding chunks");
+        f.outstanding -= 1;
+        self.requeued.push(chunk);
+    }
+
+    /// All bytes of all files delivered.
+    pub fn all_done(&self) -> bool {
+        self.files.iter().all(|f| f.completed)
+    }
+
+    /// Distinct files currently open (drives the client-profile
+    /// distinct-file penalty in simulation).
+    pub fn open_files(&self) -> usize {
+        match self.mode {
+            SchedulerMode::Chunked { .. } => self.open.len(),
+            SchedulerMode::WholeFile => self
+                .files
+                .iter()
+                .filter(|f| f.opened && !f.completed)
+                .count(),
+        }
+    }
+
+    /// Whether any chunk is currently available without waiting.
+    pub fn has_ready_work(&self) -> bool {
+        if !self.requeued.is_empty() {
+            return true;
+        }
+        match self.mode {
+            SchedulerMode::WholeFile => self.files.iter().any(|f| !f.opened && !f.completed),
+            SchedulerMode::Chunked { max_open_files, .. } => {
+                let open_has_work = self
+                    .open
+                    .iter()
+                    .any(|&i| self.files[i].next_offset < self.files[i].bytes);
+                let can_open_new = self.open.len() < max_open_files
+                    && self.files.iter().any(|f| !f.opened && !f.completed);
+                open_has_work || can_open_new
+            }
+        }
+    }
+
+    /// Bytes delivered so far / total.
+    pub fn progress(&self) -> (u64, u64) {
+        (self.bytes_done, self.total_bytes)
+    }
+
+    /// Number of files fully completed.
+    pub fn files_completed(&self) -> usize {
+        self.files.iter().filter(|f| f.completed).count()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn records(sizes: &[u64]) -> Vec<RunRecord> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &bytes)| RunRecord {
+                accession: format!("SRR{i:07}"),
+                project: "TEST".into(),
+                bytes,
+                url: format!("sim://file{i}"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunked_tiles_files_exactly() {
+        let recs = records(&[100, 250, 64]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 64,
+                max_open_files: 2,
+            },
+        );
+        let mut per_file: Vec<Vec<(u64, u64)>> = vec![Vec::new(); 3];
+        let mut chunks = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            per_file[c.file].push((c.offset, c.len));
+            chunks.push(c.clone());
+            s.chunk_done(&c);
+        }
+        assert!(s.all_done());
+        for (i, spans) in per_file.iter().enumerate() {
+            let mut sorted = spans.clone();
+            sorted.sort();
+            let mut cursor = 0;
+            for (off, len) in sorted {
+                assert_eq!(off, cursor, "file {i} has a gap/overlap");
+                cursor = off + len;
+            }
+            assert_eq!(cursor, recs[i].bytes, "file {i} not fully tiled");
+        }
+        // First chunk of each file is cold, others warm.
+        for c in &chunks {
+            assert_eq!(c.cold, c.index == 0);
+        }
+    }
+
+    #[test]
+    fn max_open_files_respected() {
+        let recs = records(&[1000, 1000, 1000, 1000]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 100,
+                max_open_files: 2,
+            },
+        );
+        // Pull chunks without completing: only files 0 and 1 may open.
+        let mut pulled = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            pulled.push(c);
+        }
+        assert!(s.open_files() <= 2);
+        let files: std::collections::BTreeSet<usize> = pulled.iter().map(|c| c.file).collect();
+        assert_eq!(files.len(), 2);
+        // Completing file 0 opens file 2.
+        for c in pulled.iter().filter(|c| c.file == 0) {
+            s.chunk_done(c);
+        }
+        let c = s.next_chunk().expect("new file should open");
+        assert_eq!(c.file, 2);
+    }
+
+    #[test]
+    fn whole_file_mode_hands_out_full_files() {
+        let recs = records(&[500, 700]);
+        let mut s = ChunkScheduler::new(&recs, SchedulerMode::WholeFile);
+        let a = s.next_chunk().unwrap();
+        let b = s.next_chunk().unwrap();
+        assert_eq!((a.offset, a.len), (0, 500));
+        assert_eq!((b.offset, b.len), (0, 700));
+        assert!(a.cold && b.cold);
+        assert!(s.next_chunk().is_none());
+        s.chunk_done(&a);
+        s.chunk_done(&b);
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn requeue_serves_failed_chunk_first() {
+        let recs = records(&[300]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 100,
+                max_open_files: 1,
+            },
+        );
+        let c0 = s.next_chunk().unwrap();
+        let c1 = s.next_chunk().unwrap();
+        s.chunk_failed(c0.clone());
+        let again = s.next_chunk().unwrap();
+        assert_eq!(again, c0);
+        s.chunk_done(&again);
+        s.chunk_done(&c1);
+        let c2 = s.next_chunk().unwrap();
+        s.chunk_done(&c2);
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn zero_byte_files_complete_immediately() {
+        let recs = records(&[0, 100]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 64,
+                max_open_files: 4,
+            },
+        );
+        assert_eq!(s.files_completed(), 1);
+        while let Some(c) = s.next_chunk() {
+            s.chunk_done(&c);
+        }
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn progress_accounting() {
+        let recs = records(&[100, 100]);
+        let mut s = ChunkScheduler::new(&recs, SchedulerMode::WholeFile);
+        assert_eq!(s.progress(), (0, 200));
+        let a = s.next_chunk().unwrap();
+        s.chunk_done(&a);
+        assert_eq!(s.progress(), (100, 200));
+    }
+}

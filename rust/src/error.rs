@@ -1,0 +1,83 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`]. Variants
+//! are grouped by subsystem so callers (CLI, experiment harness, tests)
+//! can match on the failure class without string-parsing.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Debug)]
+pub enum Error {
+    /// XLA/PJRT runtime failures (artifact load, compile, execute).
+    Xla(String),
+    /// Artifact directory problems: missing files, manifest mismatch.
+    Artifact(String),
+    /// Configuration parse/validation errors.
+    Config(String),
+    /// Accession / catalog resolution failures.
+    Accession(String),
+    /// Network-simulator invariant violations.
+    Sim(String),
+    /// Real-transport (HTTP/TCP) failures.
+    Transport(String),
+    /// Coordinator/session state machine errors.
+    Session(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Accession(m) => write!(f, "accession error: {m}"),
+            Error::Sim(m) => write!(f, "netsim error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Session(m) => write!(f, "session error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Short machine-readable class tag (used in logs and metrics).
+    pub fn class(&self) -> &'static str {
+        match self {
+            Error::Xla(_) => "xla",
+            Error::Artifact(_) => "artifact",
+            Error::Config(_) => "config",
+            Error::Accession(_) => "accession",
+            Error::Sim(_) => "sim",
+            Error::Transport(_) => "transport",
+            Error::Session(_) => "session",
+            Error::Io(_) => "io",
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure 1: single-threaded downloads underutilize the network.
+//!
+//! The paper measures a single-threaded FTP download against the
+//! available bandwidth reported by iperf3. We reproduce the same
+//! comparison on the simulator: one continuously-busy flow (the
+//! `fastq-dump` shape) against the link's instantaneous available
+//! bandwidth, sampled per second.
+//!
+//! Shape under test: `mean(single-stream goodput) ≪ mean(available)` —
+//! the gap is the per-connection server cap plus long-request decay,
+//! which is exactly what parallel streams recover.
+
+use crate::experiments::scenario;
+use crate::netsim::NetSim;
+use crate::Result;
+
+/// Per-second traces of the comparison.
+#[derive(Clone, Debug)]
+pub struct Fig1Result {
+    /// Seconds axis.
+    pub t_s: Vec<f64>,
+    /// Single-stream goodput (Mbps).
+    pub single_stream_mbps: Vec<f64>,
+    /// Available bandwidth (link − background, Mbps).
+    pub available_mbps: Vec<f64>,
+    pub mean_single: f64,
+    pub mean_available: f64,
+}
+
+impl Fig1Result {
+    /// Utilization fraction of the single stream.
+    pub fn utilization(&self) -> f64 {
+        if self.mean_available <= 0.0 {
+            0.0
+        } else {
+            self.mean_single / self.mean_available
+        }
+    }
+}
+
+/// Run the Figure 1 measurement for `duration_s` simulated seconds.
+pub fn run(duration_s: f64, seed: u64) -> Result<Fig1Result> {
+    // Colab-like WAN: the Figure 1 setting (public archive over WAN).
+    let mut cfg = scenario::colab_dataset("Breast-RNA-seq", seed)?.netsim;
+    // A single endless request: disable staging latency, which is
+    // irrelevant to this figure's point (the per-conn cap).
+    cfg.server.first_byte_latency_s = 0.0;
+    let mut sim = NetSim::new(cfg.clone(), seed)?;
+    let flow = sim.open_flow()?;
+    while !sim.flow_ready(flow) {
+        sim.step(None);
+    }
+    sim.begin_request(flow, 1e15, false, 0)?;
+
+    let mut t_s = Vec::new();
+    let mut single = Vec::new();
+    let mut avail = Vec::new();
+    let mut acc_bytes = 0.0;
+    let mut acc_avail = 0.0;
+    let mut steps = 0usize;
+    let steps_per_s = (1.0 / cfg.dt_s).round() as usize;
+    let start = sim.now();
+    while sim.now() - start < duration_s {
+        let rep = sim.step(None);
+        acc_bytes += rep.total_bytes;
+        acc_avail += (cfg.link_capacity_mbps - rep.background_mbps).max(0.0);
+        steps += 1;
+        if steps == steps_per_s {
+            t_s.push((sim.now() - start).round());
+            single.push(acc_bytes * 8.0 / 1e6);
+            avail.push(acc_avail / steps as f64);
+            acc_bytes = 0.0;
+            acc_avail = 0.0;
+            steps = 0;
+        }
+    }
+    let mean_single = single.iter().sum::<f64>() / single.len().max(1) as f64;
+    let mean_available = avail.iter().sum::<f64>() / avail.len().max(1) as f64;
+    Ok(Fig1Result {
+        t_s,
+        single_stream_mbps: single,
+        available_mbps: avail,
+        mean_single,
+        mean_available,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stream_underutilizes() {
+        let r = run(60.0, 3).unwrap();
+        assert_eq!(r.t_s.len(), 60);
+        assert!(
+            r.utilization() < 0.35,
+            "single stream should use <35% of available, got {:.2}",
+            r.utilization()
+        );
+        assert!(r.mean_single > 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Figure 2: real-world available bandwidth is inherently dynamic.
+//!
+//! The paper shows a two-minute iperf3 trace whose level moves
+//! substantially within seconds — the core motivation for adaptive
+//! (over static) concurrency. We regenerate the trace from the same
+//! Ornstein–Uhlenbeck background process the scenarios use, sampled at
+//! 1 Hz for the same two-minute horizon.
+//!
+//! Shape under test: the trace is *volatile* (coefficient of variation
+//! above a few percent, range a large fraction of the mean) yet
+//! *stationary* (no trend) — the regime where a static setting must be
+//! wrong much of the time.
+
+use crate::experiments::scenario;
+use crate::netsim::NetSim;
+use crate::Result;
+
+/// The regenerated volatility trace.
+#[derive(Clone, Debug)]
+pub struct Fig2Result {
+    pub t_s: Vec<f64>,
+    /// Available bandwidth per second (Mbps).
+    pub available_mbps: Vec<f64>,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Fig2Result {
+    /// Coefficient of variation (std/mean).
+    pub fn cv(&self) -> f64 {
+        if self.mean > 0.0 {
+            self.std / self.mean
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Sample the available-bandwidth process for `duration_s` (paper: 120 s).
+pub fn run(duration_s: f64, seed: u64) -> Result<Fig2Result> {
+    let cfg = scenario::colab_dataset("Breast-RNA-seq", seed)?.netsim;
+    let mut sim = NetSim::new(cfg.clone(), seed)?;
+    let steps_per_s = (1.0 / cfg.dt_s).round() as usize;
+    let mut t_s = Vec::new();
+    let mut series = Vec::new();
+    let mut acc = 0.0;
+    let mut steps = 0usize;
+    while sim.now() < duration_s {
+        let rep = sim.step(None);
+        acc += (cfg.link_capacity_mbps - rep.background_mbps).max(0.0);
+        steps += 1;
+        if steps == steps_per_s {
+            t_s.push(sim.now().round());
+            series.push(acc / steps as f64);
+            acc = 0.0;
+            steps = 0;
+        }
+    }
+    let n = series.len().max(1) as f64;
+    let mean = series.iter().sum::<f64>() / n;
+    let var = series.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Ok(Fig2Result {
+        mean,
+        std: var.sqrt(),
+        min: series.iter().copied().fold(f64::INFINITY, f64::min),
+        max: series.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        t_s,
+        available_mbps: series,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_is_volatile_but_stationary() {
+        let r = run(120.0, 5).unwrap();
+        assert_eq!(r.available_mbps.len(), 120);
+        assert!(r.cv() > 0.03, "trace too flat: cv={}", r.cv());
+        assert!(
+            (r.max - r.min) / r.mean > 0.15,
+            "range too small: {}..{} around {}",
+            r.min,
+            r.max,
+            r.mean
+        );
+        // Stationary: first-half and second-half means within 15%.
+        let half = r.available_mbps.len() / 2;
+        let m1: f64 = r.available_mbps[..half].iter().sum::<f64>() / half as f64;
+        let m2: f64 = r.available_mbps[half..].iter().sum::<f64>() / half as f64;
+        assert!((m1 - m2).abs() / r.mean < 0.15, "trend detected: {m1} vs {m2}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Figure 5: per-second throughput timelines with 68 % confidence
+//! bands — FastBioDL vs prefetch vs pysradb on Breast-RNA-seq.
+//!
+//! Paper observations in those trials: FastBioDL peaks ≈1800 Mbps vs
+//! ≈1400 for the baselines, and completes at ≈160 s — 38 % / 43 %
+//! faster than pysradb / prefetch.
+//!
+//! Shapes under test: FastBioDL's peak exceeds both baselines'; its
+//! completion time beats both by ≥20 %; the bands are meaningful
+//! (positive width where runs overlap).
+
+use crate::baselines::BaselineTool;
+use crate::experiments::runner::{run_tool, Tool, ToolSummary};
+use crate::experiments::scenario;
+use crate::metrics::timeline::{ci68_band, Timeline};
+use crate::runtime::SharedRuntime;
+use crate::Result;
+
+/// A tool's aggregated timeline band.
+#[derive(Clone, Debug)]
+pub struct ToolBand {
+    pub tool: String,
+    pub mean: Vec<f64>,
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+    pub summary: ToolSummary,
+}
+
+impl ToolBand {
+    fn from_summary(summary: ToolSummary) -> ToolBand {
+        let runs: Vec<Timeline> = summary.reports.iter().map(|r| r.timeline.clone()).collect();
+        let (mean, lo, hi) = ci68_band(&runs);
+        ToolBand {
+            tool: summary.tool.clone(),
+            mean,
+            lo,
+            hi,
+            summary,
+        }
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.mean.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn completion_s(&self) -> f64 {
+        self.summary.duration_s.mean
+    }
+}
+
+/// The three bands.
+#[derive(Clone, Debug)]
+pub struct Fig5Result {
+    pub fastbiodl: ToolBand,
+    pub prefetch: ToolBand,
+    pub pysradb: ToolBand,
+}
+
+/// Run the timeline comparison on Breast-RNA-seq.
+pub fn run(runtime: &SharedRuntime, runs: usize, seed_base: u64) -> Result<Fig5Result> {
+    let scenario = scenario::colab_dataset("Breast-RNA-seq", seed_base)?;
+    let fastbiodl = run_tool(&scenario, &Tool::fastbiodl(&scenario), runtime, runs, seed_base)?;
+    let prefetch = run_tool(
+        &scenario,
+        &Tool::Baseline(BaselineTool::prefetch()),
+        runtime,
+        runs,
+        seed_base,
+    )?;
+    let pysradb = run_tool(
+        &scenario,
+        &Tool::Baseline(BaselineTool::pysradb()),
+        runtime,
+        runs,
+        seed_base,
+    )?;
+    Ok(Fig5Result {
+        fastbiodl: ToolBand::from_summary(fastbiodl),
+        prefetch: ToolBand::from_summary(prefetch),
+        pysradb: ToolBand::from_summary(pysradb),
+    })
+}
+
+/// The paper's qualitative claims.
+pub fn check_shape(r: &Fig5Result) -> std::result::Result<(), String> {
+    if !(r.fastbiodl.peak() > r.prefetch.peak() && r.fastbiodl.peak() > r.pysradb.peak()) {
+        return Err(format!(
+            "FastBioDL peak {:.0} should exceed prefetch {:.0} and pysradb {:.0}",
+            r.fastbiodl.peak(),
+            r.prefetch.peak(),
+            r.pysradb.peak()
+        ));
+    }
+    let f = r.fastbiodl.completion_s();
+    let faster_than_prefetch = 1.0 - f / r.prefetch.completion_s();
+    let faster_than_pysradb = 1.0 - f / r.pysradb.completion_s();
+    if faster_than_prefetch < 0.20 {
+        return Err(format!(
+            "completion vs prefetch only {:.0}% faster (paper 43%)",
+            faster_than_prefetch * 100.0
+        ));
+    }
+    if faster_than_pysradb < 0.15 {
+        return Err(format!(
+            "completion vs pysradb only {:.0}% faster (paper 38%)",
+            faster_than_pysradb * 100.0
+        ));
+    }
+    // Bands have width where runs vary.
+    let width: f64 = r
+        .fastbiodl
+        .hi
+        .iter()
+        .zip(&r.fastbiodl.lo)
+        .map(|(h, l)| h - l)
+        .sum();
+    if width <= 0.0 {
+        return Err("confidence band has zero width".into());
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Figure 6: adaptive vs fixed concurrency on high-speed networks.
+//!
+//! The paper's three FABRIC scenarios (throttled so the theoretical
+//! optimum is known exactly):
+//!
+//! * (a) 10 Gbps link, 500 Mbps/thread → C* = 20; adaptive finishes
+//!   44 % faster than fixed-5 and 67 % faster than fixed-3, reaching
+//!   ≈7.5 Gbps.
+//! * (b) 10 Gbps, 1400 Mbps/thread → C* ≈ 7.1; adaptive ≈9.3 Gbps vs
+//!   ≈7.3 for fixed-5 (which trails by only seconds but leaves
+//!   bandwidth idle).
+//! * (c) 20 Gbps, 1400 Mbps/thread → C* ≈ 14.3; adaptive averages ≈14
+//!   threads and wins 1.3× / 2.1× over fixed-5 / fixed-3.
+//!
+//! Shapes under test are in [`check_shape`].
+
+use crate::baselines::BaselineTool;
+use crate::experiments::runner::{run_tool, Tool, ToolSummary};
+use crate::experiments::scenario::{self, Scenario};
+use crate::runtime::SharedRuntime;
+use crate::Result;
+
+/// One scenario's three arms.
+#[derive(Clone, Debug)]
+pub struct ScenarioComparison {
+    pub scenario: &'static str,
+    pub c_star: f64,
+    pub adaptive: ToolSummary,
+    pub fixed5: ToolSummary,
+    pub fixed3: ToolSummary,
+}
+
+impl ScenarioComparison {
+    pub fn speedup_vs_fixed5(&self) -> f64 {
+        self.fixed5.duration_s.mean / self.adaptive.duration_s.mean.max(1e-9)
+    }
+
+    pub fn speedup_vs_fixed3(&self) -> f64 {
+        self.fixed3.duration_s.mean / self.adaptive.duration_s.mean.max(1e-9)
+    }
+}
+
+fn run_scenario(
+    s: &Scenario,
+    runtime: &SharedRuntime,
+    runs: usize,
+    seed_base: u64,
+) -> Result<ScenarioComparison> {
+    let adaptive = run_tool(s, &Tool::fastbiodl(s), runtime, runs, seed_base)?;
+    let fixed5 = run_tool(
+        s,
+        &Tool::Baseline(BaselineTool::fixed_fastbiodl(5, &s.download)),
+        runtime,
+        runs,
+        seed_base,
+    )?;
+    let fixed3 = run_tool(
+        s,
+        &Tool::Baseline(BaselineTool::fixed_fastbiodl(3, &s.download)),
+        runtime,
+        runs,
+        seed_base,
+    )?;
+    Ok(ScenarioComparison {
+        scenario: s.name,
+        c_star: s.c_star_theoretical.unwrap_or(f64::NAN),
+        adaptive,
+        fixed5,
+        fixed3,
+    })
+}
+
+/// Run all three scenarios.
+pub fn run(
+    runtime: &SharedRuntime,
+    runs: usize,
+    seed_base: u64,
+) -> Result<Vec<ScenarioComparison>> {
+    ['a', 'b', 'c']
+        .iter()
+        .map(|&which| {
+            let s = scenario::fabric(which, seed_base)?;
+            run_scenario(&s, runtime, runs, seed_base)
+        })
+        .collect()
+}
+
+/// The paper's qualitative claims.
+pub fn check_shape(rows: &[ScenarioComparison]) -> std::result::Result<(), String> {
+    if rows.len() != 3 {
+        return Err(format!("expected 3 scenarios, got {}", rows.len()));
+    }
+    for r in rows {
+        // Adaptive beats both fixed arms everywhere.
+        if r.speedup_vs_fixed5() < 1.02 {
+            return Err(format!(
+                "{}: adaptive should beat fixed-5 (got {:.2}x)",
+                r.scenario,
+                r.speedup_vs_fixed5()
+            ));
+        }
+        if r.speedup_vs_fixed3() <= r.speedup_vs_fixed5() {
+            return Err(format!(
+                "{}: fixed-3 should lose by more than fixed-5",
+                r.scenario
+            ));
+        }
+    }
+    let (a, b, c) = (&rows[0], &rows[1], &rows[2]);
+    // (a) has the largest headroom (C*=20): the biggest fixed-3 gap.
+    if a.speedup_vs_fixed3() < 1.4 {
+        return Err(format!(
+            "fabric-a: expected ≥1.4x over fixed-3, got {:.2}",
+            a.speedup_vs_fixed3()
+        ));
+    }
+    // (b): fixed-5 is nearly competitive (C*≈7): gap well under (a)'s.
+    if b.speedup_vs_fixed5() >= a.speedup_vs_fixed5() {
+        return Err(format!(
+            "fabric-b fixed-5 gap ({:.2}) should be smaller than fabric-a's ({:.2})",
+            b.speedup_vs_fixed5(),
+            a.speedup_vs_fixed5()
+        ));
+    }
+    // (c): adaptive converges near C* ≈ 14.3 and clearly beats fixed-3.
+    let late_c: f64 = c
+        .adaptive
+        .reports
+        .iter()
+        .filter_map(|r| r.concurrency_trace.last().map(|&(_, c)| c as f64))
+        .sum::<f64>()
+        / c.adaptive.reports.len().max(1) as f64;
+    if !(10.0..=20.0).contains(&late_c) {
+        return Err(format!(
+            "fabric-c: late concurrency {late_c:.1} far from C*≈14.3"
+        ));
+    }
+    if c.speedup_vs_fixed3() < 1.5 {
+        return Err(format!(
+            "fabric-c: expected ≥1.5x over fixed-3 (paper 2.1x), got {:.2}",
+            c.speedup_vs_fixed3()
+        ));
+    }
+    Ok(())
+}

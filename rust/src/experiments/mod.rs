@@ -1,0 +1,30 @@
+//! Experiment harness: one module per paper table/figure.
+//!
+//! Every module regenerates its artifact from scratch — workload
+//! construction, the 5-run round-robin, metric extraction, and the
+//! printed rows/series matching the paper's layout — and returns a
+//! structured result the benches print and the integration tests
+//! assert *shape* properties on (who wins, by roughly what factor).
+//!
+//! | Module   | Reproduces | Paper claim (shape)                                  |
+//! |----------|------------|------------------------------------------------------|
+//! | [`fig1`] | Figure 1   | single stream ≪ available bandwidth                  |
+//! | [`fig2`] | Figure 2   | available bandwidth fluctuates on probe timescales   |
+//! | [`table1`] | Table 1  | k=1.02 fastest; 1.01 over-aggressive; 1.05 conservative |
+//! | [`fig4`] | Figure 4   | GD beats Bayesian by ≈20 % copy time                 |
+//! | [`table3`] | Table 3  | FastBioDL beats prefetch/pysradb on all 3 datasets   |
+//! | [`fig5`] | Figure 5   | higher peak, ≈38–43 % faster completion              |
+//! | [`fig6`] | Figure 6   | adaptive ≈ C*, 1.3–2.1× over fixed 3/5               |
+//!
+//! [`scenario`] holds the calibrated simulation profiles (DESIGN.md §6)
+//! and [`runner`] the shared multi-run orchestration.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod runner;
+pub mod scenario;
+pub mod table1;
+pub mod table3;

@@ -1,0 +1,118 @@
+//! Shared experiment orchestration: build tool → run N seeds → summarize.
+//!
+//! The paper runs every comparison "five times using a round-robin
+//! approach" (§5.1); [`run_tool`] reproduces that: seeds
+//! `base..base+runs`, one full session each, summaries across runs.
+
+use crate::baselines::BaselineTool;
+use crate::config::DownloadConfig;
+use crate::experiments::scenario::Scenario;
+use crate::metrics::summary::{mean_std, MeanStd};
+use crate::optimizer::build_controller;
+use crate::runtime::SharedRuntime;
+use crate::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use crate::session::SessionReport;
+use crate::Result;
+
+/// Which tool to run in a scenario.
+#[derive(Clone, Debug)]
+pub enum Tool {
+    /// FastBioDL with the adaptive controller from the scenario config
+    /// (optionally overriding the optimizer kind / k).
+    FastBioDl { download: DownloadConfig },
+    /// A baseline model.
+    Baseline(BaselineTool),
+}
+
+impl Tool {
+    /// FastBioDL with the scenario's own download config.
+    pub fn fastbiodl(s: &Scenario) -> Tool {
+        Tool::FastBioDl {
+            download: s.download.clone(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Tool::FastBioDl { .. } => "fastbiodl".into(),
+            Tool::Baseline(b) => b.behavior.name.clone(),
+        }
+    }
+}
+
+/// Cross-run summary for one tool in one scenario.
+#[derive(Clone, Debug)]
+pub struct ToolSummary {
+    pub tool: String,
+    pub speed_mbps: MeanStd,
+    pub concurrency: MeanStd,
+    pub duration_s: MeanStd,
+    pub reports: Vec<SessionReport>,
+}
+
+/// Run one tool `runs` times (seeds `seed_base..seed_base+runs`).
+pub fn run_tool(
+    scenario: &Scenario,
+    tool: &Tool,
+    runtime: &SharedRuntime,
+    runs: usize,
+    seed_base: u64,
+) -> Result<ToolSummary> {
+    let mut reports = Vec::with_capacity(runs);
+    for run in 0..runs {
+        let seed = seed_base + run as u64;
+        let report = run_tool_once(scenario, tool, runtime, seed)?;
+        reports.push(report);
+    }
+    Ok(summarize(tool.name(), reports))
+}
+
+/// One seed, one full session.
+pub fn run_tool_once(
+    scenario: &Scenario,
+    tool: &Tool,
+    runtime: &SharedRuntime,
+    seed: u64,
+) -> Result<SessionReport> {
+    let (download, behavior, controller) = match tool {
+        Tool::FastBioDl { download } => {
+            let controller =
+                build_controller(&download.optimizer, Some(runtime.clone()))?;
+            (
+                download.clone(),
+                ToolBehavior::fastbiodl(download),
+                controller,
+            )
+        }
+        Tool::Baseline(b) => {
+            let mut download = scenario.download.clone();
+            download.optimizer = b.optimizer.clone();
+            let controller = build_controller(&download.optimizer, Some(runtime.clone()))?;
+            (download, b.behavior.clone(), controller)
+        }
+    };
+    let params = SimSessionParams {
+        download,
+        behavior,
+        netsim: scenario.netsim.clone(),
+        records: scenario.records.clone(),
+        controller,
+        runtime: Some(runtime),
+        seed,
+    };
+    SimSession::new(params).run()
+}
+
+/// Summarize a report list into the paper's mean ± std columns.
+pub fn summarize(tool: String, reports: Vec<SessionReport>) -> ToolSummary {
+    let speeds: Vec<f64> = reports.iter().map(|r| r.mean_throughput_mbps).collect();
+    let concs: Vec<f64> = reports.iter().map(|r| r.mean_concurrency).collect();
+    let durs: Vec<f64> = reports.iter().map(|r| r.duration_s).collect();
+    ToolSummary {
+        tool,
+        speed_mbps: mean_std(&speeds),
+        concurrency: mean_std(&concs),
+        duration_s: mean_std(&durs),
+        reports,
+    }
+}

@@ -1,0 +1,221 @@
+//! Calibrated simulation profiles (DESIGN.md §6).
+//!
+//! Two testbeds appear in the paper:
+//!
+//! * **colab** (§5.1) — Google Colab (12 GB RAM) pulling from NCBI/ENA
+//!   production endpoints. Bottleneck ≈2 Gbps with heavy OU cross
+//!   traffic, per-connection ceiling ≈350 Mbps, cold-object staging on
+//!   first byte, long-request decay, and *dataset-dependent client
+//!   pressure*: the HiFi-WGS 9.5 GB files blow through the VM's page
+//!   cache (aggregate write ceiling + strong interleaved-write
+//!   penalty), the 2.2 GB Breast files mostly fit (mild penalty), the
+//!   40 MB Amplicon files are free. These are the phenomena behind the
+//!   Table 3 orderings; parameters were calibrated against the
+//!   published numbers (see EXPERIMENTS.md §Calibration).
+//! * **fabric-a/b/c** (§5.2) — the FABRIC testbed with explicit
+//!   throttles; client effects removed by construction (NVMe,
+//!   ConnectX-6). `C* = link ÷ per-thread cap` = 20 / ≈7.1 / ≈14.3.
+
+use crate::accession::catalog::{Catalog, RunRecord};
+use crate::accession::datasets::DatasetPreset;
+use crate::config::DownloadConfig;
+use crate::netsim::engine::BackgroundConfig;
+use crate::netsim::{ClientProfile, NetSimConfig, ServerProfile};
+use crate::{Error, Result};
+
+/// A named, fully specified simulation scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub netsim: NetSimConfig,
+    /// Download config tuned for the scenario (probe interval etc.).
+    pub download: DownloadConfig,
+    /// The workload (resolved records).
+    pub records: Vec<RunRecord>,
+    /// Theoretical optimal concurrency where defined (Figure 6).
+    pub c_star_theoretical: Option<f64>,
+}
+
+/// §5.1 Colab-like network shared by the three Table 2 datasets.
+fn colab_netsim() -> NetSimConfig {
+    NetSimConfig {
+        link_capacity_mbps: 2_000.0,
+        background: BackgroundConfig {
+            mean_mbps: 400.0,
+            theta: 0.25,
+            sigma: 130.0,
+            max_mbps: 1_500.0,
+        },
+        server: ServerProfile {
+            setup_latency_s: 0.25,
+            first_byte_latency_s: 4.0,
+            per_conn_cap_mbps: 350.0,
+            long_request_decay_per_min: 0.25,
+            decay_floor: 0.45,
+            max_connections: 64,
+        },
+        client: ClientProfile {
+            stream_overhead_n0: 4.0,
+            stream_overhead_alpha: 0.06,
+            write_cap_mbps: 1_300.0,
+            file_overhead_n0: 3.0,
+            file_overhead_beta: 0.01,
+            efficiency_floor: 0.15,
+        },
+        flow_jitter_frac: 0.05,
+        flow_failure_rate_per_min: 0.0,
+        dt_s: 0.05,
+    }
+}
+
+/// Colab scenario for one Table 2 dataset (per-dataset client pressure).
+pub fn colab_dataset(alias: &str, seed: u64) -> Result<Scenario> {
+    let preset = DatasetPreset::find(alias)
+        .ok_or_else(|| Error::Config(format!("unknown dataset '{alias}'")))?;
+    let mut netsim = colab_netsim();
+    match preset.alias {
+        // 9.5 GB files vs 12 GB RAM: page-cache thrash. Long-read
+        // archives also stream cold objects at a lower per-connection
+        // rate (≈150 Mbps observed), which sets C*≈4.7 with the
+        // write ceiling — the paper's FastBioDL equilibrium of 4.92.
+        "HiFi-WGS" => {
+            netsim.server.per_conn_cap_mbps = 150.0;
+            netsim.client.write_cap_mbps = 700.0;
+            netsim.client.file_overhead_beta = 0.115;
+        }
+        // 2.2 GB files mostly fit the page cache: mild interleaving
+        // cost only; sink ceiling from the shared default.
+        "Breast-RNA-seq" => {
+            netsim.client.write_cap_mbps = 1_300.0;
+            netsim.client.file_overhead_beta = 0.01;
+        }
+        // 40 MB files: client-side effects negligible; the workload is
+        // dominated by resolution + cold staging (deep-archive objects:
+        // ≈8 s to first byte).
+        "Amplicon-Digester" => {
+            netsim.server.first_byte_latency_s = 8.0;
+            netsim.client.write_cap_mbps = 0.0;
+            netsim.client.file_overhead_beta = 0.0;
+        }
+        _ => unreachable!("presets are exhaustive"),
+    }
+    let mut catalog = Catalog::empty();
+    catalog.register_preset(preset, seed);
+    let records = catalog.project_runs(preset.project)?.to_vec();
+    let download = DownloadConfig {
+        optimizer: crate::config::OptimizerConfig {
+            probe_interval_s: 5.0, // §5.1: "probing duration of 5 seconds"
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    Ok(Scenario {
+        name: preset.alias,
+        netsim,
+        download,
+        records,
+        c_star_theoretical: None,
+    })
+}
+
+/// §5.2 FABRIC-style throttled high-speed profiles.
+///
+/// * `a`: 10 Gbps link, 500 Mbps per thread  → C* = 20
+/// * `b`: 10 Gbps link, 1400 Mbps per thread → C* ≈ 7.1
+/// * `c`: 20 Gbps link, 1400 Mbps per thread → C* ≈ 14.3
+pub fn fabric(which: char, seed: u64) -> Result<Scenario> {
+    let (name, link, cap, files, bytes_each): (&'static str, f64, f64, usize, u64) = match which
+    {
+        'a' => ("fabric-a", 10_000.0, 500.0, 4, 100_000_000_000),
+        'b' => ("fabric-b", 10_000.0, 1_400.0, 4, 100_000_000_000),
+        'c' => ("fabric-c", 20_000.0, 1_400.0, 2, 512_000_000_000),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown fabric scenario '{other}' (a|b|c)"
+            )))
+        }
+    };
+    let netsim = NetSimConfig {
+        link_capacity_mbps: link,
+        background: BackgroundConfig {
+            // Testbed link: tiny residual fluctuation only.
+            mean_mbps: link * 0.02,
+            theta: 0.4,
+            sigma: link * 0.01,
+            max_mbps: link * 0.08,
+        },
+        server: ServerProfile {
+            setup_latency_s: 0.12,
+            first_byte_latency_s: 0.05,
+            per_conn_cap_mbps: cap,
+            long_request_decay_per_min: 0.0,
+            decay_floor: 1.0,
+            max_connections: 64,
+        },
+        client: ClientProfile::ideal(),
+        flow_jitter_frac: 0.03,
+        flow_failure_rate_per_min: 0.0,
+        dt_s: 0.05,
+    };
+    let mut catalog = Catalog::empty();
+    catalog.register_synthetic(name, files, bytes_each);
+    let records = catalog.project_runs(name)?.to_vec();
+    let _ = seed;
+    let download = DownloadConfig {
+        optimizer: crate::config::OptimizerConfig {
+            probe_interval_s: 5.0,
+            // High-speed scenarios need headroom above C*=20.
+            c_max: 40,
+            ..Default::default()
+        },
+        // Bigger chunks keep request overhead negligible at 20 Gbps.
+        chunk_bytes: 256 * 1024 * 1024,
+        ..Default::default()
+    };
+    Ok(Scenario {
+        name,
+        netsim,
+        download,
+        records,
+        c_star_theoretical: Some(link / cap),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colab_scenarios_build_and_validate() {
+        for alias in ["Breast-RNA-seq", "HiFi-WGS", "Amplicon-Digester"] {
+            let s = colab_dataset(alias, 1).unwrap();
+            s.netsim.validate().unwrap();
+            s.download.validate().unwrap();
+            assert!(!s.records.is_empty());
+        }
+        assert!(colab_dataset("nope", 1).is_err());
+    }
+
+    #[test]
+    fn fabric_c_star_values() {
+        assert_eq!(fabric('a', 1).unwrap().c_star_theoretical, Some(20.0));
+        let b = fabric('b', 1).unwrap().c_star_theoretical.unwrap();
+        assert!((b - 7.14).abs() < 0.01);
+        let c = fabric('c', 1).unwrap().c_star_theoretical.unwrap();
+        assert!((c - 14.29).abs() < 0.01);
+        assert!(fabric('x', 1).is_err());
+    }
+
+    #[test]
+    fn hifi_has_stronger_client_pressure_than_breast() {
+        let hifi = colab_dataset("HiFi-WGS", 1).unwrap();
+        let breast = colab_dataset("Breast-RNA-seq", 1).unwrap();
+        assert!(hifi.netsim.client.write_cap_mbps < breast.netsim.client.write_cap_mbps);
+        assert!(
+            hifi.netsim.client.file_overhead_beta > breast.netsim.client.file_overhead_beta
+        );
+        assert!(
+            hifi.netsim.server.per_conn_cap_mbps < breast.netsim.server.per_conn_cap_mbps
+        );
+    }
+}

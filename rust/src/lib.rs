@@ -1,0 +1,43 @@
+//! # FastBioDL — adaptive parallel downloader for large genomic datasets
+//!
+//! Reproduction of *"Adaptive Parallel Downloader for Large Genomic
+//! Datasets"* (CS.DC 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: accession resolution, chunk
+//!   scheduling, a dynamically sized worker pool driven by status arrays
+//!   (paper Algorithm 1), a throughput monitor, and the probing loop that
+//!   invokes the adaptive concurrency controller every few seconds.
+//! * **L2/L1 (build-time Python, `python/compile/`)** — the controller
+//!   compute graphs (gradient-descent step, Bayesian GP step, throughput
+//!   window aggregation, utility surfaces) with Pallas kernels at the hot
+//!   spots, AOT-lowered once to HLO text under `artifacts/`.
+//! * **Runtime bridge** — [`runtime`] loads those artifacts through the
+//!   PJRT CPU client (`xla` crate) at startup and executes them from the
+//!   optimizer loop. Python never runs on the request path.
+//!
+//! The crate also contains every substrate the paper's evaluation needs
+//! but this environment does not have: a virtual-time network simulator
+//! ([`netsim`]) standing in for the Colab↔NCBI WAN and the FABRIC
+//! testbed, a real HTTP/1.1 transport + throttled localhost server
+//! ([`transport`]) proving the stack composes over actual sockets,
+//! behavioural models of the baseline tools ([`baselines`]), and the
+//! experiment harness regenerating every table and figure
+//! ([`experiments`]). See `DESIGN.md` for the substitution map.
+
+pub mod accession;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod netsim;
+pub mod optimizer;
+pub mod report;
+pub mod runtime;
+pub mod session;
+pub mod transport;
+pub mod util;
+
+mod error;
+
+pub use error::{Error, Result};

@@ -1,0 +1,466 @@
+//! `fastbiodl` — the leader binary.
+//!
+//! Subcommands:
+//!
+//! * `download <accession...>` — simulated adaptive download of one or
+//!   more accessions/BioProjects on a named scenario profile.
+//! * `fetch <url...>` — real-socket adaptive download of HTTP URLs
+//!   (pair with `serve`).
+//! * `serve` — run the throttled local HTTP server with synthetic
+//!   files (the loopback "archive mirror").
+//! * `datasets` — print the Table 2 dataset inventory.
+//! * `experiment <id|all>` — regenerate a paper table/figure
+//!   (`table1`, `table3`, `fig1`, `fig2`, `fig4`, `fig5`, `fig6`).
+//! * `utility-surface` — dump the §4.1 utility surface for a given k
+//!   through the XLA artifact.
+//! * `info` — runtime/platform/artifact diagnostics.
+//!
+//! Run `fastbiodl help` for flags.
+
+use std::sync::Arc;
+
+use fastbiodl::accession::{Accession, Catalog, Resolver};
+use fastbiodl::config::cli::Args;
+use fastbiodl::config::{DownloadConfig, OptimizerKind};
+use fastbiodl::experiments::runner::{run_tool_once, Tool};
+use fastbiodl::experiments::{fig1, fig2, fig4, fig5, fig6, scenario, table1, table3};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::report::{sparkline, Table};
+use fastbiodl::runtime::{SharedRuntime, XlaRuntime};
+use fastbiodl::session::real::{run_real_session, RealSessionParams, Sink};
+use fastbiodl::transport::{ServedFile, ThrottleConfig, ThrottledHttpServer};
+use fastbiodl::{Error, Result};
+
+const HELP: &str = r#"fastbiodl — adaptive parallel downloader for large genomic datasets
+
+USAGE:
+    fastbiodl <command> [args] [--flags]
+
+COMMANDS:
+    download <accession...>   simulated adaptive download (Table 2 catalog)
+        --scenario <alias>    colab dataset alias or fabric-a|b|c (default: auto)
+        --optimizer <gd|bayes|fixed>   controller (default gd)
+        --k <float>           utility penalty coefficient (default 1.02)
+        --probe <secs>        probing interval (default 5)
+        --fixed-level <n>     level for --optimizer fixed
+        --seed <n>            simulation seed (default 1)
+    fetch <url...>            real-socket adaptive download over HTTP
+        --out <dir>           write payloads here (default: discard)
+        --chunk-mb <n>        range-request size (default 32)
+        --probe <secs>        probing interval (default 5)
+        --c-max <n>           worker-pool capacity (default 16)
+        --size <bytes>        total size per URL if the server lacks HEAD
+    serve                     run the throttled loopback archive server
+        --files <n>           number of synthetic files (default 4)
+        --size-mb <n>         size of each file (default 64)
+        --conn-mbps <n>       per-connection cap (default 0 = off)
+        --global-mbps <n>     global cap (default 0 = off)
+        --ttfb <secs>         first-byte latency (default 0)
+    datasets                  print the Table 2 inventory
+    experiment <id|all>       regenerate paper artifacts
+        --runs <n>            runs per configuration (default 5)
+        --seed <n>            base seed (default 1000)
+    utility-surface           print U(T,C)=T/k^C via the XLA artifact
+        --k <float>           coefficient (default 1.02)
+    info                      runtime/platform/artifact diagnostics
+    help                      this text
+
+ENVIRONMENT:
+    FASTBIODL_ARTIFACTS       artifact directory (default ./artifacts)
+    FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER
+                              config overrides (see config module docs)
+"#;
+
+fn main() {
+    match run() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "datasets" => cmd_datasets(),
+        "info" => cmd_info(),
+        "download" => cmd_download(&args),
+        "fetch" => cmd_fetch(&args),
+        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(&args),
+        "utility-surface" => cmd_utility_surface(&args),
+        other => Err(Error::Config(format!(
+            "unknown command '{other}' (try `fastbiodl help`)"
+        ))),
+    }
+}
+
+fn load_runtime() -> Result<SharedRuntime> {
+    Ok(Arc::new(XlaRuntime::load_default()?))
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("Table 2 — evaluation datasets:");
+    for p in &fastbiodl::accession::TABLE2_PRESETS {
+        println!("  {}", p.describe());
+        println!("    organism: {}", p.organism);
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = XlaRuntime::default_dir();
+    println!("artifact dir : {}", dir.display());
+    let rt = load_runtime()?;
+    println!("platform     : {}", rt.platform());
+    println!("constants    : {:?}", rt.constants());
+    for name in fastbiodl::runtime::REQUIRED_ARTIFACTS {
+        println!("artifact     : {name} (compiled)");
+    }
+    Ok(())
+}
+
+fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
+    if let Some(k) = args.flag_f64("k")? {
+        cfg.optimizer.k = k;
+    }
+    if let Some(p) = args.flag_f64("probe")? {
+        cfg.optimizer.probe_interval_s = p;
+    }
+    if let Some(kind) = args.flag("optimizer") {
+        cfg.optimizer.kind = OptimizerKind::parse(kind)?;
+    }
+    if let Some(level) = args.flag_usize("fixed-level")? {
+        cfg.optimizer.fixed_level = level;
+        cfg.optimizer.c_init = level;
+    }
+    if let Some(c) = args.flag_usize("c-max")? {
+        cfg.optimizer.c_max = c;
+    }
+    if let Some(mb) = args.flag_usize("chunk-mb")? {
+        cfg.chunk_bytes = (mb as u64) * 1024 * 1024;
+    }
+    cfg.apply_env()?;
+    Ok(())
+}
+
+fn cmd_download(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
+    ])?;
+    if args.positional.is_empty() {
+        return Err(Error::Config(
+            "download needs at least one accession (e.g. PRJNA762469)".into(),
+        ));
+    }
+    let seed = args.flag_u64("seed")?.unwrap_or(1);
+    let accessions: Vec<Accession> = args
+        .positional
+        .iter()
+        .map(|s| Accession::parse(s))
+        .collect::<Result<_>>()?;
+
+    // Scenario: explicit flag, else inferred from the first project.
+    let mut sc = match args.flag("scenario") {
+        Some(name) if name.starts_with("fabric-") => {
+            scenario::fabric(name.chars().last().unwrap(), seed)?
+        }
+        Some(name) => scenario::colab_dataset(name, seed)?,
+        None => scenario::colab_dataset(
+            accessions
+                .iter()
+                .find(|a| a.is_project())
+                .map(|a| a.as_str())
+                .unwrap_or("Breast-RNA-seq"),
+            seed,
+        )?,
+    };
+    apply_optimizer_flags(&mut sc.download, args)?;
+
+    // Resolve against the catalog (simulated ENA portal).
+    let catalog = Catalog::with_table2(seed);
+    let resolver = Resolver::batch(&catalog);
+    let (records, _) = resolver.resolve(&accessions)?;
+    sc.records = records;
+
+    let rt = load_runtime()?;
+    println!(
+        "downloading {} files ({}) on scenario '{}' with {} optimizer",
+        sc.records.len(),
+        fastbiodl::util::fmt_bytes(Catalog::total_bytes(&sc.records)),
+        sc.name,
+        sc.download.optimizer.kind.name(),
+    );
+    let report = run_tool_once(&sc, &Tool::fastbiodl(&sc), &rt, seed)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_fetch(args: &Args) -> Result<()> {
+    args.expect_flags(&["out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k"])?;
+    if args.positional.is_empty() {
+        return Err(Error::Config("fetch needs at least one http:// URL".into()));
+    }
+    let mut cfg = DownloadConfig::default();
+    cfg.optimizer.c_max = 16;
+    apply_optimizer_flags(&mut cfg, args)?;
+
+    // Resolve sizes: --size override or a HEAD request.
+    let mut records = Vec::new();
+    for (i, url) in args.positional.iter().enumerate() {
+        let bytes = match args.flag_u64("size")? {
+            Some(b) => b,
+            None => head_content_length(url)?,
+        };
+        records.push(fastbiodl::accession::RunRecord {
+            accession: format!("URL{i:03}"),
+            project: "fetch".into(),
+            bytes,
+            url: url.clone(),
+        });
+    }
+    let rt = load_runtime()?;
+    let controller = build_controller(&cfg.optimizer, Some(rt.clone()))?;
+    let sink = match args.flag("out") {
+        Some(dir) => Sink::Directory(dir.to_string()),
+        None => Sink::Discard,
+    };
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: Some(&rt),
+        sink,
+        name: "fastbiodl".into(),
+    })?;
+    print_report(&report);
+    Ok(())
+}
+
+/// Minimal HEAD request to discover Content-Length.
+fn head_content_length(url: &str) -> Result<u64> {
+    use std::io::{BufRead, BufReader, Write};
+    let (host, port, path) = fastbiodl::transport::HttpConnection::split_url(url)?;
+    let mut stream = std::net::TcpStream::connect((host.as_str(), port))
+        .map_err(|e| Error::Transport(format!("connect {host}:{port}: {e}")))?;
+    write!(
+        stream,
+        "HEAD {path} HTTP/1.1\r\nHost: {host}:{port}\r\nConnection: close\r\n\r\n"
+    )
+    .map_err(|e| Error::Transport(e.to_string()))?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.map_err(|e| Error::Transport(e.to_string()))?;
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            return v
+                .trim()
+                .parse()
+                .map_err(|_| Error::Transport("bad Content-Length".into()));
+        }
+        if line.is_empty() {
+            break;
+        }
+    }
+    Err(Error::Transport(format!(
+        "{url}: no Content-Length in HEAD response (pass --size)"
+    )))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_flags(&["files", "size-mb", "conn-mbps", "global-mbps", "ttfb"])?;
+    let files = args.flag_usize("files")?.unwrap_or(4);
+    let size_mb = args.flag_usize("size-mb")?.unwrap_or(64);
+    let throttle = ThrottleConfig {
+        per_conn_bytes_per_s: args.flag_f64("conn-mbps")?.unwrap_or(0.0) * 1e6 / 8.0,
+        global_bytes_per_s: args.flag_f64("global-mbps")?.unwrap_or(0.0) * 1e6 / 8.0,
+        first_byte_latency_s: args.flag_f64("ttfb")?.unwrap_or(0.0),
+        max_connections: 64,
+    };
+    let served: Vec<ServedFile> = (0..files)
+        .map(|i| ServedFile {
+            path: format!("/vol1/FILE{i:03}"),
+            bytes: (size_mb as u64) * 1024 * 1024,
+            seed: 7000 + i as u64,
+        })
+        .collect();
+    let server = ThrottledHttpServer::start(served.clone(), throttle)?;
+    println!(
+        "serving {} files of {} MiB at {}",
+        files,
+        size_mb,
+        server.base_url()
+    );
+    for f in &served {
+        println!("  {}{}", server.base_url(), f.path);
+    }
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.expect_flags(&["runs", "seed"])?;
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let runs = args.flag_usize("runs")?.unwrap_or(5);
+    let seed = args.flag_u64("seed")?.unwrap_or(1000);
+    let rt = load_runtime()?;
+
+    let run_one = |id: &str| -> Result<()> {
+        println!("\n=== {id} ===");
+        match id {
+            "fig1" => {
+                let r = fig1::run(120.0, seed)?;
+                println!("available  {}", sparkline(&r.available_mbps, 64));
+                println!("single     {}", sparkline(&r.single_stream_mbps, 64));
+                println!(
+                    "single stream {:.0} / available {:.0} Mbps ({:.0}% used)",
+                    r.mean_single,
+                    r.mean_available,
+                    r.utilization() * 100.0
+                );
+            }
+            "fig2" => {
+                let r = fig2::run(120.0, seed)?;
+                println!("available  {}", sparkline(&r.available_mbps, 64));
+                println!(
+                    "mean {:.0} ± {:.0} Mbps, range {:.0}–{:.0}",
+                    r.mean, r.std, r.min, r.max
+                );
+            }
+            "table1" => {
+                let rows = table1::run(&rt, runs, seed)?;
+                let mut t = Table::new(vec!["K", "Speed (Mbps)", "Concurrency"]);
+                for r in &rows {
+                    t.row(vec![
+                        format!("{:.2}", r.k),
+                        r.summary.speed_mbps.to_string(),
+                        r.summary.concurrency.to_string(),
+                    ]);
+                }
+                println!("{}", t.render());
+                table1::check_shape(&rows).map_err(Error::Session)?;
+            }
+            "table3" => {
+                let rows = table3::run(&rt, runs, seed)?;
+                let mut t = Table::new(vec!["Dataset", "Tool", "Concurrency", "Speed (Mbps)"]);
+                for r in &rows {
+                    for s in [&r.prefetch, &r.pysradb, &r.fastbiodl] {
+                        t.row(vec![
+                            r.dataset.to_string(),
+                            s.tool.clone(),
+                            s.concurrency.to_string(),
+                            s.speed_mbps.to_string(),
+                        ]);
+                    }
+                }
+                println!("{}", t.render());
+                table3::check_shape(&rows).map_err(Error::Session)?;
+            }
+            "fig4" => {
+                let r = fig4::run(&rt, runs, seed)?;
+                println!(
+                    "gd {:.1}s vs bayes {:.1}s -> bayes {:.0}% slower",
+                    r.gd.duration_s.mean,
+                    r.bayes.duration_s.mean,
+                    (r.bayes_slowdown() - 1.0) * 100.0
+                );
+                fig4::check_shape(&r).map_err(Error::Session)?;
+            }
+            "fig5" => {
+                let r = fig5::run(&rt, runs, seed)?;
+                for band in [&r.fastbiodl, &r.prefetch, &r.pysradb] {
+                    println!(
+                        "{:<10} peak {:>6.0} Mbps  done {:>6.1}s  {}",
+                        band.tool,
+                        band.peak(),
+                        band.completion_s(),
+                        sparkline(&band.mean, 48)
+                    );
+                }
+                fig5::check_shape(&r).map_err(Error::Session)?;
+            }
+            "fig6" => {
+                let rows = fig6::run(&rt, runs, seed)?;
+                for r in &rows {
+                    println!(
+                        "{:<9} C*={:>5.1}  adaptive {:.0} Mbps  vs fixed-5 {:.2}x  vs fixed-3 {:.2}x",
+                        r.scenario,
+                        r.c_star,
+                        r.adaptive.speed_mbps.mean,
+                        r.speedup_vs_fixed5(),
+                        r.speedup_vs_fixed3()
+                    );
+                }
+                fig6::check_shape(&rows).map_err(Error::Session)?;
+            }
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown experiment '{other}' (table1|table3|fig1|fig2|fig4|fig5|fig6|all)"
+                )));
+            }
+        }
+        Ok(())
+    };
+
+    if which == "all" {
+        for id in ["fig1", "fig2", "table1", "fig4", "table3", "fig5", "fig6"] {
+            run_one(id)?;
+        }
+    } else {
+        run_one(which)?;
+    }
+    Ok(())
+}
+
+fn cmd_utility_surface(args: &Args) -> Result<()> {
+    args.expect_flags(&["k"])?;
+    let k = args.flag_f64("k")?.unwrap_or(1.02);
+    if k <= 1.0 {
+        return Err(Error::Config("k must be > 1".into()));
+    }
+    let rt = load_runtime()?;
+    let g = rt.constants().grid;
+    let t_grid: Vec<f32> = (0..g).map(|i| 100.0 * (i + 1) as f32).collect();
+    let c_grid: Vec<f32> = (1..=g).map(|i| i as f32).collect();
+    let surf = rt.utility_surface(&t_grid, &c_grid, k as f32)?;
+    println!(
+        "U(T, C) = T / {k}^C    (C* = 1/ln k = {:.1})",
+        1.0 / k.ln()
+    );
+    for &row in &[7usize, 15, 31, 63] {
+        let vals: Vec<f64> = (0..g).map(|j| surf[row * g + j] as f64).collect();
+        println!("T={:<6} {}", t_grid[row], sparkline(&vals, 64));
+    }
+    Ok(())
+}
+
+fn print_report(r: &fastbiodl::session::SessionReport) {
+    println!();
+    println!("tool            : {}", r.tool);
+    println!("duration        : {}", fastbiodl::util::fmt_secs(r.duration_s));
+    println!("bytes           : {}", fastbiodl::util::fmt_bytes(r.total_bytes));
+    println!("mean throughput : {:.1} Mbps", r.mean_throughput_mbps);
+    println!("peak throughput : {:.1} Mbps", r.peak_mbps);
+    println!(
+        "mean concurrency: {:.2} (in-flight {:.2})",
+        r.mean_concurrency, r.mean_inflight
+    );
+    println!("files completed : {}", r.files_completed);
+    println!("optimizer probes: {}", r.probes);
+    println!("throughput      : {}", sparkline(&r.timeline.values, 64));
+    if r.concurrency_trace.len() > 1 {
+        let cs: Vec<f64> = r.concurrency_trace.iter().map(|&(_, c)| c as f64).collect();
+        println!("concurrency     : {}", sparkline(&cs, 64));
+    }
+}

@@ -1,0 +1,18 @@
+//! Measurement plumbing: throughput accounting, summary statistics,
+//! per-second timelines and confidence bands.
+//!
+//! Everything the paper reports is one of: a mean ± std over runs
+//! (Table 1/3), a per-second throughput timeline (Figures 1/2/5/6), or
+//! a 68 % confidence band across runs of such timelines (Figure 5).
+//! [`summary`] and [`timeline`] provide exactly those, and
+//! [`recorder`] is the shared-state byte counter the download workers
+//! and the monitor thread communicate through (the "Shared Throughput
+//! Logs" of the paper's Algorithm 1).
+
+pub mod recorder;
+pub mod summary;
+pub mod timeline;
+
+pub use recorder::ThroughputRecorder;
+pub use summary::{mean_std, MeanStd};
+pub use timeline::{ci68_band, per_second_bins, Timeline};

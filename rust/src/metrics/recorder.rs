@@ -1,0 +1,174 @@
+//! Shared throughput logs (paper Algorithm 1's "Shared Throughput Logs").
+//!
+//! Workers add delivered byte counts; the monitor/optimizer thread
+//! samples the counter at its own cadence and converts deltas to Mbps.
+//! The recorder also keeps the full `(t, mbps)` sample log for the
+//! per-second timelines of Figures 1/2/5/6.
+//!
+//! Real-transport mode shares one recorder across worker threads
+//! (atomics only on the hot path — no locks between workers); the
+//! simulated driver uses the same type single-threaded so all metric
+//! post-processing is identical between the two modes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One throughput sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    /// Time of the sample (s since transfer start; virtual or real).
+    pub t_s: f64,
+    /// Instantaneous throughput over the sampling gap (Mbps).
+    pub mbps: f64,
+    /// Concurrency at sample time (workers actually active).
+    pub concurrency: usize,
+}
+
+/// Thread-safe byte counter + sample log.
+pub struct ThroughputRecorder {
+    total_bytes: AtomicU64,
+    /// Bytes at the last `sample()` call, for delta computation.
+    last_bytes: AtomicU64,
+    /// Bit-pattern of the last sample's time (f64 as u64).
+    last_t: AtomicU64,
+    samples: Mutex<Vec<Sample>>,
+}
+
+impl Default for ThroughputRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputRecorder {
+    pub fn new() -> Self {
+        ThroughputRecorder {
+            total_bytes: AtomicU64::new(0),
+            last_bytes: AtomicU64::new(0),
+            last_t: AtomicU64::new(0f64.to_bits()),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Hot path: a worker delivered `bytes`.
+    #[inline]
+    pub fn add_bytes(&self, bytes: u64) {
+        self.total_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Total bytes delivered so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Monitor path: take a sample at time `t_s` with `concurrency`
+    /// active workers; returns the instantaneous Mbps since the last
+    /// sample.
+    pub fn sample(&self, t_s: f64, concurrency: usize) -> f64 {
+        let now_bytes = self.total_bytes.load(Ordering::Relaxed);
+        let prev_bytes = self.last_bytes.swap(now_bytes, Ordering::Relaxed);
+        let prev_t = f64::from_bits(self.last_t.swap(t_s.to_bits(), Ordering::Relaxed));
+        let dt = t_s - prev_t;
+        let mbps = if dt > 0.0 {
+            (now_bytes.saturating_sub(prev_bytes)) as f64 * 8.0 / 1e6 / dt
+        } else {
+            0.0
+        };
+        self.samples.lock().unwrap().push(Sample {
+            t_s,
+            mbps,
+            concurrency,
+        });
+        mbps
+    }
+
+    /// Snapshot of the sample log.
+    pub fn samples(&self) -> Vec<Sample> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    /// Number of samples taken.
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mean throughput over the whole recording (total bytes / last t).
+    pub fn overall_mbps(&self) -> f64 {
+        let t = f64::from_bits(self.last_t.load(Ordering::Relaxed));
+        if t > 0.0 {
+            self.total_bytes() as f64 * 8.0 / 1e6 / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean concurrency over all samples (paper Table 3's
+    /// "Concurrency" column is this quantity).
+    pub fn mean_concurrency(&self) -> f64 {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().map(|x| x.concurrency as f64).sum::<f64>() / s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deltas_to_mbps() {
+        let r = ThroughputRecorder::new();
+        r.add_bytes(1_250_000); // 10 Mbit
+        let mbps = r.sample(1.0, 3);
+        assert!((mbps - 10.0).abs() < 1e-9);
+        r.add_bytes(2_500_000); // 20 Mbit over 2 s
+        let mbps = r.sample(3.0, 4);
+        assert!((mbps - 10.0).abs() < 1e-9);
+        assert_eq!(r.total_bytes(), 3_750_000);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn overall_and_mean_concurrency() {
+        let r = ThroughputRecorder::new();
+        r.add_bytes(10_000_000);
+        r.sample(1.0, 2);
+        r.add_bytes(10_000_000);
+        r.sample(2.0, 4);
+        assert!((r.overall_mbps() - 80.0).abs() < 1e-9);
+        assert!((r.mean_concurrency() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_dt_is_zero_mbps() {
+        let r = ThroughputRecorder::new();
+        r.add_bytes(1000);
+        assert_eq!(r.sample(0.0, 1), 0.0);
+    }
+
+    #[test]
+    fn concurrent_adders() {
+        use std::sync::Arc;
+        let r = Arc::new(ThroughputRecorder::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        r.add_bytes(100);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.total_bytes(), 8 * 10_000 * 100);
+    }
+}

@@ -1,0 +1,74 @@
+//! Mean ± standard deviation summaries (Tables 1 and 3).
+
+use std::fmt;
+
+/// A mean ± sample-standard-deviation pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl fmt::Display for MeanStd {
+    /// Formats like the paper's tables: `989.12 ± 92.35`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.2} ± {:.2}", self.mean, self.std)
+    }
+}
+
+/// Sample mean and (n−1)-denominator standard deviation.
+///
+/// Empty input yields zeros; single samples have std 0 — both match how
+/// the paper reports deterministic columns (e.g. prefetch's fixed
+/// `3.00 ± 0.00` concurrency).
+pub fn mean_std(xs: &[f64]) -> MeanStd {
+    let n = xs.len();
+    if n == 0 {
+        return MeanStd {
+            mean: 0.0,
+            std: 0.0,
+            n: 0,
+        };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let std = if n < 2 {
+        0.0
+    } else {
+        let ss: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    };
+    MeanStd { mean, std, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let s = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        // Sample std of this classic set is ~2.138.
+        assert!((s.std - 2.13809).abs() < 1e-4);
+        assert_eq!(s.n, 8);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(mean_std(&[]).mean, 0.0);
+        let one = mean_std(&[3.5]);
+        assert_eq!(one.mean, 3.5);
+        assert_eq!(one.std, 0.0);
+    }
+
+    #[test]
+    fn display_matches_paper_format() {
+        let s = MeanStd {
+            mean: 989.123,
+            std: 92.349,
+            n: 5,
+        };
+        assert_eq!(s.to_string(), "989.12 ± 92.35");
+    }
+}

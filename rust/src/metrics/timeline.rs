@@ -1,0 +1,160 @@
+//! Per-second throughput timelines and cross-run confidence bands.
+//!
+//! Figure 5 plots "per-second mean throughput and its 68 % confidence
+//! band" over five runs; Figures 1/2/6 plot single-run per-second
+//! series. This module turns raw sample logs into those series.
+
+use crate::metrics::recorder::Sample;
+
+/// A per-second series: `values[i]` is the mean over second `i`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Timeline {
+    pub values: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Peak value (0 for empty).
+    pub fn peak(&self) -> f64 {
+        self.values.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Mean value (0 for empty).
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            self.values.iter().sum::<f64>() / self.values.len() as f64
+        }
+    }
+}
+
+/// Bin samples into 1-second means. Seconds with no samples inherit 0
+/// (the transfer was stalled or finished).
+pub fn per_second_bins(samples: &[Sample]) -> Timeline {
+    if samples.is_empty() {
+        return Timeline::default();
+    }
+    let horizon = samples
+        .iter()
+        .map(|s| s.t_s)
+        .fold(0.0f64, f64::max)
+        .ceil() as usize;
+    let mut sums = vec![0.0; horizon.max(1)];
+    let mut counts = vec![0usize; horizon.max(1)];
+    for s in samples {
+        // Sample at t belongs to second floor(t); t exactly at the end
+        // boundary folds into the last bin.
+        let idx = (s.t_s.floor() as usize).min(sums.len() - 1);
+        sums[idx] += s.mbps;
+        counts[idx] += 1;
+    }
+    let values = sums
+        .iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect();
+    Timeline { values }
+}
+
+/// Across-run 68 % confidence band (mean ± 1 sample std per second).
+///
+/// Runs may have different lengths (adaptive finishes earlier); the
+/// band extends to the longest run, treating finished runs as absent
+/// (not zero) — matching how Figure 5's traces simply end.
+/// Returns `(mean, lo, hi)` per second.
+pub fn ci68_band(runs: &[Timeline]) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let horizon = runs.iter().map(Timeline::len).max().unwrap_or(0);
+    let mut mean = Vec::with_capacity(horizon);
+    let mut lo = Vec::with_capacity(horizon);
+    let mut hi = Vec::with_capacity(horizon);
+    for i in 0..horizon {
+        let vals: Vec<f64> = runs
+            .iter()
+            .filter_map(|r| r.values.get(i).copied())
+            .collect();
+        let s = crate::metrics::summary::mean_std(&vals);
+        mean.push(s.mean);
+        lo.push((s.mean - s.std).max(0.0));
+        hi.push(s.mean + s.std);
+    }
+    (mean, lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t_s: f64, mbps: f64) -> Sample {
+        Sample {
+            t_s,
+            mbps,
+            concurrency: 1,
+        }
+    }
+
+    #[test]
+    fn bins_average_within_second() {
+        let samples = vec![
+            sample(0.2, 100.0),
+            sample(0.7, 200.0),
+            sample(1.5, 300.0),
+            sample(2.5, 500.0),
+        ];
+        let tl = per_second_bins(&samples);
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl.values[0], 150.0);
+        assert_eq!(tl.values[1], 300.0);
+        assert_eq!(tl.values[2], 500.0);
+        assert_eq!(tl.peak(), 500.0);
+    }
+
+    #[test]
+    fn empty_seconds_are_zero() {
+        let tl = per_second_bins(&[sample(0.5, 100.0), sample(2.5, 100.0)]);
+        assert_eq!(tl.values[1], 0.0);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(per_second_bins(&[]).is_empty());
+    }
+
+    #[test]
+    fn band_over_identical_runs_is_tight() {
+        let run = Timeline {
+            values: vec![100.0, 200.0, 300.0],
+        };
+        let (mean, lo, hi) = ci68_band(&[run.clone(), run.clone(), run]);
+        assert_eq!(mean, vec![100.0, 200.0, 300.0]);
+        assert_eq!(lo, mean);
+        assert_eq!(hi, mean);
+    }
+
+    #[test]
+    fn band_handles_unequal_lengths() {
+        let a = Timeline {
+            values: vec![100.0, 200.0],
+        };
+        let b = Timeline {
+            values: vec![200.0, 400.0, 600.0],
+        };
+        let (mean, lo, hi) = ci68_band(&[a, b]);
+        assert_eq!(mean.len(), 3);
+        assert_eq!(mean[0], 150.0);
+        // Second 2 only has run b.
+        assert_eq!(mean[2], 600.0);
+        assert_eq!(lo[2], 600.0);
+        assert_eq!(hi[2], 600.0);
+        // Band is symmetric and non-negative.
+        assert!(lo.iter().all(|&x| x >= 0.0));
+        assert!(hi[0] >= mean[0] && mean[0] >= lo[0]);
+    }
+}

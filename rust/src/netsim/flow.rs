@@ -1,0 +1,247 @@
+//! A single simulated connection (socket stream) and the requests
+//! flowing over it.
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! open_flow() ──► Setup(setup_latency) ──► Idle
+//!                                           │ begin_request(bytes)
+//!                                           ▼
+//!                        FirstByte(staging) ──► Active ──► Idle (request done)
+//!                                           ▲               │
+//!                                           └───────────────┘  (keep-alive reuse)
+//! close_flow() at any point ──► Closed
+//! ```
+//!
+//! While `Active`, the flow's demand each step is
+//! `per_conn_cap × slow_start_ramp × jitter × long_request_decay`; the
+//! link then water-fills actual rates across all active flows. The
+//! slow-start ramp doubles an initial rate fraction every RTT-scale
+//! interval until it reaches 1.0, modelling TCP congestion-window
+//! growth without simulating packets.
+
+use crate::util::prng::Prng;
+
+/// Opaque flow identifier (index into the engine's flow table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+/// Connection lifecycle phase.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlowPhase {
+    /// TCP/TLS handshake in progress; no requests accepted yet.
+    Setup { remaining_s: f64 },
+    /// Connected, no request in flight (keep-alive parking).
+    Idle,
+    /// Request issued, server staging the object (time to first byte).
+    FirstByte { remaining_s: f64 },
+    /// Payload flowing.
+    Active,
+    /// Closed (terminal).
+    Closed,
+}
+
+/// One simulated connection.
+#[derive(Debug)]
+pub struct SimFlow {
+    pub id: FlowId,
+    pub phase: FlowPhase,
+    /// Bytes left in the current request (meaningful in FirstByte/Active).
+    pub request_remaining: f64,
+    /// Age of the current request (s), for long-request decay.
+    pub request_age_s: f64,
+    /// Total bytes this flow has delivered.
+    pub delivered_bytes: f64,
+    /// Slow-start ramp factor in (0, 1]; grows toward 1.
+    ramp: f64,
+    /// Per-flow static rate jitter (multiplicative, ~N(1, jitter)).
+    jitter: f64,
+    /// Opaque tag the coordinator uses to map flows to work items.
+    pub tag: u64,
+}
+
+/// Initial slow-start ramp fraction.
+const RAMP_START: f64 = 0.15;
+/// Ramp doubling time constant (s): reaches 1.0 from 0.15 in ~5–6 units.
+const RAMP_TAU_S: f64 = 0.35;
+
+impl SimFlow {
+    pub fn new(id: FlowId, setup_latency_s: f64, jitter_frac: f64, rng: &mut Prng) -> Self {
+        let jitter = (1.0 + jitter_frac * rng.normal()).clamp(0.6, 1.4);
+        SimFlow {
+            id,
+            phase: if setup_latency_s > 0.0 {
+                FlowPhase::Setup {
+                    remaining_s: setup_latency_s,
+                }
+            } else {
+                FlowPhase::Idle
+            },
+            request_remaining: 0.0,
+            request_age_s: 0.0,
+            delivered_bytes: 0.0,
+            ramp: RAMP_START,
+            jitter,
+            tag: 0,
+        }
+    }
+
+    /// Whether the flow can accept `begin_request`.
+    pub fn is_idle(&self) -> bool {
+        matches!(self.phase, FlowPhase::Idle)
+    }
+
+    /// Whether the flow is moving payload bytes this step.
+    pub fn is_active(&self) -> bool {
+        matches!(self.phase, FlowPhase::Active)
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self.phase, FlowPhase::Closed)
+    }
+
+    /// Issue a request for `bytes` on this (idle) connection.
+    ///
+    /// `first_byte_latency_s` models server-side staging; pass 0 for a
+    /// warm object. Panics if the flow is not idle — the engine
+    /// enforces the lifecycle.
+    pub fn begin_request(&mut self, bytes: f64, first_byte_latency_s: f64) {
+        assert!(
+            self.is_idle(),
+            "begin_request on non-idle flow {:?} ({:?})",
+            self.id,
+            self.phase
+        );
+        assert!(bytes > 0.0, "request must move at least one byte");
+        self.request_remaining = bytes;
+        self.request_age_s = 0.0;
+        // Keep-alive reuse keeps TCP's window mostly open: restart the
+        // ramp only partially on subsequent requests.
+        self.ramp = self.ramp.max(RAMP_START).min(1.0).max(0.5 * self.ramp);
+        self.phase = if first_byte_latency_s > 0.0 {
+            FlowPhase::FirstByte {
+                remaining_s: first_byte_latency_s,
+            }
+        } else {
+            FlowPhase::Active
+        };
+    }
+
+    /// Advance non-transfer phases by `dt`. Returns true if the flow
+    /// just became Active or Idle (i.e. a phase timer expired).
+    pub fn tick_phase(&mut self, dt: f64) -> bool {
+        match &mut self.phase {
+            FlowPhase::Setup { remaining_s } => {
+                *remaining_s -= dt;
+                if *remaining_s <= 0.0 {
+                    self.phase = FlowPhase::Idle;
+                    true
+                } else {
+                    false
+                }
+            }
+            FlowPhase::FirstByte { remaining_s } => {
+                *remaining_s -= dt;
+                if *remaining_s <= 0.0 {
+                    self.phase = FlowPhase::Active;
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        }
+    }
+
+    /// This step's demand (Mbps) given the server cap and decay.
+    pub fn demand_mbps(&self, per_conn_cap: f64, decay_factor: f64) -> f64 {
+        debug_assert!(self.is_active());
+        per_conn_cap * self.ramp * self.jitter * decay_factor
+    }
+
+    /// Deliver `bytes` over `dt` seconds; grows the ramp, ages the
+    /// request, completes it when the byte count reaches zero.
+    /// Returns `true` when the current request finished this step.
+    pub fn deliver(&mut self, bytes: f64, dt: f64) -> bool {
+        debug_assert!(self.is_active());
+        self.delivered_bytes += bytes;
+        self.request_remaining -= bytes;
+        self.request_age_s += dt;
+        // Exponential approach to full rate.
+        self.ramp = 1.0 - (1.0 - self.ramp) * (-dt / RAMP_TAU_S).exp();
+        if self.request_remaining <= 0.5 {
+            // Sub-byte residue is rounding noise.
+            self.request_remaining = 0.0;
+            self.phase = FlowPhase::Idle;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn close(&mut self) {
+        self.phase = FlowPhase::Closed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_flow() -> SimFlow {
+        let mut rng = Prng::new(1);
+        SimFlow::new(FlowId(0), 0.2, 0.0, &mut rng)
+    }
+
+    #[test]
+    fn setup_counts_down_to_idle() {
+        let mut f = mk_flow();
+        assert!(matches!(f.phase, FlowPhase::Setup { .. }));
+        assert!(!f.tick_phase(0.1));
+        assert!(f.tick_phase(0.15));
+        assert!(f.is_idle());
+    }
+
+    #[test]
+    fn zero_setup_starts_idle() {
+        let mut rng = Prng::new(2);
+        let f = SimFlow::new(FlowId(1), 0.0, 0.0, &mut rng);
+        assert!(f.is_idle());
+    }
+
+    #[test]
+    fn request_lifecycle() {
+        let mut f = mk_flow();
+        f.tick_phase(1.0);
+        f.begin_request(1000.0, 0.1);
+        assert!(matches!(f.phase, FlowPhase::FirstByte { .. }));
+        assert!(f.tick_phase(0.2));
+        assert!(f.is_active());
+        // Deliver in two steps.
+        assert!(!f.deliver(600.0, 0.05));
+        assert!(f.deliver(400.0, 0.05));
+        assert!(f.is_idle());
+        assert_eq!(f.delivered_bytes, 1000.0);
+    }
+
+    #[test]
+    fn ramp_grows_toward_one() {
+        let mut f = mk_flow();
+        f.tick_phase(1.0);
+        f.begin_request(1e12, 0.0);
+        let d0 = f.demand_mbps(100.0, 1.0);
+        for _ in 0..100 {
+            f.deliver(1000.0, 0.1);
+        }
+        let d1 = f.demand_mbps(100.0, 1.0);
+        assert!(d0 < d1);
+        assert!((d1 - 100.0).abs() < 1.0, "ramp should saturate: {d1}");
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_request on non-idle")]
+    fn begin_request_requires_idle() {
+        let mut f = mk_flow();
+        f.begin_request(10.0, 0.0); // still in Setup
+    }
+}

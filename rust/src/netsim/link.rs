@@ -1,0 +1,147 @@
+//! Max-min fair bandwidth allocation over a shared bottleneck link.
+//!
+//! Each simulation step the engine collects every active flow's demand
+//! (its per-connection cap × ramp × jitter × decay) and water-fills the
+//! link's currently available capacity across them: capacity is divided
+//! equally, flows whose demand is below their equal share keep their
+//! demand, and the surplus is redistributed among the rest until either
+//! every flow is satisfied or the link is exhausted. This is the
+//! standard fluid approximation of long-lived TCP flows sharing one
+//! bottleneck and is what makes "theoretical optimal concurrency =
+//! link ÷ per-thread cap" hold in the Figure-6 scenarios.
+
+/// Water-fill `capacity` across `demands`; returns per-flow allocations.
+///
+/// Invariants (property-tested in `rust/tests/prop_netsim.rs`):
+/// * `alloc[i] <= demands[i]` for all `i`,
+/// * `sum(alloc) <= capacity + eps`,
+/// * if `sum(demands) <= capacity`, every flow gets exactly its demand,
+/// * allocations are monotone in demand: `demands[i] <= demands[j]`
+///   implies `alloc[i] <= alloc[j] + eps`.
+pub fn max_min_fair(capacity: f64, demands: &[f64]) -> Vec<f64> {
+    let mut alloc = Vec::new();
+    let mut scratch = Vec::new();
+    max_min_fair_into(capacity, demands, &mut alloc, &mut scratch);
+    alloc
+}
+
+/// Allocation-free variant for the engine hot path: writes the result
+/// into `alloc` and uses `order_scratch` for the index sort, both
+/// reused across steps (§Perf optimization 1 — see EXPERIMENTS.md).
+pub fn max_min_fair_into(
+    capacity: f64,
+    demands: &[f64],
+    alloc: &mut Vec<f64>,
+    order_scratch: &mut Vec<usize>,
+) {
+    let n = demands.len();
+    alloc.clear();
+    if n == 0 {
+        return;
+    }
+    let capacity = capacity.max(0.0);
+    let total: f64 = demands.iter().sum();
+    if total <= capacity {
+        alloc.extend_from_slice(demands);
+        return;
+    }
+
+    // Sort indices by demand ascending; fill smallest first.
+    order_scratch.clear();
+    order_scratch.extend(0..n);
+    order_scratch.sort_unstable_by(|&a, &b| demands[a].total_cmp(&demands[b]));
+
+    alloc.resize(n, 0.0);
+    let mut remaining = capacity;
+    let mut left = n;
+    for &i in order_scratch.iter() {
+        let fair = remaining / left as f64;
+        let got = demands[i].min(fair).max(0.0);
+        alloc[i] = got;
+        remaining -= got;
+        left -= 1;
+    }
+}
+
+/// The bottleneck link: nominal capacity minus a dynamic background
+/// component gives the capacity available to foreground flows.
+#[derive(Clone, Debug)]
+pub struct Link {
+    /// Nominal line rate (Mbps).
+    pub capacity_mbps: f64,
+}
+
+impl Link {
+    pub fn new(capacity_mbps: f64) -> Self {
+        assert!(capacity_mbps > 0.0, "link capacity must be positive");
+        Link { capacity_mbps }
+    }
+
+    /// Capacity left for foreground flows after background traffic.
+    pub fn available(&self, background_mbps: f64) -> f64 {
+        (self.capacity_mbps - background_mbps).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-9, "{a} != {b}");
+    }
+
+    #[test]
+    fn under_subscription_gives_demands() {
+        let a = max_min_fair(1000.0, &[100.0, 200.0, 300.0]);
+        assert_eq!(a, vec![100.0, 200.0, 300.0]);
+    }
+
+    #[test]
+    fn equal_demands_split_evenly() {
+        let a = max_min_fair(900.0, &[500.0, 500.0, 500.0]);
+        for x in a {
+            assert_close(x, 300.0);
+        }
+    }
+
+    #[test]
+    fn small_flows_keep_demand_surplus_redistributed() {
+        // capacity 900: flow0 wants 100 (gets it), the other two split 800.
+        let a = max_min_fair(900.0, &[100.0, 600.0, 600.0]);
+        assert_close(a[0], 100.0);
+        assert_close(a[1], 400.0);
+        assert_close(a[2], 400.0);
+    }
+
+    #[test]
+    fn zero_capacity_zero_alloc() {
+        let a = max_min_fair(0.0, &[10.0, 20.0]);
+        assert_eq!(a, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_demands() {
+        assert!(max_min_fair(100.0, &[]).is_empty());
+    }
+
+    #[test]
+    fn conservation_and_bounds() {
+        let demands = [120.0, 45.0, 800.0, 0.0, 333.0, 500.0];
+        let cap = 1000.0;
+        let a = max_min_fair(cap, &demands);
+        let sum: f64 = a.iter().sum();
+        assert!(sum <= cap + 1e-9);
+        for (x, d) in a.iter().zip(&demands) {
+            assert!(*x <= *d + 1e-9);
+            assert!(*x >= 0.0);
+        }
+    }
+
+    #[test]
+    fn link_available_saturates_at_zero() {
+        let l = Link::new(1000.0);
+        assert_close(l.available(200.0), 800.0);
+        assert_close(l.available(2000.0), 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Virtual-time network simulator.
+//!
+//! This is the substrate that stands in for the two testbeds of the
+//! paper's evaluation — the Colab↔NCBI/ENA WAN of §5.1 and the FABRIC
+//! NCSA↔SALT high-speed link of §5.2 (see DESIGN.md §2 for the
+//! substitution argument). It models exactly the phenomena the paper's
+//! results turn on:
+//!
+//! * a **shared bottleneck link** with max-min fair sharing across
+//!   concurrent connections ([`link`]),
+//! * **volatile available bandwidth** — an Ornstein–Uhlenbeck
+//!   background-traffic process reproduces the fluctuation structure of
+//!   the paper's Figure 2 ([`traffic`]),
+//! * **per-connection rate caps** (server-side shaping; the quantity
+//!   that makes the theoretical optimal concurrency `C* = link ÷ cap`
+//!   in Figure 6) and TCP-like **slow-start ramps** ([`flow`]),
+//! * **connection setup latency**, per-request **first-byte latency**
+//!   (SRA cold-storage staging), and **long-request throughput decay**
+//!   (the single-stream degradation of Figure 1) ([`server`]),
+//! * **client-side overheads** — stream-management penalty growing with
+//!   concurrency and an aggregate write ceiling, which produce the
+//!   "excessive load" regime of §3 ([`client`]).
+//!
+//! Time is virtual: [`engine::NetSim::step`] advances the world by `dt`
+//! seconds of simulated time in microseconds of wall time, so the
+//! benches replay multi-hundred-second transfers instantly and every
+//! run is deterministic given its seed.
+
+pub mod client;
+pub mod engine;
+pub mod flow;
+pub mod link;
+pub mod server;
+pub mod traffic;
+
+pub use client::ClientProfile;
+pub use engine::{FlowEvent, NetSim, NetSimConfig, StepReport};
+pub use flow::{FlowId, FlowPhase};
+pub use server::ServerProfile;
+pub use traffic::OuProcess;
+
+/// Convert megabits/second × seconds to bytes.
+#[inline]
+pub fn mbps_to_bytes(mbps: f64, secs: f64) -> f64 {
+    mbps * 1e6 / 8.0 * secs
+}
+
+/// Convert bytes / seconds to megabits/second.
+#[inline]
+pub fn bytes_to_mbps(bytes: f64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        0.0
+    } else {
+        bytes * 8.0 / 1e6 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions_roundtrip() {
+        let bytes = mbps_to_bytes(800.0, 2.0);
+        assert!((bytes - 200e6).abs() < 1.0);
+        let mbps = bytes_to_mbps(bytes, 2.0);
+        assert!((mbps - 800.0).abs() < 1e-9);
+        assert_eq!(bytes_to_mbps(123.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Server-side behaviour model (the simulated NCBI/ENA mirror or the
+//! FABRIC FTP server of §5.2).
+//!
+//! Four phenomena live here, each with a direct real-world counterpart
+//! documented in DESIGN.md §2/§6:
+//!
+//! * **connection setup latency** — TCP + TLS handshakes plus HTTP
+//!   session establishment (≈180 ms to a transatlantic archive);
+//! * **first-byte latency per request** — public archives stage cold
+//!   SRA objects out of archival storage before the first payload byte;
+//!   small-file workloads (Amplicon-Digester) are dominated by this;
+//! * **per-connection rate cap** — server-side shaping / per-stream TCP
+//!   ceiling; this is what makes concurrency useful at all and defines
+//!   `C* = link ÷ cap` in the Figure-6 scenarios;
+//! * **long-request decay** — throughput of one long-lived HTTP request
+//!   degrades with request age (shaper token depletion, storage read-ahead
+//!   falling behind). Chunked range requests (FastBioDL) stay young and
+//!   avoid it; whole-file requests (prefetch/pysradb on 9.5 GB HiFi
+//!   files) ride it to the floor. This reproduces the paper's Figure 1
+//!   single-stream underutilization and the HiFi-WGS ordering.
+
+/// Immutable per-scenario server parameters.
+#[derive(Clone, Debug)]
+pub struct ServerProfile {
+    /// TCP+TLS connection establishment time (s).
+    pub setup_latency_s: f64,
+    /// Per-request time to first byte (s) — cold-object staging.
+    pub first_byte_latency_s: f64,
+    /// Per-connection steady-state rate ceiling (Mbps).
+    pub per_conn_cap_mbps: f64,
+    /// Multiplicative throughput decay per minute of *request* age.
+    /// 0.0 disables. Effective factor: `max(floor, 1 - decay*age/60)`.
+    pub long_request_decay_per_min: f64,
+    /// Lower bound of the decay factor.
+    pub decay_floor: f64,
+    /// Hard cap on simultaneous connections the server accepts
+    /// (`open_flow` beyond this parks the flow in a reject/backoff state).
+    pub max_connections: usize,
+}
+
+impl Default for ServerProfile {
+    fn default() -> Self {
+        ServerProfile {
+            setup_latency_s: 0.18,
+            first_byte_latency_s: 0.05,
+            per_conn_cap_mbps: 350.0,
+            long_request_decay_per_min: 0.0,
+            decay_floor: 0.25,
+            max_connections: 128,
+        }
+    }
+}
+
+impl ServerProfile {
+    /// Throughput factor for a request that has been running `age_s`.
+    pub fn decay_factor(&self, age_s: f64) -> f64 {
+        if self.long_request_decay_per_min <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.long_request_decay_per_min * age_s / 60.0).max(self.decay_floor)
+    }
+
+    /// Validate parameter sanity (used by config loading).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.per_conn_cap_mbps <= 0.0 {
+            return Err("per_conn_cap_mbps must be > 0".into());
+        }
+        if self.setup_latency_s < 0.0 || self.first_byte_latency_s < 0.0 {
+            return Err("latencies must be >= 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.decay_floor) {
+            return Err("decay_floor must be in [0, 1]".into());
+        }
+        if self.max_connections == 0 {
+            return Err("max_connections must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_disabled_is_identity() {
+        let s = ServerProfile::default();
+        assert_eq!(s.decay_factor(0.0), 1.0);
+        assert_eq!(s.decay_factor(600.0), 1.0);
+    }
+
+    #[test]
+    fn decay_hits_floor() {
+        let s = ServerProfile {
+            long_request_decay_per_min: 0.5,
+            decay_floor: 0.3,
+            ..Default::default()
+        };
+        assert!((s.decay_factor(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.decay_factor(60.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.decay_factor(600.0), 0.3);
+    }
+
+    #[test]
+    fn validation_catches_bad_params() {
+        let mut s = ServerProfile::default();
+        assert!(s.validate().is_ok());
+        s.per_conn_cap_mbps = 0.0;
+        assert!(s.validate().is_err());
+        s = ServerProfile {
+            decay_floor: 1.5,
+            ..Default::default()
+        };
+        assert!(s.validate().is_err());
+        s = ServerProfile {
+            max_connections: 0,
+            ..Default::default()
+        };
+        assert!(s.validate().is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Background-traffic model: mean-reverting Ornstein–Uhlenbeck process.
+//!
+//! The paper's Figure 2 motivates the whole system: real available
+//! bandwidth between a client and a public archive fluctuates on
+//! second-to-minute timescales because of cross traffic and server
+//! load. An OU process is the standard stationary Gauss–Markov model
+//! for such a signal — it has a well-defined mean (the long-run
+//! background level), reverts toward it (congestion episodes end), and
+//! has tunable variance and correlation time.
+//!
+//! ```text
+//!     dB = θ (μ − B) dt + σ √dt · N(0, 1)
+//! ```
+//!
+//! `fig2_volatility` replays exactly this process to regenerate the
+//! paper's volatility trace.
+
+use crate::util::prng::Prng;
+
+/// Mean-reverting background-traffic process (Mbps).
+#[derive(Clone, Debug)]
+pub struct OuProcess {
+    /// Long-run mean level μ (Mbps).
+    pub mean: f64,
+    /// Mean-reversion rate θ (1/s). Correlation time ≈ 1/θ.
+    pub theta: f64,
+    /// Diffusion σ (Mbps / √s).
+    pub sigma: f64,
+    /// Hard clamp: the process never leaves `[lo, hi]`.
+    pub lo: f64,
+    pub hi: f64,
+    value: f64,
+    rng: Prng,
+}
+
+impl OuProcess {
+    /// Create the process at its mean.
+    pub fn new(mean: f64, theta: f64, sigma: f64, lo: f64, hi: f64, rng: Prng) -> Self {
+        assert!(lo <= hi, "OU clamp: lo > hi");
+        assert!(theta >= 0.0 && sigma >= 0.0);
+        let value = mean.clamp(lo, hi);
+        OuProcess {
+            mean,
+            theta,
+            sigma,
+            lo,
+            hi,
+            value,
+            rng,
+        }
+    }
+
+    /// A degenerate constant process (used by scenarios without
+    /// background traffic, e.g. the throttled FABRIC profiles).
+    pub fn constant(level: f64) -> Self {
+        OuProcess::new(level, 0.0, 0.0, level, level, Prng::new(0))
+    }
+
+    /// Current level (Mbps).
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    /// Advance by `dt` seconds and return the new level.
+    pub fn step(&mut self, dt: f64) -> f64 {
+        if self.sigma == 0.0 && self.theta == 0.0 {
+            return self.value;
+        }
+        let noise = self.rng.normal();
+        self.value += self.theta * (self.mean - self.value) * dt
+            + self.sigma * dt.sqrt() * noise;
+        self.value = self.value.clamp(self.lo, self.hi);
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_process_never_moves() {
+        let mut p = OuProcess::constant(250.0);
+        for _ in 0..100 {
+            assert_eq!(p.step(0.1), 250.0);
+        }
+    }
+
+    #[test]
+    fn stays_in_clamp() {
+        let mut p = OuProcess::new(400.0, 0.2, 300.0, 0.0, 900.0, Prng::new(3));
+        for _ in 0..10_000 {
+            let v = p.step(0.05);
+            assert!((0.0..=900.0).contains(&v), "escaped clamp: {v}");
+        }
+    }
+
+    #[test]
+    fn long_run_mean_is_respected() {
+        let mut p = OuProcess::new(400.0, 0.5, 80.0, 0.0, 800.0, Prng::new(11));
+        // Burn in, then average.
+        for _ in 0..2_000 {
+            p.step(0.05);
+        }
+        let n = 40_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += p.step(0.05);
+        }
+        let avg = sum / n as f64;
+        assert!(
+            (avg - 400.0).abs() < 25.0,
+            "long-run mean {avg} too far from 400"
+        );
+    }
+
+    #[test]
+    fn actually_fluctuates() {
+        let mut p = OuProcess::new(400.0, 0.5, 80.0, 0.0, 800.0, Prng::new(12));
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..2_000 {
+            let v = p.step(0.05);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        assert!(hi - lo > 50.0, "volatility too small: range {}", hi - lo);
+    }
+}

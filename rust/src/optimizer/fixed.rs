@@ -1,0 +1,62 @@
+//! Fixed-concurrency controller — the static baseline.
+//!
+//! Models what `prefetch` (3 threads), `pysradb` (8 threads) and the
+//! fixed-3 / fixed-5 arms of Figure 6 do: pick a level once, never
+//! move. Exists so the baselines and the adaptive system run through
+//! the *identical* session machinery and differ only in this policy.
+
+use crate::optimizer::{ConcurrencyController, Probe};
+use crate::Result;
+
+/// Static concurrency.
+#[derive(Clone, Debug)]
+pub struct FixedController {
+    level: usize,
+}
+
+impl FixedController {
+    pub fn new(level: usize) -> FixedController {
+        assert!(level >= 1, "fixed level must be >= 1");
+        FixedController { level }
+    }
+}
+
+impl ConcurrencyController for FixedController {
+    fn on_probe(&mut self, _probe: Probe) -> Result<usize> {
+        Ok(self.level)
+    }
+
+    fn current(&self) -> usize {
+        self.level
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_moves() {
+        let mut c = FixedController::new(5);
+        assert_eq!(c.current(), 5);
+        for t in [0.0, 100.0, 10_000.0] {
+            let next = c
+                .on_probe(Probe {
+                    concurrency: 5.0,
+                    mbps: t,
+                })
+                .unwrap();
+            assert_eq!(next, 5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fixed level must be >= 1")]
+    fn rejects_zero() {
+        FixedController::new(0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Gradient-descent concurrency controller (paper §4.2, the winner of
+//! Figure 4).
+//!
+//! Every probe interval the controller:
+//!
+//! 1. pushes `(C, T)` into the probe-history ring,
+//! 2. executes the `gd_step` XLA artifact (L1 Pallas utility +
+//!    weighted-slope kernels, L2 update math) on the exported window,
+//! 3. keeps the *continuous* concurrency state the artifact returned
+//!    (so sub-unit steps accumulate instead of being lost to rounding)
+//!    and applies the rounded, clamped value to the worker pool.
+//!
+//! Exploration falls out of the artifact's degenerate-window rule: with
+//! no concurrency variation in the window the step is +1, so a
+//! fresh transfer ramps 1 → 2 → … until the utility gradient turns
+//! negative, then oscillates ±1 around the optimum — exactly the
+//! probing behaviour the paper describes ("starts with one thread and
+//! probes every 5 seconds", §5.2).
+
+use crate::config::OptimizerConfig;
+use crate::optimizer::history::ProbeHistory;
+use crate::optimizer::{ConcurrencyController, Probe};
+use crate::runtime::SharedRuntime;
+use crate::Result;
+
+/// Gradient-descent controller driving the `gd_step` artifact.
+pub struct GdController {
+    cfg: OptimizerConfig,
+    runtime: SharedRuntime,
+    history: ProbeHistory,
+    /// Continuous concurrency state (the artifact's `next_c`).
+    c_continuous: f64,
+    /// Rounded, clamped target currently applied.
+    c_target: usize,
+    /// Diagnostics: last gradient and step returned by the artifact.
+    pub last_gradient: f64,
+    pub last_step: f64,
+    /// Total artifact invocations (perf accounting).
+    pub steps_executed: u64,
+}
+
+impl GdController {
+    pub fn new(cfg: OptimizerConfig, runtime: SharedRuntime) -> GdController {
+        let window = runtime.constants().window;
+        GdController {
+            c_continuous: cfg.c_init as f64,
+            c_target: cfg.c_init,
+            history: ProbeHistory::new(window, cfg.history_half_life),
+            cfg,
+            runtime,
+            last_gradient: 0.0,
+            last_step: 0.0,
+            steps_executed: 0,
+        }
+    }
+
+    fn round_clamp(&self, c: f64) -> usize {
+        let c = c.round();
+        let c = c.clamp(self.cfg.c_min as f64, self.cfg.c_max as f64);
+        c as usize
+    }
+}
+
+impl ConcurrencyController for GdController {
+    fn on_probe(&mut self, probe: Probe) -> Result<usize> {
+        self.history.push(probe);
+        let (c_hist, t_hist, weights) = self.history.export();
+        let params: [f32; 8] = [
+            self.cfg.k as f32,
+            self.cfg.lr as f32,
+            self.cfg.step_clip as f32,
+            self.cfg.c_min as f32,
+            self.cfg.c_max as f32,
+            self.c_continuous as f32,
+            0.0,
+            0.0,
+        ];
+        let out = self.runtime.gd_step(&c_hist, &t_hist, &weights, &params)?;
+        self.steps_executed += 1;
+        self.c_continuous = out[0] as f64;
+        self.last_gradient = out[1] as f64;
+        self.last_step = out[2] as f64;
+        self.c_target = self.round_clamp(self.c_continuous);
+        Ok(self.c_target)
+    }
+
+    fn current(&self) -> usize {
+        self.c_target
+    }
+
+    fn name(&self) -> &'static str {
+        "gradient-descent"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // GdController needs compiled artifacts; its behavioural tests live
+    // in `rust/tests/controller_integration.rs`. Unit-level coverage of
+    // the same math is in `optimizer::mirror`.
+}

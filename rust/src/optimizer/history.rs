@@ -1,0 +1,156 @@
+//! Probe-history ring buffer feeding the controller artifacts.
+//!
+//! Keeps the last `WINDOW` probes `(concurrency, mbps)` and produces
+//! the padded, masked, recency-weighted arrays the fixed-shape XLA
+//! artifacts expect (oldest first, zeros beyond `len`).
+
+use crate::optimizer::Probe;
+
+/// Ring of recent probes with artifact-shaped exports.
+#[derive(Clone, Debug)]
+pub struct ProbeHistory {
+    window: usize,
+    probes: Vec<Probe>,
+    half_life: f64,
+}
+
+impl ProbeHistory {
+    /// `window` must equal the artifact WINDOW constant (16);
+    /// `half_life` is the recency decay in probes.
+    pub fn new(window: usize, half_life: f64) -> ProbeHistory {
+        assert!(window > 0 && half_life > 0.0);
+        ProbeHistory {
+            window,
+            probes: Vec::with_capacity(window),
+            half_life,
+        }
+    }
+
+    /// Append a probe, evicting the oldest beyond the window.
+    pub fn push(&mut self, probe: Probe) {
+        if self.probes.len() == self.window {
+            self.probes.remove(0);
+        }
+        self.probes.push(probe);
+    }
+
+    pub fn len(&self) -> usize {
+        self.probes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.probes.is_empty()
+    }
+
+    /// Most recent probe.
+    pub fn last(&self) -> Option<Probe> {
+        self.probes.last().copied()
+    }
+
+    /// Number of *distinct* concurrency levels in the window — the GD
+    /// gradient is only identified when this is ≥ 2.
+    pub fn distinct_concurrency(&self) -> usize {
+        let mut cs: Vec<i64> = self
+            .probes
+            .iter()
+            .map(|p| (p.concurrency * 1000.0).round() as i64)
+            .collect();
+        cs.sort_unstable();
+        cs.dedup();
+        cs.len()
+    }
+
+    /// Export `(c_hist, t_hist, weights)` padded to the window size,
+    /// oldest-first, with validity×recency weights (newest = 1).
+    pub fn export(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = self.probes.len();
+        let mut c = vec![0.0f32; self.window];
+        let mut t = vec![0.0f32; self.window];
+        let mut w = vec![0.0f32; self.window];
+        for (i, p) in self.probes.iter().enumerate() {
+            c[i] = p.concurrency as f32;
+            t[i] = p.mbps as f32;
+            let age = (n - 1 - i) as f64;
+            w[i] = 2f64.powf(-age / self.half_life) as f32;
+        }
+        (c, t, w)
+    }
+
+    /// Export `(c_obs, t_obs, valid)` for the Bayesian artifact
+    /// (uniform validity mask instead of recency weights — the GP's
+    /// noise term handles staleness).
+    pub fn export_masked(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = self.probes.len();
+        let mut c = vec![0.0f32; self.window];
+        let mut t = vec![0.0f32; self.window];
+        let mut v = vec![0.0f32; self.window];
+        for (i, p) in self.probes.iter().enumerate() {
+            c[i] = p.concurrency as f32;
+            t[i] = p.mbps as f32;
+            v[i] = 1.0;
+        }
+        let _ = n;
+        (c, t, v)
+    }
+
+    /// Max observed throughput (the Bayesian u-normalizer).
+    pub fn max_mbps(&self) -> f64 {
+        self.probes.iter().map(|p| p.mbps).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(c: f64, t: f64) -> Probe {
+        Probe {
+            concurrency: c,
+            mbps: t,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut h = ProbeHistory::new(3, 2.0);
+        for i in 0..5 {
+            h.push(probe(i as f64, 100.0 * i as f64));
+        }
+        assert_eq!(h.len(), 3);
+        let (c, _, _) = h.export();
+        assert_eq!(&c[..3], &[2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn export_pads_and_weights() {
+        let mut h = ProbeHistory::new(4, 1.0);
+        h.push(probe(1.0, 100.0));
+        h.push(probe(2.0, 200.0));
+        let (c, t, w) = h.export();
+        assert_eq!(c, vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(t, vec![100.0, 200.0, 0.0, 0.0]);
+        // Newest weight 1, previous halved (half_life 1), padding 0.
+        assert!((w[1] - 1.0).abs() < 1e-6);
+        assert!((w[0] - 0.5).abs() < 1e-6);
+        assert_eq!(w[2], 0.0);
+    }
+
+    #[test]
+    fn distinct_concurrency_counts() {
+        let mut h = ProbeHistory::new(8, 2.0);
+        h.push(probe(1.0, 10.0));
+        h.push(probe(1.0, 12.0));
+        assert_eq!(h.distinct_concurrency(), 1);
+        h.push(probe(2.0, 20.0));
+        assert_eq!(h.distinct_concurrency(), 2);
+    }
+
+    #[test]
+    fn masked_export_uniform_validity() {
+        let mut h = ProbeHistory::new(4, 2.0);
+        h.push(probe(3.0, 300.0));
+        let (_, _, v) = h.export_masked();
+        assert_eq!(v, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(h.max_mbps(), 300.0);
+    }
+}

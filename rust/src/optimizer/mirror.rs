@@ -1,0 +1,278 @@
+//! Pure-Rust mirrors of the controller artifact math.
+//!
+//! These re-implement, in plain f64 Rust, exactly what the L2 graphs
+//! (and their L1 Pallas kernels) compute. They exist for two reasons:
+//!
+//! 1. **Cross-language consistency tests** — the integration suite runs
+//!    the same inputs through the XLA artifact and through these
+//!    mirrors and asserts agreement to f32 tolerance, pinning the
+//!    Python → HLO → PJRT pipeline end to end.
+//! 2. **Fast property tests** — invariants like "utility is unimodal in
+//!    C with maximum at `C* = 1/ln k`" (paper §4.1) are checked over
+//!    thousands of random parameter draws without paying XLA dispatch.
+//!
+//! Nothing on the request path calls these; the runtime executes the
+//! artifacts.
+
+/// Utility `U = T / k^C` (paper §4.1).
+pub fn utility(throughput: f64, concurrency: f64, k: f64) -> f64 {
+    throughput / k.powf(concurrency)
+}
+
+/// The §4.1 closed form: `C* = 1 / ln k`, the unique maximizer of
+/// `U(C) = αC / k^C` on C > 0.
+pub fn c_star(k: f64) -> f64 {
+    1.0 / k.ln()
+}
+
+/// Mirror of the `gd_step` artifact. Inputs exactly as exported by
+/// `ProbeHistory::export`; returns `(next_c, grad, step, u_mean)`.
+#[allow(clippy::too_many_arguments)]
+pub fn gd_step_mirror(
+    c_hist: &[f64],
+    t_hist: &[f64],
+    w: &[f64],
+    k: f64,
+    lr: f64,
+    step_clip: f64,
+    c_min: f64,
+    c_max: f64,
+    c_now: f64,
+) -> (f64, f64, f64, f64) {
+    const EPS: f64 = 1e-6;
+    assert_eq!(c_hist.len(), t_hist.len());
+    assert_eq!(c_hist.len(), w.len());
+    let u: Vec<f64> = c_hist
+        .iter()
+        .zip(t_hist)
+        .map(|(&c, &t)| utility(t, c, k))
+        .collect();
+    let s_w: f64 = w.iter().sum();
+    let s_c: f64 = w.iter().zip(c_hist).map(|(w, c)| w * c).sum();
+    let s_u: f64 = w.iter().zip(&u).map(|(w, u)| w * u).sum();
+    let s_cc: f64 = w.iter().zip(c_hist).map(|(w, c)| w * c * c).sum();
+    let s_cu: f64 = w
+        .iter()
+        .zip(c_hist)
+        .zip(&u)
+        .map(|((w, c), u)| w * c * u)
+        .sum();
+    let var_c = s_w * s_cc - s_c * s_c;
+    let cov_cu = s_w * s_cu - s_c * s_u;
+    let grad = cov_cu / (var_c + EPS);
+    let u_mean = s_u / s_w.max(EPS);
+    let u_scale = u_mean.abs() + EPS;
+    let raw = if var_c <= EPS { u_scale } else { lr * grad };
+    let step = (raw / u_scale).clamp(-step_clip, step_clip);
+    let next_c = (c_now + step).clamp(c_min, c_max);
+    (next_c, grad, step, u_mean)
+}
+
+/// Mirror of the GP posterior inside `bayes_step`: RBF kernel,
+/// huge-noise masking of invalid rows, Cholesky solve. Returns
+/// `(mu, std)` on the grid.
+pub fn gp_posterior_mirror(
+    c_obs: &[f64],
+    u_obs: &[f64],
+    valid: &[f64],
+    grid: &[f64],
+    lengthscale: f64,
+    noise: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = c_obs.len();
+    let g = grid.len();
+    let rbf = |a: f64, b: f64| (-(a - b) * (a - b) / (2.0 * lengthscale * lengthscale)).exp();
+
+    // K_oo + diag(noise + (1-valid)*1e6)
+    let mut k_oo = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            k_oo[i * n + j] = rbf(c_obs[i], c_obs[j]);
+        }
+        k_oo[i * n + i] += noise + (1.0 - valid[i]) * 1.0e6;
+    }
+    let u_masked: Vec<f64> = u_obs.iter().zip(valid).map(|(u, v)| u * v).collect();
+
+    // Cholesky.
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = k_oo[i * n + j];
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            if i == j {
+                l[i * n + i] = s.max(1e-12).sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    let solve_lower = |b: &[f64]| -> Vec<f64> {
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for p in 0..i {
+                s -= l[i * n + p] * y[p];
+            }
+            y[i] = s / l[i * n + i];
+        }
+        y
+    };
+    let solve_upper_t = |y: &[f64]| -> Vec<f64> {
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for p in i + 1..n {
+                s -= l[p * n + i] * x[p];
+            }
+            x[i] = s / l[i * n + i];
+        }
+        x
+    };
+    let alpha = solve_upper_t(&solve_lower(&u_masked));
+
+    let mut mu = vec![0.0; g];
+    let mut std = vec![0.0; g];
+    for (j, &gx) in grid.iter().enumerate() {
+        let k_star: Vec<f64> = c_obs.iter().map(|&c| rbf(c, gx)).collect();
+        mu[j] = k_star.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        let v = solve_lower(&k_star);
+        let var: f64 = 1.0 - v.iter().map(|x| x * x).sum::<f64>();
+        std[j] = var.max(0.0).sqrt();
+    }
+    (mu, std)
+}
+
+/// Expected improvement with the same erf approximation as the artifact.
+pub fn expected_improvement_mirror(mu: f64, std: f64, best: f64, xi: f64) -> f64 {
+    let improve = mu - best - xi;
+    if std <= 1e-9 {
+        return improve.max(0.0);
+    }
+    let z = improve / std;
+    let pdf = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    let cdf = 0.5 * (1.0 + erf_approx(z / std::f64::consts::SQRT_2));
+    improve * cdf + std * pdf
+}
+
+/// Abramowitz–Stegun 7.1.26 (same polynomial as `compile.model._erf`).
+pub fn erf_approx(x: f64) -> f64 {
+    let (a1, a2, a3, a4, a5) = (
+        0.254829592,
+        -0.284496736,
+        1.421413741,
+        -1.453152027,
+        1.061405429,
+    );
+    let p = 0.3275911;
+    let sign = x.signum();
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + p * ax);
+    let poly = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t;
+    sign * (1.0 - poly * (-ax * ax).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_star_is_the_maximizer() {
+        // U(C) = αC/k^C has its max at C* = 1/ln k (paper §4.1).
+        for k in [1.01, 1.02, 1.05, 1.1] {
+            let cs = c_star(k);
+            let u = |c: f64| c * utility(100.0, c, k); // α=100 per-thread
+            assert!(u(cs) > u(cs - 0.5), "k={k}");
+            assert!(u(cs) > u(cs + 0.5), "k={k}");
+        }
+    }
+
+    #[test]
+    fn gd_mirror_rises_then_clips() {
+        // Linear utility rise: gradient positive, step clipped.
+        let c = [1.0, 2.0, 3.0, 4.0];
+        let t = [100.0, 200.0, 300.0, 400.0];
+        let w = [0.5, 0.7, 0.85, 1.0];
+        let (next, grad, step, _) =
+            gd_step_mirror(&c, &t, &w, 1.02, 100.0, 2.0, 1.0, 64.0, 4.0);
+        assert!(grad > 0.0);
+        assert_eq!(step, 2.0, "big lr must clip to step_clip");
+        assert!((next - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gd_mirror_degenerate_window_explores_up() {
+        let c = [3.0, 3.0, 3.0];
+        let t = [300.0, 310.0, 305.0];
+        let w = [1.0, 1.0, 1.0];
+        let (next, _, step, _) = gd_step_mirror(&c, &t, &w, 1.02, 3.0, 4.0, 1.0, 64.0, 3.0);
+        assert!((step - 1.0).abs() < 1e-9, "explore step should be +1");
+        assert!((next - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gd_mirror_descends_past_optimum() {
+        // Utility falls with C: controller must step down.
+        let k: f64 = 1.2; // strong penalty => low C*
+        let c = [4.0, 5.0, 6.0];
+        let t = [400.0, 410.0, 415.0]; // sub-linear gains
+        let w = [1.0, 1.0, 1.0];
+        let (next, grad, _, _) = gd_step_mirror(&c, &t, &w, k, 3.0, 4.0, 1.0, 64.0, 6.0);
+        assert!(grad < 0.0);
+        assert!(next < 6.0);
+    }
+
+    #[test]
+    fn gp_posterior_interpolates_observations() {
+        let c = [2.0, 4.0, 8.0];
+        let u = [0.5, 0.9, 0.4];
+        let valid = [1.0, 1.0, 1.0];
+        let grid = [2.0, 4.0, 8.0];
+        let (mu, std) = gp_posterior_mirror(&c, &u, &valid, &grid, 1.5, 1e-4);
+        for i in 0..3 {
+            assert!((mu[i] - u[i]).abs() < 0.02, "mu[{i}]={} u={}", mu[i], u[i]);
+            assert!(std[i] < 0.05, "posterior should be tight at data");
+        }
+    }
+
+    #[test]
+    fn gp_posterior_uncertain_far_from_data() {
+        let c = [2.0, 3.0];
+        let u = [0.5, 0.6];
+        let valid = [1.0, 1.0];
+        let grid = [2.5, 30.0];
+        let (_, std) = gp_posterior_mirror(&c, &u, &valid, &grid, 2.0, 1e-4);
+        assert!(std[0] < 0.3);
+        assert!(std[1] > 0.9, "far point should be prior-dominated");
+    }
+
+    #[test]
+    fn invalid_observations_ignored() {
+        let c = [2.0, 999.0];
+        let u = [0.5, -77.0];
+        let valid = [1.0, 0.0];
+        let grid = [2.0];
+        let (mu, _) = gp_posterior_mirror(&c, &u, &valid, &grid, 2.0, 1e-4);
+        assert!((mu[0] - 0.5).abs() < 0.02, "masked row must not leak");
+    }
+
+    #[test]
+    fn erf_approx_accuracy() {
+        // Known values: erf(0)=0, erf(1)≈0.8427, erf(-1)≈-0.8427.
+        assert!(erf_approx(0.0).abs() < 1e-7);
+        assert!((erf_approx(1.0) - 0.8427008).abs() < 2e-7);
+        assert!((erf_approx(-1.0) + 0.8427008).abs() < 2e-7);
+        assert!((erf_approx(3.0) - 0.9999779).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ei_positive_where_improvement_possible() {
+        let ei_hi = expected_improvement_mirror(1.0, 0.2, 0.5, 0.01);
+        let ei_lo = expected_improvement_mirror(0.1, 0.2, 0.5, 0.01);
+        assert!(ei_hi > ei_lo);
+        assert!(ei_lo >= 0.0);
+        // Zero std, no improvement -> 0.
+        assert_eq!(expected_improvement_mirror(0.4, 0.0, 0.5, 0.01), 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Adaptive concurrency controllers (paper §4).
+//!
+//! A [`ConcurrencyController`] consumes one probe observation per
+//! probing interval — `(concurrency used, mean throughput measured)` —
+//! and emits the next target concurrency. Three implementations:
+//!
+//! * [`gradient::GdController`] — the paper's chosen controller:
+//!   gradient descent on `-U(T, C) = -T/k^C`, executed through the
+//!   `gd_step` XLA artifact (L2 graph + L1 Pallas kernels).
+//! * [`bayesian::BayesController`] — the paper's in-system baseline:
+//!   GP surrogate + expected improvement through the `bayes_step`
+//!   artifact. Loses to GD by ≈20 % (Figure 4) because every surrogate
+//!   miss costs a large concurrency jump and socket churn.
+//! * [`fixed::FixedController`] — static concurrency (what prefetch /
+//!   pysradb do), the baseline of Figures 5–6.
+//!
+//! [`history::ProbeHistory`] is the shared probe ring; [`mirror`] holds
+//! pure-Rust re-implementations of the artifact math used only by
+//! tests to cross-check the XLA path.
+
+pub mod bayesian;
+pub mod fixed;
+pub mod gradient;
+pub mod history;
+pub mod mirror;
+
+pub use bayesian::BayesController;
+pub use fixed::FixedController;
+pub use gradient::GdController;
+pub use history::ProbeHistory;
+
+use crate::config::{OptimizerConfig, OptimizerKind};
+use crate::runtime::SharedRuntime;
+use crate::Result;
+
+/// One probe observation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Probe {
+    /// Concurrency the probe ran at.
+    pub concurrency: f64,
+    /// Mean throughput over the probe window (Mbps).
+    pub mbps: f64,
+}
+
+/// A concurrency controller: Algorithm 1's decision step.
+///
+/// Deliberately **not** `Send`: the PJRT client (and thus the XLA-backed
+/// controllers) lives on the coordinating thread, exactly like the
+/// paper's single optimizer thread. Worker threads never touch the
+/// controller — they observe the [`crate::coordinator::StatusArray`]
+/// it writes through the session driver.
+pub trait ConcurrencyController {
+    /// Consume one probe, return the next target concurrency.
+    fn on_probe(&mut self, probe: Probe) -> Result<usize>;
+
+    /// Current target without new information (initial value).
+    fn current(&self) -> usize;
+
+    /// Display name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Build the controller selected by `cfg.kind`.
+///
+/// `runtime` is required for the adaptive controllers (they execute
+/// XLA artifacts); `Fixed` ignores it.
+pub fn build_controller(
+    cfg: &OptimizerConfig,
+    runtime: Option<SharedRuntime>,
+) -> Result<Box<dyn ConcurrencyController>> {
+    cfg.validate()?;
+    match cfg.kind {
+        OptimizerKind::GradientDescent => {
+            let rt = runtime.ok_or_else(|| {
+                crate::Error::Config("gradient-descent controller needs the XLA runtime".into())
+            })?;
+            Ok(Box::new(GdController::new(cfg.clone(), rt)))
+        }
+        OptimizerKind::Bayesian => {
+            let rt = runtime.ok_or_else(|| {
+                crate::Error::Config("bayesian controller needs the XLA runtime".into())
+            })?;
+            Ok(Box::new(BayesController::new(cfg.clone(), rt)))
+        }
+        OptimizerKind::Fixed => Ok(Box::new(FixedController::new(cfg.fixed_level))),
+    }
+}

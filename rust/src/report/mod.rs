@@ -1,0 +1,143 @@
+//! Result presentation: ASCII tables, ASCII sparkline figures, and CSV
+//! emission under `results/`.
+//!
+//! Every bench prints the paper-shaped rows through [`Table`] and dumps
+//! the raw series through [`write_series_csv`] so figures can be
+//! re-plotted externally. ASCII output is deliberate: the benches run
+//! in CI/terminals, and the paper comparison is about *numbers and
+//! shapes*, not pixels.
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+use crate::Result;
+
+/// Simple column-aligned ASCII table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Render a numeric series as a one-line unicode sparkline (quick
+/// visual of the per-second throughput figures in terminal output).
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+    let span = (hi - lo).max(1e-12);
+    // Downsample to `width` buckets by mean.
+    let bucket = (values.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < values.len() && out.chars().count() < width {
+        let start = i as usize;
+        let end = ((i + bucket) as usize).min(values.len()).max(start + 1);
+        let mean = values[start..end].iter().sum::<f64>() / (end - start) as f64;
+        let idx = (((mean - lo) / span) * (BARS.len() - 1) as f64).round() as usize;
+        out.push(BARS[idx.min(BARS.len() - 1)]);
+        i += bucket;
+    }
+    out
+}
+
+/// Write `(x, series...)` columns to `results/<name>.csv`.
+pub fn write_series_csv(
+    name: &str,
+    columns: &[&str],
+    rows: impl Iterator<Item = Vec<f64>>,
+) -> Result<std::path::PathBuf> {
+    let path = Path::new("results").join(format!("{name}.csv"));
+    let mut w = CsvWriter::create(&path, columns)?;
+    for row in rows {
+        w.write_f64_row(&row)?;
+    }
+    w.flush()?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["Tool", "Speed (Mbps)"]);
+        t.row(vec!["prefetch", "517.70 ± 40.12"]);
+        t.row(vec!["fastbiodl", "989.12 ± 92.35"]);
+        let s = t.render();
+        assert!(s.contains("| Tool      | Speed (Mbps)   |"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines equal width.
+        assert!(lines.iter().all(|l| l.chars().count() == lines[0].chars().count()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only one"]);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], 8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+        assert_eq!(sparkline(&[], 10), "");
+    }
+}

@@ -1,0 +1,307 @@
+//! Artifact manifest parsing and validation.
+//!
+//! `python/compile/aot.py` writes `manifest.json` next to the HLO text
+//! files; this module reads it and checks that (a) every artifact this
+//! crate needs is present, (b) the model constants match the sizes the
+//! Rust controllers were written against, and (c) each file's SHA-256
+//! matches the manifest, so a half-regenerated artifact directory fails
+//! at startup instead of silently mis-executing.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::REQUIRED_ARTIFACTS;
+
+/// Window/grid sizes the Rust side is compiled against. Must equal the
+/// constants in `python/compile/model.py`.
+pub const EXPECTED_WINDOW: usize = 16;
+pub const EXPECTED_GRID: usize = 64;
+pub const EXPECTED_SAMPLES: usize = 256;
+
+/// Constants recorded by the AOT step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConstants {
+    /// Probe-history ring length.
+    pub window: usize,
+    /// Candidate concurrency grid length (Bayesian step).
+    pub grid: usize,
+    /// Raw monitor samples per probe window.
+    pub samples: usize,
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .require("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("tensor shape is not an array".into()))?
+            .iter()
+            .map(|d| {
+                d.as_u64()
+                    .map(|v| v as usize)
+                    .ok_or_else(|| Error::Artifact("non-integer dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .require("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Artifact("dtype is not a string".into()))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug)]
+pub struct ArtifactManifest {
+    pub constants: ModelConstants,
+    pub artifacts: Vec<ArtifactSpec>,
+    dir: std::path::PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Read and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let j = Json::parse(&text)?;
+
+        let format = j.require("format")?.as_str().unwrap_or_default();
+        if format != "hlo-text-v1" {
+            return Err(Error::Artifact(format!(
+                "unsupported artifact format '{format}' (expected hlo-text-v1)"
+            )));
+        }
+
+        let consts = j.require("constants")?;
+        let get_const = |k: &str| -> Result<usize> {
+            consts
+                .require(k)?
+                .as_u64()
+                .map(|v| v as usize)
+                .ok_or_else(|| Error::Artifact(format!("constant '{k}' is not an integer")))
+        };
+        let constants = ModelConstants {
+            window: get_const("window")?,
+            grid: get_const("grid")?,
+            samples: get_const("samples")?,
+        };
+
+        let arts = j
+            .require("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("'artifacts' is not an object".into()))?;
+        let mut artifacts = Vec::new();
+        for (name, entry) in arts {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .require(key)?
+                    .as_arr()
+                    .ok_or_else(|| Error::Artifact(format!("'{key}' is not an array")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: entry
+                    .require("file")?
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("'file' is not a string".into()))?
+                    .to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                sha256: entry
+                    .require("sha256")?
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+
+        Ok(ArtifactManifest {
+            constants,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Check completeness, constant agreement, and file hashes.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.constants;
+        if c.window != EXPECTED_WINDOW || c.grid != EXPECTED_GRID || c.samples != EXPECTED_SAMPLES
+        {
+            return Err(Error::Artifact(format!(
+                "artifact constants {c:?} do not match this build \
+                 (window={EXPECTED_WINDOW}, grid={EXPECTED_GRID}, samples={EXPECTED_SAMPLES}); \
+                 re-run `make artifacts`"
+            )));
+        }
+        for required in REQUIRED_ARTIFACTS {
+            let spec = self.spec(required)?;
+            let path = self.dir.join(&spec.file);
+            let text = std::fs::read_to_string(&path).map_err(|e| {
+                Error::Artifact(format!("cannot read {}: {e}", path.display()))
+            })?;
+            let digest = sha256_hex(text.as_bytes());
+            if !spec.sha256.is_empty() && digest != spec.sha256 {
+                return Err(Error::Artifact(format!(
+                    "{} content hash mismatch (manifest {}, file {}); artifact dir is stale — \
+                     re-run `make artifacts`",
+                    spec.file,
+                    &spec.sha256[..12.min(spec.sha256.len())],
+                    &digest[..12],
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up one artifact's spec by name.
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "artifact '{name}' missing from manifest — re-run `make artifacts`"
+                ))
+            })
+    }
+}
+
+/// Pure-Rust SHA-256 (FIPS 180-4). Only used at startup for artifact
+/// integrity; ~1 MB of HLO text hashes in well under a millisecond.
+pub fn sha256_hex(data: &[u8]) -> String {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+        0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+        0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+        0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+        0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+        0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+        0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+        0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+        0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let bitlen = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+
+    let mut w = [0u32; 64];
+    for chunk in msg.chunks_exact(64) {
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes(chunk[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // Multi-block message (>64 bytes).
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec {
+            shape: vec![64, 64],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.elements(), 4096);
+        let scalar = TensorSpec {
+            shape: vec![],
+            dtype: "float32".into(),
+        };
+        assert_eq!(scalar.elements(), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! One compiled artifact: HLO text → PJRT executable → typed execute.
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::artifacts::ArtifactSpec;
+
+/// A single compiled HLO artifact plus its manifest spec (for shape
+/// checking at the call boundary).
+pub struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl CompiledArtifact {
+    /// Parse `<dir>/<spec.file>` as HLO text and compile it on `client`.
+    pub fn compile(
+        client: &xla::PjRtClient,
+        dir: &Path,
+        spec: &ArtifactSpec,
+    ) -> Result<CompiledArtifact> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-UTF-8 path {}", path.display())))?,
+        )
+        .map_err(|e| {
+            Error::Artifact(format!("failed to parse {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compiling {}: {e}", spec.name)))?;
+        Ok(CompiledArtifact {
+            exe,
+            spec: spec.clone(),
+        })
+    }
+
+    /// Artifact name (diagnostics).
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Execute with f32 slices as inputs; returns the flattened f32
+    /// contents of the (single) output tensor.
+    ///
+    /// Input lengths are checked against the manifest spec before the
+    /// PJRT call so a drifted caller fails with a precise message rather
+    /// than an opaque XLA shape error.
+    pub fn execute(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Xla(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, tspec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if data.len() != tspec.elements() {
+                return Err(Error::Xla(format!(
+                    "{}: input {i} has {} elements, artifact expects {} (shape {:?})",
+                    self.spec.name,
+                    data.len(),
+                    tspec.elements(),
+                    tspec.shape
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            // Reshape 1-D host data to the artifact's logical shape when
+            // it is not rank-1 (e.g. the f32[G,G] utility surface output
+            // has rank-2 *inputs* only in future artifacts; today only
+            // rank-1 inputs exist, but keep this general).
+            let lit = if tspec.shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Xla(format!("{}: empty result", self.spec.name)))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let inner = out.to_tuple1()?;
+        let values = inner.to_vec::<f32>()?;
+        let expected: usize = self.spec.outputs.iter().map(|o| o.elements()).sum();
+        if values.len() != expected {
+            return Err(Error::Xla(format!(
+                "{}: output has {} elements, manifest says {}",
+                self.spec.name,
+                values.len(),
+                expected
+            )));
+        }
+        Ok(values)
+    }
+}

@@ -1,0 +1,162 @@
+//! XLA/PJRT runtime bridge.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest.json`), compiles each once on the
+//! PJRT CPU client at startup, and exposes typed entry points the
+//! optimizer loop calls every probing interval. Python never runs here —
+//! the artifacts are plain HLO text and the `xla` crate executes them
+//! natively (see `/opt/xla-example/load_hlo/` for the reference wiring).
+//!
+//! Compilation happens exactly once per artifact; execution from the hot
+//! path is lock-free reads of the compiled executable plus one
+//! host-literal round trip (microseconds against a 3–5 s probing
+//! interval — see EXPERIMENTS.md §Perf for measurements).
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec, ModelConstants};
+pub use executable::CompiledArtifact;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+/// Names of the artifacts the runtime requires (must match
+/// `compile.model.artifact_specs()` on the Python side).
+pub const REQUIRED_ARTIFACTS: [&str; 4] = [
+    "gd_step",
+    "bayes_step",
+    "throughput_window",
+    "utility_surface",
+];
+
+/// The loaded runtime: one PJRT client plus every compiled artifact.
+///
+/// `XlaRuntime` is cheap to share (`Arc` internally) and thread-safe for
+/// execution: PJRT CPU executions are internally synchronized, and each
+/// call builds its own input literals.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    gd_step: CompiledArtifact,
+    bayes_step: CompiledArtifact,
+    throughput_window: CompiledArtifact,
+    utility_surface: CompiledArtifact,
+}
+
+/// Shared handle used across coordinator threads.
+pub type SharedRuntime = Arc<XlaRuntime>;
+
+impl XlaRuntime {
+    /// Load and compile every artifact from `dir` (e.g. `artifacts/`).
+    ///
+    /// Fails fast if the manifest is missing, its constants disagree with
+    /// this crate's compiled-in expectations, any artifact file is
+    /// missing, or its content hash differs from the manifest entry.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = ArtifactManifest::load(dir)?;
+        manifest.validate()?;
+
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<CompiledArtifact> {
+            let spec = manifest.spec(name)?;
+            CompiledArtifact::compile(&client, dir, spec)
+        };
+        Ok(XlaRuntime {
+            gd_step: compile("gd_step")?,
+            bayes_step: compile("bayes_step")?,
+            throughput_window: compile("throughput_window")?,
+            utility_surface: compile("utility_surface")?,
+            manifest,
+            client,
+        })
+    }
+
+    /// Locate the artifact directory: `$FASTBIODL_ARTIFACTS`, else
+    /// `./artifacts`, else `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("FASTBIODL_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("manifest.json").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load from [`XlaRuntime::default_dir`].
+    pub fn load_default() -> Result<XlaRuntime> {
+        let dir = Self::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return Err(Error::Artifact(format!(
+                "artifact manifest not found at {} — run `make artifacts` first",
+                dir.display()
+            )));
+        }
+        Self::load(&dir)
+    }
+
+    /// Model constants the artifacts were lowered with.
+    pub fn constants(&self) -> &ModelConstants {
+        &self.manifest.constants
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// One gradient-descent step. See `compile.model.gd_step` for the
+    /// slot layout; returns `[next_c, grad, step, u_mean]`.
+    pub fn gd_step(
+        &self,
+        c_hist: &[f32],
+        t_hist: &[f32],
+        weights: &[f32],
+        params: &[f32; 8],
+    ) -> Result<Vec<f32>> {
+        self.gd_step.execute(&[c_hist, t_hist, weights, params])
+    }
+
+    /// One Bayesian-optimization step. Returns
+    /// `[mu(G) | std(G) | ei(G) | best_idx | next_c]`.
+    pub fn bayes_step(
+        &self,
+        c_obs: &[f32],
+        t_obs: &[f32],
+        valid: &[f32],
+        grid: &[f32],
+        params: &[f32; 8],
+    ) -> Result<Vec<f32>> {
+        self.bayes_step
+            .execute(&[c_obs, t_obs, valid, grid, params])
+    }
+
+    /// Aggregate one probe window of raw throughput samples. Returns
+    /// `[count, mean, std, min, max, wmean]`.
+    pub fn throughput_window(
+        &self,
+        samples: &[f32],
+        valid: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.throughput_window.execute(&[samples, valid, weights])
+    }
+
+    /// Full utility surface `U[i,j] = t[i] / k^c[j]`, row-major `G*G`.
+    pub fn utility_surface(&self, t_grid: &[f32], c_grid: &[f32], k: f32) -> Result<Vec<f32>> {
+        self.utility_surface.execute(&[t_grid, c_grid, &[k]])
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("constants", &self.manifest.constants)
+            .finish()
+    }
+}

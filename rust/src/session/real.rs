@@ -1,0 +1,357 @@
+//! Real-socket session driver: Algorithm 1 over actual HTTP.
+//!
+//! Thread layout (exactly the paper's architecture, Figure 3):
+//!
+//! * the **calling thread** runs the optimizer loop — it owns the
+//!   controller (and through it the PJRT runtime, which is not `Send`),
+//!   samples the shared throughput recorder at the monitor cadence,
+//!   aggregates each probe window through the `throughput_window`
+//!   artifact, and writes the new target into the shared
+//!   [`StatusArray`];
+//! * `c_max` **worker threads** each own one HTTP connection; between
+//!   chunks they poll their status slot — parked workers drop their
+//!   connection (that *is* the concurrency change), running workers
+//!   pull the next chunk from the mutex-guarded scheduler and stream
+//!   it, feeding byte counts into the recorder from the read callback.
+//!
+//! The scheduler mutex is touched once per chunk (32 MiB default), i.e.
+//! a few times per second across all workers — contention-free in
+//! practice; the byte hot path is atomics only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::accession::RunRecord;
+use crate::config::DownloadConfig;
+use crate::coordinator::pool::StatusArray;
+use crate::coordinator::probe::ProbeWindow;
+use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
+use crate::metrics::recorder::ThroughputRecorder;
+use crate::metrics::timeline::per_second_bins;
+use crate::optimizer::{ConcurrencyController, Probe};
+use crate::runtime::XlaRuntime;
+use crate::session::SessionReport;
+use crate::transport::http_client::HttpConnection;
+use crate::{Error, Result};
+
+/// Where downloaded bytes go.
+#[derive(Clone, Debug)]
+pub enum Sink {
+    /// Count but discard (benchmarks).
+    Discard,
+    /// Write files under this directory (named by accession).
+    Directory(String),
+}
+
+/// Parameters for a real transfer.
+pub struct RealSessionParams<'a> {
+    pub download: DownloadConfig,
+    pub records: Vec<RunRecord>,
+    pub controller: Box<dyn ConcurrencyController + 'a>,
+    pub runtime: Option<&'a XlaRuntime>,
+    pub sink: Sink,
+    /// Tool label for the report.
+    pub name: String,
+}
+
+struct WorkerShared {
+    scheduler: Mutex<ChunkScheduler>,
+    status: StatusArray,
+    recorder: ThroughputRecorder,
+    records: Vec<RunRecord>,
+    in_flight: AtomicUsize,
+    sink: Sink,
+    /// First worker error (the session fails loudly, not silently).
+    first_error: Mutex<Option<Error>>,
+}
+
+/// Run a real-socket transfer to completion.
+pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> {
+    params.download.validate()?;
+    if params.records.is_empty() {
+        return Err(Error::Session("no files to download".into()));
+    }
+    // Resume: pick up a prior journal's frontiers when writing to a
+    // directory; files already (partially) on disk are not re-fetched.
+    let mut done_prefix: Option<Vec<u64>> = None;
+    if let Sink::Directory(dir) = &params.sink {
+        std::fs::create_dir_all(dir)?;
+        let dirp = std::path::Path::new(dir);
+        if let Some(journal) = crate::coordinator::resume::ProgressJournal::load(dirp)? {
+            let frontiers = journal.frontiers_for(&params.records);
+            if frontiers.iter().any(|&f| f > 0) {
+                log::info!(
+                    "resuming: {} bytes already on disk",
+                    frontiers.iter().sum::<u64>()
+                );
+                done_prefix = Some(frontiers);
+            }
+        }
+        // Pre-size the output files so workers can write ranges
+        // without coordinating. Existing files keep their contents
+        // (set_len only extends/truncates to the expected size).
+        for r in &params.records {
+            let path = dirp.join(&r.accession);
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .truncate(false)
+                .write(true)
+                .open(&path)?;
+            f.set_len(r.bytes)?;
+        }
+    }
+
+    let mode = SchedulerMode::Chunked {
+        chunk_bytes: params.download.chunk_bytes,
+        max_open_files: params.download.max_open_files,
+    };
+    let capacity = params.download.optimizer.c_max;
+    let shared = Arc::new(WorkerShared {
+        scheduler: Mutex::new(ChunkScheduler::new_with_progress(
+            &params.records,
+            mode,
+            done_prefix.as_deref(),
+        )),
+        status: StatusArray::new(capacity),
+        recorder: ThroughputRecorder::new(),
+        records: params.records.clone(),
+        in_flight: AtomicUsize::new(0),
+        sink: params.sink.clone(),
+        first_error: Mutex::new(None),
+    });
+
+    // --- Spawn workers. ---
+    let mut handles = Vec::with_capacity(capacity);
+    for i in 0..capacity {
+        let ws = shared.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("dl-worker-{i}"))
+                .spawn(move || worker_loop(i, &ws))
+                .map_err(|e| Error::Session(format!("spawn worker {i}: {e}")))?,
+        );
+    }
+
+    // --- Optimizer loop (Algorithm 1) on this thread. ---
+    let mut controller = params.controller;
+    let mut window = ProbeWindow::new(
+        params.runtime.map(|r| r.constants().samples).unwrap_or(256),
+        0.98,
+    );
+    let start = Instant::now();
+    let mut target = shared.status.set_target(controller.current());
+    let mut trace = vec![(0.0, target)];
+    let sample_dt = Duration::from_secs_f64(1.0 / params.download.monitor_hz);
+    let probe_dt = Duration::from_secs_f64(params.download.optimizer.probe_interval_s);
+    let mut next_sample = start + sample_dt;
+    let mut next_probe = start + probe_dt;
+    let mut probes = 0usize;
+    let mut target_time = 0.0f64;
+    let mut last_tick = start;
+    let timeout = if params.download.timeout_s > 0.0 {
+        Duration::from_secs_f64(params.download.timeout_s)
+    } else {
+        Duration::from_secs(24 * 3600)
+    };
+
+    let result: Result<()> = loop {
+        if shared.scheduler.lock().unwrap().all_done() {
+            break Ok(());
+        }
+        if let Some(err) = shared.first_error.lock().unwrap().take() {
+            break Err(err);
+        }
+        if start.elapsed() > timeout {
+            break Err(Error::Session(format!(
+                "transfer timed out after {:.0?}",
+                timeout
+            )));
+        }
+        let now = Instant::now();
+        target_time += target as f64 * now.duration_since(last_tick).as_secs_f64();
+        last_tick = now;
+        if now >= next_sample {
+            let t = start.elapsed().as_secs_f64();
+            let active = shared.in_flight.load(Ordering::Relaxed);
+            let mbps = shared.recorder.sample(t, active);
+            window.push(mbps);
+            next_sample += sample_dt;
+        }
+        if now >= next_probe {
+            let stats = match params.runtime {
+                Some(rt) => window.aggregate_and_reset(rt)?,
+                None => {
+                    let s = window.aggregate_mirror();
+                    window = ProbeWindow::new(256, 0.98);
+                    s
+                }
+            };
+            probes += 1;
+            let new_target = controller.on_probe(Probe {
+                concurrency: target as f64,
+                mbps: stats.mean_mbps,
+            })?;
+            if new_target != target {
+                target = shared.status.set_target(new_target);
+                trace.push((start.elapsed().as_secs_f64(), target));
+            }
+            // Persist resume state once per probe interval.
+            if let Sink::Directory(dir) = &params.sink {
+                let frontiers = shared.scheduler.lock().unwrap().frontiers();
+                let journal = crate::coordinator::resume::ProgressJournal::capture(
+                    &params.records,
+                    &frontiers,
+                    params.download.chunk_bytes,
+                );
+                // Journal failures must not kill the transfer.
+                if let Err(e) = journal.save(std::path::Path::new(dir)) {
+                    log::warn!("journal save failed: {e}");
+                }
+            }
+            next_probe += probe_dt;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+
+    // Algorithm 1 line 9: stop workers, then join.
+    shared.status.stop_all();
+    for h in handles {
+        let _ = h.join();
+    }
+    result?;
+    if let Sink::Directory(dir) = &params.sink {
+        // Transfer complete: the journal is obsolete.
+        crate::coordinator::resume::ProgressJournal::remove(std::path::Path::new(dir))?;
+    }
+
+    let duration = start.elapsed().as_secs_f64().max(f64::EPSILON);
+    let samples = shared.recorder.samples();
+    let timeline = per_second_bins(&samples);
+    let total_bytes = shared.recorder.total_bytes();
+    let files_completed = shared.scheduler.lock().unwrap().files_completed();
+    Ok(SessionReport {
+        tool: params.name,
+        duration_s: duration,
+        total_bytes,
+        mean_throughput_mbps: total_bytes as f64 * 8.0 / 1e6 / duration,
+        mean_concurrency: target_time / duration,
+        mean_inflight: shared.recorder.mean_concurrency(),
+        peak_mbps: timeline.peak(),
+        timeline,
+        samples,
+        concurrency_trace: trace,
+        probes,
+        files_completed,
+    })
+}
+
+/// One worker thread: poll status → pull chunk → stream it.
+fn worker_loop(index: usize, shared: &WorkerShared) {
+    let mut conn: Option<HttpConnection> = None;
+    loop {
+        if shared.status.is_stopped(index) {
+            return;
+        }
+        if !shared.status.is_running(index) {
+            // Parked: drop the connection (this is what "reducing
+            // concurrency" means at the socket level) and wait.
+            conn = None;
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        // Pull work.
+        let chunk = {
+            let mut sched = shared.scheduler.lock().unwrap();
+            sched.next_chunk()
+        };
+        let Some(chunk) = chunk else {
+            if shared.scheduler.lock().unwrap().all_done() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        };
+
+        shared.in_flight.fetch_add(1, Ordering::Relaxed);
+        let outcome = stream_chunk(&mut conn, shared, &chunk);
+        shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+
+        match outcome {
+            Ok(()) => {
+                shared.scheduler.lock().unwrap().chunk_done(&chunk);
+            }
+            Err(e) => {
+                // Requeue and reconnect; record the first hard error.
+                conn = None;
+                let mut sched = shared.scheduler.lock().unwrap();
+                sched.chunk_failed(chunk);
+                drop(sched);
+                let mut slot = shared.first_error.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Stream one chunk over the worker's (possibly new) connection.
+fn stream_chunk(
+    conn: &mut Option<HttpConnection>,
+    shared: &WorkerShared,
+    chunk: &Chunk,
+) -> Result<()> {
+    let record = &shared.records[chunk.file];
+    let (host, port, path) = HttpConnection::split_url(&record.url)?;
+    if conn.is_none() {
+        *conn = Some(HttpConnection::connect(
+            &host,
+            port,
+            Duration::from_secs(10),
+        )?);
+    }
+    let c = conn.as_mut().unwrap();
+
+    // Output plumbing.
+    let mut file = match &shared.sink {
+        Sink::Discard => None,
+        Sink::Directory(dir) => {
+            use std::io::{Seek, SeekFrom};
+            let path = std::path::Path::new(dir).join(&record.accession);
+            let mut f = std::fs::OpenOptions::new().write(true).open(&path)?;
+            f.seek(SeekFrom::Start(chunk.offset))?;
+            Some(f)
+        }
+    };
+
+    let range = if chunk.offset == 0 && chunk.len == record.bytes {
+        None // whole file
+    } else {
+        Some((chunk.offset, chunk.len))
+    };
+    let mut written: u64 = 0;
+    let resp = c.get_range(&path, range, |block| {
+        shared.recorder.add_bytes(block.len() as u64);
+        written += block.len() as u64;
+        if let Some(f) = &mut file {
+            use std::io::Write;
+            // Errors surface through the length check below.
+            let _ = f.write_all(block);
+        }
+    })?;
+    if !(resp.status == 200 || resp.status == 206) {
+        return Err(Error::Transport(format!(
+            "GET {path} range {:?}: HTTP {}",
+            range, resp.status
+        )));
+    }
+    if written != chunk.len {
+        return Err(Error::Transport(format!(
+            "GET {path}: short body {written} of {} bytes",
+            chunk.len
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,320 @@
+//! Virtual-time session driver.
+//!
+//! Runs a complete transfer against the [`crate::netsim`] engine:
+//! resolution → chunk scheduling → a worker-slot pool reconciled
+//! against the Algorithm 1 status array → monitor sampling → probing
+//! optimizer loop → completion. Wall-clock cost is microseconds per
+//! simulated second; determinism is total given `(params, seed)`.
+//!
+//! The per-tool behavioural differences (DESIGN.md §2) are all
+//! expressed as [`ToolBehavior`] fields, so FastBioDL and the baselines
+//! run through *identical* machinery and differ only in policy:
+//! scheduling granularity, connection reuse, resolution cost, and the
+//! concurrency controller.
+
+use crate::accession::resolver::ResolutionCost;
+use crate::accession::RunRecord;
+use crate::config::DownloadConfig;
+use crate::coordinator::pool::StatusArray;
+use crate::coordinator::probe::ProbeWindow;
+use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
+use crate::metrics::recorder::ThroughputRecorder;
+use crate::metrics::timeline::per_second_bins;
+use crate::netsim::{FlowId, NetSim, NetSimConfig};
+use crate::optimizer::{ConcurrencyController, Probe};
+use crate::runtime::XlaRuntime;
+use crate::session::SessionReport;
+use crate::{Error, Result};
+
+/// Tool-level behaviour knobs (what distinguishes FastBioDL from the
+/// baseline tools besides the controller).
+#[derive(Clone, Debug)]
+pub struct ToolBehavior {
+    /// Display label.
+    pub name: String,
+    /// Range-chunked vs whole-file requests.
+    pub mode: SchedulerMode,
+    /// Reuse connections across requests (keep-alive). Baselines open
+    /// a fresh connection per file.
+    pub keep_alive: bool,
+    /// Metadata resolution cost model.
+    pub resolution: ResolutionCost,
+}
+
+impl ToolBehavior {
+    /// FastBioDL: chunked, keep-alive, batch resolution (paper §4).
+    pub fn fastbiodl(cfg: &DownloadConfig) -> ToolBehavior {
+        ToolBehavior {
+            name: "fastbiodl".into(),
+            mode: SchedulerMode::Chunked {
+                chunk_bytes: cfg.chunk_bytes,
+                max_open_files: cfg.max_open_files,
+            },
+            keep_alive: true,
+            resolution: ResolutionCost::Batch { latency_s: 1.5 },
+        }
+    }
+}
+
+/// Everything a simulated session needs.
+pub struct SimSessionParams<'a> {
+    pub download: DownloadConfig,
+    pub behavior: ToolBehavior,
+    pub netsim: NetSimConfig,
+    pub records: Vec<RunRecord>,
+    /// Controller (already built for the tool's policy).
+    pub controller: Box<dyn ConcurrencyController + 'a>,
+    /// XLA runtime for probe aggregation (None → pure-Rust mirror;
+    /// adaptive controllers carry their own runtime handle for the
+    /// decision step regardless).
+    pub runtime: Option<&'a XlaRuntime>,
+    pub seed: u64,
+}
+
+/// Per-worker-slot state.
+#[derive(Debug, Default)]
+struct WorkerSlot {
+    flow: Option<FlowId>,
+    chunk: Option<Chunk>,
+    /// Chunk assigned but request not yet issued (serialized resolution
+    /// or connection still in setup); issue when `now >= wait_until`.
+    wait_until: f64,
+    /// Request currently in flight.
+    in_flight: bool,
+}
+
+/// The driver.
+pub struct SimSession<'a> {
+    params: SimSessionParams<'a>,
+}
+
+impl<'a> SimSession<'a> {
+    pub fn new(params: SimSessionParams<'a>) -> SimSession<'a> {
+        SimSession { params }
+    }
+
+    /// Run to completion; returns the report.
+    pub fn run(mut self) -> Result<SessionReport> {
+        let p = &mut self.params;
+        p.download.validate()?;
+        let mut sim = NetSim::new(p.netsim.clone(), p.seed)?;
+        let mut sched = ChunkScheduler::new(&p.records, p.behavior.mode);
+        let capacity = p.download.optimizer.c_max;
+        let status = StatusArray::new(capacity);
+        let recorder = ThroughputRecorder::new();
+        let mut window = ProbeWindow::new(
+            p.runtime.map(|r| r.constants().samples).unwrap_or(256),
+            0.98,
+        );
+        let mut slots: Vec<WorkerSlot> = (0..capacity).map(|_| WorkerSlot::default()).collect();
+
+        // Metadata resolution: batch pays upfront; serialized pays per
+        // cold file via `res_free`.
+        let upfront = p.behavior.resolution.upfront_latency(p.records.len());
+        while sim.now() < upfront {
+            sim.step(None);
+        }
+        let mut res_free = sim.now();
+
+        let mut target = status.set_target(p.controller.current());
+        let mut trace = vec![(sim.now(), target)];
+        let start = sim.now();
+        let sample_dt = 1.0 / p.download.monitor_hz;
+        let probe_dt = p.download.optimizer.probe_interval_s;
+        let mut next_sample = start + sample_dt;
+        let mut next_probe = start + probe_dt;
+        let mut probes = 0usize;
+        // Time-weighted target integral for the paper's Concurrency column.
+        let mut target_time = 0.0f64;
+        let hard_timeout = if p.download.timeout_s > 0.0 {
+            p.download.timeout_s
+        } else {
+            48.0 * 3600.0
+        };
+
+        while !sched.all_done() {
+            let now = sim.now();
+            if now - start > hard_timeout {
+                status.stop_all();
+                return Err(Error::Session(format!(
+                    "transfer timed out after {:.0}s (delivered {}/{} bytes)",
+                    now - start,
+                    sched.progress().0,
+                    sched.progress().1
+                )));
+            }
+
+            // --- Reconcile worker slots against the status array. ---
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let running = status.is_running(i);
+                if running && slot.flow.is_none() {
+                    // Bring the worker up: open its connection.
+                    if sim.open_flows() < sim.config().server.max_connections {
+                        slot.flow = Some(sim.open_flow()?);
+                    }
+                } else if !running && !slot.in_flight {
+                    // Parked and drained: release the connection.
+                    if let Some(f) = slot.flow.take() {
+                        sim.close_flow(f);
+                    }
+                    slot.chunk = None;
+                }
+            }
+
+            // --- Assign work to ready workers. ---
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if !status.is_running(i) || slot.in_flight {
+                    continue;
+                }
+                let Some(flow) = slot.flow else { continue };
+                if !sim.flow_ready(flow) {
+                    continue; // still in handshake
+                }
+                if slot.chunk.is_none() {
+                    // Pull the next chunk, charging serialized
+                    // resolution for cold files where applicable.
+                    let per_file = p.behavior.resolution.per_file_latency();
+                    if let Some(chunk) = sched.next_chunk() {
+                        let mut wait = now;
+                        if chunk.cold && per_file > 0.0 {
+                            let begin = res_free.max(now);
+                            res_free = begin + per_file;
+                            wait = begin + per_file;
+                        }
+                        slot.wait_until = wait;
+                        slot.chunk = Some(chunk);
+                    }
+                }
+                if let Some(chunk) = &slot.chunk {
+                    if now >= slot.wait_until {
+                        sim.begin_request(flow, chunk.len as f64, chunk.cold, i as u64)?;
+                        slot.in_flight = true;
+                    }
+                }
+            }
+
+            sim.set_open_files(sched.open_files());
+
+            // --- Advance the world. ---
+            let t_before = sim.now();
+            let rep = sim.step(None);
+            target_time += target as f64 * (rep.now_s - t_before);
+
+            // --- Account deliveries. ---
+            for ev in &rep.events {
+                if ev.failed {
+                    // Injected connection reset: requeue the remaining
+                    // work and drop the dead connection; the reconcile
+                    // pass reopens one next step.
+                    if let Some(slot) = slots.iter_mut().find(|s| s.flow == Some(ev.id)) {
+                        if let Some(chunk) = slot.chunk.take() {
+                            // Bytes already delivered for this chunk are
+                            // counted; re-download the whole chunk (range
+                            // requests restart cleanly at chunk grain).
+                            sched.chunk_failed(chunk);
+                        }
+                        slot.in_flight = false;
+                        slot.flow = None;
+                    }
+                    continue;
+                }
+                if ev.bytes <= 0.0 && !ev.request_done {
+                    continue;
+                }
+                recorder.add_bytes(ev.bytes as u64);
+                if ev.request_done {
+                    // Which slot owns this flow?
+                    if let Some(slot) = slots.iter_mut().find(|s| s.flow == Some(ev.id)) {
+                        let chunk = slot
+                            .chunk
+                            .take()
+                            .expect("request completed with no chunk assigned");
+                        sched.chunk_done(&chunk);
+                        slot.in_flight = false;
+                        if !p.behavior.keep_alive {
+                            // Baselines: fresh connection per request.
+                            sim.close_flow(ev.id);
+                            slot.flow = None;
+                        }
+                    }
+                }
+            }
+
+            let now = rep.now_s;
+
+            // --- Monitor sampling. ---
+            if now >= next_sample {
+                let active = slots.iter().filter(|s| s.in_flight).count();
+                let mbps = recorder.sample(now - start, active);
+                window.push(mbps);
+                next_sample += sample_dt;
+            }
+
+            // --- Probing optimizer loop (Algorithm 1 body). ---
+            if now >= next_probe {
+                let stats = match p.runtime {
+                    Some(rt) => window.aggregate_and_reset(rt)?,
+                    None => {
+                        let s = window.aggregate_mirror();
+                        window = ProbeWindow::new(256, 0.98);
+                        s
+                    }
+                };
+                probes += 1;
+                let new_target = p.controller.on_probe(Probe {
+                    concurrency: target as f64,
+                    mbps: stats.mean_mbps,
+                })?;
+                if new_target != target {
+                    target = status.set_target(new_target);
+                    trace.push((now - start, target));
+                }
+                next_probe += probe_dt;
+            }
+        }
+
+        // Algorithm 1 line 9.
+        status.stop_all();
+
+        let duration = (sim.now() - start).max(f64::EPSILON);
+        let samples = recorder.samples();
+        let timeline = per_second_bins(&samples);
+        let total_bytes = recorder.total_bytes();
+        Ok(SessionReport {
+            tool: p.behavior.name.clone(),
+            duration_s: duration,
+            total_bytes,
+            mean_throughput_mbps: total_bytes as f64 * 8.0 / 1e6 / duration,
+            mean_concurrency: target_time / duration,
+            mean_inflight: recorder.mean_concurrency(),
+            peak_mbps: timeline.peak(),
+            timeline,
+            samples,
+            concurrency_trace: trace,
+            probes,
+            files_completed: sched.files_completed(),
+        })
+    }
+}
+
+/// Convenience wrapper: run FastBioDL (adaptive GD) over a record list
+/// on a scenario profile. Used by the quickstart example and the CLI.
+pub fn run_simulated_download(
+    cfg: &DownloadConfig,
+    netsim: &NetSimConfig,
+    records: Vec<RunRecord>,
+    runtime: crate::runtime::SharedRuntime,
+    seed: u64,
+) -> Result<SessionReport> {
+    let controller = crate::optimizer::build_controller(&cfg.optimizer, Some(runtime.clone()))?;
+    let params = SimSessionParams {
+        download: cfg.clone(),
+        behavior: ToolBehavior::fastbiodl(cfg),
+        netsim: netsim.clone(),
+        records,
+        controller,
+        runtime: Some(&runtime),
+        seed,
+    };
+    SimSession::new(params).run()
+}

@@ -1,0 +1,200 @@
+//! Minimal blocking HTTP/1.1 client with persistent connections and
+//! range requests — the real-socket worker's data path.
+//!
+//! Scope: exactly what the download workers need. `GET` with `Range`,
+//! status + header parsing, content-length-delimited bodies streamed
+//! through a caller callback (which feeds the throughput recorder),
+//! keep-alive reuse. No TLS (loopback test server), no chunked
+//! transfer-encoding (the server always sends Content-Length), no
+//! redirects (the resolver produces final URLs).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::{Error, Result};
+
+/// Parsed response head.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_length: u64,
+    /// `Content-Range` start byte (for 206 responses).
+    pub range_start: Option<u64>,
+}
+
+/// A persistent connection to one host.
+pub struct HttpConnection {
+    host: String,
+    port: u16,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Requests issued over this connection (diagnostics).
+    pub requests: u64,
+}
+
+impl HttpConnection {
+    /// Connect to `host:port` (no TLS).
+    pub fn connect(host: &str, port: u16, timeout: Duration) -> Result<HttpConnection> {
+        let addr = format!("{host}:{port}");
+        let sock_addr: std::net::SocketAddr = addr
+            .parse()
+            .map_err(|e| Error::Transport(format!("bad address {addr}: {e}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .map_err(|e| Error::Transport(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(HttpConnection {
+            host: host.to_string(),
+            port,
+            reader: BufReader::with_capacity(256 * 1024, stream.try_clone()?),
+            writer: stream,
+            requests: 0,
+        })
+    }
+
+    /// Parse `http://127.0.0.1:8080/path` into (host, port, path).
+    pub fn split_url(url: &str) -> Result<(String, u16, String)> {
+        let rest = url
+            .strip_prefix("http://")
+            .ok_or_else(|| Error::Transport(format!("only http:// URLs supported: {url}")))?;
+        let (hostport, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, "/"),
+        };
+        let (host, port) = match hostport.rsplit_once(':') {
+            Some((h, p)) => (
+                h.to_string(),
+                p.parse::<u16>()
+                    .map_err(|_| Error::Transport(format!("bad port in {url}")))?,
+            ),
+            None => (hostport.to_string(), 80),
+        };
+        Ok((host, port, path.to_string()))
+    }
+
+    /// Issue a GET for `path` with an optional byte range
+    /// (`offset..offset+len`), streaming the body in blocks to
+    /// `on_block(&bytes)`. Returns the response head.
+    pub fn get_range(
+        &mut self,
+        path: &str,
+        range: Option<(u64, u64)>,
+        mut on_block: impl FnMut(&[u8]),
+    ) -> Result<HttpResponse> {
+        let mut req = format!("GET {path} HTTP/1.1\r\nHost: {}:{}\r\n", self.host, self.port);
+        if let Some((offset, len)) = range {
+            debug_assert!(len > 0);
+            req.push_str(&format!(
+                "Range: bytes={}-{}\r\n",
+                offset,
+                offset + len - 1
+            ));
+        }
+        req.push_str("Connection: keep-alive\r\n\r\n");
+        self.writer
+            .write_all(req.as_bytes())
+            .map_err(|e| Error::Transport(format!("send request: {e}")))?;
+        self.requests += 1;
+
+        // --- Status line. ---
+        let mut line = String::new();
+        self.reader
+            .read_line(&mut line)
+            .map_err(|e| Error::Transport(format!("read status: {e}")))?;
+        if line.is_empty() {
+            return Err(Error::Transport("server closed connection".into()));
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Transport(format!("bad status line {line:?}")))?;
+
+        // --- Headers. ---
+        let mut content_length: Option<u64> = None;
+        let mut range_start = None;
+        loop {
+            let mut h = String::new();
+            self.reader
+                .read_line(&mut h)
+                .map_err(|e| Error::Transport(format!("read header: {e}")))?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim();
+                if k == "content-length" {
+                    content_length = v.parse().ok();
+                } else if k == "content-range" {
+                    // bytes START-END/TOTAL
+                    range_start = v
+                        .strip_prefix("bytes ")
+                        .and_then(|s| s.split('-').next())
+                        .and_then(|s| s.parse().ok());
+                }
+            }
+        }
+        let content_length = content_length
+            .ok_or_else(|| Error::Transport("response without Content-Length".into()))?;
+
+        if !(status == 200 || status == 206) {
+            // Drain the error body so the connection stays usable.
+            let mut remaining = content_length;
+            let mut sink = [0u8; 4096];
+            while remaining > 0 {
+                let take = (sink.len() as u64).min(remaining) as usize;
+                self.reader
+                    .read_exact(&mut sink[..take])
+                    .map_err(|e| Error::Transport(format!("drain error body: {e}")))?;
+                remaining -= take as u64;
+            }
+            return Ok(HttpResponse {
+                status,
+                content_length,
+                range_start,
+            });
+        }
+
+        // --- Body. ---
+        let mut remaining = content_length;
+        let mut buf = vec![0u8; 256 * 1024];
+        while remaining > 0 {
+            let want = (buf.len() as u64).min(remaining) as usize;
+            let got = self
+                .reader
+                .read(&mut buf[..want])
+                .map_err(|e| Error::Transport(format!("read body: {e}")))?;
+            if got == 0 {
+                return Err(Error::Transport(format!(
+                    "connection closed mid-body ({remaining} bytes left)"
+                )));
+            }
+            on_block(&buf[..got]);
+            remaining -= got as u64;
+        }
+        Ok(HttpResponse {
+            status,
+            content_length,
+            range_start,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_splitting() {
+        let (h, p, path) = HttpConnection::split_url("http://127.0.0.1:8080/a/b").unwrap();
+        assert_eq!((h.as_str(), p, path.as_str()), ("127.0.0.1", 8080, "/a/b"));
+        let (h, p, path) = HttpConnection::split_url("http://127.0.0.1").unwrap();
+        assert_eq!((h.as_str(), p, path.as_str()), ("127.0.0.1", 80, "/"));
+        assert!(HttpConnection::split_url("https://x/").is_err());
+        assert!(HttpConnection::split_url("http://h:notaport/").is_err());
+    }
+}

@@ -1,0 +1,416 @@
+//! Throttled local HTTP/1.1 server — the loopback stand-in for an
+//! ENA/NCBI mirror.
+//!
+//! Serves deterministic synthetic payloads (seeded xoshiro bytes, so
+//! the client can verify content integrity without storing gigabytes),
+//! honors `Range` requests and keep-alive, and throttles through token
+//! buckets: one per connection (the per-stream server cap) and one
+//! global (the bottleneck link). Optional artificial first-byte latency
+//! models cold-object staging.
+//!
+//! Thread-per-connection; connections are bounded. This is test/bench
+//! infrastructure — it prioritizes predictability over raw speed, but
+//! still saturates several Gbps on loopback (see EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::transport::token_bucket::TokenBucket;
+use crate::util::prng::Prng;
+use crate::{Error, Result};
+
+/// One file the server knows how to serve.
+#[derive(Clone, Debug)]
+pub struct ServedFile {
+    /// URL path (`/vol1/srr/SRR000001`).
+    pub path: String,
+    /// Payload size (bytes).
+    pub bytes: u64,
+    /// Content seed — byte `i` of the payload is
+    /// `seeded_byte(seed, i)`, so any range is generated on the fly.
+    pub seed: u64,
+}
+
+/// Server throttling knobs.
+#[derive(Clone, Debug)]
+pub struct ThrottleConfig {
+    /// Per-connection ceiling (bytes/s); 0 = unlimited.
+    pub per_conn_bytes_per_s: f64,
+    /// Global ceiling across connections (bytes/s); 0 = unlimited.
+    pub global_bytes_per_s: f64,
+    /// Artificial time-to-first-byte per request (s).
+    pub first_byte_latency_s: f64,
+    /// Max simultaneous connections.
+    pub max_connections: usize,
+}
+
+impl Default for ThrottleConfig {
+    fn default() -> Self {
+        ThrottleConfig {
+            per_conn_bytes_per_s: 0.0,
+            global_bytes_per_s: 0.0,
+            first_byte_latency_s: 0.0,
+            max_connections: 64,
+        }
+    }
+}
+
+/// Deterministic payload byte at offset `i` for content seed `seed`.
+///
+/// Each 8-byte lane comes from one xoshiro draw seeded by
+/// `(seed, i/8)`; cheap enough to generate ranges on the fly at
+/// multi-Gbps and reproducible for client-side verification.
+pub fn payload_byte(seed: u64, i: u64) -> u8 {
+    let lane = i / 8;
+    let mut p = Prng::new(seed ^ lane.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let word = p.next_u64();
+    word.to_le_bytes()[(i % 8) as usize]
+}
+
+/// Fill `buf` with payload bytes starting at `offset`.
+pub fn fill_payload(seed: u64, offset: u64, buf: &mut [u8]) {
+    // Generate lane-aligned 8-byte words, slicing edges.
+    let mut i = 0usize;
+    while i < buf.len() {
+        let pos = offset + i as u64;
+        let lane = pos / 8;
+        let in_lane = (pos % 8) as usize;
+        let mut p = Prng::new(seed ^ lane.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let word = p.next_u64().to_le_bytes();
+        let take = (8 - in_lane).min(buf.len() - i);
+        buf[i..i + take].copy_from_slice(&word[in_lane..in_lane + take]);
+        i += take;
+    }
+}
+
+/// The running server. Dropping it stops the accept loop.
+pub struct ThrottledHttpServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+struct Shared {
+    files: Mutex<BTreeMap<String, ServedFile>>,
+    throttle: ThrottleConfig,
+    global_bucket: Option<TokenBucket>,
+    active_connections: AtomicUsize,
+    total_requests: AtomicUsize,
+}
+
+impl ThrottledHttpServer {
+    /// Bind on 127.0.0.1:0 and start accepting.
+    pub fn start(files: Vec<ServedFile>, throttle: ThrottleConfig) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared {
+            files: Mutex::new(
+                files
+                    .into_iter()
+                    .map(|f| (f.path.clone(), f))
+                    .collect::<BTreeMap<_, _>>(),
+            ),
+            global_bucket: if throttle.global_bytes_per_s > 0.0 {
+                Some(TokenBucket::new(throttle.global_bytes_per_s))
+            } else {
+                None
+            },
+            throttle,
+            active_connections: AtomicUsize::new(0),
+            total_requests: AtomicUsize::new(0),
+        });
+
+        let accept_shared = shared.clone();
+        let accept_shutdown = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                accept_loop(listener, accept_shared, accept_shutdown);
+            })
+            .map_err(|e| Error::Transport(format!("spawn accept thread: {e}")))?;
+
+        Ok(ThrottledHttpServer {
+            addr,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            shared,
+        })
+    }
+
+    /// `http://127.0.0.1:<port>`.
+    pub fn base_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Register another file after startup.
+    pub fn add_file(&self, f: ServedFile) {
+        self.shared.files.lock().unwrap().insert(f.path.clone(), f);
+    }
+
+    /// Requests served so far (diagnostics).
+    pub fn total_requests(&self) -> usize {
+        self.shared.total_requests.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ThrottledHttpServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if shared.active_connections.load(Ordering::Relaxed)
+                    >= shared.throttle.max_connections
+                {
+                    // Reject over-limit connections outright.
+                    drop(stream);
+                    continue;
+                }
+                shared.active_connections.fetch_add(1, Ordering::Relaxed);
+                let conn_shared = shared.clone();
+                let conn_shutdown = shutdown.clone();
+                let _ = std::thread::Builder::new()
+                    .name("http-conn".into())
+                    .spawn(move || {
+                        let _ = serve_connection(stream, &conn_shared, &conn_shutdown);
+                        conn_shared
+                            .active_connections
+                            .fetch_sub(1, Ordering::Relaxed);
+                    });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    shared: &Shared,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let per_conn_bucket = if shared.throttle.per_conn_bytes_per_s > 0.0 {
+        Some(TokenBucket::new(shared.throttle.per_conn_bytes_per_s))
+    } else {
+        None
+    };
+
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        // --- Request line + headers. ---
+        let mut request_line = String::new();
+        if reader.read_line(&mut request_line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(());
+            }
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let path = parts.next().unwrap_or("/");
+        shared.total_requests.fetch_add(1, Ordering::Relaxed);
+
+        if method != "GET" && method != "HEAD" {
+            write_simple(&mut writer, 405, "method not allowed")?;
+            continue;
+        }
+
+        let file = shared.files.lock().unwrap().get(path).cloned();
+        let Some(file) = file else {
+            write_simple(&mut writer, 404, "not found")?;
+            continue;
+        };
+
+        // --- Range handling. ---
+        let (start, end, partial) = match headers.get("range") {
+            Some(r) => match parse_range(r, file.bytes) {
+                Some((s, e)) => (s, e, true),
+                None => {
+                    write_simple(&mut writer, 416, "bad range")?;
+                    continue;
+                }
+            },
+            None => (0, file.bytes.saturating_sub(1), false),
+        };
+        let len = if file.bytes == 0 { 0 } else { end - start + 1 };
+
+        if shared.throttle.first_byte_latency_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(
+                shared.throttle.first_byte_latency_s,
+            ));
+        }
+
+        // --- Response headers. ---
+        let status = if partial { "206 Partial Content" } else { "200 OK" };
+        let mut head = format!(
+            "HTTP/1.1 {status}\r\nContent-Length: {len}\r\nAccept-Ranges: bytes\r\nContent-Type: application/octet-stream\r\n"
+        );
+        if partial {
+            head.push_str(&format!(
+                "Content-Range: bytes {start}-{end}/{}\r\n",
+                file.bytes
+            ));
+        }
+        head.push_str("\r\n");
+        writer.write_all(head.as_bytes())?;
+
+        if method == "HEAD" {
+            continue;
+        }
+
+        // --- Throttled body. ---
+        let mut offset = start;
+        let mut remaining = len;
+        let mut buf = vec![0u8; 256 * 1024];
+        while remaining > 0 {
+            if shutdown.load(Ordering::Acquire) {
+                return Ok(());
+            }
+            let want = (buf.len() as u64).min(remaining) as usize;
+            if let Some(b) = &per_conn_bucket {
+                b.take_blocking(want);
+            }
+            if let Some(g) = &shared.global_bucket {
+                g.take_blocking(want);
+            }
+            fill_payload(file.seed, offset, &mut buf[..want]);
+            writer.write_all(&buf[..want])?;
+            offset += want as u64;
+            remaining -= want as u64;
+        }
+        writer.flush()?;
+        // Keep-alive: loop for the next request unless told otherwise.
+        if headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+        {
+            return Ok(());
+        }
+    }
+}
+
+fn write_simple(w: &mut TcpStream, code: u16, msg: &str) -> std::io::Result<()> {
+    let body = format!("{msg}\n");
+    let head = format!(
+        "HTTP/1.1 {code} {msg}\r\nContent-Length: {}\r\nContent-Type: text/plain\r\n\r\n",
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())
+}
+
+/// Parse `bytes=start-end` (suffix/open forms included) against `size`.
+fn parse_range(header: &str, size: u64) -> Option<(u64, u64)> {
+    let spec = header.trim().strip_prefix("bytes=")?;
+    let (a, b) = spec.split_once('-')?;
+    if size == 0 {
+        return None;
+    }
+    match (a.is_empty(), b.is_empty()) {
+        (false, false) => {
+            let start: u64 = a.parse().ok()?;
+            let end: u64 = b.parse().ok()?;
+            if start > end || end >= size {
+                None
+            } else {
+                Some((start, end))
+            }
+        }
+        (false, true) => {
+            let start: u64 = a.parse().ok()?;
+            if start >= size {
+                None
+            } else {
+                Some((start, size - 1))
+            }
+        }
+        (true, false) => {
+            let suffix: u64 = b.parse().ok()?;
+            if suffix == 0 {
+                None
+            } else {
+                Some((size.saturating_sub(suffix), size - 1))
+            }
+        }
+        (true, true) => None,
+    }
+}
+
+// `Read` is used via BufReader::read_line; silence the unused-import lint
+// on platforms where read_line suffices.
+#[allow(unused)]
+fn _assert_read_used<R: Read>(_r: R) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_is_deterministic_and_offset_consistent() {
+        let mut whole = vec![0u8; 64];
+        fill_payload(42, 0, &mut whole);
+        // Arbitrary sub-range must match the whole buffer.
+        let mut part = vec![0u8; 16];
+        fill_payload(42, 13, &mut part);
+        assert_eq!(&whole[13..29], &part[..]);
+        // Byte-wise accessor agrees.
+        for (i, &b) in whole.iter().enumerate() {
+            assert_eq!(payload_byte(42, i as u64), b);
+        }
+        // Different seeds differ.
+        let mut other = vec![0u8; 64];
+        fill_payload(43, 0, &mut other);
+        assert_ne!(whole, other);
+    }
+
+    #[test]
+    fn range_parsing() {
+        assert_eq!(parse_range("bytes=0-99", 1000), Some((0, 99)));
+        assert_eq!(parse_range("bytes=900-", 1000), Some((900, 999)));
+        assert_eq!(parse_range("bytes=-100", 1000), Some((900, 999)));
+        assert_eq!(parse_range("bytes=5-4", 1000), None);
+        assert_eq!(parse_range("bytes=0-1000", 1000), None);
+        assert_eq!(parse_range("bytes=1000-", 1000), None);
+        assert_eq!(parse_range("bogus", 1000), None);
+        assert_eq!(parse_range("bytes=0-0", 0), None);
+    }
+}

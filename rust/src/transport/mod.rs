@@ -1,0 +1,31 @@
+//! Real-socket transport: an HTTP/1.1 range client, a throttled local
+//! test server, and a token-bucket rate limiter.
+//!
+//! The paper's system downloads over "standard HTTP or FTP"; this
+//! module is the standard-HTTP half, implemented directly on
+//! `std::net::TcpStream` (tokio is unavailable offline, and a
+//! thread-per-connection blocking design matches the paper's
+//! socket-per-worker architecture anyway).
+//!
+//! * [`http_client`] — minimal HTTP/1.1 client: persistent connections,
+//!   `Range: bytes=…` GETs, status/headers parsing, chunked reads with
+//!   byte-count callbacks (the worker feeds the throughput recorder
+//!   from that callback).
+//! * [`http_server`] — the local stand-in for an ENA/NCBI mirror:
+//!   serves deterministic synthetic payloads for registered paths,
+//!   honors range requests and keep-alive, and throttles per-connection
+//!   and globally through token buckets so the end-to-end example can
+//!   reproduce a bandwidth-limited archive on loopback.
+//! * [`token_bucket`] — the shared rate limiter.
+//!
+//! The real session driver ([`crate::session::real`]) composes the
+//! client with the same scheduler/status-array/controller machinery the
+//! simulator uses.
+
+pub mod http_client;
+pub mod http_server;
+pub mod token_bucket;
+
+pub use http_client::{HttpConnection, HttpResponse};
+pub use http_server::{ServedFile, ThrottledHttpServer, ThrottleConfig};
+pub use token_bucket::TokenBucket;

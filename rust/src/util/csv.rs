@@ -1,0 +1,113 @@
+//! Tiny CSV writer for experiment outputs.
+//!
+//! Every bench/experiment writes its series to `results/*.csv` so the
+//! figures can be re-plotted externally; this module keeps quoting rules
+//! in one place.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::Result;
+
+/// Streaming CSV writer with RFC-4180 quoting.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    columns: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    /// Create `path` (and parent dirs) and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = CsvWriter {
+            out: BufWriter::new(File::create(path)?),
+            columns: header.len(),
+        };
+        w.write_row(header)?;
+        Ok(w)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    /// Write one row of string fields; panics if the column count drifts.
+    pub fn write_row<S: AsRef<str>>(&mut self, fields: &[S]) -> Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.columns,
+            "CSV row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        let mut line = String::new();
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&quote(f.as_ref()));
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    /// Write one row of f64 values with fixed precision.
+    pub fn write_f64_row(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v:.6}")).collect();
+        self.write_row(&strs)
+    }
+
+    /// Flush buffered output.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoting_rules() {
+        assert_eq!(quote("plain"), "plain");
+        assert_eq!(quote("a,b"), "\"a,b\"");
+        assert_eq!(quote("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn writes_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter {
+                out: &mut buf,
+                columns: 2,
+            };
+            w.write_row(&["t", "mbps"]).unwrap();
+            w.write_f64_row(&[1.0, 701.25]).unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, "t,mbps\n1.000000,701.250000\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "CSV row has")]
+    fn column_drift_panics() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter {
+            out: &mut buf,
+            columns: 2,
+        };
+        w.write_row(&["only-one"]).unwrap();
+    }
+}

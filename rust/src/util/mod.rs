@@ -1,0 +1,72 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline, so facilities that would
+//! normally come from crates.io live here instead: a deterministic PRNG
+//! ([`prng`], replacing `rand`), a minimal JSON reader/writer ([`json`],
+//! replacing `serde_json` — used for the artifact manifest and metric
+//! dumps), a CSV writer ([`csv`]), and a property-based-testing
+//! micro-framework ([`prop`], replacing `proptest`) used by the test
+//! suite for coordinator/netsim invariants.
+
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod prop;
+
+/// Clamp a float into `[lo, hi]` (total-order, NaN maps to `lo`).
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    if x.is_nan() {
+        lo
+    } else {
+        x.max(lo).min(hi)
+    }
+}
+
+/// Format a byte count using binary units (`1.5 GiB`).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds as `mm:ss.t` (used by progress output).
+pub fn fmt_secs(secs: f64) -> String {
+    let m = (secs / 60.0).floor() as u64;
+    let s = secs - m as f64 * 60.0;
+    format!("{m:02}:{s:04.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_basics() {
+        assert_eq!(clampf(5.0, 0.0, 3.0), 3.0);
+        assert_eq!(clampf(-1.0, 0.0, 3.0), 0.0);
+        assert_eq!(clampf(1.5, 0.0, 3.0), 1.5);
+        assert_eq!(clampf(f64::NAN, 0.5, 3.0), 0.5);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(22_060_000_000), "20.54 GiB");
+    }
+
+    #[test]
+    fn fmt_secs_roundtrip() {
+        assert_eq!(fmt_secs(0.0), "00:00.0");
+        assert_eq!(fmt_secs(160.0), "02:40.0");
+    }
+}

@@ -1,0 +1,132 @@
+//! Property-based-testing micro-framework (offline stand-in for `proptest`).
+//!
+//! The test suite uses this to check coordinator/netsim/optimizer
+//! invariants over randomized inputs. Each property runs a configurable
+//! number of cases from a deterministic seed; failures report the seed,
+//! case index and the generated input's `Debug` form so the exact case
+//! can be replayed by pinning `PROP_SEED`.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries cannot locate libxla_extension's rpath)
+//! use fastbiodl::util::prop::{check, Config};
+//!
+//! check(Config::default(), "reverse twice is identity", |g| {
+//!     let n = g.below(100) as usize;
+//!     (0..n).map(|_| g.next_u64()).collect::<Vec<_>>()
+//! }, |xs| {
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     if &twice == xs { Ok(()) } else { Err("mismatch".into()) }
+//! });
+//! ```
+
+use std::fmt::Debug;
+
+use crate::util::prng::Prng;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`. Overridable via `PROP_SEED`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xFA57_B10D);
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs drawn by `gen`. Panics on the
+/// first failing case with enough context to replay it.
+pub fn check<T, G, P>(cfg: Config, name: &str, gen: G, prop: P)
+where
+    T: Debug,
+    G: Fn(&mut Prng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Prng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed\n  case:  {case}/{}\n  seed:  {} (replay with PROP_SEED={})\n  error: {msg}\n  input: {input:#?}",
+                cfg.cases,
+                cfg.seed,
+                cfg.seed.wrapping_add(case as u64),
+            );
+        }
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gen {
+    use super::Prng;
+
+    /// Vector of `n in [min_len, max_len]` floats drawn from `[lo, hi)`.
+    pub fn vec_f64(
+        rng: &mut Prng,
+        min_len: usize,
+        max_len: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<f64> {
+        let n = rng.range_u64(min_len as u64, max_len as u64) as usize;
+        (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Vector of `n in [min_len, max_len]` integers from `[lo, hi]`.
+    pub fn vec_u64(
+        rng: &mut Prng,
+        min_len: usize,
+        max_len: usize,
+        lo: u64,
+        hi: u64,
+    ) -> Vec<u64> {
+        let n = rng.range_u64(min_len as u64, max_len as u64) as usize;
+        (0..n).map(|_| rng.range_u64(lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            Config { cases: 64, seed: 1 },
+            "addition commutes",
+            |g| (g.below(1000), g.below(1000)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math is broken".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_reports() {
+        check(
+            Config { cases: 4, seed: 2 },
+            "always fails",
+            |g| g.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+}

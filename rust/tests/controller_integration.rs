@@ -1,0 +1,212 @@
+//! Controller integration: the XLA-backed controllers against their
+//! pure-Rust mirrors (cross-language consistency) and their
+//! behavioural contracts.
+
+use std::sync::Arc;
+
+use fastbiodl::config::OptimizerConfig;
+use fastbiodl::optimizer::{
+    mirror, BayesController, ConcurrencyController, GdController, Probe, ProbeHistory,
+};
+use fastbiodl::runtime::XlaRuntime;
+use fastbiodl::util::prng::Prng;
+
+fn runtime() -> Arc<XlaRuntime> {
+    Arc::new(XlaRuntime::load_default().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn gd_artifact_matches_rust_mirror_over_random_windows() {
+    let rt = runtime();
+    let mut rng = Prng::new(0xC0515);
+    for case in 0..50 {
+        let n = rng.range_u64(2, 16) as usize;
+        let mut c = vec![0.0f32; 16];
+        let mut t = vec![0.0f32; 16];
+        let mut w = vec![0.0f32; 16];
+        for i in 0..n {
+            c[i] = rng.range_f64(1.0, 32.0) as f32;
+            t[i] = rng.range_f64(0.0, 5_000.0) as f32;
+            w[i] = rng.range_f64(0.05, 1.0) as f32;
+        }
+        let k = rng.range_f64(1.005, 1.2);
+        let lr = rng.range_f64(0.5, 6.0);
+        let c_now = rng.range_f64(1.0, 32.0);
+        let params = [
+            k as f32, lr as f32, 4.0, 1.0, 64.0, c_now as f32, 0.0, 0.0,
+        ];
+        let out = rt.gd_step(&c, &t, &w, &params).unwrap();
+
+        let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+        let t64: Vec<f64> = t.iter().map(|&x| x as f64).collect();
+        let w64: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+        let (next, grad, step, _) =
+            mirror::gd_step_mirror(&c64, &t64, &w64, k, lr, 4.0, 1.0, 64.0, c_now);
+        let tol = 1e-3 * (1.0 + grad.abs());
+        assert!(
+            (out[0] as f64 - next).abs() < 1e-3 + next.abs() * 1e-4,
+            "case {case}: next_c {} vs mirror {next}",
+            out[0]
+        );
+        assert!(
+            (out[1] as f64 - grad).abs() < tol,
+            "case {case}: grad {} vs mirror {grad}",
+            out[1]
+        );
+        assert!(
+            (out[2] as f64 - step).abs() < 1e-3,
+            "case {case}: step {} vs mirror {step}",
+            out[2]
+        );
+    }
+}
+
+#[test]
+fn bayes_artifact_posterior_matches_rust_mirror() {
+    let rt = runtime();
+    let mut rng = Prng::new(0xBA1E5);
+    let grid_f32: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+    let grid: Vec<f64> = grid_f32.iter().map(|&x| x as f64).collect();
+    for case in 0..20 {
+        let n = rng.range_u64(2, 16) as usize;
+        let mut c = vec![0.0f32; 16];
+        let mut t = vec![0.0f32; 16];
+        let mut v = vec![0.0f32; 16];
+        for i in 0..n {
+            c[i] = rng.range_f64(1.0, 32.0) as f32;
+            t[i] = rng.range_f64(100.0, 3_000.0) as f32;
+            v[i] = 1.0;
+        }
+        let k = 1.02f64;
+        let ls = rng.range_f64(1.0, 8.0);
+        let noise = 1e-3;
+        let u_norm = t.iter().cloned().fold(0.0f32, f32::max) as f64;
+        let params = [
+            k as f32, ls as f32, noise as f32, 0.01, 1.0, 64.0, u_norm as f32, 0.0,
+        ];
+        let out = rt.bayes_step(&c, &t, &v, &grid_f32, &params).unwrap();
+
+        // Mirror: utilities normalized the same way.
+        let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+        let v64: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let u64v: Vec<f64> = c64
+            .iter()
+            .zip(&t)
+            .zip(&v64)
+            .map(|((&ci, &ti), &vi)| mirror::utility(ti as f64, ci, k) * vi / (u_norm + 1e-6))
+            .collect();
+        let (mu, std) = mirror::gp_posterior_mirror(&c64, &u64v, &v64, &grid, ls, noise);
+        for j in (0..64).step_by(7) {
+            assert!(
+                (out[j] as f64 - mu[j]).abs() < 2e-3 + mu[j].abs() * 5e-3,
+                "case {case}: mu[{j}] {} vs mirror {}",
+                out[j],
+                mu[j]
+            );
+            assert!(
+                (out[64 + j] as f64 - std[j]).abs() < 5e-3,
+                "case {case}: std[{j}] {} vs mirror {}",
+                out[64 + j],
+                std[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn gd_controller_climbs_then_oscillates_near_optimum() {
+    // Synthetic response: T(C) = min(C, 10) * 100 (link saturates at
+    // C=10) — the controller should climb from 1 and settle near the
+    // utility optimum (≤ ~12 with k=1.02, > 6).
+    let rt = runtime();
+    let cfg = OptimizerConfig::default();
+    let mut ctl = GdController::new(cfg, rt);
+    let mut c = 1usize;
+    let mut trace = Vec::new();
+    for _ in 0..60 {
+        let t = (c as f64).min(10.0) * 100.0;
+        c = ctl
+            .on_probe(Probe {
+                concurrency: c as f64,
+                mbps: t,
+            })
+            .unwrap();
+        trace.push(c);
+    }
+    let tail = &trace[trace.len() - 20..];
+    let mean: f64 = tail.iter().map(|&x| x as f64).sum::<f64>() / tail.len() as f64;
+    assert!(
+        (6.0..=13.0).contains(&mean),
+        "late mean {mean} not near saturation point 10 (trace {trace:?})"
+    );
+    assert!(ctl.steps_executed >= 60);
+}
+
+#[test]
+fn bayes_controller_explores_then_exploits() {
+    let rt = runtime();
+    let mut cfg = OptimizerConfig::default();
+    cfg.c_max = 32;
+    let mut ctl = BayesController::new(cfg, rt);
+    ctl.reseed(7);
+    let mut c = 1usize;
+    let mut proposals = Vec::new();
+    for _ in 0..40 {
+        let t = (c as f64).min(8.0) * 120.0; // saturates at C=8
+        c = ctl
+            .on_probe(Probe {
+                concurrency: c as f64,
+                mbps: t,
+            })
+            .unwrap();
+        proposals.push(c);
+        assert!((1..=32).contains(&c), "proposal {c} out of bounds");
+    }
+    // Early phase must explore (several distinct values)…
+    let early: std::collections::BTreeSet<usize> =
+        proposals[..10].iter().copied().collect();
+    assert!(early.len() >= 3, "no exploration: {proposals:?}");
+    // …and the late phase should concentrate near the optimum region.
+    let tail = &proposals[proposals.len() - 10..];
+    let mean: f64 = tail.iter().map(|&x| x as f64).sum::<f64>() / tail.len() as f64;
+    assert!(
+        (4.0..=16.0).contains(&mean),
+        "late proposals far from optimum 8: {proposals:?}"
+    );
+}
+
+#[test]
+fn probe_window_xla_matches_rust_mirror() {
+    let rt = runtime();
+    let mut rng = Prng::new(0x51A7);
+    for _ in 0..20 {
+        let n = rng.range_u64(1, 256) as usize;
+        let mut w = fastbiodl::coordinator::probe::ProbeWindow::new(256, 0.98);
+        let mut w2 = fastbiodl::coordinator::probe::ProbeWindow::new(256, 0.98);
+        for _ in 0..n {
+            let v = rng.range_f64(0.0, 10_000.0);
+            w.push(v);
+            w2.push(v);
+        }
+        let mirror_stats = w2.aggregate_mirror();
+        let xla_stats = w.aggregate_and_reset(&rt).unwrap();
+        assert!((xla_stats.count - mirror_stats.count).abs() < 1e-6);
+        let rel = |a: f64, b: f64| (a - b).abs() / (1.0 + b.abs());
+        assert!(rel(xla_stats.mean_mbps, mirror_stats.mean_mbps) < 1e-4);
+        assert!(rel(xla_stats.std_mbps, mirror_stats.std_mbps) < 1e-3);
+        assert!(rel(xla_stats.min_mbps, mirror_stats.min_mbps) < 1e-4);
+        assert!(rel(xla_stats.max_mbps, mirror_stats.max_mbps) < 1e-4);
+        assert!(rel(xla_stats.ew_mean_mbps, mirror_stats.ew_mean_mbps) < 1e-3);
+    }
+}
+
+#[test]
+fn history_export_shapes_match_runtime_constants() {
+    let rt = runtime();
+    let consts = rt.constants();
+    let h = ProbeHistory::new(consts.window, 4.0);
+    let (c, t, w) = h.export();
+    assert_eq!(c.len(), consts.window);
+    assert_eq!(t.len(), consts.window);
+    assert_eq!(w.len(), consts.window);
+}

@@ -1,0 +1,94 @@
+//! Experiment shape tests: every paper table/figure regenerates with
+//! the paper's qualitative claims intact (who wins, by roughly what
+//! factor, where crossovers fall).
+//!
+//! Uses 2 runs per configuration to keep `cargo test` fast; the
+//! benches run the full 5-run round-robin.
+
+use std::sync::Arc;
+
+use fastbiodl::experiments::{fig1, fig2, fig4, fig5, fig6, table1, table3};
+use fastbiodl::runtime::{SharedRuntime, XlaRuntime};
+
+fn runtime() -> SharedRuntime {
+    Arc::new(XlaRuntime::load_default().expect("run `make artifacts` first"))
+}
+
+const RUNS: usize = 2;
+const SEED: u64 = 1000;
+
+#[test]
+fn fig1_shape() {
+    let r = fig1::run(90.0, SEED).unwrap();
+    assert!(
+        r.utilization() < 0.35,
+        "single stream utilization {:.2}",
+        r.utilization()
+    );
+}
+
+#[test]
+fn fig2_shape() {
+    let r = fig2::run(120.0, SEED).unwrap();
+    assert!(r.cv() > 0.03, "cv {}", r.cv());
+    assert!((r.max - r.min) / r.mean > 0.15);
+}
+
+#[test]
+fn table1_shape() {
+    let rt = runtime();
+    let rows = table1::run(&rt, RUNS, SEED).unwrap();
+    table1::check_shape(&rows).unwrap();
+}
+
+#[test]
+fn table3_shape() {
+    let rt = runtime();
+    let rows = table3::run(&rt, RUNS, SEED).unwrap();
+    for r in &rows {
+        println!(
+            "{}: prefetch {:.0} pysradb {:.0} fastbiodl {:.0} Mbps",
+            r.dataset,
+            r.prefetch.speed_mbps.mean,
+            r.pysradb.speed_mbps.mean,
+            r.fastbiodl.speed_mbps.mean
+        );
+    }
+    table3::check_shape(&rows).unwrap();
+}
+
+#[test]
+fn fig4_shape() {
+    let rt = runtime();
+    let r = fig4::run(&rt, RUNS, SEED).unwrap();
+    println!(
+        "gd {:.1}s bayes {:.1}s ({:.0}% slower)",
+        r.gd.duration_s.mean,
+        r.bayes.duration_s.mean,
+        (r.bayes_slowdown() - 1.0) * 100.0
+    );
+    fig4::check_shape(&r).unwrap();
+}
+
+#[test]
+fn fig5_shape() {
+    let rt = runtime();
+    let r = fig5::run(&rt, RUNS, SEED).unwrap();
+    fig5::check_shape(&r).unwrap();
+}
+
+#[test]
+fn fig6_shape() {
+    let rt = runtime();
+    let rows = fig6::run(&rt, RUNS, SEED).unwrap();
+    for r in &rows {
+        println!(
+            "{}: adaptive {:.0} Mbps, {:.2}x/{:.2}x over fixed-5/3",
+            r.scenario,
+            r.adaptive.speed_mbps.mean,
+            r.speedup_vs_fixed5(),
+            r.speedup_vs_fixed3()
+        );
+    }
+    fig6::check_shape(&rows).unwrap();
+}

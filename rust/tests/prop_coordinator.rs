@@ -1,0 +1,332 @@
+//! Property-based tests over coordinator invariants: the chunk
+//! scheduler (tiling, accounting, completion) and the worker status
+//! array (Algorithm 1 semantics), plus the §4.1 utility analytics via
+//! the pure-Rust mirrors.
+
+use fastbiodl::accession::RunRecord;
+use fastbiodl::coordinator::pool::StatusArray;
+use fastbiodl::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
+use fastbiodl::optimizer::mirror;
+use fastbiodl::util::prng::Prng;
+use fastbiodl::util::prop::{check, Config};
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+fn records(sizes: &[u64]) -> Vec<RunRecord> {
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &bytes)| RunRecord {
+            accession: format!("SRR{i:07}"),
+            project: "PROP".into(),
+            bytes,
+            url: format!("sim://f{i}"),
+        })
+        .collect()
+}
+
+/// Drive a scheduler with a randomized interleaving of pulls,
+/// completions, and failures until done; return every completed chunk.
+fn drive(sched: &mut ChunkScheduler, rng: &mut Prng) -> Result<Vec<Chunk>, String> {
+    let mut outstanding: Vec<Chunk> = Vec::new();
+    let mut completed: Vec<Chunk> = Vec::new();
+    let mut steps = 0usize;
+    while !sched.all_done() {
+        steps += 1;
+        if steps > 1_000_000 {
+            return Err("scheduler did not terminate".into());
+        }
+        let action = rng.below(10);
+        if action < 5 {
+            if let Some(c) = sched.next_chunk() {
+                outstanding.push(c);
+            }
+        } else if action < 9 {
+            if !outstanding.is_empty() {
+                let i = rng.below(outstanding.len() as u64) as usize;
+                let c = outstanding.swap_remove(i);
+                sched.chunk_done(&c);
+                completed.push(c);
+            }
+        } else if !outstanding.is_empty() {
+            // Simulated connection failure: requeue.
+            let i = rng.below(outstanding.len() as u64) as usize;
+            let c = outstanding.swap_remove(i);
+            sched.chunk_failed(c);
+        }
+    }
+    Ok(completed)
+}
+
+#[test]
+fn chunked_scheduler_tiles_exactly_under_chaos() {
+    check(
+        cfg(),
+        "chunk tiling under random interleaving + failures",
+        |g| {
+            let n_files = g.range_u64(1, 12) as usize;
+            let sizes: Vec<u64> = (0..n_files).map(|_| g.range_u64(0, 5_000)).collect();
+            let chunk = g.range_u64(64, 1_024);
+            let open = g.range_u64(1, 5) as usize;
+            let seed = g.next_u64();
+            (sizes, chunk, open, seed)
+        },
+        |(sizes, chunk, open, seed)| {
+            let recs = records(sizes);
+            let mut sched = ChunkScheduler::new(
+                &recs,
+                SchedulerMode::Chunked {
+                    chunk_bytes: *chunk,
+                    max_open_files: *open,
+                },
+            );
+            let mut rng = Prng::new(*seed);
+            let completed = drive(&mut sched, &mut rng)?;
+            // Every file's completed chunks tile [0, size) exactly once.
+            for (i, &size) in sizes.iter().enumerate() {
+                let mut spans: Vec<(u64, u64)> = completed
+                    .iter()
+                    .filter(|c| c.file == i)
+                    .map(|c| (c.offset, c.len))
+                    .collect();
+                spans.sort_unstable();
+                let mut cursor = 0u64;
+                for (off, len) in &spans {
+                    if *off != cursor {
+                        return Err(format!(
+                            "file {i}: gap/overlap at {off} (expected {cursor})"
+                        ));
+                    }
+                    cursor = off + len;
+                }
+                if cursor != size {
+                    return Err(format!("file {i}: tiled {cursor} of {size} bytes"));
+                }
+            }
+            let (done, total) = sched.progress();
+            if done != total {
+                return Err(format!("progress {done}/{total} at completion"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn whole_file_scheduler_is_one_chunk_per_file() {
+    check(
+        cfg(),
+        "whole-file mode emits exactly one chunk per nonempty file",
+        |g| {
+            let n = g.range_u64(1, 20) as usize;
+            let sizes: Vec<u64> = (0..n).map(|_| g.range_u64(1, 10_000)).collect();
+            (sizes, g.next_u64())
+        },
+        |(sizes, seed)| {
+            let recs = records(sizes);
+            let mut sched = ChunkScheduler::new(&recs, SchedulerMode::WholeFile);
+            let mut rng = Prng::new(*seed);
+            let completed = drive(&mut sched, &mut rng)?;
+            if completed.len() != sizes.len() {
+                return Err(format!(
+                    "{} chunks for {} files",
+                    completed.len(),
+                    sizes.len()
+                ));
+            }
+            for c in completed {
+                if c.offset != 0 || c.len != sizes[c.file] || !c.cold {
+                    return Err(format!("malformed whole-file chunk {c:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn open_files_bound_always_holds() {
+    check(
+        cfg(),
+        "max_open_files is never exceeded",
+        |g| {
+            let n = g.range_u64(2, 16) as usize;
+            let sizes: Vec<u64> = (0..n).map(|_| g.range_u64(100, 3_000)).collect();
+            let open = g.range_u64(1, 4) as usize;
+            (sizes, open, g.next_u64())
+        },
+        |(sizes, open, seed)| {
+            let recs = records(sizes);
+            let mut sched = ChunkScheduler::new(
+                &recs,
+                SchedulerMode::Chunked {
+                    chunk_bytes: 256,
+                    max_open_files: *open,
+                },
+            );
+            let mut rng = Prng::new(*seed);
+            let mut outstanding: Vec<Chunk> = Vec::new();
+            for _ in 0..200_000 {
+                if sched.all_done() {
+                    break;
+                }
+                if sched.open_files() > *open {
+                    return Err(format!(
+                        "open files {} > bound {open}",
+                        sched.open_files()
+                    ));
+                }
+                if rng.below(2) == 0 {
+                    if let Some(c) = sched.next_chunk() {
+                        outstanding.push(c);
+                    }
+                } else if !outstanding.is_empty() {
+                    let i = rng.below(outstanding.len() as u64) as usize;
+                    let c = outstanding.swap_remove(i);
+                    sched.chunk_done(&c);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn status_array_prefix_semantics() {
+    check(
+        cfg(),
+        "set_target always yields a RUNNING prefix",
+        |g| {
+            let capacity = g.range_u64(1, 64) as usize;
+            let targets: Vec<usize> = (0..g.range_u64(1, 32))
+                .map(|_| g.below(80) as usize)
+                .collect();
+            (capacity, targets)
+        },
+        |(capacity, targets)| {
+            let a = StatusArray::new(*capacity);
+            for &t in targets {
+                let applied = a.set_target(t);
+                if applied != t.min(*capacity) {
+                    return Err(format!("applied {applied} for target {t}"));
+                }
+                if a.running() != applied {
+                    return Err(format!("{} running, expected {applied}", a.running()));
+                }
+                // Prefix property: all running slots precede all parked.
+                let mut seen_parked = false;
+                for i in 0..*capacity {
+                    if a.is_running(i) {
+                        if seen_parked {
+                            return Err(format!("non-prefix running set at slot {i}"));
+                        }
+                    } else {
+                        seen_parked = true;
+                    }
+                }
+            }
+            a.stop_all();
+            if a.running() != 0 {
+                return Err("stop_all left workers running".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn utility_is_unimodal_with_max_at_c_star() {
+    // Paper §4.1: for T = αC, U(C) = αC/k^C has a unique maximum at
+    // C* = 1/ln k, and the negated utility is unimodal.
+    check(
+        cfg(),
+        "utility unimodality (paper §4.1)",
+        |g| {
+            let k = g.range_f64(1.005, 1.3);
+            let alpha = g.range_f64(1.0, 2_000.0);
+            (k, alpha)
+        },
+        |(k, alpha)| {
+            let c_star = mirror::c_star(*k);
+            let u = |c: f64| mirror::utility(alpha * c, c, *k);
+            // Strictly increasing before, strictly decreasing after.
+            let mut prev = u(0.25);
+            let mut c = 0.5;
+            while c < c_star {
+                let cur = u(c);
+                if cur <= prev {
+                    return Err(format!("not increasing at C={c} (k={k})"));
+                }
+                prev = cur;
+                c += 0.25;
+            }
+            let mut prev = u(c_star);
+            let mut c = c_star + 0.25;
+            while c < c_star * 3.0 + 2.0 {
+                let cur = u(c);
+                if cur >= prev {
+                    return Err(format!("not decreasing at C={c} (k={k})"));
+                }
+                prev = cur;
+                c += 0.25;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gd_mirror_fixed_point_is_near_c_star() {
+    // Iterating the GD mirror on the analytic linear-throughput model
+    // converges to a neighborhood of C* (paper's convergence claim).
+    check(
+        Config {
+            cases: 48,
+            ..cfg()
+        },
+        "GD converges toward C* on the analytic model",
+        |g| {
+            // k >= 1.05 keeps C* <= ~20: the relative utility slope
+            // (1/C - ln k) vanishes near C*, so GD approaches large
+            // optima asymptotically — bounded k keeps the test horizon
+            // meaningful (the paper's own k=1.02 relies on the link
+            // saturating long before C* = 50.5).
+            let k = g.range_f64(1.05, 1.25);
+            let alpha = g.range_f64(10.0, 1_000.0);
+            let c0 = g.range_f64(1.0, 4.0);
+            (k, alpha, c0)
+        },
+        |(k, alpha, c0)| {
+            let c_star = mirror::c_star(*k);
+            let mut c_hist: Vec<f64> = vec![*c0];
+            let mut t_hist: Vec<f64> = vec![alpha * c0];
+            let mut c_now = *c0;
+            for _ in 0..120 {
+                let n = c_hist.len().min(16);
+                let cs = &c_hist[c_hist.len() - n..];
+                let ts = &t_hist[t_hist.len() - n..];
+                let w: Vec<f64> = (0..n)
+                    .map(|i| 2f64.powf(-((n - 1 - i) as f64) / 4.0))
+                    .collect();
+                let (next, _, _, _) =
+                    mirror::gd_step_mirror(cs, ts, &w, *k, 3.0, 4.0, 1.0, 64.0, c_now);
+                c_now = next;
+                c_hist.push(c_now);
+                t_hist.push(alpha * c_now); // noiseless linear response
+            }
+            // Late-phase mean within ~35% of C* (discrete probing + the
+            // exploration kick keep it oscillating around the optimum).
+            let tail = &c_hist[c_hist.len() - 10..];
+            let mean: f64 = tail.iter().sum::<f64>() / tail.len() as f64;
+            let rel = (mean - c_star).abs() / c_star;
+            if rel > 0.35 {
+                return Err(format!(
+                    "converged to {mean:.2}, C*={c_star:.2} (rel err {rel:.2})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

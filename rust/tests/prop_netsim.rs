@@ -1,0 +1,243 @@
+//! Property-based tests over the network-simulator invariants.
+//!
+//! Uses the in-repo `util::prop` micro-framework (proptest is not
+//! available offline). Replay a failure with
+//! `PROP_SEED=<seed> cargo test --test prop_netsim <name>`.
+
+use fastbiodl::netsim::engine::{BackgroundConfig, NetSim, NetSimConfig};
+use fastbiodl::netsim::link::max_min_fair;
+use fastbiodl::netsim::{ClientProfile, ServerProfile};
+use fastbiodl::util::prop::{check, gen, Config};
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+#[test]
+fn fair_share_never_exceeds_capacity_or_demand() {
+    check(
+        cfg(),
+        "max_min_fair bounds",
+        |g| {
+            let capacity = g.range_f64(0.0, 20_000.0);
+            let demands = gen::vec_f64(g, 0, 64, 0.0, 2_000.0);
+            (capacity, demands)
+        },
+        |(capacity, demands)| {
+            let alloc = max_min_fair(*capacity, demands);
+            if alloc.len() != demands.len() {
+                return Err("length mismatch".into());
+            }
+            let sum: f64 = alloc.iter().sum();
+            if sum > capacity + 1e-6 {
+                return Err(format!("sum {sum} > capacity {capacity}"));
+            }
+            for (a, d) in alloc.iter().zip(demands) {
+                if *a > d + 1e-9 {
+                    return Err(format!("alloc {a} > demand {d}"));
+                }
+                if *a < 0.0 {
+                    return Err(format!("negative alloc {a}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fair_share_is_work_conserving_and_monotone() {
+    check(
+        cfg(),
+        "max_min_fair work conservation + monotonicity",
+        |g| {
+            let capacity = g.range_f64(10.0, 10_000.0);
+            let demands = gen::vec_f64(g, 1, 32, 0.1, 2_000.0);
+            (capacity, demands)
+        },
+        |(capacity, demands)| {
+            let alloc = max_min_fair(*capacity, demands);
+            let total_demand: f64 = demands.iter().sum();
+            let sum: f64 = alloc.iter().sum();
+            // Work conserving: uses min(capacity, total demand).
+            let expect = capacity.min(total_demand);
+            if (sum - expect).abs() > 1e-6 * expect.max(1.0) {
+                return Err(format!("not work conserving: {sum} vs {expect}"));
+            }
+            // Monotone: bigger demand never gets less.
+            for i in 0..demands.len() {
+                for j in 0..demands.len() {
+                    if demands[i] <= demands[j] && alloc[i] > alloc[j] + 1e-6 {
+                        return Err(format!(
+                            "monotonicity violated: d[{i}]={} a[{i}]={} vs d[{j}]={} a[{j}]={}",
+                            demands[i], alloc[i], demands[j], alloc[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_netsim(g: &mut fastbiodl::util::prng::Prng) -> (NetSimConfig, u64) {
+    let link = g.range_f64(100.0, 20_000.0);
+    let cfg = NetSimConfig {
+        link_capacity_mbps: link,
+        background: BackgroundConfig {
+            mean_mbps: g.range_f64(0.0, link * 0.4),
+            theta: g.range_f64(0.05, 1.0),
+            sigma: g.range_f64(0.0, link * 0.1),
+            max_mbps: link * 0.8,
+        },
+        server: ServerProfile {
+            setup_latency_s: g.range_f64(0.0, 0.5),
+            first_byte_latency_s: g.range_f64(0.0, 1.0),
+            per_conn_cap_mbps: g.range_f64(50.0, 2_000.0),
+            long_request_decay_per_min: g.range_f64(0.0, 0.5),
+            decay_floor: g.range_f64(0.2, 1.0),
+            max_connections: g.range_u64(4, 64) as usize,
+        },
+        client: ClientProfile::default(),
+        flow_jitter_frac: g.range_f64(0.0, 0.1),
+        flow_failure_rate_per_min: 0.0,
+        dt_s: 0.05,
+    };
+    (cfg, g.next_u64())
+}
+
+#[test]
+fn engine_conserves_bytes() {
+    check(
+        Config {
+            cases: 48,
+            ..cfg()
+        },
+        "netsim byte conservation",
+        |g| {
+            let (cfg, seed) = random_netsim(g);
+            let flows = (g.range_u64(1, 6) as usize).min(cfg.server.max_connections);
+            let bytes = g.range_f64(1e5, 5e7);
+            (cfg, seed, flows, bytes)
+        },
+        |(cfg, seed, flows, bytes)| {
+            let mut sim = NetSim::new(cfg.clone(), *seed).map_err(|e| e.to_string())?;
+            let ids: Vec<_> = (0..*flows)
+                .map(|_| sim.open_flow().unwrap())
+                .collect();
+            // Wait for all handshakes.
+            for _ in 0..1_000 {
+                if ids.iter().all(|&f| sim.flow_ready(f)) {
+                    break;
+                }
+                sim.step(None);
+            }
+            for (i, id) in ids.iter().enumerate() {
+                sim.begin_request(*id, *bytes, i % 2 == 0, i as u64)
+                    .map_err(|e| e.to_string())?;
+            }
+            let mut reported = 0.0;
+            let mut completions = 0;
+            for _ in 0..2_000_000 {
+                let rep = sim.step(None);
+                reported += rep.total_bytes;
+                completions += rep.events.iter().filter(|e| e.request_done).count();
+                if completions == *flows {
+                    break;
+                }
+            }
+            if completions != *flows {
+                return Err(format!("only {completions}/{flows} requests completed"));
+            }
+            let delivered: f64 = ids.iter().map(|&f| sim.flow_delivered(f)).sum();
+            let expect = *bytes * *flows as f64;
+            if (delivered - expect).abs() > 1.0 {
+                return Err(format!("delivered {delivered} != requested {expect}"));
+            }
+            if (reported - delivered).abs() > 1.0 {
+                return Err(format!(
+                    "step reports {reported} != flow accounting {delivered}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn engine_goodput_never_exceeds_link() {
+    check(
+        Config {
+            cases: 32,
+            ..cfg()
+        },
+        "netsim link ceiling",
+        |g| {
+            let (mut cfg, seed) = random_netsim(g);
+            cfg.background = BackgroundConfig::none();
+            let flows = g.range_u64(1, 12) as usize;
+            (cfg, seed, flows)
+        },
+        |(cfg, seed, flows)| {
+            let mut sim = NetSim::new(cfg.clone(), *seed).map_err(|e| e.to_string())?;
+            let ids: Vec<_> = (0..(*flows).min(cfg.server.max_connections))
+                .map(|_| sim.open_flow().unwrap())
+                .collect();
+            for _ in 0..1_000 {
+                if ids.iter().all(|&f| sim.flow_ready(f)) {
+                    break;
+                }
+                sim.step(None);
+            }
+            for (i, id) in ids.iter().enumerate() {
+                sim.begin_request(*id, 1e12, false, i as u64)
+                    .map_err(|e| e.to_string())?;
+            }
+            for _ in 0..400 {
+                let rep = sim.step(None);
+                // Tiny tolerance for dt rounding.
+                if rep.goodput_mbps > cfg.link_capacity_mbps * 1.01 {
+                    return Err(format!(
+                        "goodput {} exceeds link {}",
+                        rep.goodput_mbps, cfg.link_capacity_mbps
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn engine_is_deterministic_per_seed() {
+    check(
+        Config {
+            cases: 16,
+            ..cfg()
+        },
+        "netsim determinism",
+        |g| random_netsim(g),
+        |(cfg, seed)| {
+            let run = |cfg: &NetSimConfig, seed: u64| -> Vec<u64> {
+                let mut sim = NetSim::new(cfg.clone(), seed).unwrap();
+                let f = sim.open_flow().unwrap();
+                for _ in 0..200 {
+                    if sim.flow_ready(f) {
+                        break;
+                    }
+                    sim.step(None);
+                }
+                if sim.flow_ready(f) {
+                    sim.begin_request(f, 1e9, true, 0).unwrap();
+                }
+                (0..300)
+                    .map(|_| sim.step(None).total_bytes as u64)
+                    .collect()
+            };
+            if run(cfg, *seed) != run(cfg, *seed) {
+                return Err("same seed diverged".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,92 @@
+//! Integration smoke test: load every AOT artifact and execute it with
+//! real inputs through the PJRT CPU client. This is the end-to-end check
+//! that the python compile path and the rust runtime agree.
+
+use fastbiodl::runtime::XlaRuntime;
+
+fn runtime() -> XlaRuntime {
+    XlaRuntime::load_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn loads_and_reports_constants() {
+    let rt = runtime();
+    let c = rt.constants();
+    assert_eq!(c.window, 16);
+    assert_eq!(c.grid, 64);
+    assert_eq!(c.samples, 256);
+}
+
+#[test]
+fn gd_step_moves_up_on_rising_utility() {
+    let rt = runtime();
+    let mut c = vec![0.0f32; 16];
+    let mut t = vec![0.0f32; 16];
+    let mut w = vec![0.0f32; 16];
+    c[..4].copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+    t[..4].copy_from_slice(&[100.0, 200.0, 300.0, 400.0]);
+    w[..4].copy_from_slice(&[0.5, 0.7, 0.85, 1.0]);
+    // [k, lr, step_clip, c_min, c_max, c_now, _, _]
+    let params = [1.02, 0.5, 2.0, 1.0, 64.0, 4.0, 0.0, 0.0];
+    let out = rt.gd_step(&c, &t, &w, &params).unwrap();
+    assert_eq!(out.len(), 4);
+    let (next_c, grad) = (out[0], out[1]);
+    assert!(grad > 0.0, "utility rises with C, grad={grad}");
+    assert!(next_c > 4.0 && next_c <= 6.0, "next_c={next_c}");
+}
+
+#[test]
+fn bayes_step_returns_grid_posterior() {
+    let rt = runtime();
+    let mut c = vec![0.0f32; 16];
+    let mut t = vec![0.0f32; 16];
+    let mut valid = vec![0.0f32; 16];
+    c[..4].copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+    t[..4].copy_from_slice(&[100.0, 200.0, 300.0, 400.0]);
+    valid[..4].fill(1.0);
+    let grid: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+    // [k, lengthscale, noise, xi, c_min, c_max, u_norm, _]
+    let params = [1.02, 4.0, 1e-3, 0.01, 1.0, 32.0, 300.0, 0.0];
+    let out = rt.bayes_step(&c, &t, &valid, &grid, &params).unwrap();
+    assert_eq!(out.len(), 3 * 64 + 2);
+    let next_c = out[3 * 64 + 1];
+    assert!((1.0..=32.0).contains(&next_c), "next_c={next_c}");
+}
+
+#[test]
+fn throughput_window_aggregates() {
+    let rt = runtime();
+    let mut s = vec![0.0f32; 256];
+    let mut v = vec![0.0f32; 256];
+    let w = vec![1.0f32; 256];
+    for i in 0..10 {
+        s[i] = i as f32;
+        v[i] = 1.0;
+    }
+    let out = rt.throughput_window(&s, &v, &w).unwrap();
+    assert_eq!(out.len(), 6);
+    assert_eq!(out[0], 10.0); // count
+    assert!((out[1] - 4.5).abs() < 1e-5); // mean
+    assert_eq!(out[3], 0.0); // min
+    assert_eq!(out[4], 9.0); // max
+}
+
+#[test]
+fn utility_surface_matches_closed_form() {
+    let rt = runtime();
+    let t: Vec<f32> = (0..64).map(|i| 10.0 * (i + 1) as f32).collect();
+    let c: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+    let k = 1.02f32;
+    let out = rt.utility_surface(&t, &c, k).unwrap();
+    assert_eq!(out.len(), 64 * 64);
+    for (i, ti) in t.iter().enumerate().take(8) {
+        for (j, cj) in c.iter().enumerate().take(8) {
+            let want = ti / k.powf(*cj);
+            let got = out[i * 64 + j];
+            assert!(
+                (got - want).abs() < want.abs() * 1e-5 + 1e-5,
+                "U[{i},{j}]: got {got}, want {want}"
+            );
+        }
+    }
+}

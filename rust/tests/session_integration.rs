@@ -1,0 +1,88 @@
+//! End-to-end simulated-session tests: the full stack (scenario →
+//! scheduler → netsim → monitor → XLA-backed controller → report).
+
+use std::sync::Arc;
+
+use fastbiodl::baselines::BaselineTool;
+use fastbiodl::experiments::runner::{run_tool_once, Tool};
+use fastbiodl::experiments::scenario;
+use fastbiodl::runtime::XlaRuntime;
+
+fn runtime() -> Arc<XlaRuntime> {
+    Arc::new(XlaRuntime::load_default().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn fabric_b_adaptive_converges_near_c_star() {
+    let rt = runtime();
+    let s = scenario::fabric('b', 1).unwrap();
+    let report = run_tool_once(&s, &Tool::fastbiodl(&s), &rt, 11).unwrap();
+    println!("fabric-b: {}", report.summary());
+    for (t, c) in &report.concurrency_trace {
+        println!("  t={t:8.1}s -> C={c}");
+    }
+    // C* ≈ 7.14. Late-phase target should sit in [5, 10].
+    let late = report
+        .concurrency_trace
+        .last()
+        .map(|&(_, c)| c)
+        .unwrap_or(0);
+    assert!(
+        (5..=10).contains(&late),
+        "late concurrency {late} far from C*≈7"
+    );
+    // Link is 10 Gbps; adaptive should reach >7 Gbps mean after ramp.
+    assert!(
+        report.mean_throughput_mbps > 5_000.0,
+        "mean {} too low",
+        report.mean_throughput_mbps
+    );
+}
+
+#[test]
+fn breast_fastbiodl_beats_prefetch() {
+    let rt = runtime();
+    let s = scenario::colab_dataset("Breast-RNA-seq", 1).unwrap();
+    let fb = run_tool_once(&s, &Tool::fastbiodl(&s), &rt, 21).unwrap();
+    let pf = run_tool_once(&s, &Tool::Baseline(BaselineTool::prefetch()), &rt, 21).unwrap();
+    println!("fastbiodl: {}", fb.summary());
+    println!("prefetch:  {}", pf.summary());
+    assert!(fb.mean_throughput_mbps > pf.mean_throughput_mbps);
+}
+
+#[test]
+fn transfer_survives_injected_connection_failures() {
+    // Flaky WAN: every active flow fails about twice a minute. The
+    // coordinator must requeue failed chunks and reconnect; the
+    // transfer completes with every byte accounted for.
+    let rt = runtime();
+    let mut s = scenario::colab_dataset("Breast-RNA-seq", 5).unwrap();
+    s.netsim.flow_failure_rate_per_min = 2.0;
+    let report = run_tool_once(&s, &Tool::fastbiodl(&s), &rt, 55).unwrap();
+    println!("flaky run: {}", report.summary());
+    assert_eq!(report.files_completed, 10);
+    let expected: u64 = s.records.iter().map(|r| r.bytes).sum();
+    // Failures re-download at chunk granularity, so total delivered
+    // bytes >= payload (some chunks transferred more than once), but
+    // the overshoot must stay bounded.
+    assert!(report.total_bytes >= expected);
+    assert!(
+        (report.total_bytes as f64) < expected as f64 * 1.5,
+        "excessive re-download: {} of {} bytes",
+        report.total_bytes,
+        expected
+    );
+}
+
+#[test]
+fn baselines_and_adaptive_share_identical_machinery() {
+    // The same session driver runs every tool; a fixed controller with
+    // FastBioDL behaviour must equal FastBioDL pinned to that level.
+    let rt = runtime();
+    let s = scenario::fabric('b', 2).unwrap();
+    let fixed5 =
+        run_tool_once(&s, &Tool::Baseline(BaselineTool::fixed_fastbiodl(5, &s.download)), &rt, 9)
+            .unwrap();
+    assert_eq!(fixed5.mean_concurrency.round() as i64, 5);
+    assert_eq!(fixed5.files_completed, 4);
+}
