@@ -58,6 +58,7 @@ fn main() -> fastbiodl::Result<()> {
             global_bytes_per_s: GLOBAL_MBPS * 1e6 / 8.0,
             first_byte_latency_s: 0.05,
             max_connections: 32,
+            ..ThrottleConfig::default()
         },
     )?;
     println!(

@@ -131,6 +131,7 @@ fn main() {
             client: ClientProfile::default(),
             flow_jitter_frac: 0.05,
             flow_failure_rate_per_min: 0.0,
+            faults: fastbiodl::netsim::FaultSchedule::none(),
             dt_s: 0.05,
         };
         let mut sim = NetSim::new(cfg, 1).unwrap();

@@ -312,6 +312,21 @@ impl ChunkScheduler {
         }
     }
 
+    /// Chunks currently handed out to workers (not yet completed,
+    /// failed, or requeued). `all_done()` can only become true once
+    /// this reaches zero — a worker that drops a chunk without calling
+    /// [`ChunkScheduler::chunk_done`] or
+    /// [`ChunkScheduler::chunk_failed`] wedges the transfer, which is
+    /// why every abort path must requeue.
+    pub fn outstanding_chunks(&self) -> usize {
+        self.files.iter().map(|f| f.outstanding).sum()
+    }
+
+    /// Chunks waiting in the retry queue.
+    pub fn requeued_chunks(&self) -> usize {
+        self.requeued.len()
+    }
+
     /// Bytes delivered so far / total.
     pub fn progress(&self) -> (u64, u64) {
         (self.bytes_done, self.total_bytes)
@@ -439,6 +454,40 @@ mod tests {
         let c2 = s.next_chunk().unwrap();
         s.chunk_done(&c2);
         assert!(s.all_done());
+    }
+
+    #[test]
+    fn abort_requeue_keeps_outstanding_accounting_exact() {
+        // Regression for the worker-park leak: a chunk pulled but
+        // aborted (worker parked/died before issuing it) must return
+        // via chunk_failed, or outstanding never drains and all_done
+        // can never become true.
+        let recs = records(&[500]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 100,
+                max_open_files: 1,
+            },
+        );
+        let a = s.next_chunk().unwrap();
+        let b = s.next_chunk().unwrap();
+        assert_eq!(s.outstanding_chunks(), 2);
+        // Worker holding `a` parks before issuing the request.
+        s.chunk_failed(a.clone());
+        assert_eq!(s.outstanding_chunks(), 1);
+        assert_eq!(s.requeued_chunks(), 1);
+        // The requeued chunk is re-served and the file still completes.
+        s.chunk_done(&b);
+        let a2 = s.next_chunk().unwrap();
+        assert_eq!(a2, a);
+        s.chunk_done(&a2);
+        while let Some(c) = s.next_chunk() {
+            s.chunk_done(&c);
+        }
+        assert!(s.all_done());
+        assert_eq!(s.outstanding_chunks(), 0);
+        assert_eq!(s.progress(), (500, 500));
     }
 
     #[test]

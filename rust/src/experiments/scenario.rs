@@ -20,6 +20,7 @@ use crate::accession::catalog::{Catalog, RunRecord};
 use crate::accession::datasets::DatasetPreset;
 use crate::config::DownloadConfig;
 use crate::netsim::engine::BackgroundConfig;
+use crate::netsim::fault::{FaultProfile, FaultSchedule};
 use crate::netsim::{ClientProfile, NetSimConfig, ServerProfile};
 use crate::{Error, Result};
 
@@ -34,6 +35,24 @@ pub struct Scenario {
     pub records: Vec<RunRecord>,
     /// Theoretical optimal concurrency where defined (Figure 6).
     pub c_star_theoretical: Option<f64>,
+}
+
+impl Scenario {
+    /// Hostile variant: overlay a named fault profile onto the
+    /// scenario's network. The schedule is fully determined by
+    /// `(profile, seed, link capacity)`, so paired runs across tools
+    /// see identical fault sequences. `horizon_s` bounds the scheduled
+    /// window; transfers running longer see a fault-free tail.
+    pub fn with_fault_profile(
+        mut self,
+        profile: FaultProfile,
+        seed: u64,
+        horizon_s: f64,
+    ) -> Scenario {
+        self.netsim.faults =
+            profile.schedule(seed, horizon_s, self.netsim.link_capacity_mbps);
+        self
+    }
 }
 
 /// §5.1 Colab-like network shared by the three Table 2 datasets.
@@ -64,6 +83,7 @@ fn colab_netsim() -> NetSimConfig {
         },
         flow_jitter_frac: 0.05,
         flow_failure_rate_per_min: 0.0,
+        faults: FaultSchedule::none(),
         dt_s: 0.05,
     }
 }
@@ -155,6 +175,7 @@ pub fn fabric(which: char, seed: u64) -> Result<Scenario> {
         client: ClientProfile::ideal(),
         flow_jitter_frac: 0.03,
         flow_failure_rate_per_min: 0.0,
+        faults: FaultSchedule::none(),
         dt_s: 0.05,
     };
     let mut catalog = Catalog::empty();
@@ -204,6 +225,23 @@ mod tests {
         let c = fabric('c', 1).unwrap().c_star_theoretical.unwrap();
         assert!((c - 14.29).abs() < 0.01);
         assert!(fabric('x', 1).is_err());
+    }
+
+    #[test]
+    fn fault_profiles_overlay_deterministically() {
+        let a = colab_dataset("Breast-RNA-seq", 1)
+            .unwrap()
+            .with_fault_profile(FaultProfile::Chaos, 9, 600.0);
+        let b = colab_dataset("Breast-RNA-seq", 1)
+            .unwrap()
+            .with_fault_profile(FaultProfile::Chaos, 9, 600.0);
+        assert_eq!(a.netsim.faults, b.netsim.faults);
+        assert!(!a.netsim.faults.is_empty());
+        a.netsim.validate().unwrap();
+        let c = colab_dataset("Breast-RNA-seq", 1)
+            .unwrap()
+            .with_fault_profile(FaultProfile::Chaos, 10, 600.0);
+        assert_ne!(a.netsim.faults, c.netsim.faults);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use fastbiodl::optimizer::build_controller;
 use fastbiodl::report::{sparkline, Table};
 use fastbiodl::runtime::{SharedRuntime, XlaRuntime};
 use fastbiodl::session::real::{run_real_session, RealSessionParams, Sink};
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
 use fastbiodl::transport::{ServedFile, ThrottleConfig, ThrottledHttpServer};
 use fastbiodl::{Error, Result};
 
@@ -44,6 +45,9 @@ COMMANDS:
         --probe <secs>        probing interval (default 5)
         --fixed-level <n>     level for --optimizer fixed
         --seed <n>            simulation seed (default 1)
+        --faults <profile>    hostile network variant: none|flaky|stalls|
+                              errors|collapse|flashcrowd|brownout|chaos
+                              (seeded fault schedule; see netsim::fault)
     fetch <url...>            real-socket adaptive download over HTTP
         --out <dir>           write payloads here (default: discard)
         --chunk-mb <n>        range-request size (default 32)
@@ -153,6 +157,7 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
 fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
+        "faults",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -183,13 +188,30 @@ fn cmd_download(args: &Args) -> Result<()> {
     };
     apply_optimizer_flags(&mut sc.download, args)?;
 
+    // Hostile variant: overlay a seeded fault schedule.
+    if let Some(profile) = args.flag("faults") {
+        let profile = fastbiodl::netsim::FaultProfile::parse(profile).map_err(Error::Config)?;
+        let horizon = if sc.download.timeout_s > 0.0 {
+            sc.download.timeout_s
+        } else {
+            1_800.0
+        };
+        sc = sc.with_fault_profile(profile, seed, horizon);
+        if !sc.netsim.faults.is_empty() {
+            println!(
+                "fault profile '{}': {} scheduled events",
+                profile.name(),
+                sc.netsim.faults.len()
+            );
+        }
+    }
+
     // Resolve against the catalog (simulated ENA portal).
     let catalog = Catalog::with_table2(seed);
     let resolver = Resolver::batch(&catalog);
     let (records, _) = resolver.resolve(&accessions)?;
     sc.records = records;
 
-    let rt = load_runtime()?;
     println!(
         "downloading {} files ({}) on scenario '{}' with {} optimizer",
         sc.records.len(),
@@ -197,7 +219,26 @@ fn cmd_download(args: &Args) -> Result<()> {
         sc.name,
         sc.download.optimizer.kind.name(),
     );
-    let report = run_tool_once(&sc, &Tool::fastbiodl(&sc), &rt, seed)?;
+    // Prefer the compiled XLA artifacts; fall back to the pure-Rust
+    // mirror controllers when they are unavailable so the simulated
+    // path (including --faults) works on a bare checkout.
+    let report = match load_runtime() {
+        Ok(rt) => run_tool_once(&sc, &Tool::fastbiodl(&sc), &rt, seed)?,
+        Err(e) => {
+            eprintln!("note: XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
+            let controller = build_controller(&sc.download.optimizer, None)?;
+            SimSession::new(SimSessionParams {
+                download: sc.download.clone(),
+                behavior: ToolBehavior::fastbiodl(&sc.download),
+                netsim: sc.netsim.clone(),
+                records: sc.records.clone(),
+                controller,
+                runtime: None,
+                seed,
+            })
+            .run()?
+        }
+    };
     print_report(&report);
     Ok(())
 }
@@ -225,8 +266,14 @@ fn cmd_fetch(args: &Args) -> Result<()> {
             url: url.clone(),
         });
     }
-    let rt = load_runtime()?;
-    let controller = build_controller(&cfg.optimizer, Some(rt.clone()))?;
+    let rt = match load_runtime() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
+            None
+        }
+    };
+    let controller = build_controller(&cfg.optimizer, rt.clone())?;
     let sink = match args.flag("out") {
         Some(dir) => Sink::Directory(dir.to_string()),
         None => Sink::Discard,
@@ -235,7 +282,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
         download: cfg,
         records,
         controller,
-        runtime: Some(&rt),
+        runtime: rt.as_deref(),
         sink,
         name: "fastbiodl".into(),
     })?;
@@ -280,7 +327,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         per_conn_bytes_per_s: args.flag_f64("conn-mbps")?.unwrap_or(0.0) * 1e6 / 8.0,
         global_bytes_per_s: args.flag_f64("global-mbps")?.unwrap_or(0.0) * 1e6 / 8.0,
         first_byte_latency_s: args.flag_f64("ttfb")?.unwrap_or(0.0),
-        max_connections: 64,
+        ..ThrottleConfig::default()
     };
     let served: Vec<ServedFile> = (0..files)
         .map(|i| ServedFile {
@@ -457,6 +504,12 @@ fn print_report(r: &fastbiodl::session::SessionReport) {
         r.mean_concurrency, r.mean_inflight
     );
     println!("files completed : {}", r.files_completed);
+    if r.chunk_retries > 0 {
+        println!(
+            "recovery        : {} chunk retries ({} connection resets, {} server errors)",
+            r.chunk_retries, r.connection_resets, r.server_rejects
+        );
+    }
     println!("optimizer probes: {}", r.probes);
     println!("throughput      : {}", sparkline(&r.timeline.values, 64));
     if r.concurrency_trace.len() > 1 {

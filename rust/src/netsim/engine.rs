@@ -13,6 +13,7 @@
 //! this for the paper's 5-run round-robin (seeds `base..base+5`).
 
 use crate::netsim::client::ClientProfile;
+use crate::netsim::fault::{FaultKind, FaultSchedule};
 use crate::netsim::flow::{FlowId, FlowPhase, SimFlow};
 use crate::netsim::link::Link;
 use crate::netsim::server::ServerProfile;
@@ -38,6 +39,9 @@ pub struct NetSimConfig {
     /// of active transfer (0 disables). Models mid-transfer resets on
     /// flaky WAN paths; the coordinator must requeue and reconnect.
     pub flow_failure_rate_per_min: f64,
+    /// Scheduled fault injection (resets, stalls, 5xx windows, rate
+    /// collapses, flash crowds, brownouts). Empty = benign network.
+    pub faults: FaultSchedule,
     /// Simulation step (s). 0.05 is the calibrated default: fine enough
     /// to resolve 180 ms connection setups, coarse enough to replay a
     /// 500-second transfer in ~10k steps.
@@ -79,6 +83,7 @@ impl Default for NetSimConfig {
             client: ClientProfile::default(),
             flow_jitter_frac: 0.05,
             flow_failure_rate_per_min: 0.0,
+            faults: FaultSchedule::none(),
             dt_s: 0.05,
         }
     }
@@ -95,6 +100,7 @@ impl NetSimConfig {
         }
         self.server.validate().map_err(Error::Sim)?;
         self.client.validate().map_err(Error::Sim)?;
+        self.faults.validate().map_err(Error::Sim)?;
         Ok(())
     }
 }
@@ -113,6 +119,10 @@ pub struct FlowEvent {
     /// bytes already delivered for the request stand, the rest must be
     /// rescheduled on a new connection.
     pub failed: bool,
+    /// The request was rejected by a transient server error (injected
+    /// 5xx). The connection survives and is Idle again; the work item
+    /// must be retried, ideally after backoff.
+    pub rejected: bool,
 }
 
 /// Aggregate step outcome.
@@ -143,6 +153,21 @@ pub struct NetSim {
     /// session driver via [`NetSim::set_open_files`]; used for the
     /// client's distinct-file penalty).
     open_files: usize,
+    // --- Fault-injection state (see netsim::fault). ---
+    /// Next unapplied event in `cfg.faults`.
+    fault_cursor: usize,
+    /// Requests issued before this time are rejected with `reject_prob`.
+    reject_until_s: f64,
+    reject_prob: f64,
+    /// Per-connection cap multiplied by `collapse_factor` until then.
+    collapse_until_s: f64,
+    collapse_factor: f64,
+    /// Extra background traffic until then.
+    crowd_until_s: f64,
+    crowd_extra_mbps: f64,
+    /// Server brownout: new connections queue and new requests are
+    /// rejected until this time.
+    brownout_until_s: f64,
     // §Perf: scratch buffers reused across steps so the hot loop is
     // allocation-free (see EXPERIMENTS.md §Perf, optimization 1).
     scratch_active: Vec<usize>,
@@ -177,6 +202,14 @@ impl NetSim {
             next_id: 0,
             rng,
             open_files: 1,
+            fault_cursor: 0,
+            reject_until_s: 0.0,
+            reject_prob: 0.0,
+            collapse_until_s: 0.0,
+            collapse_factor: 1.0,
+            crowd_until_s: 0.0,
+            crowd_extra_mbps: 0.0,
+            brownout_until_s: 0.0,
             scratch_active: Vec::new(),
             scratch_demands: Vec::new(),
             scratch_alloc: Vec::new(),
@@ -207,9 +240,11 @@ impl NetSim {
         }
         let id = FlowId(self.next_id);
         self.next_id += 1;
+        // A brownout queues new handshakes behind its remaining span.
+        let brownout_wait = (self.brownout_until_s - self.now_s).max(0.0);
         let flow = SimFlow::new(
             id,
-            self.cfg.server.setup_latency_s,
+            self.cfg.server.setup_latency_s + brownout_wait,
             self.cfg.flow_jitter_frac,
             &mut self.rng,
         );
@@ -240,13 +275,23 @@ impl NetSim {
     /// warm ones (subsequent chunks of the same object) do not.
     /// `tag` is an opaque work-item label echoed back to the caller.
     pub fn begin_request(&mut self, id: FlowId, bytes: f64, cold: bool, tag: u64) -> Result<()> {
-        let fbl = if cold {
+        let mut fbl = if cold {
             self.cfg.server.first_byte_latency_s
         } else {
             // Warm chunk on a keep-alive connection: one request RTT,
             // folded into a small constant.
             self.cfg.server.first_byte_latency_s.min(0.02)
         };
+        // Injected transient server errors: a request issued during a
+        // 5xx window (or brownout) is doomed — it spends a short
+        // "error response" latency in FirstByte, then fires a
+        // `rejected` event instead of turning Active.
+        let reject = self.now_s < self.brownout_until_s
+            || (self.now_s < self.reject_until_s && self.rng.next_f64() < self.reject_prob);
+        if reject {
+            // The error response still costs at least a round trip.
+            fbl = fbl.max(0.05);
+        }
         let f = self
             .flow_mut(id)
             .ok_or_else(|| Error::Sim(format!("no such flow {id:?}")))?;
@@ -258,6 +303,7 @@ impl NetSim {
         }
         f.tag = tag;
         f.begin_request(bytes, fbl);
+        f.reject_pending = reject;
         Ok(())
     }
 
@@ -282,7 +328,10 @@ impl NetSim {
         let dt = dt_override.unwrap_or(self.cfg.dt_s);
         debug_assert!(dt > 0.0);
         self.now_s += dt;
-        let background_mbps = self.background.step(dt);
+        let mut background_mbps = self.background.step(dt);
+        if self.now_s < self.crowd_until_s {
+            background_mbps += self.crowd_extra_mbps;
+        }
 
         let mut report = StepReport {
             now_s: self.now_s,
@@ -290,9 +339,33 @@ impl NetSim {
             ..Default::default()
         };
 
-        // Phase timers (setup / first-byte).
+        // Apply scheduled faults that have come due.
+        loop {
+            let kind = match self.cfg.faults.events().get(self.fault_cursor) {
+                Some(ev) if ev.at_s <= self.now_s => ev.kind.clone(),
+                _ => break,
+            };
+            self.fault_cursor += 1;
+            self.apply_fault(kind, &mut report);
+        }
+
+        // Phase timers (setup / first-byte). A flow whose first-byte
+        // timer fires with a pending injected rejection aborts back to
+        // Idle and reports `rejected` instead of going Active.
         for f in &mut self.flows {
             let fired = f.tick_phase(dt);
+            if fired && f.is_active() && f.reject_pending {
+                f.abort_request();
+                report.events.push(FlowEvent {
+                    id: f.id,
+                    bytes: 0.0,
+                    request_done: false,
+                    became_ready: false,
+                    failed: false,
+                    rejected: true,
+                });
+                continue;
+            }
             if fired && f.is_idle() {
                 report.events.push(FlowEvent {
                     id: f.id,
@@ -300,6 +373,7 @@ impl NetSim {
                     request_done: false,
                     became_ready: true,
                     failed: false,
+                    rejected: false,
                 });
             }
         }
@@ -308,12 +382,19 @@ impl NetSim {
         // the hot loop allocation-free).
         self.scratch_active.clear();
         self.scratch_demands.clear();
-        let cap = self.cfg.server.per_conn_cap_mbps;
+        let mut cap = self.cfg.server.per_conn_cap_mbps;
+        if self.now_s < self.collapse_until_s {
+            cap *= self.collapse_factor;
+        }
         for (i, f) in self.flows.iter().enumerate() {
             if f.is_active() {
                 self.scratch_active.push(i);
-                self.scratch_demands
-                    .push(f.demand_mbps(cap, self.cfg.server.decay_factor(f.request_age_s)));
+                let demand = if f.stalled_until_s > self.now_s {
+                    0.0 // injected stall: connection alive, no bytes
+                } else {
+                    f.demand_mbps(cap, self.cfg.server.decay_factor(f.request_age_s))
+                };
+                self.scratch_demands.push(demand);
             }
         }
         if self.scratch_active.is_empty() {
@@ -364,6 +445,7 @@ impl NetSim {
                 request_done: done,
                 became_ready: false,
                 failed: false,
+                rejected: false,
             });
         }
 
@@ -381,12 +463,90 @@ impl NetSim {
                         request_done: false,
                         became_ready: false,
                         failed: true,
+                        rejected: false,
                     });
                 }
             }
         }
         report.goodput_mbps = report.total_bytes * 8.0 / 1e6 / dt;
         report
+    }
+
+    /// Apply one scheduled fault at the current virtual time.
+    fn apply_fault(&mut self, kind: FaultKind, report: &mut StepReport) {
+        match kind {
+            FaultKind::ConnectionReset { count } => {
+                for _ in 0..count {
+                    let busy: Vec<usize> = self
+                        .flows
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, f)| f.is_busy())
+                        .map(|(i, _)| i)
+                        .collect();
+                    if busy.is_empty() {
+                        break;
+                    }
+                    let victim = busy[self.rng.below(busy.len() as u64) as usize];
+                    let f = &mut self.flows[victim];
+                    f.close();
+                    report.events.push(FlowEvent {
+                        id: f.id,
+                        bytes: 0.0,
+                        request_done: false,
+                        became_ready: false,
+                        failed: true,
+                        rejected: false,
+                    });
+                }
+            }
+            FaultKind::Stall { frac, duration_s } => {
+                let until = self.now_s + duration_s;
+                for f in &mut self.flows {
+                    if f.is_active() && self.rng.next_f64() < frac {
+                        f.stalled_until_s = f.stalled_until_s.max(until);
+                    }
+                }
+            }
+            // Overlapping same-kind windows compose to the worst case:
+            // the end times merge with max(), and the parameter keeps
+            // the more severe value while a prior window is still
+            // active (otherwise a mild late event would soften the
+            // tail of an earlier severe one).
+            FaultKind::ServerError {
+                reject_prob,
+                duration_s,
+            } => {
+                self.reject_prob = if self.now_s < self.reject_until_s {
+                    self.reject_prob.max(reject_prob)
+                } else {
+                    reject_prob
+                };
+                self.reject_until_s = self.reject_until_s.max(self.now_s + duration_s);
+            }
+            FaultKind::RateCollapse { factor, duration_s } => {
+                self.collapse_factor = if self.now_s < self.collapse_until_s {
+                    self.collapse_factor.min(factor)
+                } else {
+                    factor
+                };
+                self.collapse_until_s = self.collapse_until_s.max(self.now_s + duration_s);
+            }
+            FaultKind::FlashCrowd {
+                extra_mbps,
+                duration_s,
+            } => {
+                self.crowd_extra_mbps = if self.now_s < self.crowd_until_s {
+                    self.crowd_extra_mbps.max(extra_mbps)
+                } else {
+                    extra_mbps
+                };
+                self.crowd_until_s = self.crowd_until_s.max(self.now_s + duration_s);
+            }
+            FaultKind::Brownout { duration_s } => {
+                self.brownout_until_s = self.brownout_until_s.max(self.now_s + duration_s);
+            }
+        }
     }
 
     /// Run until `pred` returns true or `timeout_s` of virtual time
@@ -443,6 +603,7 @@ mod tests {
             client: ClientProfile::ideal(),
             flow_jitter_frac: 0.0,
             flow_failure_rate_per_min: 0.0,
+            faults: FaultSchedule::none(),
             dt_s: 0.05,
         }
     }
@@ -570,6 +731,217 @@ mod tests {
         };
         assert_eq!(run(42), run(42));
         assert_ne!(run(42), run(43));
+    }
+
+    use crate::netsim::fault::FaultEvent;
+
+    fn faulted_cfg(events: Vec<FaultEvent>) -> NetSimConfig {
+        NetSimConfig {
+            faults: FaultSchedule::new(events),
+            ..quiet_cfg()
+        }
+    }
+
+    /// Bring one flow up and start an effectively endless request.
+    fn start_big_request(sim: &mut NetSim) -> FlowId {
+        let f = sim.open_flow().unwrap();
+        while !sim.flow_ready(f) {
+            sim.step(None);
+        }
+        sim.begin_request(f, 1e12, false, 0).unwrap();
+        f
+    }
+
+    fn measure_mbps(sim: &mut NetSim, steps: usize) -> f64 {
+        let mut bytes = 0.0;
+        for _ in 0..steps {
+            bytes += sim.step(None).total_bytes;
+        }
+        bytes * 8.0 / 1e6 / (steps as f64 * 0.05)
+    }
+
+    #[test]
+    fn scheduled_reset_kills_busy_flow() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 2.0,
+            kind: FaultKind::ConnectionReset { count: 1 },
+        }]);
+        let mut sim = NetSim::new(cfg, 7).unwrap();
+        let f = start_big_request(&mut sim);
+        let mut failed = 0;
+        while sim.now() < 4.0 {
+            let rep = sim.step(None);
+            failed += rep.events.iter().filter(|e| e.failed).count();
+        }
+        assert_eq!(failed, 1);
+        assert_eq!(sim.flow_phase(f), Some(FlowPhase::Closed));
+        assert!(sim.flow_delivered(f) > 0.0, "bytes before the reset stand");
+    }
+
+    #[test]
+    fn server_error_window_rejects_new_requests() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 0.5,
+            kind: FaultKind::ServerError {
+                reject_prob: 1.0,
+                duration_s: 10.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 8).unwrap();
+        let f = sim.open_flow().unwrap();
+        while sim.now() < 1.0 {
+            sim.step(None);
+        }
+        assert!(sim.flow_ready(f));
+        sim.begin_request(f, 1e6, false, 3).unwrap();
+        let mut rejected = 0;
+        for _ in 0..40 {
+            let rep = sim.step(None);
+            rejected += rep.events.iter().filter(|e| e.rejected).count();
+        }
+        assert_eq!(rejected, 1, "request in 5xx window must be rejected");
+        assert!(sim.flow_ready(f), "connection survives a 5xx");
+        assert_eq!(sim.flow_delivered(f), 0.0);
+    }
+
+    #[test]
+    fn rate_collapse_throttles_goodput() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 5.0,
+            kind: FaultKind::RateCollapse {
+                factor: 0.2,
+                duration_s: 5.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 9).unwrap();
+        start_big_request(&mut sim);
+        for _ in 0..40 {
+            sim.step(None); // ramp
+        }
+        let before = measure_mbps(&mut sim, 40); // t ≈ 2..4
+        while sim.now() < 6.0 {
+            sim.step(None);
+        }
+        let during = measure_mbps(&mut sim, 40); // t ≈ 6..8
+        while sim.now() < 11.0 {
+            sim.step(None);
+        }
+        let after = measure_mbps(&mut sim, 40); // t ≈ 11..13
+        assert!(
+            during < before * 0.35,
+            "collapse should throttle: before {before} during {during}"
+        );
+        assert!(
+            after > before * 0.8,
+            "rate should recover: before {before} after {after}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_steals_link_capacity() {
+        let mut cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 5.0,
+            kind: FaultKind::FlashCrowd {
+                extra_mbps: 900.0,
+                duration_s: 5.0,
+            },
+        }]);
+        // Let one flow demand the whole link so background matters.
+        cfg.server.per_conn_cap_mbps = 1_000.0;
+        let mut sim = NetSim::new(cfg, 10).unwrap();
+        start_big_request(&mut sim);
+        for _ in 0..40 {
+            sim.step(None);
+        }
+        let before = measure_mbps(&mut sim, 40);
+        while sim.now() < 6.0 {
+            sim.step(None);
+        }
+        let during = measure_mbps(&mut sim, 40);
+        assert!(
+            during < before * 0.3,
+            "crowd should squeeze goodput: before {before} during {during}"
+        );
+    }
+
+    #[test]
+    fn stall_freezes_delivery_then_releases() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 5.0,
+            kind: FaultKind::Stall {
+                frac: 1.0,
+                duration_s: 2.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 11).unwrap();
+        start_big_request(&mut sim);
+        while sim.now() < 5.5 {
+            sim.step(None);
+        }
+        let stalled = measure_mbps(&mut sim, 20); // t ≈ 5.5..6.5
+        while sim.now() < 8.0 {
+            sim.step(None);
+        }
+        let resumed = measure_mbps(&mut sim, 20);
+        assert_eq!(stalled, 0.0, "stalled flow must deliver nothing");
+        assert!(resumed > 100.0, "flow must resume after the stall");
+    }
+
+    #[test]
+    fn brownout_queues_new_connections_and_rejects_requests() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::Brownout { duration_s: 3.0 },
+        }]);
+        let mut sim = NetSim::new(cfg, 12).unwrap();
+        while sim.now() < 1.5 {
+            sim.step(None);
+        }
+        // Opened mid-brownout: handshake waits out the brownout.
+        let f = sim.open_flow().unwrap();
+        let mut steps = 0;
+        while !sim.flow_ready(f) {
+            sim.step(None);
+            steps += 1;
+            assert!(steps < 2_000, "flow never became ready");
+        }
+        assert!(
+            sim.now() >= 4.0,
+            "brownout should delay readiness to ~4.1s, got {}",
+            sim.now()
+        );
+        // Requests during a brownout are rejected; afterwards they work.
+        sim.begin_request(f, 1e6, false, 0).unwrap();
+        let mut done = 0;
+        for _ in 0..200 {
+            done += sim
+                .step(None)
+                .events
+                .iter()
+                .filter(|e| e.request_done)
+                .count();
+        }
+        assert_eq!(done, 1, "post-brownout request should complete");
+    }
+
+    #[test]
+    fn fault_schedule_preserves_determinism() {
+        let run = |seed| {
+            let cfg = NetSimConfig {
+                faults: crate::netsim::fault::FaultProfile::Chaos.schedule(seed, 60.0, 1_000.0),
+                ..quiet_cfg()
+            };
+            let mut sim = NetSim::new(cfg, seed).unwrap();
+            start_big_request(&mut sim);
+            let mut trace = Vec::new();
+            for _ in 0..1_000 {
+                let rep = sim.step(None);
+                trace.push((rep.total_bytes, rep.events.len()));
+            }
+            trace
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
     }
 
     #[test]

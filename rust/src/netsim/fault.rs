@@ -1,0 +1,466 @@
+//! Declarative fault injection for the simulator.
+//!
+//! The benign engine (OU background + jitter) never exercises the
+//! recovery machinery the paper's reliability claims rest on. This
+//! module adds a **seeded, declarative fault schedule**: a sorted list
+//! of `(timestamp, fault)` events the engine applies while stepping.
+//! Everything stays deterministic — the schedule is data, and the only
+//! randomness (victim selection, stall sampling, rejection draws) comes
+//! from the engine's own seeded PRNG, so a `(config, seed)` pair replays
+//! bit-identically, faults included.
+//!
+//! ## Fault classes
+//!
+//! | Kind | Models | Engine effect |
+//! |------|--------|---------------|
+//! | [`FaultKind::ConnectionReset`] | mid-stream TCP RST / NAT timeout | kills up to `count` busy flows; each emits a `failed` [`crate::netsim::FlowEvent`] |
+//! | [`FaultKind::Stall`] | staging hiccup, head-of-line blocking | selected active flows deliver zero bytes until the stall expires |
+//! | [`FaultKind::ServerError`] | transient HTTP 5xx window | requests *started* in the window are rejected after first-byte latency (`rejected` event; connection survives) |
+//! | [`FaultKind::RateCollapse`] | path reroute, shaper clamp | per-connection cap multiplied by `factor` for the duration |
+//! | [`FaultKind::FlashCrowd`] | competing bulk transfer burst | background traffic gains `extra_mbps` for the duration |
+//! | [`FaultKind::Brownout`] | overloaded archive front-end | new connections queue behind the brownout; new requests are rejected until it ends |
+//!
+//! ## Profiles
+//!
+//! [`FaultProfile`] names ready-made hostile variants of any scenario —
+//! `flaky`, `stalls`, `errors`, `collapse`, `flashcrowd`, `brownout`,
+//! and `chaos` (all of the above interleaved). A profile expands to a
+//! concrete [`FaultSchedule`] via [`FaultProfile::schedule`], fully
+//! determined by `(profile, seed, horizon, link capacity)`. The CLI
+//! exposes this as `fastbiodl download … --faults <profile>`; tests use
+//! the same expansion for the controller×fault matrix.
+
+use crate::util::prng::Prng;
+
+/// One fault class with its parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Abruptly close up to `count` busy (FirstByte/Active) flows.
+    ConnectionReset {
+        count: usize,
+    },
+    /// Freeze delivery on each active flow with probability `frac`,
+    /// for `duration_s` of simulated time.
+    Stall {
+        frac: f64,
+        duration_s: f64,
+    },
+    /// For `duration_s`, reject each newly issued request with
+    /// probability `reject_prob` (transient 5xx; connection survives).
+    ServerError {
+        reject_prob: f64,
+        duration_s: f64,
+    },
+    /// Multiply the per-connection rate cap by `factor` (in (0, 1])
+    /// for `duration_s`.
+    RateCollapse {
+        factor: f64,
+        duration_s: f64,
+    },
+    /// Add `extra_mbps` of background traffic for `duration_s`.
+    FlashCrowd {
+        extra_mbps: f64,
+        duration_s: f64,
+    },
+    /// For `duration_s`: new connections queue until the brownout
+    /// lifts, and every new request is rejected.
+    Brownout {
+        duration_s: f64,
+    },
+}
+
+impl FaultKind {
+    /// Parameter sanity.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            FaultKind::ConnectionReset { count } => {
+                if *count == 0 {
+                    return Err("ConnectionReset count must be >= 1".into());
+                }
+            }
+            FaultKind::Stall { frac, duration_s } => {
+                if !(0.0..=1.0).contains(frac) {
+                    return Err(format!("Stall frac {frac} outside [0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("Stall duration must be >= 0".into());
+                }
+            }
+            FaultKind::ServerError {
+                reject_prob,
+                duration_s,
+            } => {
+                if !(0.0..=1.0).contains(reject_prob) {
+                    return Err(format!("ServerError prob {reject_prob} outside [0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("ServerError duration must be >= 0".into());
+                }
+            }
+            FaultKind::RateCollapse { factor, duration_s } => {
+                if !(*factor > 0.0 && *factor <= 1.0) {
+                    return Err(format!("RateCollapse factor {factor} outside (0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("RateCollapse duration must be >= 0".into());
+                }
+            }
+            FaultKind::FlashCrowd {
+                extra_mbps,
+                duration_s,
+            } => {
+                if *extra_mbps < 0.0 || *duration_s < 0.0 {
+                    return Err("FlashCrowd params must be >= 0".into());
+                }
+            }
+            FaultKind::Brownout { duration_s } => {
+                if *duration_s < 0.0 {
+                    return Err("Brownout duration must be >= 0".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Short label for logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::ConnectionReset { .. } => "connection-reset",
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::ServerError { .. } => "server-error",
+            FaultKind::RateCollapse { .. } => "rate-collapse",
+            FaultKind::FlashCrowd { .. } => "flash-crowd",
+            FaultKind::Brownout { .. } => "brownout",
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated time (s) at which the fault fires.
+    pub at_s: f64,
+    pub kind: FaultKind,
+}
+
+/// A time-sorted list of faults the engine applies while stepping.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// Empty schedule (the benign default).
+    pub fn none() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    /// Build from events (sorted by time on construction).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultSchedule { events }
+    }
+
+    /// Time-ordered event list.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate every event.
+    pub fn validate(&self) -> Result<(), String> {
+        for ev in &self.events {
+            if !ev.at_s.is_finite() || ev.at_s < 0.0 {
+                return Err(format!("fault at_s {} must be finite and >= 0", ev.at_s));
+            }
+            ev.kind.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Merge two schedules (re-sorted).
+    pub fn merged(mut self, other: FaultSchedule) -> FaultSchedule {
+        self.events.extend(other.events);
+        FaultSchedule::new(self.events)
+    }
+}
+
+/// Named hostile profiles — each expands deterministically into a
+/// [`FaultSchedule`] for a given `(seed, horizon, link)` triple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultProfile {
+    /// No faults.
+    None,
+    /// Periodic mid-transfer connection resets (flaky WAN path).
+    Flaky,
+    /// Recurring multi-second delivery stalls on live flows.
+    Stalls,
+    /// Transient 5xx windows (overloaded archive front-end).
+    ServerErrors,
+    /// Deep per-connection rate collapses (path reroutes).
+    RateCollapse,
+    /// Background flash crowds eating most of the link.
+    FlashCrowd,
+    /// Server brownouts: no new connections or requests for a while.
+    Brownout,
+    /// Everything above, interleaved.
+    Chaos,
+}
+
+/// Profiles exercised by the controller×fault test matrix.
+pub const MATRIX_PROFILES: [FaultProfile; 6] = [
+    FaultProfile::Flaky,
+    FaultProfile::Stalls,
+    FaultProfile::ServerErrors,
+    FaultProfile::RateCollapse,
+    FaultProfile::FlashCrowd,
+    FaultProfile::Brownout,
+];
+
+impl FaultProfile {
+    /// Parse a CLI/profile name.
+    pub fn parse(s: &str) -> Result<FaultProfile, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(FaultProfile::None),
+            "flaky" | "resets" => Ok(FaultProfile::Flaky),
+            "stalls" | "stall" => Ok(FaultProfile::Stalls),
+            "errors" | "server-errors" | "5xx" => Ok(FaultProfile::ServerErrors),
+            "collapse" | "rate-collapse" => Ok(FaultProfile::RateCollapse),
+            "flashcrowd" | "flash-crowd" | "crowd" => Ok(FaultProfile::FlashCrowd),
+            "brownout" => Ok(FaultProfile::Brownout),
+            "chaos" | "all" => Ok(FaultProfile::Chaos),
+            other => Err(format!(
+                "unknown fault profile '{other}' \
+                 (none|flaky|stalls|errors|collapse|flashcrowd|brownout|chaos)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultProfile::None => "none",
+            FaultProfile::Flaky => "flaky",
+            FaultProfile::Stalls => "stalls",
+            FaultProfile::ServerErrors => "errors",
+            FaultProfile::RateCollapse => "collapse",
+            FaultProfile::FlashCrowd => "flashcrowd",
+            FaultProfile::Brownout => "brownout",
+            FaultProfile::Chaos => "chaos",
+        }
+    }
+
+    /// Expand to a concrete schedule covering `[0, horizon_s)`.
+    ///
+    /// `link_mbps` scales the flash-crowd magnitude. Identical
+    /// arguments produce identical schedules; the per-profile PRNG is
+    /// forked from `seed` with a profile-specific label so `chaos`
+    /// reproduces each component stream exactly.
+    pub fn schedule(&self, seed: u64, horizon_s: f64, link_mbps: f64) -> FaultSchedule {
+        let mut events = Vec::new();
+        match self {
+            FaultProfile::None => {}
+            FaultProfile::Flaky => gen_flaky(seed, horizon_s, &mut events),
+            FaultProfile::Stalls => gen_stalls(seed, horizon_s, &mut events),
+            FaultProfile::ServerErrors => gen_errors(seed, horizon_s, &mut events),
+            FaultProfile::RateCollapse => gen_collapse(seed, horizon_s, &mut events),
+            FaultProfile::FlashCrowd => gen_crowd(seed, horizon_s, link_mbps, &mut events),
+            FaultProfile::Brownout => gen_brownout(seed, horizon_s, &mut events),
+            FaultProfile::Chaos => {
+                gen_flaky(seed, horizon_s, &mut events);
+                gen_stalls(seed, horizon_s, &mut events);
+                gen_errors(seed, horizon_s, &mut events);
+                gen_collapse(seed, horizon_s, &mut events);
+                gen_crowd(seed, horizon_s, link_mbps, &mut events);
+                gen_brownout(seed, horizon_s, &mut events);
+            }
+        }
+        FaultSchedule::new(events)
+    }
+}
+
+fn profile_rng(seed: u64, label: u64) -> Prng {
+    Prng::new(seed ^ label.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+fn gen_flaky(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xF1A);
+    let mut t = rng.range_f64(5.0, 12.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::ConnectionReset {
+                count: 1 + rng.below(2) as usize,
+            },
+        });
+        t += rng.range_f64(10.0, 25.0);
+    }
+}
+
+fn gen_stalls(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0x57A);
+    let mut t = rng.range_f64(8.0, 16.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::Stall {
+                frac: rng.range_f64(0.4, 0.9),
+                duration_s: rng.range_f64(2.0, 6.0),
+            },
+        });
+        t += rng.range_f64(18.0, 40.0);
+    }
+}
+
+fn gen_errors(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0x5E5);
+    let mut t = rng.range_f64(6.0, 14.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::ServerError {
+                reject_prob: rng.range_f64(0.5, 0.9),
+                duration_s: rng.range_f64(3.0, 8.0),
+            },
+        });
+        t += rng.range_f64(20.0, 45.0);
+    }
+}
+
+fn gen_collapse(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xC01);
+    let mut t = rng.range_f64(10.0, 20.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::RateCollapse {
+                factor: rng.range_f64(0.1, 0.4),
+                duration_s: rng.range_f64(5.0, 15.0),
+            },
+        });
+        t += rng.range_f64(30.0, 60.0);
+    }
+}
+
+fn gen_crowd(seed: u64, horizon_s: f64, link_mbps: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xCD0);
+    let mut t = rng.range_f64(10.0, 20.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::FlashCrowd {
+                extra_mbps: link_mbps * rng.range_f64(0.5, 0.85),
+                duration_s: rng.range_f64(5.0, 15.0),
+            },
+        });
+        t += rng.range_f64(25.0, 55.0);
+    }
+}
+
+fn gen_brownout(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xB00);
+    let mut t = rng.range_f64(12.0, 24.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::Brownout {
+                duration_s: rng.range_f64(3.0, 8.0),
+            },
+        });
+        t += rng.range_f64(35.0, 70.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_sorted_and_deterministic() {
+        for p in MATRIX_PROFILES.iter().chain([&FaultProfile::Chaos]) {
+            let a = p.schedule(42, 600.0, 1_000.0);
+            let b = p.schedule(42, 600.0, 1_000.0);
+            assert_eq!(a, b, "profile {} not deterministic", p.name());
+            assert!(!a.is_empty(), "profile {} generated nothing", p.name());
+            a.validate().unwrap();
+            for w in a.events().windows(2) {
+                assert!(w[0].at_s <= w[1].at_s, "unsorted schedule");
+            }
+            let c = p.schedule(43, 600.0, 1_000.0);
+            assert_ne!(a, c, "profile {} ignores the seed", p.name());
+        }
+        assert!(FaultProfile::None.schedule(1, 600.0, 1_000.0).is_empty());
+    }
+
+    #[test]
+    fn chaos_contains_every_class() {
+        let s = FaultProfile::Chaos.schedule(7, 600.0, 2_000.0);
+        let mut names: Vec<&str> = s.events().iter().map(|e| e.kind.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6, "chaos missing classes: {names:?}");
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for p in [
+            FaultProfile::None,
+            FaultProfile::Flaky,
+            FaultProfile::Stalls,
+            FaultProfile::ServerErrors,
+            FaultProfile::RateCollapse,
+            FaultProfile::FlashCrowd,
+            FaultProfile::Brownout,
+            FaultProfile::Chaos,
+        ] {
+            assert_eq!(FaultProfile::parse(p.name()).unwrap(), p);
+        }
+        assert!(FaultProfile::parse("meteor-strike").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(FaultKind::ConnectionReset { count: 0 }.validate().is_err());
+        assert!(FaultKind::Stall {
+            frac: 1.5,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::RateCollapse {
+            factor: 0.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::ServerError {
+            reject_prob: -0.1,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        let bad = FaultSchedule::new(vec![FaultEvent {
+            at_s: -1.0,
+            kind: FaultKind::Brownout { duration_s: 1.0 },
+        }]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn merged_schedules_stay_sorted() {
+        let a = FaultProfile::Flaky.schedule(1, 300.0, 1_000.0);
+        let b = FaultProfile::Brownout.schedule(1, 300.0, 1_000.0);
+        let n = a.len() + b.len();
+        let m = a.merged(b);
+        assert_eq!(m.len(), n);
+        for w in m.events().windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+    }
+}

@@ -58,6 +58,12 @@ pub struct SimFlow {
     jitter: f64,
     /// Opaque tag the coordinator uses to map flows to work items.
     pub tag: u64,
+    /// Injected stall: demand is zero until this simulated timestamp
+    /// (absolute engine time; 0 = no stall).
+    pub stalled_until_s: f64,
+    /// Injected transient server error: the in-flight request will be
+    /// rejected when its first-byte timer fires.
+    pub reject_pending: bool,
 }
 
 /// Initial slow-start ramp fraction.
@@ -83,6 +89,8 @@ impl SimFlow {
             ramp: RAMP_START,
             jitter,
             tag: 0,
+            stalled_until_s: 0.0,
+            reject_pending: false,
         }
     }
 
@@ -98,6 +106,23 @@ impl SimFlow {
 
     pub fn is_closed(&self) -> bool {
         matches!(self.phase, FlowPhase::Closed)
+    }
+
+    /// Whether the flow has a request in flight (FirstByte or Active) —
+    /// the population fault injection selects reset victims from.
+    pub fn is_busy(&self) -> bool {
+        matches!(self.phase, FlowPhase::FirstByte { .. } | FlowPhase::Active)
+    }
+
+    /// Abort the in-flight request (injected server rejection): the
+    /// connection survives and returns to Idle; the caller reschedules
+    /// the work elsewhere or retries after backoff.
+    pub fn abort_request(&mut self) {
+        debug_assert!(self.is_busy(), "abort_request on non-busy flow");
+        self.request_remaining = 0.0;
+        self.request_age_s = 0.0;
+        self.reject_pending = false;
+        self.phase = FlowPhase::Idle;
     }
 
     /// Issue a request for `bytes` on this (idle) connection.
@@ -236,6 +261,21 @@ mod tests {
         let d1 = f.demand_mbps(100.0, 1.0);
         assert!(d0 < d1);
         assert!((d1 - 100.0).abs() < 1.0, "ramp should saturate: {d1}");
+    }
+
+    #[test]
+    fn abort_request_returns_to_idle_and_is_reusable() {
+        let mut f = mk_flow();
+        f.tick_phase(1.0);
+        f.begin_request(1000.0, 0.1);
+        f.reject_pending = true;
+        assert!(f.is_busy());
+        f.abort_request();
+        assert!(f.is_idle());
+        assert!(!f.reject_pending);
+        assert_eq!(f.delivered_bytes, 0.0);
+        f.begin_request(500.0, 0.0);
+        assert!(f.is_active());
     }
 
     #[test]

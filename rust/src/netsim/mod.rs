@@ -19,7 +19,12 @@
 //!   (the single-stream degradation of Figure 1) ([`server`]),
 //! * **client-side overheads** — stream-management penalty growing with
 //!   concurrency and an aggregate write ceiling, which produce the
-//!   "excessive load" regime of §3 ([`client`]).
+//!   "excessive load" regime of §3 ([`client`]),
+//! * **injected faults** — seeded, declarative schedules of connection
+//!   resets, delivery stalls, transient 5xx windows, per-connection
+//!   rate collapses, flash crowds, and server brownouts ([`fault`]),
+//!   the substrate for testing recovery behaviour under hostile
+//!   networks.
 //!
 //! Time is virtual: [`engine::NetSim::step`] advances the world by `dt`
 //! seconds of simulated time in microseconds of wall time, so the
@@ -28,6 +33,7 @@
 
 pub mod client;
 pub mod engine;
+pub mod fault;
 pub mod flow;
 pub mod link;
 pub mod server;
@@ -35,6 +41,7 @@ pub mod traffic;
 
 pub use client::ClientProfile;
 pub use engine::{FlowEvent, NetSim, NetSimConfig, StepReport};
+pub use fault::{FaultEvent, FaultKind, FaultProfile, FaultSchedule};
 pub use flow::{FlowId, FlowPhase};
 pub use server::ServerProfile;
 pub use traffic::OuProcess;

@@ -24,10 +24,12 @@ use crate::runtime::SharedRuntime;
 use crate::util::prng::Prng;
 use crate::Result;
 
-/// Bayesian controller driving the `bayes_step` artifact.
+/// Bayesian controller driving the `bayes_step` artifact — or, without
+/// a runtime ([`BayesController::new_mirror`]), the pure-Rust GP/EI
+/// mirrors in [`crate::optimizer::mirror`] (same math, f64 precision).
 pub struct BayesController {
     cfg: OptimizerConfig,
-    runtime: SharedRuntime,
+    runtime: Option<SharedRuntime>,
     /// Bucketed observation memory: slot i covers one concurrency
     /// region; `None` = never observed.
     buckets: Vec<Option<Probe>>,
@@ -48,13 +50,31 @@ pub struct BayesController {
 
 impl BayesController {
     pub fn new(cfg: OptimizerConfig, runtime: SharedRuntime) -> BayesController {
-        let consts = runtime.constants();
-        let grid: Vec<f32> = (1..=consts.grid).map(|i| i as f32).collect();
+        Self::build(cfg, Some(runtime))
+    }
+
+    /// Runtime-free controller running the pure-Rust GP/EI mirrors.
+    pub fn new_mirror(cfg: OptimizerConfig) -> BayesController {
+        Self::build(cfg, None)
+    }
+
+    fn build(cfg: OptimizerConfig, runtime: Option<SharedRuntime>) -> BayesController {
+        let (window, grid_len) = match &runtime {
+            Some(rt) => {
+                let c = rt.constants();
+                (c.window, c.grid)
+            }
+            None => (
+                crate::runtime::EXPECTED_WINDOW,
+                crate::runtime::EXPECTED_GRID,
+            ),
+        };
+        let grid: Vec<f32> = (1..=grid_len).map(|i| i as f32).collect();
         let span = (cfg.c_max - cfg.c_min + 1) as f64;
-        let bucket_width = (span / consts.window as f64).max(1.0);
+        let bucket_width = (span / window as f64).max(1.0);
         BayesController {
             c_target: cfg.c_init,
-            buckets: vec![None; consts.window],
+            buckets: vec![None; window],
             bucket_width,
             grid,
             seed_probes: 3,
@@ -75,6 +95,63 @@ impl BayesController {
     fn bucket_of(&self, concurrency: f64) -> usize {
         let idx = ((concurrency - self.cfg.c_min as f64) / self.bucket_width).floor();
         (idx.max(0.0) as usize).min(self.buckets.len() - 1)
+    }
+
+    /// Pure-Rust replacement for the `bayes_step` artifact: utilities →
+    /// GP posterior on the candidate grid → expected-improvement
+    /// argmax. Returns the proposed next concurrency.
+    ///
+    /// `u_norm` is the same rescale the artifact receives in
+    /// `params[6]` — the max observed throughput — so mirror and
+    /// artifact fit the GP on identically scaled utilities (the xi
+    /// term in EI is absolute; a different scale would move the
+    /// argmax).
+    fn mirror_step(&mut self, c_obs: &[f32], t_obs: &[f32], valid: &[f32], u_norm: f64) -> f64 {
+        use crate::optimizer::mirror;
+        let c64: Vec<f64> = c_obs.iter().map(|&x| x as f64).collect();
+        let v64: Vec<f64> = valid.iter().map(|&x| x as f64).collect();
+        let scale = if u_norm > 0.0 { 1.0 / u_norm } else { 1.0 };
+        let u64v: Vec<f64> = c64
+            .iter()
+            .zip(t_obs)
+            .zip(&v64)
+            .map(|((&c, &t), &v)| {
+                if v > 0.5 {
+                    mirror::utility(t as f64, c, self.cfg.k) * scale
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let grid: Vec<f64> = self.grid.iter().map(|&g| g as f64).collect();
+        let (mu, std) = mirror::gp_posterior_mirror(
+            &c64,
+            &u64v,
+            &v64,
+            &grid,
+            self.cfg.bayes_lengthscale,
+            self.cfg.bayes_noise,
+        );
+        let best = u64v
+            .iter()
+            .zip(&v64)
+            .filter(|&(_, &v)| v > 0.5)
+            .map(|(&u, _)| u)
+            .fold(0.0f64, f64::max);
+        let mut best_c = self.cfg.c_min as f64;
+        let mut best_ei = f64::NEG_INFINITY;
+        for (j, &g) in grid.iter().enumerate() {
+            if g < self.cfg.c_min as f64 || g > self.cfg.c_max as f64 {
+                continue;
+            }
+            let ei = mirror::expected_improvement_mirror(mu[j], std[j], best, self.cfg.bayes_xi);
+            if ei > best_ei {
+                best_ei = ei;
+                best_c = g;
+            }
+        }
+        self.last_ei_max = best_ei;
+        best_c
     }
 
     /// Export the bucket memory in artifact shape.
@@ -112,24 +189,30 @@ impl ConcurrencyController for BayesController {
 
         let (c_obs, t_obs, valid, max_t) = self.export();
         let u_norm = if max_t > 0.0 { max_t } else { 1.0 };
-        let params: [f32; 8] = [
-            self.cfg.k as f32,
-            self.cfg.bayes_lengthscale as f32,
-            self.cfg.bayes_noise as f32,
-            self.cfg.bayes_xi as f32,
-            self.cfg.c_min as f32,
-            self.cfg.c_max as f32,
-            u_norm as f32,
-            0.0,
-        ];
-        let out = self
-            .runtime
-            .bayes_step(&c_obs, &t_obs, &valid, &self.grid, &params)?;
-        self.steps_executed += 1;
-        let g = self.grid.len();
-        let ei = &out[2 * g..3 * g];
-        self.last_ei_max = ei.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
-        let next_c = out[3 * g + 1] as f64;
+        // Clone the Arc handle so the match holds no borrow of self.
+        let runtime = self.runtime.clone();
+        let next_c = match runtime {
+            Some(rt) => {
+                let params: [f32; 8] = [
+                    self.cfg.k as f32,
+                    self.cfg.bayes_lengthscale as f32,
+                    self.cfg.bayes_noise as f32,
+                    self.cfg.bayes_xi as f32,
+                    self.cfg.c_min as f32,
+                    self.cfg.c_max as f32,
+                    u_norm as f32,
+                    0.0,
+                ];
+                let out = rt.bayes_step(&c_obs, &t_obs, &valid, &self.grid, &params)?;
+                self.steps_executed += 1;
+                let g = self.grid.len();
+                let ei = &out[2 * g..3 * g];
+                self.last_ei_max =
+                    ei.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+                out[3 * g + 1] as f64
+            }
+            None => self.mirror_step(&c_obs, &t_obs, &valid, u_norm),
+        };
         self.c_target = next_c
             .round()
             .clamp(self.cfg.c_min as f64, self.cfg.c_max as f64) as usize;

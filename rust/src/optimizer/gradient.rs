@@ -23,10 +23,15 @@ use crate::optimizer::{ConcurrencyController, Probe};
 use crate::runtime::SharedRuntime;
 use crate::Result;
 
-/// Gradient-descent controller driving the `gd_step` artifact.
+/// Gradient-descent controller driving the `gd_step` artifact — or,
+/// when built without a runtime ([`GdController::new_mirror`]), the
+/// bit-for-bit pure-Rust mirror of the same math
+/// ([`crate::optimizer::mirror::gd_step_mirror`]). The mirror path
+/// exists so fault/recovery tests and artifact-less environments can
+/// still run the adaptive controller deterministically.
 pub struct GdController {
     cfg: OptimizerConfig,
-    runtime: SharedRuntime,
+    runtime: Option<SharedRuntime>,
     history: ProbeHistory,
     /// Continuous concurrency state (the artifact's `next_c`).
     c_continuous: f64,
@@ -35,13 +40,26 @@ pub struct GdController {
     /// Diagnostics: last gradient and step returned by the artifact.
     pub last_gradient: f64,
     pub last_step: f64,
-    /// Total artifact invocations (perf accounting).
+    /// Total artifact invocations (perf accounting; mirror steps do
+    /// not count).
     pub steps_executed: u64,
 }
 
 impl GdController {
     pub fn new(cfg: OptimizerConfig, runtime: SharedRuntime) -> GdController {
-        let window = runtime.constants().window;
+        Self::build(cfg, Some(runtime))
+    }
+
+    /// Runtime-free controller running the pure-Rust mirror math.
+    pub fn new_mirror(cfg: OptimizerConfig) -> GdController {
+        Self::build(cfg, None)
+    }
+
+    fn build(cfg: OptimizerConfig, runtime: Option<SharedRuntime>) -> GdController {
+        let window = runtime
+            .as_ref()
+            .map(|r| r.constants().window)
+            .unwrap_or(crate::runtime::EXPECTED_WINDOW);
         GdController {
             c_continuous: cfg.c_init as f64,
             c_target: cfg.c_init,
@@ -65,21 +83,45 @@ impl ConcurrencyController for GdController {
     fn on_probe(&mut self, probe: Probe) -> Result<usize> {
         self.history.push(probe);
         let (c_hist, t_hist, weights) = self.history.export();
-        let params: [f32; 8] = [
-            self.cfg.k as f32,
-            self.cfg.lr as f32,
-            self.cfg.step_clip as f32,
-            self.cfg.c_min as f32,
-            self.cfg.c_max as f32,
-            self.c_continuous as f32,
-            0.0,
-            0.0,
-        ];
-        let out = self.runtime.gd_step(&c_hist, &t_hist, &weights, &params)?;
-        self.steps_executed += 1;
-        self.c_continuous = out[0] as f64;
-        self.last_gradient = out[1] as f64;
-        self.last_step = out[2] as f64;
+        // Clone the Arc handle so the match holds no borrow of self.
+        let runtime = self.runtime.clone();
+        let (next_c, grad, step) = match runtime {
+            Some(rt) => {
+                let params: [f32; 8] = [
+                    self.cfg.k as f32,
+                    self.cfg.lr as f32,
+                    self.cfg.step_clip as f32,
+                    self.cfg.c_min as f32,
+                    self.cfg.c_max as f32,
+                    self.c_continuous as f32,
+                    0.0,
+                    0.0,
+                ];
+                let out = rt.gd_step(&c_hist, &t_hist, &weights, &params)?;
+                self.steps_executed += 1;
+                (out[0] as f64, out[1] as f64, out[2] as f64)
+            }
+            None => {
+                let c64: Vec<f64> = c_hist.iter().map(|&x| x as f64).collect();
+                let t64: Vec<f64> = t_hist.iter().map(|&x| x as f64).collect();
+                let w64: Vec<f64> = weights.iter().map(|&x| x as f64).collect();
+                let (next, grad, step, _) = crate::optimizer::mirror::gd_step_mirror(
+                    &c64,
+                    &t64,
+                    &w64,
+                    self.cfg.k,
+                    self.cfg.lr,
+                    self.cfg.step_clip,
+                    self.cfg.c_min as f64,
+                    self.cfg.c_max as f64,
+                    self.c_continuous,
+                );
+                (next, grad, step)
+            }
+        };
+        self.c_continuous = next_c;
+        self.last_gradient = grad;
+        self.last_step = step;
         self.c_target = self.round_clamp(self.c_continuous);
         Ok(self.c_target)
     }
@@ -95,7 +137,34 @@ impl ConcurrencyController for GdController {
 
 #[cfg(test)]
 mod tests {
-    // GdController needs compiled artifacts; its behavioural tests live
-    // in `rust/tests/controller_integration.rs`. Unit-level coverage of
-    // the same math is in `optimizer::mirror`.
+    // The artifact-backed path needs compiled artifacts; its
+    // behavioural tests live in `rust/tests/controller_integration.rs`.
+    // The mirror path is self-contained:
+
+    use super::*;
+    use crate::config::OptimizerConfig;
+
+    #[test]
+    fn mirror_controller_explores_up_then_follows_gradient() {
+        let mut gd = GdController::new_mirror(OptimizerConfig::default());
+        assert_eq!(gd.current(), 1);
+        // Degenerate window (single concurrency level) => +1 explore.
+        let c1 = gd
+            .on_probe(Probe {
+                concurrency: 1.0,
+                mbps: 100.0,
+            })
+            .unwrap();
+        assert_eq!(c1, 2);
+        // Linear throughput growth => positive gradient, keeps rising.
+        let c2 = gd
+            .on_probe(Probe {
+                concurrency: 2.0,
+                mbps: 200.0,
+            })
+            .unwrap();
+        assert!(c2 >= c1);
+        assert!(gd.last_gradient > 0.0);
+        assert_eq!(gd.steps_executed, 0, "mirror must not count artifact calls");
+    }
 }

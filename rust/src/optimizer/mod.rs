@@ -62,26 +62,25 @@ pub trait ConcurrencyController {
 
 /// Build the controller selected by `cfg.kind`.
 ///
-/// `runtime` is required for the adaptive controllers (they execute
-/// XLA artifacts); `Fixed` ignores it.
+/// With `runtime == Some(..)` the adaptive controllers execute the XLA
+/// artifacts; with `None` they fall back to the pure-Rust mirrors of
+/// the same math — identical control flow, f64 precision — so fault
+/// matrices and artifact-less environments still exercise GD/Bayes.
+/// `Fixed` ignores the runtime either way.
 pub fn build_controller(
     cfg: &OptimizerConfig,
     runtime: Option<SharedRuntime>,
 ) -> Result<Box<dyn ConcurrencyController>> {
     cfg.validate()?;
     match cfg.kind {
-        OptimizerKind::GradientDescent => {
-            let rt = runtime.ok_or_else(|| {
-                crate::Error::Config("gradient-descent controller needs the XLA runtime".into())
-            })?;
-            Ok(Box::new(GdController::new(cfg.clone(), rt)))
-        }
-        OptimizerKind::Bayesian => {
-            let rt = runtime.ok_or_else(|| {
-                crate::Error::Config("bayesian controller needs the XLA runtime".into())
-            })?;
-            Ok(Box::new(BayesController::new(cfg.clone(), rt)))
-        }
+        OptimizerKind::GradientDescent => Ok(Box::new(match runtime {
+            Some(rt) => GdController::new(cfg.clone(), rt),
+            None => GdController::new_mirror(cfg.clone()),
+        })),
+        OptimizerKind::Bayesian => Ok(Box::new(match runtime {
+            Some(rt) => BayesController::new(cfg.clone(), rt),
+            None => BayesController::new_mirror(cfg.clone()),
+        })),
         OptimizerKind::Fixed => Ok(Box::new(FixedController::new(cfg.fixed_level))),
     }
 }

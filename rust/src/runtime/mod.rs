@@ -15,7 +15,10 @@
 mod artifacts;
 mod executable;
 
-pub use artifacts::{ArtifactManifest, ArtifactSpec, ModelConstants};
+pub use artifacts::{
+    ArtifactManifest, ArtifactSpec, ModelConstants, EXPECTED_GRID, EXPECTED_SAMPLES,
+    EXPECTED_WINDOW,
+};
 pub use executable::CompiledArtifact;
 
 use std::path::{Path, PathBuf};

@@ -55,12 +55,30 @@ pub struct SessionReport {
     pub probes: usize,
     /// Number of files fully delivered.
     pub files_completed: usize,
+    /// Chunks returned to the queue and re-requested — connection
+    /// resets, transient server errors, and worker parks mid-assignment
+    /// all land here. Zero on a healthy network.
+    pub chunk_retries: usize,
+    /// Connections lost mid-request (injected resets / transport
+    /// errors); each forced a reconnect.
+    pub connection_resets: usize,
+    /// Requests rejected by transient server errors (HTTP 5xx
+    /// analogue); the connection survived, the chunk was retried.
+    pub server_rejects: usize,
+    /// Whether the transfer ran to completion. `false` only for
+    /// checkpoint-interrupted simulated sessions (see
+    /// [`sim::SimSession::with_checkpoint_after`]); resuming from
+    /// [`SessionReport::frontiers`] finishes the job.
+    pub completed: bool,
+    /// Per-file contiguous completed prefixes at session end — exactly
+    /// what [`crate::coordinator::resume::ProgressJournal`] persists.
+    pub frontiers: Vec<u64>,
 }
 
 impl SessionReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<12} {:>8.1}s  {:>9.1} Mbps mean  {:>9.1} Mbps peak  C̄={:.2}  ({} files, {} probes)",
             self.tool,
             self.duration_s,
@@ -69,6 +87,16 @@ impl SessionReport {
             self.mean_concurrency,
             self.files_completed,
             self.probes,
-        )
+        );
+        if self.chunk_retries > 0 {
+            s.push_str(&format!(
+                "  [{} retries: {} resets, {} 5xx]",
+                self.chunk_retries, self.connection_resets, self.server_rejects
+            ));
+        }
+        if !self.completed {
+            s.push_str("  [checkpointed]");
+        }
+        s
     }
 }

@@ -55,6 +55,11 @@ pub struct RealSessionParams<'a> {
     pub name: String,
 }
 
+/// A worker gives up (and fails the whole session) only after this many
+/// consecutive chunk failures — isolated disconnects and transient 5xx
+/// responses are retried with backoff instead.
+const MAX_CONSECUTIVE_FAILURES: usize = 6;
+
 struct WorkerShared {
     scheduler: Mutex<ChunkScheduler>,
     status: StatusArray,
@@ -62,8 +67,34 @@ struct WorkerShared {
     records: Vec<RunRecord>,
     in_flight: AtomicUsize,
     sink: Sink,
-    /// First worker error (the session fails loudly, not silently).
+    /// First *persistent* worker error (the session fails loudly, not
+    /// silently, once retries are exhausted).
     first_error: Mutex<Option<Error>>,
+    /// Recovery accounting for the report.
+    chunk_retries: AtomicUsize,
+    connection_resets: AtomicUsize,
+    server_rejects: AtomicUsize,
+}
+
+/// Why a chunk attempt failed — drives retry accounting.
+enum ChunkFailure {
+    /// Connection-level failure (reset, short body, connect error):
+    /// the worker reconnects before retrying.
+    Transport(Error),
+    /// Server said 5xx: the connection may be reusable, but we drop it
+    /// too — archives often brown out per-connection state.
+    Reject(Error),
+    /// Deterministic failure (malformed URL, 4xx, local I/O): retrying
+    /// cannot help; fail the session immediately.
+    Fatal(Error),
+}
+
+impl ChunkFailure {
+    fn into_error(self) -> Error {
+        match self {
+            ChunkFailure::Transport(e) | ChunkFailure::Reject(e) | ChunkFailure::Fatal(e) => e,
+        }
+    }
 }
 
 /// Run a real-socket transfer to completion.
@@ -119,6 +150,9 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         in_flight: AtomicUsize::new(0),
         sink: params.sink.clone(),
         first_error: Mutex::new(None),
+        chunk_retries: AtomicUsize::new(0),
+        connection_resets: AtomicUsize::new(0),
+        server_rejects: AtomicUsize::new(0),
     });
 
     // --- Spawn workers. ---
@@ -229,7 +263,10 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
     let samples = shared.recorder.samples();
     let timeline = per_second_bins(&samples);
     let total_bytes = shared.recorder.total_bytes();
-    let files_completed = shared.scheduler.lock().unwrap().files_completed();
+    let (files_completed, frontiers) = {
+        let sched = shared.scheduler.lock().unwrap();
+        (sched.files_completed(), sched.frontiers())
+    };
     Ok(SessionReport {
         tool: params.name,
         duration_s: duration,
@@ -243,12 +280,20 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         concurrency_trace: trace,
         probes,
         files_completed,
+        chunk_retries: shared.chunk_retries.load(Ordering::Relaxed),
+        connection_resets: shared.connection_resets.load(Ordering::Relaxed),
+        server_rejects: shared.server_rejects.load(Ordering::Relaxed),
+        completed: true,
+        frontiers,
     })
 }
 
-/// One worker thread: poll status → pull chunk → stream it.
+/// One worker thread: poll status → pull chunk → stream it. Transient
+/// failures (disconnects, 5xx) requeue the chunk and retry after
+/// backoff; only `MAX_CONSECUTIVE_FAILURES` in a row fail the session.
 fn worker_loop(index: usize, shared: &WorkerShared) {
     let mut conn: Option<HttpConnection> = None;
+    let mut consecutive_failures = 0usize;
     loop {
         if shared.status.is_stopped(index) {
             return;
@@ -279,19 +324,43 @@ fn worker_loop(index: usize, shared: &WorkerShared) {
 
         match outcome {
             Ok(()) => {
+                consecutive_failures = 0;
                 shared.scheduler.lock().unwrap().chunk_done(&chunk);
             }
-            Err(e) => {
-                // Requeue and reconnect; record the first hard error.
+            Err(failure) => {
+                // Requeue so the outstanding accounting stays exact,
+                // then reconnect and retry transient failures;
+                // deterministic ones fail the session immediately.
                 conn = None;
-                let mut sched = shared.scheduler.lock().unwrap();
-                sched.chunk_failed(chunk);
-                drop(sched);
-                let mut slot = shared.first_error.lock().unwrap();
-                if slot.is_none() {
-                    *slot = Some(e);
+                shared.scheduler.lock().unwrap().chunk_failed(chunk);
+                match &failure {
+                    ChunkFailure::Transport(_) => {
+                        shared.connection_resets.fetch_add(1, Ordering::Relaxed);
+                        shared.chunk_retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ChunkFailure::Reject(_) => {
+                        shared.server_rejects.fetch_add(1, Ordering::Relaxed);
+                        shared.chunk_retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ChunkFailure::Fatal(_) => {
+                        let mut slot = shared.first_error.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(failure.into_error());
+                        }
+                        return;
+                    }
                 }
-                std::thread::sleep(Duration::from_millis(20));
+                consecutive_failures += 1;
+                if consecutive_failures >= MAX_CONSECUTIVE_FAILURES {
+                    let mut slot = shared.first_error.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(failure.into_error());
+                    }
+                    return;
+                }
+                // Exponential backoff, capped well under probe cadence.
+                let backoff = 20u64 << consecutive_failures.min(5);
+                std::thread::sleep(Duration::from_millis(backoff.min(640)));
             }
         }
     }
@@ -302,27 +371,31 @@ fn stream_chunk(
     conn: &mut Option<HttpConnection>,
     shared: &WorkerShared,
     chunk: &Chunk,
-) -> Result<()> {
+) -> std::result::Result<(), ChunkFailure> {
     let record = &shared.records[chunk.file];
-    let (host, port, path) = HttpConnection::split_url(&record.url)?;
+    // A URL that doesn't parse can never succeed: fatal, not retried.
+    let (host, port, path) =
+        HttpConnection::split_url(&record.url).map_err(ChunkFailure::Fatal)?;
     if conn.is_none() {
-        *conn = Some(HttpConnection::connect(
-            &host,
-            port,
-            Duration::from_secs(10),
-        )?);
+        *conn = Some(
+            HttpConnection::connect(&host, port, Duration::from_secs(10))
+                .map_err(ChunkFailure::Transport)?,
+        );
     }
     let c = conn.as_mut().unwrap();
 
-    // Output plumbing.
+    // Output plumbing. Local I/O failures are deterministic: fatal.
     let mut file = match &shared.sink {
         Sink::Discard => None,
         Sink::Directory(dir) => {
             use std::io::{Seek, SeekFrom};
             let path = std::path::Path::new(dir).join(&record.accession);
-            let mut f = std::fs::OpenOptions::new().write(true).open(&path)?;
-            f.seek(SeekFrom::Start(chunk.offset))?;
-            Some(f)
+            let open = || -> Result<std::fs::File> {
+                let mut f = std::fs::OpenOptions::new().write(true).open(&path)?;
+                f.seek(SeekFrom::Start(chunk.offset))?;
+                Ok(f)
+            };
+            Some(open().map_err(ChunkFailure::Fatal)?)
         }
     };
 
@@ -332,26 +405,36 @@ fn stream_chunk(
         Some((chunk.offset, chunk.len))
     };
     let mut written: u64 = 0;
-    let resp = c.get_range(&path, range, |block| {
-        shared.recorder.add_bytes(block.len() as u64);
-        written += block.len() as u64;
-        if let Some(f) = &mut file {
-            use std::io::Write;
-            // Errors surface through the length check below.
-            let _ = f.write_all(block);
-        }
-    })?;
-    if !(resp.status == 200 || resp.status == 206) {
-        return Err(Error::Transport(format!(
+    let resp = c
+        .get_range(&path, range, |block| {
+            shared.recorder.add_bytes(block.len() as u64);
+            written += block.len() as u64;
+            if let Some(f) = &mut file {
+                use std::io::Write;
+                // Errors surface through the length check below.
+                let _ = f.write_all(block);
+            }
+        })
+        .map_err(ChunkFailure::Transport)?;
+    if resp.status >= 500 {
+        // Transient server error: retryable, counted separately.
+        return Err(ChunkFailure::Reject(Error::Transport(format!(
             "GET {path} range {:?}: HTTP {}",
             range, resp.status
-        )));
+        ))));
+    }
+    if !(resp.status == 200 || resp.status == 206) {
+        // 4xx and friends are deterministic: retrying cannot help.
+        return Err(ChunkFailure::Fatal(Error::Transport(format!(
+            "GET {path} range {:?}: HTTP {}",
+            range, resp.status
+        ))));
     }
     if written != chunk.len {
-        return Err(Error::Transport(format!(
+        return Err(ChunkFailure::Transport(Error::Transport(format!(
             "GET {path}: short body {written} of {} bytes",
             chunk.len
-        )));
+        ))));
     }
     Ok(())
 }

@@ -71,8 +71,13 @@ pub struct SimSessionParams<'a> {
     pub seed: u64,
 }
 
+/// Slot backoff bounds (virtual seconds) after a failed or rejected
+/// chunk: doubles per consecutive failure, resets on success.
+const BACKOFF_MIN_S: f64 = 0.25;
+const BACKOFF_MAX_S: f64 = 4.0;
+
 /// Per-worker-slot state.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct WorkerSlot {
     flow: Option<FlowId>,
     chunk: Option<Chunk>,
@@ -81,24 +86,83 @@ struct WorkerSlot {
     wait_until: f64,
     /// Request currently in flight.
     in_flight: bool,
+    /// No new request before this time (failure backoff).
+    next_allowed: f64,
+    /// Current backoff span; doubles per consecutive failure.
+    backoff_s: f64,
+}
+
+impl Default for WorkerSlot {
+    fn default() -> Self {
+        WorkerSlot {
+            flow: None,
+            chunk: None,
+            wait_until: 0.0,
+            in_flight: false,
+            next_allowed: 0.0,
+            backoff_s: BACKOFF_MIN_S,
+        }
+    }
+}
+
+impl WorkerSlot {
+    /// Register a failed/rejected attempt: next request waits out an
+    /// exponentially growing backoff.
+    fn penalize(&mut self, now: f64) {
+        self.next_allowed = now + self.backoff_s;
+        self.backoff_s = (self.backoff_s * 2.0).min(BACKOFF_MAX_S);
+    }
+
+    fn reward(&mut self) {
+        self.backoff_s = BACKOFF_MIN_S;
+    }
 }
 
 /// The driver.
 pub struct SimSession<'a> {
     params: SimSessionParams<'a>,
+    /// Bytes already on disk per file (resume from a prior journal).
+    done_prefix: Option<Vec<u64>>,
+    /// Stop (checkpoint) after this much virtual transfer time; the
+    /// report then has `completed == false` and carries the frontiers
+    /// a follow-up session resumes from.
+    checkpoint_after_s: Option<f64>,
 }
 
 impl<'a> SimSession<'a> {
     pub fn new(params: SimSessionParams<'a>) -> SimSession<'a> {
-        SimSession { params }
+        SimSession {
+            params,
+            done_prefix: None,
+            checkpoint_after_s: None,
+        }
     }
 
-    /// Run to completion; returns the report.
+    /// Resume: `prefix[i]` bytes of file `i` are already on disk (a
+    /// [`crate::coordinator::resume::ProgressJournal`]'s frontiers) and
+    /// are never re-requested.
+    pub fn with_progress(mut self, prefix: Vec<u64>) -> SimSession<'a> {
+        self.done_prefix = Some(prefix);
+        self
+    }
+
+    /// Interrupt the session after `secs` of virtual transfer time —
+    /// the simulated analogue of a crash/Ctrl-C, used to test
+    /// checkpoint/restore across injected failures.
+    pub fn with_checkpoint_after(mut self, secs: f64) -> SimSession<'a> {
+        self.checkpoint_after_s = Some(secs);
+        self
+    }
+
+    /// Run to completion (or checkpoint); returns the report.
     pub fn run(mut self) -> Result<SessionReport> {
+        let done_prefix = self.done_prefix.take();
+        let checkpoint_after_s = self.checkpoint_after_s;
         let p = &mut self.params;
         p.download.validate()?;
         let mut sim = NetSim::new(p.netsim.clone(), p.seed)?;
-        let mut sched = ChunkScheduler::new(&p.records, p.behavior.mode);
+        let mut sched =
+            ChunkScheduler::new_with_progress(&p.records, p.behavior.mode, done_prefix.as_deref());
         let capacity = p.download.optimizer.c_max;
         let status = StatusArray::new(capacity);
         let recorder = ThroughputRecorder::new();
@@ -126,6 +190,11 @@ impl<'a> SimSession<'a> {
         let mut probes = 0usize;
         // Time-weighted target integral for the paper's Concurrency column.
         let mut target_time = 0.0f64;
+        // Recovery accounting (fault injection / hostile scenarios).
+        let mut chunk_retries = 0usize;
+        let mut connection_resets = 0usize;
+        let mut server_rejects = 0usize;
+        let mut completed = true;
         let hard_timeout = if p.download.timeout_s > 0.0 {
             p.download.timeout_s
         } else {
@@ -134,6 +203,12 @@ impl<'a> SimSession<'a> {
 
         while !sched.all_done() {
             let now = sim.now();
+            if let Some(limit) = checkpoint_after_s {
+                if now - start >= limit {
+                    completed = false;
+                    break;
+                }
+            }
             if now - start > hard_timeout {
                 status.stop_all();
                 return Err(Error::Session(format!(
@@ -153,11 +228,17 @@ impl<'a> SimSession<'a> {
                         slot.flow = Some(sim.open_flow()?);
                     }
                 } else if !running && !slot.in_flight {
-                    // Parked and drained: release the connection.
+                    // Parked and drained: release the connection, and
+                    // requeue any chunk that was assigned but never
+                    // issued (waiting on resolution/handshake) — a
+                    // parked worker must not strand outstanding work.
                     if let Some(f) = slot.flow.take() {
                         sim.close_flow(f);
                     }
-                    slot.chunk = None;
+                    if let Some(chunk) = slot.chunk.take() {
+                        sched.chunk_failed(chunk);
+                        chunk_retries += 1;
+                    }
                 }
             }
 
@@ -172,12 +253,13 @@ impl<'a> SimSession<'a> {
                 }
                 if slot.chunk.is_none() {
                     // Pull the next chunk, charging serialized
-                    // resolution for cold files where applicable.
+                    // resolution for cold files where applicable, and
+                    // honoring the slot's failure backoff.
                     let per_file = p.behavior.resolution.per_file_latency();
                     if let Some(chunk) = sched.next_chunk() {
-                        let mut wait = now;
+                        let mut wait = now.max(slot.next_allowed);
                         if chunk.cold && per_file > 0.0 {
-                            let begin = res_free.max(now);
+                            let begin = res_free.max(wait);
                             res_free = begin + per_file;
                             wait = begin + per_file;
                         }
@@ -202,19 +284,27 @@ impl<'a> SimSession<'a> {
 
             // --- Account deliveries. ---
             for ev in &rep.events {
-                if ev.failed {
-                    // Injected connection reset: requeue the remaining
-                    // work and drop the dead connection; the reconcile
-                    // pass reopens one next step.
+                if ev.failed || ev.rejected {
+                    // Connection reset (flow is dead) or transient
+                    // server rejection (flow survives): requeue the
+                    // remaining work and back the slot off before its
+                    // next attempt.
                     if let Some(slot) = slots.iter_mut().find(|s| s.flow == Some(ev.id)) {
                         if let Some(chunk) = slot.chunk.take() {
                             // Bytes already delivered for this chunk are
                             // counted; re-download the whole chunk (range
                             // requests restart cleanly at chunk grain).
                             sched.chunk_failed(chunk);
+                            chunk_retries += 1;
                         }
                         slot.in_flight = false;
-                        slot.flow = None;
+                        slot.penalize(rep.now_s);
+                        if ev.failed {
+                            connection_resets += 1;
+                            slot.flow = None; // reconcile reopens one
+                        } else {
+                            server_rejects += 1;
+                        }
                     }
                     continue;
                 }
@@ -231,6 +321,7 @@ impl<'a> SimSession<'a> {
                             .expect("request completed with no chunk assigned");
                         sched.chunk_done(&chunk);
                         slot.in_flight = false;
+                        slot.reward();
                         if !p.behavior.keep_alive {
                             // Baselines: fresh connection per request.
                             sim.close_flow(ev.id);
@@ -293,6 +384,11 @@ impl<'a> SimSession<'a> {
             concurrency_trace: trace,
             probes,
             files_completed: sched.files_completed(),
+            chunk_retries,
+            connection_resets,
+            server_rejects,
+            completed,
+            frontiers: sched.frontiers(),
         })
     }
 }

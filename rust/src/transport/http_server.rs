@@ -46,6 +46,13 @@ pub struct ThrottleConfig {
     pub first_byte_latency_s: f64,
     /// Max simultaneous connections.
     pub max_connections: usize,
+    /// Fault injection: abort the TCP connection once a single response
+    /// has streamed this many payload bytes (0 = disabled). The client
+    /// sees a short body / reset mid-transfer and must retry.
+    pub fault_drop_after_bytes: u64,
+    /// Budget of mid-body drops to inject server-wide before the fault
+    /// "heals" (with `fault_drop_after_bytes > 0`).
+    pub fault_drop_count: usize,
 }
 
 impl Default for ThrottleConfig {
@@ -55,6 +62,8 @@ impl Default for ThrottleConfig {
             global_bytes_per_s: 0.0,
             first_byte_latency_s: 0.0,
             max_connections: 64,
+            fault_drop_after_bytes: 0,
+            fault_drop_count: 0,
         }
     }
 }
@@ -101,6 +110,8 @@ struct Shared {
     global_bucket: Option<TokenBucket>,
     active_connections: AtomicUsize,
     total_requests: AtomicUsize,
+    /// Mid-body drops injected so far (see `fault_drop_count`).
+    faults_injected: AtomicUsize,
 }
 
 impl ThrottledHttpServer {
@@ -125,6 +136,7 @@ impl ThrottledHttpServer {
             throttle,
             active_connections: AtomicUsize::new(0),
             total_requests: AtomicUsize::new(0),
+            faults_injected: AtomicUsize::new(0),
         });
 
         let accept_shared = shared.clone();
@@ -161,6 +173,14 @@ impl ThrottledHttpServer {
     /// Requests served so far (diagnostics).
     pub fn total_requests(&self) -> usize {
         self.shared.total_requests.load(Ordering::Relaxed)
+    }
+
+    /// Mid-body connection drops injected so far (fault injection).
+    pub fn faults_injected(&self) -> usize {
+        self.shared
+            .faults_injected
+            .load(Ordering::Relaxed)
+            .min(self.shared.throttle.fault_drop_count)
     }
 }
 
@@ -299,10 +319,23 @@ fn serve_connection(
         // --- Throttled body. ---
         let mut offset = start;
         let mut remaining = len;
+        let mut sent_this_response: u64 = 0;
         let mut buf = vec![0u8; 256 * 1024];
         while remaining > 0 {
             if shutdown.load(Ordering::Acquire) {
                 return Ok(());
+            }
+            // Fault injection: abort the connection mid-body while the
+            // drop budget lasts (the client observes a short body).
+            if shared.throttle.fault_drop_after_bytes > 0
+                && sent_this_response >= shared.throttle.fault_drop_after_bytes
+                && shared.faults_injected.load(Ordering::Relaxed)
+                    < shared.throttle.fault_drop_count
+            {
+                let n = shared.faults_injected.fetch_add(1, Ordering::Relaxed);
+                if n < shared.throttle.fault_drop_count {
+                    return Ok(()); // abrupt close, no more bytes
+                }
             }
             let want = (buf.len() as u64).min(remaining) as usize;
             if let Some(b) = &per_conn_bucket {
@@ -315,6 +348,7 @@ fn serve_connection(
             writer.write_all(&buf[..want])?;
             offset += want as u64;
             remaining -= want as u64;
+            sent_this_response += want as u64;
         }
         writer.flush()?;
         // Keep-alive: loop for the next request unless told otherwise.

@@ -1,0 +1,70 @@
+//! Shared fixtures for the fault/recovery integration suites
+//! (`prop_faults.rs`, `fault_matrix.rs`): one small hostile-network
+//! topology, runtime-free download configs, and synthetic workloads.
+
+#![allow(dead_code)]
+
+use fastbiodl::accession::RunRecord;
+use fastbiodl::config::{DownloadConfig, OptimizerKind};
+use fastbiodl::netsim::engine::BackgroundConfig;
+use fastbiodl::netsim::{ClientProfile, FaultSchedule, NetSimConfig, ServerProfile};
+
+/// Bottleneck of the shared test topology (Mbps).
+pub const LINK_MBPS: f64 = 50.0;
+/// Range-request grain used by every fault suite.
+pub const CHUNK_BYTES: u64 = 1024 * 1024;
+
+/// Synthetic workload with a per-suite accession prefix.
+pub fn fault_records(prefix: &str, sizes: &[u64]) -> Vec<RunRecord> {
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &bytes)| RunRecord {
+            accession: format!("{prefix}{i:04}"),
+            project: prefix.into(),
+            bytes,
+            url: format!("sim://{prefix}/{i}"),
+        })
+        .collect()
+}
+
+/// Quiet 50 Mbps / 10 Mbps-per-connection network carrying the given
+/// fault schedule — slow enough that transfers live long enough to
+/// meet their scheduled faults.
+pub fn fault_netsim(faults: FaultSchedule) -> NetSimConfig {
+    NetSimConfig {
+        link_capacity_mbps: LINK_MBPS,
+        background: BackgroundConfig::none(),
+        server: ServerProfile {
+            setup_latency_s: 0.1,
+            first_byte_latency_s: 0.2,
+            per_conn_cap_mbps: 10.0,
+            long_request_decay_per_min: 0.0,
+            decay_floor: 1.0,
+            max_connections: 32,
+        },
+        client: ClientProfile::ideal(),
+        flow_jitter_frac: 0.03,
+        flow_failure_rate_per_min: 0.0,
+        faults,
+        dt_s: 0.05,
+    }
+}
+
+/// Runtime-free download config: fast probes, small pool, a virtual
+/// timeout that turns a wedged transfer into a loud failure.
+pub fn fault_download_cfg(kind: OptimizerKind, timeout_s: f64) -> DownloadConfig {
+    let mut cfg = DownloadConfig::default();
+    cfg.chunk_bytes = CHUNK_BYTES;
+    cfg.max_open_files = 2;
+    cfg.monitor_hz = 4.0;
+    cfg.timeout_s = timeout_s;
+    cfg.optimizer.kind = kind;
+    cfg.optimizer.probe_interval_s = 1.0;
+    cfg.optimizer.c_max = 8;
+    cfg.optimizer.fixed_level = 3;
+    if kind == OptimizerKind::Fixed {
+        cfg.optimizer.c_init = 3;
+    }
+    cfg
+}

@@ -1,0 +1,275 @@
+//! Property-based tests: coordinator invariants under arbitrary seeded
+//! fault schedules, driven through the full simulated session stack
+//! (scheduler → netsim with injected faults → recovery plumbing →
+//! report). Runtime-free: the adaptive controller runs its pure-Rust
+//! mirror, so these tests need no compiled XLA artifacts.
+//!
+//! Invariants checked on every completed hostile run:
+//! * completion ⇒ every file's frontier equals its size (chunks tile
+//!   `[0, size)` exactly — the scheduler's span accounting proves it),
+//! * payload is delivered at most once per chunk attempt:
+//!   `total_bytes <= payload + chunk_retries × chunk_bytes`,
+//! * `total_bytes >= payload - resumed_prefix` (nothing skipped),
+//! * checkpoint → journal → resume re-requests only the remainder.
+//!
+//! Replay a failure with `PROP_SEED=<seed> cargo test --test prop_faults`.
+
+mod common;
+
+use common::{fault_download_cfg, fault_netsim, fault_records, CHUNK_BYTES, LINK_MBPS};
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::config::OptimizerKind;
+use fastbiodl::coordinator::resume::ProgressJournal;
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::netsim::{FaultEvent, FaultKind, FaultSchedule};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::SessionReport;
+use fastbiodl::util::prng::Prng;
+use fastbiodl::util::prop::{check, Config};
+
+/// Arbitrary (validated) fault schedule drawn from a seeded generator.
+fn random_schedule(g: &mut Prng) -> FaultSchedule {
+    let n = g.range_u64(0, 12) as usize;
+    let mut events = Vec::new();
+    for _ in 0..n {
+        let at_s = g.range_f64(0.5, 90.0);
+        let kind = match g.below(6) {
+            0 => FaultKind::ConnectionReset {
+                count: 1 + g.below(3) as usize,
+            },
+            1 => FaultKind::Stall {
+                frac: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 5.0),
+            },
+            2 => FaultKind::ServerError {
+                reject_prob: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 6.0),
+            },
+            3 => FaultKind::RateCollapse {
+                factor: g.range_f64(0.05, 1.0),
+                duration_s: g.range_f64(1.0, 10.0),
+            },
+            4 => FaultKind::FlashCrowd {
+                extra_mbps: LINK_MBPS * g.range_f64(0.1, 0.9),
+                duration_s: g.range_f64(1.0, 10.0),
+            },
+            _ => FaultKind::Brownout {
+                duration_s: g.range_f64(0.5, 6.0),
+            },
+        };
+        events.push(FaultEvent { at_s, kind });
+    }
+    FaultSchedule::new(events)
+}
+
+/// Run one simulated FastBioDL session; `done_prefix`/`checkpoint_s`
+/// exercise the resume machinery.
+fn run_session(
+    kind: OptimizerKind,
+    faults: FaultSchedule,
+    sizes: &[u64],
+    seed: u64,
+    done_prefix: Option<Vec<u64>>,
+    checkpoint_s: Option<f64>,
+) -> Result<SessionReport, String> {
+    let cfg = fault_download_cfg(kind, 1_200.0);
+    let controller = build_controller(&cfg.optimizer, None).map_err(|e| e.to_string())?;
+    let behavior = ToolBehavior {
+        name: "fault-prop".into(),
+        mode: SchedulerMode::Chunked {
+            chunk_bytes: cfg.chunk_bytes,
+            max_open_files: cfg.max_open_files,
+        },
+        keep_alive: true,
+        resolution: ResolutionCost::Batch { latency_s: 0.5 },
+    };
+    let params = SimSessionParams {
+        download: cfg,
+        behavior,
+        netsim: fault_netsim(faults),
+        records: fault_records("SRRF", sizes),
+        controller,
+        runtime: None,
+        seed,
+    };
+    let mut session = SimSession::new(params);
+    if let Some(prefix) = done_prefix {
+        session = session.with_progress(prefix);
+    }
+    if let Some(s) = checkpoint_s {
+        session = session.with_checkpoint_after(s);
+    }
+    session.run().map_err(|e| e.to_string())
+}
+
+/// Shared postcondition bundle for a completed hostile session.
+fn assert_invariants(
+    rep: &SessionReport,
+    sizes: &[u64],
+    resumed_prefix: u64,
+) -> Result<(), String> {
+    if !rep.completed {
+        return Err("session reported incomplete".into());
+    }
+    if rep.files_completed != sizes.len() {
+        return Err(format!(
+            "{} of {} files completed",
+            rep.files_completed,
+            sizes.len()
+        ));
+    }
+    let payload: u64 = sizes.iter().sum();
+    if rep.frontiers != sizes {
+        return Err(format!(
+            "frontiers {:?} != sizes {:?} (tiling broken)",
+            rep.frontiers, sizes
+        ));
+    }
+    let need = payload - resumed_prefix;
+    if rep.total_bytes < need {
+        return Err(format!(
+            "delivered {} < required {need} bytes",
+            rep.total_bytes
+        ));
+    }
+    let bound = need + rep.chunk_retries as u64 * CHUNK_BYTES;
+    if rep.total_bytes > bound {
+        return Err(format!(
+            "delivered {} > {} (payload {} + {} retries × chunk): double delivery?",
+            rep.total_bytes, bound, need, rep.chunk_retries
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn session_invariants_hold_under_arbitrary_fault_schedules() {
+    check(
+        Config {
+            cases: 24,
+            ..Config::default()
+        },
+        "coordinator invariants under seeded fault schedules",
+        |g| {
+            let n_files = g.range_u64(1, 3) as usize;
+            let sizes: Vec<u64> = (0..n_files)
+                .map(|_| g.range_u64(300_000, 6_000_000))
+                .collect();
+            let sched_seed = g.next_u64();
+            let sim_seed = g.next_u64();
+            (sizes, sched_seed, sim_seed)
+        },
+        |(sizes, sched_seed, sim_seed)| {
+            let faults = random_schedule(&mut Prng::new(*sched_seed));
+            faults.validate()?;
+            let rep = run_session(
+                OptimizerKind::GradientDescent,
+                faults,
+                sizes,
+                *sim_seed,
+                None,
+                None,
+            )?;
+            assert_invariants(&rep, sizes, 0)
+        },
+    );
+}
+
+#[test]
+fn checkpoint_journal_resume_completes_under_faults() {
+    check(
+        Config {
+            cases: 16,
+            ..Config::default()
+        },
+        "checkpoint/restore across injected failures",
+        |g| {
+            let n_files = g.range_u64(1, 3) as usize;
+            let sizes: Vec<u64> = (0..n_files)
+                .map(|_| g.range_u64(2_000_000, 8_000_000))
+                .collect();
+            let sched_seed = g.next_u64();
+            let sim_seed = g.next_u64();
+            let checkpoint_s = g.range_f64(2.0, 20.0);
+            (sizes, sched_seed, sim_seed, checkpoint_s)
+        },
+        |(sizes, sched_seed, sim_seed, checkpoint_s)| {
+            let faults = random_schedule(&mut Prng::new(*sched_seed));
+            // Phase 1: run until the checkpoint interrupts (a simulated
+            // crash mid-hostile-transfer). May also complete early.
+            let first = run_session(
+                OptimizerKind::GradientDescent,
+                faults.clone(),
+                sizes,
+                *sim_seed,
+                None,
+                Some(*checkpoint_s),
+            )?;
+            if first.completed {
+                return assert_invariants(&first, sizes, 0);
+            }
+            // The journal round trip is exactly what the real driver
+            // persists and reloads.
+            let recs = fault_records("SRRF", sizes);
+            let journal = ProgressJournal::capture(&recs, &first.frontiers, CHUNK_BYTES);
+            let prefix = journal.frontiers_for(&recs);
+            for (i, (&p, &size)) in prefix.iter().zip(sizes.iter()).enumerate() {
+                if p > size {
+                    return Err(format!("file {i}: frontier {p} beyond size {size}"));
+                }
+            }
+            let resumed: u64 = prefix.iter().sum();
+            // Phase 2: resume with the journal frontiers; only the
+            // remainder may cross the (still hostile) network.
+            let second = run_session(
+                OptimizerKind::GradientDescent,
+                faults.clone(),
+                sizes,
+                sim_seed.wrapping_add(1),
+                Some(prefix),
+                None,
+            )?;
+            assert_invariants(&second, sizes, resumed)
+        },
+    );
+}
+
+#[test]
+fn requeued_work_is_never_lost_under_reset_storms() {
+    // Dense reset schedule: a reset every 1.5 s for the whole
+    // transfer, starting at 1 s so even the smallest workload (which
+    // finishes in under 2 virtual seconds) meets at least one. Every
+    // interrupted chunk must be requeued and eventually land.
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        "reset storm never strands a chunk",
+        |g| {
+            let sizes = vec![g.range_u64(3_000_000, 8_000_000)];
+            (sizes, g.next_u64())
+        },
+        |(sizes, sim_seed)| {
+            let events: Vec<FaultEvent> = (0..60)
+                .map(|i| FaultEvent {
+                    at_s: 1.0 + 1.5 * i as f64,
+                    kind: FaultKind::ConnectionReset { count: 2 },
+                })
+                .collect();
+            let rep = run_session(
+                OptimizerKind::Fixed,
+                FaultSchedule::new(events),
+                sizes,
+                *sim_seed,
+                None,
+                None,
+            )?;
+            if rep.connection_resets == 0 {
+                return Err("storm injected no resets".into());
+            }
+            assert_invariants(&rep, sizes, 0)
+        },
+    );
+}

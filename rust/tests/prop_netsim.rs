@@ -101,6 +101,7 @@ fn random_netsim(g: &mut fastbiodl::util::prng::Prng) -> (NetSimConfig, u64) {
         client: ClientProfile::default(),
         flow_jitter_frac: g.range_f64(0.0, 0.1),
         flow_failure_rate_per_min: 0.0,
+        faults: fastbiodl::netsim::FaultSchedule::none(),
         dt_s: 0.05,
     };
     (cfg, g.next_u64())
