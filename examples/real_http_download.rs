@@ -74,11 +74,13 @@ fn main() -> fastbiodl::Result<()> {
     let records: Vec<RunRecord> = served
         .iter()
         .enumerate()
-        .map(|(i, f)| RunRecord {
-            accession: format!("SRRE2E{i:02}"),
-            project: "E2E".into(),
-            bytes: f.bytes,
-            url: format!("{}{}", server.base_url(), f.path),
+        .map(|(i, f)| {
+            RunRecord::new(
+                format!("SRRE2E{i:02}"),
+                "E2E",
+                f.bytes,
+                format!("{}{}", server.base_url(), f.path),
+            )
         })
         .collect();
 

@@ -88,11 +88,8 @@ fn main() {
         recorder.add_bytes(4096);
     });
     let records: Vec<fastbiodl::accession::RunRecord> = (0..64)
-        .map(|i| fastbiodl::accession::RunRecord {
-            accession: format!("SRR{i:07}"),
-            project: "P".into(),
-            bytes: 1 << 30,
-            url: "sim://x".into(),
+        .map(|i| {
+            fastbiodl::accession::RunRecord::new(format!("SRR{i:07}"), "P", 1 << 30, "sim://x")
         })
         .collect();
     bench_loop("scheduler next_chunk+done (32 MiB chunks)", 50_000, || {

@@ -5,6 +5,12 @@
 //! registered for tests and the FABRIC-style synthetic workloads
 //! (§5.2 used "several hundred gigabytes of randomly generated files" —
 //! [`Catalog::register_synthetic`] builds exactly that).
+//!
+//! Every [`RunRecord`] carries an *ordered mirror list* rather than a
+//! single URL: INSDC data is replicated across ENA and NCBI, and the
+//! unified session engine schedules across (and fails over between)
+//! those mirrors. `urls[0]` is the primary; helpers keep the common
+//! single-mirror construction ergonomic.
 
 use std::collections::BTreeMap;
 
@@ -21,9 +27,52 @@ pub struct RunRecord {
     pub project: String,
     /// Payload size (bytes).
     pub bytes: u64,
-    /// Download URL (simulated ENA FTP/HTTPS path, or a real
-    /// `http://127.0.0.1:…` URL when serving from the local test server).
-    pub url: String,
+    /// Ordered mirror list: `urls[0]` is the primary endpoint (simulated
+    /// ENA FTP/HTTPS path, or a real `http://127.0.0.1:…` URL when
+    /// serving from the local test server); later entries are fallback
+    /// mirrors the session engine fails over to when the primary slows
+    /// down or browns out. Never empty.
+    pub urls: Vec<String>,
+}
+
+impl RunRecord {
+    /// Single-mirror record (the common case).
+    pub fn new(
+        accession: impl Into<String>,
+        project: impl Into<String>,
+        bytes: u64,
+        url: impl Into<String>,
+    ) -> RunRecord {
+        RunRecord {
+            accession: accession.into(),
+            project: project.into(),
+            bytes,
+            urls: vec![url.into()],
+        }
+    }
+
+    /// Append fallback mirrors after the primary.
+    pub fn with_mirrors(mut self, mirrors: Vec<String>) -> RunRecord {
+        self.urls.extend(mirrors);
+        self
+    }
+
+    /// The primary download URL.
+    pub fn primary_url(&self) -> &str {
+        &self.urls[0]
+    }
+
+    /// URL of mirror `m`, clamped to the record's list (records with
+    /// fewer mirrors than the session-wide maximum serve the overflow
+    /// from their last listed endpoint).
+    pub fn mirror_url(&self, m: usize) -> &str {
+        &self.urls[m.min(self.urls.len() - 1)]
+    }
+
+    /// Number of mirrors this record lists.
+    pub fn mirror_count(&self) -> usize {
+        self.urls.len()
+    }
 }
 
 /// Project → members index.
@@ -48,22 +97,32 @@ impl Catalog {
         cat
     }
 
-    /// Register one preset's synthesized members.
+    /// Register one preset's synthesized members. Every run lists two
+    /// mirrors — the ENA FTP primary and the NCBI SRA fallback — the
+    /// way real INSDC data is actually replicated, so multi-mirror
+    /// scheduling is exercisable on the built-in catalog.
     pub fn register_preset(&mut self, preset: &DatasetPreset, seed: u64) {
         let sizes = preset.generate(seed);
         let runs = sizes
             .iter()
             .enumerate()
-            .map(|(i, &bytes)| RunRecord {
-                accession: format!("{}{:02}", preset.run_prefix, i + 1),
-                project: preset.project.to_string(),
-                bytes,
-                url: format!(
-                    "https://ftp.sra.ebi.ac.uk/vol1/srr/{}/{}{:02}",
-                    preset.project.to_ascii_lowercase(),
+            .map(|(i, &bytes)| {
+                let proj = preset.project.to_ascii_lowercase();
+                RunRecord::new(
+                    format!("{}{:02}", preset.run_prefix, i + 1),
+                    preset.project,
+                    bytes,
+                    format!(
+                        "https://ftp.sra.ebi.ac.uk/vol1/srr/{proj}/{}{:02}",
+                        preset.run_prefix,
+                        i + 1
+                    ),
+                )
+                .with_mirrors(vec![format!(
+                    "https://sra-download.ncbi.nlm.nih.gov/traces/{proj}/{}{:02}",
                     preset.run_prefix,
                     i + 1
-                ),
+                )])
             })
             .collect();
         self.projects.insert(preset.project.to_string(), runs);
@@ -72,12 +131,33 @@ impl Catalog {
     /// Register a synthetic project of `files` equal-size files
     /// (the §5.2 FABRIC workloads: 100 GB / 512 GB random files).
     pub fn register_synthetic(&mut self, project: &str, files: usize, bytes_each: u64) {
+        self.register_synthetic_mirrored(project, files, bytes_each, 1);
+    }
+
+    /// Synthetic project whose files are replicated across `mirrors`
+    /// endpoints (mirror-failover workloads; `mirrors >= 1`).
+    pub fn register_synthetic_mirrored(
+        &mut self,
+        project: &str,
+        files: usize,
+        bytes_each: u64,
+        mirrors: usize,
+    ) {
+        let mirrors = mirrors.max(1);
         let runs = (0..files)
-            .map(|i| RunRecord {
-                accession: format!("SYN{project}{i:03}"),
-                project: project.to_string(),
-                bytes: bytes_each,
-                url: format!("ftp://testbed/{project}/file{i:03}.bin"),
+            .map(|i| {
+                let mut rec = RunRecord::new(
+                    format!("SYN{project}{i:03}"),
+                    project,
+                    bytes_each,
+                    format!("ftp://testbed/{project}/file{i:03}.bin"),
+                );
+                rec = rec.with_mirrors(
+                    (1..mirrors)
+                        .map(|m| format!("ftp://mirror{m}.testbed/{project}/file{i:03}.bin"))
+                        .collect(),
+                );
+                rec
             })
             .collect();
         self.projects.insert(project.to_string(), runs);
@@ -182,5 +262,27 @@ mod tests {
         let runs = cat.project_runs("FABRIC-A").unwrap();
         assert_eq!(runs.len(), 4);
         assert_eq!(Catalog::total_bytes(runs), 400_000_000_000);
+        assert_eq!(runs[0].mirror_count(), 1);
+    }
+
+    #[test]
+    fn preset_records_list_ena_and_ncbi_mirrors() {
+        let cat = Catalog::with_table2(7);
+        for r in cat.project_runs("PRJNA400087").unwrap() {
+            assert_eq!(r.mirror_count(), 2);
+            assert!(r.primary_url().contains("ebi.ac.uk"));
+            assert!(r.mirror_url(1).contains("ncbi"));
+            // Out-of-range mirror indices clamp to the last endpoint.
+            assert_eq!(r.mirror_url(9), r.mirror_url(1));
+        }
+    }
+
+    #[test]
+    fn synthetic_mirrored_projects() {
+        let mut cat = Catalog::empty();
+        cat.register_synthetic_mirrored("FAB", 2, 1_000, 3);
+        let runs = cat.project_runs("FAB").unwrap();
+        assert_eq!(runs[0].mirror_count(), 3);
+        assert_ne!(runs[0].mirror_url(0), runs[0].mirror_url(2));
     }
 }

@@ -73,7 +73,10 @@ impl<'a> Resolver<'a> {
 
     /// Resolve a list to run records. The *time* cost is returned to
     /// the caller (virtual-time drivers charge it to their clock; the
-    /// real driver has actually waited by then).
+    /// real driver has actually waited by then). Records come back with
+    /// their full ordered mirror lists (ENA primary + NCBI fallback for
+    /// the built-in presets) so the session engine can schedule across
+    /// mirrors without a second resolution round trip.
     pub fn resolve(&self, accessions: &[Accession]) -> Result<(Vec<RunRecord>, f64)> {
         let records = self.catalog.expand(accessions)?;
         let upfront = self.cost.upfront_latency(records.len());
@@ -83,6 +86,17 @@ impl<'a> Resolver<'a> {
     pub fn cost(&self) -> ResolutionCost {
         self.cost
     }
+}
+
+/// Largest mirror count across a resolved record list — the width of
+/// the mirror health board a session allocates.
+pub fn mirror_width(records: &[RunRecord]) -> usize {
+    records
+        .iter()
+        .map(RunRecord::mirror_count)
+        .max()
+        .unwrap_or(1)
+        .max(1)
 }
 
 #[cfg(test)]
@@ -111,5 +125,8 @@ mod tests {
         let (recs, upfront) = r.resolve(&accs).unwrap();
         assert_eq!(recs.len(), 6);
         assert!(upfront > 0.0);
+        // Built-in presets resolve with both archive mirrors attached.
+        assert_eq!(mirror_width(&recs), 2);
+        assert_eq!(mirror_width(&[]), 1);
     }
 }

@@ -96,6 +96,17 @@ impl ProbeWindow {
         })
     }
 
+    /// Pure-Rust aggregate + reset: the runtime-free analogue of
+    /// [`ProbeWindow::aggregate_and_reset`], used by the session engine
+    /// when no XLA runtime is attached. Keeps the window's configured
+    /// capacity/decay (unlike rebuilding the window from scratch).
+    pub fn aggregate_mirror_and_reset(&mut self) -> WindowStats {
+        let stats = self.aggregate_mirror();
+        self.samples.clear();
+        self.dropped = 0;
+        stats
+    }
+
     /// Pure-Rust aggregation fallback used by unit tests that run
     /// without artifacts (cross-checked against the XLA path in the
     /// integration suite).

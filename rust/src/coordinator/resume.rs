@@ -1,11 +1,14 @@
 //! Resume support: the progress journal.
 //!
 //! `prefetch`'s headline reliability feature is resuming interrupted
-//! downloads (paper §2); FastBioDL matches it. The real-socket session
-//! periodically persists each file's *contiguous completed frontier*
-//! (chunks can finish out of order; the frontier is the prefix that is
-//! certainly on disk). On restart, [`ProgressJournal::load`] feeds the
-//! frontiers to [`crate::coordinator::scheduler::ChunkScheduler::new_with_progress`],
+//! downloads (paper §2); FastBioDL matches it. The unified session
+//! engine persists each file's *contiguous completed frontier* (chunks
+//! can finish out of order; the frontier is the prefix that is
+//! certainly on disk) on **every fault/retry event** plus once per
+//! probe interval — deduplicated via `PartialEq`, so a fault storm
+//! costs one write per actual frontier change. On restart,
+//! [`ProgressJournal::load`] feeds the frontiers to
+//! [`crate::coordinator::scheduler::ChunkScheduler::new_with_progress`],
 //! which re-requests only the remainder — at most one chunk per file is
 //! re-downloaded.
 //!
@@ -158,11 +161,13 @@ mod tests {
 
     fn records() -> Vec<RunRecord> {
         (0..3)
-            .map(|i| RunRecord {
-                accession: format!("SRR000000{i}"),
-                project: "T".into(),
-                bytes: 1_000 * (i + 1) as u64,
-                url: format!("http://x/{i}"),
+            .map(|i| {
+                RunRecord::new(
+                    format!("SRR000000{i}"),
+                    "T",
+                    1_000 * (i + 1) as u64,
+                    format!("http://x/{i}"),
+                )
             })
             .collect()
     }

@@ -12,9 +12,14 @@
 //! * [`SchedulerMode::WholeFile`] — prefetch/pysradb: one request per
 //!   file, as many files open as there are workers.
 //!
-//! The scheduler is transport-agnostic and single-threaded by design;
-//! the real-socket driver wraps it in a mutex (it is touched once per
-//! chunk, i.e. a few times per second — nowhere near contention).
+//! The scheduler is transport-agnostic and single-threaded by design:
+//! the unified session engine owns it on the control thread for both
+//! simulated and real transfers (workers receive chunk assignments over
+//! channels, so no lock ever touches the byte path). It is equally
+//! mirror-agnostic — chunks are file ranges; which mirror serves a
+//! range is the engine's [`crate::session::mirrors::MirrorBoard`]'s
+//! call at fetch time, which is what lets a requeued chunk retry on a
+//! different mirror than the one that failed it.
 //!
 //! Invariants (property-tested in `rust/tests/prop_coordinator.rs`):
 //! chunks of one file never overlap and exactly tile `[0, size)`; a
@@ -350,11 +355,8 @@ mod tests {
         sizes
             .iter()
             .enumerate()
-            .map(|(i, &bytes)| RunRecord {
-                accession: format!("SRR{i:07}"),
-                project: "TEST".into(),
-                bytes,
-                url: format!("sim://file{i}"),
+            .map(|(i, &bytes)| {
+                RunRecord::new(format!("SRR{i:07}"), "TEST", bytes, format!("sim://file{i}"))
             })
             .collect()
     }

@@ -43,6 +43,11 @@ impl Scenario {
     /// `(profile, seed, link capacity)`, so paired runs across tools
     /// see identical fault sequences. `horizon_s` bounds the scheduled
     /// window; transfers running longer see a fault-free tail.
+    ///
+    /// The `slowmirror` profile degrades only flows bound to mirror 0;
+    /// on the built-in catalog (whose records list ENA + NCBI mirrors)
+    /// the unified engine fails over to the healthy replica, while
+    /// single-mirror workloads ride out the slowdown.
     pub fn with_fault_profile(
         mut self,
         profile: FaultProfile,

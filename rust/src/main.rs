@@ -46,8 +46,9 @@ COMMANDS:
         --fixed-level <n>     level for --optimizer fixed
         --seed <n>            simulation seed (default 1)
         --faults <profile>    hostile network variant: none|flaky|stalls|
-                              errors|collapse|flashcrowd|brownout|chaos
-                              (seeded fault schedule; see netsim::fault)
+                              errors|collapse|flashcrowd|brownout|
+                              slowmirror|chaos (seeded fault schedule;
+                              see netsim::fault)
     fetch <url...>            real-socket adaptive download over HTTP
         --out <dir>           write payloads here (default: discard)
         --chunk-mb <n>        range-request size (default 32)
@@ -60,6 +61,10 @@ COMMANDS:
         --conn-mbps <n>       per-connection cap (default 0 = off)
         --global-mbps <n>     global cap (default 0 = off)
         --ttfb <secs>         first-byte latency (default 0)
+        --faults <profile>    replay a fault profile server-side (5xx
+                              windows + added latency; pair with fetch)
+        --seed <n>            fault schedule seed (default 1)
+        --horizon <secs>      fault schedule horizon (default 600)
     datasets                  print the Table 2 inventory
     experiment <id|all>       regenerate paper artifacts
         --runs <n>            runs per configuration (default 5)
@@ -259,12 +264,12 @@ fn cmd_fetch(args: &Args) -> Result<()> {
             Some(b) => b,
             None => head_content_length(url)?,
         };
-        records.push(fastbiodl::accession::RunRecord {
-            accession: format!("URL{i:03}"),
-            project: "fetch".into(),
+        records.push(fastbiodl::accession::RunRecord::new(
+            format!("URL{i:03}"),
+            "fetch",
             bytes,
-            url: url.clone(),
-        });
+            url.clone(),
+        ));
     }
     let rt = match load_runtime() {
         Ok(rt) => Some(rt),
@@ -320,15 +325,31 @@ fn head_content_length(url: &str) -> Result<u64> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_flags(&["files", "size-mb", "conn-mbps", "global-mbps", "ttfb"])?;
+    args.expect_flags(&[
+        "files", "size-mb", "conn-mbps", "global-mbps", "ttfb", "faults", "seed", "horizon",
+    ])?;
     let files = args.flag_usize("files")?.unwrap_or(4);
     let size_mb = args.flag_usize("size-mb")?.unwrap_or(64);
-    let throttle = ThrottleConfig {
+    let mut throttle = ThrottleConfig {
         per_conn_bytes_per_s: args.flag_f64("conn-mbps")?.unwrap_or(0.0) * 1e6 / 8.0,
         global_bytes_per_s: args.flag_f64("global-mbps")?.unwrap_or(0.0) * 1e6 / 8.0,
         first_byte_latency_s: args.flag_f64("ttfb")?.unwrap_or(0.0),
         ..ThrottleConfig::default()
     };
+    // Replay a simulator fault profile on the loopback mirror: 5xx
+    // windows and added latency, so `fetch` exercises the same
+    // recovery machinery `download --faults` does in simulation.
+    if let Some(profile) = args.flag("faults") {
+        let profile = fastbiodl::netsim::FaultProfile::parse(profile).map_err(Error::Config)?;
+        let seed = args.flag_u64("seed")?.unwrap_or(1);
+        let horizon = args.flag_f64("horizon")?.unwrap_or(600.0);
+        throttle = throttle.with_fault_profile(profile, seed, horizon);
+        println!(
+            "fault profile '{}': {} server-side windows over {horizon}s",
+            profile.name(),
+            throttle.fault_windows.len()
+        );
+    }
     let served: Vec<ServedFile> = (0..files)
         .map(|i| ServedFile {
             path: format!("/vol1/FILE{i:03}"),
@@ -508,6 +529,19 @@ fn print_report(r: &fastbiodl::session::SessionReport) {
         println!(
             "recovery        : {} chunk retries ({} connection resets, {} server errors)",
             r.chunk_retries, r.connection_resets, r.server_rejects
+        );
+    }
+    if r.mirror_bytes.len() > 1 {
+        let shares: Vec<String> = r
+            .mirror_bytes
+            .iter()
+            .enumerate()
+            .map(|(m, b)| format!("m{m}={}", fastbiodl::util::fmt_bytes(*b)))
+            .collect();
+        println!(
+            "mirrors         : {} ({} failovers)",
+            shares.join(", "),
+            r.mirror_switches
         );
     }
     println!("optimizer probes: {}", r.probes);

@@ -168,6 +168,10 @@ pub struct NetSim {
     /// Server brownout: new connections queue and new requests are
     /// rejected until this time.
     brownout_until_s: f64,
+    /// Per-mirror asymmetric degradation: flows to mirror `m` have
+    /// their per-connection cap multiplied by `mirror_slow[m].1` until
+    /// `mirror_slow[m].0` (grown lazily; unlisted mirrors are healthy).
+    mirror_slow: Vec<(f64, f64)>,
     // §Perf: scratch buffers reused across steps so the hot loop is
     // allocation-free (see EXPERIMENTS.md §Perf, optimization 1).
     scratch_active: Vec<usize>,
@@ -210,6 +214,7 @@ impl NetSim {
             crowd_until_s: 0.0,
             crowd_extra_mbps: 0.0,
             brownout_until_s: 0.0,
+            mirror_slow: Vec::new(),
             scratch_active: Vec::new(),
             scratch_demands: Vec::new(),
             scratch_alloc: Vec::new(),
@@ -228,9 +233,17 @@ impl NetSim {
         &self.cfg
     }
 
-    /// Open a new connection; returns its id. The flow spends
-    /// `server.setup_latency_s` in handshake before accepting requests.
+    /// Open a new connection to the primary mirror; returns its id.
+    /// The flow spends `server.setup_latency_s` in handshake before
+    /// accepting requests.
     pub fn open_flow(&mut self) -> Result<FlowId> {
+        self.open_flow_to(0)
+    }
+
+    /// Open a new connection terminating at mirror `mirror` (0 =
+    /// primary). Per-flow asymmetric faults ([`FaultKind::SlowMirror`])
+    /// degrade only the flows bound to the named mirror.
+    pub fn open_flow_to(&mut self, mirror: usize) -> Result<FlowId> {
         let open = self.flows.iter().filter(|f| !f.is_closed()).count();
         if open >= self.cfg.server.max_connections {
             return Err(Error::Sim(format!(
@@ -242,12 +255,13 @@ impl NetSim {
         self.next_id += 1;
         // A brownout queues new handshakes behind its remaining span.
         let brownout_wait = (self.brownout_until_s - self.now_s).max(0.0);
-        let flow = SimFlow::new(
+        let mut flow = SimFlow::new(
             id,
             self.cfg.server.setup_latency_s + brownout_wait,
             self.cfg.flow_jitter_frac,
             &mut self.rng,
         );
+        flow.mirror = mirror;
         self.flows.push(flow);
         Ok(id)
     }
@@ -392,7 +406,15 @@ impl NetSim {
                 let demand = if f.stalled_until_s > self.now_s {
                     0.0 // injected stall: connection alive, no bytes
                 } else {
-                    f.demand_mbps(cap, self.cfg.server.decay_factor(f.request_age_s))
+                    // Asymmetric per-mirror degradation on top of any
+                    // global rate collapse.
+                    let mut cap_f = cap;
+                    if let Some(&(until, factor)) = self.mirror_slow.get(f.mirror) {
+                        if self.now_s < until {
+                            cap_f *= factor;
+                        }
+                    }
+                    f.demand_mbps(cap_f, self.cfg.server.decay_factor(f.request_age_s))
                 };
                 self.scratch_demands.push(demand);
             }
@@ -545,6 +567,22 @@ impl NetSim {
             }
             FaultKind::Brownout { duration_s } => {
                 self.brownout_until_s = self.brownout_until_s.max(self.now_s + duration_s);
+            }
+            FaultKind::SlowMirror {
+                mirror,
+                factor,
+                duration_s,
+            } => {
+                if self.mirror_slow.len() <= mirror {
+                    self.mirror_slow.resize(mirror + 1, (0.0, 1.0));
+                }
+                let entry = &mut self.mirror_slow[mirror];
+                entry.1 = if self.now_s < entry.0 {
+                    entry.1.min(factor)
+                } else {
+                    factor
+                };
+                entry.0 = entry.0.max(self.now_s + duration_s);
             }
         }
     }
@@ -922,6 +960,45 @@ mod tests {
                 .count();
         }
         assert_eq!(done, 1, "post-brownout request should complete");
+    }
+
+    #[test]
+    fn slow_mirror_degrades_only_its_own_flows() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 2.0,
+            kind: FaultKind::SlowMirror {
+                mirror: 0,
+                factor: 0.1,
+                duration_s: 1_000.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 13).unwrap();
+        let a = sim.open_flow_to(0).unwrap();
+        let b = sim.open_flow_to(1).unwrap();
+        while !(sim.flow_ready(a) && sim.flow_ready(b)) {
+            sim.step(None);
+        }
+        sim.begin_request(a, 1e12, false, 0).unwrap();
+        sim.begin_request(b, 1e12, false, 1).unwrap();
+        // Past the fault onset and the slow-start ramp.
+        while sim.now() < 6.0 {
+            sim.step(None);
+        }
+        let a0 = sim.flow_delivered(a);
+        let b0 = sim.flow_delivered(b);
+        for _ in 0..40 {
+            sim.step(None); // two seconds
+        }
+        let a_mbps = (sim.flow_delivered(a) - a0) * 8.0 / 1e6 / 2.0;
+        let b_mbps = (sim.flow_delivered(b) - b0) * 8.0 / 1e6 / 2.0;
+        assert!(
+            a_mbps < 300.0 * 0.15,
+            "mirror-0 flow should crawl: {a_mbps}"
+        );
+        assert!(
+            b_mbps > 250.0,
+            "mirror-1 flow should stay at cap: {b_mbps}"
+        );
     }
 
     #[test]

@@ -19,12 +19,14 @@
 //! | [`FaultKind::RateCollapse`] | path reroute, shaper clamp | per-connection cap multiplied by `factor` for the duration |
 //! | [`FaultKind::FlashCrowd`] | competing bulk transfer burst | background traffic gains `extra_mbps` for the duration |
 //! | [`FaultKind::Brownout`] | overloaded archive front-end | new connections queue behind the brownout; new requests are rejected until it ends |
+//! | [`FaultKind::SlowMirror`] | one archive mirror slows while replicas stay healthy | per-connection cap × `factor`, but only for flows bound to the named mirror |
 //!
 //! ## Profiles
 //!
 //! [`FaultProfile`] names ready-made hostile variants of any scenario —
 //! `flaky`, `stalls`, `errors`, `collapse`, `flashcrowd`, `brownout`,
-//! and `chaos` (all of the above interleaved). A profile expands to a
+//! `slowmirror`, and `chaos` (all of the above interleaved). A profile
+//! expands to a
 //! concrete [`FaultSchedule`] via [`FaultProfile::schedule`], fully
 //! determined by `(profile, seed, horizon, link capacity)`. The CLI
 //! exposes this as `fastbiodl download … --faults <profile>`; tests use
@@ -65,6 +67,16 @@ pub enum FaultKind {
     /// For `duration_s`: new connections queue until the brownout
     /// lifts, and every new request is rejected.
     Brownout {
+        duration_s: f64,
+    },
+    /// Per-flow asymmetric fault: multiply the per-connection rate cap
+    /// by `factor` (in (0, 1]) — but **only** for flows terminating at
+    /// `mirror` — for `duration_s`. Models one archive mirror slowing
+    /// down or browning out while its replicas stay healthy; the
+    /// session engine's mirror failover is what this exercises.
+    SlowMirror {
+        mirror: usize,
+        factor: f64,
         duration_s: f64,
     },
 }
@@ -118,6 +130,16 @@ impl FaultKind {
                     return Err("Brownout duration must be >= 0".into());
                 }
             }
+            FaultKind::SlowMirror {
+                factor, duration_s, ..
+            } => {
+                if !(*factor > 0.0 && *factor <= 1.0) {
+                    return Err(format!("SlowMirror factor {factor} outside (0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("SlowMirror duration must be >= 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -131,6 +153,7 @@ impl FaultKind {
             FaultKind::RateCollapse { .. } => "rate-collapse",
             FaultKind::FlashCrowd { .. } => "flash-crowd",
             FaultKind::Brownout { .. } => "brownout",
+            FaultKind::SlowMirror { .. } => "slow-mirror",
         }
     }
 }
@@ -210,18 +233,23 @@ pub enum FaultProfile {
     FlashCrowd,
     /// Server brownouts: no new connections or requests for a while.
     Brownout,
+    /// One slow mirror: the primary endpoint's per-connection rate
+    /// collapses early and stays degraded while replicas stay healthy
+    /// (per-flow asymmetric fault; exercises mirror failover).
+    SlowMirror,
     /// Everything above, interleaved.
     Chaos,
 }
 
 /// Profiles exercised by the controller×fault test matrix.
-pub const MATRIX_PROFILES: [FaultProfile; 6] = [
+pub const MATRIX_PROFILES: [FaultProfile; 7] = [
     FaultProfile::Flaky,
     FaultProfile::Stalls,
     FaultProfile::ServerErrors,
     FaultProfile::RateCollapse,
     FaultProfile::FlashCrowd,
     FaultProfile::Brownout,
+    FaultProfile::SlowMirror,
 ];
 
 impl FaultProfile {
@@ -235,10 +263,11 @@ impl FaultProfile {
             "collapse" | "rate-collapse" => Ok(FaultProfile::RateCollapse),
             "flashcrowd" | "flash-crowd" | "crowd" => Ok(FaultProfile::FlashCrowd),
             "brownout" => Ok(FaultProfile::Brownout),
+            "slowmirror" | "slow-mirror" => Ok(FaultProfile::SlowMirror),
             "chaos" | "all" => Ok(FaultProfile::Chaos),
             other => Err(format!(
                 "unknown fault profile '{other}' \
-                 (none|flaky|stalls|errors|collapse|flashcrowd|brownout|chaos)"
+                 (none|flaky|stalls|errors|collapse|flashcrowd|brownout|slowmirror|chaos)"
             )),
         }
     }
@@ -252,6 +281,7 @@ impl FaultProfile {
             FaultProfile::RateCollapse => "collapse",
             FaultProfile::FlashCrowd => "flashcrowd",
             FaultProfile::Brownout => "brownout",
+            FaultProfile::SlowMirror => "slowmirror",
             FaultProfile::Chaos => "chaos",
         }
     }
@@ -272,6 +302,7 @@ impl FaultProfile {
             FaultProfile::RateCollapse => gen_collapse(seed, horizon_s, &mut events),
             FaultProfile::FlashCrowd => gen_crowd(seed, horizon_s, link_mbps, &mut events),
             FaultProfile::Brownout => gen_brownout(seed, horizon_s, &mut events),
+            FaultProfile::SlowMirror => gen_slowmirror(seed, horizon_s, &mut events),
             FaultProfile::Chaos => {
                 gen_flaky(seed, horizon_s, &mut events);
                 gen_stalls(seed, horizon_s, &mut events);
@@ -279,6 +310,7 @@ impl FaultProfile {
                 gen_collapse(seed, horizon_s, &mut events);
                 gen_crowd(seed, horizon_s, link_mbps, &mut events);
                 gen_brownout(seed, horizon_s, &mut events);
+                gen_slowmirror(seed, horizon_s, &mut events);
             }
         }
         FaultSchedule::new(events)
@@ -377,6 +409,22 @@ fn gen_brownout(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     }
 }
 
+fn gen_slowmirror(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0x510);
+    // The primary mirror collapses early and stays degraded for the
+    // whole horizon — the canonical "one slow mirror" scenario. Healthy
+    // replicas (mirror index >= 1) are untouched; single-mirror
+    // workloads simply ride out a deep but survivable slowdown.
+    out.push(FaultEvent {
+        at_s: rng.range_f64(4.0, 8.0),
+        kind: FaultKind::SlowMirror {
+            mirror: 0,
+            factor: rng.range_f64(0.05, 0.12),
+            duration_s: horizon_s,
+        },
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,7 +452,7 @@ mod tests {
         let mut names: Vec<&str> = s.events().iter().map(|e| e.kind.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 6, "chaos missing classes: {names:?}");
+        assert_eq!(names.len(), 7, "chaos missing classes: {names:?}");
     }
 
     #[test]
@@ -417,6 +465,7 @@ mod tests {
             FaultProfile::RateCollapse,
             FaultProfile::FlashCrowd,
             FaultProfile::Brownout,
+            FaultProfile::SlowMirror,
             FaultProfile::Chaos,
         ] {
             assert_eq!(FaultProfile::parse(p.name()).unwrap(), p);
@@ -445,6 +494,20 @@ mod tests {
         }
         .validate()
         .is_err());
+        assert!(FaultKind::SlowMirror {
+            mirror: 0,
+            factor: 0.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::SlowMirror {
+            mirror: 3,
+            factor: 0.5,
+            duration_s: 10.0
+        }
+        .validate()
+        .is_ok());
         let bad = FaultSchedule::new(vec![FaultEvent {
             at_s: -1.0,
             kind: FaultKind::Brownout { duration_s: 1.0 },

@@ -58,6 +58,9 @@ pub struct SimFlow {
     jitter: f64,
     /// Opaque tag the coordinator uses to map flows to work items.
     pub tag: u64,
+    /// Mirror endpoint this connection terminates at (0 = primary).
+    /// Per-flow asymmetric faults (one slow mirror) key off this.
+    pub mirror: usize,
     /// Injected stall: demand is zero until this simulated timestamp
     /// (absolute engine time; 0 = no stall).
     pub stalled_until_s: f64,
@@ -89,6 +92,7 @@ impl SimFlow {
             ramp: RAMP_START,
             jitter,
             tag: 0,
+            mirror: 0,
             stalled_until_s: 0.0,
             reject_pending: false,
         }

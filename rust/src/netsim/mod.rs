@@ -22,8 +22,9 @@
 //!   "excessive load" regime of §3 ([`client`]),
 //! * **injected faults** — seeded, declarative schedules of connection
 //!   resets, delivery stalls, transient 5xx windows, per-connection
-//!   rate collapses, flash crowds, and server brownouts ([`fault`]),
-//!   the substrate for testing recovery behaviour under hostile
+//!   rate collapses, flash crowds, server brownouts, and per-flow
+//!   asymmetric single-mirror slowdowns ([`fault`]), the substrate for
+//!   testing recovery and mirror-failover behaviour under hostile
 //!   networks.
 //!
 //! Time is virtual: [`engine::NetSim::step`] advances the world by `dt`

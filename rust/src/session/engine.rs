@@ -1,0 +1,625 @@
+//! The unified session engine — Algorithm 1, implemented exactly once.
+//!
+//! Both session drivers used to duplicate the full control loop; this
+//! module owns it instead and parameterizes the two things that
+//! genuinely differ between simulated and real transfers:
+//!
+//! * a [`Transport`] — how connections open, how a chunk's bytes move,
+//!   and how failures are classified ([`FailureClass`]). The simulated
+//!   implementation wraps [`crate::netsim`]; the real one drives worker
+//!   threads over [`crate::transport`]'s HTTP client.
+//! * a [`Clock`] — virtual time (advanced by the simulator's steps) vs
+//!   wall time (with a real park between polls).
+//!
+//! Everything else — resolution charging, chunk scheduling, worker-slot
+//! pool reconciliation against the [`StatusArray`], monitor sampling,
+//! probe aggregation, controller stepping, retry/backoff
+//! classification, checkpoint journaling, and [`SessionReport`]
+//! assembly — lives here, exists exactly once, and is therefore
+//! deterministically testable in simulation while running unchanged
+//! over real sockets.
+//!
+//! ## Multi-mirror scheduling
+//!
+//! Records carry ordered mirror lists
+//! ([`crate::accession::RunRecord::urls`]); every worker slot binds to
+//! one mirror per connection. A per-session
+//! [`crate::session::mirrors::MirrorBoard`] scores mirrors by EWMA
+//! chunk goodput with a decaying failure penalty; idle slots abandon a
+//! mirror whose score collapses relative to the best one, so transfers
+//! drain off a slow or browning-out mirror instead of riding it down.
+//!
+//! ## Failure handling
+//!
+//! A failed fetch requeues its chunk (byte accounting stays exact),
+//! backs the slot off exponentially ([`BACKOFF_MIN_S`]..[`BACKOFF_MAX_S`]),
+//! penalizes the mirror, and — for [`FailureClass::Transport`] — drops
+//! the connection so the reconcile pass reopens one. Fatal failures
+//! (malformed URLs, 4xx, local I/O) abort the session immediately.
+//! When a journal directory is configured, frontiers are persisted on
+//! **every fault event** in addition to the probe cadence, so a crash
+//! right after a fault storm resumes from the freshest state.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::accession::resolver::{mirror_width, ResolutionCost};
+use crate::accession::RunRecord;
+use crate::config::DownloadConfig;
+use crate::coordinator::pool::StatusArray;
+use crate::coordinator::probe::ProbeWindow;
+use crate::coordinator::resume::ProgressJournal;
+use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
+use crate::metrics::recorder::ThroughputRecorder;
+use crate::metrics::timeline::per_second_bins;
+use crate::optimizer::{ConcurrencyController, Probe};
+use crate::runtime::XlaRuntime;
+use crate::session::mirrors::MirrorBoard;
+use crate::session::SessionReport;
+use crate::{Error, Result};
+
+/// Slot backoff bounds (seconds, virtual or wall) after a failed or
+/// rejected chunk: doubles per consecutive failure, resets on success.
+pub const BACKOFF_MIN_S: f64 = 0.25;
+pub const BACKOFF_MAX_S: f64 = 4.0;
+
+/// How long the engine parks between polls when the transport had
+/// nothing to report (wall-clock drivers only; virtual clocks ignore
+/// it because their transport's poll advances time itself).
+const IDLE_PARK_S: f64 = 0.002;
+
+/// Session time source. Implementations: a virtual clock advanced by
+/// the simulated transport's steps, or a wall clock over
+/// `std::time::Instant`.
+pub trait Clock {
+    /// Seconds since the clock started (monotonic).
+    fn now(&self) -> f64;
+
+    /// Yield for ~`secs` when the engine has nothing to do. Virtual
+    /// clocks no-op (their transport's poll *is* the passage of time);
+    /// the wall clock sleeps.
+    fn park(&self, secs: f64);
+}
+
+/// Why a fetch attempt failed — drives retry accounting and backoff.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureClass {
+    /// Connection-level failure (reset, short body, connect error):
+    /// the slot reconnects before retrying.
+    Transport,
+    /// Transient server rejection (HTTP 5xx / injected window): the
+    /// connection survives, the chunk retries after backoff.
+    Reject,
+    /// Deterministic failure (malformed URL, 4xx, local I/O): retrying
+    /// cannot help; the session fails immediately.
+    Fatal,
+}
+
+/// What a transport observed since the last poll, keyed by worker slot.
+#[derive(Clone, Debug)]
+pub enum TransportEvent {
+    /// The slot's connection finished its handshake and is idle.
+    Ready { slot: usize },
+    /// The slot's in-flight fetch delivered every byte.
+    Completed { slot: usize },
+    /// The slot's in-flight fetch (or connection) failed.
+    Failed {
+        slot: usize,
+        class: FailureClass,
+        error: String,
+    },
+}
+
+/// How bytes move. One implementation over the virtual-time network
+/// simulator, one over real sockets; the engine cannot tell them apart.
+///
+/// Slots are the engine's worker indices (`0..c_max`). A transport must
+/// deliver payload bytes into the shared
+/// [`ThroughputRecorder`] it was constructed with — chunk-level
+/// outcomes come back through [`Transport::poll`] events.
+pub trait Transport {
+    /// Try to open slot `slot`'s connection to `mirror`. `Ok(false)`
+    /// means a resource limit (e.g. the server's connection cap) — the
+    /// engine retries on a later reconcile pass. Readiness is signalled
+    /// by [`Transport::is_ready`] / [`TransportEvent::Ready`].
+    fn connect(&mut self, slot: usize, mirror: usize) -> Result<bool>;
+
+    /// Drop slot `slot`'s connection (idempotent). Parked workers drop
+    /// their connection — that *is* the concurrency change at the
+    /// socket level.
+    fn disconnect(&mut self, slot: usize);
+
+    /// Connection is up and idle (handshake done, no fetch in flight).
+    fn is_ready(&self, slot: usize) -> bool;
+
+    /// Start fetching `chunk` of `record` from `mirror` on slot `slot`.
+    /// Completion/failure arrives via [`Transport::poll`].
+    fn begin_fetch(
+        &mut self,
+        slot: usize,
+        record: &RunRecord,
+        chunk: &Chunk,
+        mirror: usize,
+    ) -> Result<()>;
+
+    /// Advance the world (simulated transports step virtual time here)
+    /// and/or drain pending events into `events`.
+    fn poll(&mut self, events: &mut Vec<TransportEvent>) -> Result<()>;
+
+    /// Hint: number of distinct files currently being written (drives
+    /// the simulator's client-side interleaving penalty).
+    fn set_open_files(&mut self, _n: usize) {}
+
+    /// Stop background machinery (join worker threads). Called once
+    /// after the control loop exits, before the report is assembled.
+    fn shutdown(&mut self) {}
+}
+
+/// Tool-level behaviour knobs (what distinguishes FastBioDL from the
+/// baseline tools besides the controller).
+#[derive(Clone, Debug)]
+pub struct ToolBehavior {
+    /// Display label.
+    pub name: String,
+    /// Range-chunked vs whole-file requests.
+    pub mode: SchedulerMode,
+    /// Reuse connections across requests (keep-alive). Baselines open
+    /// a fresh connection per file.
+    pub keep_alive: bool,
+    /// Metadata resolution cost model.
+    pub resolution: ResolutionCost,
+}
+
+impl ToolBehavior {
+    /// FastBioDL: chunked, keep-alive, batch resolution (paper §4).
+    pub fn fastbiodl(cfg: &DownloadConfig) -> ToolBehavior {
+        ToolBehavior {
+            name: "fastbiodl".into(),
+            mode: SchedulerMode::Chunked {
+                chunk_bytes: cfg.chunk_bytes,
+                max_open_files: cfg.max_open_files,
+            },
+            keep_alive: true,
+            resolution: ResolutionCost::Batch { latency_s: 1.5 },
+        }
+    }
+}
+
+/// Everything a session needs besides its transport and clock.
+pub struct EngineParams<'a> {
+    pub download: DownloadConfig,
+    pub behavior: ToolBehavior,
+    pub records: Vec<RunRecord>,
+    /// Controller (already built for the tool's policy).
+    pub controller: Box<dyn ConcurrencyController + 'a>,
+    /// XLA runtime for probe aggregation (None → pure-Rust mirror).
+    pub runtime: Option<&'a XlaRuntime>,
+    /// Shared byte counter; the transport holds a clone and feeds it
+    /// from its delivery path.
+    pub recorder: Arc<ThroughputRecorder>,
+    /// Resume state: `done_prefix[i]` bytes of file `i` are already on
+    /// disk and are never re-requested.
+    pub done_prefix: Option<Vec<u64>>,
+    /// Stop (checkpoint) after this much session time; the report then
+    /// has `completed == false` and carries resumable frontiers.
+    pub checkpoint_after_s: Option<f64>,
+    /// Persist a [`ProgressJournal`] here on every fault event and
+    /// probe boundary (removed again on successful completion).
+    pub journal_dir: Option<PathBuf>,
+    /// A slot aborts the session after this many *consecutive* failed
+    /// fetches. Real transfers use a small bound so persistent errors
+    /// fail loudly; simulated hostile schedules use `usize::MAX`
+    /// because their fault storms are adversarial by construction.
+    pub give_up_after: usize,
+}
+
+/// Per-worker-slot engine state.
+#[derive(Debug)]
+struct Slot {
+    /// Connection open (or opening) on the transport.
+    connected: bool,
+    /// Mirror this slot's connection is bound to.
+    mirror: usize,
+    /// Chunk assigned but possibly not yet issued (serialized
+    /// resolution / failure backoff); issued when `now >= wait_until`.
+    chunk: Option<Chunk>,
+    wait_until: f64,
+    /// Fetch currently in flight.
+    in_flight: bool,
+    /// When the in-flight fetch was issued (mirror goodput samples).
+    fetch_started: f64,
+    /// No new fetch before this time (failure backoff).
+    next_allowed: f64,
+    /// Current backoff span; doubles per consecutive failure.
+    backoff_s: f64,
+    /// Consecutive failed fetches (reset on success).
+    fails: usize,
+}
+
+impl Default for Slot {
+    fn default() -> Slot {
+        Slot {
+            connected: false,
+            mirror: 0,
+            chunk: None,
+            wait_until: 0.0,
+            in_flight: false,
+            fetch_started: 0.0,
+            next_allowed: 0.0,
+            backoff_s: BACKOFF_MIN_S,
+            fails: 0,
+        }
+    }
+}
+
+/// Persist the scheduler's frontiers if they changed since the last
+/// save. Journal failures must not kill the transfer.
+fn save_journal(
+    dir: &Option<PathBuf>,
+    records: &[RunRecord],
+    sched: &ChunkScheduler,
+    chunk_bytes: u64,
+    last: &mut Option<ProgressJournal>,
+) {
+    let Some(dir) = dir else { return };
+    let journal = ProgressJournal::capture(records, &sched.frontiers(), chunk_bytes);
+    if last.as_ref() == Some(&journal) {
+        return;
+    }
+    if let Err(e) = journal.save(dir) {
+        log::warn!("journal save failed: {e}");
+    }
+    *last = Some(journal);
+}
+
+/// Run one complete session (Algorithm 1) over the given transport and
+/// clock; returns the report.
+pub fn run_session(
+    params: EngineParams<'_>,
+    transport: &mut dyn Transport,
+    clock: &dyn Clock,
+) -> Result<SessionReport> {
+    let EngineParams {
+        download,
+        behavior,
+        records,
+        mut controller,
+        runtime,
+        recorder,
+        done_prefix,
+        checkpoint_after_s,
+        journal_dir,
+        give_up_after,
+    } = params;
+    download.validate()?;
+    if records.is_empty() {
+        return Err(Error::Session("no files to download".into()));
+    }
+
+    let mut board = MirrorBoard::new(mirror_width(&records));
+    let mut sched =
+        ChunkScheduler::new_with_progress(&records, behavior.mode, done_prefix.as_deref());
+    let capacity = download.optimizer.c_max;
+    let status = StatusArray::new(capacity);
+    let mut window = ProbeWindow::new(
+        runtime.map(|r| r.constants().samples).unwrap_or(256),
+        0.98,
+    );
+    let mut slots: Vec<Slot> = (0..capacity).map(|_| Slot::default()).collect();
+    let mut events: Vec<TransportEvent> = Vec::new();
+
+    // Metadata resolution: batch pays upfront; serialized pays per cold
+    // file via `res_free` below.
+    let upfront = behavior.resolution.upfront_latency(records.len());
+    while clock.now() < upfront {
+        events.clear();
+        transport.poll(&mut events)?;
+        clock.park(IDLE_PARK_S);
+    }
+    let mut res_free = clock.now();
+
+    let mut target = status.set_target(controller.current());
+    let start = clock.now();
+    let mut trace = vec![(0.0, target)];
+    let sample_dt = 1.0 / download.monitor_hz;
+    let probe_dt = download.optimizer.probe_interval_s;
+    let mut next_sample = start + sample_dt;
+    let mut next_probe = start + probe_dt;
+    let mut probes = 0usize;
+    // Time-weighted target integral for the paper's Concurrency column.
+    let mut target_time = 0.0f64;
+    let mut last_tick = start;
+    // Recovery accounting (fault injection / hostile networks).
+    let mut chunk_retries = 0usize;
+    let mut connection_resets = 0usize;
+    let mut server_rejects = 0usize;
+    let mut mirror_switches = 0usize;
+    let mut completed = true;
+    let mut fatal: Option<Error> = None;
+    let mut last_journal: Option<ProgressJournal> = None;
+    let hard_timeout = if download.timeout_s > 0.0 {
+        download.timeout_s
+    } else {
+        48.0 * 3600.0
+    };
+
+    while !sched.all_done() {
+        let now = clock.now();
+        if let Some(limit) = checkpoint_after_s {
+            if now - start >= limit {
+                completed = false;
+                break;
+            }
+        }
+        if now - start > hard_timeout {
+            status.stop_all();
+            transport.shutdown();
+            return Err(Error::Session(format!(
+                "transfer timed out after {:.0}s (delivered {}/{} bytes)",
+                now - start,
+                sched.progress().0,
+                sched.progress().1
+            )));
+        }
+
+        // --- Reconcile worker slots against the status array. ---
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let running = status.is_running(i);
+            if running && !slot.connected {
+                // Bring the worker up on the healthiest mirror.
+                let mirror = board.pick_for_connect(now);
+                if transport.connect(i, mirror)? {
+                    slot.connected = true;
+                    slot.mirror = mirror;
+                }
+            } else if !running && !slot.in_flight {
+                // Parked and drained: release the connection, and
+                // requeue any chunk that was assigned but never issued
+                // — a parked worker must not strand outstanding work.
+                if slot.connected {
+                    transport.disconnect(i);
+                    slot.connected = false;
+                }
+                if let Some(chunk) = slot.chunk.take() {
+                    sched.chunk_failed(chunk);
+                    chunk_retries += 1;
+                }
+            }
+        }
+
+        // --- Mirror failover: idle slots abandon a collapsing mirror.
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.connected
+                && !slot.in_flight
+                && slot.chunk.is_none()
+                && board.should_failover(slot.mirror, now)
+            {
+                transport.disconnect(i);
+                slot.connected = false;
+                mirror_switches += 1;
+                // The next reconcile pass reconnects to the preferred
+                // mirror via `pick_for_connect`.
+            }
+        }
+
+        // --- Assign work to ready workers. ---
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if !status.is_running(i) || slot.in_flight || !slot.connected {
+                continue;
+            }
+            if !transport.is_ready(i) {
+                continue; // still in handshake
+            }
+            if slot.chunk.is_none() {
+                // Pull the next chunk, charging serialized resolution
+                // for cold files where applicable, and honoring the
+                // slot's failure backoff.
+                let per_file = behavior.resolution.per_file_latency();
+                if let Some(chunk) = sched.next_chunk() {
+                    let mut wait = now.max(slot.next_allowed);
+                    if chunk.cold && per_file > 0.0 {
+                        let begin = res_free.max(wait);
+                        res_free = begin + per_file;
+                        wait = begin + per_file;
+                    }
+                    slot.wait_until = wait;
+                    slot.chunk = Some(chunk);
+                }
+            }
+            let issue = slot.chunk.is_some() && now >= slot.wait_until;
+            if issue {
+                let chunk = slot.chunk.clone().expect("chunk checked above");
+                transport.begin_fetch(i, &records[chunk.file], &chunk, slot.mirror)?;
+                slot.in_flight = true;
+                slot.fetch_started = now;
+            }
+        }
+
+        transport.set_open_files(sched.open_files());
+
+        // --- Advance the world / collect chunk-level outcomes. ---
+        events.clear();
+        transport.poll(&mut events)?;
+        let now = clock.now();
+        target_time += target as f64 * (now - last_tick);
+        last_tick = now;
+
+        // --- Account outcomes. ---
+        let mut had_fault = false;
+        for ev in &events {
+            match ev {
+                TransportEvent::Ready { .. } => {}
+                TransportEvent::Completed { slot: i } => {
+                    let slot = &mut slots[*i];
+                    let chunk = slot
+                        .chunk
+                        .take()
+                        .expect("fetch completed with no chunk assigned");
+                    board.on_success(slot.mirror, chunk.len, now - slot.fetch_started);
+                    sched.chunk_done(&chunk);
+                    slot.in_flight = false;
+                    slot.fails = 0;
+                    slot.backoff_s = BACKOFF_MIN_S;
+                    if !behavior.keep_alive {
+                        // Baselines: fresh connection per request.
+                        transport.disconnect(*i);
+                        slot.connected = false;
+                    }
+                }
+                TransportEvent::Failed {
+                    slot: i,
+                    class,
+                    error,
+                } => {
+                    let slot = &mut slots[*i];
+                    had_fault = true;
+                    // Requeue the remaining work (bytes already
+                    // delivered are counted; range requests restart
+                    // cleanly at chunk grain) and back the slot off.
+                    if let Some(chunk) = slot.chunk.take() {
+                        sched.chunk_failed(chunk);
+                        chunk_retries += 1;
+                    }
+                    slot.in_flight = false;
+                    slot.next_allowed = now + slot.backoff_s;
+                    slot.backoff_s = (slot.backoff_s * 2.0).min(BACKOFF_MAX_S);
+                    board.on_failure(slot.mirror, now);
+                    match class {
+                        FailureClass::Transport => {
+                            connection_resets += 1;
+                            transport.disconnect(*i);
+                            slot.connected = false; // reconcile reopens
+                        }
+                        FailureClass::Reject => {
+                            server_rejects += 1;
+                        }
+                        FailureClass::Fatal => {
+                            // First fatal wins; finish accounting the
+                            // rest of this event batch (completions on
+                            // other slots must still reach the
+                            // scheduler before the final journal).
+                            if fatal.is_none() {
+                                fatal = Some(Error::Session(error.clone()));
+                            }
+                        }
+                    }
+                    slot.fails += 1;
+                    if slot.fails >= give_up_after && fatal.is_none() {
+                        fatal = Some(Error::Session(format!(
+                            "worker {i} gave up after {} consecutive failures: {error}",
+                            slot.fails
+                        )));
+                    }
+                }
+            }
+        }
+        if fatal.is_some() {
+            break;
+        }
+        if had_fault {
+            // Fault-event checkpoint cadence: a crash right after a
+            // fault storm resumes from the freshest frontier.
+            save_journal(
+                &journal_dir,
+                &records,
+                &sched,
+                download.chunk_bytes,
+                &mut last_journal,
+            );
+        }
+
+        // --- Monitor sampling. ---
+        if now >= next_sample {
+            let active = slots.iter().filter(|s| s.in_flight).count();
+            let mbps = recorder.sample(now - start, active);
+            window.push(mbps);
+            next_sample += sample_dt;
+        }
+
+        // --- Probing optimizer loop (Algorithm 1 body). ---
+        if now >= next_probe {
+            let stats = match runtime {
+                Some(rt) => window.aggregate_and_reset(rt)?,
+                None => window.aggregate_mirror_and_reset(),
+            };
+            probes += 1;
+            let new_target = controller.on_probe(Probe {
+                concurrency: target as f64,
+                mbps: stats.mean_mbps,
+            })?;
+            if new_target != target {
+                target = status.set_target(new_target);
+                trace.push((now - start, target));
+            }
+            // Baseline checkpoint cadence: once per probe interval.
+            save_journal(
+                &journal_dir,
+                &records,
+                &sched,
+                download.chunk_bytes,
+                &mut last_journal,
+            );
+            next_probe += probe_dt;
+        }
+
+        if events.is_empty() {
+            clock.park(IDLE_PARK_S);
+        }
+    }
+
+    // Algorithm 1 line 9: stop workers, then tear the transport down.
+    status.stop_all();
+    transport.shutdown();
+
+    if let Some(e) = fatal {
+        // Leave the freshest journal behind for a resume.
+        save_journal(
+            &journal_dir,
+            &records,
+            &sched,
+            download.chunk_bytes,
+            &mut last_journal,
+        );
+        return Err(e);
+    }
+    if completed {
+        if let Some(dir) = &journal_dir {
+            // Transfer complete: the journal is obsolete.
+            ProgressJournal::remove(dir)?;
+        }
+    } else {
+        save_journal(
+            &journal_dir,
+            &records,
+            &sched,
+            download.chunk_bytes,
+            &mut last_journal,
+        );
+    }
+
+    let duration = (clock.now() - start).max(f64::EPSILON);
+    let samples = recorder.samples();
+    let timeline = per_second_bins(&samples);
+    let total_bytes = recorder.total_bytes();
+    Ok(SessionReport {
+        tool: behavior.name,
+        duration_s: duration,
+        total_bytes,
+        mean_throughput_mbps: total_bytes as f64 * 8.0 / 1e6 / duration,
+        mean_concurrency: target_time / duration,
+        mean_inflight: recorder.mean_concurrency(),
+        peak_mbps: timeline.peak(),
+        timeline,
+        samples,
+        concurrency_trace: trace,
+        probes,
+        files_completed: sched.files_completed(),
+        chunk_retries,
+        connection_resets,
+        server_rejects,
+        mirror_bytes: board.bytes(),
+        mirror_switches,
+        completed,
+        frontiers: sched.frontiers(),
+    })
+}

@@ -1,0 +1,252 @@
+//! Per-mirror health scoring for multi-source scheduling.
+//!
+//! A [`crate::accession::RunRecord`] lists an ordered mirror list; the
+//! unified session engine tracks one [`MirrorBoard`] per session and
+//! asks it two questions:
+//!
+//! * **Which mirror should a (re)connecting worker slot bind to?**
+//!   ([`MirrorBoard::pick_for_connect`]) — unprobed mirrors are handed
+//!   out round-robin first so every endpoint gets a throughput estimate
+//!   early; once all mirrors have data, new connections go to the
+//!   best-scoring one.
+//! * **Should an idle slot abandon its current mirror?**
+//!   ([`MirrorBoard::should_failover`]) — yes when the current mirror's
+//!   score has fallen below [`FAILOVER_RATIO`] of the best mirror's,
+//!   which is how workers drain off a slow or browning-out mirror.
+//!
+//! The score is an EWMA of per-chunk goodput divided by a decaying
+//! failure penalty (connection resets and transient 5xx rejections both
+//! count — exactly the quantities [`crate::session::SessionReport`]
+//! already surfaces). Everything is pure arithmetic over the session
+//! clock, so simulated runs replay bit-identically.
+
+/// Fraction of the best mirror's score below which an idle slot fails
+/// over (hysteresis against flapping between comparable mirrors).
+pub const FAILOVER_RATIO: f64 = 0.4;
+
+/// EWMA step for per-chunk goodput samples.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Failure-penalty decay time constant (s): a burst of rejects stops
+/// haunting a mirror ~a minute after it heals.
+const FAIL_DECAY_TAU_S: f64 = 20.0;
+
+/// A mirror that has only ever failed (no completed chunk) stops being
+/// treated as "unprobed and worth trying" once its decayed failure
+/// weight reaches this level.
+const UNPROBED_FAIL_LIMIT: f64 = 3.0;
+
+#[derive(Clone, Debug, Default)]
+struct MirrorStat {
+    /// EWMA of per-chunk goodput (Mbps); `None` until a chunk completes.
+    ewma_mbps: Option<f64>,
+    /// Exponentially decayed failure count.
+    fail_weight: f64,
+    /// Session time of the most recent failure (s).
+    last_fail_s: f64,
+    /// Payload bytes credited to this mirror (completed chunks only).
+    bytes: u64,
+    /// Completed chunks.
+    successes: u64,
+    /// Failures (resets + rejects), undecayed, for the report.
+    failures: u64,
+}
+
+impl MirrorStat {
+    fn decayed_fails(&self, now_s: f64) -> f64 {
+        if self.fail_weight <= 0.0 {
+            return 0.0;
+        }
+        let dt = (now_s - self.last_fail_s).max(0.0);
+        self.fail_weight * (-dt / FAIL_DECAY_TAU_S).exp()
+    }
+}
+
+/// Session-wide mirror health board.
+#[derive(Clone, Debug)]
+pub struct MirrorBoard {
+    stats: Vec<MirrorStat>,
+    /// Round-robin cursor for spreading slots across unprobed mirrors.
+    rr: usize,
+}
+
+impl MirrorBoard {
+    /// Board over `mirrors >= 1` endpoints.
+    pub fn new(mirrors: usize) -> MirrorBoard {
+        MirrorBoard {
+            stats: vec![MirrorStat::default(); mirrors.max(1)],
+            rr: 0,
+        }
+    }
+
+    /// Number of mirrors tracked.
+    pub fn mirror_count(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// A chunk of `bytes` completed on mirror `m` in `elapsed_s`.
+    pub fn on_success(&mut self, m: usize, bytes: u64, elapsed_s: f64) {
+        let mbps = bytes as f64 * 8.0 / 1e6 / elapsed_s.max(1e-9);
+        let s = &mut self.stats[m];
+        s.bytes += bytes;
+        s.successes += 1;
+        s.ewma_mbps = Some(match s.ewma_mbps {
+            Some(prev) => prev + EWMA_ALPHA * (mbps - prev),
+            None => mbps,
+        });
+    }
+
+    /// A chunk failed (reset or transient rejection) on mirror `m`.
+    pub fn on_failure(&mut self, m: usize, now_s: f64) {
+        let s = &mut self.stats[m];
+        s.fail_weight = s.decayed_fails(now_s) + 1.0;
+        s.last_fail_s = now_s;
+        s.failures += 1;
+    }
+
+    /// Health score of mirror `m` (higher is better); `None` until the
+    /// mirror has completed at least one chunk.
+    pub fn score(&self, m: usize, now_s: f64) -> Option<f64> {
+        let s = &self.stats[m];
+        s.ewma_mbps.map(|e| e / (1.0 + s.decayed_fails(now_s)))
+    }
+
+    /// Mirror a (re)connecting slot should bind to.
+    pub fn pick_for_connect(&mut self, now_s: f64) -> usize {
+        // Explore endpoints we have no throughput estimate for (unless
+        // they have only ever failed), spreading slots round-robin.
+        let unprobed: Vec<usize> = (0..self.stats.len())
+            .filter(|&m| {
+                self.stats[m].ewma_mbps.is_none()
+                    && self.stats[m].decayed_fails(now_s) < UNPROBED_FAIL_LIMIT
+            })
+            .collect();
+        if !unprobed.is_empty() {
+            let m = unprobed[self.rr % unprobed.len()];
+            self.rr += 1;
+            return m;
+        }
+        self.preferred(now_s)
+    }
+
+    /// Best-scoring probed mirror (lowest index wins ties; mirror 0
+    /// when nothing is probed yet).
+    pub fn preferred(&self, now_s: f64) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for m in 0..self.stats.len() {
+            if let Some(sc) = self.score(m, now_s) {
+                if sc > best_score {
+                    best_score = sc;
+                    best = m;
+                }
+            }
+        }
+        best
+    }
+
+    /// Should an idle slot bound to `current` reconnect elsewhere?
+    pub fn should_failover(&self, current: usize, now_s: f64) -> bool {
+        if self.stats.len() < 2 {
+            return false;
+        }
+        let Some(cur) = self.score(current, now_s) else {
+            return false;
+        };
+        let best = self.preferred(now_s);
+        if best == current {
+            return false;
+        }
+        match self.score(best, now_s) {
+            Some(best_sc) => cur < best_sc * FAILOVER_RATIO,
+            None => false,
+        }
+    }
+
+    /// Payload bytes credited per mirror (the report's `mirror_bytes`).
+    pub fn bytes(&self) -> Vec<u64> {
+        self.stats.iter().map(|s| s.bytes).collect()
+    }
+
+    /// Failures recorded per mirror (diagnostics).
+    pub fn failures(&self) -> Vec<u64> {
+        self.stats.iter().map(|s| s.failures).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unprobed_mirrors_are_spread_round_robin() {
+        let mut b = MirrorBoard::new(3);
+        let picks: Vec<usize> = (0..6).map(|_| b.pick_for_connect(0.0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn connects_prefer_the_faster_probed_mirror() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 1_000_000, 10.0); // 0.8 Mbps
+        b.on_success(1, 10_000_000, 1.0); // 80 Mbps
+        assert_eq!(b.preferred(10.0), 1);
+        assert_eq!(b.pick_for_connect(10.0), 1);
+    }
+
+    #[test]
+    fn failover_triggers_on_a_dominated_mirror() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 1_000_000, 10.0); // slow: 0.8 Mbps
+        b.on_success(1, 10_000_000, 1.0); // fast: 80 Mbps
+        assert!(b.should_failover(0, 10.0));
+        assert!(!b.should_failover(1, 10.0));
+    }
+
+    #[test]
+    fn comparable_mirrors_do_not_flap() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 8_000_000, 1.0);
+        b.on_success(1, 10_000_000, 1.0);
+        assert!(!b.should_failover(0, 1.0));
+        assert!(!b.should_failover(1, 1.0));
+    }
+
+    #[test]
+    fn failures_penalize_and_decay() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 10_000_000, 1.0);
+        b.on_success(1, 10_000_000, 1.0);
+        for _ in 0..5 {
+            b.on_failure(0, 100.0);
+        }
+        let hurt = b.score(0, 100.0).unwrap();
+        let healthy = b.score(1, 100.0).unwrap();
+        assert!(hurt < healthy * 0.4, "rejects should crater the score");
+        assert!(b.should_failover(0, 100.0));
+        // Long after the burst the penalty decays away.
+        let later = b.score(0, 400.0).unwrap();
+        assert!(later > healthy * 0.9);
+        assert_eq!(b.failures(), vec![5, 0]);
+    }
+
+    #[test]
+    fn single_mirror_never_fails_over() {
+        let mut b = MirrorBoard::new(1);
+        b.on_success(0, 1_000, 10.0);
+        for _ in 0..10 {
+            b.on_failure(0, 5.0);
+        }
+        assert!(!b.should_failover(0, 5.0));
+        assert_eq!(b.pick_for_connect(5.0), 0);
+    }
+
+    #[test]
+    fn byte_attribution() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 100, 1.0);
+        b.on_success(1, 250, 1.0);
+        b.on_success(1, 50, 1.0);
+        assert_eq!(b.bytes(), vec![100, 300]);
+    }
+}

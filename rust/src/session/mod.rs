@@ -1,25 +1,34 @@
 //! Session drivers: complete transfers from accession list to report.
 //!
-//! A *session* wires the coordinator pieces (scheduler, status array,
-//! probe window), a controller, a transport, and the metrics recorder
-//! into the paper's Figure 3 pipeline, and runs it to completion:
+//! The full Algorithm-1 session — resolution charging, chunk
+//! scheduling, worker-slot pool reconciliation, monitor sampling, probe
+//! aggregation, controller stepping, retry/backoff classification,
+//! checkpoint journaling, mirror failover, and report assembly — is
+//! implemented **once**, in [`engine`], parameterized by two traits:
 //!
-//! * [`sim`] — the virtual-time driver over [`crate::netsim`]: every
-//!   paper experiment runs here (hundreds of simulated seconds per
-//!   wall-clock millisecond, fully deterministic per seed).
-//! * [`real`] — the thread-per-worker driver over real sockets
-//!   ([`crate::transport`]): same coordinator, same controller, same
-//!   Algorithm 1 shape, but actual HTTP range requests against a live
-//!   server. The end-to-end example and integration tests run here.
+//! * [`engine::Transport`] — how connections open and bytes move.
+//!   [`sim`] implements it over [`crate::netsim`] (virtual time, fully
+//!   deterministic per seed: every paper experiment runs here);
+//!   [`real`] implements it with worker threads over
+//!   [`crate::transport`]'s HTTP client against live servers.
+//! * [`engine::Clock`] — virtual vs wall time.
 //!
-//! Both produce the same [`SessionReport`], so every metric the
+//! [`mirrors`] holds the per-mirror health board the engine uses to
+//! schedule across (and fail over between) a record's mirror list.
+//!
+//! Both drivers produce the same [`SessionReport`], so every metric the
 //! experiment harness computes is defined identically for simulated
-//! and real transfers.
+//! and real transfers — and every recovery feature behaves identically
+//! too, because it is literally the same code.
 
+pub mod engine;
+pub mod mirrors;
 pub mod real;
 pub mod sim;
 
-pub use sim::{run_simulated_download, SimSession, SimSessionParams, ToolBehavior};
+pub use engine::{Clock, EngineParams, FailureClass, ToolBehavior, Transport, TransportEvent};
+pub use mirrors::MirrorBoard;
+pub use sim::{run_simulated_download, SimSession, SimSessionParams};
 
 use crate::metrics::recorder::Sample;
 use crate::metrics::timeline::Timeline;
@@ -65,6 +74,13 @@ pub struct SessionReport {
     /// Requests rejected by transient server errors (HTTP 5xx
     /// analogue); the connection survived, the chunk was retried.
     pub server_rejects: usize,
+    /// Payload bytes credited to each mirror index (completed chunks
+    /// only). Single-mirror transfers have length 1; a multi-mirror
+    /// transfer that failed over shows bytes on ≥ 2 entries.
+    pub mirror_bytes: Vec<u64>,
+    /// Times a worker slot abandoned its mirror for a better-scoring
+    /// one (see [`mirrors::MirrorBoard`]).
+    pub mirror_switches: usize,
     /// Whether the transfer ran to completion. `false` only for
     /// checkpoint-interrupted simulated sessions (see
     /// [`sim::SimSession::with_checkpoint_after`]); resuming from
@@ -92,6 +108,18 @@ impl SessionReport {
             s.push_str(&format!(
                 "  [{} retries: {} resets, {} 5xx]",
                 self.chunk_retries, self.connection_resets, self.server_rejects
+            ));
+        }
+        if self.mirror_bytes.len() > 1 {
+            let shares: Vec<String> = self
+                .mirror_bytes
+                .iter()
+                .map(|b| crate::util::fmt_bytes(*b))
+                .collect();
+            s.push_str(&format!(
+                "  [mirrors: {} | {} switches]",
+                shares.join(" / "),
+                self.mirror_switches
             ));
         }
         if !self.completed {

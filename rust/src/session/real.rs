@@ -1,39 +1,43 @@
-//! Real-socket session driver: Algorithm 1 over actual HTTP.
+//! Real-socket session driver: the [`crate::session::engine`] over
+//! actual HTTP.
 //!
-//! Thread layout (exactly the paper's architecture, Figure 3):
+//! All control logic (Algorithm 1, retry classification, backoff,
+//! checkpoint journaling, mirror failover) lives in the unified engine;
+//! this module only adapts real sockets to the engine's
+//! [`Transport`]/[`Clock`] traits:
 //!
-//! * the **calling thread** runs the optimizer loop — it owns the
-//!   controller (and through it the PJRT runtime, which is not `Send`),
-//!   samples the shared throughput recorder at the monitor cadence,
-//!   aggregates each probe window through the `throughput_window`
-//!   artifact, and writes the new target into the shared
-//!   [`StatusArray`];
-//! * `c_max` **worker threads** each own one HTTP connection; between
-//!   chunks they poll their status slot — parked workers drop their
-//!   connection (that *is* the concurrency change), running workers
-//!   pull the next chunk from the mutex-guarded scheduler and stream
-//!   it, feeding byte counts into the recorder from the read callback.
-//!
-//! The scheduler mutex is touched once per chunk (32 MiB default), i.e.
-//! a few times per second across all workers — contention-free in
-//! practice; the byte hot path is atomics only.
+//! * [`RealTransport`] owns `c_max` worker threads, one per engine
+//!   slot. Each worker holds one persistent HTTP connection (via
+//!   [`crate::transport::fetcher::ChunkFetcher`]) and blocks on a
+//!   command channel; the engine pushes fetch assignments and
+//!   disconnects, and chunk-level outcomes come back on a shared event
+//!   channel. The byte hot path stays atomics-only: workers feed the
+//!   shared recorder directly from the read callback.
+//! * [`WallClock`] is `std::time::Instant` with a real park.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::accession::resolver::ResolutionCost;
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
-use crate::coordinator::pool::StatusArray;
-use crate::coordinator::probe::ProbeWindow;
-use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
+use crate::coordinator::scheduler::{Chunk, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
-use crate::metrics::timeline::per_second_bins;
-use crate::optimizer::{ConcurrencyController, Probe};
+use crate::optimizer::ConcurrencyController;
 use crate::runtime::XlaRuntime;
+use crate::session::engine::{
+    run_session, Clock, EngineParams, ToolBehavior, Transport, TransportEvent,
+};
 use crate::session::SessionReport;
-use crate::transport::http_client::HttpConnection;
+use crate::transport::fetcher::ChunkFetcher;
 use crate::{Error, Result};
+
+/// A worker gives up (and fails the whole session) only after this many
+/// consecutive chunk failures — isolated disconnects and transient 5xx
+/// responses are retried with backoff instead.
+pub const MAX_CONSECUTIVE_FAILURES: usize = 6;
 
 /// Where downloaded bytes go.
 #[derive(Clone, Debug)]
@@ -55,62 +59,203 @@ pub struct RealSessionParams<'a> {
     pub name: String,
 }
 
-/// A worker gives up (and fails the whole session) only after this many
-/// consecutive chunk failures — isolated disconnects and transient 5xx
-/// responses are retried with backoff instead.
-const MAX_CONSECUTIVE_FAILURES: usize = 6;
+/// Wall-time session clock.
+pub struct WallClock {
+    start: Instant,
+}
 
-struct WorkerShared {
-    scheduler: Mutex<ChunkScheduler>,
-    status: StatusArray,
-    recorder: ThroughputRecorder,
-    records: Vec<RunRecord>,
-    in_flight: AtomicUsize,
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn park(&self, secs: f64) {
+        if secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+}
+
+enum WorkerCmd {
+    Fetch {
+        url: String,
+        out: Option<PathBuf>,
+        chunk: Chunk,
+        total_bytes: u64,
+    },
+    Disconnect,
+}
+
+/// The engine's transport over real sockets: one thread per slot.
+pub struct RealTransport {
+    cmd_tx: Vec<Sender<WorkerCmd>>,
+    events_rx: Receiver<TransportEvent>,
+    joins: Vec<std::thread::JoinHandle<()>>,
     sink: Sink,
-    /// First *persistent* worker error (the session fails loudly, not
-    /// silently, once retries are exhausted).
-    first_error: Mutex<Option<Error>>,
-    /// Recovery accounting for the report.
-    chunk_retries: AtomicUsize,
-    connection_resets: AtomicUsize,
-    server_rejects: AtomicUsize,
 }
 
-/// Why a chunk attempt failed — drives retry accounting.
-enum ChunkFailure {
-    /// Connection-level failure (reset, short body, connect error):
-    /// the worker reconnects before retrying.
-    Transport(Error),
-    /// Server said 5xx: the connection may be reusable, but we drop it
-    /// too — archives often brown out per-connection state.
-    Reject(Error),
-    /// Deterministic failure (malformed URL, 4xx, local I/O): retrying
-    /// cannot help; fail the session immediately.
-    Fatal(Error),
+impl RealTransport {
+    /// Spawn `capacity` workers sharing the byte recorder.
+    pub fn spawn(
+        capacity: usize,
+        sink: Sink,
+        recorder: Arc<ThroughputRecorder>,
+    ) -> Result<RealTransport> {
+        let (events_tx, events_rx) = channel::<TransportEvent>();
+        let mut cmd_tx = Vec::with_capacity(capacity);
+        let mut joins = Vec::with_capacity(capacity);
+        for slot in 0..capacity {
+            let (tx, rx) = channel::<WorkerCmd>();
+            let ev_tx = events_tx.clone();
+            let rec = recorder.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dl-worker-{slot}"))
+                    .spawn(move || worker_loop(slot, rx, ev_tx, rec))
+                    .map_err(|e| Error::Session(format!("spawn worker {slot}: {e}")))?,
+            );
+            cmd_tx.push(tx);
+        }
+        Ok(RealTransport {
+            cmd_tx,
+            events_rx,
+            joins,
+            sink,
+        })
+    }
 }
 
-impl ChunkFailure {
-    fn into_error(self) -> Error {
-        match self {
-            ChunkFailure::Transport(e) | ChunkFailure::Reject(e) | ChunkFailure::Fatal(e) => e,
+impl Transport for RealTransport {
+    fn connect(&mut self, _slot: usize, _mirror: usize) -> Result<bool> {
+        // Real connections are opened lazily by the worker on its first
+        // fetch (TCP setup happens on the worker thread, not here).
+        Ok(true)
+    }
+
+    fn disconnect(&mut self, slot: usize) {
+        // Queued behind any in-flight fetch; the worker drops its
+        // connection when it processes the command.
+        let _ = self.cmd_tx[slot].send(WorkerCmd::Disconnect);
+    }
+
+    fn is_ready(&self, slot: usize) -> bool {
+        slot < self.cmd_tx.len()
+    }
+
+    fn begin_fetch(
+        &mut self,
+        slot: usize,
+        record: &RunRecord,
+        chunk: &Chunk,
+        mirror: usize,
+    ) -> Result<()> {
+        let out = match &self.sink {
+            Sink::Discard => None,
+            Sink::Directory(dir) => Some(std::path::Path::new(dir).join(&record.accession)),
+        };
+        self.cmd_tx[slot]
+            .send(WorkerCmd::Fetch {
+                url: record.mirror_url(mirror).to_string(),
+                out,
+                chunk: chunk.clone(),
+                total_bytes: record.bytes,
+            })
+            .map_err(|_| Error::Session(format!("worker {slot} is gone")))
+    }
+
+    fn poll(&mut self, events: &mut Vec<TransportEvent>) -> Result<()> {
+        loop {
+            match self.events_rx.try_recv() {
+                Ok(ev) => events.push(ev),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self) {
+        // Closing the command channels ends every worker loop; join so
+        // no worker is still streaming when the report is assembled.
+        self.cmd_tx.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RealTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One worker thread: block on assignments, stream chunks, classify
+/// and report outcomes. No scheduling decisions happen here.
+fn worker_loop(
+    slot: usize,
+    rx: Receiver<WorkerCmd>,
+    events: Sender<TransportEvent>,
+    recorder: Arc<ThroughputRecorder>,
+) {
+    let mut fetcher = ChunkFetcher::new(recorder);
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            WorkerCmd::Disconnect => fetcher.disconnect(),
+            WorkerCmd::Fetch {
+                url,
+                out,
+                chunk,
+                total_bytes,
+            } => {
+                let ev = match fetcher.fetch(&url, out.as_deref(), &chunk, total_bytes) {
+                    Ok(()) => TransportEvent::Completed { slot },
+                    Err((class, error)) => {
+                        // Drop the connection on any failure — archives
+                        // often brown out per-connection state.
+                        fetcher.disconnect();
+                        TransportEvent::Failed { slot, class, error }
+                    }
+                };
+                if events.send(ev).is_err() {
+                    return; // session is tearing down
+                }
+            }
         }
     }
 }
 
 /// Run a real-socket transfer to completion.
 pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> {
-    params.download.validate()?;
-    if params.records.is_empty() {
+    let RealSessionParams {
+        download,
+        records,
+        controller,
+        runtime,
+        sink,
+        name,
+    } = params;
+    download.validate()?;
+    if records.is_empty() {
         return Err(Error::Session("no files to download".into()));
     }
+
     // Resume: pick up a prior journal's frontiers when writing to a
     // directory; files already (partially) on disk are not re-fetched.
     let mut done_prefix: Option<Vec<u64>> = None;
-    if let Sink::Directory(dir) = &params.sink {
+    let mut journal_dir: Option<PathBuf> = None;
+    if let Sink::Directory(dir) = &sink {
         std::fs::create_dir_all(dir)?;
         let dirp = std::path::Path::new(dir);
         if let Some(journal) = crate::coordinator::resume::ProgressJournal::load(dirp)? {
-            let frontiers = journal.frontiers_for(&params.records);
+            let frontiers = journal.frontiers_for(&records);
             if frontiers.iter().any(|&f| f > 0) {
                 log::info!(
                     "resuming: {} bytes already on disk",
@@ -122,7 +267,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         // Pre-size the output files so workers can write ranges
         // without coordinating. Existing files keep their contents
         // (set_len only extends/truncates to the expected size).
-        for r in &params.records {
+        for r in &records {
             let path = dirp.join(&r.accession);
             let f = std::fs::OpenOptions::new()
                 .create(true)
@@ -131,310 +276,37 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
                 .open(&path)?;
             f.set_len(r.bytes)?;
         }
+        journal_dir = Some(dirp.to_path_buf());
     }
 
-    let mode = SchedulerMode::Chunked {
-        chunk_bytes: params.download.chunk_bytes,
-        max_open_files: params.download.max_open_files,
+    let behavior = ToolBehavior {
+        name,
+        mode: SchedulerMode::Chunked {
+            chunk_bytes: download.chunk_bytes,
+            max_open_files: download.max_open_files,
+        },
+        keep_alive: true,
+        // The caller's resolver has already waited in real time.
+        resolution: ResolutionCost::Batch { latency_s: 0.0 },
     };
-    let capacity = params.download.optimizer.c_max;
-    let shared = Arc::new(WorkerShared {
-        scheduler: Mutex::new(ChunkScheduler::new_with_progress(
-            &params.records,
-            mode,
-            done_prefix.as_deref(),
-        )),
-        status: StatusArray::new(capacity),
-        recorder: ThroughputRecorder::new(),
-        records: params.records.clone(),
-        in_flight: AtomicUsize::new(0),
-        sink: params.sink.clone(),
-        first_error: Mutex::new(None),
-        chunk_retries: AtomicUsize::new(0),
-        connection_resets: AtomicUsize::new(0),
-        server_rejects: AtomicUsize::new(0),
-    });
-
-    // --- Spawn workers. ---
-    let mut handles = Vec::with_capacity(capacity);
-    for i in 0..capacity {
-        let ws = shared.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("dl-worker-{i}"))
-                .spawn(move || worker_loop(i, &ws))
-                .map_err(|e| Error::Session(format!("spawn worker {i}: {e}")))?,
-        );
-    }
-
-    // --- Optimizer loop (Algorithm 1) on this thread. ---
-    let mut controller = params.controller;
-    let mut window = ProbeWindow::new(
-        params.runtime.map(|r| r.constants().samples).unwrap_or(256),
-        0.98,
-    );
-    let start = Instant::now();
-    let mut target = shared.status.set_target(controller.current());
-    let mut trace = vec![(0.0, target)];
-    let sample_dt = Duration::from_secs_f64(1.0 / params.download.monitor_hz);
-    let probe_dt = Duration::from_secs_f64(params.download.optimizer.probe_interval_s);
-    let mut next_sample = start + sample_dt;
-    let mut next_probe = start + probe_dt;
-    let mut probes = 0usize;
-    let mut target_time = 0.0f64;
-    let mut last_tick = start;
-    let timeout = if params.download.timeout_s > 0.0 {
-        Duration::from_secs_f64(params.download.timeout_s)
-    } else {
-        Duration::from_secs(24 * 3600)
-    };
-
-    let result: Result<()> = loop {
-        if shared.scheduler.lock().unwrap().all_done() {
-            break Ok(());
-        }
-        if let Some(err) = shared.first_error.lock().unwrap().take() {
-            break Err(err);
-        }
-        if start.elapsed() > timeout {
-            break Err(Error::Session(format!(
-                "transfer timed out after {:.0?}",
-                timeout
-            )));
-        }
-        let now = Instant::now();
-        target_time += target as f64 * now.duration_since(last_tick).as_secs_f64();
-        last_tick = now;
-        if now >= next_sample {
-            let t = start.elapsed().as_secs_f64();
-            let active = shared.in_flight.load(Ordering::Relaxed);
-            let mbps = shared.recorder.sample(t, active);
-            window.push(mbps);
-            next_sample += sample_dt;
-        }
-        if now >= next_probe {
-            let stats = match params.runtime {
-                Some(rt) => window.aggregate_and_reset(rt)?,
-                None => {
-                    let s = window.aggregate_mirror();
-                    window = ProbeWindow::new(256, 0.98);
-                    s
-                }
-            };
-            probes += 1;
-            let new_target = controller.on_probe(Probe {
-                concurrency: target as f64,
-                mbps: stats.mean_mbps,
-            })?;
-            if new_target != target {
-                target = shared.status.set_target(new_target);
-                trace.push((start.elapsed().as_secs_f64(), target));
-            }
-            // Persist resume state once per probe interval.
-            if let Sink::Directory(dir) = &params.sink {
-                let frontiers = shared.scheduler.lock().unwrap().frontiers();
-                let journal = crate::coordinator::resume::ProgressJournal::capture(
-                    &params.records,
-                    &frontiers,
-                    params.download.chunk_bytes,
-                );
-                // Journal failures must not kill the transfer.
-                if let Err(e) = journal.save(std::path::Path::new(dir)) {
-                    log::warn!("journal save failed: {e}");
-                }
-            }
-            next_probe += probe_dt;
-        }
-        std::thread::sleep(Duration::from_millis(2));
-    };
-
-    // Algorithm 1 line 9: stop workers, then join.
-    shared.status.stop_all();
-    for h in handles {
-        let _ = h.join();
-    }
-    result?;
-    if let Sink::Directory(dir) = &params.sink {
-        // Transfer complete: the journal is obsolete.
-        crate::coordinator::resume::ProgressJournal::remove(std::path::Path::new(dir))?;
-    }
-
-    let duration = start.elapsed().as_secs_f64().max(f64::EPSILON);
-    let samples = shared.recorder.samples();
-    let timeline = per_second_bins(&samples);
-    let total_bytes = shared.recorder.total_bytes();
-    let (files_completed, frontiers) = {
-        let sched = shared.scheduler.lock().unwrap();
-        (sched.files_completed(), sched.frontiers())
-    };
-    Ok(SessionReport {
-        tool: params.name,
-        duration_s: duration,
-        total_bytes,
-        mean_throughput_mbps: total_bytes as f64 * 8.0 / 1e6 / duration,
-        mean_concurrency: target_time / duration,
-        mean_inflight: shared.recorder.mean_concurrency(),
-        peak_mbps: timeline.peak(),
-        timeline,
-        samples,
-        concurrency_trace: trace,
-        probes,
-        files_completed,
-        chunk_retries: shared.chunk_retries.load(Ordering::Relaxed),
-        connection_resets: shared.connection_resets.load(Ordering::Relaxed),
-        server_rejects: shared.server_rejects.load(Ordering::Relaxed),
-        completed: true,
-        frontiers,
-    })
-}
-
-/// One worker thread: poll status → pull chunk → stream it. Transient
-/// failures (disconnects, 5xx) requeue the chunk and retry after
-/// backoff; only `MAX_CONSECUTIVE_FAILURES` in a row fail the session.
-fn worker_loop(index: usize, shared: &WorkerShared) {
-    let mut conn: Option<HttpConnection> = None;
-    let mut consecutive_failures = 0usize;
-    loop {
-        if shared.status.is_stopped(index) {
-            return;
-        }
-        if !shared.status.is_running(index) {
-            // Parked: drop the connection (this is what "reducing
-            // concurrency" means at the socket level) and wait.
-            conn = None;
-            std::thread::sleep(Duration::from_millis(5));
-            continue;
-        }
-        // Pull work.
-        let chunk = {
-            let mut sched = shared.scheduler.lock().unwrap();
-            sched.next_chunk()
-        };
-        let Some(chunk) = chunk else {
-            if shared.scheduler.lock().unwrap().all_done() {
-                return;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-            continue;
-        };
-
-        shared.in_flight.fetch_add(1, Ordering::Relaxed);
-        let outcome = stream_chunk(&mut conn, shared, &chunk);
-        shared.in_flight.fetch_sub(1, Ordering::Relaxed);
-
-        match outcome {
-            Ok(()) => {
-                consecutive_failures = 0;
-                shared.scheduler.lock().unwrap().chunk_done(&chunk);
-            }
-            Err(failure) => {
-                // Requeue so the outstanding accounting stays exact,
-                // then reconnect and retry transient failures;
-                // deterministic ones fail the session immediately.
-                conn = None;
-                shared.scheduler.lock().unwrap().chunk_failed(chunk);
-                match &failure {
-                    ChunkFailure::Transport(_) => {
-                        shared.connection_resets.fetch_add(1, Ordering::Relaxed);
-                        shared.chunk_retries.fetch_add(1, Ordering::Relaxed);
-                    }
-                    ChunkFailure::Reject(_) => {
-                        shared.server_rejects.fetch_add(1, Ordering::Relaxed);
-                        shared.chunk_retries.fetch_add(1, Ordering::Relaxed);
-                    }
-                    ChunkFailure::Fatal(_) => {
-                        let mut slot = shared.first_error.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(failure.into_error());
-                        }
-                        return;
-                    }
-                }
-                consecutive_failures += 1;
-                if consecutive_failures >= MAX_CONSECUTIVE_FAILURES {
-                    let mut slot = shared.first_error.lock().unwrap();
-                    if slot.is_none() {
-                        *slot = Some(failure.into_error());
-                    }
-                    return;
-                }
-                // Exponential backoff, capped well under probe cadence.
-                let backoff = 20u64 << consecutive_failures.min(5);
-                std::thread::sleep(Duration::from_millis(backoff.min(640)));
-            }
-        }
-    }
-}
-
-/// Stream one chunk over the worker's (possibly new) connection.
-fn stream_chunk(
-    conn: &mut Option<HttpConnection>,
-    shared: &WorkerShared,
-    chunk: &Chunk,
-) -> std::result::Result<(), ChunkFailure> {
-    let record = &shared.records[chunk.file];
-    // A URL that doesn't parse can never succeed: fatal, not retried.
-    let (host, port, path) =
-        HttpConnection::split_url(&record.url).map_err(ChunkFailure::Fatal)?;
-    if conn.is_none() {
-        *conn = Some(
-            HttpConnection::connect(&host, port, Duration::from_secs(10))
-                .map_err(ChunkFailure::Transport)?,
-        );
-    }
-    let c = conn.as_mut().unwrap();
-
-    // Output plumbing. Local I/O failures are deterministic: fatal.
-    let mut file = match &shared.sink {
-        Sink::Discard => None,
-        Sink::Directory(dir) => {
-            use std::io::{Seek, SeekFrom};
-            let path = std::path::Path::new(dir).join(&record.accession);
-            let open = || -> Result<std::fs::File> {
-                let mut f = std::fs::OpenOptions::new().write(true).open(&path)?;
-                f.seek(SeekFrom::Start(chunk.offset))?;
-                Ok(f)
-            };
-            Some(open().map_err(ChunkFailure::Fatal)?)
-        }
-    };
-
-    let range = if chunk.offset == 0 && chunk.len == record.bytes {
-        None // whole file
-    } else {
-        Some((chunk.offset, chunk.len))
-    };
-    let mut written: u64 = 0;
-    let resp = c
-        .get_range(&path, range, |block| {
-            shared.recorder.add_bytes(block.len() as u64);
-            written += block.len() as u64;
-            if let Some(f) = &mut file {
-                use std::io::Write;
-                // Errors surface through the length check below.
-                let _ = f.write_all(block);
-            }
-        })
-        .map_err(ChunkFailure::Transport)?;
-    if resp.status >= 500 {
-        // Transient server error: retryable, counted separately.
-        return Err(ChunkFailure::Reject(Error::Transport(format!(
-            "GET {path} range {:?}: HTTP {}",
-            range, resp.status
-        ))));
-    }
-    if !(resp.status == 200 || resp.status == 206) {
-        // 4xx and friends are deterministic: retrying cannot help.
-        return Err(ChunkFailure::Fatal(Error::Transport(format!(
-            "GET {path} range {:?}: HTTP {}",
-            range, resp.status
-        ))));
-    }
-    if written != chunk.len {
-        return Err(ChunkFailure::Transport(Error::Transport(format!(
-            "GET {path}: short body {written} of {} bytes",
-            chunk.len
-        ))));
-    }
-    Ok(())
+    let recorder = Arc::new(ThroughputRecorder::new());
+    let mut transport =
+        RealTransport::spawn(download.optimizer.c_max, sink, recorder.clone())?;
+    let clock = WallClock::start();
+    run_session(
+        EngineParams {
+            download,
+            behavior,
+            records,
+            controller,
+            runtime,
+            recorder,
+            done_prefix,
+            checkpoint_after_s: None,
+            journal_dir,
+            give_up_after: MAX_CONSECUTIVE_FAILURES,
+        },
+        &mut transport,
+        &clock,
+    )
 }

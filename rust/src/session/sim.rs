@@ -1,58 +1,159 @@
-//! Virtual-time session driver.
+//! Virtual-time session driver: the [`crate::session::engine`] over
+//! [`crate::netsim`].
 //!
-//! Runs a complete transfer against the [`crate::netsim`] engine:
-//! resolution → chunk scheduling → a worker-slot pool reconciled
-//! against the Algorithm 1 status array → monitor sampling → probing
-//! optimizer loop → completion. Wall-clock cost is microseconds per
-//! simulated second; determinism is total given `(params, seed)`.
+//! All control logic (Algorithm 1, retries, checkpoints, mirror
+//! failover) lives in the unified engine; this module only adapts the
+//! simulator to the engine's [`Transport`]/[`Clock`] traits:
 //!
-//! The per-tool behavioural differences (DESIGN.md §2) are all
-//! expressed as [`ToolBehavior`] fields, so FastBioDL and the baselines
-//! run through *identical* machinery and differ only in policy:
-//! scheduling granularity, connection reuse, resolution cost, and the
-//! concurrency controller.
+//! * [`SimTransport`] maps engine slots to simulator flows, opens each
+//!   connection against the slot's bound mirror (so per-mirror fault
+//!   injection lands on the right flows), and translates
+//!   [`crate::netsim::FlowEvent`]s into [`TransportEvent`]s.
+//! * [`VirtualClock`] is a shared cell the transport advances on every
+//!   step — wall-clock cost is microseconds per simulated second, and
+//!   determinism is total given `(params, seed)`.
 
-use crate::accession::resolver::ResolutionCost;
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::Arc;
+
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
-use crate::coordinator::pool::StatusArray;
-use crate::coordinator::probe::ProbeWindow;
-use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
+use crate::coordinator::scheduler::Chunk;
 use crate::metrics::recorder::ThroughputRecorder;
-use crate::metrics::timeline::per_second_bins;
 use crate::netsim::{FlowId, NetSim, NetSimConfig};
-use crate::optimizer::{ConcurrencyController, Probe};
+use crate::optimizer::ConcurrencyController;
 use crate::runtime::XlaRuntime;
+use crate::session::engine::{
+    run_session, Clock, EngineParams, FailureClass, Transport, TransportEvent,
+};
 use crate::session::SessionReport;
 use crate::{Error, Result};
 
-/// Tool-level behaviour knobs (what distinguishes FastBioDL from the
-/// baseline tools besides the controller).
-#[derive(Clone, Debug)]
-pub struct ToolBehavior {
-    /// Display label.
-    pub name: String,
-    /// Range-chunked vs whole-file requests.
-    pub mode: SchedulerMode,
-    /// Reuse connections across requests (keep-alive). Baselines open
-    /// a fresh connection per file.
-    pub keep_alive: bool,
-    /// Metadata resolution cost model.
-    pub resolution: ResolutionCost,
+pub use crate::session::engine::ToolBehavior;
+
+/// Virtual session clock: a shared cell the simulated transport writes
+/// after every step. `park` is a no-op — stepping *is* time passing.
+#[derive(Clone, Default)]
+pub struct VirtualClock(Rc<Cell<f64>>);
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Move virtual time forward (called by the transport's poll).
+    pub fn advance_to(&self, t_s: f64) {
+        self.0.set(t_s);
+    }
 }
 
-impl ToolBehavior {
-    /// FastBioDL: chunked, keep-alive, batch resolution (paper §4).
-    pub fn fastbiodl(cfg: &DownloadConfig) -> ToolBehavior {
-        ToolBehavior {
-            name: "fastbiodl".into(),
-            mode: SchedulerMode::Chunked {
-                chunk_bytes: cfg.chunk_bytes,
-                max_open_files: cfg.max_open_files,
-            },
-            keep_alive: true,
-            resolution: ResolutionCost::Batch { latency_s: 1.5 },
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.0.get()
+    }
+
+    fn park(&self, _secs: f64) {}
+}
+
+/// The engine's transport over the virtual-time network simulator.
+pub struct SimTransport {
+    sim: NetSim,
+    /// Engine slot → simulator flow.
+    flows: Vec<Option<FlowId>>,
+    recorder: Arc<ThroughputRecorder>,
+    clock: VirtualClock,
+}
+
+impl SimTransport {
+    pub fn new(
+        cfg: NetSimConfig,
+        seed: u64,
+        capacity: usize,
+        recorder: Arc<ThroughputRecorder>,
+        clock: VirtualClock,
+    ) -> Result<SimTransport> {
+        Ok(SimTransport {
+            sim: NetSim::new(cfg, seed)?,
+            flows: vec![None; capacity],
+            recorder,
+            clock,
+        })
+    }
+}
+
+impl Transport for SimTransport {
+    fn connect(&mut self, slot: usize, mirror: usize) -> Result<bool> {
+        if self.sim.open_flows() >= self.sim.config().server.max_connections {
+            return Ok(false);
         }
+        self.flows[slot] = Some(self.sim.open_flow_to(mirror)?);
+        Ok(true)
+    }
+
+    fn disconnect(&mut self, slot: usize) {
+        if let Some(id) = self.flows[slot].take() {
+            self.sim.close_flow(id);
+        }
+    }
+
+    fn is_ready(&self, slot: usize) -> bool {
+        self.flows[slot]
+            .map(|id| self.sim.flow_ready(id))
+            .unwrap_or(false)
+    }
+
+    fn begin_fetch(
+        &mut self,
+        slot: usize,
+        _record: &RunRecord,
+        chunk: &Chunk,
+        _mirror: usize,
+    ) -> Result<()> {
+        let id = self.flows[slot]
+            .ok_or_else(|| Error::Sim(format!("begin_fetch on disconnected slot {slot}")))?;
+        self.sim
+            .begin_request(id, chunk.len as f64, chunk.cold, slot as u64)
+    }
+
+    fn poll(&mut self, events: &mut Vec<TransportEvent>) -> Result<()> {
+        let rep = self.sim.step(None);
+        self.clock.advance_to(rep.now_s);
+        for ev in &rep.events {
+            let Some(slot) = self.flows.iter().position(|f| *f == Some(ev.id)) else {
+                continue; // flow already released by the engine
+            };
+            if ev.failed {
+                self.flows[slot] = None; // the simulator killed the flow
+                events.push(TransportEvent::Failed {
+                    slot,
+                    class: FailureClass::Transport,
+                    error: "injected connection reset".into(),
+                });
+                continue;
+            }
+            if ev.rejected {
+                events.push(TransportEvent::Failed {
+                    slot,
+                    class: FailureClass::Reject,
+                    error: "transient server rejection".into(),
+                });
+                continue;
+            }
+            if ev.bytes > 0.0 {
+                self.recorder.add_bytes(ev.bytes as u64);
+            }
+            if ev.request_done {
+                events.push(TransportEvent::Completed { slot });
+            } else if ev.became_ready {
+                events.push(TransportEvent::Ready { slot });
+            }
+        }
+        Ok(())
+    }
+
+    fn set_open_files(&mut self, n: usize) {
+        self.sim.set_open_files(n);
     }
 }
 
@@ -71,61 +172,10 @@ pub struct SimSessionParams<'a> {
     pub seed: u64,
 }
 
-/// Slot backoff bounds (virtual seconds) after a failed or rejected
-/// chunk: doubles per consecutive failure, resets on success.
-const BACKOFF_MIN_S: f64 = 0.25;
-const BACKOFF_MAX_S: f64 = 4.0;
-
-/// Per-worker-slot state.
-#[derive(Debug)]
-struct WorkerSlot {
-    flow: Option<FlowId>,
-    chunk: Option<Chunk>,
-    /// Chunk assigned but request not yet issued (serialized resolution
-    /// or connection still in setup); issue when `now >= wait_until`.
-    wait_until: f64,
-    /// Request currently in flight.
-    in_flight: bool,
-    /// No new request before this time (failure backoff).
-    next_allowed: f64,
-    /// Current backoff span; doubles per consecutive failure.
-    backoff_s: f64,
-}
-
-impl Default for WorkerSlot {
-    fn default() -> Self {
-        WorkerSlot {
-            flow: None,
-            chunk: None,
-            wait_until: 0.0,
-            in_flight: false,
-            next_allowed: 0.0,
-            backoff_s: BACKOFF_MIN_S,
-        }
-    }
-}
-
-impl WorkerSlot {
-    /// Register a failed/rejected attempt: next request waits out an
-    /// exponentially growing backoff.
-    fn penalize(&mut self, now: f64) {
-        self.next_allowed = now + self.backoff_s;
-        self.backoff_s = (self.backoff_s * 2.0).min(BACKOFF_MAX_S);
-    }
-
-    fn reward(&mut self) {
-        self.backoff_s = BACKOFF_MIN_S;
-    }
-}
-
-/// The driver.
+/// The simulated driver: parameter plumbing around the unified engine.
 pub struct SimSession<'a> {
     params: SimSessionParams<'a>,
-    /// Bytes already on disk per file (resume from a prior journal).
     done_prefix: Option<Vec<u64>>,
-    /// Stop (checkpoint) after this much virtual transfer time; the
-    /// report then has `completed == false` and carries the frontiers
-    /// a follow-up session resumes from.
     checkpoint_after_s: Option<f64>,
 }
 
@@ -155,241 +205,39 @@ impl<'a> SimSession<'a> {
     }
 
     /// Run to completion (or checkpoint); returns the report.
-    pub fn run(mut self) -> Result<SessionReport> {
-        let done_prefix = self.done_prefix.take();
-        let checkpoint_after_s = self.checkpoint_after_s;
-        let p = &mut self.params;
-        p.download.validate()?;
-        let mut sim = NetSim::new(p.netsim.clone(), p.seed)?;
-        let mut sched =
-            ChunkScheduler::new_with_progress(&p.records, p.behavior.mode, done_prefix.as_deref());
-        let capacity = p.download.optimizer.c_max;
-        let status = StatusArray::new(capacity);
-        let recorder = ThroughputRecorder::new();
-        let mut window = ProbeWindow::new(
-            p.runtime.map(|r| r.constants().samples).unwrap_or(256),
-            0.98,
-        );
-        let mut slots: Vec<WorkerSlot> = (0..capacity).map(|_| WorkerSlot::default()).collect();
-
-        // Metadata resolution: batch pays upfront; serialized pays per
-        // cold file via `res_free`.
-        let upfront = p.behavior.resolution.upfront_latency(p.records.len());
-        while sim.now() < upfront {
-            sim.step(None);
-        }
-        let mut res_free = sim.now();
-
-        let mut target = status.set_target(p.controller.current());
-        let mut trace = vec![(sim.now(), target)];
-        let start = sim.now();
-        let sample_dt = 1.0 / p.download.monitor_hz;
-        let probe_dt = p.download.optimizer.probe_interval_s;
-        let mut next_sample = start + sample_dt;
-        let mut next_probe = start + probe_dt;
-        let mut probes = 0usize;
-        // Time-weighted target integral for the paper's Concurrency column.
-        let mut target_time = 0.0f64;
-        // Recovery accounting (fault injection / hostile scenarios).
-        let mut chunk_retries = 0usize;
-        let mut connection_resets = 0usize;
-        let mut server_rejects = 0usize;
-        let mut completed = true;
-        let hard_timeout = if p.download.timeout_s > 0.0 {
-            p.download.timeout_s
-        } else {
-            48.0 * 3600.0
-        };
-
-        while !sched.all_done() {
-            let now = sim.now();
-            if let Some(limit) = checkpoint_after_s {
-                if now - start >= limit {
-                    completed = false;
-                    break;
-                }
-            }
-            if now - start > hard_timeout {
-                status.stop_all();
-                return Err(Error::Session(format!(
-                    "transfer timed out after {:.0}s (delivered {}/{} bytes)",
-                    now - start,
-                    sched.progress().0,
-                    sched.progress().1
-                )));
-            }
-
-            // --- Reconcile worker slots against the status array. ---
-            for (i, slot) in slots.iter_mut().enumerate() {
-                let running = status.is_running(i);
-                if running && slot.flow.is_none() {
-                    // Bring the worker up: open its connection.
-                    if sim.open_flows() < sim.config().server.max_connections {
-                        slot.flow = Some(sim.open_flow()?);
-                    }
-                } else if !running && !slot.in_flight {
-                    // Parked and drained: release the connection, and
-                    // requeue any chunk that was assigned but never
-                    // issued (waiting on resolution/handshake) — a
-                    // parked worker must not strand outstanding work.
-                    if let Some(f) = slot.flow.take() {
-                        sim.close_flow(f);
-                    }
-                    if let Some(chunk) = slot.chunk.take() {
-                        sched.chunk_failed(chunk);
-                        chunk_retries += 1;
-                    }
-                }
-            }
-
-            // --- Assign work to ready workers. ---
-            for (i, slot) in slots.iter_mut().enumerate() {
-                if !status.is_running(i) || slot.in_flight {
-                    continue;
-                }
-                let Some(flow) = slot.flow else { continue };
-                if !sim.flow_ready(flow) {
-                    continue; // still in handshake
-                }
-                if slot.chunk.is_none() {
-                    // Pull the next chunk, charging serialized
-                    // resolution for cold files where applicable, and
-                    // honoring the slot's failure backoff.
-                    let per_file = p.behavior.resolution.per_file_latency();
-                    if let Some(chunk) = sched.next_chunk() {
-                        let mut wait = now.max(slot.next_allowed);
-                        if chunk.cold && per_file > 0.0 {
-                            let begin = res_free.max(wait);
-                            res_free = begin + per_file;
-                            wait = begin + per_file;
-                        }
-                        slot.wait_until = wait;
-                        slot.chunk = Some(chunk);
-                    }
-                }
-                if let Some(chunk) = &slot.chunk {
-                    if now >= slot.wait_until {
-                        sim.begin_request(flow, chunk.len as f64, chunk.cold, i as u64)?;
-                        slot.in_flight = true;
-                    }
-                }
-            }
-
-            sim.set_open_files(sched.open_files());
-
-            // --- Advance the world. ---
-            let t_before = sim.now();
-            let rep = sim.step(None);
-            target_time += target as f64 * (rep.now_s - t_before);
-
-            // --- Account deliveries. ---
-            for ev in &rep.events {
-                if ev.failed || ev.rejected {
-                    // Connection reset (flow is dead) or transient
-                    // server rejection (flow survives): requeue the
-                    // remaining work and back the slot off before its
-                    // next attempt.
-                    if let Some(slot) = slots.iter_mut().find(|s| s.flow == Some(ev.id)) {
-                        if let Some(chunk) = slot.chunk.take() {
-                            // Bytes already delivered for this chunk are
-                            // counted; re-download the whole chunk (range
-                            // requests restart cleanly at chunk grain).
-                            sched.chunk_failed(chunk);
-                            chunk_retries += 1;
-                        }
-                        slot.in_flight = false;
-                        slot.penalize(rep.now_s);
-                        if ev.failed {
-                            connection_resets += 1;
-                            slot.flow = None; // reconcile reopens one
-                        } else {
-                            server_rejects += 1;
-                        }
-                    }
-                    continue;
-                }
-                if ev.bytes <= 0.0 && !ev.request_done {
-                    continue;
-                }
-                recorder.add_bytes(ev.bytes as u64);
-                if ev.request_done {
-                    // Which slot owns this flow?
-                    if let Some(slot) = slots.iter_mut().find(|s| s.flow == Some(ev.id)) {
-                        let chunk = slot
-                            .chunk
-                            .take()
-                            .expect("request completed with no chunk assigned");
-                        sched.chunk_done(&chunk);
-                        slot.in_flight = false;
-                        slot.reward();
-                        if !p.behavior.keep_alive {
-                            // Baselines: fresh connection per request.
-                            sim.close_flow(ev.id);
-                            slot.flow = None;
-                        }
-                    }
-                }
-            }
-
-            let now = rep.now_s;
-
-            // --- Monitor sampling. ---
-            if now >= next_sample {
-                let active = slots.iter().filter(|s| s.in_flight).count();
-                let mbps = recorder.sample(now - start, active);
-                window.push(mbps);
-                next_sample += sample_dt;
-            }
-
-            // --- Probing optimizer loop (Algorithm 1 body). ---
-            if now >= next_probe {
-                let stats = match p.runtime {
-                    Some(rt) => window.aggregate_and_reset(rt)?,
-                    None => {
-                        let s = window.aggregate_mirror();
-                        window = ProbeWindow::new(256, 0.98);
-                        s
-                    }
-                };
-                probes += 1;
-                let new_target = p.controller.on_probe(Probe {
-                    concurrency: target as f64,
-                    mbps: stats.mean_mbps,
-                })?;
-                if new_target != target {
-                    target = status.set_target(new_target);
-                    trace.push((now - start, target));
-                }
-                next_probe += probe_dt;
-            }
-        }
-
-        // Algorithm 1 line 9.
-        status.stop_all();
-
-        let duration = (sim.now() - start).max(f64::EPSILON);
-        let samples = recorder.samples();
-        let timeline = per_second_bins(&samples);
-        let total_bytes = recorder.total_bytes();
-        Ok(SessionReport {
-            tool: p.behavior.name.clone(),
-            duration_s: duration,
-            total_bytes,
-            mean_throughput_mbps: total_bytes as f64 * 8.0 / 1e6 / duration,
-            mean_concurrency: target_time / duration,
-            mean_inflight: recorder.mean_concurrency(),
-            peak_mbps: timeline.peak(),
-            timeline,
-            samples,
-            concurrency_trace: trace,
-            probes,
-            files_completed: sched.files_completed(),
-            chunk_retries,
-            connection_resets,
-            server_rejects,
-            completed,
-            frontiers: sched.frontiers(),
-        })
+    pub fn run(self) -> Result<SessionReport> {
+        let SimSession {
+            params,
+            done_prefix,
+            checkpoint_after_s,
+        } = self;
+        let recorder = Arc::new(ThroughputRecorder::new());
+        let clock = VirtualClock::new();
+        let mut transport = SimTransport::new(
+            params.netsim,
+            params.seed,
+            params.download.optimizer.c_max,
+            recorder.clone(),
+            clock.clone(),
+        )?;
+        run_session(
+            EngineParams {
+                download: params.download,
+                behavior: params.behavior,
+                records: params.records,
+                controller: params.controller,
+                runtime: params.runtime,
+                recorder,
+                done_prefix,
+                checkpoint_after_s,
+                journal_dir: None,
+                // Simulated fault schedules are adversarial by design;
+                // recovery must outlast them rather than give up.
+                give_up_after: usize::MAX,
+            },
+            &mut transport,
+            &clock,
+        )
     }
 }
 

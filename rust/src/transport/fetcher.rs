@@ -1,0 +1,124 @@
+//! One worker's chunk-fetch data path: a persistent HTTP connection,
+//! range requests, sink writing, and failure classification.
+//!
+//! This is the real-socket half of the unified session engine's
+//! [`crate::session::engine::Transport`]: the engine decides *what* to
+//! fetch and from *which mirror*; [`ChunkFetcher`] moves the bytes and
+//! sorts every failure into the engine's [`FailureClass`] taxonomy —
+//! connection-level errors reconnect and retry, transient 5xx responses
+//! retry after backoff, deterministic errors (bad URL, 4xx, local I/O)
+//! fail the session immediately.
+
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::scheduler::Chunk;
+use crate::metrics::recorder::ThroughputRecorder;
+use crate::session::engine::FailureClass;
+use crate::transport::http_client::HttpConnection;
+
+/// Connect timeout for worker connections.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A classified fetch failure.
+pub type FetchError = (FailureClass, String);
+
+/// A worker's reusable fetch state: at most one open connection, keyed
+/// by `(host, port)` so mirror switches transparently reconnect.
+pub struct ChunkFetcher {
+    conn: Option<(String, u16, HttpConnection)>,
+    recorder: Arc<ThroughputRecorder>,
+}
+
+impl ChunkFetcher {
+    pub fn new(recorder: Arc<ThroughputRecorder>) -> ChunkFetcher {
+        ChunkFetcher {
+            conn: None,
+            recorder,
+        }
+    }
+
+    /// Drop the connection (parking, mirror switch, failure recovery).
+    pub fn disconnect(&mut self) {
+        self.conn = None;
+    }
+
+    /// Fetch `chunk` of the `total_bytes`-sized object at `url`,
+    /// feeding delivered bytes into the shared recorder and, when `out`
+    /// is given, writing them at the chunk's offset in that file.
+    pub fn fetch(
+        &mut self,
+        url: &str,
+        out: Option<&Path>,
+        chunk: &Chunk,
+        total_bytes: u64,
+    ) -> std::result::Result<(), FetchError> {
+        // A URL that doesn't parse can never succeed: fatal, not retried.
+        let (host, port, path) = HttpConnection::split_url(url)
+            .map_err(|e| (FailureClass::Fatal, e.to_string()))?;
+
+        let reuse = matches!(&self.conn, Some((h, p, _)) if *h == host && *p == port);
+        if !reuse {
+            let c = HttpConnection::connect(&host, port, CONNECT_TIMEOUT)
+                .map_err(|e| (FailureClass::Transport, e.to_string()))?;
+            self.conn = Some((host.clone(), port, c));
+        }
+        let c = &mut self.conn.as_mut().expect("connection just ensured").2;
+
+        // Output plumbing. Local I/O failures are deterministic: fatal.
+        let mut file = match out {
+            None => None,
+            Some(path) => {
+                let open = || -> std::io::Result<std::fs::File> {
+                    let mut f = std::fs::OpenOptions::new().write(true).open(path)?;
+                    f.seek(SeekFrom::Start(chunk.offset))?;
+                    Ok(f)
+                };
+                Some(open().map_err(|e| {
+                    (FailureClass::Fatal, format!("open {}: {e}", path.display()))
+                })?)
+            }
+        };
+
+        let range = if chunk.offset == 0 && chunk.len == total_bytes {
+            None // whole file
+        } else {
+            Some((chunk.offset, chunk.len))
+        };
+        let recorder = self.recorder.clone();
+        let mut written: u64 = 0;
+        let resp = c
+            .get_range(&path, range, |block| {
+                recorder.add_bytes(block.len() as u64);
+                written += block.len() as u64;
+                if let Some(f) = &mut file {
+                    // Errors surface through the length check below.
+                    let _ = f.write_all(block);
+                }
+            })
+            .map_err(|e| (FailureClass::Transport, e.to_string()))?;
+        if resp.status >= 500 {
+            // Transient server error: retryable, counted separately.
+            return Err((
+                FailureClass::Reject,
+                format!("GET {path} range {range:?}: HTTP {}", resp.status),
+            ));
+        }
+        if !(resp.status == 200 || resp.status == 206) {
+            // 4xx and friends are deterministic: retrying cannot help.
+            return Err((
+                FailureClass::Fatal,
+                format!("GET {path} range {range:?}: HTTP {}", resp.status),
+            ));
+        }
+        if written != chunk.len {
+            return Err((
+                FailureClass::Transport,
+                format!("GET {path}: short body {written} of {} bytes", chunk.len),
+            ));
+        }
+        Ok(())
+    }
+}

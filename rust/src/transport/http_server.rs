@@ -35,6 +35,22 @@ pub struct ServedFile {
     pub seed: u64,
 }
 
+/// One scheduled server-side fault window, expressed over server
+/// uptime. Requests arriving inside `[from_s, until_s)` are rejected
+/// with HTTP 503 with probability `reject_prob` (deterministic in the
+/// request counter given `ThrottleConfig::fault_seed`) and/or delayed
+/// by `added_latency_s` before the response starts — the real-transport
+/// replay of the simulator's 5xx/brownout/stall fault classes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerFaultWindow {
+    pub from_s: f64,
+    pub until_s: f64,
+    /// Probability a request inside the window is answered 503.
+    pub reject_prob: f64,
+    /// Extra first-byte latency for requests inside the window (s).
+    pub added_latency_s: f64,
+}
+
 /// Server throttling knobs.
 #[derive(Clone, Debug)]
 pub struct ThrottleConfig {
@@ -53,6 +69,10 @@ pub struct ThrottleConfig {
     /// Budget of mid-body drops to inject server-wide before the fault
     /// "heals" (with `fault_drop_after_bytes > 0`).
     pub fault_drop_count: usize,
+    /// Scheduled 5xx / added-latency windows over server uptime.
+    pub fault_windows: Vec<ServerFaultWindow>,
+    /// Seed for the per-request 503 draws inside `fault_windows`.
+    pub fault_seed: u64,
 }
 
 impl Default for ThrottleConfig {
@@ -64,8 +84,71 @@ impl Default for ThrottleConfig {
             max_connections: 64,
             fault_drop_after_bytes: 0,
             fault_drop_count: 0,
+            fault_windows: Vec::new(),
+            fault_seed: 0,
         }
     }
+}
+
+impl ThrottleConfig {
+    /// Overlay a named simulator fault profile onto the server: the
+    /// profile's schedule is expanded deterministically (same expansion
+    /// the `--faults` flag uses for simulated downloads) and its
+    /// server-side classes are mapped onto loopback knobs —
+    /// `ServerError` → 503 windows, `Brownout` → reject-everything
+    /// windows, `Stall` → added first-byte latency. Connection-level
+    /// classes (resets, rate collapses, flash crowds) have no HTTP
+    /// analogue here; mid-body resets remain available through the
+    /// `fault_drop_*` knobs.
+    pub fn with_fault_profile(
+        mut self,
+        profile: crate::netsim::FaultProfile,
+        seed: u64,
+        horizon_s: f64,
+    ) -> ThrottleConfig {
+        self.fault_windows =
+            fault_windows_from_schedule(&profile.schedule(seed, horizon_s, 1_000.0));
+        self.fault_seed = seed;
+        self
+    }
+}
+
+/// Map a simulator [`crate::netsim::FaultSchedule`] onto server-side
+/// fault windows (see [`ThrottleConfig::with_fault_profile`]).
+pub fn fault_windows_from_schedule(
+    schedule: &crate::netsim::FaultSchedule,
+) -> Vec<ServerFaultWindow> {
+    use crate::netsim::FaultKind;
+    let mut out = Vec::new();
+    for ev in schedule.events() {
+        match &ev.kind {
+            FaultKind::ServerError {
+                reject_prob,
+                duration_s,
+            } => out.push(ServerFaultWindow {
+                from_s: ev.at_s,
+                until_s: ev.at_s + duration_s,
+                reject_prob: *reject_prob,
+                added_latency_s: 0.0,
+            }),
+            FaultKind::Brownout { duration_s } => out.push(ServerFaultWindow {
+                from_s: ev.at_s,
+                until_s: ev.at_s + duration_s,
+                reject_prob: 1.0,
+                added_latency_s: 0.0,
+            }),
+            FaultKind::Stall { frac, duration_s } => out.push(ServerFaultWindow {
+                from_s: ev.at_s,
+                until_s: ev.at_s + duration_s,
+                reject_prob: 0.0,
+                // A head-of-line stall shows up as first-byte delay on
+                // loopback; cap it so tests stay fast.
+                added_latency_s: (frac * duration_s).min(2.0),
+            }),
+            _ => {} // connection-level classes: see fault_drop_* knobs
+        }
+    }
+    out
 }
 
 /// Deterministic payload byte at offset `i` for content seed `seed`.
@@ -112,6 +195,8 @@ struct Shared {
     total_requests: AtomicUsize,
     /// Mid-body drops injected so far (see `fault_drop_count`).
     faults_injected: AtomicUsize,
+    /// Server start time — `fault_windows` spans are uptime-relative.
+    started: std::time::Instant,
 }
 
 impl ThrottledHttpServer {
@@ -137,6 +222,7 @@ impl ThrottledHttpServer {
             active_connections: AtomicUsize::new(0),
             total_requests: AtomicUsize::new(0),
             faults_injected: AtomicUsize::new(0),
+            started: std::time::Instant::now(),
         });
 
         let accept_shared = shared.clone();
@@ -266,11 +352,51 @@ fn serve_connection(
         let mut parts = request_line.split_whitespace();
         let method = parts.next().unwrap_or("");
         let path = parts.next().unwrap_or("/");
-        shared.total_requests.fetch_add(1, Ordering::Relaxed);
+        let req_no = shared.total_requests.fetch_add(1, Ordering::Relaxed);
 
         if method != "GET" && method != "HEAD" {
             write_simple(&mut writer, 405, "method not allowed")?;
             continue;
+        }
+
+        // Scheduled fault windows (5xx rejection / added latency),
+        // keyed on server uptime; the 503 draw is deterministic in
+        // (fault_seed, request ordinal).
+        if !shared.throttle.fault_windows.is_empty() {
+            let up_s = shared.started.elapsed().as_secs_f64();
+            let mut reject = false;
+            let mut added_latency_s: f64 = 0.0;
+            for (wi, w) in shared.throttle.fault_windows.iter().enumerate() {
+                if up_s >= w.from_s && up_s < w.until_s {
+                    added_latency_s = added_latency_s.max(w.added_latency_s);
+                    if w.reject_prob >= 1.0 {
+                        reject = true;
+                    } else if w.reject_prob > 0.0 {
+                        // Seed mixes the window index so overlapping
+                        // windows draw independently (rejection
+                        // probability composes as the union, matching
+                        // the simulator's per-request draws).
+                        let mut draw = Prng::new(
+                            shared
+                                .throttle
+                                .fault_seed
+                                .wrapping_add(1 + wi as u64)
+                                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                                ^ req_no as u64,
+                        );
+                        if draw.next_f64() < w.reject_prob {
+                            reject = true;
+                        }
+                    }
+                }
+            }
+            if added_latency_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(added_latency_s));
+            }
+            if reject {
+                write_simple(&mut writer, 503, "service unavailable")?;
+                continue;
+            }
         }
 
         let file = shared.files.lock().unwrap().get(path).cloned();
@@ -434,6 +560,48 @@ mod tests {
         let mut other = vec![0u8; 64];
         fill_payload(43, 0, &mut other);
         assert_ne!(whole, other);
+    }
+
+    #[test]
+    fn fault_window_mapping_from_profiles() {
+        use crate::netsim::{FaultEvent, FaultKind, FaultProfile, FaultSchedule};
+        let schedule = FaultSchedule::new(vec![
+            FaultEvent {
+                at_s: 1.0,
+                kind: FaultKind::ServerError {
+                    reject_prob: 0.7,
+                    duration_s: 4.0,
+                },
+            },
+            FaultEvent {
+                at_s: 10.0,
+                kind: FaultKind::Brownout { duration_s: 3.0 },
+            },
+            FaultEvent {
+                at_s: 20.0,
+                kind: FaultKind::Stall {
+                    frac: 0.5,
+                    duration_s: 2.0,
+                },
+            },
+            FaultEvent {
+                at_s: 30.0,
+                kind: FaultKind::ConnectionReset { count: 1 },
+            },
+        ]);
+        let windows = fault_windows_from_schedule(&schedule);
+        assert_eq!(windows.len(), 3, "resets have no HTTP window analogue");
+        assert_eq!(windows[0].reject_prob, 0.7);
+        assert_eq!((windows[0].from_s, windows[0].until_s), (1.0, 5.0));
+        assert_eq!(windows[1].reject_prob, 1.0);
+        assert!((windows[2].added_latency_s - 1.0).abs() < 1e-9);
+        // Profile overlay is deterministic and non-empty for 5xx-heavy
+        // profiles.
+        let a = ThrottleConfig::default().with_fault_profile(FaultProfile::ServerErrors, 9, 60.0);
+        let b = ThrottleConfig::default().with_fault_profile(FaultProfile::ServerErrors, 9, 60.0);
+        assert_eq!(a.fault_windows, b.fault_windows);
+        assert!(!a.fault_windows.is_empty());
+        assert_eq!(a.fault_seed, 9);
     }
 
     #[test]

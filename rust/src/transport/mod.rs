@@ -16,16 +16,23 @@
 //!   honors range requests and keep-alive, and throttles per-connection
 //!   and globally through token buckets so the end-to-end example can
 //!   reproduce a bandwidth-limited archive on loopback.
+//! * [`fetcher`] — one worker's chunk data path (persistent
+//!   connection + sink writing + failure classification), the
+//!   real-socket implementation detail behind the unified session
+//!   engine's `Transport`.
 //! * [`token_bucket`] — the shared rate limiter.
 //!
-//! The real session driver ([`crate::session::real`]) composes the
-//! client with the same scheduler/status-array/controller machinery the
-//! simulator uses.
+//! The real session driver ([`crate::session::real`]) adapts this
+//! module to the unified engine ([`crate::session::engine`]), which
+//! runs the same scheduler/status-array/controller machinery over the
+//! simulator and over these sockets.
 
+pub mod fetcher;
 pub mod http_client;
 pub mod http_server;
 pub mod token_bucket;
 
+pub use fetcher::ChunkFetcher;
 pub use http_client::{HttpConnection, HttpResponse};
-pub use http_server::{ServedFile, ThrottledHttpServer, ThrottleConfig};
+pub use http_server::{ServedFile, ServerFaultWindow, ThrottledHttpServer, ThrottleConfig};
 pub use token_bucket::TokenBucket;

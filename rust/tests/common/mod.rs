@@ -16,14 +16,27 @@ pub const CHUNK_BYTES: u64 = 1024 * 1024;
 
 /// Synthetic workload with a per-suite accession prefix.
 pub fn fault_records(prefix: &str, sizes: &[u64]) -> Vec<RunRecord> {
+    mirrored_records(prefix, sizes, 1)
+}
+
+/// Synthetic workload replicated across `mirrors` endpoints (mirror
+/// failover suites; `mirrors = 1` degenerates to `fault_records`).
+pub fn mirrored_records(prefix: &str, sizes: &[u64], mirrors: usize) -> Vec<RunRecord> {
     sizes
         .iter()
         .enumerate()
-        .map(|(i, &bytes)| RunRecord {
-            accession: format!("{prefix}{i:04}"),
-            project: prefix.into(),
-            bytes,
-            url: format!("sim://{prefix}/{i}"),
+        .map(|(i, &bytes)| {
+            RunRecord::new(
+                format!("{prefix}{i:04}"),
+                prefix,
+                bytes,
+                format!("sim://{prefix}/m0/{i}"),
+            )
+            .with_mirrors(
+                (1..mirrors.max(1))
+                    .map(|m| format!("sim://{prefix}/m{m}/{i}"))
+                    .collect(),
+            )
         })
         .collect()
 }

@@ -3,7 +3,9 @@
 //! Every adaptive/static controller (gradient-descent, Bayesian, fixed
 //! — the first two on their pure-Rust mirror path, so no compiled XLA
 //! artifacts are needed) runs against every named fault profile
-//! (`netsim::fault::MATRIX_PROFILES`). Each cell must:
+//! (`netsim::fault::MATRIX_PROFILES`, including the per-flow
+//! asymmetric `slowmirror` class, which a single-mirror workload must
+//! simply survive). Each cell must:
 //!
 //! * complete (every file delivered, frontiers == sizes),
 //! * keep the coordinator accounting exact

@@ -18,12 +18,7 @@ fn records(sizes: &[u64]) -> Vec<RunRecord> {
     sizes
         .iter()
         .enumerate()
-        .map(|(i, &bytes)| RunRecord {
-            accession: format!("SRR{i:07}"),
-            project: "PROP".into(),
-            bytes,
-            url: format!("sim://f{i}"),
-        })
+        .map(|(i, &bytes)| RunRecord::new(format!("SRR{i:07}"), "PROP", bytes, format!("sim://f{i}")))
         .collect()
 }
 

@@ -34,7 +34,7 @@ fn random_schedule(g: &mut Prng) -> FaultSchedule {
     let mut events = Vec::new();
     for _ in 0..n {
         let at_s = g.range_f64(0.5, 90.0);
-        let kind = match g.below(6) {
+        let kind = match g.below(7) {
             0 => FaultKind::ConnectionReset {
                 count: 1 + g.below(3) as usize,
             },
@@ -52,6 +52,11 @@ fn random_schedule(g: &mut Prng) -> FaultSchedule {
             },
             4 => FaultKind::FlashCrowd {
                 extra_mbps: LINK_MBPS * g.range_f64(0.1, 0.9),
+                duration_s: g.range_f64(1.0, 10.0),
+            },
+            5 => FaultKind::SlowMirror {
+                mirror: g.below(2) as usize,
+                factor: g.range_f64(0.05, 1.0),
                 duration_s: g.range_f64(1.0, 10.0),
             },
             _ => FaultKind::Brownout {

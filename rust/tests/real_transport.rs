@@ -13,7 +13,7 @@ use fastbiodl::runtime::XlaRuntime;
 use fastbiodl::session::real::{run_real_session, RealSessionParams, Sink};
 use fastbiodl::transport::http_client::HttpConnection;
 use fastbiodl::transport::http_server::{fill_payload, ServedFile, ThrottledHttpServer};
-use fastbiodl::transport::ThrottleConfig;
+use fastbiodl::transport::{ServerFaultWindow, ThrottleConfig};
 
 fn serve(files: Vec<ServedFile>, throttle: ThrottleConfig) -> ThrottledHttpServer {
     ThrottledHttpServer::start(files, throttle).unwrap()
@@ -86,11 +86,13 @@ fn full_real_session_downloads_and_verifies() {
     let records: Vec<RunRecord> = files
         .iter()
         .enumerate()
-        .map(|(i, f)| RunRecord {
-            accession: format!("SRRX{i:02}"),
-            project: "TEST".into(),
-            bytes: f.bytes,
-            url: format!("{base}{}", f.path),
+        .map(|(i, f)| {
+            RunRecord::new(
+                format!("SRRX{i:02}"),
+                "TEST",
+                f.bytes,
+                format!("{base}{}", f.path),
+            )
         })
         .collect();
 
@@ -157,12 +159,12 @@ fn real_session_recovers_from_mid_transfer_disconnects() {
             ..ThrottleConfig::default()
         },
     );
-    let records = vec![RunRecord {
-        accession: "SRRDROP".into(),
-        project: "TEST".into(),
-        bytes: file.bytes,
-        url: format!("{}{}", server.base_url(), file.path),
-    }];
+    let records = vec![RunRecord::new(
+        "SRRDROP",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
 
     let mut cfg = DownloadConfig::default();
     cfg.chunk_bytes = 1024 * 1024;
@@ -210,6 +212,76 @@ fn real_session_recovers_from_mid_transfer_disconnects() {
 }
 
 #[test]
+fn real_session_rides_out_server_5xx_windows() {
+    // The loopback mirror replays a scheduled 5xx window (the
+    // real-transport analogue of the simulator's ServerError fault):
+    // every request in the first 1.2 s of uptime is answered 503, with
+    // a little added latency. The unified engine must classify those
+    // as transient rejects, back off, and deliver every byte once the
+    // window lifts. Runtime-free.
+    use fastbiodl::config::OptimizerKind;
+
+    let file = ServedFile {
+        path: "/vol1/SRR5XX".into(),
+        bytes: 4_000_000,
+        seed: 77,
+    };
+    let server = serve(
+        vec![file.clone()],
+        ThrottleConfig {
+            fault_windows: vec![ServerFaultWindow {
+                from_s: 0.0,
+                until_s: 1.2,
+                reject_prob: 1.0,
+                added_latency_s: 0.05,
+            }],
+            fault_seed: 7,
+            ..ThrottleConfig::default()
+        },
+    );
+    let records = vec![RunRecord::new(
+        "SRR5XX",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+
+    let mut cfg = DownloadConfig::default();
+    cfg.chunk_bytes = 512 * 1024;
+    cfg.optimizer.kind = OptimizerKind::Fixed;
+    cfg.optimizer.fixed_level = 2;
+    cfg.optimizer.c_init = 2;
+    cfg.optimizer.c_max = 4;
+    cfg.optimizer.probe_interval_s = 0.5;
+    cfg.monitor_hz = 10.0;
+    cfg.timeout_s = 60.0;
+
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: None,
+        sink: Sink::Discard,
+        name: "5xx-window".into(),
+    })
+    .unwrap();
+
+    println!("5xx-window run: {}", report.summary());
+    assert!(report.completed);
+    assert_eq!(report.files_completed, 1);
+    // Rejected requests stream no payload, so accounting stays exact.
+    assert_eq!(report.total_bytes, file.bytes);
+    assert!(
+        report.server_rejects >= 1,
+        "window injected no 503s (rejects {})",
+        report.server_rejects
+    );
+    assert!(report.chunk_retries >= report.server_rejects);
+    assert_eq!(report.frontiers, vec![file.bytes]);
+}
+
+#[test]
 fn resume_skips_already_downloaded_bytes() {
     use fastbiodl::coordinator::resume::ProgressJournal;
 
@@ -222,12 +294,12 @@ fn resume_skips_already_downloaded_bytes() {
         seed: 99,
     };
     let server = serve(vec![file.clone()], ThrottleConfig::default());
-    let records = vec![RunRecord {
-        accession: "SRRRESUME".into(),
-        project: "TEST".into(),
-        bytes: file.bytes,
-        url: format!("{}{}", server.base_url(), file.path),
-    }];
+    let records = vec![RunRecord::new(
+        "SRRRESUME",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
 
     let dir = std::env::temp_dir().join(format!("fastbiodl-resume-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
