@@ -16,12 +16,17 @@
 //! [download]
 //! chunk_bytes = 33554432
 //! max_open_files = 4
+//!
+//! [mirror]
+//! strategy = "stripe"       # or "failover" (winner-take-all)
+//! per_mirror_conns = 4      # 0 = unlimited
+//! stripe_floor = 0.05
 //! ```
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::config::{DownloadConfig, OptimizerKind};
+use crate::config::{DownloadConfig, MirrorStrategy, OptimizerKind};
 use crate::{Error, Result};
 
 /// A scalar config value.
@@ -201,11 +206,11 @@ fn split_array_items(s: &str) -> Vec<String> {
 
 /// Overlay a parsed file onto a [`DownloadConfig`].
 pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
-    let known_prefixes = ["optimizer.", "download."];
+    let known_prefixes = ["optimizer.", "download.", "mirror."];
     for key in doc.keys() {
         if !known_prefixes.iter().any(|p| key.starts_with(p)) {
             return Err(Error::Config(format!(
-                "unknown config key '{key}' (sections: [optimizer], [download])"
+                "unknown config key '{key}' (sections: [optimizer], [download], [mirror])"
             )));
         }
     }
@@ -262,6 +267,15 @@ pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
             .ok_or_else(|| Error::Config("'download.output_dir' must be a string".into()))?
             .to_string();
     }
+
+    if let Some(v) = doc.get("mirror.strategy") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| Error::Config("'mirror.strategy' must be a string".into()))?;
+        cfg.mirror.strategy = MirrorStrategy::parse(s)?;
+    }
+    usize_opt!("mirror.per_mirror_conns", cfg.mirror.per_mirror_conns);
+    f64_opt!("mirror.stripe_floor", cfg.mirror.stripe_floor);
     Ok(())
 }
 

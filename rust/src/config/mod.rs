@@ -142,10 +142,92 @@ impl OptimizerConfig {
     }
 }
 
+/// How the session engine schedules work across a record's mirror list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MirrorStrategy {
+    /// Winner-take-all binding (the PR 2 behaviour, kept as a baseline):
+    /// every (re)connecting slot binds to the best-scoring mirror and
+    /// only abandons it when its score collapses relative to the best.
+    Failover,
+    /// Score-weighted striping (the default): connections are spread
+    /// across healthy mirrors in proportion to their
+    /// [`crate::session::mirrors::MirrorBoard`] goodput scores, capped
+    /// per mirror, with periodic re-probes of idle/degraded mirrors so
+    /// a healed endpoint is re-admitted.
+    WeightedStripe,
+}
+
+impl MirrorStrategy {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "failover" | "winner-take-all" | "wta" => Ok(MirrorStrategy::Failover),
+            "stripe" | "striping" | "weighted" | "weighted-stripe" => {
+                Ok(MirrorStrategy::WeightedStripe)
+            }
+            other => Err(Error::Config(format!(
+                "unknown mirror strategy '{other}' (expected stripe | failover)"
+            ))),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MirrorStrategy::Failover => "failover",
+            MirrorStrategy::WeightedStripe => "stripe",
+        }
+    }
+}
+
+/// Multi-mirror scheduling knobs (see [`crate::session::mirrors`]).
+#[derive(Clone, Debug)]
+pub struct MirrorPolicy {
+    /// Scheduling strategy across a record's mirror list.
+    pub strategy: MirrorStrategy,
+    /// Max simultaneous connections a session holds to one mirror
+    /// (0 = unlimited). Enforced centrally by the engine's picker and
+    /// again by both transports (netsim flow table, real worker
+    /// bindings) as defense in depth.
+    pub per_mirror_conns: usize,
+    /// Weight floor, as a fraction of the best mirror's score, applied
+    /// when striping: a degraded (but previously working) mirror's
+    /// weight never falls below `floor × best`, so it keeps receiving
+    /// occasional chunks and its goodput estimate can recover after it
+    /// heals. Mirrors that have only ever failed sit below the floor
+    /// and are re-admitted via the periodic re-probe instead.
+    pub stripe_floor: f64,
+}
+
+impl Default for MirrorPolicy {
+    fn default() -> Self {
+        MirrorPolicy {
+            strategy: MirrorStrategy::WeightedStripe,
+            per_mirror_conns: 0,
+            stripe_floor: 0.05,
+        }
+    }
+}
+
+impl MirrorPolicy {
+    /// Parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=0.5).contains(&self.stripe_floor) {
+            return Err(Error::Config(format!(
+                "stripe_floor {} outside [0, 0.5]",
+                self.stripe_floor
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-transfer configuration.
 #[derive(Clone, Debug)]
 pub struct DownloadConfig {
     pub optimizer: OptimizerConfig,
+    /// Multi-mirror scheduling policy.
+    pub mirror: MirrorPolicy,
     /// Range-request chunk size (bytes). Files smaller than one chunk
     /// download in a single request.
     pub chunk_bytes: u64,
@@ -165,6 +247,7 @@ impl Default for DownloadConfig {
     fn default() -> Self {
         DownloadConfig {
             optimizer: OptimizerConfig::default(),
+            mirror: MirrorPolicy::default(),
             chunk_bytes: 32 * 1024 * 1024,
             monitor_hz: 4.0,
             max_open_files: 4,
@@ -177,6 +260,7 @@ impl Default for DownloadConfig {
 impl DownloadConfig {
     pub fn validate(&self) -> Result<()> {
         self.optimizer.validate()?;
+        self.mirror.validate()?;
         if self.chunk_bytes < 64 * 1024 {
             return Err(Error::Config(format!(
                 "chunk_bytes {} too small (min 64 KiB)",
@@ -217,6 +301,9 @@ impl DownloadConfig {
         }
         if let Ok(kind) = std::env::var("FASTBIODL_OPTIMIZER") {
             self.optimizer.kind = OptimizerKind::parse(&kind)?;
+        }
+        if let Ok(strategy) = std::env::var("FASTBIODL_MIRROR_STRATEGY") {
+            self.mirror.strategy = MirrorStrategy::parse(&strategy)?;
         }
         Ok(())
     }
@@ -269,6 +356,23 @@ mod tests {
         c = OptimizerConfig::default();
         c.c_init = 70;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mirror_policy_validates_and_parses() {
+        let mut p = MirrorPolicy::default();
+        assert!(p.validate().is_ok());
+        p.stripe_floor = 0.9;
+        assert!(p.validate().is_err());
+        assert_eq!(
+            MirrorStrategy::parse("stripe").unwrap(),
+            MirrorStrategy::WeightedStripe
+        );
+        assert_eq!(
+            MirrorStrategy::parse("FAILOVER").unwrap(),
+            MirrorStrategy::Failover
+        );
+        assert!(MirrorStrategy::parse("roulette").is_err());
     }
 
     #[test]

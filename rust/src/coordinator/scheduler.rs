@@ -17,9 +17,13 @@
 //! simulated and real transfers (workers receive chunk assignments over
 //! channels, so no lock ever touches the byte path). It is equally
 //! mirror-agnostic — chunks are file ranges; which mirror serves a
-//! range is the engine's [`crate::session::mirrors::MirrorBoard`]'s
-//! call at fetch time, which is what lets a requeued chunk retry on a
-//! different mirror than the one that failed it.
+//! range is decided at fetch time by the slot's binding, which the
+//! engine's [`crate::session::mirrors::MirrorBoard`] spreads across
+//! healthy mirrors in proportion to their scores (weighted striping)
+//! or concentrates on the best one (failover baseline). That split is
+//! what lets a requeued chunk retry on a different mirror than the one
+//! that failed it, and what stripes one file's chunks across several
+//! mirrors concurrently.
 //!
 //! Invariants (property-tested in `rust/tests/prop_coordinator.rs`):
 //! chunks of one file never overlap and exactly tile `[0, size)`; a

@@ -49,12 +49,17 @@ COMMANDS:
                               errors|collapse|flashcrowd|brownout|
                               slowmirror|chaos (seeded fault schedule;
                               see netsim::fault)
+        --mirror-strategy <s> stripe (score-weighted striping, default)
+                              or failover (winner-take-all binding)
+        --mirror-conns <n>    per-mirror connection cap (default 0 = off)
     fetch <url...>            real-socket adaptive download over HTTP
         --out <dir>           write payloads here (default: discard)
         --chunk-mb <n>        range-request size (default 32)
         --probe <secs>        probing interval (default 5)
         --c-max <n>           worker-pool capacity (default 16)
         --size <bytes>        total size per URL if the server lacks HEAD
+        --mirror-strategy <s> stripe (default) or failover
+        --mirror-conns <n>    per-mirror connection cap (default 0 = off)
     serve                     run the throttled loopback archive server
         --files <n>           number of synthetic files (default 4)
         --size-mb <n>         size of each file (default 64)
@@ -76,8 +81,8 @@ COMMANDS:
 
 ENVIRONMENT:
     FASTBIODL_ARTIFACTS       artifact directory (default ./artifacts)
-    FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER
-                              config overrides (see config module docs)
+    FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER,
+    FASTBIODL_MIRROR_STRATEGY config overrides (see config module docs)
 "#;
 
 fn main() {
@@ -139,6 +144,12 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     if let Some(k) = args.flag_f64("k")? {
         cfg.optimizer.k = k;
     }
+    if let Some(strategy) = args.flag("mirror-strategy") {
+        cfg.mirror.strategy = fastbiodl::config::MirrorStrategy::parse(strategy)?;
+    }
+    if let Some(conns) = args.flag_usize("mirror-conns")? {
+        cfg.mirror.per_mirror_conns = conns;
+    }
     if let Some(p) = args.flag_f64("probe")? {
         cfg.optimizer.probe_interval_s = p;
     }
@@ -162,7 +173,7 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
 fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
-        "faults",
+        "faults", "mirror-strategy", "mirror-conns",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -249,7 +260,10 @@ fn cmd_download(args: &Args) -> Result<()> {
 }
 
 fn cmd_fetch(args: &Args) -> Result<()> {
-    args.expect_flags(&["out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k"])?;
+    args.expect_flags(&[
+        "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
+        "mirror-conns",
+    ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));
     }

@@ -153,6 +153,12 @@ pub struct NetSim {
     /// session driver via [`NetSim::set_open_files`]; used for the
     /// client's distinct-file penalty).
     open_files: usize,
+    /// Max simultaneous open flows per mirror endpoint (0 = unlimited;
+    /// set by the session driver via
+    /// [`NetSim::set_per_mirror_connection_cap`]). Models per-endpoint
+    /// connection limits the way `max_connections` models the global
+    /// one.
+    per_mirror_conn_cap: usize,
     // --- Fault-injection state (see netsim::fault). ---
     /// Next unapplied event in `cfg.faults`.
     fault_cursor: usize,
@@ -206,6 +212,7 @@ impl NetSim {
             next_id: 0,
             rng,
             open_files: 1,
+            per_mirror_conn_cap: 0,
             fault_cursor: 0,
             reject_until_s: 0.0,
             reject_prob: 0.0,
@@ -249,6 +256,12 @@ impl NetSim {
             return Err(Error::Sim(format!(
                 "server connection limit {} reached",
                 self.cfg.server.max_connections
+            )));
+        }
+        let mirror_cap = self.per_mirror_conn_cap;
+        if mirror_cap > 0 && self.open_flows_to(mirror) >= mirror_cap {
+            return Err(Error::Sim(format!(
+                "mirror {mirror} connection limit {mirror_cap} reached"
             )));
         }
         let id = FlowId(self.next_id);
@@ -335,6 +348,22 @@ impl NetSim {
     /// Number of flows that are open (not closed).
     pub fn open_flows(&self) -> usize {
         self.flows.iter().filter(|f| !f.is_closed()).count()
+    }
+
+    /// Number of open flows terminating at mirror `mirror`.
+    pub fn open_flows_to(&self, mirror: usize) -> usize {
+        self.flows
+            .iter()
+            .filter(|f| !f.is_closed() && f.mirror == mirror)
+            .count()
+    }
+
+    /// Cap simultaneous open flows per mirror endpoint (0 = unlimited).
+    /// [`NetSim::open_flow_to`] rejects opens beyond the cap, the way
+    /// it already rejects opens beyond the server-wide
+    /// `max_connections`.
+    pub fn set_per_mirror_connection_cap(&mut self, cap: usize) {
+        self.per_mirror_conn_cap = cap;
     }
 
     /// Advance the world by `dt_s` (config default if `None`).
@@ -726,6 +755,23 @@ mod tests {
         // Closing one frees a slot.
         sim.close_flow(FlowId(0));
         assert!(sim.open_flow().is_ok());
+    }
+
+    #[test]
+    fn per_mirror_connection_limit_enforced() {
+        let mut sim = NetSim::new(quiet_cfg(), 21).unwrap();
+        sim.set_per_mirror_connection_cap(2);
+        sim.open_flow_to(0).unwrap();
+        sim.open_flow_to(0).unwrap();
+        assert!(sim.open_flow_to(0).is_err(), "mirror 0 is at its cap");
+        // Other mirrors have their own budget.
+        let b = sim.open_flow_to(1).unwrap();
+        assert_eq!(sim.open_flows_to(0), 2);
+        assert_eq!(sim.open_flows_to(1), 1);
+        // Closing frees a slot on that mirror only.
+        sim.close_flow(b);
+        assert!(sim.open_flow_to(0).is_err());
+        assert!(sim.open_flow_to(1).is_ok());
     }
 
     #[test]

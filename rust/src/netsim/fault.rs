@@ -163,6 +163,7 @@ impl FaultKind {
 pub struct FaultEvent {
     /// Simulated time (s) at which the fault fires.
     pub at_s: f64,
+    /// What happens at that time.
     pub kind: FaultKind,
 }
 
@@ -189,10 +190,12 @@ impl FaultSchedule {
         &self.events
     }
 
+    /// Number of scheduled events.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// No scheduled events (benign network).
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -272,6 +275,7 @@ impl FaultProfile {
         }
     }
 
+    /// Canonical profile name (the `--faults` spelling).
     pub fn name(&self) -> &'static str {
         match self {
             FaultProfile::None => "none",

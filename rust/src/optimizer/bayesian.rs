@@ -19,7 +19,7 @@
 //! (Figure 4 / `fig4_gd_vs_bayes` bench).
 
 use crate::config::OptimizerConfig;
-use crate::optimizer::{ConcurrencyController, Probe};
+use crate::optimizer::{effective_k, ConcurrencyController, MirrorHealth, Probe};
 use crate::runtime::SharedRuntime;
 use crate::util::prng::Prng;
 use crate::Result;
@@ -43,12 +43,18 @@ pub struct BayesController {
     seed_probes: usize,
     observed: usize,
     rng: Prng,
-    /// Diagnostics.
+    /// Diagnostics: max expected improvement of the last step.
     pub last_ei_max: f64,
+    /// Total artifact invocations (mirror steps do not count).
     pub steps_executed: u64,
+    /// Latest aggregate mirror-health signal (neutral until the engine
+    /// reports one); rescales `k` via
+    /// [`crate::optimizer::effective_k`].
+    health: MirrorHealth,
 }
 
 impl BayesController {
+    /// Artifact-backed controller over the given runtime.
     pub fn new(cfg: OptimizerConfig, runtime: SharedRuntime) -> BayesController {
         Self::build(cfg, Some(runtime))
     }
@@ -84,6 +90,7 @@ impl BayesController {
             runtime,
             last_ei_max: 0.0,
             steps_executed: 0,
+            health: MirrorHealth::default(),
         }
     }
 
@@ -106,7 +113,14 @@ impl BayesController {
     /// artifact fit the GP on identically scaled utilities (the xi
     /// term in EI is absolute; a different scale would move the
     /// argmax).
-    fn mirror_step(&mut self, c_obs: &[f32], t_obs: &[f32], valid: &[f32], u_norm: f64) -> f64 {
+    fn mirror_step(
+        &mut self,
+        c_obs: &[f32],
+        t_obs: &[f32],
+        valid: &[f32],
+        u_norm: f64,
+        k: f64,
+    ) -> f64 {
         use crate::optimizer::mirror;
         let c64: Vec<f64> = c_obs.iter().map(|&x| x as f64).collect();
         let v64: Vec<f64> = valid.iter().map(|&x| x as f64).collect();
@@ -117,7 +131,7 @@ impl BayesController {
             .zip(&v64)
             .map(|((&c, &t), &v)| {
                 if v > 0.5 {
-                    mirror::utility(t as f64, c, self.cfg.k) * scale
+                    mirror::utility(t as f64, c, k) * scale
                 } else {
                     0.0
                 }
@@ -189,12 +203,15 @@ impl ConcurrencyController for BayesController {
 
         let (c_obs, t_obs, valid, max_t) = self.export();
         let u_norm = if max_t > 0.0 { max_t } else { 1.0 };
+        // Mirror-aware utility: more healthy mirrors flatten the
+        // penalty (higher C*), failure pressure steepens it.
+        let k = effective_k(self.cfg.k, self.health);
         // Clone the Arc handle so the match holds no borrow of self.
         let runtime = self.runtime.clone();
         let next_c = match runtime {
             Some(rt) => {
                 let params: [f32; 8] = [
-                    self.cfg.k as f32,
+                    k as f32,
                     self.cfg.bayes_lengthscale as f32,
                     self.cfg.bayes_noise as f32,
                     self.cfg.bayes_xi as f32,
@@ -211,7 +228,7 @@ impl ConcurrencyController for BayesController {
                     ei.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
                 out[3 * g + 1] as f64
             }
-            None => self.mirror_step(&c_obs, &t_obs, &valid, u_norm),
+            None => self.mirror_step(&c_obs, &t_obs, &valid, u_norm, k),
         };
         self.c_target = next_c
             .round()
@@ -225,6 +242,10 @@ impl ConcurrencyController for BayesController {
 
     fn name(&self) -> &'static str {
         "bayesian"
+    }
+
+    fn on_mirror_health(&mut self, health: MirrorHealth) {
+        self.health = health;
     }
 }
 

@@ -15,6 +15,7 @@ pub struct FixedController {
 }
 
 impl FixedController {
+    /// Controller pinned at `level >= 1` workers.
     pub fn new(level: usize) -> FixedController {
         assert!(level >= 1, "fixed level must be >= 1");
         FixedController { level }

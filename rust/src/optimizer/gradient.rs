@@ -19,7 +19,7 @@
 
 use crate::config::OptimizerConfig;
 use crate::optimizer::history::ProbeHistory;
-use crate::optimizer::{ConcurrencyController, Probe};
+use crate::optimizer::{effective_k, ConcurrencyController, MirrorHealth, Probe};
 use crate::runtime::SharedRuntime;
 use crate::Result;
 
@@ -37,15 +37,21 @@ pub struct GdController {
     c_continuous: f64,
     /// Rounded, clamped target currently applied.
     c_target: usize,
-    /// Diagnostics: last gradient and step returned by the artifact.
+    /// Diagnostics: last gradient returned by the artifact.
     pub last_gradient: f64,
+    /// Diagnostics: last (clipped) step returned by the artifact.
     pub last_step: f64,
     /// Total artifact invocations (perf accounting; mirror steps do
     /// not count).
     pub steps_executed: u64,
+    /// Latest aggregate mirror-health signal (neutral until the engine
+    /// reports one); rescales `k` via
+    /// [`crate::optimizer::effective_k`].
+    health: MirrorHealth,
 }
 
 impl GdController {
+    /// Artifact-backed controller over the given runtime.
     pub fn new(cfg: OptimizerConfig, runtime: SharedRuntime) -> GdController {
         Self::build(cfg, Some(runtime))
     }
@@ -69,6 +75,7 @@ impl GdController {
             last_gradient: 0.0,
             last_step: 0.0,
             steps_executed: 0,
+            health: MirrorHealth::default(),
         }
     }
 
@@ -83,12 +90,15 @@ impl ConcurrencyController for GdController {
     fn on_probe(&mut self, probe: Probe) -> Result<usize> {
         self.history.push(probe);
         let (c_hist, t_hist, weights) = self.history.export();
+        // Mirror-aware utility: more healthy mirrors flatten the
+        // penalty (higher C*), failure pressure steepens it.
+        let k = effective_k(self.cfg.k, self.health);
         // Clone the Arc handle so the match holds no borrow of self.
         let runtime = self.runtime.clone();
         let (next_c, grad, step) = match runtime {
             Some(rt) => {
                 let params: [f32; 8] = [
-                    self.cfg.k as f32,
+                    k as f32,
                     self.cfg.lr as f32,
                     self.cfg.step_clip as f32,
                     self.cfg.c_min as f32,
@@ -109,7 +119,7 @@ impl ConcurrencyController for GdController {
                     &c64,
                     &t64,
                     &w64,
-                    self.cfg.k,
+                    k,
                     self.cfg.lr,
                     self.cfg.step_clip,
                     self.cfg.c_min as f64,
@@ -132,6 +142,10 @@ impl ConcurrencyController for GdController {
 
     fn name(&self) -> &'static str {
         "gradient-descent"
+    }
+
+    fn on_mirror_health(&mut self, health: MirrorHealth) {
+        self.health = health;
     }
 }
 
@@ -166,5 +180,37 @@ mod tests {
         assert!(c2 >= c1);
         assert!(gd.last_gradient > 0.0);
         assert_eq!(gd.steps_executed, 0, "mirror must not count artifact calls");
+    }
+
+    #[test]
+    fn mirror_headroom_flips_the_gradient_near_the_single_mirror_ceiling() {
+        // Sub-linear throughput T = 100·C^0.6 peaks (in utility) near
+        // C* ≈ 30 for k = 1.02 but near C* ≈ 60 for the halved penalty
+        // a second healthy mirror earns. Probing around C = 40 the
+        // plain controller sees a falling utility, the mirror-aware one
+        // a rising one.
+        let run = |health: Option<MirrorHealth>| {
+            let mut gd = GdController::new_mirror(OptimizerConfig::default());
+            if let Some(h) = health {
+                gd.on_mirror_health(h);
+            }
+            for c in [38.0f64, 39.0, 40.0, 41.0, 42.0] {
+                gd.on_probe(Probe {
+                    concurrency: c,
+                    mbps: 100.0 * c.powf(0.6),
+                })
+                .unwrap();
+            }
+            gd.last_gradient
+        };
+        assert!(run(None) < 0.0, "plain k should see utility falling");
+        let healthy = MirrorHealth {
+            headroom: 2.0,
+            fail_pressure: 0.0,
+        };
+        assert!(
+            run(Some(healthy)) > 0.0,
+            "two healthy mirrors should keep the controller growing"
+        );
     }
 }

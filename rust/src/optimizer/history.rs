@@ -34,10 +34,12 @@ impl ProbeHistory {
         self.probes.push(probe);
     }
 
+    /// Probes currently held (≤ window).
     pub fn len(&self) -> usize {
         self.probes.len()
     }
 
+    /// No probes recorded yet.
     pub fn is_empty(&self) -> bool {
         self.probes.is_empty()
     }

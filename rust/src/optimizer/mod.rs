@@ -17,6 +17,12 @@
 //! [`history::ProbeHistory`] is the shared probe ring; [`mirror`] holds
 //! pure-Rust re-implementations of the artifact math used only by
 //! tests to cross-check the XLA path.
+//!
+//! Multi-mirror sessions additionally feed the adaptive controllers an
+//! aggregate [`MirrorHealth`] signal each probe; [`effective_k`]
+//! rescales the §4.1 utility penalty so the controller grows
+//! concurrency when a second healthy mirror opens headroom and backs
+//! off under sustained failures.
 
 pub mod bayesian;
 pub mod fixed;
@@ -42,6 +48,61 @@ pub struct Probe {
     pub mbps: f64,
 }
 
+/// Aggregate mirror-health signal the session engine feeds the
+/// adaptive controllers once per probe (multi-mirror transfers only;
+/// single-mirror sessions never emit it, so their behaviour is
+/// bit-identical to a health-unaware controller).
+///
+/// Derived from the per-session
+/// [`crate::session::mirrors::MirrorBoard`]: `headroom` is the
+/// effective number of simultaneously useful mirrors
+/// ([`crate::session::mirrors::MirrorBoard::concurrency_headroom`]),
+/// `fail_pressure` the decayed failure rate across the fleet
+/// ([`crate::session::mirrors::MirrorBoard::fail_pressure`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MirrorHealth {
+    /// Effective number of healthy mirrors, in `[1, mirror_count]`.
+    pub headroom: f64,
+    /// Decayed failure pressure across mirrors (0 = clean).
+    pub fail_pressure: f64,
+}
+
+impl Default for MirrorHealth {
+    /// Neutral signal: one mirror, no failures —
+    /// [`effective_k`] returns `k` unchanged.
+    fn default() -> Self {
+        MirrorHealth {
+            headroom: 1.0,
+            fail_pressure: 0.0,
+        }
+    }
+}
+
+/// Mirror-aware utility penalty: rescale the coefficient `k` of
+/// `U = T / k^C` by the fleet's health.
+///
+/// A second healthy mirror opens concurrency headroom — per-connection
+/// caps and staging queues are per-endpoint, so the marginal cost of a
+/// connection drops roughly with the number of endpoints sharing the
+/// load. Conversely, sustained failures make connections *more*
+/// expensive (each one risks a retry storm). Both effects enter the
+/// §4.1 utility as an exponent rescale:
+///
+/// `k_eff = 1 + (k − 1) · (1 + fail_pressure) / headroom`
+///
+/// clamped to `[1 + (k−1)/8, 1 + (k−1)·4]` so a noisy health signal
+/// can never flatten the penalty entirely or dwarf the throughput
+/// term. With the neutral [`MirrorHealth::default`] this is exactly
+/// `k`, so single-mirror transfers are unchanged. Since
+/// `C* = 1 / ln k_eff`, two equally healthy mirrors roughly double the
+/// concurrency ceiling the gradient controller steers toward.
+pub fn effective_k(k: f64, health: MirrorHealth) -> f64 {
+    let headroom = health.headroom.max(1.0);
+    let pressure = 1.0 + health.fail_pressure.max(0.0);
+    let k_eff = 1.0 + (k - 1.0) * pressure / headroom;
+    k_eff.clamp(1.0 + (k - 1.0) / 8.0, 1.0 + (k - 1.0) * 4.0)
+}
+
 /// A concurrency controller: Algorithm 1's decision step.
 ///
 /// Deliberately **not** `Send`: the PJRT client (and thus the XLA-backed
@@ -58,6 +119,12 @@ pub trait ConcurrencyController {
 
     /// Display name for logs/reports.
     fn name(&self) -> &'static str;
+
+    /// Receive the aggregate mirror-health signal for the upcoming
+    /// probe (multi-mirror sessions only). Adaptive controllers rescale
+    /// their utility penalty through [`effective_k`]; the default
+    /// implementation ignores it (static controllers, baselines).
+    fn on_mirror_health(&mut self, _health: MirrorHealth) {}
 }
 
 /// Build the controller selected by `cfg.kind`.
@@ -82,5 +149,47 @@ pub fn build_controller(
             None => BayesController::new_mirror(cfg.clone()),
         })),
         OptimizerKind::Fixed => Ok(Box::new(FixedController::new(cfg.fixed_level))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_k_is_identity_on_neutral_health() {
+        for k in [1.01, 1.02, 1.05] {
+            let k_eff = effective_k(k, MirrorHealth::default());
+            assert!((k_eff - k).abs() < 1e-12, "k={k} -> {k_eff}");
+        }
+    }
+
+    #[test]
+    fn second_healthy_mirror_halves_the_penalty() {
+        let h = MirrorHealth {
+            headroom: 2.0,
+            fail_pressure: 0.0,
+        };
+        let k_eff = effective_k(1.02, h);
+        assert!((k_eff - 1.01).abs() < 1e-12);
+        // C* = 1/ln(k_eff) roughly doubles.
+        assert!(1.0 / k_eff.ln() > 1.9 / 1.02f64.ln());
+    }
+
+    #[test]
+    fn failure_pressure_raises_the_penalty_within_clamps() {
+        let hurt = MirrorHealth {
+            headroom: 1.0,
+            fail_pressure: 2.0,
+        };
+        let k_eff = effective_k(1.02, hurt);
+        assert!(k_eff > 1.02);
+        assert!(k_eff <= 1.0 + 0.02 * 4.0 + 1e-12);
+        // Extreme inputs stay clamped.
+        let extreme = MirrorHealth {
+            headroom: 1000.0,
+            fail_pressure: 0.0,
+        };
+        assert!(effective_k(1.02, extreme) >= 1.0 + 0.02 / 8.0 - 1e-12);
     }
 }

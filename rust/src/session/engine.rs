@@ -25,9 +25,26 @@
 //! ([`crate::accession::RunRecord::urls`]); every worker slot binds to
 //! one mirror per connection. A per-session
 //! [`crate::session::mirrors::MirrorBoard`] scores mirrors by EWMA
-//! chunk goodput with a decaying failure penalty; idle slots abandon a
-//! mirror whose score collapses relative to the best one, so transfers
-//! drain off a slow or browning-out mirror instead of riding it down.
+//! chunk goodput with a decaying failure penalty, and the configured
+//! [`crate::config::MirrorStrategy`] decides how slots are spread:
+//!
+//! * **`WeightedStripe`** (default): connections are allocated across
+//!   mirrors in proportion to their health scores (a deterministic
+//!   highest-averages pick), bounded by the per-mirror connection cap
+//!   ([`crate::config::MirrorPolicy::per_mirror_conns`]), so chunks
+//!   stripe across every healthy endpoint instead of concentrating on
+//!   one. Idle slots rebind only when another mirror offers a
+//!   markedly better share (hysteresis), and a mirror that lost all
+//!   its connections is re-probed periodically so it regains chunk
+//!   share after it heals.
+//! * **`Failover`** (the PR 2 baseline, kept selectable): every
+//!   (re)connecting slot binds to the best-scoring mirror; idle slots
+//!   abandon a mirror whose score collapses relative to the best one.
+//!
+//! Each probe interval the engine also condenses the board into a
+//! [`MirrorHealth`] signal for the concurrency controller, so the
+//! optimizer can grow the worker pool when a second healthy mirror
+//! opens headroom (see [`crate::optimizer::effective_k`]).
 //!
 //! ## Failure handling
 //!
@@ -45,28 +62,36 @@ use std::sync::Arc;
 
 use crate::accession::resolver::{mirror_width, ResolutionCost};
 use crate::accession::RunRecord;
-use crate::config::DownloadConfig;
+use crate::config::{DownloadConfig, MirrorStrategy};
 use crate::coordinator::pool::StatusArray;
 use crate::coordinator::probe::ProbeWindow;
 use crate::coordinator::resume::ProgressJournal;
 use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::metrics::timeline::per_second_bins;
-use crate::optimizer::{ConcurrencyController, Probe};
+use crate::optimizer::{ConcurrencyController, MirrorHealth, Probe};
 use crate::runtime::XlaRuntime;
 use crate::session::mirrors::MirrorBoard;
 use crate::session::SessionReport;
 use crate::{Error, Result};
 
-/// Slot backoff bounds (seconds, virtual or wall) after a failed or
+/// Minimum slot backoff (seconds, virtual or wall) after a failed or
 /// rejected chunk: doubles per consecutive failure, resets on success.
 pub const BACKOFF_MIN_S: f64 = 0.25;
+/// Ceiling of the per-slot failure backoff (see [`BACKOFF_MIN_S`]).
 pub const BACKOFF_MAX_S: f64 = 4.0;
 
 /// How long the engine parks between polls when the transport had
 /// nothing to report (wall-clock drivers only; virtual clocks ignore
 /// it because their transport's poll advances time itself).
 const IDLE_PARK_S: f64 = 0.002;
+
+/// A freshly connected striped slot is exempt from rebalancing for
+/// this long, so a re-probe connection to a currently-degraded mirror
+/// survives until its probe chunk is actually issued (otherwise the
+/// weights would immediately rebind it and the mirror could never be
+/// re-measured).
+const STRIPE_GRACE_S: f64 = 0.5;
 
 /// Session time source. Implementations: a virtual clock advanced by
 /// the simulated transport's steps, or a wall clock over
@@ -187,8 +212,11 @@ impl ToolBehavior {
 
 /// Everything a session needs besides its transport and clock.
 pub struct EngineParams<'a> {
+    /// Transfer configuration (chunking, optimizer, mirror policy).
     pub download: DownloadConfig,
+    /// Tool-level behaviour knobs.
     pub behavior: ToolBehavior,
+    /// Resolved files (with their mirror lists) to download.
     pub records: Vec<RunRecord>,
     /// Controller (already built for the tool's policy).
     pub controller: Box<dyn ConcurrencyController + 'a>,
@@ -220,6 +248,8 @@ struct Slot {
     connected: bool,
     /// Mirror this slot's connection is bound to.
     mirror: usize,
+    /// When the current connection was opened (striping grace window).
+    connected_at: f64,
     /// Chunk assigned but possibly not yet issued (serialized
     /// resolution / failure backoff); issued when `now >= wait_until`.
     chunk: Option<Chunk>,
@@ -241,6 +271,7 @@ impl Default for Slot {
         Slot {
             connected: false,
             mirror: 0,
+            connected_at: 0.0,
             chunk: None,
             wait_until: 0.0,
             in_flight: false,
@@ -297,6 +328,11 @@ pub fn run_session(
     }
 
     let mut board = MirrorBoard::new(mirror_width(&records));
+    let policy = download.mirror.clone();
+    let mirror_count = board.mirror_count();
+    // Live connections per mirror — the engine's central view of the
+    // per-mirror connection caps (both transports enforce them again).
+    let mut mirror_conns: Vec<usize> = vec![0; mirror_count];
     let mut sched =
         ChunkScheduler::new_with_progress(&records, behavior.mode, done_prefix.as_deref());
     let capacity = download.optimizer.c_max;
@@ -366,11 +402,27 @@ pub fn run_session(
         for (i, slot) in slots.iter_mut().enumerate() {
             let running = status.is_running(i);
             if running && !slot.connected {
-                // Bring the worker up on the healthiest mirror.
-                let mirror = board.pick_for_connect(now);
-                if transport.connect(i, mirror)? {
-                    slot.connected = true;
-                    slot.mirror = mirror;
+                // Bring the worker up on the mirror the strategy picks:
+                // the healthiest one (failover) or the most
+                // under-allocated by score weight (striping, honoring
+                // per-mirror caps and due probes).
+                let pick = match policy.strategy {
+                    MirrorStrategy::Failover => Some(board.pick_for_connect(now)),
+                    MirrorStrategy::WeightedStripe => board.pick_for_stripe(
+                        now,
+                        &mirror_conns,
+                        policy.per_mirror_conns,
+                        policy.stripe_floor,
+                    ),
+                };
+                if let Some(mirror) = pick {
+                    board.note_connect(mirror, now);
+                    if transport.connect(i, mirror)? {
+                        slot.connected = true;
+                        slot.mirror = mirror;
+                        slot.connected_at = now;
+                        mirror_conns[mirror] += 1;
+                    }
                 }
             } else if !running && !slot.in_flight {
                 // Parked and drained: release the connection, and
@@ -379,6 +431,7 @@ pub fn run_session(
                 if slot.connected {
                     transport.disconnect(i);
                     slot.connected = false;
+                    mirror_conns[slot.mirror] = mirror_conns[slot.mirror].saturating_sub(1);
                 }
                 if let Some(chunk) = slot.chunk.take() {
                     sched.chunk_failed(chunk);
@@ -387,18 +440,53 @@ pub fn run_session(
             }
         }
 
-        // --- Mirror failover: idle slots abandon a collapsing mirror.
-        for (i, slot) in slots.iter_mut().enumerate() {
-            if slot.connected
-                && !slot.in_flight
-                && slot.chunk.is_none()
-                && board.should_failover(slot.mirror, now)
-            {
-                transport.disconnect(i);
-                slot.connected = false;
-                mirror_switches += 1;
-                // The next reconcile pass reconnects to the preferred
-                // mirror via `pick_for_connect`.
+        // --- Mirror rebalancing: idle slots drain off a collapsing
+        // mirror (failover) or rebind toward the score-weighted
+        // allocation and due re-probes (striping).
+        if mirror_count > 1 {
+            // Striping weights are tick-constant (they depend only on
+            // board state, not connection counts): compute them once
+            // here rather than per idle slot.
+            let stripe_w = match policy.strategy {
+                MirrorStrategy::WeightedStripe => board.weights(now, policy.stripe_floor),
+                MirrorStrategy::Failover => Vec::new(),
+            };
+            let mut probe_released = false;
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if !slot.connected || slot.in_flight || slot.chunk.is_some() {
+                    continue;
+                }
+                let release = match policy.strategy {
+                    MirrorStrategy::Failover => board.should_failover(slot.mirror, now),
+                    MirrorStrategy::WeightedStripe => {
+                        if now - slot.connected_at < STRIPE_GRACE_S {
+                            continue; // fresh (probe) connection
+                        }
+                        // Free at most one slot per tick for a due
+                        // probe (never the last connection of its
+                        // mirror); otherwise rebind only when another
+                        // mirror offers a markedly better share.
+                        let probe = !probe_released
+                            && mirror_conns[slot.mirror] >= 2
+                            && board.probe_due(now, &mirror_conns).is_some();
+                        probe_released |= probe;
+                        probe
+                            || board.should_restripe(
+                                slot.mirror,
+                                &mirror_conns,
+                                policy.per_mirror_conns,
+                                &stripe_w,
+                            )
+                    }
+                };
+                if release {
+                    transport.disconnect(i);
+                    slot.connected = false;
+                    mirror_conns[slot.mirror] = mirror_conns[slot.mirror].saturating_sub(1);
+                    mirror_switches += 1;
+                    // The next reconcile pass reconnects via the
+                    // strategy's pick.
+                }
             }
         }
 
@@ -464,6 +552,7 @@ pub fn run_session(
                         // Baselines: fresh connection per request.
                         transport.disconnect(*i);
                         slot.connected = false;
+                        mirror_conns[slot.mirror] = mirror_conns[slot.mirror].saturating_sub(1);
                     }
                 }
                 TransportEvent::Failed {
@@ -489,6 +578,8 @@ pub fn run_session(
                             connection_resets += 1;
                             transport.disconnect(*i);
                             slot.connected = false; // reconcile reopens
+                            let m = slot.mirror;
+                            mirror_conns[m] = mirror_conns[m].saturating_sub(1);
                         }
                         FailureClass::Reject => {
                             server_rejects += 1;
@@ -543,6 +634,33 @@ pub fn run_session(
                 None => window.aggregate_mirror_and_reset(),
             };
             probes += 1;
+            if mirror_count > 1 {
+                // Aggregate mirror health: adaptive controllers rescale
+                // their utility penalty so a second healthy mirror
+                // raises the concurrency ceiling and sustained
+                // failures lower it. Headroom only exists when the
+                // engine is striping AND the per-mirror connection cap
+                // actually binds the pool — with no cap (or a cap at
+                // least as large as the pool) a single endpoint can
+                // absorb every worker, and the winner-take-all
+                // baseline cannot exploit extra mirrors at all, so in
+                // those modes the signal stays neutral. Single-mirror
+                // sessions skip the call entirely; either way a benign
+                // network leaves the controller bit-identical to a
+                // health-unaware one.
+                let cap_binds = policy.strategy == MirrorStrategy::WeightedStripe
+                    && policy.per_mirror_conns > 0
+                    && policy.per_mirror_conns < capacity;
+                let headroom = if cap_binds {
+                    board.concurrency_headroom(now)
+                } else {
+                    1.0
+                };
+                controller.on_mirror_health(MirrorHealth {
+                    headroom,
+                    fail_pressure: board.fail_pressure(now),
+                });
+            }
             let new_target = controller.on_probe(Probe {
                 concurrency: target as f64,
                 mbps: stats.mean_mbps,

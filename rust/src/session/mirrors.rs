@@ -2,27 +2,55 @@
 //!
 //! A [`crate::accession::RunRecord`] lists an ordered mirror list; the
 //! unified session engine tracks one [`MirrorBoard`] per session and
-//! asks it two questions:
+//! consults it whenever a worker slot (re)connects or sits idle. Two
+//! strategies build on the same health score
+//! ([`crate::config::MirrorStrategy`]):
 //!
-//! * **Which mirror should a (re)connecting worker slot bind to?**
-//!   ([`MirrorBoard::pick_for_connect`]) — unprobed mirrors are handed
-//!   out round-robin first so every endpoint gets a throughput estimate
-//!   early; once all mirrors have data, new connections go to the
-//!   best-scoring one.
-//! * **Should an idle slot abandon its current mirror?**
-//!   ([`MirrorBoard::should_failover`]) — yes when the current mirror's
-//!   score has fallen below [`FAILOVER_RATIO`] of the best mirror's,
-//!   which is how workers drain off a slow or browning-out mirror.
+//! * **Winner-take-all failover** (the PR 2 baseline, kept selectable):
+//!   [`MirrorBoard::pick_for_connect`] hands unprobed mirrors out
+//!   round-robin, then binds every new connection to the best-scoring
+//!   mirror; [`MirrorBoard::should_failover`] tells an idle slot to
+//!   abandon a mirror whose score fell below [`FAILOVER_RATIO`] of the
+//!   best one.
+//! * **Score-weighted striping** (the default): connections are spread
+//!   across mirrors in proportion to their scores.
+//!   [`MirrorBoard::pick_for_stripe`] is a deterministic
+//!   highest-averages (D'Hondt) pick — it chooses the candidate mirror
+//!   maximizing `weight / (connections + 1)`, which converges to a
+//!   per-mirror connection count proportional to the weight vector —
+//!   and [`MirrorBoard::should_restripe`] releases an idle slot only
+//!   when rebinding it would raise its expected share by
+//!   [`STRIPE_GAIN`], so comparable mirrors never flap. Weights carry a
+//!   configurable floor (a fraction of the best score), and a mirror
+//!   that has lost all its connections is **re-probed** every
+//!   [`REPROBE_INTERVAL_S`]: one slot reconnects to it and fetches a
+//!   chunk, so a healed mirror's goodput estimate recovers and its
+//!   share grows back.
 //!
 //! The score is an EWMA of per-chunk goodput divided by a decaying
 //! failure penalty (connection resets and transient 5xx rejections both
 //! count — exactly the quantities [`crate::session::SessionReport`]
-//! already surfaces). Everything is pure arithmetic over the session
-//! clock, so simulated runs replay bit-identically.
+//! already surfaces). [`MirrorBoard::concurrency_headroom`] and
+//! [`MirrorBoard::fail_pressure`] condense the board into the aggregate
+//! health signal the concurrency controllers consume (see
+//! [`crate::optimizer::MirrorHealth`]). Everything is pure arithmetic
+//! over the session clock, so simulated runs replay bit-identically.
 
 /// Fraction of the best mirror's score below which an idle slot fails
 /// over (hysteresis against flapping between comparable mirrors).
+/// Only used by [`crate::config::MirrorStrategy::Failover`].
 pub const FAILOVER_RATIO: f64 = 0.4;
+
+/// Minimum multiplicative gain in expected per-connection share before
+/// [`MirrorBoard::should_restripe`] releases an idle slot — hysteresis
+/// against flapping between comparable mirrors under goodput jitter.
+pub const STRIPE_GAIN: f64 = 1.25;
+
+/// A mirror that currently has **zero** connections becomes probe-due
+/// this many seconds after its last connection attempt: the striping
+/// engine dedicates one slot to fetch a chunk from it, refreshing its
+/// goodput estimate so a healed mirror is re-admitted.
+pub const REPROBE_INTERVAL_S: f64 = 20.0;
 
 /// EWMA step for per-chunk goodput samples.
 const EWMA_ALPHA: f64 = 0.3;
@@ -68,14 +96,19 @@ pub struct MirrorBoard {
     stats: Vec<MirrorStat>,
     /// Round-robin cursor for spreading slots across unprobed mirrors.
     rr: usize,
+    /// Session time of the most recent connection attempt per mirror
+    /// (`-inf` until first attempted) — drives the re-probe cadence.
+    last_attempt_s: Vec<f64>,
 }
 
 impl MirrorBoard {
     /// Board over `mirrors >= 1` endpoints.
     pub fn new(mirrors: usize) -> MirrorBoard {
+        let n = mirrors.max(1);
         MirrorBoard {
-            stats: vec![MirrorStat::default(); mirrors.max(1)],
+            stats: vec![MirrorStat::default(); n],
             rr: 0,
+            last_attempt_s: vec![f64::NEG_INFINITY; n],
         }
     }
 
@@ -163,6 +196,136 @@ impl MirrorBoard {
         }
     }
 
+    /// Record that a worker slot attempted a connection to mirror `m`
+    /// (successful or not): resets the mirror's re-probe timer.
+    pub fn note_connect(&mut self, m: usize, now_s: f64) {
+        self.last_attempt_s[m] = now_s;
+    }
+
+    /// Striping weights at `now_s`, one per mirror, all strictly
+    /// positive with a max of exactly the best score (or `1.0` when
+    /// nothing is probed yet):
+    ///
+    /// * probed mirrors use their health [`MirrorBoard::score`],
+    ///   floored at `floor × best` so a degraded-but-working mirror
+    ///   keeps a proportional trickle of traffic;
+    /// * unprobed mirrors that have not persistently failed are
+    ///   optimistic (best score) so exploration spreads early
+    ///   connections evenly;
+    /// * unprobed mirrors past the failure limit get only a token
+    ///   weight **below** the floor — re-admission happens through the
+    ///   re-probe path, not D'Hondt.
+    pub fn weights(&self, now_s: f64, floor: f64) -> Vec<f64> {
+        let best = (0..self.stats.len())
+            .filter_map(|m| self.score(m, now_s))
+            .fold(0.0f64, f64::max);
+        let best = if best > 0.0 { best } else { 1.0 };
+        let floor = floor.clamp(0.0, 0.5);
+        (0..self.stats.len())
+            .map(|m| match self.score(m, now_s) {
+                Some(sc) => sc.max(best * floor).max(best * 1e-3),
+                None if self.stats[m].decayed_fails(now_s) < UNPROBED_FAIL_LIMIT => best,
+                None => best * 1e-3,
+            })
+            .collect()
+    }
+
+    /// Mirror `m` is due a probe connection: it has no live connections
+    /// and none were attempted for [`REPROBE_INTERVAL_S`].
+    /// `conns[m]` is the engine's live per-mirror connection count.
+    pub fn probe_due(&self, now_s: f64, conns: &[usize]) -> Option<usize> {
+        (0..self.stats.len())
+            .find(|&m| conns[m] == 0 && now_s - self.last_attempt_s[m] >= REPROBE_INTERVAL_S)
+    }
+
+    /// Striping pick: the mirror a (re)connecting slot should bind to,
+    /// or `None` when every mirror is at its connection cap
+    /// (`cap == 0` disables the cap).
+    ///
+    /// Probe-due mirrors win outright; otherwise the highest-averages
+    /// rule `weight / (conns + 1)` allocates connections proportionally
+    /// to the weight vector, with excess demand spilling onto lower-
+    /// weighted mirrors once the leaders hit their caps. Ties break
+    /// toward the lowest index, so the pick is fully deterministic.
+    pub fn pick_for_stripe(
+        &self,
+        now_s: f64,
+        conns: &[usize],
+        cap: usize,
+        floor: f64,
+    ) -> Option<usize> {
+        let open = |m: usize| cap == 0 || conns[m] < cap;
+        if let Some(m) = self.probe_due(now_s, conns) {
+            if open(m) {
+                return Some(m);
+            }
+        }
+        let w = self.weights(now_s, floor);
+        let mut best: Option<(usize, f64)> = None;
+        for m in 0..self.stats.len() {
+            if !open(m) {
+                continue;
+            }
+            let gain = w[m] / (conns[m] + 1) as f64;
+            match best {
+                Some((_, g)) if gain <= g => {}
+                _ => best = Some((m, gain)),
+            }
+        }
+        best.map(|(m, _)| m)
+    }
+
+    /// Should an idle striped slot bound to `current` release its
+    /// connection and rebind? Yes when some other mirror (with cap
+    /// headroom) offers at least [`STRIPE_GAIN`]× the slot's current
+    /// expected share — the weighted analogue of
+    /// [`MirrorBoard::should_failover`], with hysteresis so comparable
+    /// mirrors never flap under goodput jitter.
+    ///
+    /// `weights` is a [`MirrorBoard::weights`] vector; the caller
+    /// computes it once per engine tick (it does not depend on the
+    /// per-mirror connection counts) instead of once per idle slot.
+    pub fn should_restripe(
+        &self,
+        current: usize,
+        conns: &[usize],
+        cap: usize,
+        weights: &[f64],
+    ) -> bool {
+        if self.stats.len() < 2 || conns[current] == 0 {
+            return false;
+        }
+        let here = weights[current] / conns[current] as f64;
+        (0..self.stats.len())
+            .filter(|&m| m != current && (cap == 0 || conns[m] < cap))
+            .any(|m| weights[m] / (conns[m] + 1) as f64 > here * STRIPE_GAIN)
+    }
+
+    /// Effective number of simultaneously useful mirrors in
+    /// `[1, mirror_count]` — the inverse participation ratio
+    /// `(Σw)² / Σw²` of the striping weights. Two equally healthy
+    /// mirrors → 2.0 (concurrency is twice as cheap); one dominant
+    /// mirror → ~1.0. Feeds the controllers' utility through
+    /// [`crate::optimizer::MirrorHealth`].
+    pub fn concurrency_headroom(&self, now_s: f64) -> f64 {
+        let w = self.weights(now_s, 0.0);
+        let sum: f64 = w.iter().sum();
+        let sq: f64 = w.iter().map(|x| x * x).sum();
+        if sq <= 0.0 {
+            return 1.0;
+        }
+        (sum * sum / sq).clamp(1.0, self.stats.len() as f64)
+    }
+
+    /// Aggregate decayed failure pressure: mean decayed failure weight
+    /// per mirror, in units of ~4 recent failures (so a storm of
+    /// rejects across the fleet pushes this toward 1.0). Feeds the
+    /// controllers' utility through [`crate::optimizer::MirrorHealth`].
+    pub fn fail_pressure(&self, now_s: f64) -> f64 {
+        let total: f64 = self.stats.iter().map(|s| s.decayed_fails(now_s)).sum();
+        total / self.stats.len() as f64 / 4.0
+    }
+
     /// Payload bytes credited per mirror (the report's `mirror_bytes`).
     pub fn bytes(&self) -> Vec<u64> {
         self.stats.iter().map(|s| s.bytes).collect()
@@ -239,6 +402,98 @@ mod tests {
         }
         assert!(!b.should_failover(0, 5.0));
         assert_eq!(b.pick_for_connect(5.0), 0);
+    }
+
+    #[test]
+    fn stripe_pick_allocates_proportionally_to_scores() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 1_250_000, 1.0); // 10 Mbps
+        b.on_success(1, 3_750_000, 1.0); // 30 Mbps
+        b.note_connect(0, 0.0);
+        b.note_connect(1, 0.0);
+        // Simulate 8 sequential connects, tracking counts like the
+        // engine does: allocation should settle near 2:6 (1:3 weights).
+        let mut conns = vec![0usize; 2];
+        for _ in 0..8 {
+            let m = b.pick_for_stripe(1.0, &conns, 0, 0.05).unwrap();
+            conns[m] += 1;
+        }
+        assert_eq!(conns, vec![2, 6], "D'Hondt should track the 1:3 ratio");
+    }
+
+    #[test]
+    fn stripe_pick_respects_per_mirror_caps_and_spills() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 1_250_000, 1.0); // 10 Mbps
+        b.on_success(1, 12_500_000, 1.0); // 100 Mbps: dominant
+        b.note_connect(0, 0.0);
+        b.note_connect(1, 0.0);
+        let mut conns = vec![0usize; 2];
+        for _ in 0..6 {
+            if let Some(m) = b.pick_for_stripe(1.0, &conns, 3, 0.05) {
+                conns[m] += 1;
+            }
+        }
+        // The dominant mirror fills to its cap, the rest spill over.
+        assert_eq!(conns, vec![3, 3]);
+        // Everything capped: no pick.
+        assert_eq!(b.pick_for_stripe(1.0, &conns, 3, 0.05), None);
+    }
+
+    #[test]
+    fn restripe_has_hysteresis_but_drains_a_slow_mirror() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 1_000_000, 1.0); // 8 Mbps
+        b.on_success(1, 1_250_000, 1.0); // 10 Mbps: comparable
+        // Comparable mirrors: no flapping in either direction.
+        let w = b.weights(1.0, 0.05);
+        assert!(!b.should_restripe(0, &[1, 1], 0, &w));
+        assert!(!b.should_restripe(1, &[1, 1], 0, &w));
+        // Crater mirror 0: its idle slots should rebind.
+        for _ in 0..6 {
+            b.on_failure(0, 2.0);
+        }
+        let w = b.weights(2.0, 0.05);
+        assert!(b.should_restripe(0, &[1, 1], 0, &w));
+        // ... but not when the healthy mirror is at its cap.
+        assert!(!b.should_restripe(0, &[1, 1], 1, &w));
+    }
+
+    #[test]
+    fn idle_mirror_becomes_probe_due_and_pick_prefers_it() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 1_250_000, 1.0);
+        b.on_success(1, 12_500_000, 1.0);
+        b.note_connect(0, 0.0);
+        b.note_connect(1, 0.0);
+        // Mirror 0 has no connections but was attempted recently.
+        assert_eq!(b.probe_due(5.0, &[0, 3]), None);
+        // Past the re-probe interval it is due, and the pick takes it
+        // even though mirror 1 dominates on weight.
+        let t = REPROBE_INTERVAL_S + 1.0;
+        assert_eq!(b.probe_due(t, &[0, 3]), Some(0));
+        assert_eq!(b.pick_for_stripe(t, &[0, 3], 0, 0.05), Some(0));
+        // A fresh attempt resets the timer.
+        b.note_connect(0, t);
+        assert_eq!(b.probe_due(t + 1.0, &[0, 3]), None);
+    }
+
+    #[test]
+    fn headroom_counts_effectively_healthy_mirrors() {
+        let mut b = MirrorBoard::new(2);
+        assert!((b.concurrency_headroom(0.0) - 2.0).abs() < 1e-9, "unprobed = optimistic");
+        b.on_success(0, 1_250_000, 1.0); // 10 Mbps
+        b.on_success(1, 1_250_000, 1.0); // 10 Mbps
+        assert!((b.concurrency_headroom(1.0) - 2.0).abs() < 1e-6);
+        // One mirror craters: headroom collapses toward 1.
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 125_000, 1.0); // 1 Mbps
+        b.on_success(1, 1_250_000, 1.0); // 10 Mbps
+        let h = b.concurrency_headroom(1.0);
+        assert!(h < 1.3, "dominated mirror should not count: {h}");
+        assert!(b.fail_pressure(1.0) == 0.0);
+        b.on_failure(0, 1.0);
+        assert!(b.fail_pressure(1.0) > 0.0);
     }
 
     #[test]

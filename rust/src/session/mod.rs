@@ -14,7 +14,10 @@
 //! * [`engine::Clock`] — virtual vs wall time.
 //!
 //! [`mirrors`] holds the per-mirror health board the engine uses to
-//! schedule across (and fail over between) a record's mirror list.
+//! schedule across a record's mirror list — score-weighted chunk
+//! striping with periodic re-probes by default, winner-take-all
+//! failover as the selectable baseline
+//! ([`crate::config::MirrorStrategy`]).
 //!
 //! Both drivers produce the same [`SessionReport`], so every metric the
 //! experiment harness computes is defined identically for simulated
@@ -76,10 +79,12 @@ pub struct SessionReport {
     pub server_rejects: usize,
     /// Payload bytes credited to each mirror index (completed chunks
     /// only). Single-mirror transfers have length 1; a multi-mirror
-    /// transfer that failed over shows bytes on ≥ 2 entries.
+    /// transfer that striped (or failed over) shows bytes on ≥ 2
+    /// entries.
     pub mirror_bytes: Vec<u64>,
-    /// Times a worker slot abandoned its mirror for a better-scoring
-    /// one (see [`mirrors::MirrorBoard`]).
+    /// Times a worker slot released its mirror to rebind elsewhere —
+    /// failovers off a collapsing mirror, striping rebalances, and
+    /// re-probe releases all count (see [`mirrors::MirrorBoard`]).
     pub mirror_switches: usize,
     /// Whether the transfer ran to completion. `false` only for
     /// checkpoint-interrupted simulated sessions (see

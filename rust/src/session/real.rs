@@ -50,10 +50,15 @@ pub enum Sink {
 
 /// Parameters for a real transfer.
 pub struct RealSessionParams<'a> {
+    /// Transfer configuration (chunking, optimizer, mirror policy).
     pub download: DownloadConfig,
+    /// Resolved files (with their mirror URLs) to download.
     pub records: Vec<RunRecord>,
+    /// Controller (already built for the tool's policy).
     pub controller: Box<dyn ConcurrencyController + 'a>,
+    /// XLA runtime for probe aggregation (None → pure-Rust mirror).
     pub runtime: Option<&'a XlaRuntime>,
+    /// Where delivered bytes go.
     pub sink: Sink,
     /// Tool label for the report.
     pub name: String,
@@ -65,6 +70,7 @@ pub struct WallClock {
 }
 
 impl WallClock {
+    /// Start counting from now.
     pub fn start() -> WallClock {
         WallClock {
             start: Instant::now(),
@@ -100,13 +106,26 @@ pub struct RealTransport {
     events_rx: Receiver<TransportEvent>,
     joins: Vec<std::thread::JoinHandle<()>>,
     sink: Sink,
+    /// Per-mirror connection cap (0 = unlimited), enforced on the
+    /// slot→mirror bindings below — the real-socket counterpart of the
+    /// simulator's per-mirror flow cap. Bindings are admission
+    /// control: a rebinding slot's old socket may linger for the
+    /// moment it takes its worker to drain the queued disconnect, so
+    /// unlike the simulator's strict flow-table cap this one is
+    /// momentarily soft.
+    per_mirror_conns: usize,
+    /// Mirror each connected slot is bound to (`None` = disconnected).
+    slot_mirror: Vec<Option<usize>>,
 }
 
 impl RealTransport {
     /// Spawn `capacity` workers sharing the byte recorder.
+    /// `per_mirror_conns` caps how many workers may hold a connection
+    /// to the same mirror at once (0 = unlimited).
     pub fn spawn(
         capacity: usize,
         sink: Sink,
+        per_mirror_conns: usize,
         recorder: Arc<ThroughputRecorder>,
     ) -> Result<RealTransport> {
         let (events_tx, events_rx) = channel::<TransportEvent>();
@@ -129,18 +148,35 @@ impl RealTransport {
             events_rx,
             joins,
             sink,
+            per_mirror_conns,
+            slot_mirror: vec![None; capacity],
         })
+    }
+
+    /// Live slot bindings to mirror `mirror`.
+    fn bound_to(&self, mirror: usize) -> usize {
+        self.slot_mirror.iter().filter(|m| **m == Some(mirror)).count()
     }
 }
 
 impl Transport for RealTransport {
-    fn connect(&mut self, _slot: usize, _mirror: usize) -> Result<bool> {
+    fn connect(&mut self, slot: usize, mirror: usize) -> Result<bool> {
         // Real connections are opened lazily by the worker on its first
-        // fetch (TCP setup happens on the worker thread, not here).
+        // fetch (TCP setup happens on the worker thread, not here) —
+        // the per-mirror cap is enforced up front on the bindings (see
+        // `per_mirror_conns` above for the momentary-softness caveat).
+        if self.per_mirror_conns > 0
+            && self.slot_mirror[slot] != Some(mirror)
+            && self.bound_to(mirror) >= self.per_mirror_conns
+        {
+            return Ok(false);
+        }
+        self.slot_mirror[slot] = Some(mirror);
         Ok(true)
     }
 
     fn disconnect(&mut self, slot: usize) {
+        self.slot_mirror[slot] = None;
         // Queued behind any in-flight fetch; the worker drops its
         // connection when it processes the command.
         let _ = self.cmd_tx[slot].send(WorkerCmd::Disconnect);
@@ -290,8 +326,12 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         resolution: ResolutionCost::Batch { latency_s: 0.0 },
     };
     let recorder = Arc::new(ThroughputRecorder::new());
-    let mut transport =
-        RealTransport::spawn(download.optimizer.c_max, sink, recorder.clone())?;
+    let mut transport = RealTransport::spawn(
+        download.optimizer.c_max,
+        sink,
+        download.mirror.per_mirror_conns,
+        recorder.clone(),
+    )?;
     let clock = WallClock::start();
     run_session(
         EngineParams {

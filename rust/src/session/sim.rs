@@ -38,6 +38,7 @@ pub use crate::session::engine::ToolBehavior;
 pub struct VirtualClock(Rc<Cell<f64>>);
 
 impl VirtualClock {
+    /// Fresh clock at t = 0.
     pub fn new() -> VirtualClock {
         VirtualClock::default()
     }
@@ -63,21 +64,31 @@ pub struct SimTransport {
     flows: Vec<Option<FlowId>>,
     recorder: Arc<ThroughputRecorder>,
     clock: VirtualClock,
+    /// Per-mirror connection cap (0 = unlimited), mirrored into the
+    /// simulator so the flow table enforces it too.
+    per_mirror_conns: usize,
 }
 
 impl SimTransport {
+    /// Build over a fresh simulator for `capacity` engine slots.
+    /// `per_mirror_conns` caps simultaneous connections per mirror
+    /// (0 = unlimited), enforced both here and in the flow table.
     pub fn new(
         cfg: NetSimConfig,
         seed: u64,
         capacity: usize,
+        per_mirror_conns: usize,
         recorder: Arc<ThroughputRecorder>,
         clock: VirtualClock,
     ) -> Result<SimTransport> {
+        let mut sim = NetSim::new(cfg, seed)?;
+        sim.set_per_mirror_connection_cap(per_mirror_conns);
         Ok(SimTransport {
-            sim: NetSim::new(cfg, seed)?,
+            sim,
             flows: vec![None; capacity],
             recorder,
             clock,
+            per_mirror_conns,
         })
     }
 }
@@ -86,6 +97,9 @@ impl Transport for SimTransport {
     fn connect(&mut self, slot: usize, mirror: usize) -> Result<bool> {
         if self.sim.open_flows() >= self.sim.config().server.max_connections {
             return Ok(false);
+        }
+        if self.per_mirror_conns > 0 && self.sim.open_flows_to(mirror) >= self.per_mirror_conns {
+            return Ok(false); // this mirror is at its connection cap
         }
         self.flows[slot] = Some(self.sim.open_flow_to(mirror)?);
         Ok(true)
@@ -159,9 +173,13 @@ impl Transport for SimTransport {
 
 /// Everything a simulated session needs.
 pub struct SimSessionParams<'a> {
+    /// Transfer configuration (chunking, optimizer, mirror policy).
     pub download: DownloadConfig,
+    /// Tool-level behaviour (chunked vs whole-file, keep-alive, …).
     pub behavior: ToolBehavior,
+    /// Simulated network topology and fault schedule.
     pub netsim: NetSimConfig,
+    /// Resolved files (with their mirror lists) to download.
     pub records: Vec<RunRecord>,
     /// Controller (already built for the tool's policy).
     pub controller: Box<dyn ConcurrencyController + 'a>,
@@ -169,6 +187,7 @@ pub struct SimSessionParams<'a> {
     /// adaptive controllers carry their own runtime handle for the
     /// decision step regardless).
     pub runtime: Option<&'a XlaRuntime>,
+    /// Simulation seed: identical `(params, seed)` replay bit-identically.
     pub seed: u64,
 }
 
@@ -180,6 +199,7 @@ pub struct SimSession<'a> {
 }
 
 impl<'a> SimSession<'a> {
+    /// Wrap parameters into a runnable session.
     pub fn new(params: SimSessionParams<'a>) -> SimSession<'a> {
         SimSession {
             params,
@@ -217,6 +237,7 @@ impl<'a> SimSession<'a> {
             params.netsim,
             params.seed,
             params.download.optimizer.c_max,
+            params.download.mirror.per_mirror_conns,
             recorder.clone(),
             clock.clone(),
         )?;

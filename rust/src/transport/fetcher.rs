@@ -3,11 +3,16 @@
 //!
 //! This is the real-socket half of the unified session engine's
 //! [`crate::session::engine::Transport`]: the engine decides *what* to
-//! fetch and from *which mirror*; [`ChunkFetcher`] moves the bytes and
+//! fetch and from *which mirror* (striping slot bindings across
+//! healthy mirrors under per-mirror connection caps — see
+//! [`crate::session::real::RealTransport`], which enforces the caps on
+//! its slot→mirror bindings); [`ChunkFetcher`] moves the bytes and
 //! sorts every failure into the engine's [`FailureClass`] taxonomy —
 //! connection-level errors reconnect and retry, transient 5xx responses
 //! retry after backoff, deterministic errors (bad URL, 4xx, local I/O)
-//! fail the session immediately.
+//! fail the session immediately. Because the connection is keyed by
+//! `(host, port)`, a mirror switch on the next assignment transparently
+//! reconnects to the new endpoint.
 
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;

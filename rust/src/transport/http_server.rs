@@ -41,6 +41,13 @@ pub struct ServedFile {
 /// request counter given `ThrottleConfig::fault_seed`) and/or delayed
 /// by `added_latency_s` before the response starts — the real-transport
 /// replay of the simulator's 5xx/brownout/stall fault classes.
+///
+/// A window is **per-mirror** when `path_prefix` is set: it then only
+/// applies to requests whose URL path starts with that prefix, so one
+/// loopback server can stand in for several mirrors (by convention,
+/// mirror `m` serves under `/m{m}/...`) and degrade one of them while
+/// the others stay healthy. `None` keeps the PR 2 behaviour: the
+/// window applies to every request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerFaultWindow {
     pub from_s: f64,
@@ -49,6 +56,9 @@ pub struct ServerFaultWindow {
     pub reject_prob: f64,
     /// Extra first-byte latency for requests inside the window (s).
     pub added_latency_s: f64,
+    /// Restrict the window to request paths starting with this prefix
+    /// (`None` = all paths — a global, every-mirror window).
+    pub path_prefix: Option<String>,
 }
 
 /// Server throttling knobs.
@@ -115,6 +125,14 @@ impl ThrottleConfig {
 
 /// Map a simulator [`crate::netsim::FaultSchedule`] onto server-side
 /// fault windows (see [`ThrottleConfig::with_fault_profile`]).
+///
+/// `ServerError`/`Brownout`/`Stall` map to global windows exactly as
+/// before; the per-flow asymmetric [`crate::netsim::FaultKind`]
+/// `SlowMirror` maps to a **per-mirror** window scoped to the
+/// `/m{mirror}/` path prefix (the convention multi-mirror loopback
+/// tests register their files under): the degraded mirror answers each
+/// request only after an added latency that scales with the severity
+/// (`1/factor`), while every other path stays healthy.
 pub fn fault_windows_from_schedule(
     schedule: &crate::netsim::FaultSchedule,
 ) -> Vec<ServerFaultWindow> {
@@ -130,12 +148,14 @@ pub fn fault_windows_from_schedule(
                 until_s: ev.at_s + duration_s,
                 reject_prob: *reject_prob,
                 added_latency_s: 0.0,
+                path_prefix: None,
             }),
             FaultKind::Brownout { duration_s } => out.push(ServerFaultWindow {
                 from_s: ev.at_s,
                 until_s: ev.at_s + duration_s,
                 reject_prob: 1.0,
                 added_latency_s: 0.0,
+                path_prefix: None,
             }),
             FaultKind::Stall { frac, duration_s } => out.push(ServerFaultWindow {
                 from_s: ev.at_s,
@@ -144,6 +164,20 @@ pub fn fault_windows_from_schedule(
                 // A head-of-line stall shows up as first-byte delay on
                 // loopback; cap it so tests stay fast.
                 added_latency_s: (frac * duration_s).min(2.0),
+                path_prefix: None,
+            }),
+            FaultKind::SlowMirror {
+                mirror,
+                factor,
+                duration_s,
+            } => out.push(ServerFaultWindow {
+                from_s: ev.at_s,
+                until_s: ev.at_s + duration_s,
+                reject_prob: 0.0,
+                // Per-request staging delay as the loopback analogue
+                // of a rate collapse; capped so tests stay fast.
+                added_latency_s: (0.1 / factor.max(1e-3)).min(2.0),
+                path_prefix: Some(format!("/m{mirror}/")),
             }),
             _ => {} // connection-level classes: see fault_drop_* knobs
         }
@@ -361,13 +395,18 @@ fn serve_connection(
 
         // Scheduled fault windows (5xx rejection / added latency),
         // keyed on server uptime; the 503 draw is deterministic in
-        // (fault_seed, request ordinal).
+        // (fault_seed, request ordinal). Windows carrying a
+        // `path_prefix` only hit the matching mirror's paths.
         if !shared.throttle.fault_windows.is_empty() {
             let up_s = shared.started.elapsed().as_secs_f64();
             let mut reject = false;
             let mut added_latency_s: f64 = 0.0;
             for (wi, w) in shared.throttle.fault_windows.iter().enumerate() {
-                if up_s >= w.from_s && up_s < w.until_s {
+                let applies = match &w.path_prefix {
+                    Some(prefix) => path.starts_with(prefix.as_str()),
+                    None => true,
+                };
+                if applies && up_s >= w.from_s && up_s < w.until_s {
                     added_latency_s = added_latency_s.max(w.added_latency_s);
                     if w.reject_prob >= 1.0 {
                         reject = true;
@@ -588,13 +627,26 @@ mod tests {
                 at_s: 30.0,
                 kind: FaultKind::ConnectionReset { count: 1 },
             },
+            FaultEvent {
+                at_s: 40.0,
+                kind: FaultKind::SlowMirror {
+                    mirror: 1,
+                    factor: 0.1,
+                    duration_s: 5.0,
+                },
+            },
         ]);
         let windows = fault_windows_from_schedule(&schedule);
-        assert_eq!(windows.len(), 3, "resets have no HTTP window analogue");
+        assert_eq!(windows.len(), 4, "resets have no HTTP window analogue");
         assert_eq!(windows[0].reject_prob, 0.7);
         assert_eq!((windows[0].from_s, windows[0].until_s), (1.0, 5.0));
         assert_eq!(windows[1].reject_prob, 1.0);
         assert!((windows[2].added_latency_s - 1.0).abs() < 1e-9);
+        assert!(windows[..3].iter().all(|w| w.path_prefix.is_none()));
+        // SlowMirror maps to a per-mirror window scoped to /m1/.
+        assert_eq!(windows[3].path_prefix.as_deref(), Some("/m1/"));
+        assert!((windows[3].added_latency_s - 1.0).abs() < 1e-9);
+        assert_eq!(windows[3].reject_prob, 0.0);
         // Profile overlay is deterministic and non-empty for 5xx-heavy
         // profiles.
         let a = ThrottleConfig::default().with_fault_profile(FaultProfile::ServerErrors, 9, 60.0);

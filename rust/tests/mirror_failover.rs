@@ -9,6 +9,9 @@
 //! single-mirror baseline wall time by a wide margin.
 //!
 //! Runtime-free (fixed controller + pure-Rust probe aggregation).
+//! Pinned to `MirrorStrategy::Failover` — this is the winner-take-all
+//! baseline suite; weighted striping is covered by
+//! `mirror_striping.rs`.
 
 mod common;
 
@@ -24,7 +27,11 @@ use fastbiodl::session::SessionReport;
 const SIZES: [u64; 3] = [30_000_000, 25_000_000, 20_000_000];
 
 fn run_cell(profile: FaultProfile, mirrors: usize, seed: u64) -> SessionReport {
-    let cfg = fault_download_cfg(OptimizerKind::Fixed, 1_800.0);
+    let mut cfg = fault_download_cfg(OptimizerKind::Fixed, 1_800.0);
+    // This suite pins the PR 2 winner-take-all baseline; weighted
+    // striping (the default strategy) has its own suite in
+    // `mirror_striping.rs`.
+    cfg.mirror.strategy = fastbiodl::config::MirrorStrategy::Failover;
     let controller = build_controller(&cfg.optimizer, None).unwrap();
     let faults = profile.schedule(seed, 600.0, LINK_MBPS);
     SimSession::new(SimSessionParams {

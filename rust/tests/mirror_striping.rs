@@ -1,0 +1,287 @@
+//! Weighted chunk striping vs the PR 2 winner-take-all failover
+//! baseline, deterministically, on the same two-mirror topology.
+//!
+//! The topology makes the per-mirror connection cap the binding
+//! resource (cap 3 per mirror, a fixed pool of 6 workers, 10 Mbps per
+//! connection, an 80 Mbps link that never binds): a strategy that
+//! concentrates on one mirror can use at most 3 of its 6 workers.
+//!
+//! * **healthy** — both strategies spread 3 + 3 and should be
+//!   equivalent (striping must never be worse);
+//! * **slowmirror** — mirror 0's per-connection rate collapses to 30 %
+//!   ([`FaultKind::SlowMirror`], the `slowmirror` fault class).
+//!   Winner-take-all failover drains off the degraded-but-usable
+//!   mirror, its surplus workers starve on the capped healthy mirror,
+//!   and steady goodput is 3 × 10 = 30 Mbps. Weighted striping keeps
+//!   the degraded mirror's three connections carrying ~30 %-rate
+//!   chunks (3 × 10 + 3 × 3 = 39 Mbps) — the headline >1.2×
+//!   bytes/sec win, with both mirrors visibly carrying traffic in
+//!   `SessionReport::mirror_bytes`.
+//!
+//! Runtime-free (fixed controller + pure-Rust probe aggregation), and
+//! every run replays bit-identically per seed.
+
+mod common;
+
+use common::{fault_download_cfg, mirrored_records, CHUNK_BYTES};
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::config::{MirrorStrategy, OptimizerKind};
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::netsim::engine::BackgroundConfig;
+use fastbiodl::netsim::{
+    ClientProfile, FaultEvent, FaultKind, FaultSchedule, NetSimConfig, ServerProfile,
+};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::SessionReport;
+
+const SIZES: [u64; 3] = [250_000_000, 200_000_000, 150_000_000];
+const WORKERS: usize = 6;
+const PER_MIRROR_CAP: usize = 3;
+
+/// Quiet 80 Mbps link, 10 Mbps per connection: six workers demand
+/// 60 Mbps, so the link never binds and the per-mirror connection cap
+/// is the contended resource.
+fn stripe_netsim(faults: FaultSchedule) -> NetSimConfig {
+    NetSimConfig {
+        link_capacity_mbps: 80.0,
+        background: BackgroundConfig::none(),
+        server: ServerProfile {
+            setup_latency_s: 0.1,
+            first_byte_latency_s: 0.2,
+            per_conn_cap_mbps: 10.0,
+            long_request_decay_per_min: 0.0,
+            decay_floor: 1.0,
+            max_connections: 32,
+        },
+        client: ClientProfile::ideal(),
+        flow_jitter_frac: 0.03,
+        flow_failure_rate_per_min: 0.0,
+        faults,
+        dt_s: 0.05,
+    }
+}
+
+/// Mirror 0's per-connection rate drops to 30 % shortly after start and
+/// stays degraded for the whole run — degraded but usable, exactly the
+/// regime where winner-take-all binding leaves bandwidth on the table.
+fn slowmirror_faults() -> FaultSchedule {
+    FaultSchedule::new(vec![FaultEvent {
+        at_s: 2.0,
+        kind: FaultKind::SlowMirror {
+            mirror: 0,
+            factor: 0.3,
+            duration_s: 100_000.0,
+        },
+    }])
+}
+
+fn run_cell(strategy: MirrorStrategy, faults: FaultSchedule, seed: u64) -> SessionReport {
+    let mut cfg = fault_download_cfg(OptimizerKind::Fixed, 3_600.0);
+    cfg.optimizer.c_max = 8;
+    cfg.optimizer.fixed_level = WORKERS;
+    cfg.optimizer.c_init = WORKERS;
+    cfg.mirror.strategy = strategy;
+    cfg.mirror.per_mirror_conns = PER_MIRROR_CAP;
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    SimSession::new(SimSessionParams {
+        behavior: ToolBehavior {
+            name: format!("{}x2m", strategy.name()),
+            mode: SchedulerMode::Chunked {
+                chunk_bytes: CHUNK_BYTES,
+                max_open_files: 2,
+            },
+            keep_alive: true,
+            resolution: ResolutionCost::Batch { latency_s: 0.5 },
+        },
+        download: cfg,
+        netsim: stripe_netsim(faults),
+        records: mirrored_records("SRRW", &SIZES, 2),
+        controller,
+        runtime: None,
+        seed,
+    })
+    .run()
+    .unwrap()
+}
+
+fn assert_complete(rep: &SessionReport) {
+    let payload: u64 = SIZES.iter().sum();
+    assert!(rep.completed, "{}: did not complete", rep.tool);
+    assert_eq!(rep.files_completed, SIZES.len(), "{}: files", rep.tool);
+    assert_eq!(rep.frontiers, SIZES.to_vec(), "{}: frontiers", rep.tool);
+    assert_eq!(
+        rep.mirror_bytes.iter().sum::<u64>(),
+        payload,
+        "{}: mirror attribution does not tile the payload",
+        rep.tool
+    );
+}
+
+/// Payload bytes per second of session time — the comparison metric
+/// (total payload is identical across cells, so this is 1/duration up
+/// to a constant).
+fn bytes_per_sec(rep: &SessionReport) -> f64 {
+    SIZES.iter().sum::<u64>() as f64 / rep.duration_s
+}
+
+#[test]
+fn striping_matches_failover_on_healthy_mirrors() {
+    let stripe = run_cell(MirrorStrategy::WeightedStripe, FaultSchedule::none(), 11);
+    let failover = run_cell(MirrorStrategy::Failover, FaultSchedule::none(), 11);
+    println!("healthy stripe:   {}", stripe.summary());
+    println!("healthy failover: {}", failover.summary());
+    assert_complete(&stripe);
+    assert_complete(&failover);
+    // Symmetric healthy mirrors: both strategies settle on the same
+    // 3 + 3 spread, so striping is never worse (tiny tolerance for
+    // allocation-order differences).
+    assert!(
+        bytes_per_sec(&stripe) >= bytes_per_sec(&failover) * 0.98,
+        "striping regressed on healthy mirrors: {:.1}s vs {:.1}s",
+        stripe.duration_s,
+        failover.duration_s
+    );
+    // Both mirrors carry traffic under striping.
+    assert_eq!(stripe.mirror_bytes.len(), 2);
+    assert!(
+        stripe.mirror_bytes.iter().all(|&b| b > 0),
+        "striping left a healthy mirror idle: {:?}",
+        stripe.mirror_bytes
+    );
+}
+
+#[test]
+fn striping_beats_failover_on_a_slow_mirror() {
+    let stripe = run_cell(MirrorStrategy::WeightedStripe, slowmirror_faults(), 11);
+    let failover = run_cell(MirrorStrategy::Failover, slowmirror_faults(), 11);
+    println!("slowmirror stripe:   {}", stripe.summary());
+    println!("slowmirror failover: {}", failover.summary());
+    assert_complete(&stripe);
+    assert_complete(&failover);
+
+    // The headline: weighted striping reclaims the degraded mirror's
+    // residual bandwidth that winner-take-all failover abandons.
+    let speedup = bytes_per_sec(&stripe) / bytes_per_sec(&failover);
+    assert!(
+        speedup > 1.2,
+        "striping should beat failover by >1.2x on a slow mirror, got {speedup:.3} \
+         ({:.1}s vs {:.1}s)",
+        stripe.duration_s,
+        failover.duration_s
+    );
+    // Both mirrors keep carrying traffic under striping; the healthy
+    // replica dominates.
+    assert!(
+        stripe.mirror_bytes.iter().all(|&b| b > 0),
+        "striping should keep the degraded mirror productive: {:?}",
+        stripe.mirror_bytes
+    );
+    assert!(
+        stripe.mirror_bytes[1] > stripe.mirror_bytes[0],
+        "healthy mirror should dominate: {:?}",
+        stripe.mirror_bytes
+    );
+    // Failover really did abandon the slow mirror's workers: it ends
+    // slower despite moving every idle slot to the healthy mirror.
+    assert!(
+        failover.mirror_switches >= 1,
+        "failover baseline never failed over"
+    );
+}
+
+#[test]
+fn striping_replays_deterministically() {
+    let a = run_cell(MirrorStrategy::WeightedStripe, slowmirror_faults(), 4242);
+    let b = run_cell(MirrorStrategy::WeightedStripe, slowmirror_faults(), 4242);
+    assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+    assert_eq!(a.total_bytes, b.total_bytes);
+    assert_eq!(a.mirror_bytes, b.mirror_bytes);
+    assert_eq!(a.mirror_switches, b.mirror_switches);
+    assert_eq!(a.concurrency_trace, b.concurrency_trace);
+    assert_eq!(
+        (a.chunk_retries, a.connection_resets, a.server_rejects),
+        (b.chunk_retries, b.connection_resets, b.server_rejects)
+    );
+    // A different seed moves the jitter draws.
+    let c = run_cell(MirrorStrategy::WeightedStripe, slowmirror_faults(), 4243);
+    assert!(
+        c.duration_s.to_bits() != a.duration_s.to_bits() || c.total_bytes != a.total_bytes,
+        "seed change did not affect the run"
+    );
+}
+
+/// Re-admission: a mirror collapses, loses most of its share, then
+/// heals mid-run; striping keeps re-measuring it (through its
+/// floor-weighted residual connections, and through the periodic
+/// re-probe whenever it drains to zero), so the healed mirror wins
+/// back real chunk share. Compared against an identical run where the
+/// mirror never heals: the healed run must credit it far more bytes.
+#[test]
+fn reprobe_readmits_a_healed_mirror() {
+    let sizes: [u64; 2] = [60_000_000, 60_000_000];
+    let slow = |duration_s: f64| {
+        FaultSchedule::new(vec![FaultEvent {
+            at_s: 2.0,
+            kind: FaultKind::SlowMirror {
+                mirror: 0,
+                factor: 0.05,
+                duration_s,
+            },
+        }])
+    };
+    let run = |faults: FaultSchedule, seed: u64| -> SessionReport {
+        let mut cfg = fault_download_cfg(OptimizerKind::Fixed, 3_600.0);
+        cfg.optimizer.c_max = 4;
+        cfg.optimizer.fixed_level = 3;
+        cfg.optimizer.c_init = 3;
+        // No per-mirror cap: rebalancing is free to drain mirror 0
+        // toward zero connections, exercising re-measurement (residual
+        // floor connections and, once fully drained, the re-probe).
+        cfg.mirror.per_mirror_conns = 0;
+        let controller = build_controller(&cfg.optimizer, None).unwrap();
+        SimSession::new(SimSessionParams {
+            behavior: ToolBehavior {
+                name: "reprobe".into(),
+                mode: SchedulerMode::Chunked {
+                    chunk_bytes: CHUNK_BYTES,
+                    max_open_files: 2,
+                },
+                keep_alive: true,
+                resolution: ResolutionCost::Batch { latency_s: 0.5 },
+            },
+            download: cfg,
+            netsim: stripe_netsim(faults),
+            records: mirrored_records("SRRH", &sizes, 2),
+            controller,
+            runtime: None,
+            seed,
+        })
+        .run()
+        .unwrap()
+    };
+
+    // Heals at t = 22 (20 s of collapse) vs never heals.
+    let healed = run(slow(20.0), 77);
+    let stuck = run(slow(100_000.0), 77);
+    println!("healed: {}", healed.summary());
+    println!("stuck:  {}", stuck.summary());
+    for rep in [&healed, &stuck] {
+        assert!(rep.completed, "{}: did not complete", rep.tool);
+        assert_eq!(rep.files_completed, sizes.len());
+        assert_eq!(rep.mirror_bytes.iter().sum::<u64>(), sizes.iter().sum::<u64>());
+    }
+    // The re-probe keeps checking the degraded mirror either way, but
+    // only the healed run converts that into real chunk share again.
+    assert!(
+        healed.mirror_bytes[0] as f64 > stuck.mirror_bytes[0] as f64 * 1.5,
+        "healed mirror should regain chunk share: healed {:?} vs stuck {:?}",
+        healed.mirror_bytes,
+        stuck.mirror_bytes
+    );
+    // Deterministic replay of the heal scenario.
+    let again = run(slow(20.0), 77);
+    assert_eq!(again.duration_s.to_bits(), healed.duration_s.to_bits());
+    assert_eq!(again.mirror_bytes, healed.mirror_bytes);
+    assert_eq!(again.mirror_switches, healed.mirror_switches);
+}
