@@ -1,0 +1,637 @@
+//! `bench` — the deterministic macro-benchmark subsystem.
+//!
+//! The paper's core claim is *throughput*, yet nothing in the repo
+//! previously emitted a machine-readable performance trajectory. This
+//! module runs a named suite of scenarios over the virtual-clock
+//! netsim path and measures, per case:
+//!
+//! * **simulated outcome** (deterministic per `(suite, seed)`):
+//!   goodput, bytes, retries, resets, rejects, mirror switches, probe
+//!   count — identical on every machine and every run;
+//! * **real control-loop cost** (varies with the machine): wall time,
+//!   engine ticks, ns/tick, ticks/sec, allocations per tick (via the
+//!   [`self::alloc`] counting allocator), and the slot-reconciliation
+//!   scan cost ([`crate::session::EngineStats::slots_scanned`]).
+//!
+//! The full suite is the grid *three Table-2 dataset presets ×
+//! {benign, slowmirror, brownout, flashcrowd} × {gd, bayes, fixed} ×
+//! c_max ∈ {16, 64, 256}* — 108 cases — capped at
+//! [`CASE_HORIZON_S`] virtual seconds each so hostile cells stay
+//! bounded. Results serialize to a schema-versioned `BENCH_engine.json`
+//! ([`BenchReport::to_json`]) suitable for cross-PR diffing, and
+//! [`diff`] compares a fresh report against a stored baseline —
+//! flagging timing regressions (ns/tick beyond a tolerance),
+//! determinism drift (simulated fields that should be bit-stable), and
+//! vanished cases.
+//!
+//! `fastbiodl bench --suite full` is the CLI entry;
+//! `--reconcile full-scan` re-runs the same grid on the naive
+//! slot-reconciliation path so the batched engine's win is measurable
+//! (`rust/tests/engine_tick.rs` asserts it directionally at
+//! `c_max = 256`).
+
+pub mod alloc;
+
+use std::time::Instant;
+
+use crate::config::{OptimizerKind, ReconcileMode};
+use crate::experiments::scenario;
+use crate::netsim::FaultProfile;
+use crate::optimizer::build_controller;
+use crate::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// Schema tag written into every report; bump on breaking layout
+/// changes so baseline diffing fails loudly instead of silently.
+pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v1";
+
+/// Virtual-time cap per case (s): hostile cells (brownouts at
+/// `c_max = 16`) would otherwise run long; every case reports goodput
+/// over the time it actually ran, `completed` says whether it finished
+/// inside the cap. Deterministic either way.
+pub const CASE_HORIZON_S: f64 = 240.0;
+
+/// Default relative ns/tick increase treated as a timing regression by
+/// [`diff`].
+pub const DEFAULT_TIMING_TOLERANCE: f64 = 0.35;
+
+/// A named benchmark suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    /// 4 fast cases (CI artifact): Amplicon-Digester × {benign,
+    /// slowmirror} × gd × c_max {16, 256}.
+    Smoke,
+    /// The full 108-case grid (see module docs).
+    Full,
+}
+
+impl Suite {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Suite> {
+        match s.to_ascii_lowercase().as_str() {
+            "smoke" => Ok(Suite::Smoke),
+            "full" => Ok(Suite::Full),
+            other => Err(Error::Config(format!(
+                "unknown bench suite '{other}' (expected smoke | full)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Smoke => "smoke",
+            Suite::Full => "full",
+        }
+    }
+}
+
+/// One scenario×fault×controller×c_max cell of the grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CaseSpec {
+    /// Table-2 dataset alias (`Breast-RNA-seq` | `HiFi-WGS` |
+    /// `Amplicon-Digester`).
+    pub dataset: &'static str,
+    /// Fault overlay (`None` = benign network).
+    pub profile: FaultProfile,
+    /// Concurrency controller under test.
+    pub optimizer: OptimizerKind,
+    /// Worker-pool capacity.
+    pub c_max: usize,
+}
+
+/// Short controller tag used in case ids ("gd" | "bayes" | "fixed").
+fn optimizer_tag(kind: OptimizerKind) -> &'static str {
+    match kind {
+        OptimizerKind::GradientDescent => "gd",
+        OptimizerKind::Bayesian => "bayes",
+        OptimizerKind::Fixed => "fixed",
+    }
+}
+
+impl CaseSpec {
+    /// Stable identifier used as the baseline-diff key.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}/c{}",
+            self.dataset,
+            self.profile.name(),
+            optimizer_tag(self.optimizer),
+            self.c_max
+        )
+    }
+}
+
+/// Expand a suite into its ordered case list.
+pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
+    let mut cases = Vec::new();
+    match suite {
+        Suite::Smoke => {
+            for profile in [FaultProfile::None, FaultProfile::SlowMirror] {
+                for c_max in [16, 256] {
+                    cases.push(CaseSpec {
+                        dataset: "Amplicon-Digester",
+                        profile,
+                        optimizer: OptimizerKind::GradientDescent,
+                        c_max,
+                    });
+                }
+            }
+        }
+        Suite::Full => {
+            for dataset in ["Breast-RNA-seq", "HiFi-WGS", "Amplicon-Digester"] {
+                for profile in [
+                    FaultProfile::None,
+                    FaultProfile::SlowMirror,
+                    FaultProfile::Brownout,
+                    FaultProfile::FlashCrowd,
+                ] {
+                    for optimizer in [
+                        OptimizerKind::GradientDescent,
+                        OptimizerKind::Bayesian,
+                        OptimizerKind::Fixed,
+                    ] {
+                        for c_max in [16, 64, 256] {
+                            cases.push(CaseSpec {
+                                dataset,
+                                profile,
+                                optimizer,
+                                c_max,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cases
+}
+
+/// One measured cell: the spec, the deterministic simulated outcome,
+/// and the machine-dependent control-loop timing.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    /// Stable case id (`dataset/profile/controller/cN`).
+    pub id: String,
+    pub dataset: String,
+    pub profile: String,
+    pub optimizer: String,
+    pub c_max: usize,
+    // --- Deterministic per (suite, seed): ---
+    pub goodput_mbps: f64,
+    pub total_bytes: u64,
+    pub duration_s: f64,
+    pub chunk_retries: u64,
+    pub connection_resets: u64,
+    pub server_rejects: u64,
+    pub mirror_switches: u64,
+    pub probes: u64,
+    pub files_completed: u64,
+    pub completed: bool,
+    // --- Timing (varies run to run): ---
+    pub wall_s: f64,
+    pub ticks: u64,
+    pub ns_per_tick: f64,
+    pub ticks_per_sec: f64,
+    pub allocs_per_tick: f64,
+    pub slots_scanned_per_tick: f64,
+    pub max_probe_releases_per_tick: u64,
+}
+
+/// Run one grid cell to completion (or the [`CASE_HORIZON_S`] cap).
+///
+/// Runtime-free by construction (pure-Rust mirror controllers), so the
+/// harness produces identical simulated fields on any machine,
+/// including bare checkouts without compiled XLA artifacts.
+pub fn run_case(spec: &CaseSpec, seed: u64, reconcile: ReconcileMode) -> Result<CaseResult> {
+    let mut sc = scenario::colab_dataset(spec.dataset, seed)?;
+    sc.download.optimizer.kind = spec.optimizer;
+    sc.download.optimizer.c_max = spec.c_max;
+    if spec.optimizer == OptimizerKind::Fixed {
+        sc.download.optimizer.c_init = sc.download.optimizer.fixed_level;
+    }
+    sc.download.reconcile = reconcile;
+    if spec.profile != FaultProfile::None {
+        sc = sc.with_fault_profile(spec.profile, seed, CASE_HORIZON_S);
+    }
+    let controller = build_controller(&sc.download.optimizer, None)?;
+    let behavior = ToolBehavior::fastbiodl(&sc.download);
+    let session = SimSession::new(SimSessionParams {
+        download: sc.download,
+        behavior,
+        netsim: sc.netsim,
+        records: sc.records,
+        controller,
+        runtime: None,
+        seed,
+    })
+    .with_checkpoint_after(CASE_HORIZON_S);
+
+    let allocs_before = alloc::thread_allocations();
+    let t0 = Instant::now();
+    let (report, stats) = session.run_with_stats()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let allocs = alloc::thread_allocations().saturating_sub(allocs_before);
+
+    let ticks = stats.ticks.max(1);
+    Ok(CaseResult {
+        id: spec.id(),
+        dataset: spec.dataset.to_string(),
+        profile: spec.profile.name().to_string(),
+        optimizer: optimizer_tag(spec.optimizer).to_string(),
+        c_max: spec.c_max,
+        goodput_mbps: report.mean_throughput_mbps,
+        total_bytes: report.total_bytes,
+        duration_s: report.duration_s,
+        chunk_retries: report.chunk_retries as u64,
+        connection_resets: report.connection_resets as u64,
+        server_rejects: report.server_rejects as u64,
+        mirror_switches: report.mirror_switches as u64,
+        probes: report.probes as u64,
+        files_completed: report.files_completed as u64,
+        completed: report.completed,
+        wall_s,
+        ticks: stats.ticks,
+        ns_per_tick: wall_s * 1e9 / ticks as f64,
+        ticks_per_sec: ticks as f64 / wall_s.max(1e-12),
+        allocs_per_tick: allocs as f64 / ticks as f64,
+        slots_scanned_per_tick: stats.slots_scanned as f64 / ticks as f64,
+        max_probe_releases_per_tick: stats.max_probe_releases_per_tick as u64,
+    })
+}
+
+/// A complete benchmark report (header + per-case records).
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub suite: String,
+    pub seed: u64,
+    pub reconcile: String,
+    pub cases: Vec<CaseResult>,
+}
+
+impl BenchReport {
+    /// Serialize to the schema-versioned JSON document (deterministic
+    /// key order; the `timing` sub-objects are the only fields expected
+    /// to differ between two runs of the same suite+seed).
+    pub fn to_json(&self) -> Json {
+        let cpus = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(0);
+        let machine = obj(vec![
+            ("os", Json::Str(std::env::consts::OS.into())),
+            ("arch", Json::Str(std::env::consts::ARCH.into())),
+            ("cpus", Json::Num(cpus as f64)),
+        ]);
+        let header = obj(vec![
+            ("schema", Json::Str(SCHEMA_VERSION.into())),
+            ("suite", Json::Str(self.suite.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("reconcile", Json::Str(self.reconcile.clone())),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            ("machine", machine),
+        ]);
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("id", Json::Str(c.id.clone())),
+                    ("dataset", Json::Str(c.dataset.clone())),
+                    ("profile", Json::Str(c.profile.clone())),
+                    ("optimizer", Json::Str(c.optimizer.clone())),
+                    ("c_max", Json::Num(c.c_max as f64)),
+                    (
+                        "det",
+                        obj(vec![
+                            ("goodput_mbps", Json::Num(c.goodput_mbps)),
+                            ("total_bytes", Json::Num(c.total_bytes as f64)),
+                            ("duration_s", Json::Num(c.duration_s)),
+                            ("chunk_retries", Json::Num(c.chunk_retries as f64)),
+                            ("connection_resets", Json::Num(c.connection_resets as f64)),
+                            ("server_rejects", Json::Num(c.server_rejects as f64)),
+                            ("mirror_switches", Json::Num(c.mirror_switches as f64)),
+                            ("probes", Json::Num(c.probes as f64)),
+                            ("files_completed", Json::Num(c.files_completed as f64)),
+                            ("completed", Json::Bool(c.completed)),
+                        ]),
+                    ),
+                    (
+                        "timing",
+                        obj(vec![
+                            ("wall_s", Json::Num(c.wall_s)),
+                            ("ticks", Json::Num(c.ticks as f64)),
+                            ("ns_per_tick", Json::Num(c.ns_per_tick)),
+                            ("ticks_per_sec", Json::Num(c.ticks_per_sec)),
+                            ("allocs_per_tick", Json::Num(c.allocs_per_tick)),
+                            ("slots_scanned_per_tick", Json::Num(c.slots_scanned_per_tick)),
+                            (
+                                "max_probe_releases_per_tick",
+                                Json::Num(c.max_probe_releases_per_tick as f64),
+                            ),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![("header", header), ("cases", Json::Arr(cases))])
+    }
+
+    /// Parse a report previously written by [`BenchReport::to_json`].
+    pub fn from_json(text: &str) -> Result<BenchReport> {
+        let j = Json::parse(text)?;
+        let header = j.require("header")?;
+        let schema = header
+            .require("schema")?
+            .as_str()
+            .ok_or_else(|| Error::Config("bench header.schema must be a string".into()))?;
+        if schema != SCHEMA_VERSION {
+            return Err(Error::Config(format!(
+                "bench schema mismatch: file is '{schema}', this binary reads '{SCHEMA_VERSION}'"
+            )));
+        }
+        let req_str = |v: &Json, k: &str| -> Result<String> {
+            Ok(v.require(k)?
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("bench field '{k}' must be a string")))?
+                .to_string())
+        };
+        let req_f64 = |v: &Json, k: &str| -> Result<f64> {
+            v.require(k)?
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("bench field '{k}' must be a number")))
+        };
+        let req_u64 = |v: &Json, k: &str| -> Result<u64> {
+            v.require(k)?
+                .as_u64()
+                .ok_or_else(|| Error::Config(format!("bench field '{k}' must be an integer")))
+        };
+        let mut cases = Vec::new();
+        for c in j
+            .require("cases")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("bench 'cases' must be an array".into()))?
+        {
+            let det = c.require("det")?;
+            let timing = c.require("timing")?;
+            cases.push(CaseResult {
+                id: req_str(c, "id")?,
+                dataset: req_str(c, "dataset")?,
+                profile: req_str(c, "profile")?,
+                optimizer: req_str(c, "optimizer")?,
+                c_max: req_u64(c, "c_max")? as usize,
+                goodput_mbps: req_f64(det, "goodput_mbps")?,
+                total_bytes: req_u64(det, "total_bytes")?,
+                duration_s: req_f64(det, "duration_s")?,
+                chunk_retries: req_u64(det, "chunk_retries")?,
+                connection_resets: req_u64(det, "connection_resets")?,
+                server_rejects: req_u64(det, "server_rejects")?,
+                mirror_switches: req_u64(det, "mirror_switches")?,
+                probes: req_u64(det, "probes")?,
+                files_completed: req_u64(det, "files_completed")?,
+                completed: matches!(*det.require("completed")?, Json::Bool(true)),
+                wall_s: req_f64(timing, "wall_s")?,
+                ticks: req_u64(timing, "ticks")?,
+                ns_per_tick: req_f64(timing, "ns_per_tick")?,
+                ticks_per_sec: req_f64(timing, "ticks_per_sec")?,
+                allocs_per_tick: req_f64(timing, "allocs_per_tick")?,
+                slots_scanned_per_tick: req_f64(timing, "slots_scanned_per_tick")?,
+                max_probe_releases_per_tick: req_u64(timing, "max_probe_releases_per_tick")?,
+            });
+        }
+        Ok(BenchReport {
+            suite: req_str(header, "suite")?,
+            seed: req_u64(header, "seed")?,
+            reconcile: req_str(header, "reconcile")?,
+            cases,
+        })
+    }
+}
+
+/// What kind of baseline deviation [`diff`] found.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegressionKind {
+    /// ns/tick grew beyond the tolerance.
+    Timing,
+    /// A simulated field that must be bit-stable for the same
+    /// suite+seed changed — the engine's behaviour drifted.
+    Determinism,
+    /// A baseline case is missing from the current report.
+    Missing,
+}
+
+impl RegressionKind {
+    /// Short label for CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RegressionKind::Timing => "timing",
+            RegressionKind::Determinism => "determinism",
+            RegressionKind::Missing => "missing",
+        }
+    }
+}
+
+/// One flagged deviation from the baseline.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub case_id: String,
+    pub kind: RegressionKind,
+    pub detail: String,
+}
+
+/// Compare `current` against `baseline`; returns every regression
+/// found (empty = clean). Timing regressions use `tolerance` as the
+/// allowed relative ns/tick increase; determinism checks only apply
+/// when the two reports ran the same suite and seed.
+pub fn diff(current: &BenchReport, baseline: &BenchReport, tolerance: f64) -> Vec<Regression> {
+    let mut out = Vec::new();
+    let comparable = current.suite == baseline.suite && current.seed == baseline.seed;
+    for base in &baseline.cases {
+        let Some(cur) = current.cases.iter().find(|c| c.id == base.id) else {
+            out.push(Regression {
+                case_id: base.id.clone(),
+                kind: RegressionKind::Missing,
+                detail: "case present in baseline but not in current report".into(),
+            });
+            continue;
+        };
+        if comparable {
+            let det_drift = cur.total_bytes != base.total_bytes
+                || cur.chunk_retries != base.chunk_retries
+                || cur.connection_resets != base.connection_resets
+                || cur.server_rejects != base.server_rejects
+                || cur.mirror_switches != base.mirror_switches
+                || cur.probes != base.probes
+                || cur.files_completed != base.files_completed
+                || cur.completed != base.completed
+                || (cur.goodput_mbps - base.goodput_mbps).abs() > base.goodput_mbps.abs() * 1e-9;
+            if det_drift {
+                out.push(Regression {
+                    case_id: base.id.clone(),
+                    kind: RegressionKind::Determinism,
+                    detail: format!(
+                        "simulated fields drifted (goodput {:.3} -> {:.3} Mbps, bytes {} -> {}, \
+                         retries {} -> {})",
+                        base.goodput_mbps,
+                        cur.goodput_mbps,
+                        base.total_bytes,
+                        cur.total_bytes,
+                        base.chunk_retries,
+                        cur.chunk_retries
+                    ),
+                });
+            }
+        }
+        if base.ns_per_tick > 0.0 && cur.ns_per_tick > base.ns_per_tick * (1.0 + tolerance) {
+            out.push(Regression {
+                case_id: base.id.clone(),
+                kind: RegressionKind::Timing,
+                detail: format!(
+                    "ns/tick {:.0} -> {:.0} (+{:.0}%, tolerance {:.0}%)",
+                    base.ns_per_tick,
+                    cur.ns_per_tick,
+                    (cur.ns_per_tick / base.ns_per_tick - 1.0) * 100.0,
+                    tolerance * 100.0
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> BenchReport {
+        BenchReport {
+            suite: "smoke".into(),
+            seed: 1,
+            reconcile: "batched".into(),
+            cases: vec![CaseResult {
+                id: "Amplicon-Digester/none/gd/c16".into(),
+                dataset: "Amplicon-Digester".into(),
+                profile: "none".into(),
+                optimizer: "gd".into(),
+                c_max: 16,
+                goodput_mbps: 812.5,
+                total_bytes: 1_910_000_000,
+                duration_s: 19.0,
+                chunk_retries: 0,
+                connection_resets: 0,
+                server_rejects: 0,
+                mirror_switches: 2,
+                probes: 4,
+                files_completed: 43,
+                completed: true,
+                wall_s: 0.02,
+                ticks: 400,
+                ns_per_tick: 50_000.0,
+                ticks_per_sec: 20_000.0,
+                allocs_per_tick: 0.4,
+                slots_scanned_per_tick: 9.0,
+                max_probe_releases_per_tick: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let r = tiny_report();
+        let text = r.to_json().to_string_compact();
+        let back = BenchReport::from_json(&text).unwrap();
+        assert_eq!(back.suite, r.suite);
+        assert_eq!(back.seed, r.seed);
+        assert_eq!(back.cases.len(), 1);
+        let (a, b) = (&back.cases[0], &r.cases[0]);
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.ticks, b.ticks);
+        assert!((a.goodput_mbps - b.goodput_mbps).abs() < 1e-9);
+        assert!(a.completed);
+    }
+
+    #[test]
+    fn from_json_rejects_other_schemas() {
+        let r = tiny_report();
+        let text = r
+            .to_json()
+            .to_string_compact()
+            .replace(SCHEMA_VERSION, "fastbiodl-bench-v0");
+        assert!(BenchReport::from_json(&text).is_err());
+    }
+
+    #[test]
+    fn baseline_diff_flags_a_synthetic_timing_regression() {
+        let baseline = tiny_report();
+        let mut current = tiny_report();
+        current.cases[0].ns_per_tick *= 2.0;
+        let regs = diff(&current, &baseline, DEFAULT_TIMING_TOLERANCE);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert_eq!(regs[0].kind, RegressionKind::Timing);
+        assert_eq!(regs[0].case_id, baseline.cases[0].id);
+        // Inside the tolerance nothing fires.
+        let mut ok = tiny_report();
+        ok.cases[0].ns_per_tick *= 1.0 + DEFAULT_TIMING_TOLERANCE * 0.5;
+        assert!(diff(&ok, &baseline, DEFAULT_TIMING_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn baseline_diff_flags_determinism_drift_and_missing_cases() {
+        let baseline = tiny_report();
+        let mut drift = tiny_report();
+        drift.cases[0].total_bytes += 1;
+        let regs = diff(&drift, &baseline, 10.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].kind, RegressionKind::Determinism);
+        // A different seed must NOT be compared field-for-field.
+        let mut other_seed = drift.clone();
+        other_seed.seed = 2;
+        assert!(diff(&other_seed, &baseline, 10.0).is_empty());
+        // Vanished case.
+        let mut empty = tiny_report();
+        empty.cases.clear();
+        let regs = diff(&empty, &baseline, 10.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].kind, RegressionKind::Missing);
+    }
+
+    #[test]
+    fn suites_have_the_advertised_shapes() {
+        let smoke = suite_cases(Suite::Smoke);
+        assert_eq!(smoke.len(), 4);
+        let full = suite_cases(Suite::Full);
+        assert_eq!(full.len(), 108, "full grid is 3 x 4 x 3 x 3");
+        assert!(full.len() >= 30);
+        // Ids are unique (they key the baseline diff).
+        let mut ids: Vec<String> = full.iter().map(CaseSpec::id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len());
+        assert!(Suite::parse("full").is_ok());
+        assert!(Suite::parse("everything").is_err());
+    }
+
+    #[test]
+    fn smoke_case_is_deterministic_across_two_runs() {
+        let spec = CaseSpec {
+            dataset: "Amplicon-Digester",
+            profile: FaultProfile::SlowMirror,
+            optimizer: OptimizerKind::GradientDescent,
+            c_max: 16,
+        };
+        let a = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
+        let b = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
+        assert_eq!(a.goodput_mbps.to_bits(), b.goodput_mbps.to_bits());
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        assert_eq!(
+            (a.chunk_retries, a.connection_resets, a.server_rejects),
+            (b.chunk_retries, b.connection_resets, b.server_rejects)
+        );
+        assert_eq!(a.mirror_switches, b.mirror_switches);
+        assert_eq!(a.probes, b.probes);
+        assert_eq!(a.ticks, b.ticks, "tick count is part of the replay");
+        assert!(a.total_bytes > 0, "case moved no bytes");
+    }
+}

@@ -113,10 +113,16 @@ impl OptimizerConfig {
                 self.c_min, self.c_max
             )));
         }
-        if self.c_max > 64 {
-            // GRID=64 is the artifact's candidate grid; the Bayesian
-            // step cannot propose beyond it.
-            return Err(Error::Config("c_max may not exceed 64 (artifact grid)".into()));
+        if self.c_max > 4096 {
+            // Engine slots are preallocated per session; anything past
+            // this is a config typo, not a workload. (The Bayesian
+            // controller's *proposals* are additionally capped by the
+            // artifact's 64-point candidate grid regardless of c_max;
+            // GD and Fixed scale to the full pool.)
+            return Err(Error::Config(format!(
+                "c_max {} unreasonably large (max 4096)",
+                self.c_max
+            )));
         }
         if !(self.c_min..=self.c_max).contains(&self.c_init) {
             return Err(Error::Config(format!(
@@ -139,6 +145,56 @@ impl OptimizerConfig {
     /// Theoretical concurrency ceiling `C* = 1 / ln k` (paper §4.1).
     pub fn c_star(&self) -> f64 {
         1.0 / self.k.ln()
+    }
+}
+
+/// How the session engine reconciles its worker-slot pool against the
+/// shared [`crate::coordinator::pool::StatusArray`] each control tick.
+///
+/// The engine is the status array's only writer during a session (one
+/// batched `set_target` per probe), so the RUNNING set is always the
+/// prefix `0..target` — which the engine knows without touching the
+/// atomics. [`ReconcileMode::Batched`] exploits that: the per-tick
+/// reconcile/rebalance/assign passes walk only the live prefix plus a
+/// drain watermark of slots still winding down after a target shrink,
+/// instead of scanning all `c_max` slots through atomic loads. At
+/// `c_max = 256` with a typical target of a few dozen this removes the
+/// bulk of the control-loop cost (measured by `fastbiodl bench`; see
+/// `docs/ARCHITECTURE.md` §Benchmarking).
+///
+/// [`ReconcileMode::FullScan`] keeps the naive full-pool scan as a
+/// reference implementation: `rust/tests/engine_tick.rs` proves both
+/// modes produce identical slot assignments and byte-for-byte identical
+/// [`crate::session::SessionReport`]s across random fault schedules.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReconcileMode {
+    /// Naive reference: scan every slot `0..c_max` each tick, reading
+    /// the status array per slot.
+    FullScan,
+    /// Watermark reconciliation against the engine's prefix view of the
+    /// status array (the default).
+    #[default]
+    Batched,
+}
+
+impl ReconcileMode {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "full-scan" | "fullscan" | "full" | "naive" => Ok(ReconcileMode::FullScan),
+            "batched" | "batch" | "incremental" => Ok(ReconcileMode::Batched),
+            other => Err(Error::Config(format!(
+                "unknown reconcile mode '{other}' (expected batched | full-scan)"
+            ))),
+        }
+    }
+
+    /// Canonical name (the `--reconcile` spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReconcileMode::FullScan => "full-scan",
+            ReconcileMode::Batched => "batched",
+        }
     }
 }
 
@@ -228,6 +284,10 @@ pub struct DownloadConfig {
     pub optimizer: OptimizerConfig,
     /// Multi-mirror scheduling policy.
     pub mirror: MirrorPolicy,
+    /// Worker-slot pool reconciliation strategy (see [`ReconcileMode`];
+    /// `FullScan` exists as the measured baseline for `fastbiodl bench`
+    /// and the equivalence tests).
+    pub reconcile: ReconcileMode,
     /// Range-request chunk size (bytes). Files smaller than one chunk
     /// download in a single request.
     pub chunk_bytes: u64,
@@ -248,6 +308,7 @@ impl Default for DownloadConfig {
         DownloadConfig {
             optimizer: OptimizerConfig::default(),
             mirror: MirrorPolicy::default(),
+            reconcile: ReconcileMode::default(),
             chunk_bytes: 32 * 1024 * 1024,
             monitor_hz: 4.0,
             max_open_files: 4,
@@ -351,11 +412,32 @@ mod tests {
         c.c_min = 0;
         assert!(c.validate().is_err());
         c = OptimizerConfig::default();
-        c.c_max = 100;
+        c.c_max = 8192;
         assert!(c.validate().is_err());
         c = OptimizerConfig::default();
         c.c_init = 70;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn c_max_scales_past_the_artifact_grid() {
+        // The engine scale-out target: pools of 256+ slots validate
+        // (Bayesian proposals stay grid-capped internally).
+        let mut c = OptimizerConfig::default();
+        c.c_max = 256;
+        assert!(c.validate().is_ok());
+        c.c_max = 1024;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn reconcile_mode_parses_and_defaults_to_batched() {
+        assert_eq!(ReconcileMode::default(), ReconcileMode::Batched);
+        assert_eq!(ReconcileMode::parse("full-scan").unwrap(), ReconcileMode::FullScan);
+        assert_eq!(ReconcileMode::parse("BATCHED").unwrap(), ReconcileMode::Batched);
+        assert!(ReconcileMode::parse("lazy").is_err());
+        assert_eq!(ReconcileMode::FullScan.name(), "full-scan");
+        assert_eq!(DownloadConfig::default().reconcile, ReconcileMode::Batched);
     }
 
     #[test]

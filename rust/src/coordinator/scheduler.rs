@@ -114,6 +114,13 @@ pub struct ChunkScheduler {
     open: Vec<usize>,
     /// Requeued chunks (failures / worker shutdowns) served first.
     requeued: Vec<Chunk>,
+    /// All files below this index are opened or completed. Files only
+    /// ever transition unopened→opened and open→completed, so the
+    /// cursor is monotone — it turns the "next file to open" lookup
+    /// from an O(files) rescan per idle worker per tick into amortized
+    /// O(1) (43-file workloads at c_max = 256 hit this hard; see the
+    /// `bench` subsystem).
+    first_unopened: usize,
     total_bytes: u64,
     bytes_done: u64,
 }
@@ -175,9 +182,22 @@ impl ChunkScheduler {
             mode,
             open: Vec::new(),
             requeued: Vec::new(),
+            first_unopened: 0,
             total_bytes,
             bytes_done: bytes_done_total,
         }
+    }
+
+    /// Index of the first file that is neither opened nor completed,
+    /// advancing the monotone cursor past settled files.
+    fn next_unopened(&mut self) -> Option<usize> {
+        while let Some(f) = self.files.get(self.first_unopened) {
+            if !f.opened && !f.completed {
+                return Some(self.first_unopened);
+            }
+            self.first_unopened += 1;
+        }
+        None
     }
 
     /// Contiguous completed prefix of each file (what the resume
@@ -203,10 +223,7 @@ impl ChunkScheduler {
     }
 
     fn next_whole_file(&mut self) -> Option<Chunk> {
-        let idx = self
-            .files
-            .iter()
-            .position(|f| !f.opened && !f.completed)?;
+        let idx = self.next_unopened()?;
         let f = &mut self.files[idx];
         f.opened = true;
         let offset = f.next_offset; // 0, or the resume frontier
@@ -235,10 +252,7 @@ impl ChunkScheduler {
                 if self.open.len() >= max_open_files {
                     return None; // all open files fully handed out, wait
                 }
-                let next = self
-                    .files
-                    .iter()
-                    .position(|f| !f.opened && !f.completed)?;
+                let next = self.next_unopened()?;
                 self.files[next].opened = true;
                 self.open.push(next);
                 next

@@ -26,6 +26,7 @@
 
 pub mod accession;
 pub mod baselines;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -52,6 +52,8 @@ COMMANDS:
         --mirror-strategy <s> stripe (score-weighted striping, default)
                               or failover (winner-take-all binding)
         --mirror-conns <n>    per-mirror connection cap (default 0 = off)
+        --reconcile <m>       engine slot reconciliation: batched
+                              (default) or full-scan (naive reference)
     fetch <url...>            real-socket adaptive download over HTTP
         --out <dir>           write payloads here (default: discard)
         --chunk-mb <n>        range-request size (default 32)
@@ -71,6 +73,21 @@ COMMANDS:
         --seed <n>            fault schedule seed (default 1)
         --horizon <secs>      fault schedule horizon (default 600)
     datasets                  print the Table 2 inventory
+    bench                     deterministic macro-benchmark harness:
+                              Table-2 presets x fault profiles x
+                              {gd,bayes,fixed} x c_max {16,64,256} over
+                              the virtual-clock netsim, measuring real
+                              control-loop cost (ns/tick, allocs/tick,
+                              reconcile scan) alongside simulated goodput
+        --suite <s>           smoke (4 cases, default) or full (108)
+        --out <path>          output JSON (default BENCH_engine.json)
+        --baseline <path>     diff against a stored BENCH_engine.json
+                              and print regressions
+        --tolerance <frac>    ns/tick increase tolerated vs baseline
+                              (default 0.35)
+        --reconcile <m>       batched (default) or full-scan engine
+                              reconciliation (the measured baseline)
+        --seed <n>            simulation seed (default 1)
     experiment <id|all>       regenerate paper artifacts
         --runs <n>            runs per configuration (default 5)
         --seed <n>            base seed (default 1000)
@@ -104,6 +121,7 @@ fn run() -> Result<()> {
         }
         "datasets" => cmd_datasets(),
         "info" => cmd_info(),
+        "bench" => cmd_bench(&args),
         "download" => cmd_download(&args),
         "fetch" => cmd_fetch(&args),
         "serve" => cmd_serve(&args),
@@ -147,6 +165,9 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     if let Some(strategy) = args.flag("mirror-strategy") {
         cfg.mirror.strategy = fastbiodl::config::MirrorStrategy::parse(strategy)?;
     }
+    if let Some(mode) = args.flag("reconcile") {
+        cfg.reconcile = fastbiodl::config::ReconcileMode::parse(mode)?;
+    }
     if let Some(conns) = args.flag_usize("mirror-conns")? {
         cfg.mirror.per_mirror_conns = conns;
     }
@@ -170,10 +191,95 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(args: &Args) -> Result<()> {
+    use fastbiodl::bench;
+    args.expect_flags(&["suite", "out", "baseline", "seed", "reconcile", "tolerance"])?;
+    let suite = bench::Suite::parse(args.flag("suite").unwrap_or("smoke"))?;
+    let seed = args.flag_u64("seed")?.unwrap_or(1);
+    if seed > (1u64 << 53) {
+        // Seeds round-trip through JSON f64 numbers; beyond 2^53 the
+        // baseline diff would silently skip its determinism checks.
+        return Err(Error::Config(format!(
+            "bench seed {seed} exceeds 2^53 (not representable in the JSON report)"
+        )));
+    }
+    let reconcile = match args.flag("reconcile") {
+        Some(s) => fastbiodl::config::ReconcileMode::parse(s)?,
+        None => fastbiodl::config::ReconcileMode::default(),
+    };
+    let tolerance = args
+        .flag_f64("tolerance")?
+        .unwrap_or(bench::DEFAULT_TIMING_TOLERANCE);
+    let out_path = args.flag("out").unwrap_or("BENCH_engine.json");
+
+    let specs = bench::suite_cases(suite);
+    println!(
+        "bench suite '{}' ({} cases, seed {seed}, reconcile {})",
+        suite.name(),
+        specs.len(),
+        reconcile.name()
+    );
+    let mut cases = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let case = bench::run_case(spec, seed, reconcile)?;
+        println!(
+            "  {:<42} {:>8.1} Mbps  {:>7} ticks  {:>9.0} ns/tick  {:>6.2} alloc/tick  scan {:>6.1}/tick{}",
+            case.id,
+            case.goodput_mbps,
+            case.ticks,
+            case.ns_per_tick,
+            case.allocs_per_tick,
+            case.slots_scanned_per_tick,
+            if case.completed { "" } else { "  [capped]" },
+        );
+        cases.push(case);
+    }
+    let report = bench::BenchReport {
+        suite: suite.name().to_string(),
+        seed,
+        reconcile: reconcile.name().to_string(),
+        cases,
+    };
+    let mut text = report.to_json().to_string_compact();
+    text.push('\n');
+    std::fs::write(out_path, &text)?;
+    println!(
+        "wrote {out_path} ({} cases, schema {})",
+        report.cases.len(),
+        bench::SCHEMA_VERSION
+    );
+
+    if let Some(baseline_path) = args.flag("baseline") {
+        let baseline = bench::BenchReport::from_json(&std::fs::read_to_string(baseline_path)?)?;
+        let regressions = bench::diff(&report, &baseline, tolerance);
+        if regressions.is_empty() {
+            println!(
+                "baseline {baseline_path}: no regressions (ns/tick tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+        } else {
+            println!(
+                "baseline {baseline_path}: {} regression(s):",
+                regressions.len()
+            );
+            for r in &regressions {
+                println!("  [{}] {}: {}", r.kind.name(), r.case_id, r.detail);
+            }
+            // Baseline mode is an explicit gate: scripts and CI must
+            // see a non-zero exit, not have to scrape stdout.
+            return Err(Error::Session(format!(
+                "bench regressed against {baseline_path} ({} finding(s))",
+                regressions.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
-        "faults", "mirror-strategy", "mirror-conns",
+        "faults", "mirror-strategy", "mirror-conns", "reconcile",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -262,7 +368,7 @@ fn cmd_download(args: &Args) -> Result<()> {
 fn cmd_fetch(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
-        "mirror-conns",
+        "mirror-conns", "reconcile",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));

@@ -174,6 +174,12 @@ pub struct NetSim {
     /// Server brownout: new connections queue and new requests are
     /// rejected until this time.
     brownout_until_s: f64,
+    /// Windowed mid-body drops ([`FaultKind::MidBodyDrop`]): until
+    /// `drop_until_s`, a response crossing `drop_after_bytes` delivered
+    /// bytes is reset with probability `drop_frac` at the crossing.
+    drop_until_s: f64,
+    drop_after_bytes: f64,
+    drop_frac: f64,
     /// Per-mirror asymmetric degradation: flows to mirror `m` have
     /// their per-connection cap multiplied by `mirror_slow[m].1` until
     /// `mirror_slow[m].0` (grown lazily; unlisted mirrors are healthy).
@@ -221,6 +227,9 @@ impl NetSim {
             crowd_until_s: 0.0,
             crowd_extra_mbps: 0.0,
             brownout_until_s: 0.0,
+            drop_until_s: 0.0,
+            drop_after_bytes: 0.0,
+            drop_frac: 0.0,
             mirror_slow: Vec::new(),
             scratch_active: Vec::new(),
             scratch_demands: Vec::new(),
@@ -368,6 +377,15 @@ impl NetSim {
 
     /// Advance the world by `dt_s` (config default if `None`).
     pub fn step(&mut self, dt_override: Option<f64>) -> StepReport {
+        let mut report = StepReport::default();
+        self.step_into(dt_override, &mut report);
+        report
+    }
+
+    /// [`NetSim::step`] into a caller-owned report, reusing its event
+    /// buffer — the per-tick path of the simulated session transport,
+    /// so a steady-state control tick performs no allocation.
+    pub fn step_into(&mut self, dt_override: Option<f64>, report: &mut StepReport) {
         let dt = dt_override.unwrap_or(self.cfg.dt_s);
         debug_assert!(dt > 0.0);
         self.now_s += dt;
@@ -376,11 +394,11 @@ impl NetSim {
             background_mbps += self.crowd_extra_mbps;
         }
 
-        let mut report = StepReport {
-            now_s: self.now_s,
-            background_mbps,
-            ..Default::default()
-        };
+        report.events.clear();
+        report.now_s = self.now_s;
+        report.background_mbps = background_mbps;
+        report.total_bytes = 0.0;
+        report.goodput_mbps = 0.0;
 
         // Apply scheduled faults that have come due.
         loop {
@@ -389,7 +407,7 @@ impl NetSim {
                 _ => break,
             };
             self.fault_cursor += 1;
-            self.apply_fault(kind, &mut report);
+            self.apply_fault(kind, report);
         }
 
         // Phase timers (setup / first-byte). A flow whose first-byte
@@ -449,7 +467,7 @@ impl NetSim {
             }
         }
         if self.scratch_active.is_empty() {
-            return report;
+            return;
         }
         let active_idx = &self.scratch_active;
         let demands = &self.scratch_demands;
@@ -498,6 +516,29 @@ impl NetSim {
                 failed: false,
                 rejected: false,
             });
+            // Windowed mid-body drop: the response just crossed the
+            // drop threshold inside an active window — reset the
+            // connection with the configured probability (bytes already
+            // delivered stand; the engine requeues the chunk's tail).
+            // A completed response escapes (every byte arrived), and
+            // the `<=` on the pre-delivery side makes a 0-byte
+            // threshold mean "first delivery" instead of never firing.
+            if !done
+                && self.now_s < self.drop_until_s
+                && f.request_delivered >= self.drop_after_bytes
+                && f.request_delivered - bytes <= self.drop_after_bytes
+                && self.rng.next_f64() < self.drop_frac
+            {
+                f.close();
+                report.events.push(FlowEvent {
+                    id: f.id,
+                    bytes: 0.0,
+                    request_done: false,
+                    became_ready: false,
+                    failed: true,
+                    rejected: false,
+                });
+            }
         }
 
         // Failure injection: active flows die with the configured
@@ -520,7 +561,6 @@ impl NetSim {
             }
         }
         report.goodput_mbps = report.total_bytes * 8.0 / 1e6 / dt;
-        report
     }
 
     /// Apply one scheduled fault at the current virtual time.
@@ -612,6 +652,21 @@ impl NetSim {
                     factor
                 };
                 entry.0 = entry.0.max(self.now_s + duration_s);
+            }
+            FaultKind::MidBodyDrop {
+                after_bytes,
+                frac,
+                duration_s,
+            } => {
+                if self.now_s < self.drop_until_s {
+                    // Overlapping windows compose to the worst case.
+                    self.drop_frac = self.drop_frac.max(frac);
+                    self.drop_after_bytes = self.drop_after_bytes.min(after_bytes);
+                } else {
+                    self.drop_frac = frac;
+                    self.drop_after_bytes = after_bytes;
+                }
+                self.drop_until_s = self.drop_until_s.max(self.now_s + duration_s);
             }
         }
     }
@@ -1045,6 +1100,75 @@ mod tests {
             b_mbps > 250.0,
             "mirror-1 flow should stay at cap: {b_mbps}"
         );
+    }
+
+    #[test]
+    fn mid_body_drop_resets_responses_crossing_in_window_only() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::MidBodyDrop {
+                after_bytes: 1e6,
+                frac: 1.0,
+                duration_s: 4.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 14).unwrap();
+        let f = sim.open_flow().unwrap();
+        while !sim.flow_ready(f) {
+            sim.step(None);
+        }
+        // Issue inside the window: the response crosses 1 MB in-window
+        // and must be reset at the crossing.
+        while sim.now() < 1.5 {
+            sim.step(None);
+        }
+        sim.begin_request(f, 1e12, false, 0).unwrap();
+        let mut failed = 0;
+        while sim.now() < 5.0 {
+            failed += sim.step(None).events.iter().filter(|e| e.failed).count();
+        }
+        assert_eq!(failed, 1, "in-window crossing must reset exactly once");
+        assert_eq!(sim.flow_phase(f), Some(FlowPhase::Closed));
+        assert!(
+            sim.flow_delivered(f) >= 1e6,
+            "bytes delivered before the drop stand: {}",
+            sim.flow_delivered(f)
+        );
+        // Past the window the same pattern survives untouched.
+        let g = sim.open_flow().unwrap();
+        while !sim.flow_ready(g) {
+            sim.step(None);
+        }
+        sim.begin_request(g, 5e6, false, 1).unwrap();
+        let (mut failed, mut done) = (0, 0);
+        for _ in 0..2_000 {
+            let rep = sim.step(None);
+            failed += rep.events.iter().filter(|e| e.failed).count();
+            done += rep.events.iter().filter(|e| e.request_done).count();
+            if done > 0 {
+                break;
+            }
+        }
+        assert_eq!(failed, 0, "drop window must not outlive its duration");
+        assert_eq!(done, 1);
+    }
+
+    #[test]
+    fn step_into_reuses_the_report_buffer() {
+        let mut sim = NetSim::new(quiet_cfg(), 15).unwrap();
+        start_big_request(&mut sim);
+        let mut report = StepReport::default();
+        sim.step_into(None, &mut report);
+        let first = report.events.capacity();
+        let mut max_cap = first;
+        for _ in 0..200 {
+            sim.step_into(None, &mut report);
+            max_cap = max_cap.max(report.events.capacity());
+            assert!(report.now_s > 0.0);
+        }
+        // One active flow: the buffer settles after the first growth and
+        // is never reallocated again.
+        assert!(max_cap <= first.max(2), "event buffer kept growing: {max_cap}");
     }
 
     #[test]

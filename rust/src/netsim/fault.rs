@@ -20,6 +20,7 @@
 //! | [`FaultKind::FlashCrowd`] | competing bulk transfer burst | background traffic gains `extra_mbps` for the duration |
 //! | [`FaultKind::Brownout`] | overloaded archive front-end | new connections queue behind the brownout; new requests are rejected until it ends |
 //! | [`FaultKind::SlowMirror`] | one archive mirror slows while replicas stay healthy | per-connection cap × `factor`, but only for flows bound to the named mirror |
+//! | [`FaultKind::MidBodyDrop`] | time-windowed mid-body resets (flaky middlebox, response truncation) | while the window is active, responses crossing `after_bytes` delivered are reset with probability `frac` |
 //!
 //! ## Profiles
 //!
@@ -77,6 +78,19 @@ pub enum FaultKind {
     SlowMirror {
         mirror: usize,
         factor: f64,
+        duration_s: f64,
+    },
+    /// **Windowed** mid-body connection drop: while the window is
+    /// active (`duration_s` from the event time), any response that
+    /// crosses `after_bytes` delivered bytes is reset with probability
+    /// `frac` at the moment of crossing. The client sees a short body
+    /// exactly like the loopback server's budget-based `fault_drop_*`
+    /// knobs — but scheduled in *time* rather than spent from a
+    /// server-wide budget, so a specific phase of a transfer can be
+    /// targeted (the ROADMAP's "time-scheduled mid-body drops").
+    MidBodyDrop {
+        after_bytes: f64,
+        frac: f64,
         duration_s: f64,
     },
 }
@@ -140,6 +154,21 @@ impl FaultKind {
                     return Err("SlowMirror duration must be >= 0".into());
                 }
             }
+            FaultKind::MidBodyDrop {
+                after_bytes,
+                frac,
+                duration_s,
+            } => {
+                if !(*after_bytes >= 0.0 && after_bytes.is_finite()) {
+                    return Err(format!("MidBodyDrop after_bytes {after_bytes} invalid"));
+                }
+                if !(0.0..=1.0).contains(frac) {
+                    return Err(format!("MidBodyDrop frac {frac} outside [0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("MidBodyDrop duration must be >= 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -154,6 +183,7 @@ impl FaultKind {
             FaultKind::FlashCrowd { .. } => "flash-crowd",
             FaultKind::Brownout { .. } => "brownout",
             FaultKind::SlowMirror { .. } => "slow-mirror",
+            FaultKind::MidBodyDrop { .. } => "mid-body-drop",
         }
     }
 }
@@ -315,6 +345,7 @@ impl FaultProfile {
                 gen_crowd(seed, horizon_s, link_mbps, &mut events);
                 gen_brownout(seed, horizon_s, &mut events);
                 gen_slowmirror(seed, horizon_s, &mut events);
+                gen_bodydrops(seed, horizon_s, &mut events);
             }
         }
         FaultSchedule::new(events)
@@ -413,6 +444,24 @@ fn gen_brownout(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     }
 }
 
+fn gen_bodydrops(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xD20);
+    // Windowed mid-body drops ride only in `chaos` for now: recurring
+    // short windows during which responses die after a few MB.
+    let mut t = rng.range_f64(15.0, 30.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::MidBodyDrop {
+                after_bytes: rng.range_f64(1.0, 8.0) * 1e6,
+                frac: rng.range_f64(0.4, 0.9),
+                duration_s: rng.range_f64(4.0, 10.0),
+            },
+        });
+        t += rng.range_f64(40.0, 80.0);
+    }
+}
+
 fn gen_slowmirror(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     let mut rng = profile_rng(seed, 0x510);
     // The primary mirror collapses early and stays degraded for the
@@ -456,7 +505,11 @@ mod tests {
         let mut names: Vec<&str> = s.events().iter().map(|e| e.kind.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 7, "chaos missing classes: {names:?}");
+        assert_eq!(names.len(), 8, "chaos missing classes: {names:?}");
+        assert!(
+            names.contains(&"mid-body-drop"),
+            "chaos should include the windowed mid-body drop: {names:?}"
+        );
     }
 
     #[test]
@@ -509,6 +562,27 @@ mod tests {
             mirror: 3,
             factor: 0.5,
             duration_s: 10.0
+        }
+        .validate()
+        .is_ok());
+        assert!(FaultKind::MidBodyDrop {
+            after_bytes: -1.0,
+            frac: 0.5,
+            duration_s: 5.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::MidBodyDrop {
+            after_bytes: 1e6,
+            frac: 1.5,
+            duration_s: 5.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::MidBodyDrop {
+            after_bytes: 1e6,
+            frac: 0.7,
+            duration_s: 5.0
         }
         .validate()
         .is_ok());

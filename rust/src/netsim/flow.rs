@@ -48,6 +48,10 @@ pub struct SimFlow {
     pub phase: FlowPhase,
     /// Bytes left in the current request (meaningful in FirstByte/Active).
     pub request_remaining: f64,
+    /// Bytes delivered for the current request so far (resets on
+    /// `begin_request`/`abort_request`): the mid-body drop injection
+    /// keys off this to kill a response part-way through its body.
+    pub request_delivered: f64,
     /// Age of the current request (s), for long-request decay.
     pub request_age_s: f64,
     /// Total bytes this flow has delivered.
@@ -87,6 +91,7 @@ impl SimFlow {
                 FlowPhase::Idle
             },
             request_remaining: 0.0,
+            request_delivered: 0.0,
             request_age_s: 0.0,
             delivered_bytes: 0.0,
             ramp: RAMP_START,
@@ -124,6 +129,7 @@ impl SimFlow {
     pub fn abort_request(&mut self) {
         debug_assert!(self.is_busy(), "abort_request on non-busy flow");
         self.request_remaining = 0.0;
+        self.request_delivered = 0.0;
         self.request_age_s = 0.0;
         self.reject_pending = false;
         self.phase = FlowPhase::Idle;
@@ -143,6 +149,7 @@ impl SimFlow {
         );
         assert!(bytes > 0.0, "request must move at least one byte");
         self.request_remaining = bytes;
+        self.request_delivered = 0.0;
         self.request_age_s = 0.0;
         // Keep-alive reuse keeps TCP's window mostly open: restart the
         // ramp only partially on subsequent requests.
@@ -194,6 +201,7 @@ impl SimFlow {
     pub fn deliver(&mut self, bytes: f64, dt: f64) -> bool {
         debug_assert!(self.is_active());
         self.delivered_bytes += bytes;
+        self.request_delivered += bytes;
         self.request_remaining -= bytes;
         self.request_age_s += dt;
         // Exponential approach to full rate.

@@ -56,13 +56,27 @@
 //! When a journal directory is configured, frontiers are persisted on
 //! **every fault event** in addition to the probe cadence, so a crash
 //! right after a fault storm resumes from the freshest state.
+//!
+//! ## Slot-pool reconciliation cost
+//!
+//! The engine is the status array's only writer during a session, so
+//! the RUNNING set is always the prefix `0..target`. Under the default
+//! [`crate::config::ReconcileMode::Batched`] the per-tick
+//! reconcile/rebalance/assign passes therefore walk only that live
+//! prefix (plus a drain watermark covering slots still winding down
+//! after a target shrink) and never read the per-slot atomics — the
+//! atomics remain the *worker-facing* truth, written in batch by
+//! `set_target`. [`crate::config::ReconcileMode::FullScan`] keeps the
+//! naive scan of all `c_max` slots as the measured baseline;
+//! `fastbiodl bench` quantifies the difference and
+//! `rust/tests/engine_tick.rs` proves report-level equivalence.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::accession::resolver::{mirror_width, ResolutionCost};
 use crate::accession::RunRecord;
-use crate::config::{DownloadConfig, MirrorStrategy};
+use crate::config::{DownloadConfig, MirrorStrategy, ReconcileMode};
 use crate::coordinator::pool::StatusArray;
 use crate::coordinator::probe::ProbeWindow;
 use crate::coordinator::resume::ProgressJournal;
@@ -283,6 +297,33 @@ impl Default for Slot {
     }
 }
 
+/// Control-loop cost counters, filled by
+/// [`run_session_with_stats`]. These are *measurement* outputs — none
+/// of them feed back into scheduling — so the `fastbiodl bench`
+/// harness can report ticks/sec, slots scanned per tick, and the
+/// probe-release invariant without touching the [`SessionReport`]
+/// (whose byte-for-byte parity across [`ReconcileMode`]s is a tested
+/// guarantee).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Control-loop iterations executed (one per transport poll).
+    pub ticks: u64,
+    /// Total worker slots examined by the per-tick reconcile pass —
+    /// `ticks × c_max` under [`ReconcileMode::FullScan`], the live
+    /// prefix + drain watermark under [`ReconcileMode::Batched`].
+    pub slots_scanned: u64,
+    /// Most probe-slot releases observed in any single tick. The
+    /// striping rebalancer frees **at most one** slot per tick for a
+    /// due re-probe (PR 3's probe-stampede fix); `rust/tests/
+    /// engine_tick.rs` pins this at 1 even with `c_max = 256`.
+    pub max_probe_releases_per_tick: u32,
+    /// Total probe-slot releases across the session (how often the
+    /// re-probe path actually ran).
+    pub probe_releases: u64,
+    /// Transport events drained across the session.
+    pub transport_events: u64,
+}
+
 /// Persist the scheduler's frontiers if they changed since the last
 /// save. Journal failures must not kill the transfer.
 fn save_journal(
@@ -310,6 +351,16 @@ pub fn run_session(
     transport: &mut dyn Transport,
     clock: &dyn Clock,
 ) -> Result<SessionReport> {
+    run_session_with_stats(params, transport, clock).map(|(report, _)| report)
+}
+
+/// [`run_session`], additionally returning the control-loop cost
+/// counters the benchmark harness consumes (see [`EngineStats`]).
+pub fn run_session_with_stats(
+    params: EngineParams<'_>,
+    transport: &mut dyn Transport,
+    clock: &dyn Clock,
+) -> Result<(SessionReport, EngineStats)> {
     let EngineParams {
         download,
         behavior,
@@ -355,6 +406,17 @@ pub fn run_session(
     let mut res_free = clock.now();
 
     let mut target = status.set_target(controller.current());
+    // --- Slot-pool reconciliation state (see `ReconcileMode`). The
+    // engine is the status array's only writer, so RUNNING is always
+    // the prefix `0..target`; `drain_high` additionally covers slots
+    // above a freshly lowered target that still hold a connection,
+    // chunk, or in-flight fetch and must be wound down. `stripe_w` is
+    // the per-tick striping weight scratch (reused so a steady-state
+    // tick allocates nothing).
+    let reconcile = download.reconcile;
+    let mut drain_high = 0usize;
+    let mut stripe_w: Vec<f64> = Vec::with_capacity(mirror_count);
+    let mut stats = EngineStats::default();
     let start = clock.now();
     let mut trace = vec![(0.0, target)];
     let sample_dt = 1.0 / download.monitor_hz;
@@ -399,8 +461,33 @@ pub fn run_session(
         }
 
         // --- Reconcile worker slots against the status array. ---
-        for (i, slot) in slots.iter_mut().enumerate() {
-            let running = status.is_running(i);
+        // Batched mode walks only the live prefix + drain watermark;
+        // slots beyond `live` are provably in their default state
+        // (parked, disconnected, no chunk), so skipping them cannot
+        // change behaviour — the FullScan reference walks everything
+        // and reads the per-slot atomics, and `engine_tick.rs` holds
+        // the two to identical reports.
+        let live = match reconcile {
+            ReconcileMode::FullScan => capacity,
+            ReconcileMode::Batched => target.max(drain_high).min(capacity),
+        };
+        stats.ticks += 1;
+        stats.slots_scanned += live as u64;
+        // Striping weights are tick-constant (they depend only on board
+        // scores at `now`, not on connection counts): compute them once
+        // into the reused scratch so every pick below — including a
+        // mass-reconnect tick after a reset storm — allocates nothing.
+        match policy.strategy {
+            MirrorStrategy::WeightedStripe => {
+                board.weights_into(now, policy.stripe_floor, &mut stripe_w)
+            }
+            MirrorStrategy::Failover => stripe_w.clear(),
+        }
+        for (i, slot) in slots.iter_mut().enumerate().take(live) {
+            let running = match reconcile {
+                ReconcileMode::FullScan => status.is_running(i),
+                ReconcileMode::Batched => i < target,
+            };
             if running && !slot.connected {
                 // Bring the worker up on the mirror the strategy picks:
                 // the healthiest one (failover) or the most
@@ -408,11 +495,11 @@ pub fn run_session(
                 // per-mirror caps and due probes).
                 let pick = match policy.strategy {
                     MirrorStrategy::Failover => Some(board.pick_for_connect(now)),
-                    MirrorStrategy::WeightedStripe => board.pick_for_stripe(
+                    MirrorStrategy::WeightedStripe => board.pick_for_stripe_with(
                         now,
                         &mirror_conns,
                         policy.per_mirror_conns,
-                        policy.stripe_floor,
+                        &stripe_w,
                     ),
                 };
                 if let Some(mirror) = pick {
@@ -439,20 +526,24 @@ pub fn run_session(
                 }
             }
         }
+        // Shrink the drain watermark past slots that finished winding
+        // down (they are disconnected with no chunk and no fetch).
+        while drain_high > target {
+            let s = &slots[drain_high - 1];
+            if s.connected || s.in_flight || s.chunk.is_some() {
+                break;
+            }
+            drain_high -= 1;
+        }
 
         // --- Mirror rebalancing: idle slots drain off a collapsing
         // mirror (failover) or rebind toward the score-weighted
-        // allocation and due re-probes (striping).
+        // allocation and due re-probes (striping). `stripe_w` is the
+        // per-tick weight scratch computed above the reconcile pass.
         if mirror_count > 1 {
-            // Striping weights are tick-constant (they depend only on
-            // board state, not connection counts): compute them once
-            // here rather than per idle slot.
-            let stripe_w = match policy.strategy {
-                MirrorStrategy::WeightedStripe => board.weights(now, policy.stripe_floor),
-                MirrorStrategy::Failover => Vec::new(),
-            };
             let mut probe_released = false;
-            for (i, slot) in slots.iter_mut().enumerate() {
+            let mut probe_releases_this_tick = 0u32;
+            for (i, slot) in slots.iter_mut().enumerate().take(live) {
                 if !slot.connected || slot.in_flight || slot.chunk.is_some() {
                     continue;
                 }
@@ -470,6 +561,7 @@ pub fn run_session(
                             && mirror_conns[slot.mirror] >= 2
                             && board.probe_due(now, &mirror_conns).is_some();
                         probe_released |= probe;
+                        probe_releases_this_tick += probe as u32;
                         probe
                             || board.should_restripe(
                                 slot.mirror,
@@ -488,11 +580,18 @@ pub fn run_session(
                     // strategy's pick.
                 }
             }
+            stats.max_probe_releases_per_tick =
+                stats.max_probe_releases_per_tick.max(probe_releases_this_tick);
+            stats.probe_releases += probe_releases_this_tick as u64;
         }
 
         // --- Assign work to ready workers. ---
-        for (i, slot) in slots.iter_mut().enumerate() {
-            if !status.is_running(i) || slot.in_flight || !slot.connected {
+        for (i, slot) in slots.iter_mut().enumerate().take(live) {
+            let running = match reconcile {
+                ReconcileMode::FullScan => status.is_running(i),
+                ReconcileMode::Batched => i < target,
+            };
+            if !running || slot.in_flight || !slot.connected {
                 continue;
             }
             if !transport.is_ready(i) {
@@ -533,10 +632,21 @@ pub fn run_session(
         last_tick = now;
 
         // --- Account outcomes. ---
+        stats.transport_events += events.len() as u64;
         let mut had_fault = false;
         for ev in &events {
             match ev {
-                TransportEvent::Ready { .. } => {}
+                TransportEvent::Ready { slot: i } => {
+                    // Handshake complete: the connect→ready span is the
+                    // per-mirror RTT sample feeding latency-aware
+                    // striping (transports that never signal readiness
+                    // — the real driver's workers connect lazily —
+                    // simply leave the board RTT-neutral).
+                    let slot = &slots[*i];
+                    if slot.connected {
+                        board.note_rtt(slot.mirror, (now - slot.connected_at).max(0.0));
+                    }
+                }
                 TransportEvent::Completed { slot: i } => {
                     let slot = &mut slots[*i];
                     let chunk = slot
@@ -621,7 +731,10 @@ pub fn run_session(
 
         // --- Monitor sampling. ---
         if now >= next_sample {
-            let active = slots.iter().filter(|s| s.in_flight).count();
+            // In-flight slots are always below `live` (a fetch can only
+            // be issued on a running slot, and the drain watermark holds
+            // until it lands), so bounding the count scan is exact.
+            let active = slots[..live].iter().filter(|s| s.in_flight).count();
             let mbps = recorder.sample(now - start, active);
             window.push(mbps);
             next_sample += sample_dt;
@@ -629,7 +742,7 @@ pub fn run_session(
 
         // --- Probing optimizer loop (Algorithm 1 body). ---
         if now >= next_probe {
-            let stats = match runtime {
+            let window_stats = match runtime {
                 Some(rt) => window.aggregate_and_reset(rt)?,
                 None => window.aggregate_mirror_and_reset(),
             };
@@ -663,10 +776,16 @@ pub fn run_session(
             }
             let new_target = controller.on_probe(Probe {
                 concurrency: target as f64,
-                mbps: stats.mean_mbps,
+                mbps: window_stats.mean_mbps,
             })?;
             if new_target != target {
+                let old = target;
                 target = status.set_target(new_target);
+                if target < old {
+                    // Slots in [target, old) wind down over the next
+                    // ticks; keep them under the drain watermark.
+                    drain_high = drain_high.max(old);
+                }
                 trace.push((now - start, target));
             }
             // Baseline checkpoint cadence: once per probe interval.
@@ -719,7 +838,7 @@ pub fn run_session(
     let samples = recorder.samples();
     let timeline = per_second_bins(&samples);
     let total_bytes = recorder.total_bytes();
-    Ok(SessionReport {
+    let report = SessionReport {
         tool: behavior.name,
         duration_s: duration,
         total_bytes,
@@ -739,5 +858,6 @@ pub fn run_session(
         mirror_switches,
         completed,
         frontiers: sched.frontiers(),
-    })
+    };
+    Ok((report, stats))
 }

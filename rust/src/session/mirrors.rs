@@ -30,7 +30,10 @@
 //! The score is an EWMA of per-chunk goodput divided by a decaying
 //! failure penalty (connection resets and transient 5xx rejections both
 //! count — exactly the quantities [`crate::session::SessionReport`]
-//! already surfaces). [`MirrorBoard::concurrency_headroom`] and
+//! already surfaces) and a mild connect-RTT penalty ([`RTT_WEIGHT`]):
+//! bandwidth decides where bulk chunks go, while probe connections —
+//! which pay a whole handshake to move one chunk — prefer the
+//! lowest-RTT due mirror ([`MirrorBoard::probe_due`]). [`MirrorBoard::concurrency_headroom`] and
 //! [`MirrorBoard::fail_pressure`] condense the board into the aggregate
 //! health signal the concurrency controllers consume (see
 //! [`crate::optimizer::MirrorHealth`]). Everything is pure arithmetic
@@ -55,6 +58,18 @@ pub const REPROBE_INTERVAL_S: f64 = 20.0;
 /// EWMA step for per-chunk goodput samples.
 const EWMA_ALPHA: f64 = 0.3;
 
+/// EWMA step for connect-RTT samples.
+const RTT_ALPHA: f64 = 0.3;
+
+/// Latency-aware striping: the health score is divided by
+/// `1 + RTT_WEIGHT × rtt_s`. The weight is deliberately small — a
+/// 250 ms handshake costs ~3 % of score — so a high-RTT but
+/// high-bandwidth mirror still wins the bulk-chunk allocation on
+/// goodput, while *probe* connections (which pay the full handshake
+/// but move one chunk) prefer the low-RTT endpoint via
+/// [`MirrorBoard::probe_due`].
+pub const RTT_WEIGHT: f64 = 0.12;
+
 /// Failure-penalty decay time constant (s): a burst of rejects stops
 /// haunting a mirror ~a minute after it heals.
 const FAIL_DECAY_TAU_S: f64 = 20.0;
@@ -68,6 +83,9 @@ const UNPROBED_FAIL_LIMIT: f64 = 3.0;
 struct MirrorStat {
     /// EWMA of per-chunk goodput (Mbps); `None` until a chunk completes.
     ewma_mbps: Option<f64>,
+    /// EWMA of connect→ready handshake time (s); `None` until the
+    /// transport reports a readiness transition for this mirror.
+    ewma_rtt_s: Option<f64>,
     /// Exponentially decayed failure count.
     fail_weight: f64,
     /// Session time of the most recent failure (s).
@@ -129,6 +147,23 @@ impl MirrorBoard {
         });
     }
 
+    /// Record a connect→ready handshake time observed on mirror `m`
+    /// (the per-mirror RTT proxy; fed by the session engine whenever a
+    /// transport signals readiness). Folded into [`MirrorBoard::score`]
+    /// behind [`RTT_WEIGHT`].
+    pub fn note_rtt(&mut self, m: usize, rtt_s: f64) {
+        let s = &mut self.stats[m];
+        s.ewma_rtt_s = Some(match s.ewma_rtt_s {
+            Some(prev) => prev + RTT_ALPHA * (rtt_s - prev),
+            None => rtt_s,
+        });
+    }
+
+    /// Smoothed connect RTT of mirror `m` (s); `None` until observed.
+    pub fn rtt(&self, m: usize) -> Option<f64> {
+        self.stats[m].ewma_rtt_s
+    }
+
     /// A chunk failed (reset or transient rejection) on mirror `m`.
     pub fn on_failure(&mut self, m: usize, now_s: f64) {
         let s = &mut self.stats[m];
@@ -138,10 +173,13 @@ impl MirrorBoard {
     }
 
     /// Health score of mirror `m` (higher is better); `None` until the
-    /// mirror has completed at least one chunk.
+    /// mirror has completed at least one chunk. Goodput EWMA, divided
+    /// by the decaying failure penalty and a mild RTT penalty
+    /// ([`RTT_WEIGHT`]) — bandwidth dominates, latency tie-breaks.
     pub fn score(&self, m: usize, now_s: f64) -> Option<f64> {
         let s = &self.stats[m];
-        s.ewma_mbps.map(|e| e / (1.0 + s.decayed_fails(now_s)))
+        let rtt_penalty = 1.0 + RTT_WEIGHT * s.ewma_rtt_s.unwrap_or(0.0).max(0.0);
+        s.ewma_mbps.map(|e| e / (1.0 + s.decayed_fails(now_s)) / rtt_penalty)
     }
 
     /// Mirror a (re)connecting slot should bind to.
@@ -216,26 +254,50 @@ impl MirrorBoard {
     ///   weight **below** the floor — re-admission happens through the
     ///   re-probe path, not D'Hondt.
     pub fn weights(&self, now_s: f64, floor: f64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.stats.len());
+        self.weights_into(now_s, floor, &mut out);
+        out
+    }
+
+    /// [`MirrorBoard::weights`] into a caller-owned buffer — the
+    /// engine's per-tick path, so a steady-state control tick performs
+    /// no allocation.
+    pub fn weights_into(&self, now_s: f64, floor: f64, out: &mut Vec<f64>) {
+        out.clear();
         let best = (0..self.stats.len())
             .filter_map(|m| self.score(m, now_s))
             .fold(0.0f64, f64::max);
         let best = if best > 0.0 { best } else { 1.0 };
         let floor = floor.clamp(0.0, 0.5);
-        (0..self.stats.len())
-            .map(|m| match self.score(m, now_s) {
-                Some(sc) => sc.max(best * floor).max(best * 1e-3),
-                None if self.stats[m].decayed_fails(now_s) < UNPROBED_FAIL_LIMIT => best,
-                None => best * 1e-3,
-            })
-            .collect()
+        out.extend((0..self.stats.len()).map(|m| match self.score(m, now_s) {
+            Some(sc) => sc.max(best * floor).max(best * 1e-3),
+            None if self.stats[m].decayed_fails(now_s) < UNPROBED_FAIL_LIMIT => best,
+            None => best * 1e-3,
+        }));
     }
 
     /// Mirror `m` is due a probe connection: it has no live connections
     /// and none were attempted for [`REPROBE_INTERVAL_S`].
     /// `conns[m]` is the engine's live per-mirror connection count.
+    ///
+    /// When several mirrors are due at once the **lowest-RTT** one wins
+    /// (ties, and mirrors with no RTT estimate yet — treated as zero —
+    /// break toward the lowest index): a probe pays the full handshake
+    /// to move a single chunk, so latency dominates its cost in a way
+    /// it does not for bulk transfers.
     pub fn probe_due(&self, now_s: f64, conns: &[usize]) -> Option<usize> {
-        (0..self.stats.len())
-            .find(|&m| conns[m] == 0 && now_s - self.last_attempt_s[m] >= REPROBE_INTERVAL_S)
+        let mut best: Option<(usize, f64)> = None;
+        for m in 0..self.stats.len() {
+            if conns[m] != 0 || now_s - self.last_attempt_s[m] < REPROBE_INTERVAL_S {
+                continue;
+            }
+            let rtt = self.stats[m].ewma_rtt_s.unwrap_or(0.0);
+            match best {
+                Some((_, r)) if rtt >= r => {}
+                _ => best = Some((m, rtt)),
+            }
+        }
+        best.map(|(m, _)| m)
     }
 
     /// Striping pick: the mirror a (re)connecting slot should bind to,
@@ -254,19 +316,36 @@ impl MirrorBoard {
         cap: usize,
         floor: f64,
     ) -> Option<usize> {
+        self.pick_for_stripe_with(now_s, conns, cap, &self.weights(now_s, floor))
+    }
+
+    /// [`MirrorBoard::pick_for_stripe`] with a caller-supplied
+    /// [`MirrorBoard::weights`] vector. Weights are tick-constant (they
+    /// depend only on board scores at `now_s`, not on connection
+    /// counts), so the engine computes them once per control tick into
+    /// a reused scratch buffer and feeds every (re)connect pick from it
+    /// — after a mass disconnect the reconcile pass may reconnect many
+    /// slots in one tick, and recomputing (allocating) weights per pick
+    /// would undo the allocation-free tick.
+    pub fn pick_for_stripe_with(
+        &self,
+        now_s: f64,
+        conns: &[usize],
+        cap: usize,
+        weights: &[f64],
+    ) -> Option<usize> {
         let open = |m: usize| cap == 0 || conns[m] < cap;
         if let Some(m) = self.probe_due(now_s, conns) {
             if open(m) {
                 return Some(m);
             }
         }
-        let w = self.weights(now_s, floor);
         let mut best: Option<(usize, f64)> = None;
         for m in 0..self.stats.len() {
             if !open(m) {
                 continue;
             }
-            let gain = w[m] / (conns[m] + 1) as f64;
+            let gain = weights[m] / (conns[m] + 1) as f64;
             match best {
                 Some((_, g)) if gain <= g => {}
                 _ => best = Some((m, gain)),
@@ -494,6 +573,74 @@ mod tests {
         assert!(b.fail_pressure(1.0) == 0.0);
         b.on_failure(0, 1.0);
         assert!(b.fail_pressure(1.0) > 0.0);
+    }
+
+    #[test]
+    fn rtt_penalty_is_mild_so_bandwidth_still_wins_bulk() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 12_500_000, 1.0); // 100 Mbps, but slow handshake
+        b.on_success(1, 5_000_000, 1.0); // 40 Mbps, snappy handshake
+        b.note_rtt(0, 1.0);
+        b.note_rtt(1, 0.05);
+        let s0 = b.score(0, 1.0).unwrap();
+        let s1 = b.score(1, 1.0).unwrap();
+        assert!(s0 > s1 * 2.0, "RTT must only tie-break, not dominate: {s0} vs {s1}");
+        // D'Hondt still allocates the bulk share to the fat pipe.
+        b.note_connect(0, 0.0);
+        b.note_connect(1, 0.0);
+        let mut conns = vec![0usize; 2];
+        for _ in 0..8 {
+            let m = b.pick_for_stripe(1.0, &conns, 0, 0.05).unwrap();
+            conns[m] += 1;
+        }
+        assert!(
+            conns[0] > conns[1],
+            "high-RTT/high-bandwidth mirror lost its bulk share: {conns:?}"
+        );
+    }
+
+    #[test]
+    fn probes_prefer_the_low_rtt_mirror() {
+        let mut b = MirrorBoard::new(2);
+        b.on_success(0, 12_500_000, 1.0);
+        b.on_success(1, 5_000_000, 1.0);
+        b.note_rtt(0, 1.0);
+        b.note_rtt(1, 0.05);
+        // Both mirrors drained and past the re-probe interval: the
+        // low-RTT endpoint gets the probe despite its lower bandwidth.
+        let t = REPROBE_INTERVAL_S + 5.0;
+        assert_eq!(b.probe_due(t, &[0, 0]), Some(1));
+        // With the low-RTT mirror busy, the other is still due.
+        assert_eq!(b.probe_due(t, &[0, 2]), Some(0));
+        // No RTT estimates at all: ties break to the lowest index (the
+        // pre-RTT behaviour).
+        let fresh = MirrorBoard::new(3);
+        assert_eq!(fresh.probe_due(t, &[0, 0, 0]), Some(0));
+    }
+
+    #[test]
+    fn rtt_ewma_smooths_samples() {
+        let mut b = MirrorBoard::new(1);
+        assert_eq!(b.rtt(0), None);
+        b.note_rtt(0, 0.2);
+        b.note_rtt(0, 0.4);
+        let r = b.rtt(0).unwrap();
+        assert!(r > 0.2 && r < 0.4, "EWMA should land between samples: {r}");
+    }
+
+    #[test]
+    fn weights_into_matches_weights_without_allocating_growth() {
+        let mut b = MirrorBoard::new(3);
+        b.on_success(0, 1_250_000, 1.0);
+        b.on_success(2, 2_500_000, 1.0);
+        let expect = b.weights(5.0, 0.05);
+        let mut buf = Vec::with_capacity(3);
+        b.weights_into(5.0, 0.05, &mut buf);
+        assert_eq!(buf, expect);
+        // Reuse keeps the same capacity.
+        let cap = buf.capacity();
+        b.weights_into(9.0, 0.05, &mut buf);
+        assert_eq!(buf.capacity(), cap);
     }
 
     #[test]

@@ -29,7 +29,9 @@ pub mod mirrors;
 pub mod real;
 pub mod sim;
 
-pub use engine::{Clock, EngineParams, FailureClass, ToolBehavior, Transport, TransportEvent};
+pub use engine::{
+    Clock, EngineParams, EngineStats, FailureClass, ToolBehavior, Transport, TransportEvent,
+};
 pub use mirrors::MirrorBoard;
 pub use sim::{run_simulated_download, SimSession, SimSessionParams};
 

@@ -282,6 +282,16 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
     if records.is_empty() {
         return Err(Error::Session("no files to download".into()));
     }
+    // The real driver is thread-per-slot: every slot gets an OS worker
+    // thread up front. The simulated engine scales to thousands of
+    // slots (they are plain structs there), but eagerly reserving that
+    // many thread stacks here would be a config footgun — refuse it.
+    if download.optimizer.c_max > 512 {
+        return Err(Error::Config(format!(
+            "c_max {} too large for the real driver (max 512: one OS thread per slot)",
+            download.optimizer.c_max
+        )));
+    }
 
     // Resume: pick up a prior journal's frontiers when writing to a
     // directory; files already (partially) on disk are not re-fetched.

@@ -21,11 +21,12 @@ use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
 use crate::coordinator::scheduler::Chunk;
 use crate::metrics::recorder::ThroughputRecorder;
-use crate::netsim::{FlowId, NetSim, NetSimConfig};
+use crate::netsim::{FlowId, NetSim, NetSimConfig, StepReport};
 use crate::optimizer::ConcurrencyController;
 use crate::runtime::XlaRuntime;
 use crate::session::engine::{
-    run_session, Clock, EngineParams, FailureClass, Transport, TransportEvent,
+    run_session_with_stats, Clock, EngineParams, EngineStats, FailureClass, Transport,
+    TransportEvent,
 };
 use crate::session::SessionReport;
 use crate::{Error, Result};
@@ -67,6 +68,9 @@ pub struct SimTransport {
     /// Per-mirror connection cap (0 = unlimited), mirrored into the
     /// simulator so the flow table enforces it too.
     per_mirror_conns: usize,
+    /// Reused step-report buffer ([`NetSim::step_into`]) so polling the
+    /// simulator allocates nothing in steady state.
+    scratch: StepReport,
 }
 
 impl SimTransport {
@@ -89,6 +93,7 @@ impl SimTransport {
             recorder,
             clock,
             per_mirror_conns,
+            scratch: StepReport::default(),
         })
     }
 }
@@ -131,9 +136,9 @@ impl Transport for SimTransport {
     }
 
     fn poll(&mut self, events: &mut Vec<TransportEvent>) -> Result<()> {
-        let rep = self.sim.step(None);
-        self.clock.advance_to(rep.now_s);
-        for ev in &rep.events {
+        self.sim.step_into(None, &mut self.scratch);
+        self.clock.advance_to(self.scratch.now_s);
+        for ev in &self.scratch.events {
             let Some(slot) = self.flows.iter().position(|f| *f == Some(ev.id)) else {
                 continue; // flow already released by the engine
             };
@@ -226,6 +231,13 @@ impl<'a> SimSession<'a> {
 
     /// Run to completion (or checkpoint); returns the report.
     pub fn run(self) -> Result<SessionReport> {
+        self.run_with_stats().map(|(report, _)| report)
+    }
+
+    /// [`SimSession::run`], additionally returning the engine's
+    /// control-loop cost counters (the `fastbiodl bench` measurement
+    /// path; see [`EngineStats`]).
+    pub fn run_with_stats(self) -> Result<(SessionReport, EngineStats)> {
         let SimSession {
             params,
             done_prefix,
@@ -241,7 +253,7 @@ impl<'a> SimSession<'a> {
             recorder.clone(),
             clock.clone(),
         )?;
-        run_session(
+        run_session_with_stats(
             EngineParams {
                 download: params.download,
                 behavior: params.behavior,

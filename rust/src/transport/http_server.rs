@@ -79,6 +79,17 @@ pub struct ThrottleConfig {
     /// Budget of mid-body drops to inject server-wide before the fault
     /// "heals" (with `fault_drop_after_bytes > 0`).
     pub fault_drop_count: usize,
+    /// Optional active window for the `fault_drop_*` knobs, in seconds
+    /// of server uptime: with `fault_drop_window_s > 0`, mid-body drops
+    /// are only injected while
+    /// `uptime ∈ [fault_drop_window_start_s, start + window_s)` — the
+    /// real-socket counterpart of the simulator's time-windowed
+    /// [`crate::netsim::FaultKind`] `MidBodyDrop`. The budget still
+    /// applies inside the window. `0` (the default) keeps the original
+    /// budget-only behaviour: drops can fire at any time.
+    pub fault_drop_window_start_s: f64,
+    /// Window length (s); see `fault_drop_window_start_s`.
+    pub fault_drop_window_s: f64,
     /// Scheduled 5xx / added-latency windows over server uptime.
     pub fault_windows: Vec<ServerFaultWindow>,
     /// Seed for the per-request 503 draws inside `fault_windows`.
@@ -94,6 +105,8 @@ impl Default for ThrottleConfig {
             max_connections: 64,
             fault_drop_after_bytes: 0,
             fault_drop_count: 0,
+            fault_drop_window_start_s: 0.0,
+            fault_drop_window_s: 0.0,
             fault_windows: Vec::new(),
             fault_seed: 0,
         }
@@ -491,8 +504,17 @@ fn serve_connection(
                 return Ok(());
             }
             // Fault injection: abort the connection mid-body while the
-            // drop budget lasts (the client observes a short body).
-            if shared.throttle.fault_drop_after_bytes > 0
+            // drop budget lasts (the client observes a short body) and,
+            // when a drop window is configured, only inside it.
+            let drop_window_open = if shared.throttle.fault_drop_window_s <= 0.0 {
+                true
+            } else {
+                let start = shared.throttle.fault_drop_window_start_s;
+                let uptime = shared.started.elapsed().as_secs_f64();
+                uptime >= start && uptime < start + shared.throttle.fault_drop_window_s
+            };
+            if drop_window_open
+                && shared.throttle.fault_drop_after_bytes > 0
                 && sent_this_response >= shared.throttle.fault_drop_after_bytes
                 && shared.faults_injected.load(Ordering::Relaxed)
                     < shared.throttle.fault_drop_count

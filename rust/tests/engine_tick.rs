@@ -1,0 +1,286 @@
+//! Engine control-loop scale-out suite:
+//!
+//! * **Reconciliation equivalence** — the batched (prefix + drain
+//!   watermark) slot reconciliation must produce identical slot
+//!   assignments and byte-for-byte identical `SessionReport`s to the
+//!   naive full-scan reference across random fault schedules, mirror
+//!   counts, and pool sizes up to `c_max = 256`.
+//! * **Probe-release invariant** — the striping rebalancer frees at
+//!   most one probe slot per tick (PR 3's probe-stampede fix), pinned
+//!   here at `c_max = 256` so the reconciliation rewrite can't silently
+//!   re-open the stampede path.
+//! * **Directional ns/tick win** — the batched engine is measurably
+//!   faster than the full scan on the Amplicon-Digester 43-file case at
+//!   `c_max = 256`, measured by the `bench` harness itself.
+//!
+//! Runtime-free: all controllers run their pure-Rust mirrors.
+
+mod common;
+
+use common::{fault_download_cfg, fault_netsim, mirrored_records};
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::bench::{run_case, CaseSpec};
+use fastbiodl::config::{OptimizerKind, ReconcileMode};
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::netsim::{FaultEvent, FaultKind, FaultProfile, FaultSchedule};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::{EngineStats, SessionReport};
+use fastbiodl::util::prng::Prng;
+use fastbiodl::util::prop::{check, Config};
+
+/// Arbitrary (validated) fault schedule, including the windowed
+/// mid-body drop class.
+fn random_schedule(g: &mut Prng) -> FaultSchedule {
+    let n = g.range_u64(0, 10) as usize;
+    let mut events = Vec::new();
+    for _ in 0..n {
+        let at_s = g.range_f64(0.5, 60.0);
+        let kind = match g.below(8) {
+            0 => FaultKind::ConnectionReset {
+                count: 1 + g.below(3) as usize,
+            },
+            1 => FaultKind::Stall {
+                frac: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 4.0),
+            },
+            2 => FaultKind::ServerError {
+                reject_prob: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 5.0),
+            },
+            3 => FaultKind::RateCollapse {
+                factor: g.range_f64(0.1, 1.0),
+                duration_s: g.range_f64(1.0, 8.0),
+            },
+            4 => FaultKind::FlashCrowd {
+                extra_mbps: g.range_f64(5.0, 45.0),
+                duration_s: g.range_f64(1.0, 8.0),
+            },
+            5 => FaultKind::SlowMirror {
+                mirror: g.below(2) as usize,
+                factor: g.range_f64(0.05, 1.0),
+                duration_s: g.range_f64(1.0, 10.0),
+            },
+            6 => FaultKind::MidBodyDrop {
+                after_bytes: g.range_f64(50_000.0, 800_000.0),
+                frac: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 6.0),
+            },
+            _ => FaultKind::Brownout {
+                duration_s: g.range_f64(0.5, 4.0),
+            },
+        };
+        events.push(FaultEvent { at_s, kind });
+    }
+    FaultSchedule::new(events)
+}
+
+/// One simulated session under the given reconcile mode; everything
+/// else (tool name included) is held identical so reports from the two
+/// modes must match byte for byte.
+fn run_mode(
+    reconcile: ReconcileMode,
+    c_max: usize,
+    mirrors: usize,
+    faults: FaultSchedule,
+    sizes: &[u64],
+    seed: u64,
+) -> (SessionReport, EngineStats) {
+    let mut cfg = fault_download_cfg(OptimizerKind::GradientDescent, 2_400.0);
+    cfg.optimizer.c_max = c_max;
+    cfg.reconcile = reconcile;
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    SimSession::new(SimSessionParams {
+        behavior: ToolBehavior {
+            name: "engine-tick".into(),
+            mode: SchedulerMode::Chunked {
+                chunk_bytes: cfg.chunk_bytes,
+                max_open_files: cfg.max_open_files,
+            },
+            keep_alive: true,
+            resolution: ResolutionCost::Batch { latency_s: 0.5 },
+        },
+        download: cfg,
+        netsim: fault_netsim(faults),
+        records: mirrored_records("SRRT", sizes, mirrors),
+        controller,
+        runtime: None,
+        seed,
+    })
+    .run_with_stats()
+    .unwrap()
+}
+
+#[test]
+fn batched_reconciliation_matches_full_scan_reference() {
+    check(
+        Config {
+            cases: 12,
+            ..Config::default()
+        },
+        "batched == full-scan reports across random fault schedules",
+        |g| {
+            let n_files = g.range_u64(1, 3) as usize;
+            let sizes: Vec<u64> = (0..n_files)
+                .map(|_| g.range_u64(300_000, 4_000_000))
+                .collect();
+            let mirrors = 1 + g.below(3) as usize;
+            let c_max = [8usize, 32, 256][g.below(3) as usize];
+            (sizes, mirrors, c_max, g.next_u64(), g.next_u64())
+        },
+        |(sizes, mirrors, c_max, sched_seed, sim_seed)| {
+            let faults = random_schedule(&mut Prng::new(*sched_seed));
+            faults.validate()?;
+            let (batched, bs) = run_mode(
+                ReconcileMode::Batched,
+                *c_max,
+                *mirrors,
+                faults.clone(),
+                sizes,
+                *sim_seed,
+            );
+            let (full, fs) = run_mode(
+                ReconcileMode::FullScan,
+                *c_max,
+                *mirrors,
+                faults,
+                sizes,
+                *sim_seed,
+            );
+            // The whole report — samples, timelines, traces, mirror
+            // attribution, retry accounting, f64 bit patterns via Debug
+            // formatting — must be identical.
+            let (a, b) = (format!("{batched:?}"), format!("{full:?}"));
+            if a != b {
+                return Err(format!(
+                    "reports diverged (c_max {c_max}, {mirrors} mirrors):\n  batched: {}\n  full:    {}",
+                    batched.summary(),
+                    full.summary()
+                ));
+            }
+            if bs.ticks != fs.ticks {
+                return Err(format!("tick counts diverged: {} vs {}", bs.ticks, fs.ticks));
+            }
+            if bs.probe_releases != fs.probe_releases {
+                return Err(format!(
+                    "probe-release counts diverged: {} vs {}",
+                    bs.probe_releases, fs.probe_releases
+                ));
+            }
+            if bs.slots_scanned > fs.slots_scanned {
+                return Err(format!(
+                    "batched scanned more slots ({}) than the full scan ({})",
+                    bs.slots_scanned, fs.slots_scanned
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Regression pin for the PR 3 probe-stampede fix at `c_max = 256`: a
+/// three-mirror topology where mirror 0 collapses hard (so striping
+/// drains it to zero connections and the re-probe path fires
+/// repeatedly) must never release more than one probe slot per tick.
+#[test]
+fn probe_release_stays_single_per_tick_at_c_max_256() {
+    let faults = FaultSchedule::new(vec![FaultEvent {
+        at_s: 2.0,
+        kind: FaultKind::SlowMirror {
+            mirror: 0,
+            factor: 0.05,
+            duration_s: 100_000.0,
+        },
+    }]);
+    let sizes = [100_000_000u64, 100_000_000];
+    let (report, stats) = run_mode(ReconcileMode::Batched, 256, 3, faults, &sizes, 99);
+    assert!(report.completed, "session did not complete");
+    assert!(
+        stats.probe_releases >= 1,
+        "re-probe path never ran — the invariant was not exercised \
+         (stats: {stats:?}, report: {})",
+        report.summary()
+    );
+    assert!(
+        stats.max_probe_releases_per_tick <= 1,
+        "probe stampede: {} probe slots released in one tick",
+        stats.max_probe_releases_per_tick
+    );
+}
+
+/// The acceptance measurement, run through the bench harness itself:
+/// batched reconciliation beats the full-scan reference on the
+/// Amplicon-Digester (43 files) suite case at `c_max = 256` — exactly,
+/// on the deterministic scan counter, and directionally on wall-clock
+/// ns/tick (medians of three runs; both modes measured in the same
+/// process so machine noise hits both).
+#[test]
+fn batched_reconciliation_improves_ns_per_tick_at_c_max_256() {
+    let spec = CaseSpec {
+        dataset: "Amplicon-Digester",
+        profile: FaultProfile::None,
+        optimizer: OptimizerKind::GradientDescent,
+        c_max: 256,
+    };
+    let batched = run_case(&spec, 11, ReconcileMode::Batched).unwrap();
+    let full = run_case(&spec, 11, ReconcileMode::FullScan).unwrap();
+
+    // SessionReport parity re-checked through the harness fields.
+    assert_eq!(batched.total_bytes, full.total_bytes);
+    assert_eq!(batched.duration_s.to_bits(), full.duration_s.to_bits());
+    assert_eq!(batched.ticks, full.ticks);
+    assert_eq!(batched.chunk_retries, full.chunk_retries);
+
+    // Deterministic scan-cost win: the full scan walks all 256 slots
+    // every tick; the batched walk follows the live prefix.
+    assert!(
+        (full.slots_scanned_per_tick - 256.0).abs() < 1e-9,
+        "full scan should touch every slot per tick: {}",
+        full.slots_scanned_per_tick
+    );
+    assert!(
+        batched.slots_scanned_per_tick < full.slots_scanned_per_tick / 2.0,
+        "batched reconciliation should scan far fewer slots: {:.1} vs {:.1}",
+        batched.slots_scanned_per_tick,
+        full.slots_scanned_per_tick
+    );
+
+    // Directional wall-clock win. Minimum of five runs per mode: the
+    // minimum is the least contaminated by scheduler noise from
+    // concurrently running test suites, so this stays stable on loaded
+    // CI runners (the deterministic scan assertion above is the hard
+    // guarantee; this checks the scan reduction actually buys time).
+    let best_of = |mode: ReconcileMode| -> f64 {
+        (0..5)
+            .map(|_| run_case(&spec, 11, mode).unwrap().ns_per_tick)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let batched_ns = best_of(ReconcileMode::Batched);
+    let full_ns = best_of(ReconcileMode::FullScan);
+    println!("ns/tick: batched {batched_ns:.0} vs full-scan {full_ns:.0}");
+    assert!(
+        batched_ns < full_ns,
+        "batched engine should improve ns/tick at c_max=256: {batched_ns:.0} vs {full_ns:.0}"
+    );
+}
+
+/// The "allocation-free steady state" claim, measured per tick on the
+/// benign Amplicon case: amortized Vec growth in the monitor/recorder
+/// plus probe bookkeeping are all that remains, far below one
+/// allocation per tick on average.
+#[test]
+fn batched_steady_state_tick_is_nearly_allocation_free() {
+    let spec = CaseSpec {
+        dataset: "Amplicon-Digester",
+        profile: FaultProfile::None,
+        optimizer: OptimizerKind::GradientDescent,
+        c_max: 64,
+    };
+    let case = run_case(&spec, 5, ReconcileMode::Batched).unwrap();
+    assert!(case.ticks > 200, "too few ticks to average: {}", case.ticks);
+    assert!(
+        case.allocs_per_tick < 3.0,
+        "steady-state tick allocates too much: {:.2} allocs/tick",
+        case.allocs_per_tick
+    );
+}

@@ -211,6 +211,43 @@ fn striping_replays_deterministically() {
     );
 }
 
+/// Latency-aware striping (per-mirror RTT EWMA folded into the board
+/// score behind a small weight): a transcontinental mirror with a slow
+/// handshake but a fat pipe must still win the bulk-chunk allocation,
+/// while probe connections — which pay a full handshake to move one
+/// chunk — prefer the low-RTT endpoint.
+#[test]
+fn rtt_tiebreaks_probes_but_bandwidth_keeps_the_bulk_share() {
+    use fastbiodl::session::mirrors::REPROBE_INTERVAL_S;
+    use fastbiodl::session::MirrorBoard;
+
+    let mut b = MirrorBoard::new(2);
+    // Mirror 0: 100 Mbps, 0.9 s handshake. Mirror 1: 20 Mbps, 40 ms.
+    b.on_success(0, 12_500_000, 1.0);
+    b.note_rtt(0, 0.9);
+    b.on_success(1, 2_500_000, 1.0);
+    b.note_rtt(1, 0.04);
+    b.note_connect(0, 0.0);
+    b.note_connect(1, 0.0);
+
+    // Bulk: D'Hondt still follows bandwidth, not latency.
+    let mut conns = vec![0usize; 2];
+    for _ in 0..10 {
+        let m = b.pick_for_stripe(1.0, &conns, 0, 0.05).unwrap();
+        conns[m] += 1;
+    }
+    assert!(
+        conns[0] >= conns[1] * 2,
+        "high-RTT/high-bandwidth mirror must keep the bulk share: {conns:?}"
+    );
+
+    // Probes: both mirrors drained and due — the low-RTT one is probed
+    // first even though its weight is a fraction of the other's.
+    let t = REPROBE_INTERVAL_S + 1.0;
+    assert_eq!(b.probe_due(t, &[0, 0]), Some(1));
+    assert_eq!(b.pick_for_stripe(t, &[0, 0], 0, 0.05), Some(1));
+}
+
 /// Re-admission: a mirror collapses, loses most of its share, then
 /// heals mid-run; striping keeps re-measuring it (through its
 /// floor-weighted residual connections, and through the periodic

@@ -34,7 +34,7 @@ fn random_schedule(g: &mut Prng) -> FaultSchedule {
     let mut events = Vec::new();
     for _ in 0..n {
         let at_s = g.range_f64(0.5, 90.0);
-        let kind = match g.below(7) {
+        let kind = match g.below(8) {
             0 => FaultKind::ConnectionReset {
                 count: 1 + g.below(3) as usize,
             },
@@ -58,6 +58,11 @@ fn random_schedule(g: &mut Prng) -> FaultSchedule {
                 mirror: g.below(2) as usize,
                 factor: g.range_f64(0.05, 1.0),
                 duration_s: g.range_f64(1.0, 10.0),
+            },
+            6 => FaultKind::MidBodyDrop {
+                after_bytes: g.range_f64(50_000.0, 2_000_000.0),
+                frac: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 8.0),
             },
             _ => FaultKind::Brownout {
                 duration_s: g.range_f64(0.5, 6.0),
@@ -236,6 +241,50 @@ fn checkpoint_journal_resume_completes_under_faults() {
                 None,
             )?;
             assert_invariants(&second, sizes, resumed)
+        },
+    );
+}
+
+#[test]
+fn windowed_mid_body_drops_recover_and_complete() {
+    // A deterministic-frac drop window truncates *every* response that
+    // crosses 300 KB while it is active: no 1 MiB chunk can complete
+    // inside the window, so the engine must retry through it (bytes
+    // already delivered stand in the recorder, the scheduler requeues
+    // whole chunks) and finish once the window lifts.
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        "windowed mid-body drops never strand a transfer",
+        |g| {
+            let sizes = vec![g.range_u64(3_000_000, 8_000_000)];
+            (sizes, g.next_u64())
+        },
+        |(sizes, sim_seed)| {
+            // Window opens immediately and outlives the first chunk
+            // wave, so every early crossing is guaranteed to die.
+            let events = vec![FaultEvent {
+                at_s: 0.0,
+                kind: FaultKind::MidBodyDrop {
+                    after_bytes: 300_000.0,
+                    frac: 1.0,
+                    duration_s: 10.0,
+                },
+            }];
+            let rep = run_session(
+                OptimizerKind::Fixed,
+                FaultSchedule::new(events),
+                sizes,
+                *sim_seed,
+                None,
+                None,
+            )?;
+            if rep.connection_resets == 0 {
+                return Err("drop window injected no resets".into());
+            }
+            assert_invariants(&rep, sizes, 0)
         },
     );
 }

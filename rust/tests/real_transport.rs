@@ -212,6 +212,68 @@ fn real_session_recovers_from_mid_transfer_disconnects() {
 }
 
 #[test]
+fn drop_window_outside_its_span_suppresses_mid_body_drops() {
+    // Windowed variant of the `fault_drop_*` knobs (the real-socket
+    // analogue of the simulator's time-windowed MidBodyDrop): the same
+    // aggressive drop budget as the disconnect test above, but gated
+    // to a window that opens an hour into server uptime — so the whole
+    // transfer runs while the window is closed and **no** drop may
+    // fire. Deterministic (no race on the window edge), and it
+    // exercises the window-gating branch the budget-only test never
+    // reaches. Runtime-free.
+    use fastbiodl::config::OptimizerKind;
+
+    let file = ServedFile {
+        path: "/vol1/SRRWIN".into(),
+        bytes: 3_000_000,
+        seed: 66,
+    };
+    let server = serve(
+        vec![file.clone()],
+        ThrottleConfig {
+            fault_drop_after_bytes: 300_000,
+            fault_drop_count: 1000,
+            fault_drop_window_start_s: 3_600.0,
+            fault_drop_window_s: 60.0,
+            ..ThrottleConfig::default()
+        },
+    );
+    let records = vec![RunRecord::new(
+        "SRRWIN",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+
+    let mut cfg = DownloadConfig::default();
+    cfg.chunk_bytes = 1024 * 1024;
+    cfg.optimizer.kind = OptimizerKind::Fixed;
+    cfg.optimizer.fixed_level = 2;
+    cfg.optimizer.c_init = 2;
+    cfg.optimizer.c_max = 4;
+    cfg.optimizer.probe_interval_s = 0.5;
+    cfg.monitor_hz = 10.0;
+    cfg.timeout_s = 60.0;
+
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: None,
+        sink: Sink::Discard,
+        name: "drop-window-test".into(),
+    })
+    .unwrap();
+
+    println!("closed-window run: {}", report.summary());
+    assert!(report.completed);
+    assert_eq!(report.total_bytes, file.bytes);
+    assert_eq!(server.faults_injected(), 0, "closed window must gate the drop budget");
+    assert_eq!(report.connection_resets, 0);
+}
+
+#[test]
 fn real_session_rides_out_server_5xx_windows() {
     // The loopback mirror replays a scheduled 5xx window (the
     // real-transport analogue of the simulator's ServerError fault):
