@@ -37,14 +37,16 @@ use std::time::Instant;
 use crate::config::{OptimizerKind, ReconcileMode};
 use crate::experiments::scenario;
 use crate::netsim::FaultProfile;
-use crate::optimizer::build_controller;
+use crate::optimizer::build_controller_with;
 use crate::session::sim::{SimSession, SimSessionParams, ToolBehavior};
 use crate::util::json::{obj, Json};
 use crate::{Error, Result};
 
 /// Schema tag written into every report; bump on breaking layout
 /// changes so baseline diffing fails loudly instead of silently.
-pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v1";
+/// v2 added the control-plane signal fields (`retry_rate`,
+/// `reject_rate`, `chunks_scaled`) to the `det` record.
+pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v2";
 
 /// Virtual-time cap per case (s): hostile cells (brownouts at
 /// `c_max = 16`) would otherwise run long; every case reports goodput
@@ -189,6 +191,15 @@ pub struct CaseResult {
     pub probes: u64,
     pub files_completed: u64,
     pub completed: bool,
+    /// Chunk requeues per simulated second (the control plane's
+    /// `retry_rate` signal, averaged over the whole case).
+    pub retry_rate: f64,
+    /// Server rejections per simulated second (the `reject_rate`
+    /// signal, averaged over the whole case).
+    pub reject_rate: f64,
+    /// Chunks cut below full size by adaptive chunk sizing (0 with the
+    /// default fault-blind config the grid runs under).
+    pub chunks_scaled: u64,
     // --- Timing (varies run to run): ---
     pub wall_s: f64,
     pub ticks: u64,
@@ -199,23 +210,52 @@ pub struct CaseResult {
     pub max_probe_releases_per_tick: u64,
 }
 
+/// Gradient-descent hyperparameter overrides for a sweep cell (see
+/// [`sweep_grid`]). `None` in [`run_case_tuned`] keeps the scenario's
+/// calibrated defaults.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GdTune {
+    /// Utility penalty coefficient `k`.
+    pub k: f64,
+    /// Gradient-descent learning rate.
+    pub lr: f64,
+    /// Probing interval (s).
+    pub probe_interval_s: f64,
+}
+
 /// Run one grid cell to completion (or the [`CASE_HORIZON_S`] cap).
 ///
 /// Runtime-free by construction (pure-Rust mirror controllers), so the
 /// harness produces identical simulated fields on any machine,
 /// including bare checkouts without compiled XLA artifacts.
 pub fn run_case(spec: &CaseSpec, seed: u64, reconcile: ReconcileMode) -> Result<CaseResult> {
+    run_case_tuned(spec, seed, reconcile, None)
+}
+
+/// [`run_case`] with optional GD hyperparameter overrides — the
+/// hostile-profile sweep's measurement path.
+pub fn run_case_tuned(
+    spec: &CaseSpec,
+    seed: u64,
+    reconcile: ReconcileMode,
+    tune: Option<&GdTune>,
+) -> Result<CaseResult> {
     let mut sc = scenario::colab_dataset(spec.dataset, seed)?;
     sc.download.optimizer.kind = spec.optimizer;
     sc.download.optimizer.c_max = spec.c_max;
     if spec.optimizer == OptimizerKind::Fixed {
         sc.download.optimizer.c_init = sc.download.optimizer.fixed_level;
     }
+    if let Some(t) = tune {
+        sc.download.optimizer.k = t.k;
+        sc.download.optimizer.lr = t.lr;
+        sc.download.optimizer.probe_interval_s = t.probe_interval_s;
+    }
     sc.download.reconcile = reconcile;
     if spec.profile != FaultProfile::None {
         sc = sc.with_fault_profile(spec.profile, seed, CASE_HORIZON_S);
     }
-    let controller = build_controller(&sc.download.optimizer, None)?;
+    let controller = build_controller_with(&sc.download.optimizer, &sc.download.control, None)?;
     let behavior = ToolBehavior::fastbiodl(&sc.download);
     let session = SimSession::new(SimSessionParams {
         download: sc.download,
@@ -251,6 +291,9 @@ pub fn run_case(spec: &CaseSpec, seed: u64, reconcile: ReconcileMode) -> Result<
         probes: report.probes as u64,
         files_completed: report.files_completed as u64,
         completed: report.completed,
+        retry_rate: report.chunk_retries as f64 / report.duration_s.max(f64::EPSILON),
+        reject_rate: report.server_rejects as f64 / report.duration_s.max(f64::EPSILON),
+        chunks_scaled: stats.chunks_scaled,
         wall_s,
         ticks: stats.ticks,
         ns_per_tick: wall_s * 1e9 / ticks as f64,
@@ -314,6 +357,9 @@ impl BenchReport {
                             ("probes", Json::Num(c.probes as f64)),
                             ("files_completed", Json::Num(c.files_completed as f64)),
                             ("completed", Json::Bool(c.completed)),
+                            ("retry_rate", Json::Num(c.retry_rate)),
+                            ("reject_rate", Json::Num(c.reject_rate)),
+                            ("chunks_scaled", Json::Num(c.chunks_scaled as f64)),
                         ]),
                     ),
                     (
@@ -390,6 +436,9 @@ impl BenchReport {
                 probes: req_u64(det, "probes")?,
                 files_completed: req_u64(det, "files_completed")?,
                 completed: matches!(*det.require("completed")?, Json::Bool(true)),
+                retry_rate: req_f64(det, "retry_rate")?,
+                reject_rate: req_f64(det, "reject_rate")?,
+                chunks_scaled: req_u64(det, "chunks_scaled")?,
                 wall_s: req_f64(timing, "wall_s")?,
                 ticks: req_u64(timing, "ticks")?,
                 ns_per_tick: req_f64(timing, "ns_per_tick")?,
@@ -464,6 +513,7 @@ pub fn diff(current: &BenchReport, baseline: &BenchReport, tolerance: f64) -> Ve
                 || cur.probes != base.probes
                 || cur.files_completed != base.files_completed
                 || cur.completed != base.completed
+                || cur.chunks_scaled != base.chunks_scaled
                 || (cur.goodput_mbps - base.goodput_mbps).abs() > base.goodput_mbps.abs() * 1e-9;
             if det_drift {
                 out.push(Regression {
@@ -499,6 +549,161 @@ pub fn diff(current: &BenchReport, baseline: &BenchReport, tolerance: f64) -> Ve
     out
 }
 
+// --- Hostile-profile hyperparameter sweep (`fastbiodl bench --sweep`).
+
+/// Hostile profiles covered by the GD hyperparameter sweep (the
+/// ROADMAP tuning item: the GD defaults were tuned on benign
+/// networks).
+pub const SWEEP_PROFILES: [FaultProfile; 3] = [
+    FaultProfile::SlowMirror,
+    FaultProfile::Brownout,
+    FaultProfile::FlashCrowd,
+];
+
+/// Utility-penalty grid of the sweep (Table 1's candidates).
+pub const SWEEP_KS: [f64; 3] = [1.01, 1.02, 1.05];
+
+/// Learning-rate grid of the sweep (half / default / double).
+pub const SWEEP_LRS: [f64; 3] = [1.5, 3.0, 6.0];
+
+/// Probe-interval grid of the sweep (s): the paper's 5 s evaluation
+/// cadence vs a twice-as-reactive controller.
+pub const SWEEP_PROBE_INTERVALS: [f64; 2] = [2.5, 5.0];
+
+/// Dataset preset and pool size every sweep cell runs on — the
+/// cold-staging-heavy Amplicon workload, small enough that the whole
+/// 54-cell grid finishes in seconds of wall time.
+pub const SWEEP_DATASET: &str = "Amplicon-Digester";
+/// Worker-pool capacity of every sweep cell.
+pub const SWEEP_C_MAX: usize = 16;
+
+/// One measured sweep cell: the hostile profile, the GD
+/// hyperparameters, and the resulting (deterministic) case record.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub profile: FaultProfile,
+    pub tune: GdTune,
+    pub result: CaseResult,
+}
+
+impl SweepCell {
+    /// Stable identifier (`profile/kX/lrY/pZ`).
+    pub fn id(&self) -> String {
+        format!(
+            "{}/k{}/lr{}/p{}",
+            self.profile.name(),
+            self.tune.k,
+            self.tune.lr,
+            self.tune.probe_interval_s
+        )
+    }
+}
+
+/// The deterministic sweep grid: every hostile profile crossed with
+/// every `(k, lr, probe_interval)` combination, in a stable order.
+pub fn sweep_grid() -> Vec<(FaultProfile, GdTune)> {
+    let mut out = Vec::new();
+    for profile in SWEEP_PROFILES {
+        for k in SWEEP_KS {
+            for lr in SWEEP_LRS {
+                for probe_interval_s in SWEEP_PROBE_INTERVALS {
+                    out.push((
+                        profile,
+                        GdTune {
+                            k,
+                            lr,
+                            probe_interval_s,
+                        },
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run one sweep cell: gradient descent with the given hyperparameters
+/// on the [`SWEEP_DATASET`] preset under the given hostile profile.
+/// Deterministic per `(profile, tune, seed)` like every bench case.
+pub fn run_sweep_cell(
+    profile: FaultProfile,
+    tune: GdTune,
+    seed: u64,
+    reconcile: ReconcileMode,
+) -> Result<SweepCell> {
+    let spec = CaseSpec {
+        dataset: SWEEP_DATASET,
+        profile,
+        optimizer: OptimizerKind::GradientDescent,
+        c_max: SWEEP_C_MAX,
+    };
+    let result = run_case_tuned(&spec, seed, reconcile, Some(&tune))?;
+    Ok(SweepCell {
+        profile,
+        tune,
+        result,
+    })
+}
+
+/// Best cell per sweep profile: completion first (a capped cell never
+/// beats a completed one), then goodput; ties break toward the
+/// earliest grid cell, so the report is deterministic.
+pub fn best_per_profile(cells: &[SweepCell]) -> Vec<&SweepCell> {
+    SWEEP_PROFILES
+        .iter()
+        .filter_map(|&profile| {
+            cells
+                .iter()
+                .filter(|c| c.profile == profile)
+                .fold(None::<&SweepCell>, |best, c| match best {
+                    None => Some(c),
+                    Some(b) => {
+                        let better = (c.result.completed, c.result.goodput_mbps)
+                            > (b.result.completed, b.result.goodput_mbps);
+                        if better {
+                            Some(c)
+                        } else {
+                            Some(b)
+                        }
+                    }
+                })
+        })
+        .collect()
+}
+
+/// Serialize a sweep run (all cells + the winners) to JSON.
+pub fn sweep_to_json(cells: &[SweepCell], seed: u64, reconcile: ReconcileMode) -> Json {
+    let header = obj(vec![
+        ("schema", Json::Str("fastbiodl-sweep-v1".into())),
+        ("dataset", Json::Str(SWEEP_DATASET.into())),
+        ("c_max", Json::Num(SWEEP_C_MAX as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("reconcile", Json::Str(reconcile.name().into())),
+    ]);
+    let cell_json = |c: &SweepCell| {
+        obj(vec![
+            ("id", Json::Str(c.id())),
+            ("profile", Json::Str(c.profile.name().into())),
+            ("k", Json::Num(c.tune.k)),
+            ("lr", Json::Num(c.tune.lr)),
+            ("probe_interval_s", Json::Num(c.tune.probe_interval_s)),
+            ("goodput_mbps", Json::Num(c.result.goodput_mbps)),
+            ("duration_s", Json::Num(c.result.duration_s)),
+            ("chunk_retries", Json::Num(c.result.chunk_retries as f64)),
+            ("server_rejects", Json::Num(c.result.server_rejects as f64)),
+            ("completed", Json::Bool(c.result.completed)),
+        ])
+    };
+    obj(vec![
+        ("header", header),
+        ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+        (
+            "best",
+            Json::Arr(best_per_profile(cells).into_iter().map(cell_json).collect()),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,6 +729,9 @@ mod tests {
                 probes: 4,
                 files_completed: 43,
                 completed: true,
+                retry_rate: 0.0,
+                reject_rate: 0.0,
+                chunks_scaled: 0,
                 wall_s: 0.02,
                 ticks: 400,
                 ns_per_tick: 50_000.0,
@@ -557,7 +765,7 @@ mod tests {
         let text = r
             .to_json()
             .to_string_compact()
-            .replace(SCHEMA_VERSION, "fastbiodl-bench-v0");
+            .replace(SCHEMA_VERSION, "fastbiodl-bench-v1");
         assert!(BenchReport::from_json(&text).is_err());
     }
 
@@ -610,6 +818,71 @@ mod tests {
         assert_eq!(ids.len(), full.len());
         assert!(Suite::parse("full").is_ok());
         assert!(Suite::parse("everything").is_err());
+    }
+
+    #[test]
+    fn sweep_grid_shape_and_winner_selection() {
+        let grid = sweep_grid();
+        assert_eq!(grid.len(), 3 * 3 * 3 * 2, "3 profiles x 3 k x 3 lr x 2 probe");
+        // Cells are unique.
+        let mut ids: Vec<String> = grid
+            .iter()
+            .map(|(p, t)| format!("{}/{}/{}/{}", p.name(), t.k, t.lr, t.probe_interval_s))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), grid.len());
+
+        // Winner selection: completed beats capped, then goodput wins.
+        let cell = |profile, goodput, completed| SweepCell {
+            profile,
+            tune: GdTune {
+                k: 1.02,
+                lr: 3.0,
+                probe_interval_s: 5.0,
+            },
+            result: CaseResult {
+                goodput_mbps: goodput,
+                completed,
+                ..tiny_report().cases[0].clone()
+            },
+        };
+        let cells = vec![
+            cell(FaultProfile::SlowMirror, 900.0, false),
+            cell(FaultProfile::SlowMirror, 500.0, true),
+            cell(FaultProfile::SlowMirror, 700.0, true),
+            cell(FaultProfile::Brownout, 100.0, true),
+        ];
+        let best = best_per_profile(&cells);
+        assert_eq!(best.len(), 2, "only profiles with cells appear");
+        assert_eq!(best[0].result.goodput_mbps, 700.0, "completed + fastest wins");
+        assert_eq!(best[1].result.goodput_mbps, 100.0);
+        // The JSON document carries header, every cell, and the winners.
+        let j = sweep_to_json(&cells, 1, ReconcileMode::Batched).to_string_compact();
+        assert!(j.contains("fastbiodl-sweep-v1"));
+        assert!(j.contains("\"best\""));
+    }
+
+    #[test]
+    fn sweep_cell_is_deterministic_and_tune_changes_the_run() {
+        let tune = GdTune {
+            k: 1.05,
+            lr: 1.5,
+            probe_interval_s: 2.5,
+        };
+        let a = run_sweep_cell(FaultProfile::SlowMirror, tune, 5, ReconcileMode::Batched).unwrap();
+        let b = run_sweep_cell(FaultProfile::SlowMirror, tune, 5, ReconcileMode::Batched).unwrap();
+        assert_eq!(a.result.goodput_mbps.to_bits(), b.result.goodput_mbps.to_bits());
+        assert_eq!(a.result.total_bytes, b.result.total_bytes);
+        assert_eq!(a.result.probes, b.result.probes);
+        // A different probe interval must change the probe count — the
+        // sweep is not vacuous.
+        let slow = GdTune {
+            probe_interval_s: 5.0,
+            ..tune
+        };
+        let c = run_sweep_cell(FaultProfile::SlowMirror, slow, 5, ReconcileMode::Batched).unwrap();
+        assert_ne!(a.result.probes, c.result.probes, "probe cadence ignored");
     }
 
     #[test]

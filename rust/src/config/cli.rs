@@ -94,6 +94,26 @@ impl Args {
         matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Boolean flag that refuses to swallow a positional argument.
+    ///
+    /// The grammar's greedy `--flag value` form means a bare boolean
+    /// flag placed *before* a positional (`--sweep smoke`) captures the
+    /// positional as its value; [`Args::flag_bool`] would then quietly
+    /// report `false` and the positional would vanish. This variant
+    /// turns that into a loud error: bare `--flag` and explicit
+    /// true/false spellings are accepted, anything else is rejected.
+    pub fn flag_bool_strict(&self, name: &str) -> Result<bool> {
+        match self.flag(name) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(other) => Err(Error::Config(format!(
+                "--{name} is a boolean flag but captured '{other}' — put --{name} after \
+                 positional arguments or write --{name}=true"
+            ))),
+        }
+    }
+
     /// Error on unknown flags (catches typos early).
     pub fn expect_flags(&self, known: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
@@ -151,5 +171,22 @@ mod tests {
     #[test]
     fn leading_flag_is_error() {
         assert!(Args::parse(vec!["--help".to_string()]).is_err());
+    }
+
+    #[test]
+    fn strict_bool_flags_reject_swallowed_positionals() {
+        let a = parse("download --adaptive-chunks PRJNA762469");
+        // The greedy grammar captured the accession as the flag value:
+        // the strict accessor must refuse instead of reporting false.
+        assert!(a.flag_bool_strict("adaptive-chunks").is_err());
+        let a = parse("download PRJNA762469 --adaptive-chunks");
+        assert!(a.flag_bool_strict("adaptive-chunks").unwrap());
+        let a = parse("download --adaptive-chunks=true PRJNA762469");
+        assert!(a.flag_bool_strict("adaptive-chunks").unwrap());
+        assert_eq!(a.positional, vec!["PRJNA762469"]);
+        let a = parse("download --adaptive-chunks=false PRJNA762469");
+        assert!(!a.flag_bool_strict("adaptive-chunks").unwrap());
+        let a = parse("download PRJNA762469");
+        assert!(!a.flag_bool_strict("adaptive-chunks").unwrap());
     }
 }

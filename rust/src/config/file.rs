@@ -21,6 +21,11 @@
 //! strategy = "stripe"       # or "failover" (winner-take-all)
 //! per_mirror_conns = 4      # 0 = unlimited
 //! stripe_floor = 0.05
+//!
+//! [control]
+//! fault_penalty = 0.0       # weight of the utility fault penalty
+//! adaptive_chunks = false   # striping-aware chunk sizing
+//! chunk_scale_min = 0.25    # floor of the adaptive chunk scale
 //! ```
 
 use std::collections::BTreeMap;
@@ -206,11 +211,12 @@ fn split_array_items(s: &str) -> Vec<String> {
 
 /// Overlay a parsed file onto a [`DownloadConfig`].
 pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
-    let known_prefixes = ["optimizer.", "download.", "mirror."];
+    let known_prefixes = ["optimizer.", "download.", "mirror.", "control."];
     for key in doc.keys() {
         if !known_prefixes.iter().any(|p| key.starts_with(p)) {
             return Err(Error::Config(format!(
-                "unknown config key '{key}' (sections: [optimizer], [download], [mirror])"
+                "unknown config key '{key}' \
+                 (sections: [optimizer], [download], [mirror], [control])"
             )));
         }
     }
@@ -276,6 +282,19 @@ pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
     }
     usize_opt!("mirror.per_mirror_conns", cfg.mirror.per_mirror_conns);
     f64_opt!("mirror.stripe_floor", cfg.mirror.stripe_floor);
+
+    f64_opt!("control.fault_penalty", cfg.control.fault_penalty);
+    f64_opt!("control.chunk_scale_min", cfg.control.chunk_scale_min);
+    if let Some(v) = doc.get("control.adaptive_chunks") {
+        cfg.control.adaptive_chunks = match v {
+            Value::Bool(b) => *b,
+            _ => {
+                return Err(Error::Config(
+                    "'control.adaptive_chunks' must be a boolean".into(),
+                ))
+            }
+        };
+    }
     Ok(())
 }
 
@@ -349,6 +368,29 @@ mod tests {
         assert_eq!(cfg.optimizer.probe_interval_s, 3.0);
         assert_eq!(cfg.max_open_files, 2);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn control_section_overlays() {
+        let doc = TomlDoc::parse(
+            r#"
+            [control]
+            fault_penalty = 1.5
+            adaptive_chunks = true
+            chunk_scale_min = 0.5
+            "#,
+        )
+        .unwrap();
+        let mut cfg = DownloadConfig::default();
+        apply_to_config(&doc, &mut cfg).unwrap();
+        assert_eq!(cfg.control.fault_penalty, 1.5);
+        assert!(cfg.control.adaptive_chunks);
+        assert_eq!(cfg.control.chunk_scale_min, 0.5);
+        cfg.validate().unwrap();
+        // Type error: adaptive_chunks must be a boolean.
+        let doc = TomlDoc::parse("[control]\nadaptive_chunks = 1.0").unwrap();
+        let mut cfg = DownloadConfig::default();
+        assert!(apply_to_config(&doc, &mut cfg).is_err());
     }
 
     #[test]

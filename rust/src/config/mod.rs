@@ -148,6 +148,61 @@ impl OptimizerConfig {
     }
 }
 
+/// Fault-aware control-plane knobs (see [`crate::control`]): how much
+/// the adaptive controllers penalize fault telemetry, and whether the
+/// engine scales chunk sizes down under fault pressure. Both default
+/// to **off**, which keeps every benign, single-mirror, and
+/// paper-figure run bit-identical to the fault-blind controllers.
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// Weight of the fault-penalty term in the adaptive utilities: the
+    /// probe-window goodput is discounted by
+    /// `1 + fault_penalty × weighted_fault_rate` before it enters the
+    /// §4.1 utility (see [`crate::control::discounted_goodput`]).
+    /// `0.0` (the default) disables the term entirely — the goodput
+    /// passes through bit-identically.
+    pub fault_penalty: f64,
+    /// Striping-aware chunk sizing: controllers emit a chunk scale from
+    /// fault pressure ([`crate::control::chunk_scale`]) and the engine
+    /// shrinks chunks cut for slots bound to degraded mirrors, so a
+    /// probe chunk on a crawling mirror stops tying a slot up for many
+    /// seconds. Off by default.
+    pub adaptive_chunks: bool,
+    /// Floor of every chunk scale, in `(0, 1]`: chunks never shrink
+    /// below `chunk_scale_min × chunk_bytes` (and never below the
+    /// scheduler's 64 KiB absolute minimum).
+    pub chunk_scale_min: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            fault_penalty: 0.0,
+            adaptive_chunks: false,
+            chunk_scale_min: 0.25,
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.fault_penalty >= 0.0 && self.fault_penalty.is_finite()) {
+            return Err(Error::Config(format!(
+                "fault_penalty {} must be finite and >= 0",
+                self.fault_penalty
+            )));
+        }
+        if !(self.chunk_scale_min > 0.0 && self.chunk_scale_min <= 1.0) {
+            return Err(Error::Config(format!(
+                "chunk_scale_min {} outside (0, 1]",
+                self.chunk_scale_min
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// How the session engine reconciles its worker-slot pool against the
 /// shared [`crate::coordinator::pool::StatusArray`] each control tick.
 ///
@@ -284,6 +339,9 @@ pub struct DownloadConfig {
     pub optimizer: OptimizerConfig,
     /// Multi-mirror scheduling policy.
     pub mirror: MirrorPolicy,
+    /// Fault-aware control-plane knobs (fault penalty, adaptive chunk
+    /// sizing); defaults keep the fault-blind behaviour.
+    pub control: ControlConfig,
     /// Worker-slot pool reconciliation strategy (see [`ReconcileMode`];
     /// `FullScan` exists as the measured baseline for `fastbiodl bench`
     /// and the equivalence tests).
@@ -308,6 +366,7 @@ impl Default for DownloadConfig {
         DownloadConfig {
             optimizer: OptimizerConfig::default(),
             mirror: MirrorPolicy::default(),
+            control: ControlConfig::default(),
             reconcile: ReconcileMode::default(),
             chunk_bytes: 32 * 1024 * 1024,
             monitor_hz: 4.0,
@@ -322,6 +381,7 @@ impl DownloadConfig {
     pub fn validate(&self) -> Result<()> {
         self.optimizer.validate()?;
         self.mirror.validate()?;
+        self.control.validate()?;
         if self.chunk_bytes < 64 * 1024 {
             return Err(Error::Config(format!(
                 "chunk_bytes {} too small (min 64 KiB)",
@@ -365,6 +425,9 @@ impl DownloadConfig {
         }
         if let Ok(strategy) = std::env::var("FASTBIODL_MIRROR_STRATEGY") {
             self.mirror.strategy = MirrorStrategy::parse(&strategy)?;
+        }
+        if let Some(w) = env_f64("FASTBIODL_FAULT_PENALTY")? {
+            self.control.fault_penalty = w;
         }
         Ok(())
     }
@@ -455,6 +518,35 @@ mod tests {
             MirrorStrategy::Failover
         );
         assert!(MirrorStrategy::parse("roulette").is_err());
+    }
+
+    #[test]
+    fn control_config_defaults_are_fault_blind_and_validate() {
+        let c = ControlConfig::default();
+        assert_eq!(c.fault_penalty, 0.0);
+        assert!(!c.adaptive_chunks);
+        c.validate().unwrap();
+        let mut bad = ControlConfig::default();
+        bad.fault_penalty = -1.0;
+        assert!(bad.validate().is_err());
+        bad = ControlConfig::default();
+        bad.fault_penalty = f64::NAN;
+        assert!(bad.validate().is_err());
+        bad = ControlConfig::default();
+        bad.chunk_scale_min = 0.0;
+        assert!(bad.validate().is_err());
+        bad.chunk_scale_min = 1.5;
+        assert!(bad.validate().is_err());
+        let ok = ControlConfig {
+            fault_penalty: 2.5,
+            adaptive_chunks: true,
+            chunk_scale_min: 0.125,
+        };
+        ok.validate().unwrap();
+        // The whole-transfer validate chain covers the control section.
+        let mut dl = DownloadConfig::default();
+        dl.control.chunk_scale_min = -0.1;
+        assert!(dl.validate().is_err());
     }
 
     #[test]

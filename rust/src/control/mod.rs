@@ -1,0 +1,293 @@
+//! The fault-aware control plane: one typed signal bus between the
+//! session engine and the concurrency controllers.
+//!
+//! Before this layer existed, every new telemetry source needed a
+//! bespoke setter on three controllers (the `MirrorHealth →
+//! effective_k` side-channel being the canonical example), and rich
+//! fault telemetry — retry/reject counts, per-mirror RTT — never
+//! reached the optimizer at all. Now the engine assembles **one
+//! [`ControlSignals`] snapshot per probe interval** and controllers
+//! implement [`Controller`], consuming the snapshot and returning a
+//! joint [`ControlAction`]: the next concurrency target *and* a chunk
+//! scale driving striping-aware chunk sizing in the scheduler.
+//!
+//! ```text
+//!  engine ──► ControlSignals ──► Controller ──► ControlAction ──┬─► slot pool (concurrency)
+//!             goodput EWMA                                      └─► chunk scheduler (chunk_scale)
+//!             retry/reject/reset rates
+//!             mirror headroom + fail pressure
+//!             connect-RTT
+//! ```
+//!
+//! Two knobs gate the fault-aware behaviour
+//! ([`crate::config::ControlConfig`]), both **off by default** so every
+//! benign, single-mirror, and paper-figure run is bit-identical to the
+//! fault-blind controllers:
+//!
+//! * `fault_penalty` (default `0.0`) — weight of the fault-penalty term
+//!   in the adaptive utilities: the window goodput is discounted by the
+//!   weighted retry/reject rate ([`discounted_goodput`], backed by
+//!   [`crate::optimizer::mirror::fault_discount`]) before it enters the
+//!   §4.1 utility `U = T/k^C`, so a concurrency level that "achieves"
+//!   its throughput only by burning retries stops looking optimal.
+//! * `adaptive_chunks` (default off) — controllers emit
+//!   [`ControlAction::chunk_scale`] from the same fault pressure
+//!   ([`chunk_scale`]), and the engine additionally shrinks chunks cut
+//!   for slots bound to degraded mirrors, so a probe chunk on a
+//!   crawling mirror stops tying a slot up for many seconds.
+
+use crate::config::ControlConfig;
+use crate::Result;
+
+/// Relative weight of a transient server rejection vs a connection
+/// reset in [`weighted_fault_rate`]: a reject costs one backoff and a
+/// retried request; a reset additionally pays reconnect + ramp.
+pub const REJECT_FAULT_WEIGHT: f64 = 0.5;
+
+/// Gain of the fault pressure → [`chunk_scale`] mapping,
+/// `scale = 1 / (1 + GAIN × pressure)` (floored by
+/// [`crate::config::ControlConfig::chunk_scale_min`]): half a weighted
+/// fault event per second already halves the chunk size.
+pub const CHUNK_PRESSURE_GAIN: f64 = 2.0;
+
+/// Aggregate mirror-health signal, part of every [`ControlSignals`]
+/// snapshot. Condensed from the per-session
+/// [`crate::session::mirrors::MirrorBoard`]: `headroom` is the
+/// effective number of simultaneously useful mirrors
+/// ([`crate::session::mirrors::MirrorBoard::concurrency_headroom`]),
+/// `fail_pressure` the decayed failure rate across the fleet
+/// ([`crate::session::mirrors::MirrorBoard::fail_pressure`]).
+/// Single-mirror sessions always carry the neutral default, so their
+/// controllers behave bit-identically to health-unaware ones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MirrorHealth {
+    /// Effective number of healthy mirrors, in `[1, mirror_count]`.
+    pub headroom: f64,
+    /// Decayed failure pressure across mirrors (0 = clean).
+    pub fail_pressure: f64,
+}
+
+impl Default for MirrorHealth {
+    /// Neutral signal: one mirror, no failures —
+    /// [`crate::optimizer::effective_k`] returns `k` unchanged.
+    fn default() -> Self {
+        MirrorHealth {
+            headroom: 1.0,
+            fail_pressure: 0.0,
+        }
+    }
+}
+
+/// One per-probe-interval snapshot of everything the engine knows that
+/// a controller could act on. Assembled exactly once per probe by
+/// `session::engine`; every field is derived from state the engine
+/// already tracks, so the snapshot is free to build and fully
+/// deterministic in simulation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlSignals {
+    /// Concurrency target the window was measured at.
+    pub concurrency: f64,
+    /// Mean goodput over the monitor window (Mbps).
+    pub goodput_mbps: f64,
+    /// Span the rates below are computed over (s, > 0).
+    pub window_s: f64,
+    /// Chunk requeues per second over the window (every failure class
+    /// requeues its chunk, so this is the superset rate).
+    pub retry_rate: f64,
+    /// Connection resets per second over the window.
+    pub reset_rate: f64,
+    /// Transient server rejections (5xx analogue) per second.
+    pub reject_rate: f64,
+    /// Aggregate mirror health (neutral for single-mirror sessions).
+    pub mirror: MirrorHealth,
+    /// Fleet mean connect-RTT EWMA (s); `0.0` until any transport
+    /// reported a readiness transition.
+    pub connect_rtt_s: f64,
+}
+
+impl ControlSignals {
+    /// A snapshot carrying only a throughput observation — every other
+    /// signal neutral. This is the legacy "probe" shape: a controller
+    /// fed `ControlSignals::probe(c, t)` behaves exactly like the
+    /// pre-signal-bus `on_probe(Probe { c, t })` did.
+    pub fn probe(concurrency: f64, goodput_mbps: f64) -> ControlSignals {
+        ControlSignals {
+            concurrency,
+            goodput_mbps,
+            window_s: 1.0,
+            retry_rate: 0.0,
+            reset_rate: 0.0,
+            reject_rate: 0.0,
+            mirror: MirrorHealth::default(),
+            connect_rtt_s: 0.0,
+        }
+    }
+}
+
+/// What a controller wants the engine to do until the next probe.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlAction {
+    /// Worker-pool concurrency target (Algorithm 1's decision).
+    pub concurrency: usize,
+    /// Scale in `(0, 1]` applied to newly cut chunks while
+    /// `adaptive_chunks` is enabled (`1.0` = full-size chunks; the
+    /// engine multiplies in a per-mirror degradation factor and floors
+    /// the product at
+    /// [`crate::config::ControlConfig::chunk_scale_min`]).
+    pub chunk_scale: f64,
+}
+
+impl ControlAction {
+    /// An action that only moves the concurrency target (full-size
+    /// chunks) — what static controllers and tests emit.
+    pub fn concurrency_only(concurrency: usize) -> ControlAction {
+        ControlAction {
+            concurrency,
+            chunk_scale: 1.0,
+        }
+    }
+}
+
+/// A transfer controller: Algorithm 1's decision step, reworked to
+/// consume the full [`ControlSignals`] snapshot and emit a joint
+/// [`ControlAction`] (concurrency + chunk scale) instead of a bare
+/// concurrency target.
+///
+/// Deliberately **not** `Send`: the PJRT client (and thus the
+/// XLA-backed controllers) lives on the coordinating thread, exactly
+/// like the paper's single optimizer thread. Worker threads never touch
+/// the controller — they observe the
+/// [`crate::coordinator::StatusArray`] it writes through the session
+/// driver.
+pub trait Controller {
+    /// Consume one per-probe signal snapshot, return the next action.
+    fn on_signals(&mut self, signals: &ControlSignals) -> Result<ControlAction>;
+
+    /// Current action without new information (initial value).
+    fn current(&self) -> ControlAction;
+
+    /// Display name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The weighted retry/reject rate (events/s) feeding both the utility
+/// fault penalty and the chunk-scale mapping. Connection resets weigh
+/// `1.0` (reconnect + ramp), rejections [`REJECT_FAULT_WEIGHT`]; the
+/// superset `retry_rate` is deliberately *not* summed in — it already
+/// counts every reset and reject once.
+pub fn weighted_fault_rate(signals: &ControlSignals) -> f64 {
+    signals.reset_rate.max(0.0) + REJECT_FAULT_WEIGHT * signals.reject_rate.max(0.0)
+}
+
+/// Window goodput after the fault penalty: the signal→utility mapping
+/// of the adaptive controllers. Delegates the arithmetic to
+/// [`crate::optimizer::mirror::fault_discount`] so the pure-Rust
+/// utility cross-checks exercise the identical formula. With
+/// `fault_penalty <= 0` (the default) or a clean window this returns
+/// `signals.goodput_mbps` **unchanged** (same bits), which is what
+/// keeps benign and paper-figure runs bit-identical.
+pub fn discounted_goodput(signals: &ControlSignals, fault_penalty: f64) -> f64 {
+    crate::optimizer::mirror::fault_discount(
+        signals.goodput_mbps,
+        weighted_fault_rate(signals),
+        fault_penalty,
+    )
+}
+
+/// Chunk scale from fault pressure: `1 / (1 + GAIN × pressure)`,
+/// floored at `cfg.chunk_scale_min`, where pressure is the weighted
+/// fault rate plus the fleet's decayed mirror fail-pressure. Returns
+/// exactly `1.0` when `adaptive_chunks` is off or the window was clean,
+/// so default and benign runs cut full-size chunks on the untouched
+/// code path.
+pub fn chunk_scale(signals: &ControlSignals, cfg: &ControlConfig) -> f64 {
+    if !cfg.adaptive_chunks {
+        return 1.0;
+    }
+    let pressure = weighted_fault_rate(signals) + signals.mirror.fail_pressure.max(0.0);
+    if pressure <= 0.0 {
+        return 1.0;
+    }
+    (1.0 / (1.0 + CHUNK_PRESSURE_GAIN * pressure)).clamp(cfg.chunk_scale_min.min(1.0), 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hostile(reset_rate: f64, reject_rate: f64) -> ControlSignals {
+        ControlSignals {
+            reset_rate,
+            reject_rate,
+            retry_rate: reset_rate + reject_rate,
+            ..ControlSignals::probe(4.0, 100.0)
+        }
+    }
+
+    #[test]
+    fn probe_snapshot_is_neutral() {
+        let s = ControlSignals::probe(3.0, 250.0);
+        assert_eq!(weighted_fault_rate(&s), 0.0);
+        assert_eq!(discounted_goodput(&s, 5.0).to_bits(), 250.0f64.to_bits());
+        assert_eq!(s.mirror, MirrorHealth::default());
+    }
+
+    #[test]
+    fn zero_penalty_returns_goodput_bit_identically() {
+        let s = hostile(2.0, 4.0);
+        assert_eq!(discounted_goodput(&s, 0.0).to_bits(), 100.0f64.to_bits());
+        assert_eq!(discounted_goodput(&s, -1.0).to_bits(), 100.0f64.to_bits());
+    }
+
+    #[test]
+    fn penalty_discounts_and_resets_weigh_more_than_rejects() {
+        let resets = hostile(2.0, 0.0);
+        let rejects = hostile(0.0, 2.0);
+        let d_resets = discounted_goodput(&resets, 1.0);
+        let d_rejects = discounted_goodput(&rejects, 1.0);
+        assert!(d_resets < d_rejects, "{d_resets} vs {d_rejects}");
+        assert!(d_rejects < 100.0);
+        // Heavier penalty discounts harder.
+        assert!(discounted_goodput(&resets, 3.0) < d_resets);
+    }
+
+    #[test]
+    fn chunk_scale_is_one_when_off_or_clean() {
+        let cfg = ControlConfig::default();
+        assert!(!cfg.adaptive_chunks);
+        assert_eq!(chunk_scale(&hostile(5.0, 5.0), &cfg), 1.0);
+        let on = ControlConfig {
+            adaptive_chunks: true,
+            ..ControlConfig::default()
+        };
+        assert_eq!(chunk_scale(&ControlSignals::probe(4.0, 100.0), &on), 1.0);
+    }
+
+    #[test]
+    fn chunk_scale_shrinks_under_pressure_and_floors() {
+        let on = ControlConfig {
+            adaptive_chunks: true,
+            ..ControlConfig::default()
+        };
+        let mild = chunk_scale(&hostile(0.25, 0.0), &on);
+        assert!(mild < 1.0 && mild > on.chunk_scale_min, "mild: {mild}");
+        let storm = chunk_scale(&hostile(50.0, 50.0), &on);
+        assert_eq!(storm, on.chunk_scale_min, "storm must floor: {storm}");
+        // Mirror fail-pressure alone also shrinks chunks.
+        let sick_fleet = ControlSignals {
+            mirror: MirrorHealth {
+                headroom: 1.0,
+                fail_pressure: 1.0,
+            },
+            ..ControlSignals::probe(4.0, 100.0)
+        };
+        assert!(chunk_scale(&sick_fleet, &on) < 1.0);
+    }
+
+    #[test]
+    fn concurrency_only_action_keeps_full_chunks() {
+        let a = ControlAction::concurrency_only(7);
+        assert_eq!(a.concurrency, 7);
+        assert_eq!(a.chunk_scale, 1.0);
+    }
+}

@@ -12,6 +12,18 @@
 //! * [`SchedulerMode::WholeFile`] — prefetch/pysradb: one request per
 //!   file, as many files open as there are workers.
 //!
+//! Chunked mode additionally supports **striping-aware chunk sizing**
+//! ([`ChunkScheduler::next_chunk_scaled`]): the session engine passes a
+//! per-issue scale in `(0, 1]` — derived from the controller's
+//! [`crate::control::ControlAction::chunk_scale`] and the issuing
+//! slot's mirror degradation — and the scheduler cuts the next chunk at
+//! `scale × chunk_bytes` (never below [`MIN_CHUNK_BYTES`]). A probe
+//! chunk on a deeply slowed mirror then occupies its slot for seconds
+//! instead of minutes. Scale `1.0` (the default path, and everything
+//! with `adaptive_chunks` off) is byte-identical to the unscaled
+//! scheduler; requeued chunks always keep their original byte range,
+//! so the tiling invariants below are unaffected.
+//!
 //! The scheduler is transport-agnostic and single-threaded by design:
 //! the unified session engine owns it on the control thread for both
 //! simulated and real transfers (workers receive chunk assignments over
@@ -31,6 +43,24 @@
 //! total; completion implies every chunk of every file was delivered.
 
 use crate::accession::RunRecord;
+
+/// Absolute floor of a scaled chunk (bytes): below this, per-request
+/// overhead (headers, first-byte latency) dominates the payload and
+/// shrinking further only multiplies requests. Matches the
+/// `chunk_bytes` validation floor in [`crate::config::DownloadConfig`].
+pub const MIN_CHUNK_BYTES: u64 = 64 * 1024;
+
+/// Chunk length for a given scale: `scale × chunk_bytes`, clamped to
+/// `[MIN_CHUNK_BYTES, chunk_bytes]` (a `chunk_bytes` already below the
+/// floor is returned unchanged). `scale >= 1` short-circuits to
+/// `chunk_bytes` so the unscaled path performs no float arithmetic.
+fn effective_chunk_bytes(chunk_bytes: u64, scale: f64) -> u64 {
+    if scale >= 1.0 {
+        return chunk_bytes;
+    }
+    debug_assert!(scale.is_finite() && scale > 0.0, "bad chunk scale {scale}");
+    ((chunk_bytes as f64 * scale) as u64).clamp(MIN_CHUNK_BYTES.min(chunk_bytes), chunk_bytes)
+}
 
 /// One range request.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -123,6 +153,10 @@ pub struct ChunkScheduler {
     first_unopened: usize,
     total_bytes: u64,
     bytes_done: u64,
+    /// Chunks cut below their full size because of a scale < 1 (tail
+    /// chunks clipped by the file end do not count). Surfaced through
+    /// [`crate::session::EngineStats`] and the bench harness.
+    chunks_scaled: usize,
 }
 
 impl ChunkScheduler {
@@ -185,6 +219,7 @@ impl ChunkScheduler {
             first_unopened: 0,
             total_bytes,
             bytes_done: bytes_done_total,
+            chunks_scaled: 0,
         }
     }
 
@@ -209,6 +244,16 @@ impl ChunkScheduler {
     /// Pull the next chunk for a worker, or `None` if nothing is
     /// currently available (either all work is in flight or done).
     pub fn next_chunk(&mut self) -> Option<Chunk> {
+        self.next_chunk_scaled(1.0)
+    }
+
+    /// [`ChunkScheduler::next_chunk`] with a chunk scale in `(0, 1]`:
+    /// a freshly cut chunked-mode chunk is at most
+    /// `scale × chunk_bytes` long (floored at [`MIN_CHUNK_BYTES`]).
+    /// Requeued chunks are re-served with their original range, and
+    /// whole-file mode ignores the scale. `scale = 1.0` is
+    /// byte-identical to [`ChunkScheduler::next_chunk`].
+    pub fn next_chunk_scaled(&mut self, scale: f64) -> Option<Chunk> {
         if let Some(c) = self.requeued.pop() {
             self.files[c.file].outstanding += 1;
             return Some(c);
@@ -218,7 +263,7 @@ impl ChunkScheduler {
             SchedulerMode::Chunked {
                 chunk_bytes,
                 max_open_files,
-            } => self.next_chunked(chunk_bytes, max_open_files),
+            } => self.next_chunked(chunk_bytes, max_open_files, scale),
         }
     }
 
@@ -239,7 +284,12 @@ impl ChunkScheduler {
         })
     }
 
-    fn next_chunked(&mut self, chunk_bytes: u64, max_open_files: usize) -> Option<Chunk> {
+    fn next_chunked(
+        &mut self,
+        chunk_bytes: u64,
+        max_open_files: usize,
+        scale: f64,
+    ) -> Option<Chunk> {
         // Prefer an already-open file with bytes left to hand out.
         let pick = self
             .open
@@ -260,8 +310,12 @@ impl ChunkScheduler {
         };
         let f = &mut self.files[idx];
         let offset = f.next_offset;
-        let len = chunk_bytes.min(f.bytes - offset);
+        let full = chunk_bytes.min(f.bytes - offset);
+        let len = effective_chunk_bytes(chunk_bytes, scale).min(f.bytes - offset);
         debug_assert!(len > 0);
+        if len < full {
+            self.chunks_scaled += 1;
+        }
         f.next_offset += len;
         let index = f.chunks_issued;
         f.chunks_issued += 1;
@@ -348,6 +402,12 @@ impl ChunkScheduler {
     /// Chunks waiting in the retry queue.
     pub fn requeued_chunks(&self) -> usize {
         self.requeued.len()
+    }
+
+    /// Chunks cut below their full size by a scale < 1 (adaptive chunk
+    /// sizing; tail clipping does not count).
+    pub fn chunks_scaled(&self) -> usize {
+        self.chunks_scaled
     }
 
     /// Bytes delivered so far / total.
@@ -508,6 +568,56 @@ mod tests {
         assert!(s.all_done());
         assert_eq!(s.outstanding_chunks(), 0);
         assert_eq!(s.progress(), (500, 500));
+    }
+
+    #[test]
+    fn scaled_chunks_shrink_floor_and_still_tile_exactly() {
+        let recs = records(&[1_000_000]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 256 * 1024,
+                max_open_files: 1,
+            },
+        );
+        // Scale 0.5: a half-size chunk, counted as scaled.
+        let a = s.next_chunk_scaled(0.5).unwrap();
+        assert_eq!(a.len, 128 * 1024);
+        assert_eq!(s.chunks_scaled(), 1);
+        // Tiny scale floors at MIN_CHUNK_BYTES.
+        let b = s.next_chunk_scaled(1e-6).unwrap();
+        assert_eq!(b.len, MIN_CHUNK_BYTES);
+        assert_eq!(b.offset, a.offset + a.len, "scaled chunks stay contiguous");
+        // Scale 1.0 is the unscaled cut.
+        let c = s.next_chunk_scaled(1.0).unwrap();
+        assert_eq!(c.len, 256 * 1024);
+        assert_eq!(s.chunks_scaled(), 2, "full-size cuts are not counted");
+        // A requeued chunk keeps its original range even under scale.
+        s.chunk_failed(a.clone());
+        let again = s.next_chunk_scaled(0.25).unwrap();
+        assert_eq!(again, a);
+        // Drain with a mix of scales: the file must tile exactly.
+        s.chunk_done(&again);
+        s.chunk_done(&b);
+        s.chunk_done(&c);
+        let mut scale = 0.3;
+        while let Some(ch) = s.next_chunk_scaled(scale) {
+            scale = if scale >= 1.0 { 0.3 } else { scale + 0.35 };
+            s.chunk_done(&ch);
+        }
+        assert!(s.all_done());
+        assert_eq!(s.progress(), (1_000_000, 1_000_000));
+        assert_eq!(s.frontiers(), vec![1_000_000]);
+    }
+
+    #[test]
+    fn effective_chunk_bytes_clamps() {
+        assert_eq!(effective_chunk_bytes(1 << 20, 1.0), 1 << 20);
+        assert_eq!(effective_chunk_bytes(1 << 20, 2.0), 1 << 20);
+        assert_eq!(effective_chunk_bytes(1 << 20, 0.5), 1 << 19);
+        assert_eq!(effective_chunk_bytes(1 << 20, 1e-9), MIN_CHUNK_BYTES);
+        // chunk_bytes already below the floor passes through.
+        assert_eq!(effective_chunk_bytes(1024, 0.5), 1024);
     }
 
     #[test]

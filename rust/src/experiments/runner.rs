@@ -8,7 +8,7 @@ use crate::baselines::BaselineTool;
 use crate::config::DownloadConfig;
 use crate::experiments::scenario::Scenario;
 use crate::metrics::summary::{mean_std, MeanStd};
-use crate::optimizer::build_controller;
+use crate::optimizer::build_controller_with;
 use crate::runtime::SharedRuntime;
 use crate::session::sim::{SimSession, SimSessionParams, ToolBehavior};
 use crate::session::SessionReport;
@@ -76,8 +76,15 @@ pub fn run_tool_once(
 ) -> Result<SessionReport> {
     let (download, behavior, controller) = match tool {
         Tool::FastBioDl { download } => {
-            let controller =
-                build_controller(&download.optimizer, Some(runtime.clone()))?;
+            // The download config carries the control-plane knobs
+            // (fault penalty, adaptive chunks); experiment presets
+            // leave them at the fault-blind defaults, so every paper
+            // artifact replays bit-identically.
+            let controller = build_controller_with(
+                &download.optimizer,
+                &download.control,
+                Some(runtime.clone()),
+            )?;
             (
                 download.clone(),
                 ToolBehavior::fastbiodl(download),
@@ -87,7 +94,11 @@ pub fn run_tool_once(
         Tool::Baseline(b) => {
             let mut download = scenario.download.clone();
             download.optimizer = b.optimizer.clone();
-            let controller = build_controller(&download.optimizer, Some(runtime.clone()))?;
+            let controller = build_controller_with(
+                &download.optimizer,
+                &download.control,
+                Some(runtime.clone()),
+            )?;
             (download, b.behavior.clone(), controller)
         }
     };

@@ -28,6 +28,7 @@ pub mod accession;
 pub mod baselines;
 pub mod bench;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod experiments;
 pub mod metrics;

@@ -24,7 +24,7 @@ use fastbiodl::config::cli::Args;
 use fastbiodl::config::{DownloadConfig, OptimizerKind};
 use fastbiodl::experiments::runner::{run_tool_once, Tool};
 use fastbiodl::experiments::{fig1, fig2, fig4, fig5, fig6, scenario, table1, table3};
-use fastbiodl::optimizer::build_controller;
+use fastbiodl::optimizer::build_controller_with;
 use fastbiodl::report::{sparkline, Table};
 use fastbiodl::runtime::{SharedRuntime, XlaRuntime};
 use fastbiodl::session::real::{run_real_session, RealSessionParams, Sink};
@@ -52,6 +52,10 @@ COMMANDS:
         --mirror-strategy <s> stripe (score-weighted striping, default)
                               or failover (winner-take-all binding)
         --mirror-conns <n>    per-mirror connection cap (default 0 = off)
+        --fault-penalty <w>   weight of the retry/reject fault penalty
+                              in the adaptive utility (default 0 = off)
+        --adaptive-chunks     striping-aware chunk sizing: shrink chunks
+                              under fault pressure / on degraded mirrors
         --reconcile <m>       engine slot reconciliation: batched
                               (default) or full-scan (naive reference)
     fetch <url...>            real-socket adaptive download over HTTP
@@ -62,6 +66,8 @@ COMMANDS:
         --size <bytes>        total size per URL if the server lacks HEAD
         --mirror-strategy <s> stripe (default) or failover
         --mirror-conns <n>    per-mirror connection cap (default 0 = off)
+        --fault-penalty <w>   utility fault penalty (default 0 = off)
+        --adaptive-chunks     striping-aware chunk sizing
     serve                     run the throttled loopback archive server
         --files <n>           number of synthetic files (default 4)
         --size-mb <n>         size of each file (default 64)
@@ -87,6 +93,11 @@ COMMANDS:
                               (default 0.35)
         --reconcile <m>       batched (default) or full-scan engine
                               reconciliation (the measured baseline)
+        --sweep               instead of a suite: deterministic GD
+                              hyperparameter sweep (k x lr x probe
+                              interval) under the hostile profiles
+                              {slowmirror, brownout, flashcrowd},
+                              reporting the best cell per profile
         --seed <n>            simulation seed (default 1)
     experiment <id|all>       regenerate paper artifacts
         --runs <n>            runs per configuration (default 5)
@@ -171,6 +182,12 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     if let Some(conns) = args.flag_usize("mirror-conns")? {
         cfg.mirror.per_mirror_conns = conns;
     }
+    if let Some(w) = args.flag_f64("fault-penalty")? {
+        cfg.control.fault_penalty = w;
+    }
+    if args.flag_bool_strict("adaptive-chunks")? {
+        cfg.control.adaptive_chunks = true;
+    }
     if let Some(p) = args.flag_f64("probe")? {
         cfg.optimizer.probe_interval_s = p;
     }
@@ -193,7 +210,9 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     use fastbiodl::bench;
-    args.expect_flags(&["suite", "out", "baseline", "seed", "reconcile", "tolerance"])?;
+    args.expect_flags(&[
+        "suite", "out", "baseline", "seed", "reconcile", "tolerance", "sweep",
+    ])?;
     let suite = bench::Suite::parse(args.flag("suite").unwrap_or("smoke"))?;
     let seed = args.flag_u64("seed")?.unwrap_or(1);
     if seed > (1u64 << 53) {
@@ -210,6 +229,62 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let tolerance = args
         .flag_f64("tolerance")?
         .unwrap_or(bench::DEFAULT_TIMING_TOLERANCE);
+    // Hyperparameter sweep mode: deterministic GD k × lr × probe grid
+    // under the hostile profiles, best cell per profile (exclusive
+    // with the suite grid).
+    if args.flag_bool_strict("sweep")? {
+        // The suite/baseline machinery does not run in sweep mode;
+        // refuse the combination instead of silently skipping the
+        // regression gate the caller asked for.
+        if args.flag("suite").is_some()
+            || args.flag("baseline").is_some()
+            || args.flag("tolerance").is_some()
+        {
+            return Err(Error::Config(
+                "--sweep is exclusive with --suite/--baseline/--tolerance \
+                 (the sweep runs its own fixed grid)"
+                    .into(),
+            ));
+        }
+        let out_path = args.flag("out").unwrap_or("BENCH_sweep.json");
+        let grid = bench::sweep_grid();
+        println!(
+            "bench sweep: {} cells over {} hostile profiles (seed {seed}, dataset {})",
+            grid.len(),
+            bench::SWEEP_PROFILES.len(),
+            bench::SWEEP_DATASET,
+        );
+        let mut cells = Vec::with_capacity(grid.len());
+        for (profile, tune) in grid {
+            let cell = bench::run_sweep_cell(profile, tune, seed, reconcile)?;
+            println!(
+                "  {:<34} {:>8.1} Mbps  {:>7.1}s  {:>4} retries{}",
+                cell.id(),
+                cell.result.goodput_mbps,
+                cell.result.duration_s,
+                cell.result.chunk_retries,
+                if cell.result.completed { "" } else { "  [capped]" },
+            );
+            cells.push(cell);
+        }
+        println!("best cell per profile:");
+        for best in bench::best_per_profile(&cells) {
+            println!(
+                "  {:<12} k={:<5} lr={:<4} probe={:<4} -> {:.1} Mbps",
+                best.profile.name(),
+                best.tune.k,
+                best.tune.lr,
+                best.tune.probe_interval_s,
+                best.result.goodput_mbps,
+            );
+        }
+        let mut text = bench::sweep_to_json(&cells, seed, reconcile).to_string_compact();
+        text.push('\n');
+        std::fs::write(out_path, &text)?;
+        println!("wrote {out_path} ({} cells)", cells.len());
+        return Ok(());
+    }
+
     let out_path = args.flag("out").unwrap_or("BENCH_engine.json");
 
     let specs = bench::suite_cases(suite);
@@ -251,6 +326,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     if let Some(baseline_path) = args.flag("baseline") {
         let baseline = bench::BenchReport::from_json(&std::fs::read_to_string(baseline_path)?)?;
+        if baseline.cases.is_empty() {
+            // A committed bootstrap baseline: the gate is wired but no
+            // values are frozen yet. Freeze them by replacing the file
+            // with a real report from the same suite+seed (e.g. the
+            // one this run just wrote).
+            println!(
+                "baseline {baseline_path} is a bootstrap (no cases): nothing to diff. \
+                 Freeze it by committing {out_path} as the new baseline."
+            );
+            return Ok(());
+        }
         let regressions = bench::diff(&report, &baseline, tolerance);
         if regressions.is_empty() {
             println!(
@@ -279,7 +365,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
-        "faults", "mirror-strategy", "mirror-conns", "reconcile",
+        "faults", "mirror-strategy", "mirror-conns", "reconcile", "fault-penalty",
+        "adaptive-chunks",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -348,7 +435,8 @@ fn cmd_download(args: &Args) -> Result<()> {
         Ok(rt) => run_tool_once(&sc, &Tool::fastbiodl(&sc), &rt, seed)?,
         Err(e) => {
             eprintln!("note: XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
-            let controller = build_controller(&sc.download.optimizer, None)?;
+            let controller =
+                build_controller_with(&sc.download.optimizer, &sc.download.control, None)?;
             SimSession::new(SimSessionParams {
                 download: sc.download.clone(),
                 behavior: ToolBehavior::fastbiodl(&sc.download),
@@ -368,7 +456,7 @@ fn cmd_download(args: &Args) -> Result<()> {
 fn cmd_fetch(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
-        "mirror-conns", "reconcile",
+        "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));
@@ -398,7 +486,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
             None
         }
     };
-    let controller = build_controller(&cfg.optimizer, rt.clone())?;
+    let controller = build_controller_with(&cfg.optimizer, &cfg.control, rt.clone())?;
     let sink = match args.flag("out") {
         Some(dir) => Sink::Directory(dir.to_string()),
         None => Sink::Discard,

@@ -180,6 +180,18 @@ pub struct NetSim {
     drop_until_s: f64,
     drop_after_bytes: f64,
     drop_frac: f64,
+    /// Correlated burst losses ([`FaultKind::BurstLoss`]): until
+    /// `burst_until_s` a Gilbert–Elliott two-state process alternates
+    /// loss bursts (`burst_bad`, mean length `burst_burst_s`, busy
+    /// flows reset at `burst_kill_prob`/s) and quiet spells (mean
+    /// length `burst_gap_s`); `burst_phase_until_s` is the current
+    /// phase's end.
+    burst_until_s: f64,
+    burst_bad: bool,
+    burst_phase_until_s: f64,
+    burst_kill_prob: f64,
+    burst_burst_s: f64,
+    burst_gap_s: f64,
     /// Per-mirror asymmetric degradation: flows to mirror `m` have
     /// their per-connection cap multiplied by `mirror_slow[m].1` until
     /// `mirror_slow[m].0` (grown lazily; unlisted mirrors are healthy).
@@ -230,6 +242,12 @@ impl NetSim {
             drop_until_s: 0.0,
             drop_after_bytes: 0.0,
             drop_frac: 0.0,
+            burst_until_s: 0.0,
+            burst_bad: false,
+            burst_phase_until_s: 0.0,
+            burst_kill_prob: 0.0,
+            burst_burst_s: 0.0,
+            burst_gap_s: 0.0,
             mirror_slow: Vec::new(),
             scratch_active: Vec::new(),
             scratch_demands: Vec::new(),
@@ -541,6 +559,43 @@ impl NetSim {
             }
         }
 
+        // Correlated burst losses ([`FaultKind::BurstLoss`]): advance
+        // the Gilbert–Elliott two-state process and, while the bad
+        // state is active, reset busy flows — several in the same
+        // burst, which is what distinguishes clustered losses from the
+        // independent per-flow hazard below. Checked after delivery so
+        // a dying step still accounts its bytes.
+        if self.now_s < self.burst_until_s {
+            while self.now_s >= self.burst_phase_until_s {
+                self.burst_bad = !self.burst_bad;
+                let mean = if self.burst_bad {
+                    self.burst_burst_s
+                } else {
+                    self.burst_gap_s
+                };
+                // Phase lengths are uniform around the mean; the floor
+                // keeps a zero-gap config from spinning this loop.
+                let mean = mean.max(1e-3);
+                self.burst_phase_until_s += self.rng.range_f64(0.5 * mean, 1.5 * mean);
+            }
+            if self.burst_bad && self.burst_kill_prob > 0.0 {
+                let p_kill = (self.burst_kill_prob * dt).min(1.0);
+                for f in &mut self.flows {
+                    if f.is_busy() && self.rng.next_f64() < p_kill {
+                        f.close();
+                        report.events.push(FlowEvent {
+                            id: f.id,
+                            bytes: 0.0,
+                            request_done: false,
+                            became_ready: false,
+                            failed: true,
+                            rejected: false,
+                        });
+                    }
+                }
+            }
+        }
+
         // Failure injection: active flows die with the configured
         // per-minute hazard (checked after delivery so a failing step
         // still accounts its bytes, like a real mid-stream reset).
@@ -652,6 +707,30 @@ impl NetSim {
                     factor
                 };
                 entry.0 = entry.0.max(self.now_s + duration_s);
+            }
+            FaultKind::BurstLoss {
+                burst_s,
+                gap_s,
+                kill_prob,
+                duration_s,
+            } => {
+                if self.now_s < self.burst_until_s {
+                    // Overlapping windows compose to the worst case:
+                    // hotter bursts, shorter gaps; the running phase
+                    // machine keeps its current phase.
+                    self.burst_kill_prob = self.burst_kill_prob.max(kill_prob);
+                    self.burst_burst_s = self.burst_burst_s.max(burst_s);
+                    self.burst_gap_s = self.burst_gap_s.min(gap_s);
+                } else {
+                    self.burst_kill_prob = kill_prob;
+                    self.burst_burst_s = burst_s;
+                    self.burst_gap_s = gap_s;
+                    // A burst-loss window opens in a loss burst.
+                    self.burst_bad = true;
+                    self.burst_phase_until_s =
+                        self.now_s + self.rng.range_f64(0.5 * burst_s, 1.5 * burst_s);
+                }
+                self.burst_until_s = self.burst_until_s.max(self.now_s + duration_s);
             }
             FaultKind::MidBodyDrop {
                 after_bytes,
@@ -1150,6 +1229,58 @@ mod tests {
             }
         }
         assert_eq!(failed, 0, "drop window must not outlive its duration");
+        assert_eq!(done, 1);
+    }
+
+    #[test]
+    fn burst_loss_clusters_resets_inside_its_window_only() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 2.0,
+            kind: FaultKind::BurstLoss {
+                burst_s: 5.0,
+                gap_s: 0.0,
+                kill_prob: 1.0,
+                duration_s: 10.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 16).unwrap();
+        let ids: Vec<FlowId> = (0..3).map(|_| sim.open_flow().unwrap()).collect();
+        while ids.iter().any(|&id| !sim.flow_ready(id)) {
+            sim.step(None);
+        }
+        for (i, id) in ids.iter().enumerate() {
+            sim.begin_request(*id, 1e12, false, i as u64).unwrap();
+        }
+        let mut fail_times = Vec::new();
+        while sim.now() < 15.0 {
+            let rep = sim.step(None);
+            let t = rep.now_s;
+            fail_times.extend(rep.events.iter().filter(|e| e.failed).map(|_| t));
+        }
+        assert!(
+            fail_times.iter().all(|&t| (2.0..=12.1).contains(&t)),
+            "resets outside the burst window: {fail_times:?}"
+        );
+        assert!(
+            fail_times.len() >= 2,
+            "a 10 s always-bad window should cluster several resets: {fail_times:?}"
+        );
+        // Past the window: a fresh flow completes untouched.
+        let g = sim.open_flow().unwrap();
+        while !sim.flow_ready(g) {
+            sim.step(None);
+        }
+        sim.begin_request(g, 3e6, false, 9).unwrap();
+        let (mut failed, mut done) = (0, 0);
+        for _ in 0..2_000 {
+            let rep = sim.step(None);
+            failed += rep.events.iter().filter(|e| e.failed).count();
+            done += rep.events.iter().filter(|e| e.request_done).count();
+            if done > 0 {
+                break;
+            }
+        }
+        assert_eq!(failed, 0, "burst window must not outlive its duration");
         assert_eq!(done, 1);
     }
 

@@ -21,13 +21,14 @@
 //! | [`FaultKind::Brownout`] | overloaded archive front-end | new connections queue behind the brownout; new requests are rejected until it ends |
 //! | [`FaultKind::SlowMirror`] | one archive mirror slows while replicas stay healthy | per-connection cap × `factor`, but only for flows bound to the named mirror |
 //! | [`FaultKind::MidBodyDrop`] | time-windowed mid-body resets (flaky middlebox, response truncation) | while the window is active, responses crossing `after_bytes` delivered are reset with probability `frac` |
+//! | [`FaultKind::BurstLoss`] | Gilbert–Elliott-style correlated losses (flapping link, overloaded middlebox) | while the window is active, a two-state process alternates quiet spells and loss bursts; during a burst every busy flow is reset at `kill_prob`/s |
 //!
 //! ## Profiles
 //!
 //! [`FaultProfile`] names ready-made hostile variants of any scenario —
 //! `flaky`, `stalls`, `errors`, `collapse`, `flashcrowd`, `brownout`,
-//! `slowmirror`, and `chaos` (all of the above interleaved). A profile
-//! expands to a
+//! `slowmirror`, `burstloss`, and `chaos` (all of the above
+//! interleaved). A profile expands to a
 //! concrete [`FaultSchedule`] via [`FaultProfile::schedule`], fully
 //! determined by `(profile, seed, horizon, link capacity)`. The CLI
 //! exposes this as `fastbiodl download … --faults <profile>`; tests use
@@ -91,6 +92,27 @@ pub enum FaultKind {
     MidBodyDrop {
         after_bytes: f64,
         frac: f64,
+        duration_s: f64,
+    },
+    /// **Correlated burst losses** (Gilbert–Elliott-style): for
+    /// `duration_s`, the link alternates between a *bad* state —
+    /// every busy flow is reset with probability `kill_prob` per
+    /// second — and a quiet *good* state. Phase lengths are drawn
+    /// around `burst_s` (bad) and `gap_s` (good) from the engine's
+    /// seeded PRNG, and the window opens in a burst. Unlike
+    /// independent [`FaultKind::ConnectionReset`] events, losses
+    /// cluster: several connections die within the same burst, which
+    /// is exactly the reconnect-stampede pattern flapping links and
+    /// overloaded middleboxes produce.
+    BurstLoss {
+        /// Mean loss-burst (bad-state) length, seconds (> 0).
+        burst_s: f64,
+        /// Mean quiet-spell (good-state) length, seconds (>= 0).
+        gap_s: f64,
+        /// Per-second reset probability for each busy flow while the
+        /// bad state is active, in [0, 1].
+        kill_prob: f64,
+        /// Window length, seconds.
         duration_s: f64,
     },
 }
@@ -169,6 +191,25 @@ impl FaultKind {
                     return Err("MidBodyDrop duration must be >= 0".into());
                 }
             }
+            FaultKind::BurstLoss {
+                burst_s,
+                gap_s,
+                kill_prob,
+                duration_s,
+            } => {
+                if !(*burst_s > 0.0 && burst_s.is_finite()) {
+                    return Err(format!("BurstLoss burst_s {burst_s} must be > 0"));
+                }
+                if !(*gap_s >= 0.0 && gap_s.is_finite()) {
+                    return Err(format!("BurstLoss gap_s {gap_s} must be >= 0"));
+                }
+                if !(0.0..=1.0).contains(kill_prob) {
+                    return Err(format!("BurstLoss kill_prob {kill_prob} outside [0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("BurstLoss duration must be >= 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -184,6 +225,7 @@ impl FaultKind {
             FaultKind::Brownout { .. } => "brownout",
             FaultKind::SlowMirror { .. } => "slow-mirror",
             FaultKind::MidBodyDrop { .. } => "mid-body-drop",
+            FaultKind::BurstLoss { .. } => "burst-loss",
         }
     }
 }
@@ -270,12 +312,16 @@ pub enum FaultProfile {
     /// collapses early and stays degraded while replicas stay healthy
     /// (per-flow asymmetric fault; exercises mirror failover).
     SlowMirror,
+    /// Correlated burst losses: recurring windows in which a
+    /// Gilbert–Elliott two-state process clusters connection resets
+    /// into short storms separated by quiet spells.
+    BurstLoss,
     /// Everything above, interleaved.
     Chaos,
 }
 
 /// Profiles exercised by the controller×fault test matrix.
-pub const MATRIX_PROFILES: [FaultProfile; 7] = [
+pub const MATRIX_PROFILES: [FaultProfile; 8] = [
     FaultProfile::Flaky,
     FaultProfile::Stalls,
     FaultProfile::ServerErrors,
@@ -283,6 +329,7 @@ pub const MATRIX_PROFILES: [FaultProfile; 7] = [
     FaultProfile::FlashCrowd,
     FaultProfile::Brownout,
     FaultProfile::SlowMirror,
+    FaultProfile::BurstLoss,
 ];
 
 impl FaultProfile {
@@ -297,10 +344,11 @@ impl FaultProfile {
             "flashcrowd" | "flash-crowd" | "crowd" => Ok(FaultProfile::FlashCrowd),
             "brownout" => Ok(FaultProfile::Brownout),
             "slowmirror" | "slow-mirror" => Ok(FaultProfile::SlowMirror),
+            "burstloss" | "burst-loss" | "bursts" => Ok(FaultProfile::BurstLoss),
             "chaos" | "all" => Ok(FaultProfile::Chaos),
             other => Err(format!(
-                "unknown fault profile '{other}' \
-                 (none|flaky|stalls|errors|collapse|flashcrowd|brownout|slowmirror|chaos)"
+                "unknown fault profile '{other}' (none|flaky|stalls|errors|collapse|\
+                 flashcrowd|brownout|slowmirror|burstloss|chaos)"
             )),
         }
     }
@@ -316,6 +364,7 @@ impl FaultProfile {
             FaultProfile::FlashCrowd => "flashcrowd",
             FaultProfile::Brownout => "brownout",
             FaultProfile::SlowMirror => "slowmirror",
+            FaultProfile::BurstLoss => "burstloss",
             FaultProfile::Chaos => "chaos",
         }
     }
@@ -337,6 +386,7 @@ impl FaultProfile {
             FaultProfile::FlashCrowd => gen_crowd(seed, horizon_s, link_mbps, &mut events),
             FaultProfile::Brownout => gen_brownout(seed, horizon_s, &mut events),
             FaultProfile::SlowMirror => gen_slowmirror(seed, horizon_s, &mut events),
+            FaultProfile::BurstLoss => gen_burstloss(seed, horizon_s, &mut events),
             FaultProfile::Chaos => {
                 gen_flaky(seed, horizon_s, &mut events);
                 gen_stalls(seed, horizon_s, &mut events);
@@ -346,6 +396,7 @@ impl FaultProfile {
                 gen_brownout(seed, horizon_s, &mut events);
                 gen_slowmirror(seed, horizon_s, &mut events);
                 gen_bodydrops(seed, horizon_s, &mut events);
+                gen_burstloss(seed, horizon_s, &mut events);
             }
         }
         FaultSchedule::new(events)
@@ -462,6 +513,26 @@ fn gen_bodydrops(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     }
 }
 
+fn gen_burstloss(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0x6E0);
+    // Recurring Gilbert–Elliott windows: sub-two-second loss bursts
+    // separated by a few quiet seconds, with a high per-second kill
+    // probability inside each burst, so resets arrive clustered.
+    let mut t = rng.range_f64(8.0, 18.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::BurstLoss {
+                burst_s: rng.range_f64(0.5, 2.0),
+                gap_s: rng.range_f64(2.0, 6.0),
+                kill_prob: rng.range_f64(0.5, 0.95),
+                duration_s: rng.range_f64(8.0, 20.0),
+            },
+        });
+        t += rng.range_f64(30.0, 60.0);
+    }
+}
+
 fn gen_slowmirror(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     let mut rng = profile_rng(seed, 0x510);
     // The primary mirror collapses early and stays degraded for the
@@ -505,10 +576,14 @@ mod tests {
         let mut names: Vec<&str> = s.events().iter().map(|e| e.kind.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 8, "chaos missing classes: {names:?}");
+        assert_eq!(names.len(), 9, "chaos missing classes: {names:?}");
         assert!(
             names.contains(&"mid-body-drop"),
             "chaos should include the windowed mid-body drop: {names:?}"
+        );
+        assert!(
+            names.contains(&"burst-loss"),
+            "chaos should include correlated burst losses: {names:?}"
         );
     }
 
@@ -523,6 +598,7 @@ mod tests {
             FaultProfile::FlashCrowd,
             FaultProfile::Brownout,
             FaultProfile::SlowMirror,
+            FaultProfile::BurstLoss,
             FaultProfile::Chaos,
         ] {
             assert_eq!(FaultProfile::parse(p.name()).unwrap(), p);
@@ -583,6 +659,38 @@ mod tests {
             after_bytes: 1e6,
             frac: 0.7,
             duration_s: 5.0
+        }
+        .validate()
+        .is_ok());
+        assert!(FaultKind::BurstLoss {
+            burst_s: 0.0,
+            gap_s: 2.0,
+            kill_prob: 0.5,
+            duration_s: 10.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::BurstLoss {
+            burst_s: 1.0,
+            gap_s: -1.0,
+            kill_prob: 0.5,
+            duration_s: 10.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::BurstLoss {
+            burst_s: 1.0,
+            gap_s: 2.0,
+            kill_prob: 1.5,
+            duration_s: 10.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::BurstLoss {
+            burst_s: 1.0,
+            gap_s: 3.0,
+            kill_prob: 0.8,
+            duration_s: 12.0
         }
         .validate()
         .is_ok());

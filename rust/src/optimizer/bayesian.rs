@@ -18,8 +18,9 @@
 //! Total transfer time ends ≈20–40 % behind gradient descent
 //! (Figure 4 / `fig4_gd_vs_bayes` bench).
 
-use crate::config::OptimizerConfig;
-use crate::optimizer::{effective_k, ConcurrencyController, MirrorHealth, Probe};
+use crate::config::{ControlConfig, OptimizerConfig};
+use crate::control::{chunk_scale, discounted_goodput, ControlAction, ControlSignals, Controller};
+use crate::optimizer::{effective_k, Probe};
 use crate::runtime::SharedRuntime;
 use crate::util::prng::Prng;
 use crate::Result;
@@ -29,6 +30,9 @@ use crate::Result;
 /// mirrors in [`crate::optimizer::mirror`] (same math, f64 precision).
 pub struct BayesController {
     cfg: OptimizerConfig,
+    /// Control-plane knobs (fault penalty, adaptive chunk scale);
+    /// the fault-blind default unless [`BayesController::with_control`].
+    control: ControlConfig,
     runtime: Option<SharedRuntime>,
     /// Bucketed observation memory: slot i covers one concurrency
     /// region; `None` = never observed.
@@ -47,10 +51,6 @@ pub struct BayesController {
     pub last_ei_max: f64,
     /// Total artifact invocations (mirror steps do not count).
     pub steps_executed: u64,
-    /// Latest aggregate mirror-health signal (neutral until the engine
-    /// reports one); rescales `k` via
-    /// [`crate::optimizer::effective_k`].
-    health: MirrorHealth,
 }
 
 impl BayesController {
@@ -62,6 +62,13 @@ impl BayesController {
     /// Runtime-free controller running the pure-Rust GP/EI mirrors.
     pub fn new_mirror(cfg: OptimizerConfig) -> BayesController {
         Self::build(cfg, None)
+    }
+
+    /// Attach control-plane knobs (builder style; the default is the
+    /// fault-blind [`ControlConfig::default`]).
+    pub fn with_control(mut self, control: ControlConfig) -> BayesController {
+        self.control = control;
+        self
     }
 
     fn build(cfg: OptimizerConfig, runtime: Option<SharedRuntime>) -> BayesController {
@@ -87,10 +94,10 @@ impl BayesController {
             observed: 0,
             rng: Prng::new(0xBA7E5),
             cfg,
+            control: ControlConfig::default(),
             runtime,
             last_ei_max: 0.0,
             steps_executed: 0,
-            health: MirrorHealth::default(),
         }
     }
 
@@ -187,8 +194,16 @@ impl BayesController {
     }
 }
 
-impl ConcurrencyController for BayesController {
-    fn on_probe(&mut self, probe: Probe) -> Result<usize> {
+impl Controller for BayesController {
+    fn on_signals(&mut self, signals: &ControlSignals) -> Result<ControlAction> {
+        // Signal → utility mapping: fault-penalized goodput (identity
+        // at the default weight 0) enters the observation memory the
+        // GP surrogate is fitted on.
+        let probe = Probe {
+            concurrency: signals.concurrency,
+            mbps: discounted_goodput(signals, self.control.fault_penalty),
+        };
+        let scale_out = chunk_scale(signals, &self.control);
         let b = self.bucket_of(probe.concurrency);
         self.buckets[b] = Some(probe);
         self.observed += 1;
@@ -198,14 +213,17 @@ impl ConcurrencyController for BayesController {
             let hi = (self.cfg.c_max as u64).min(16).max(self.cfg.c_min as u64);
             let c = self.rng.range_u64(self.cfg.c_min as u64, hi) as usize;
             self.c_target = c;
-            return Ok(c);
+            return Ok(ControlAction {
+                concurrency: c,
+                chunk_scale: scale_out,
+            });
         }
 
         let (c_obs, t_obs, valid, max_t) = self.export();
         let u_norm = if max_t > 0.0 { max_t } else { 1.0 };
         // Mirror-aware utility: more healthy mirrors flatten the
         // penalty (higher C*), failure pressure steepens it.
-        let k = effective_k(self.cfg.k, self.health);
+        let k = effective_k(self.cfg.k, signals.mirror);
         // Clone the Arc handle so the match holds no borrow of self.
         let runtime = self.runtime.clone();
         let next_c = match runtime {
@@ -233,19 +251,21 @@ impl ConcurrencyController for BayesController {
         self.c_target = next_c
             .round()
             .clamp(self.cfg.c_min as f64, self.cfg.c_max as f64) as usize;
-        Ok(self.c_target)
+        Ok(ControlAction {
+            concurrency: self.c_target,
+            chunk_scale: scale_out,
+        })
     }
 
-    fn current(&self) -> usize {
-        self.c_target
+    fn current(&self) -> ControlAction {
+        ControlAction {
+            concurrency: self.c_target,
+            chunk_scale: 1.0,
+        }
     }
 
     fn name(&self) -> &'static str {
         "bayesian"
-    }
-
-    fn on_mirror_health(&mut self, health: MirrorHealth) {
-        self.health = health;
     }
 }
 

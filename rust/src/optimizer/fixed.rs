@@ -5,7 +5,7 @@
 //! move. Exists so the baselines and the adaptive system run through
 //! the *identical* session machinery and differ only in this policy.
 
-use crate::optimizer::{ConcurrencyController, Probe};
+use crate::control::{ControlAction, ControlSignals, Controller};
 use crate::Result;
 
 /// Static concurrency.
@@ -22,13 +22,15 @@ impl FixedController {
     }
 }
 
-impl ConcurrencyController for FixedController {
-    fn on_probe(&mut self, _probe: Probe) -> Result<usize> {
-        Ok(self.level)
+impl Controller for FixedController {
+    fn on_signals(&mut self, _signals: &ControlSignals) -> Result<ControlAction> {
+        // A static baseline ignores every signal — level and chunk
+        // size never move, whatever the network does.
+        Ok(ControlAction::concurrency_only(self.level))
     }
 
-    fn current(&self) -> usize {
-        self.level
+    fn current(&self) -> ControlAction {
+        ControlAction::concurrency_only(self.level)
     }
 
     fn name(&self) -> &'static str {
@@ -43,15 +45,10 @@ mod tests {
     #[test]
     fn never_moves() {
         let mut c = FixedController::new(5);
-        assert_eq!(c.current(), 5);
+        assert_eq!(c.current().concurrency, 5);
         for t in [0.0, 100.0, 10_000.0] {
-            let next = c
-                .on_probe(Probe {
-                    concurrency: 5.0,
-                    mbps: t,
-                })
-                .unwrap();
-            assert_eq!(next, 5);
+            let action = c.on_signals(&ControlSignals::probe(5.0, t)).unwrap();
+            assert_eq!(action, ControlAction::concurrency_only(5));
         }
     }
 

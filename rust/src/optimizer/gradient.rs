@@ -3,12 +3,17 @@
 //!
 //! Every probe interval the controller:
 //!
-//! 1. pushes `(C, T)` into the probe-history ring,
+//! 1. discounts the snapshot's goodput by the weighted retry/reject
+//!    rate ([`crate::control::discounted_goodput`]; identity while
+//!    `fault_penalty` is 0) and pushes `(C, T_eff)` into the
+//!    probe-history ring,
 //! 2. executes the `gd_step` XLA artifact (L1 Pallas utility +
 //!    weighted-slope kernels, L2 update math) on the exported window,
 //! 3. keeps the *continuous* concurrency state the artifact returned
 //!    (so sub-unit steps accumulate instead of being lost to rounding)
-//!    and applies the rounded, clamped value to the worker pool.
+//!    and applies the rounded, clamped value to the worker pool,
+//!    alongside the chunk scale derived from the snapshot's fault
+//!    pressure ([`crate::control::chunk_scale`]).
 //!
 //! Exploration falls out of the artifact's degenerate-window rule: with
 //! no concurrency variation in the window the step is +1, so a
@@ -17,9 +22,10 @@
 //! probing behaviour the paper describes ("starts with one thread and
 //! probes every 5 seconds", §5.2).
 
-use crate::config::OptimizerConfig;
+use crate::config::{ControlConfig, OptimizerConfig};
+use crate::control::{chunk_scale, discounted_goodput, ControlAction, ControlSignals, Controller};
 use crate::optimizer::history::ProbeHistory;
-use crate::optimizer::{effective_k, ConcurrencyController, MirrorHealth, Probe};
+use crate::optimizer::{effective_k, Probe};
 use crate::runtime::SharedRuntime;
 use crate::Result;
 
@@ -31,6 +37,9 @@ use crate::Result;
 /// still run the adaptive controller deterministically.
 pub struct GdController {
     cfg: OptimizerConfig,
+    /// Control-plane knobs (fault penalty, adaptive chunk scale);
+    /// the fault-blind default unless [`GdController::with_control`].
+    control: ControlConfig,
     runtime: Option<SharedRuntime>,
     history: ProbeHistory,
     /// Continuous concurrency state (the artifact's `next_c`).
@@ -44,10 +53,6 @@ pub struct GdController {
     /// Total artifact invocations (perf accounting; mirror steps do
     /// not count).
     pub steps_executed: u64,
-    /// Latest aggregate mirror-health signal (neutral until the engine
-    /// reports one); rescales `k` via
-    /// [`crate::optimizer::effective_k`].
-    health: MirrorHealth,
 }
 
 impl GdController {
@@ -61,6 +66,13 @@ impl GdController {
         Self::build(cfg, None)
     }
 
+    /// Attach control-plane knobs (builder style; the default is the
+    /// fault-blind [`ControlConfig::default`]).
+    pub fn with_control(mut self, control: ControlConfig) -> GdController {
+        self.control = control;
+        self
+    }
+
     fn build(cfg: OptimizerConfig, runtime: Option<SharedRuntime>) -> GdController {
         let window = runtime
             .as_ref()
@@ -71,11 +83,11 @@ impl GdController {
             c_target: cfg.c_init,
             history: ProbeHistory::new(window, cfg.history_half_life),
             cfg,
+            control: ControlConfig::default(),
             runtime,
             last_gradient: 0.0,
             last_step: 0.0,
             steps_executed: 0,
-            health: MirrorHealth::default(),
         }
     }
 
@@ -86,13 +98,19 @@ impl GdController {
     }
 }
 
-impl ConcurrencyController for GdController {
-    fn on_probe(&mut self, probe: Probe) -> Result<usize> {
-        self.history.push(probe);
+impl Controller for GdController {
+    fn on_signals(&mut self, signals: &ControlSignals) -> Result<ControlAction> {
+        // Signal → utility mapping: fault-penalized goodput (identity
+        // at the default weight 0) enters the probe history the
+        // artifact consumes.
+        self.history.push(Probe {
+            concurrency: signals.concurrency,
+            mbps: discounted_goodput(signals, self.control.fault_penalty),
+        });
         let (c_hist, t_hist, weights) = self.history.export();
         // Mirror-aware utility: more healthy mirrors flatten the
         // penalty (higher C*), failure pressure steepens it.
-        let k = effective_k(self.cfg.k, self.health);
+        let k = effective_k(self.cfg.k, signals.mirror);
         // Clone the Arc handle so the match holds no borrow of self.
         let runtime = self.runtime.clone();
         let (next_c, grad, step) = match runtime {
@@ -133,19 +151,21 @@ impl ConcurrencyController for GdController {
         self.last_gradient = grad;
         self.last_step = step;
         self.c_target = self.round_clamp(self.c_continuous);
-        Ok(self.c_target)
+        Ok(ControlAction {
+            concurrency: self.c_target,
+            chunk_scale: chunk_scale(signals, &self.control),
+        })
     }
 
-    fn current(&self) -> usize {
-        self.c_target
+    fn current(&self) -> ControlAction {
+        ControlAction {
+            concurrency: self.c_target,
+            chunk_scale: 1.0,
+        }
     }
 
     fn name(&self) -> &'static str {
         "gradient-descent"
-    }
-
-    fn on_mirror_health(&mut self, health: MirrorHealth) {
-        self.health = health;
     }
 }
 
@@ -157,28 +177,23 @@ mod tests {
 
     use super::*;
     use crate::config::OptimizerConfig;
+    use crate::control::MirrorHealth;
 
     #[test]
     fn mirror_controller_explores_up_then_follows_gradient() {
         let mut gd = GdController::new_mirror(OptimizerConfig::default());
-        assert_eq!(gd.current(), 1);
+        assert_eq!(gd.current().concurrency, 1);
         // Degenerate window (single concurrency level) => +1 explore.
         let c1 = gd
-            .on_probe(Probe {
-                concurrency: 1.0,
-                mbps: 100.0,
-            })
-            .unwrap();
+            .on_signals(&ControlSignals::probe(1.0, 100.0))
+            .unwrap()
+            .concurrency;
         assert_eq!(c1, 2);
         // Linear throughput growth => positive gradient, keeps rising.
-        let c2 = gd
-            .on_probe(Probe {
-                concurrency: 2.0,
-                mbps: 200.0,
-            })
-            .unwrap();
-        assert!(c2 >= c1);
+        let a2 = gd.on_signals(&ControlSignals::probe(2.0, 200.0)).unwrap();
+        assert!(a2.concurrency >= c1);
         assert!(gd.last_gradient > 0.0);
+        assert_eq!(a2.chunk_scale, 1.0, "clean window keeps full chunks");
         assert_eq!(gd.steps_executed, 0, "mirror must not count artifact calls");
     }
 
@@ -189,28 +204,63 @@ mod tests {
         // a second healthy mirror earns. Probing around C = 40 the
         // plain controller sees a falling utility, the mirror-aware one
         // a rising one.
-        let run = |health: Option<MirrorHealth>| {
+        let run = |health: MirrorHealth| {
             let mut gd = GdController::new_mirror(OptimizerConfig::default());
-            if let Some(h) = health {
-                gd.on_mirror_health(h);
-            }
             for c in [38.0f64, 39.0, 40.0, 41.0, 42.0] {
-                gd.on_probe(Probe {
-                    concurrency: c,
-                    mbps: 100.0 * c.powf(0.6),
-                })
-                .unwrap();
+                let signals = ControlSignals {
+                    mirror: health,
+                    ..ControlSignals::probe(c, 100.0 * c.powf(0.6))
+                };
+                gd.on_signals(&signals).unwrap();
             }
             gd.last_gradient
         };
-        assert!(run(None) < 0.0, "plain k should see utility falling");
+        assert!(
+            run(MirrorHealth::default()) < 0.0,
+            "plain k should see utility falling"
+        );
         let healthy = MirrorHealth {
             headroom: 2.0,
             fail_pressure: 0.0,
         };
         assert!(
-            run(Some(healthy)) > 0.0,
+            run(healthy) > 0.0,
             "two healthy mirrors should keep the controller growing"
+        );
+    }
+
+    #[test]
+    fn fault_penalty_discounts_the_window_zero_weight_is_identity() {
+        // Same signal stream, once fault-blind, once fault-aware: on a
+        // clean stream the two controllers stay in lockstep; once the
+        // stream carries resets, the aware one sees lower utilities.
+        let clean = |c: f64| ControlSignals::probe(c, 100.0 * c);
+        let dirty = |c: f64| ControlSignals {
+            reset_rate: 3.0,
+            retry_rate: 3.0,
+            ..ControlSignals::probe(c, 100.0 * c)
+        };
+        let mut blind = GdController::new_mirror(OptimizerConfig::default());
+        let mut aware =
+            GdController::new_mirror(OptimizerConfig::default()).with_control(ControlConfig {
+                fault_penalty: 2.0,
+                ..ControlConfig::default()
+            });
+        for c in [1.0, 2.0, 3.0] {
+            let b = blind.on_signals(&clean(c)).unwrap();
+            let a = aware.on_signals(&clean(c)).unwrap();
+            assert_eq!(a, b, "clean windows must keep the pair in lockstep");
+        }
+        // A reset-heavy window: the aware controller's history now
+        // carries the discounted throughput, the blind one's does not.
+        blind.on_signals(&dirty(4.0)).unwrap();
+        aware.on_signals(&dirty(4.0)).unwrap();
+        assert!(
+            aware.last_gradient < blind.last_gradient,
+            "discounted top-of-window sample must flatten the gradient: \
+             aware {} vs blind {}",
+            aware.last_gradient,
+            blind.last_gradient
         );
     }
 }

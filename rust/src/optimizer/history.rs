@@ -3,6 +3,14 @@
 //! Keeps the last `WINDOW` probes `(concurrency, mbps)` and produces
 //! the padded, masked, recency-weighted arrays the fixed-shape XLA
 //! artifacts expect (oldest first, zeros beyond `len`).
+//!
+//! Probes are derived from the control plane's per-interval
+//! [`crate::control::ControlSignals`] snapshot: the adaptive
+//! controllers push `(signals.concurrency, discounted goodput)`, where
+//! the discount is the fault-penalty term
+//! ([`crate::control::discounted_goodput`] — identity at the default
+//! weight 0, so a fault-blind history is bit-identical to the
+//! pre-control-plane one).
 
 use crate::optimizer::Probe;
 

@@ -12,11 +12,33 @@
 //!    thousands of random parameter draws without paying XLA dispatch.
 //!
 //! Nothing on the request path calls these; the runtime executes the
-//! artifacts.
+//! artifacts — with one exception: [`fault_discount`] *is* the
+//! production formula. The control plane's fault-penalty term
+//! ([`crate::control::discounted_goodput`]) delegates here, so the
+//! [`utility`] cross-checks below include the penalty term: the
+//! fault-aware utility is exactly
+//! `utility(fault_discount(T, rate, weight), C, k)`, and the
+//! weight-0 identity (bit-for-bit) is what keeps benign and
+//! paper-figure runs unchanged.
 
 /// Utility `U = T / k^C` (paper §4.1).
 pub fn utility(throughput: f64, concurrency: f64, k: f64) -> f64 {
     throughput / k.powf(concurrency)
+}
+
+/// Fault-penalized throughput feeding [`utility`]:
+/// `T_eff = T / (1 + weight × rate)`, where `rate` is the weighted
+/// retry/reject rate ([`crate::control::weighted_fault_rate`]) and
+/// `weight` is [`crate::config::ControlConfig::fault_penalty`].
+///
+/// With `weight <= 0` **or** a clean window (`rate <= 0`) the input is
+/// returned unchanged — same bits, not just same value — so the
+/// fault-blind default cannot perturb a single f64 operation.
+pub fn fault_discount(throughput: f64, rate: f64, weight: f64) -> f64 {
+    if weight <= 0.0 || rate <= 0.0 {
+        return throughput;
+    }
+    throughput / (1.0 + weight * rate)
 }
 
 /// The §4.1 closed form: `C* = 1 / ln k`, the unique maximizer of
@@ -186,6 +208,25 @@ mod tests {
             assert!(u(cs) > u(cs - 0.5), "k={k}");
             assert!(u(cs) > u(cs + 0.5), "k={k}");
         }
+    }
+
+    #[test]
+    fn fault_discount_is_identity_at_zero_weight_and_monotone() {
+        // Bit-level identity: the default weight must not touch the
+        // value at all.
+        for t in [0.0, 1.5, 812.25, f64::MAX] {
+            assert_eq!(fault_discount(t, 10.0, 0.0).to_bits(), t.to_bits());
+            assert_eq!(fault_discount(t, 0.0, 10.0).to_bits(), t.to_bits());
+        }
+        // Monotone decreasing in both rate and weight.
+        let base = fault_discount(1000.0, 1.0, 1.0);
+        assert!(base < 1000.0);
+        assert!(fault_discount(1000.0, 2.0, 1.0) < base);
+        assert!(fault_discount(1000.0, 1.0, 2.0) < base);
+        // The fault-aware utility composes: U_eff = U(T_eff, C, k).
+        let u_blind = utility(1000.0, 8.0, 1.02);
+        let u_aware = utility(fault_discount(1000.0, 4.0, 1.0), 8.0, 1.02);
+        assert!((u_aware - u_blind / 5.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Adaptive concurrency controllers (paper §4).
 //!
-//! A [`ConcurrencyController`] consumes one probe observation per
-//! probing interval — `(concurrency used, mean throughput measured)` —
-//! and emits the next target concurrency. Three implementations:
+//! Controllers implement the control plane's
+//! [`crate::control::Controller`] trait: once per probing interval they
+//! consume a [`crate::control::ControlSignals`] snapshot — goodput,
+//! retry/reject rates, mirror headroom/fail-pressure, connect-RTT —
+//! and emit a [`crate::control::ControlAction`] (the next concurrency
+//! target plus an adaptive chunk scale). Three implementations:
 //!
 //! * [`gradient::GdController`] — the paper's chosen controller:
 //!   gradient descent on `-U(T, C) = -T/k^C`, executed through the
@@ -16,13 +19,21 @@
 //!
 //! [`history::ProbeHistory`] is the shared probe ring; [`mirror`] holds
 //! pure-Rust re-implementations of the artifact math used only by
-//! tests to cross-check the XLA path.
+//! tests to cross-check the XLA path (including the fault-penalty
+//! discount, [`mirror::fault_discount`]).
 //!
-//! Multi-mirror sessions additionally feed the adaptive controllers an
-//! aggregate [`MirrorHealth`] signal each probe; [`effective_k`]
-//! rescales the §4.1 utility penalty so the controller grows
-//! concurrency when a second healthy mirror opens headroom and backs
-//! off under sustained failures.
+//! The signal → utility mapping of the adaptive controllers has two
+//! fault-aware ingredients, both neutral by default:
+//!
+//! * the snapshot's [`crate::control::MirrorHealth`] rescales the
+//!   utility penalty through [`effective_k`], so the controller grows
+//!   concurrency when a second healthy mirror opens headroom and backs
+//!   off under sustained failures (single-mirror sessions carry the
+//!   neutral signal — bit-identical behaviour);
+//! * with [`crate::config::ControlConfig::fault_penalty`] `> 0`, the
+//!   window goodput is discounted by the weighted retry/reject rate
+//!   ([`crate::control::discounted_goodput`]) before entering the
+//!   utility, so throughput bought with retries stops looking optimal.
 
 pub mod bayesian;
 pub mod fixed;
@@ -35,11 +46,14 @@ pub use fixed::FixedController;
 pub use gradient::GdController;
 pub use history::ProbeHistory;
 
-use crate::config::{OptimizerConfig, OptimizerKind};
+use crate::config::{ControlConfig, OptimizerConfig, OptimizerKind};
+use crate::control::{Controller, MirrorHealth};
 use crate::runtime::SharedRuntime;
 use crate::Result;
 
-/// One probe observation.
+/// One probe observation (the probe-history element of the adaptive
+/// controllers; assembled from a [`crate::control::ControlSignals`]
+/// snapshot after the fault-penalty discount).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Probe {
     /// Concurrency the probe ran at.
@@ -48,38 +62,10 @@ pub struct Probe {
     pub mbps: f64,
 }
 
-/// Aggregate mirror-health signal the session engine feeds the
-/// adaptive controllers once per probe (multi-mirror transfers only;
-/// single-mirror sessions never emit it, so their behaviour is
-/// bit-identical to a health-unaware controller).
-///
-/// Derived from the per-session
-/// [`crate::session::mirrors::MirrorBoard`]: `headroom` is the
-/// effective number of simultaneously useful mirrors
-/// ([`crate::session::mirrors::MirrorBoard::concurrency_headroom`]),
-/// `fail_pressure` the decayed failure rate across the fleet
-/// ([`crate::session::mirrors::MirrorBoard::fail_pressure`]).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct MirrorHealth {
-    /// Effective number of healthy mirrors, in `[1, mirror_count]`.
-    pub headroom: f64,
-    /// Decayed failure pressure across mirrors (0 = clean).
-    pub fail_pressure: f64,
-}
-
-impl Default for MirrorHealth {
-    /// Neutral signal: one mirror, no failures —
-    /// [`effective_k`] returns `k` unchanged.
-    fn default() -> Self {
-        MirrorHealth {
-            headroom: 1.0,
-            fail_pressure: 0.0,
-        }
-    }
-}
-
 /// Mirror-aware utility penalty: rescale the coefficient `k` of
-/// `U = T / k^C` by the fleet's health.
+/// `U = T / k^C` by the fleet's health. This is an internal detail of
+/// the controllers' signal → utility mapping; the engine only ships
+/// the [`MirrorHealth`] snapshot.
 ///
 /// A second healthy mirror opens concurrency headroom — per-connection
 /// caps and staging queues are per-endpoint, so the marginal cost of a
@@ -103,51 +89,56 @@ pub fn effective_k(k: f64, health: MirrorHealth) -> f64 {
     k_eff.clamp(1.0 + (k - 1.0) / 8.0, 1.0 + (k - 1.0) * 4.0)
 }
 
-/// A concurrency controller: Algorithm 1's decision step.
-///
-/// Deliberately **not** `Send`: the PJRT client (and thus the XLA-backed
-/// controllers) lives on the coordinating thread, exactly like the
-/// paper's single optimizer thread. Worker threads never touch the
-/// controller — they observe the [`crate::coordinator::StatusArray`]
-/// it writes through the session driver.
-pub trait ConcurrencyController {
-    /// Consume one probe, return the next target concurrency.
-    fn on_probe(&mut self, probe: Probe) -> Result<usize>;
-
-    /// Current target without new information (initial value).
-    fn current(&self) -> usize;
-
-    /// Display name for logs/reports.
-    fn name(&self) -> &'static str;
-
-    /// Receive the aggregate mirror-health signal for the upcoming
-    /// probe (multi-mirror sessions only). Adaptive controllers rescale
-    /// their utility penalty through [`effective_k`]; the default
-    /// implementation ignores it (static controllers, baselines).
-    fn on_mirror_health(&mut self, _health: MirrorHealth) {}
+/// Build the controller selected by `cfg.kind` with the fault-blind
+/// default [`ControlConfig`] (fault penalty off, full-size chunks) —
+/// the pre-control-plane behaviour, used by the paper experiments and
+/// most tests. See [`build_controller_with`] for the fault-aware
+/// variant.
+pub fn build_controller(
+    cfg: &OptimizerConfig,
+    runtime: Option<SharedRuntime>,
+) -> Result<Box<dyn Controller>> {
+    build_controller_with(cfg, &ControlConfig::default(), runtime)
 }
 
-/// Build the controller selected by `cfg.kind`.
+/// Build the controller selected by `cfg.kind` carrying the given
+/// control-plane knobs.
 ///
 /// With `runtime == Some(..)` the adaptive controllers execute the XLA
 /// artifacts; with `None` they fall back to the pure-Rust mirrors of
 /// the same math — identical control flow, f64 precision — so fault
 /// matrices and artifact-less environments still exercise GD/Bayes.
-/// `Fixed` ignores the runtime either way.
-pub fn build_controller(
+/// `Fixed` ignores both the runtime and the `fault_penalty` knob (a
+/// static baseline never moves its level); note that engine-side
+/// adaptive chunk sizing is gated by the *engine's*
+/// `DownloadConfig::control`, so it applies to any controller.
+///
+/// Pass the same [`ControlConfig`] the session's
+/// `DownloadConfig::control` carries (every built-in driver does) —
+/// a controller built with a different config would emit chunk scales
+/// the engine's own `adaptive_chunks` gate does not expect.
+pub fn build_controller_with(
     cfg: &OptimizerConfig,
+    control: &ControlConfig,
     runtime: Option<SharedRuntime>,
-) -> Result<Box<dyn ConcurrencyController>> {
+) -> Result<Box<dyn Controller>> {
     cfg.validate()?;
+    control.validate()?;
     match cfg.kind {
-        OptimizerKind::GradientDescent => Ok(Box::new(match runtime {
-            Some(rt) => GdController::new(cfg.clone(), rt),
-            None => GdController::new_mirror(cfg.clone()),
-        })),
-        OptimizerKind::Bayesian => Ok(Box::new(match runtime {
-            Some(rt) => BayesController::new(cfg.clone(), rt),
-            None => BayesController::new_mirror(cfg.clone()),
-        })),
+        OptimizerKind::GradientDescent => {
+            let gd = match runtime {
+                Some(rt) => GdController::new(cfg.clone(), rt),
+                None => GdController::new_mirror(cfg.clone()),
+            };
+            Ok(Box::new(gd.with_control(control.clone())))
+        }
+        OptimizerKind::Bayesian => {
+            let bo = match runtime {
+                Some(rt) => BayesController::new(cfg.clone(), rt),
+                None => BayesController::new_mirror(cfg.clone()),
+            };
+            Ok(Box::new(bo.with_control(control.clone())))
+        }
         OptimizerKind::Fixed => Ok(Box::new(FixedController::new(cfg.fixed_level))),
     }
 }
@@ -191,5 +182,22 @@ mod tests {
             fail_pressure: 0.0,
         };
         assert!(effective_k(1.02, extreme) >= 1.0 + 0.02 / 8.0 - 1e-12);
+    }
+
+    #[test]
+    fn fixed_controller_ignores_control_knobs() {
+        let cfg = OptimizerConfig {
+            kind: OptimizerKind::Fixed,
+            fixed_level: 5,
+            ..Default::default()
+        };
+        let hot = ControlConfig {
+            fault_penalty: 10.0,
+            adaptive_chunks: true,
+            chunk_scale_min: 0.25,
+        };
+        let c = build_controller_with(&cfg, &hot, None).unwrap();
+        assert_eq!(c.current().concurrency, 5);
+        assert_eq!(c.current().chunk_scale, 1.0);
     }
 }

@@ -41,10 +41,24 @@
 //!   (re)connecting slot binds to the best-scoring mirror; idle slots
 //!   abandon a mirror whose score collapses relative to the best one.
 //!
-//! Each probe interval the engine also condenses the board into a
-//! [`MirrorHealth`] signal for the concurrency controller, so the
-//! optimizer can grow the worker pool when a second healthy mirror
-//! opens headroom (see [`crate::optimizer::effective_k`]).
+//! ## The control plane
+//!
+//! Once per probe interval the engine assembles one
+//! [`ControlSignals`] snapshot — window goodput, retry/reset/reject
+//! rates over the elapsed span, the board condensed into a
+//! [`MirrorHealth`] signal (headroom + fail pressure), and the fleet
+//! connect-RTT — and hands it to the [`Controller`]. The returned
+//! [`crate::control::ControlAction`] drives **two** knobs at once: the
+//! worker-pool concurrency target (as before), and a chunk scale that,
+//! with [`crate::config::ControlConfig::adaptive_chunks`] enabled,
+//! shrinks newly cut chunks under fault pressure. The engine
+//! additionally multiplies in a per-mirror degradation factor at issue
+//! time (the issuing slot's striping weight relative to the best
+//! mirror), so a probe chunk on a deeply slowed mirror stops tying a
+//! slot up for many seconds. With the default config (fault penalty 0,
+//! adaptive chunks off) every snapshot is consumed exactly the way the
+//! old probe path was, and chunks are cut on the unscaled code path —
+//! reports are byte-identical to the pre-control-plane engine.
 //!
 //! ## Failure handling
 //!
@@ -77,13 +91,13 @@ use std::sync::Arc;
 use crate::accession::resolver::{mirror_width, ResolutionCost};
 use crate::accession::RunRecord;
 use crate::config::{DownloadConfig, MirrorStrategy, ReconcileMode};
+use crate::control::{ControlSignals, Controller, MirrorHealth};
 use crate::coordinator::pool::StatusArray;
 use crate::coordinator::probe::ProbeWindow;
 use crate::coordinator::resume::ProgressJournal;
 use crate::coordinator::scheduler::{Chunk, ChunkScheduler, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::metrics::timeline::per_second_bins;
-use crate::optimizer::{ConcurrencyController, MirrorHealth, Probe};
 use crate::runtime::XlaRuntime;
 use crate::session::mirrors::MirrorBoard;
 use crate::session::SessionReport;
@@ -232,8 +246,12 @@ pub struct EngineParams<'a> {
     pub behavior: ToolBehavior,
     /// Resolved files (with their mirror lists) to download.
     pub records: Vec<RunRecord>,
-    /// Controller (already built for the tool's policy).
-    pub controller: Box<dyn ConcurrencyController + 'a>,
+    /// Controller (already built for the tool's policy). Build it with
+    /// the same `download.control` this struct carries
+    /// ([`crate::optimizer::build_controller_with`]) so the
+    /// controller's fault-pressure chunk scale and the engine's
+    /// `adaptive_chunks` gate agree.
+    pub controller: Box<dyn Controller + 'a>,
     /// XLA runtime for probe aggregation (None → pure-Rust mirror).
     pub runtime: Option<&'a XlaRuntime>,
     /// Shared byte counter; the transport holds a clone and feeds it
@@ -322,6 +340,10 @@ pub struct EngineStats {
     pub probe_releases: u64,
     /// Transport events drained across the session.
     pub transport_events: u64,
+    /// Chunks cut below their full size by adaptive chunk sizing
+    /// (zero unless [`crate::config::ControlConfig::adaptive_chunks`]
+    /// is on and fault pressure or mirror degradation was observed).
+    pub chunks_scaled: u64,
 }
 
 /// Persist the scheduler's frontiers if they changed since the last
@@ -342,6 +364,35 @@ fn save_journal(
         log::warn!("journal save failed: {e}");
     }
     *last = Some(journal);
+}
+
+/// A mirror whose striping weight falls below this share of the best
+/// mirror's is treated as *degraded* by adaptive chunk sizing; chunks
+/// cut for its slots shrink proportionally. Comparable healthy mirrors
+/// (normal goodput jitter keeps them well above the threshold) are
+/// untouched, so multi-mirror benign runs cut full-size chunks.
+const DEGRADED_SHARE: f64 = 0.5;
+
+/// Per-mirror chunk-scale factor for adaptive chunk sizing: `1.0` for
+/// healthy mirrors (weight share ≥ [`DEGRADED_SHARE`] of the best) and
+/// proportionally smaller — floored at `scale_min` — for degraded
+/// ones. `weights` is the engine's per-tick striping-weight scratch;
+/// when it is empty (failover strategy, which computes no weights) the
+/// factor is neutral.
+fn degraded_mirror_factor(weights: &[f64], mirror: usize, scale_min: f64) -> f64 {
+    let Some(&w) = weights.get(mirror) else {
+        return 1.0;
+    };
+    let w_max = weights.iter().copied().fold(0.0f64, f64::max);
+    if w_max <= 0.0 {
+        return 1.0;
+    }
+    let share = w / w_max;
+    if share >= DEGRADED_SHARE {
+        1.0
+    } else {
+        (share / DEGRADED_SHARE).clamp(scale_min, 1.0)
+    }
 }
 
 /// Run one complete session (Algorithm 1) over the given transport and
@@ -405,7 +456,7 @@ pub fn run_session_with_stats(
     }
     let mut res_free = clock.now();
 
-    let mut target = status.set_target(controller.current());
+    let mut target = status.set_target(controller.current().concurrency);
     // --- Slot-pool reconciliation state (see `ReconcileMode`). The
     // engine is the status array's only writer, so RUNNING is always
     // the prefix `0..target`; `drain_high` additionally covers slots
@@ -424,6 +475,15 @@ pub fn run_session_with_stats(
     let mut next_sample = start + sample_dt;
     let mut next_probe = start + probe_dt;
     let mut probes = 0usize;
+    // --- Control-plane state: fault-event counts at the last probe
+    // (for the per-window rates) and the controller's current chunk
+    // scale. `adaptive_chunks` off keeps the scale pinned at 1.0, so
+    // the chunk-cutting path is byte-identical to the unscaled engine.
+    let adaptive_chunks = download.control.adaptive_chunks;
+    let chunk_scale_min = download.control.chunk_scale_min.clamp(f64::MIN_POSITIVE, 1.0);
+    let mut action_chunk_scale = 1.0f64;
+    let mut last_probe_s = start;
+    let mut probe_mark = (0usize, 0usize, 0usize);
     // Time-weighted target integral for the paper's Concurrency column.
     let mut target_time = 0.0f64;
     let mut last_tick = start;
@@ -600,9 +660,20 @@ pub fn run_session_with_stats(
             if slot.chunk.is_none() {
                 // Pull the next chunk, charging serialized resolution
                 // for cold files where applicable, and honoring the
-                // slot's failure backoff.
+                // slot's failure backoff. Under adaptive chunk sizing
+                // the cut is scaled by the controller's chunk_scale ×
+                // the slot's mirror degradation (its striping weight
+                // relative to the best mirror, when clearly degraded),
+                // so a probe chunk on a crawling mirror stays short.
+                let scale = if adaptive_chunks {
+                    let mirror_factor =
+                        degraded_mirror_factor(&stripe_w, slot.mirror, chunk_scale_min);
+                    (action_chunk_scale * mirror_factor).clamp(chunk_scale_min, 1.0)
+                } else {
+                    1.0
+                };
                 let per_file = behavior.resolution.per_file_latency();
-                if let Some(chunk) = sched.next_chunk() {
+                if let Some(chunk) = sched.next_chunk_scaled(scale) {
                     let mut wait = now.max(slot.next_allowed);
                     if chunk.cold && per_file > 0.0 {
                         let begin = res_free.max(wait);
@@ -747,20 +818,19 @@ pub fn run_session_with_stats(
                 None => window.aggregate_mirror_and_reset(),
             };
             probes += 1;
-            if mirror_count > 1 {
-                // Aggregate mirror health: adaptive controllers rescale
-                // their utility penalty so a second healthy mirror
-                // raises the concurrency ceiling and sustained
-                // failures lower it. Headroom only exists when the
-                // engine is striping AND the per-mirror connection cap
-                // actually binds the pool — with no cap (or a cap at
-                // least as large as the pool) a single endpoint can
-                // absorb every worker, and the winner-take-all
-                // baseline cannot exploit extra mirrors at all, so in
-                // those modes the signal stays neutral. Single-mirror
-                // sessions skip the call entirely; either way a benign
-                // network leaves the controller bit-identical to a
-                // health-unaware one.
+            // Aggregate mirror health: adaptive controllers rescale
+            // their utility penalty so a second healthy mirror raises
+            // the concurrency ceiling and sustained failures lower it.
+            // Headroom only exists when the engine is striping AND the
+            // per-mirror connection cap actually binds the pool — with
+            // no cap (or a cap at least as large as the pool) a single
+            // endpoint can absorb every worker, and the winner-take-all
+            // baseline cannot exploit extra mirrors at all, so in
+            // those modes the signal stays neutral. Single-mirror
+            // sessions carry the neutral default; either way a benign
+            // network leaves the controller bit-identical to a
+            // health-unaware one.
+            let mirror = if mirror_count > 1 {
                 let cap_binds = policy.strategy == MirrorStrategy::WeightedStripe
                     && policy.per_mirror_conns > 0
                     && policy.per_mirror_conns < capacity;
@@ -769,15 +839,31 @@ pub fn run_session_with_stats(
                 } else {
                     1.0
                 };
-                controller.on_mirror_health(MirrorHealth {
+                MirrorHealth {
                     headroom,
                     fail_pressure: board.fail_pressure(now),
-                });
-            }
-            let new_target = controller.on_probe(Probe {
+                }
+            } else {
+                MirrorHealth::default()
+            };
+            // One typed snapshot per probe: everything the engine
+            // knows that a controller could act on, in one place.
+            let window_s = (now - last_probe_s).max(f64::EPSILON);
+            let signals = ControlSignals {
                 concurrency: target as f64,
-                mbps: window_stats.mean_mbps,
-            })?;
+                goodput_mbps: window_stats.mean_mbps,
+                window_s,
+                retry_rate: (chunk_retries - probe_mark.0) as f64 / window_s,
+                reset_rate: (connection_resets - probe_mark.1) as f64 / window_s,
+                reject_rate: (server_rejects - probe_mark.2) as f64 / window_s,
+                mirror,
+                connect_rtt_s: board.mean_rtt().unwrap_or(0.0),
+            };
+            probe_mark = (chunk_retries, connection_resets, server_rejects);
+            last_probe_s = now;
+            let action = controller.on_signals(&signals)?;
+            action_chunk_scale = action.chunk_scale.clamp(chunk_scale_min, 1.0);
+            let new_target = action.concurrency;
             if new_target != target {
                 let old = target;
                 target = status.set_target(new_target);
@@ -834,6 +920,7 @@ pub fn run_session_with_stats(
         );
     }
 
+    stats.chunks_scaled = sched.chunks_scaled() as u64;
     let duration = (clock.now() - start).max(f64::EPSILON);
     let samples = recorder.samples();
     let timeline = per_second_bins(&samples);

@@ -35,8 +35,9 @@
 //! which pay a whole handshake to move one chunk — prefer the
 //! lowest-RTT due mirror ([`MirrorBoard::probe_due`]). [`MirrorBoard::concurrency_headroom`] and
 //! [`MirrorBoard::fail_pressure`] condense the board into the aggregate
-//! health signal the concurrency controllers consume (see
-//! [`crate::optimizer::MirrorHealth`]). Everything is pure arithmetic
+//! health signal carried by every control-plane snapshot (see
+//! [`crate::control::MirrorHealth`] /
+//! [`crate::control::ControlSignals`]). Everything is pure arithmetic
 //! over the session clock, so simulated runs replay bit-identically.
 
 /// Fraction of the best mirror's score below which an idle slot fails
@@ -162,6 +163,23 @@ impl MirrorBoard {
     /// Smoothed connect RTT of mirror `m` (s); `None` until observed.
     pub fn rtt(&self, m: usize) -> Option<f64> {
         self.stats[m].ewma_rtt_s
+    }
+
+    /// Fleet mean of the per-mirror connect-RTT EWMAs (s); `None`
+    /// until any mirror reported a readiness transition. This is the
+    /// `connect_rtt_s` field of the control-plane snapshot
+    /// ([`crate::control::ControlSignals`]).
+    pub fn mean_rtt(&self) -> Option<f64> {
+        let (sum, n) = self
+            .stats
+            .iter()
+            .filter_map(|s| s.ewma_rtt_s)
+            .fold((0.0f64, 0usize), |(a, c), r| (a + r, c + 1));
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
     }
 
     /// A chunk failed (reset or transient rejection) on mirror `m`.
@@ -385,7 +403,7 @@ impl MirrorBoard {
     /// `(Σw)² / Σw²` of the striping weights. Two equally healthy
     /// mirrors → 2.0 (concurrency is twice as cheap); one dominant
     /// mirror → ~1.0. Feeds the controllers' utility through
-    /// [`crate::optimizer::MirrorHealth`].
+    /// [`crate::control::MirrorHealth`].
     pub fn concurrency_headroom(&self, now_s: f64) -> f64 {
         let w = self.weights(now_s, 0.0);
         let sum: f64 = w.iter().sum();
@@ -399,7 +417,7 @@ impl MirrorBoard {
     /// Aggregate decayed failure pressure: mean decayed failure weight
     /// per mirror, in units of ~4 recent failures (so a storm of
     /// rejects across the fleet pushes this toward 1.0). Feeds the
-    /// controllers' utility through [`crate::optimizer::MirrorHealth`].
+    /// controllers' utility through [`crate::control::MirrorHealth`].
     pub fn fail_pressure(&self, now_s: f64) -> f64 {
         let total: f64 = self.stats.iter().map(|s| s.decayed_fails(now_s)).sum();
         total / self.stats.len() as f64 / 4.0
@@ -626,6 +644,20 @@ mod tests {
         b.note_rtt(0, 0.4);
         let r = b.rtt(0).unwrap();
         assert!(r > 0.2 && r < 0.4, "EWMA should land between samples: {r}");
+    }
+
+    #[test]
+    fn mean_rtt_averages_only_observed_mirrors() {
+        let mut b = MirrorBoard::new(3);
+        assert_eq!(b.mean_rtt(), None);
+        b.note_rtt(0, 0.2);
+        assert!((b.mean_rtt().unwrap() - 0.2).abs() < 1e-12);
+        b.note_rtt(2, 0.4);
+        let m = b.mean_rtt().unwrap();
+        assert!(
+            (m - 0.3).abs() < 1e-12,
+            "unobserved mirror 1 must not drag the mean: {m}"
+        );
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //! failover as the selectable baseline
 //! ([`crate::config::MirrorStrategy`]).
 //!
+//! Controllers attach through the fault-aware control plane
+//! ([`crate::control`]): the engine assembles one
+//! [`crate::control::ControlSignals`] snapshot per probe interval and
+//! applies the returned [`crate::control::ControlAction`] to both the
+//! worker pool and (with adaptive chunk sizing enabled) the chunk
+//! scheduler.
+//!
 //! Both drivers produce the same [`SessionReport`], so every metric the
 //! experiment harness computes is defined identically for simulated
 //! and real transfers — and every recovery feature behaves identically

@@ -23,9 +23,9 @@ use std::time::{Duration, Instant};
 use crate::accession::resolver::ResolutionCost;
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
+use crate::control::Controller;
 use crate::coordinator::scheduler::{Chunk, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
-use crate::optimizer::ConcurrencyController;
 use crate::runtime::XlaRuntime;
 use crate::session::engine::{
     run_session, Clock, EngineParams, ToolBehavior, Transport, TransportEvent,
@@ -55,7 +55,7 @@ pub struct RealSessionParams<'a> {
     /// Resolved files (with their mirror URLs) to download.
     pub records: Vec<RunRecord>,
     /// Controller (already built for the tool's policy).
-    pub controller: Box<dyn ConcurrencyController + 'a>,
+    pub controller: Box<dyn Controller + 'a>,
     /// XLA runtime for probe aggregation (None → pure-Rust mirror).
     pub runtime: Option<&'a XlaRuntime>,
     /// Where delivered bytes go.

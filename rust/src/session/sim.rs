@@ -19,10 +19,10 @@ use std::sync::Arc;
 
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
+use crate::control::Controller;
 use crate::coordinator::scheduler::Chunk;
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::netsim::{FlowId, NetSim, NetSimConfig, StepReport};
-use crate::optimizer::ConcurrencyController;
 use crate::runtime::XlaRuntime;
 use crate::session::engine::{
     run_session_with_stats, Clock, EngineParams, EngineStats, FailureClass, Transport,
@@ -187,7 +187,7 @@ pub struct SimSessionParams<'a> {
     /// Resolved files (with their mirror lists) to download.
     pub records: Vec<RunRecord>,
     /// Controller (already built for the tool's policy).
-    pub controller: Box<dyn ConcurrencyController + 'a>,
+    pub controller: Box<dyn Controller + 'a>,
     /// XLA runtime for probe aggregation (None → pure-Rust mirror;
     /// adaptive controllers carry their own runtime handle for the
     /// decision step regardless).
@@ -283,7 +283,11 @@ pub fn run_simulated_download(
     runtime: crate::runtime::SharedRuntime,
     seed: u64,
 ) -> Result<SessionReport> {
-    let controller = crate::optimizer::build_controller(&cfg.optimizer, Some(runtime.clone()))?;
+    let controller = crate::optimizer::build_controller_with(
+        &cfg.optimizer,
+        &cfg.control,
+        Some(runtime.clone()),
+    )?;
     let params = SimSessionParams {
         download: cfg.clone(),
         behavior: ToolBehavior::fastbiodl(cfg),

@@ -1,0 +1,101 @@
+//! Bench trend tracking across PRs: the committed smoke baseline
+//! (`rust/baselines/BENCH_smoke_baseline.json`) that CI diffs every
+//! build against (`fastbiodl bench --suite smoke --baseline …`).
+//!
+//! The committed file starts life as a *bootstrap* (valid header, no
+//! frozen cases — the diff gate is wired but vacuous). Freezing real
+//! values is one explicit command on any machine with a toolchain:
+//!
+//! ```sh
+//! cargo test --test bench_baseline -- --ignored refresh_committed_smoke_baseline
+//! ```
+//!
+//! then commit the rewritten file. From that point on,
+//! `committed_smoke_baseline_stays_consistent` re-runs the smoke suite
+//! on every `cargo test` and fails on any determinism drift against
+//! the frozen values — the same check the CI bench step performs.
+
+use fastbiodl::bench::{diff, run_case, suite_cases, BenchReport, Suite};
+use fastbiodl::config::ReconcileMode;
+
+/// Suite, seed, and reconcile mode the committed baseline (and the CI
+/// bench-smoke step) must use — diffing is only meaningful when they
+/// match.
+const BASELINE_SUITE: Suite = Suite::Smoke;
+const BASELINE_SEED: u64 = 1;
+const BASELINE_RECONCILE: ReconcileMode = ReconcileMode::Batched;
+
+fn baseline_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("baselines")
+        .join("BENCH_smoke_baseline.json")
+}
+
+fn run_smoke() -> BenchReport {
+    let cases = suite_cases(BASELINE_SUITE)
+        .iter()
+        .map(|spec| run_case(spec, BASELINE_SEED, BASELINE_RECONCILE).expect("smoke case"))
+        .collect();
+    BenchReport {
+        suite: BASELINE_SUITE.name().to_string(),
+        seed: BASELINE_SEED,
+        reconcile: BASELINE_RECONCILE.name().to_string(),
+        cases,
+    }
+}
+
+#[test]
+fn committed_smoke_baseline_stays_consistent() {
+    let text = std::fs::read_to_string(baseline_path()).expect("committed baseline readable");
+    let baseline = BenchReport::from_json(&text).expect("committed baseline parses");
+    assert_eq!(baseline.suite, BASELINE_SUITE.name(), "CI diffs the smoke suite");
+    assert_eq!(baseline.seed, BASELINE_SEED, "CI runs seed 1");
+    assert_eq!(baseline.reconcile, BASELINE_RECONCILE.name());
+    if baseline.cases.is_empty() {
+        // Bootstrap baseline: the gate is wired, values not frozen yet
+        // (see the module docs for the freeze command).
+        return;
+    }
+    // Frozen baseline: every committed case must replay bit-stable.
+    // Timing fields are machine-dependent — an infinite tolerance
+    // restricts the diff to the deterministic fields.
+    let fresh = run_smoke();
+    let regressions = diff(&fresh, &baseline, f64::INFINITY);
+    assert!(
+        regressions.is_empty(),
+        "smoke suite drifted from the committed baseline: {regressions:?}"
+    );
+}
+
+/// Rewrites `rust/baselines/BENCH_smoke_baseline.json` with a freshly
+/// measured smoke report. Run explicitly (see module docs), then
+/// commit the result; never runs as part of plain `cargo test`.
+///
+/// Timing fields are **neutralized** before writing: they are measured
+/// on whatever machine ran the refresh, and committing them would turn
+/// the CI timing gate into a comparison against foreign hardware
+/// (`bench::diff` skips the timing check when the baseline's
+/// `ns_per_tick` is 0). The committed baseline therefore gates the
+/// deterministic fields only; timing regressions are caught by
+/// `rust/tests/engine_tick.rs` (same-process A/B) and by diffing two
+/// CI artifacts from the same runner class.
+#[test]
+#[ignore = "explicitly refreshes the committed baseline file"]
+fn refresh_committed_smoke_baseline() {
+    let mut report = run_smoke();
+    assert_eq!(report.cases.len(), 4, "smoke suite changed shape");
+    for case in &mut report.cases {
+        case.wall_s = 0.0;
+        case.ns_per_tick = 0.0;
+        case.ticks_per_sec = 0.0;
+        case.allocs_per_tick = 0.0;
+    }
+    let mut text = report.to_json().to_string_compact();
+    text.push('\n');
+    std::fs::write(baseline_path(), &text).expect("write committed baseline");
+    println!(
+        "froze {} cases (determinism fields only) into {}",
+        report.cases.len(),
+        baseline_path().display()
+    );
+}

@@ -1,0 +1,273 @@
+//! Control-plane integration matrix: the fault-aware configuration
+//! (`fault_penalty > 0`, adaptive chunk sizing) against the fault-blind
+//! default across the hostile profiles.
+//!
+//! Pins the three contracts of the `ControlSignals`/`ControlAction`
+//! refactor:
+//!
+//! * **No regression under faults** — fault-aware GD achieves goodput
+//!   ≥ the fault-blind default on at least two hostile profiles (on
+//!   profiles that produce no retries/rejects the two are *identical*,
+//!   which is itself part of the contract), and the penalty term
+//!   demonstrably changes the controller's trajectory on at least one
+//!   retry-heavy profile.
+//! * **Byte-identical defaults** — on benign and single-mirror runs
+//!   the fault-aware configuration produces bit-for-bit the same
+//!   `SessionReport` as the blind default, so every paper experiment
+//!   preset is untouched by the refactor.
+//! * **Adaptive chunks act** — under a degraded mirror with striping,
+//!   adaptive chunk sizing cuts measurably shortened chunks
+//!   (`EngineStats::chunks_scaled > 0`) while the transfer still
+//!   completes with exact byte accounting; with the knob off the
+//!   scaled-cut count is exactly zero.
+
+mod common;
+
+use common::{
+    fault_download_cfg, fault_netsim, fault_records, mirrored_records, CHUNK_BYTES, LINK_MBPS,
+};
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::config::{ControlConfig, OptimizerKind};
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::netsim::fault::MATRIX_PROFILES;
+use fastbiodl::netsim::{FaultEvent, FaultKind, FaultSchedule};
+use fastbiodl::optimizer::build_controller_with;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::{EngineStats, SessionReport};
+
+const SIZES: [u64; 3] = [60_000_000, 50_000_000, 40_000_000];
+
+fn aware_control(fault_penalty: f64, adaptive_chunks: bool) -> ControlConfig {
+    ControlConfig {
+        fault_penalty,
+        adaptive_chunks,
+        ..ControlConfig::default()
+    }
+}
+
+/// One GD session over the shared hostile topology with the given
+/// control-plane knobs.
+fn run_gd(
+    control: &ControlConfig,
+    faults: FaultSchedule,
+    records: Vec<fastbiodl::accession::RunRecord>,
+    seed: u64,
+) -> (SessionReport, EngineStats) {
+    let mut cfg = fault_download_cfg(OptimizerKind::GradientDescent, 1_800.0);
+    cfg.control = control.clone();
+    let controller = build_controller_with(&cfg.optimizer, &cfg.control, None).unwrap();
+    let params = SimSessionParams {
+        download: cfg,
+        behavior: ToolBehavior {
+            name: "control-plane".into(),
+            mode: SchedulerMode::Chunked {
+                chunk_bytes: CHUNK_BYTES,
+                max_open_files: 2,
+            },
+            keep_alive: true,
+            resolution: ResolutionCost::Batch { latency_s: 0.5 },
+        },
+        netsim: fault_netsim(faults),
+        records,
+        controller,
+        runtime: None,
+        seed,
+    };
+    SimSession::new(params).run_with_stats().unwrap()
+}
+
+fn assert_complete_and_exact(rep: &SessionReport, payload: u64) {
+    assert!(rep.completed, "{}: did not complete", rep.tool);
+    assert!(
+        rep.total_bytes >= payload,
+        "{}: delivered {} < payload {payload}",
+        rep.tool,
+        rep.total_bytes
+    );
+    let bound = payload + rep.chunk_retries as u64 * CHUNK_BYTES;
+    assert!(
+        rep.total_bytes <= bound,
+        "{}: delivered {} > bound {bound}: double delivery?",
+        rep.tool,
+        rep.total_bytes
+    );
+}
+
+fn reports_identical(a: &SessionReport, b: &SessionReport) -> bool {
+    a.duration_s.to_bits() == b.duration_s.to_bits()
+        && a.total_bytes == b.total_bytes
+        && a.timeline.values == b.timeline.values
+        && a.concurrency_trace == b.concurrency_trace
+        && (a.chunk_retries, a.connection_resets, a.server_rejects)
+            == (b.chunk_retries, b.connection_resets, b.server_rejects)
+        && a.mirror_bytes == b.mirror_bytes
+        && a.frontiers == b.frontiers
+}
+
+#[test]
+fn fault_aware_gd_matches_or_beats_blind_on_hostile_profiles() {
+    let payload: u64 = SIZES.iter().sum();
+    let blind_cfg = ControlConfig::default();
+    let aware_cfg = aware_control(5.0, false);
+    let mut wins = 0usize;
+    let mut diverged_on_retry_heavy = false;
+    for profile in MATRIX_PROFILES {
+        let faults = profile.schedule(1234, 600.0, LINK_MBPS);
+        let (blind, _) =
+            run_gd(&blind_cfg, faults.clone(), fault_records("SRRA", &SIZES), 1234);
+        let (aware, _) = run_gd(&aware_cfg, faults, fault_records("SRRA", &SIZES), 1234);
+        assert_complete_and_exact(&blind, payload);
+        assert_complete_and_exact(&aware, payload);
+        if aware.mean_throughput_mbps >= blind.mean_throughput_mbps - 1e-9 {
+            wins += 1;
+        }
+        // Profiles whose faults never produce retries/rejects carry a
+        // zero fault rate every window: the aware run must then be
+        // *identical* to the blind one, not merely comparable.
+        if blind.chunk_retries == 0 && blind.server_rejects == 0 {
+            assert!(
+                reports_identical(&blind, &aware),
+                "{}: clean profile must leave the fault-aware run untouched",
+                profile.name()
+            );
+        } else if !reports_identical(&blind, &aware) {
+            diverged_on_retry_heavy = true;
+        }
+        println!(
+            "{:<12} blind {:>7.2} Mbps ({} retries) vs aware {:>7.2} Mbps ({} retries)",
+            profile.name(),
+            blind.mean_throughput_mbps,
+            blind.chunk_retries,
+            aware.mean_throughput_mbps,
+            aware.chunk_retries,
+        );
+    }
+    assert!(
+        wins >= 2,
+        "fault-aware GD must match or beat the blind default on >= 2 hostile profiles \
+         (got {wins} of {})",
+        MATRIX_PROFILES.len()
+    );
+    assert!(
+        diverged_on_retry_heavy,
+        "the penalty term never changed a retry-heavy run — the signal bus is vacuous"
+    );
+}
+
+#[test]
+fn fault_aware_config_is_byte_identical_on_benign_and_single_mirror_runs() {
+    let sizes: [u64; 2] = [8_000_000, 6_000_000];
+    // Single mirror, benign network: penalty AND adaptive chunks on —
+    // with zero fault rates and one healthy mirror neither may perturb
+    // a single bit of the report.
+    let (blind, _) = run_gd(
+        &ControlConfig::default(),
+        FaultSchedule::none(),
+        fault_records("SRRB", &sizes),
+        777,
+    );
+    let (aware, stats) = run_gd(
+        &aware_control(5.0, true),
+        FaultSchedule::none(),
+        fault_records("SRRB", &sizes),
+        777,
+    );
+    assert!(
+        reports_identical(&blind, &aware),
+        "single-mirror benign run drifted under the fault-aware config"
+    );
+    assert_eq!(stats.chunks_scaled, 0, "benign run must cut full-size chunks");
+
+    // Two healthy mirrors, benign network, penalty on: the mirror
+    // health signal is identical for both configs and the fault rates
+    // stay zero, so the reports must again match bit-for-bit.
+    let (blind2, _) = run_gd(
+        &ControlConfig::default(),
+        FaultSchedule::none(),
+        mirrored_records("SRRB", &sizes, 2),
+        778,
+    );
+    let (aware2, _) = run_gd(
+        &aware_control(5.0, false),
+        FaultSchedule::none(),
+        mirrored_records("SRRB", &sizes, 2),
+        778,
+    );
+    assert!(
+        reports_identical(&blind2, &aware2),
+        "multi-mirror benign run drifted under the fault penalty"
+    );
+}
+
+#[test]
+fn adaptive_chunks_shrink_chunks_on_a_degraded_mirror() {
+    // Two mirrors, per-mirror cap 4, pool of 6: the cap pins two slots
+    // to mirror 0 even after it degrades to 5% rate at t=3s, so their
+    // chunk goodput EWMA collapses and adaptive sizing must cut
+    // visibly shortened chunks for them — while the transfer still
+    // completes with exact accounting. With the knob off, the same
+    // schedule cuts zero scaled chunks.
+    let sizes: [u64; 1] = [160_000_000];
+    let chunk_bytes: u64 = 256 * 1024;
+    let slow = FaultSchedule::new(vec![FaultEvent {
+        at_s: 3.0,
+        kind: FaultKind::SlowMirror {
+            mirror: 0,
+            factor: 0.05,
+            duration_s: 10_000.0,
+        },
+    }]);
+    let run = |adaptive: bool| {
+        let mut cfg = fault_download_cfg(OptimizerKind::Fixed, 1_800.0);
+        cfg.chunk_bytes = chunk_bytes;
+        cfg.optimizer.fixed_level = 6;
+        cfg.optimizer.c_init = 6;
+        cfg.mirror.per_mirror_conns = 4;
+        cfg.control.adaptive_chunks = adaptive;
+        let controller = build_controller_with(&cfg.optimizer, &cfg.control, None).unwrap();
+        let params = SimSessionParams {
+            download: cfg,
+            behavior: ToolBehavior {
+                name: format!("adaptive-{adaptive}"),
+                mode: SchedulerMode::Chunked {
+                    chunk_bytes,
+                    max_open_files: 2,
+                },
+                keep_alive: true,
+                resolution: ResolutionCost::Batch { latency_s: 0.5 },
+            },
+            netsim: fault_netsim(slow.clone()),
+            records: mirrored_records("SRRD", &sizes, 2),
+            controller,
+            runtime: None,
+            seed: 42,
+        };
+        SimSession::new(params).run_with_stats().unwrap()
+    };
+
+    let (plain_rep, plain_stats) = run(false);
+    assert!(plain_rep.completed);
+    assert_eq!(
+        plain_stats.chunks_scaled, 0,
+        "adaptive sizing off must never cut a scaled chunk"
+    );
+
+    let (rep, stats) = run(true);
+    assert!(rep.completed, "adaptive run must still complete");
+    assert!(
+        stats.chunks_scaled > 0,
+        "no chunk was ever shortened for the degraded mirror \
+         (mirror_bytes {:?})",
+        rep.mirror_bytes
+    );
+    assert!(
+        rep.total_bytes >= sizes[0]
+            && rep.total_bytes <= sizes[0] + rep.chunk_retries as u64 * chunk_bytes,
+        "byte accounting broke under scaled chunks: {} delivered, {} retries",
+        rep.total_bytes,
+        rep.chunk_retries
+    );
+    // Both mirrors carried traffic: the degraded one kept its capped
+    // slots busy instead of being abandoned.
+    assert!(rep.mirror_bytes.len() == 2 && rep.mirror_bytes.iter().all(|&b| b > 0));
+}

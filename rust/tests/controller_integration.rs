@@ -5,9 +5,8 @@
 use std::sync::Arc;
 
 use fastbiodl::config::OptimizerConfig;
-use fastbiodl::optimizer::{
-    mirror, BayesController, ConcurrencyController, GdController, Probe, ProbeHistory,
-};
+use fastbiodl::control::{ControlSignals, Controller};
+use fastbiodl::optimizer::{mirror, BayesController, GdController, ProbeHistory};
 use fastbiodl::runtime::XlaRuntime;
 use fastbiodl::util::prng::Prng;
 
@@ -126,11 +125,9 @@ fn gd_controller_climbs_then_oscillates_near_optimum() {
     for _ in 0..60 {
         let t = (c as f64).min(10.0) * 100.0;
         c = ctl
-            .on_probe(Probe {
-                concurrency: c as f64,
-                mbps: t,
-            })
-            .unwrap();
+            .on_signals(&ControlSignals::probe(c as f64, t))
+            .unwrap()
+            .concurrency;
         trace.push(c);
     }
     let tail = &trace[trace.len() - 20..];
@@ -154,11 +151,9 @@ fn bayes_controller_explores_then_exploits() {
     for _ in 0..40 {
         let t = (c as f64).min(8.0) * 120.0; // saturates at C=8
         c = ctl
-            .on_probe(Probe {
-                concurrency: c as f64,
-                mbps: t,
-            })
-            .unwrap();
+            .on_signals(&ControlSignals::probe(c as f64, t))
+            .unwrap()
+            .concurrency;
         proposals.push(c);
         assert!((1..=32).contains(&c), "proposal {c} out of bounds");
     }

@@ -21,10 +21,11 @@ mod common;
 use common::{fault_download_cfg, fault_netsim, fault_records, CHUNK_BYTES, LINK_MBPS};
 use fastbiodl::accession::resolver::ResolutionCost;
 use fastbiodl::config::OptimizerKind;
+use fastbiodl::control::{ControlAction, ControlSignals, Controller};
 use fastbiodl::coordinator::scheduler::SchedulerMode;
 use fastbiodl::netsim::fault::MATRIX_PROFILES;
 use fastbiodl::netsim::{FaultProfile, FaultSchedule};
-use fastbiodl::optimizer::{build_controller, ConcurrencyController, Probe};
+use fastbiodl::optimizer::build_controller;
 use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
 use fastbiodl::session::SessionReport;
 
@@ -167,14 +168,18 @@ struct DipController {
     probes: usize,
 }
 
-impl ConcurrencyController for DipController {
-    fn on_probe(&mut self, _probe: Probe) -> fastbiodl::Result<usize> {
+impl Controller for DipController {
+    fn on_signals(&mut self, _signals: &ControlSignals) -> fastbiodl::Result<ControlAction> {
         self.probes += 1;
-        Ok(if self.probes == 1 { 1 } else { self.high })
+        Ok(ControlAction::concurrency_only(if self.probes == 1 {
+            1
+        } else {
+            self.high
+        }))
     }
 
-    fn current(&self) -> usize {
-        self.high
+    fn current(&self) -> ControlAction {
+        ControlAction::concurrency_only(self.high)
     }
 
     fn name(&self) -> &'static str {

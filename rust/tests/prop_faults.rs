@@ -34,7 +34,7 @@ fn random_schedule(g: &mut Prng) -> FaultSchedule {
     let mut events = Vec::new();
     for _ in 0..n {
         let at_s = g.range_f64(0.5, 90.0);
-        let kind = match g.below(8) {
+        let kind = match g.below(9) {
             0 => FaultKind::ConnectionReset {
                 count: 1 + g.below(3) as usize,
             },
@@ -63,6 +63,12 @@ fn random_schedule(g: &mut Prng) -> FaultSchedule {
                 after_bytes: g.range_f64(50_000.0, 2_000_000.0),
                 frac: g.range_f64(0.0, 1.0),
                 duration_s: g.range_f64(0.5, 8.0),
+            },
+            7 => FaultKind::BurstLoss {
+                burst_s: g.range_f64(0.25, 3.0),
+                gap_s: g.range_f64(0.0, 6.0),
+                kill_prob: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 12.0),
             },
             _ => FaultKind::Brownout {
                 duration_s: g.range_f64(0.5, 6.0),
@@ -283,6 +289,48 @@ fn windowed_mid_body_drops_recover_and_complete() {
             )?;
             if rep.connection_resets == 0 {
                 return Err("drop window injected no resets".into());
+            }
+            assert_invariants(&rep, sizes, 0)
+        },
+    );
+}
+
+#[test]
+fn correlated_burst_losses_recover_and_complete() {
+    // A Gilbert–Elliott window covering the whole transfer: loss
+    // bursts (kill_prob 1.0/s) separated by short quiet spells reset
+    // connections in clusters. Every interrupted chunk must requeue
+    // and land once its slot reconnects; byte accounting stays exact.
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        "correlated burst losses never strand a transfer",
+        |g| {
+            let sizes = vec![g.range_u64(12_000_000, 20_000_000)];
+            (sizes, g.next_u64())
+        },
+        |(sizes, sim_seed)| {
+            let events = vec![FaultEvent {
+                at_s: 0.0,
+                kind: FaultKind::BurstLoss {
+                    burst_s: 3.0,
+                    gap_s: 0.5,
+                    kill_prob: 1.0,
+                    duration_s: 60.0,
+                },
+            }];
+            let rep = run_session(
+                OptimizerKind::Fixed,
+                FaultSchedule::new(events),
+                sizes,
+                *sim_seed,
+                None,
+                None,
+            )?;
+            if rep.connection_resets == 0 {
+                return Err("burst window injected no resets".into());
             }
             assert_invariants(&rep, sizes, 0)
         },
