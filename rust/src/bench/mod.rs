@@ -61,8 +61,10 @@ pub const DEFAULT_TIMING_TOLERANCE: f64 = 0.35;
 /// A named benchmark suite.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Suite {
-    /// 4 fast cases (CI artifact): Amplicon-Digester × {benign,
-    /// slowmirror} × gd × c_max {16, 256}.
+    /// 5 fast cases (CI artifact): Amplicon-Digester × {benign,
+    /// slowmirror} × gd × c_max {16, 256}, plus one benign
+    /// c_max = 1024 case guarding the engine hot path at the
+    /// reactor-era slot-table scale.
     Smoke,
     /// The full 108-case grid (see module docs).
     Full,
@@ -140,6 +142,15 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                     });
                 }
             }
+            // One high-capacity cell: the sparse slot table and the
+            // per-tick reconciliation must stay flat-cost when the
+            // configured ceiling jumps past the old 512-thread limit.
+            cases.push(CaseSpec {
+                dataset: "Amplicon-Digester",
+                profile: FaultProfile::None,
+                optimizer: OptimizerKind::GradientDescent,
+                c_max: 1024,
+            });
         }
         Suite::Full => {
             for dataset in ["Breast-RNA-seq", "HiFi-WGS", "Amplicon-Digester"] {
@@ -807,7 +818,8 @@ mod tests {
     #[test]
     fn suites_have_the_advertised_shapes() {
         let smoke = suite_cases(Suite::Smoke);
-        assert_eq!(smoke.len(), 4);
+        assert_eq!(smoke.len(), 5, "4 grid cells + the c_max=1024 cell");
+        assert_eq!(smoke[4].c_max, 1024);
         let full = suite_cases(Suite::Full);
         assert_eq!(full.len(), 108, "full grid is 3 x 4 x 3 x 3");
         assert!(full.len() >= 30);

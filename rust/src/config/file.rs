@@ -267,6 +267,12 @@ pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
     f64_opt!("download.monitor_hz", cfg.monitor_hz);
     usize_opt!("download.max_open_files", cfg.max_open_files);
     f64_opt!("download.timeout_s", cfg.timeout_s);
+    f64_opt!("download.progress_window_s", cfg.progress_window_s);
+    if let Some(v) = doc.get("download.progress_min_bytes") {
+        cfg.progress_min_bytes = v.as_u64().ok_or_else(|| {
+            Error::Config("'download.progress_min_bytes' must be an integer".into())
+        })?;
+    }
     if let Some(v) = doc.get("download.output_dir") {
         cfg.output_dir = v
             .as_str()

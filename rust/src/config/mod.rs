@@ -113,14 +113,16 @@ impl OptimizerConfig {
                 self.c_min, self.c_max
             )));
         }
-        if self.c_max > 4096 {
-            // Engine slots are preallocated per session; anything past
-            // this is a config typo, not a workload. (The Bayesian
-            // controller's *proposals* are additionally capped by the
-            // artifact's 64-point candidate grid regardless of c_max;
-            // GD and Fixed scale to the full pool.)
+        if self.c_max > 65536 {
+            // The engine's slot table is sparse and the real driver is
+            // event-driven, so large pools are cheap — but a c_max past
+            // every sane fd limit is a config typo, not a workload.
+            // (The Bayesian controller's *proposals* are additionally
+            // capped by the artifact's 64-point candidate grid
+            // regardless of c_max; GD and Fixed scale to the full
+            // pool.)
             return Err(Error::Config(format!(
-                "c_max {} unreasonably large (max 4096)",
+                "c_max {} unreasonably large (max 65536)",
                 self.c_max
             )));
         }
@@ -359,6 +361,14 @@ pub struct DownloadConfig {
     pub output_dir: String,
     /// Abort the whole transfer after this much time (s); 0 = no limit.
     pub timeout_s: f64,
+    /// Whole-chunk progress deadline window (s), real transport only: a
+    /// connection that moves fewer than [`Self::progress_min_bytes`]
+    /// in one window is failed as a retryable transport error (the
+    /// defense against servers dribbling a byte every few seconds,
+    /// which per-read socket timeouts never catch). 0 disables.
+    pub progress_window_s: f64,
+    /// Minimum bytes a connection must move per progress window.
+    pub progress_min_bytes: u64,
 }
 
 impl Default for DownloadConfig {
@@ -373,6 +383,8 @@ impl Default for DownloadConfig {
             max_open_files: 4,
             output_dir: "downloads".into(),
             timeout_s: 0.0,
+            progress_window_s: 30.0,
+            progress_min_bytes: 64 * 1024,
         }
     }
 }
@@ -396,6 +408,9 @@ impl DownloadConfig {
         }
         if self.timeout_s < 0.0 {
             return Err(Error::Config("timeout_s must be >= 0".into()));
+        }
+        if self.progress_window_s < 0.0 {
+            return Err(Error::Config("progress_window_s must be >= 0".into()));
         }
         Ok(())
     }
@@ -428,6 +443,9 @@ impl DownloadConfig {
         }
         if let Some(w) = env_f64("FASTBIODL_FAULT_PENALTY")? {
             self.control.fault_penalty = w;
+        }
+        if let Some(w) = env_f64("FASTBIODL_PROGRESS_WINDOW")? {
+            self.progress_window_s = w;
         }
         Ok(())
     }
@@ -475,7 +493,7 @@ mod tests {
         c.c_min = 0;
         assert!(c.validate().is_err());
         c = OptimizerConfig::default();
-        c.c_max = 8192;
+        c.c_max = 100_000;
         assert!(c.validate().is_err());
         c = OptimizerConfig::default();
         c.c_init = 70;
@@ -491,6 +509,22 @@ mod tests {
         assert!(c.validate().is_ok());
         c.c_max = 1024;
         assert!(c.validate().is_ok());
+        // The event-driven real driver scales with the sim path now:
+        // thousands of slots are a workload, not a typo.
+        c.c_max = 4096;
+        assert!(c.validate().is_ok());
+        c.c_max = 65536;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn progress_deadline_validates() {
+        let mut dl = DownloadConfig::default();
+        assert!(dl.progress_window_s > 0.0);
+        dl.progress_window_s = 0.0; // disabled is fine
+        assert!(dl.validate().is_ok());
+        dl.progress_window_s = -1.0;
+        assert!(dl.validate().is_err());
     }
 
     #[test]

@@ -47,8 +47,8 @@ COMMANDS:
         --seed <n>            simulation seed (default 1)
         --faults <profile>    hostile network variant: none|flaky|stalls|
                               errors|collapse|flashcrowd|brownout|
-                              slowmirror|chaos (seeded fault schedule;
-                              see netsim::fault)
+                              slowmirror|burstloss|dnsoutage|chaos
+                              (seeded fault schedule; see netsim::fault)
         --mirror-strategy <s> stripe (score-weighted striping, default)
                               or failover (winner-take-all binding)
         --mirror-conns <n>    per-mirror connection cap (default 0 = off)
@@ -68,6 +68,11 @@ COMMANDS:
         --mirror-conns <n>    per-mirror connection cap (default 0 = off)
         --fault-penalty <w>   utility fault penalty (default 0 = off)
         --adaptive-chunks     striping-aware chunk sizing
+        --progress-window <s> progress deadline: cut a connection that
+                              moves < --progress-min-bytes per window
+                              (default 30; 0 disables)
+        --progress-min-bytes <n>  minimum bytes per progress window
+                              (default 65536)
     serve                     run the throttled loopback archive server
         --files <n>           number of synthetic files (default 4)
         --size-mb <n>         size of each file (default 64)
@@ -85,7 +90,7 @@ COMMANDS:
                               the virtual-clock netsim, measuring real
                               control-loop cost (ns/tick, allocs/tick,
                               reconcile scan) alongside simulated goodput
-        --suite <s>           smoke (4 cases, default) or full (108)
+        --suite <s>           smoke (5 cases, default) or full (108)
         --out <path>          output JSON (default BENCH_engine.json)
         --baseline <path>     diff against a stored BENCH_engine.json
                               and print regressions
@@ -110,7 +115,8 @@ COMMANDS:
 ENVIRONMENT:
     FASTBIODL_ARTIFACTS       artifact directory (default ./artifacts)
     FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER,
-    FASTBIODL_MIRROR_STRATEGY config overrides (see config module docs)
+    FASTBIODL_MIRROR_STRATEGY, FASTBIODL_FAULT_PENALTY, FASTBIODL_PROGRESS_WINDOW
+                              config overrides (see config module docs)
 "#;
 
 fn main() {
@@ -456,7 +462,8 @@ fn cmd_download(args: &Args) -> Result<()> {
 fn cmd_fetch(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
-        "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks",
+        "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks", "progress-window",
+        "progress-min-bytes",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));
@@ -464,6 +471,12 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     let mut cfg = DownloadConfig::default();
     cfg.optimizer.c_max = 16;
     apply_optimizer_flags(&mut cfg, args)?;
+    if let Some(w) = args.flag_f64("progress-window")? {
+        cfg.progress_window_s = w;
+    }
+    if let Some(b) = args.flag_u64("progress-min-bytes")? {
+        cfg.progress_min_bytes = b;
+    }
 
     // Resolve sizes: --size override or a HEAD request.
     let mut records = Vec::new();

@@ -174,6 +174,10 @@ pub struct NetSim {
     /// Server brownout: new connections queue and new requests are
     /// rejected until this time.
     brownout_until_s: f64,
+    /// DNS outage ([`FaultKind::DnsOutage`]): connections opened before
+    /// this time fail at setup (resolution errors only hit new
+    /// connections; established flows are untouched).
+    dns_outage_until_s: f64,
     /// Windowed mid-body drops ([`FaultKind::MidBodyDrop`]): until
     /// `drop_until_s`, a response crossing `drop_after_bytes` delivered
     /// bytes is reset with probability `drop_frac` at the crossing.
@@ -239,6 +243,7 @@ impl NetSim {
             crowd_until_s: 0.0,
             crowd_extra_mbps: 0.0,
             brownout_until_s: 0.0,
+            dns_outage_until_s: 0.0,
             drop_until_s: 0.0,
             drop_after_bytes: 0.0,
             drop_frac: 0.0,
@@ -302,6 +307,11 @@ impl NetSim {
             &mut self.rng,
         );
         flow.mirror = mirror;
+        if self.now_s < self.dns_outage_until_s {
+            // Opened during a resolver outage: the handshake will fail
+            // when its setup timer fires.
+            flow.fail_on_setup = true;
+        }
         self.flows.push(flow);
         Ok(id)
     }
@@ -442,6 +452,19 @@ impl NetSim {
                     became_ready: false,
                     failed: false,
                     rejected: true,
+                });
+                continue;
+            }
+            if fired && f.is_idle() && f.fail_on_setup {
+                // Opened during a DNS outage: the handshake fails.
+                f.close();
+                report.events.push(FlowEvent {
+                    id: f.id,
+                    bytes: 0.0,
+                    request_done: false,
+                    became_ready: false,
+                    failed: true,
+                    rejected: false,
                 });
                 continue;
             }
@@ -746,6 +769,10 @@ impl NetSim {
                     self.drop_after_bytes = after_bytes;
                 }
                 self.drop_until_s = self.drop_until_s.max(self.now_s + duration_s);
+            }
+            FaultKind::DnsOutage { duration_s } => {
+                self.dns_outage_until_s =
+                    self.dns_outage_until_s.max(self.now_s + duration_s);
             }
         }
     }

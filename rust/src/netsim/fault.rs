@@ -22,13 +22,14 @@
 //! | [`FaultKind::SlowMirror`] | one archive mirror slows while replicas stay healthy | per-connection cap × `factor`, but only for flows bound to the named mirror |
 //! | [`FaultKind::MidBodyDrop`] | time-windowed mid-body resets (flaky middlebox, response truncation) | while the window is active, responses crossing `after_bytes` delivered are reset with probability `frac` |
 //! | [`FaultKind::BurstLoss`] | Gilbert–Elliott-style correlated losses (flapping link, overloaded middlebox) | while the window is active, a two-state process alternates quiet spells and loss bursts; during a burst every busy flow is reset at `kill_prob`/s |
+//! | [`FaultKind::DnsOutage`] | resolver outage / NXDOMAIN storm | connections *opened* during the outage fail at setup (the real driver's explicit DNS step erroring); established flows are untouched |
 //!
 //! ## Profiles
 //!
 //! [`FaultProfile`] names ready-made hostile variants of any scenario —
 //! `flaky`, `stalls`, `errors`, `collapse`, `flashcrowd`, `brownout`,
-//! `slowmirror`, `burstloss`, and `chaos` (all of the above
-//! interleaved). A profile expands to a
+//! `slowmirror`, `burstloss`, `dnsoutage`, and `chaos` (all of the
+//! above interleaved). A profile expands to a
 //! concrete [`FaultSchedule`] via [`FaultProfile::schedule`], fully
 //! determined by `(profile, seed, horizon, link capacity)`. The CLI
 //! exposes this as `fastbiodl download … --faults <profile>`; tests use
@@ -113,6 +114,16 @@ pub enum FaultKind {
         /// bad state is active, in [0, 1].
         kill_prob: f64,
         /// Window length, seconds.
+        duration_s: f64,
+    },
+    /// **Name-resolution outage**: for `duration_s`, every connection
+    /// *opened* fails during setup (the simulated counterpart of the
+    /// real driver's explicit DNS step erroring — see
+    /// `transport::reactor`). Established flows keep streaming: DNS
+    /// only matters at connect time, which is exactly the asymmetry
+    /// that distinguishes this class from a brownout.
+    DnsOutage {
+        /// Outage length, seconds.
         duration_s: f64,
     },
 }
@@ -210,6 +221,11 @@ impl FaultKind {
                     return Err("BurstLoss duration must be >= 0".into());
                 }
             }
+            FaultKind::DnsOutage { duration_s } => {
+                if *duration_s < 0.0 {
+                    return Err("DnsOutage duration must be >= 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -226,6 +242,7 @@ impl FaultKind {
             FaultKind::SlowMirror { .. } => "slow-mirror",
             FaultKind::MidBodyDrop { .. } => "mid-body-drop",
             FaultKind::BurstLoss { .. } => "burst-loss",
+            FaultKind::DnsOutage { .. } => "dns-outage",
         }
     }
 }
@@ -316,12 +333,15 @@ pub enum FaultProfile {
     /// Gilbert–Elliott two-state process clusters connection resets
     /// into short storms separated by quiet spells.
     BurstLoss,
+    /// Recurring resolver outages: connections opened inside an outage
+    /// window fail at setup, established flows keep streaming.
+    DnsOutage,
     /// Everything above, interleaved.
     Chaos,
 }
 
 /// Profiles exercised by the controller×fault test matrix.
-pub const MATRIX_PROFILES: [FaultProfile; 8] = [
+pub const MATRIX_PROFILES: [FaultProfile; 9] = [
     FaultProfile::Flaky,
     FaultProfile::Stalls,
     FaultProfile::ServerErrors,
@@ -330,6 +350,7 @@ pub const MATRIX_PROFILES: [FaultProfile; 8] = [
     FaultProfile::Brownout,
     FaultProfile::SlowMirror,
     FaultProfile::BurstLoss,
+    FaultProfile::DnsOutage,
 ];
 
 impl FaultProfile {
@@ -345,10 +366,11 @@ impl FaultProfile {
             "brownout" => Ok(FaultProfile::Brownout),
             "slowmirror" | "slow-mirror" => Ok(FaultProfile::SlowMirror),
             "burstloss" | "burst-loss" | "bursts" => Ok(FaultProfile::BurstLoss),
+            "dns" | "dnsoutage" | "dns-outage" => Ok(FaultProfile::DnsOutage),
             "chaos" | "all" => Ok(FaultProfile::Chaos),
             other => Err(format!(
                 "unknown fault profile '{other}' (none|flaky|stalls|errors|collapse|\
-                 flashcrowd|brownout|slowmirror|burstloss|chaos)"
+                 flashcrowd|brownout|slowmirror|burstloss|dnsoutage|chaos)"
             )),
         }
     }
@@ -365,6 +387,7 @@ impl FaultProfile {
             FaultProfile::Brownout => "brownout",
             FaultProfile::SlowMirror => "slowmirror",
             FaultProfile::BurstLoss => "burstloss",
+            FaultProfile::DnsOutage => "dnsoutage",
             FaultProfile::Chaos => "chaos",
         }
     }
@@ -387,6 +410,7 @@ impl FaultProfile {
             FaultProfile::Brownout => gen_brownout(seed, horizon_s, &mut events),
             FaultProfile::SlowMirror => gen_slowmirror(seed, horizon_s, &mut events),
             FaultProfile::BurstLoss => gen_burstloss(seed, horizon_s, &mut events),
+            FaultProfile::DnsOutage => gen_dns(seed, horizon_s, &mut events),
             FaultProfile::Chaos => {
                 gen_flaky(seed, horizon_s, &mut events);
                 gen_stalls(seed, horizon_s, &mut events);
@@ -397,6 +421,7 @@ impl FaultProfile {
                 gen_slowmirror(seed, horizon_s, &mut events);
                 gen_bodydrops(seed, horizon_s, &mut events);
                 gen_burstloss(seed, horizon_s, &mut events);
+                gen_dns(seed, horizon_s, &mut events);
             }
         }
         FaultSchedule::new(events)
@@ -533,6 +558,22 @@ fn gen_burstloss(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     }
 }
 
+fn gen_dns(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xD15);
+    // Recurring resolver outages: a few seconds each, far enough apart
+    // that established flows finish their chunks between outages.
+    let mut t = rng.range_f64(10.0, 22.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::DnsOutage {
+                duration_s: rng.range_f64(3.0, 9.0),
+            },
+        });
+        t += rng.range_f64(30.0, 65.0);
+    }
+}
+
 fn gen_slowmirror(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     let mut rng = profile_rng(seed, 0x510);
     // The primary mirror collapses early and stays degraded for the
@@ -576,7 +617,7 @@ mod tests {
         let mut names: Vec<&str> = s.events().iter().map(|e| e.kind.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 9, "chaos missing classes: {names:?}");
+        assert_eq!(names.len(), 10, "chaos missing classes: {names:?}");
         assert!(
             names.contains(&"mid-body-drop"),
             "chaos should include the windowed mid-body drop: {names:?}"
@@ -599,6 +640,7 @@ mod tests {
             FaultProfile::Brownout,
             FaultProfile::SlowMirror,
             FaultProfile::BurstLoss,
+            FaultProfile::DnsOutage,
             FaultProfile::Chaos,
         ] {
             assert_eq!(FaultProfile::parse(p.name()).unwrap(), p);

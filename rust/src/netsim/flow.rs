@@ -71,6 +71,11 @@ pub struct SimFlow {
     /// Injected transient server error: the in-flight request will be
     /// rejected when its first-byte timer fires.
     pub reject_pending: bool,
+    /// Injected resolution failure: the connection was opened inside a
+    /// DNS-outage window and dies as soon as its setup timer fires
+    /// (the simulated counterpart of the real connector's DNS step
+    /// erroring).
+    pub fail_on_setup: bool,
 }
 
 /// Initial slow-start ramp fraction.
@@ -100,6 +105,7 @@ impl SimFlow {
             mirror: 0,
             stalled_until_s: 0.0,
             reject_pending: false,
+            fail_on_setup: false,
         }
     }
 

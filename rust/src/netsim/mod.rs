@@ -22,10 +22,10 @@
 //!   "excessive load" regime of §3 ([`client`]),
 //! * **injected faults** — seeded, declarative schedules of connection
 //!   resets, delivery stalls, transient 5xx windows, per-connection
-//!   rate collapses, flash crowds, server brownouts, and per-flow
-//!   asymmetric single-mirror slowdowns ([`fault`]), the substrate for
-//!   testing recovery and mirror-failover behaviour under hostile
-//!   networks.
+//!   rate collapses, flash crowds, server brownouts, DNS/resolution
+//!   outages, and per-flow asymmetric single-mirror slowdowns
+//!   ([`fault`]), the substrate for testing recovery and
+//!   mirror-failover behaviour under hostile networks.
 //!
 //! Time is virtual: [`engine::NetSim::step`] advances the world by `dt`
 //! seconds of simulated time in microseconds of wall time, so the

@@ -6,8 +6,8 @@
 //!
 //! * a [`Transport`] — how connections open, how a chunk's bytes move,
 //!   and how failures are classified ([`FailureClass`]). The simulated
-//!   implementation wraps [`crate::netsim`]; the real one drives worker
-//!   threads over [`crate::transport`]'s HTTP client.
+//!   implementation wraps [`crate::netsim`]; the real one drives the
+//!   event-driven socket reactor in [`crate::transport::reactor`].
 //! * a [`Clock`] — virtual time (advanced by the simulator's steps) vs
 //!   wall time (with a real park between polls).
 //!
@@ -83,7 +83,11 @@
 //! `set_target`. [`crate::config::ReconcileMode::FullScan`] keeps the
 //! naive scan of all `c_max` slots as the measured baseline;
 //! `fastbiodl bench` quantifies the difference and
-//! `rust/tests/engine_tick.rs` proves report-level equivalence.
+//! `rust/tests/engine_tick.rs` proves report-level equivalence. The
+//! slot table itself is sparse: it grows on demand to the live
+//! watermark instead of eagerly allocating `c_max` entries, so a
+//! `c_max` in the tens of thousands costs nothing until the controller
+//! actually drives the target there.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -443,7 +447,12 @@ pub fn run_session_with_stats(
         runtime.map(|r| r.constants().samples).unwrap_or(256),
         0.98,
     );
-    let mut slots: Vec<Slot> = (0..capacity).map(|_| Slot::default()).collect();
+    // Sparse slot table: grown on demand up to the live watermark each
+    // tick (below) instead of eagerly allocating `c_max` structs — a
+    // c_max of 65536 with a working target of 8 costs 8 slots, not
+    // 65536. Slots past the table are by definition in their default
+    // state, which is exactly what the dense version held there.
+    let mut slots: Vec<Slot> = Vec::new();
     let mut events: Vec<TransportEvent> = Vec::new();
 
     // Metadata resolution: batch pays upfront; serialized pays per cold
@@ -531,6 +540,9 @@ pub fn run_session_with_stats(
             ReconcileMode::FullScan => capacity,
             ReconcileMode::Batched => target.max(drain_high).min(capacity),
         };
+        if slots.len() < live {
+            slots.resize_with(live, Slot::default);
+        }
         stats.ticks += 1;
         stats.slots_scanned += live as u64;
         // Striping weights are tick-constant (they depend only on board

@@ -9,8 +9,8 @@
 //! * [`engine::Transport`] — how connections open and bytes move.
 //!   [`sim`] implements it over [`crate::netsim`] (virtual time, fully
 //!   deterministic per seed: every paper experiment runs here);
-//!   [`real`] implements it with worker threads over
-//!   [`crate::transport`]'s HTTP client against live servers.
+//!   [`real`] implements it over the event-driven socket reactor
+//!   ([`crate::transport::reactor`]) against live servers.
 //! * [`engine::Clock`] — virtual vs wall time.
 //!
 //! [`mirrors`] holds the per-mirror health board the engine uses to

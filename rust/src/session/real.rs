@@ -6,21 +6,25 @@
 //! this module only adapts real sockets to the engine's
 //! [`Transport`]/[`Clock`] traits:
 //!
-//! * [`RealTransport`] owns `c_max` worker threads, one per engine
-//!   slot. Each worker holds one persistent HTTP connection (via
-//!   [`crate::transport::fetcher::ChunkFetcher`]) and blocks on a
-//!   command channel; the engine pushes fetch assignments and
-//!   disconnects, and chunk-level outcomes come back on a shared event
-//!   channel. The byte hot path stays atomics-only: workers feed the
-//!   shared recorder directly from the read callback.
+//! * [`RealTransport`] is a thin adapter over the event-driven
+//!   [`Reactor`](crate::transport::reactor::Reactor): a small fixed
+//!   pool of reactor threads drives *all* slot sockets through
+//!   non-blocking connect/read state machines, so `c_max` is bounded by
+//!   file descriptors, not OS thread stacks — thousands of concurrent
+//!   streams are real here, same as on the simulated path. The byte hot
+//!   path stays atomics-only: reactor threads feed the shared recorder
+//!   directly from the socket read loop.
+//! * The per-mirror connection cap is enforced strictly at socket
+//!   level via the reactor's reservation gauges — open sockets to one
+//!   mirror never exceed `per_mirror_conns` (the old thread-per-slot
+//!   binding check was momentarily soft during rebinds).
 //! * [`WallClock`] is `std::time::Instant` with a real park.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::accession::resolver::ResolutionCost;
+use crate::accession::resolver::{mirror_width, ResolutionCost};
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
 use crate::control::Controller;
@@ -28,13 +32,14 @@ use crate::coordinator::scheduler::{Chunk, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::runtime::XlaRuntime;
 use crate::session::engine::{
-    run_session, Clock, EngineParams, ToolBehavior, Transport, TransportEvent,
+    run_session, Clock, EngineParams, FailureClass, ToolBehavior, Transport, TransportEvent,
 };
 use crate::session::SessionReport;
-use crate::transport::fetcher::ChunkFetcher;
+use crate::transport::http_client::HttpConnection;
+use crate::transport::reactor::{FetchSpec, KillSwitch, ProgressPolicy, Reactor};
 use crate::{Error, Result};
 
-/// A worker gives up (and fails the whole session) only after this many
+/// A slot gives up (and fails the whole session) only after this many
 /// consecutive chunk failures — isolated disconnects and transient 5xx
 /// responses are retried with backoff instead.
 pub const MAX_CONSECUTIVE_FAILURES: usize = 6;
@@ -90,100 +95,77 @@ impl Clock for WallClock {
     }
 }
 
-enum WorkerCmd {
-    Fetch {
-        url: String,
-        out: Option<PathBuf>,
-        chunk: Chunk,
-        total_bytes: u64,
-    },
-    Disconnect,
-}
-
-/// The engine's transport over real sockets: one thread per slot.
+/// The engine's transport over real sockets: a thin adapter binding
+/// engine slots to the shared event-driven [`Reactor`].
 pub struct RealTransport {
-    cmd_tx: Vec<Sender<WorkerCmd>>,
-    events_rx: Receiver<TransportEvent>,
-    joins: Vec<std::thread::JoinHandle<()>>,
+    reactor: Reactor,
     sink: Sink,
     /// Per-mirror connection cap (0 = unlimited), enforced on the
-    /// slot→mirror bindings below — the real-socket counterpart of the
-    /// simulator's per-mirror flow cap. Bindings are admission
-    /// control: a rebinding slot's old socket may linger for the
-    /// moment it takes its worker to drain the queued disconnect, so
-    /// unlike the simulator's strict flow-table cap this one is
-    /// momentarily soft.
+    /// reactor's reservation gauges: the engine thread is the only
+    /// incrementer and sockets exist only under a reservation, so open
+    /// connections to a mirror never exceed this — strictly.
     per_mirror_conns: usize,
     /// Mirror each connected slot is bound to (`None` = disconnected).
     slot_mirror: Vec<Option<usize>>,
+    /// Events raised on the engine thread itself (e.g. a malformed
+    /// URL), delivered ahead of reactor events on the next poll.
+    pending: Vec<TransportEvent>,
 }
 
 impl RealTransport {
-    /// Spawn `capacity` workers sharing the byte recorder.
-    /// `per_mirror_conns` caps how many workers may hold a connection
-    /// to the same mirror at once (0 = unlimited).
+    /// Spawn the reactor pool serving `capacity` slots across
+    /// `mirror_count` mirrors. `per_mirror_conns` caps how many slots
+    /// may hold a connection to the same mirror at once (0 =
+    /// unlimited); `progress` is the whole-chunk progress deadline.
     pub fn spawn(
         capacity: usize,
         sink: Sink,
         per_mirror_conns: usize,
+        mirror_count: usize,
         recorder: Arc<ThroughputRecorder>,
+        progress: ProgressPolicy,
     ) -> Result<RealTransport> {
-        let (events_tx, events_rx) = channel::<TransportEvent>();
-        let mut cmd_tx = Vec::with_capacity(capacity);
-        let mut joins = Vec::with_capacity(capacity);
-        for slot in 0..capacity {
-            let (tx, rx) = channel::<WorkerCmd>();
-            let ev_tx = events_tx.clone();
-            let rec = recorder.clone();
-            joins.push(
-                std::thread::Builder::new()
-                    .name(format!("dl-worker-{slot}"))
-                    .spawn(move || worker_loop(slot, rx, ev_tx, rec))
-                    .map_err(|e| Error::Session(format!("spawn worker {slot}: {e}")))?,
-            );
-            cmd_tx.push(tx);
-        }
+        let reactor = Reactor::spawn(capacity, mirror_count, recorder, progress)?;
         Ok(RealTransport {
-            cmd_tx,
-            events_rx,
-            joins,
+            reactor,
             sink,
             per_mirror_conns,
             slot_mirror: vec![None; capacity],
+            pending: Vec::new(),
         })
     }
 
-    /// Live slot bindings to mirror `mirror`.
-    fn bound_to(&self, mirror: usize) -> usize {
-        self.slot_mirror.iter().filter(|m| **m == Some(mirror)).count()
+    /// Handle that can simulate the whole reactor dying mid-session
+    /// (regression tests for the dead-worker hang).
+    pub fn kill_switch(&self) -> KillSwitch {
+        self.reactor.kill_switch()
     }
 }
 
 impl Transport for RealTransport {
     fn connect(&mut self, slot: usize, mirror: usize) -> Result<bool> {
-        // Real connections are opened lazily by the worker on its first
-        // fetch (TCP setup happens on the worker thread, not here) —
-        // the per-mirror cap is enforced up front on the bindings (see
-        // `per_mirror_conns` above for the momentary-softness caveat).
-        if self.per_mirror_conns > 0
-            && self.slot_mirror[slot] != Some(mirror)
-            && self.bound_to(mirror) >= self.per_mirror_conns
-        {
+        if self.slot_mirror[slot] == Some(mirror) {
+            return Ok(true);
+        }
+        if self.per_mirror_conns > 0 && self.reactor.mirror_open(mirror) >= self.per_mirror_conns {
             return Ok(false);
         }
+        if let Some(old) = self.slot_mirror[slot].take() {
+            self.reactor.release(slot, old);
+        }
+        self.reactor.reserve(mirror);
         self.slot_mirror[slot] = Some(mirror);
         Ok(true)
     }
 
     fn disconnect(&mut self, slot: usize) {
-        self.slot_mirror[slot] = None;
-        // Queued behind any in-flight fetch; the worker drops its
-        // connection when it processes the command.
-        let _ = self.cmd_tx[slot].send(WorkerCmd::Disconnect);
+        if let Some(mirror) = self.slot_mirror[slot].take() {
+            self.reactor.release(slot, mirror);
+        }
     }
 
     fn is_ready(&self, slot: usize) -> bool {
-        slot < self.cmd_tx.len()
+        slot < self.slot_mirror.len()
     }
 
     fn begin_fetch(
@@ -193,78 +175,42 @@ impl Transport for RealTransport {
         chunk: &Chunk,
         mirror: usize,
     ) -> Result<()> {
+        let (host, port, path) = match HttpConnection::split_url(record.mirror_url(mirror)) {
+            Ok(parts) => parts,
+            Err(e) => {
+                // A malformed URL can never succeed: surface it through
+                // the event stream as a deterministic failure.
+                self.pending.push(TransportEvent::Failed {
+                    slot,
+                    class: FailureClass::Fatal,
+                    error: e.to_string(),
+                });
+                return Ok(());
+            }
+        };
         let out = match &self.sink {
             Sink::Discard => None,
             Sink::Directory(dir) => Some(std::path::Path::new(dir).join(&record.accession)),
         };
-        self.cmd_tx[slot]
-            .send(WorkerCmd::Fetch {
-                url: record.mirror_url(mirror).to_string(),
-                out,
-                chunk: chunk.clone(),
-                total_bytes: record.bytes,
-            })
-            .map_err(|_| Error::Session(format!("worker {slot} is gone")))
+        self.reactor.fetch(FetchSpec {
+            slot,
+            host,
+            port,
+            path,
+            out,
+            chunk: chunk.clone(),
+            total_bytes: record.bytes,
+            mirror,
+        })
     }
 
     fn poll(&mut self, events: &mut Vec<TransportEvent>) -> Result<()> {
-        loop {
-            match self.events_rx.try_recv() {
-                Ok(ev) => events.push(ev),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
-        }
-        Ok(())
+        events.append(&mut self.pending);
+        self.reactor.drain_events(events)
     }
 
     fn shutdown(&mut self) {
-        // Closing the command channels ends every worker loop; join so
-        // no worker is still streaming when the report is assembled.
-        self.cmd_tx.clear();
-        for j in self.joins.drain(..) {
-            let _ = j.join();
-        }
-    }
-}
-
-impl Drop for RealTransport {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
-/// One worker thread: block on assignments, stream chunks, classify
-/// and report outcomes. No scheduling decisions happen here.
-fn worker_loop(
-    slot: usize,
-    rx: Receiver<WorkerCmd>,
-    events: Sender<TransportEvent>,
-    recorder: Arc<ThroughputRecorder>,
-) {
-    let mut fetcher = ChunkFetcher::new(recorder);
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            WorkerCmd::Disconnect => fetcher.disconnect(),
-            WorkerCmd::Fetch {
-                url,
-                out,
-                chunk,
-                total_bytes,
-            } => {
-                let ev = match fetcher.fetch(&url, out.as_deref(), &chunk, total_bytes) {
-                    Ok(()) => TransportEvent::Completed { slot },
-                    Err((class, error)) => {
-                        // Drop the connection on any failure — archives
-                        // often brown out per-connection state.
-                        fetcher.disconnect();
-                        TransportEvent::Failed { slot, class, error }
-                    }
-                };
-                if events.send(ev).is_err() {
-                    return; // session is tearing down
-                }
-            }
-        }
+        self.reactor.shutdown();
     }
 }
 
@@ -282,26 +228,39 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
     if records.is_empty() {
         return Err(Error::Session("no files to download".into()));
     }
-    // The real driver is thread-per-slot: every slot gets an OS worker
-    // thread up front. The simulated engine scales to thousands of
-    // slots (they are plain structs there), but eagerly reserving that
-    // many thread stacks here would be a config footgun — refuse it.
-    if download.optimizer.c_max > 512 {
-        return Err(Error::Config(format!(
-            "c_max {} too large for the real driver (max 512: one OS thread per slot)",
-            download.optimizer.c_max
-        )));
-    }
 
     // Resume: pick up a prior journal's frontiers when writing to a
     // directory; files already (partially) on disk are not re-fetched.
+    // The disk is the source of truth: a frontier is only honored up to
+    // the bytes actually present, and a file whose on-disk size exceeds
+    // the record restarts from scratch.
     let mut done_prefix: Option<Vec<u64>> = None;
     let mut journal_dir: Option<PathBuf> = None;
     if let Sink::Directory(dir) = &sink {
         std::fs::create_dir_all(dir)?;
         let dirp = std::path::Path::new(dir);
         if let Some(journal) = crate::coordinator::resume::ProgressJournal::load(dirp)? {
-            let frontiers = journal.frontiers_for(&records);
+            let mut frontiers = journal.frontiers_for(&records);
+            for (f, r) in frontiers.iter_mut().zip(records.iter()) {
+                let path = dirp.join(&r.accession);
+                let disk_len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                if disk_len > r.bytes {
+                    log::warn!(
+                        "{}: on-disk file is {disk_len} bytes but the record says {} — \
+                         restarting this file",
+                        r.accession,
+                        r.bytes
+                    );
+                    *f = 0;
+                } else if *f > disk_len {
+                    log::warn!(
+                        "{}: journal frontier {f} exceeds the {disk_len}-byte file on disk — \
+                         clamping to what is actually there",
+                        r.accession
+                    );
+                    *f = disk_len;
+                }
+            }
             if frontiers.iter().any(|&f| f > 0) {
                 log::info!(
                     "resuming: {} bytes already on disk",
@@ -310,7 +269,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
                 done_prefix = Some(frontiers);
             }
         }
-        // Pre-size the output files so workers can write ranges
+        // Pre-size the output files so reactor threads can write ranges
         // without coordinating. Existing files keep their contents
         // (set_len only extends/truncates to the expected size).
         for r in &records {
@@ -336,11 +295,17 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         resolution: ResolutionCost::Batch { latency_s: 0.0 },
     };
     let recorder = Arc::new(ThroughputRecorder::new());
+    let progress = ProgressPolicy {
+        window_s: download.progress_window_s,
+        min_bytes: download.progress_min_bytes,
+    };
     let mut transport = RealTransport::spawn(
         download.optimizer.c_max,
         sink,
         download.mirror.per_mirror_conns,
+        mirror_width(&records),
         recorder.clone(),
+        progress,
     )?;
     let clock = WallClock::start();
     run_session(

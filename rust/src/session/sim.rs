@@ -14,6 +14,7 @@
 //!   determinism is total given `(params, seed)`.
 
 use std::cell::Cell;
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::Arc;
 
@@ -63,6 +64,10 @@ pub struct SimTransport {
     sim: NetSim,
     /// Engine slot → simulator flow.
     flows: Vec<Option<FlowId>>,
+    /// Simulator flow → engine slot: the inverse of `flows`, kept in
+    /// lockstep so translating a step's events is O(1) per event
+    /// instead of a scan over all `c_max` slots.
+    flow_slots: HashMap<FlowId, usize>,
     recorder: Arc<ThroughputRecorder>,
     clock: VirtualClock,
     /// Per-mirror connection cap (0 = unlimited), mirrored into the
@@ -90,6 +95,7 @@ impl SimTransport {
         Ok(SimTransport {
             sim,
             flows: vec![None; capacity],
+            flow_slots: HashMap::new(),
             recorder,
             clock,
             per_mirror_conns,
@@ -106,12 +112,17 @@ impl Transport for SimTransport {
         if self.per_mirror_conns > 0 && self.sim.open_flows_to(mirror) >= self.per_mirror_conns {
             return Ok(false); // this mirror is at its connection cap
         }
-        self.flows[slot] = Some(self.sim.open_flow_to(mirror)?);
+        let id = self.sim.open_flow_to(mirror)?;
+        if let Some(old) = self.flows[slot].replace(id) {
+            self.flow_slots.remove(&old);
+        }
+        self.flow_slots.insert(id, slot);
         Ok(true)
     }
 
     fn disconnect(&mut self, slot: usize) {
         if let Some(id) = self.flows[slot].take() {
+            self.flow_slots.remove(&id);
             self.sim.close_flow(id);
         }
     }
@@ -139,11 +150,13 @@ impl Transport for SimTransport {
         self.sim.step_into(None, &mut self.scratch);
         self.clock.advance_to(self.scratch.now_s);
         for ev in &self.scratch.events {
-            let Some(slot) = self.flows.iter().position(|f| *f == Some(ev.id)) else {
+            let Some(&slot) = self.flow_slots.get(&ev.id) else {
                 continue; // flow already released by the engine
             };
             if ev.failed {
-                self.flows[slot] = None; // the simulator killed the flow
+                // The simulator killed the flow.
+                self.flows[slot] = None;
+                self.flow_slots.remove(&ev.id);
                 events.push(TransportEvent::Failed {
                     slot,
                     class: FailureClass::Transport,

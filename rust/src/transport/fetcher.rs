@@ -1,13 +1,15 @@
-//! One worker's chunk-fetch data path: a persistent HTTP connection,
+//! The blocking chunk-fetch data path: a persistent HTTP connection,
 //! range requests, sink writing, and failure classification.
 //!
-//! This is the real-socket half of the unified session engine's
-//! [`crate::session::engine::Transport`]: the engine decides *what* to
-//! fetch and from *which mirror* (striping slot bindings across
-//! healthy mirrors under per-mirror connection caps — see
-//! [`crate::session::real::RealTransport`], which enforces the caps on
-//! its slot→mirror bindings); [`ChunkFetcher`] moves the bytes and
-//! sorts every failure into the engine's [`FailureClass`] taxonomy —
+//! The live real-session driver now runs on the event-driven
+//! [`crate::transport::reactor`]; this blocking fetcher remains as the
+//! simple one-connection path and as the reference implementation of
+//! the failure taxonomy the reactor's non-blocking state machine
+//! mirrors. The engine decides *what* to fetch and from *which* mirror
+//! (striping slot bindings across healthy mirrors under per-mirror
+//! connection caps — see [`crate::session::real::RealTransport`]);
+//! [`ChunkFetcher`] moves the bytes and sorts every failure into the
+//! engine's [`FailureClass`] taxonomy —
 //! connection-level errors reconnect and retry, transient 5xx responses
 //! retry after backoff, deterministic errors (bad URL, 4xx, local I/O)
 //! fail the session immediately. Because the connection is keyed by
@@ -24,8 +26,9 @@ use crate::metrics::recorder::ThroughputRecorder;
 use crate::session::engine::FailureClass;
 use crate::transport::http_client::HttpConnection;
 
-/// Connect timeout for worker connections.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// Connect timeout for outbound connections (shared with the
+/// event-driven reactor's connector pool).
+pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// A classified fetch failure.
 pub type FetchError = (FailureClass, String);

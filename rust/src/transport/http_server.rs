@@ -48,7 +48,7 @@ pub struct ServedFile {
 /// mirror `m` serves under `/m{m}/...`) and degrade one of them while
 /// the others stay healthy. `None` keeps the PR 2 behaviour: the
 /// window applies to every request.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServerFaultWindow {
     pub from_s: f64,
     pub until_s: f64,
@@ -59,6 +59,13 @@ pub struct ServerFaultWindow {
     /// Restrict the window to request paths starting with this prefix
     /// (`None` = all paths — a global, every-mirror window).
     pub path_prefix: Option<String>,
+    /// Dribble mode: while the window is active, responses trickle
+    /// payload at this rate (bytes/s) instead of streaming normally —
+    /// the connection stays alive and technically moves bytes, but far
+    /// too slowly to matter. `0` (the default) disables dribbling.
+    /// This is the loopback reproduction of the pathological stall the
+    /// client's whole-chunk progress deadline exists to catch.
+    pub dribble_bytes_per_s: u64,
 }
 
 /// Server throttling knobs.
@@ -160,24 +167,21 @@ pub fn fault_windows_from_schedule(
                 from_s: ev.at_s,
                 until_s: ev.at_s + duration_s,
                 reject_prob: *reject_prob,
-                added_latency_s: 0.0,
-                path_prefix: None,
+                ..ServerFaultWindow::default()
             }),
             FaultKind::Brownout { duration_s } => out.push(ServerFaultWindow {
                 from_s: ev.at_s,
                 until_s: ev.at_s + duration_s,
                 reject_prob: 1.0,
-                added_latency_s: 0.0,
-                path_prefix: None,
+                ..ServerFaultWindow::default()
             }),
             FaultKind::Stall { frac, duration_s } => out.push(ServerFaultWindow {
                 from_s: ev.at_s,
                 until_s: ev.at_s + duration_s,
-                reject_prob: 0.0,
                 // A head-of-line stall shows up as first-byte delay on
                 // loopback; cap it so tests stay fast.
                 added_latency_s: (frac * duration_s).min(2.0),
-                path_prefix: None,
+                ..ServerFaultWindow::default()
             }),
             FaultKind::SlowMirror {
                 mirror,
@@ -186,11 +190,11 @@ pub fn fault_windows_from_schedule(
             } => out.push(ServerFaultWindow {
                 from_s: ev.at_s,
                 until_s: ev.at_s + duration_s,
-                reject_prob: 0.0,
                 // Per-request staging delay as the loopback analogue
                 // of a rate collapse; capped so tests stay fast.
                 added_latency_s: (0.1 / factor.max(1e-3)).min(2.0),
                 path_prefix: Some(format!("/m{mirror}/")),
+                ..ServerFaultWindow::default()
             }),
             _ => {} // connection-level classes: see fault_drop_* knobs
         }
@@ -239,6 +243,9 @@ struct Shared {
     throttle: ThrottleConfig,
     global_bucket: Option<TokenBucket>,
     active_connections: AtomicUsize,
+    /// High-water mark of `active_connections` over the server's life —
+    /// the per-mirror connection-cap tests assert on this.
+    peak_connections: AtomicUsize,
     total_requests: AtomicUsize,
     /// Mid-body drops injected so far (see `fault_drop_count`).
     faults_injected: AtomicUsize,
@@ -267,6 +274,7 @@ impl ThrottledHttpServer {
             },
             throttle,
             active_connections: AtomicUsize::new(0),
+            peak_connections: AtomicUsize::new(0),
             total_requests: AtomicUsize::new(0),
             faults_injected: AtomicUsize::new(0),
             started: std::time::Instant::now(),
@@ -303,6 +311,14 @@ impl ThrottledHttpServer {
         self.shared.files.lock().unwrap().insert(f.path.clone(), f);
     }
 
+    /// High-water mark of simultaneously open connections over the
+    /// server's lifetime. The strict per-mirror cap tests assert the
+    /// client never opened more sockets to this server than
+    /// `per_mirror_conns` allows.
+    pub fn peak_connections(&self) -> usize {
+        self.shared.peak_connections.load(Ordering::Relaxed)
+    }
+
     /// Requests served so far (diagnostics).
     pub fn total_requests(&self) -> usize {
         self.shared.total_requests.load(Ordering::Relaxed)
@@ -337,7 +353,8 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shutdown: Arc<AtomicB
                     drop(stream);
                     continue;
                 }
-                shared.active_connections.fetch_add(1, Ordering::Relaxed);
+                let now = shared.active_connections.fetch_add(1, Ordering::Relaxed) + 1;
+                shared.peak_connections.fetch_max(now, Ordering::Relaxed);
                 let conn_shared = shared.clone();
                 let conn_shutdown = shutdown.clone();
                 let _ = std::thread::Builder::new()
@@ -523,6 +540,38 @@ fn serve_connection(
                 if n < shared.throttle.fault_drop_count {
                     return Ok(()); // abrupt close, no more bytes
                 }
+            }
+            // Dribble windows: while one applies to this path, trickle
+            // the payload in tiny pieces at the window's configured
+            // rate instead of streaming normally. The connection stays
+            // alive and bytes do move — just far below any useful rate
+            // — which is exactly the failure mode the client's
+            // whole-chunk progress deadline has to catch.
+            let mut dribble_rate: u64 = 0;
+            if !shared.throttle.fault_windows.is_empty() {
+                let up_s = shared.started.elapsed().as_secs_f64();
+                for w in &shared.throttle.fault_windows {
+                    let applies = match &w.path_prefix {
+                        Some(prefix) => path.starts_with(prefix.as_str()),
+                        None => true,
+                    };
+                    if applies && up_s >= w.from_s && up_s < w.until_s {
+                        dribble_rate = dribble_rate.max(w.dribble_bytes_per_s);
+                    }
+                }
+            }
+            if dribble_rate > 0 {
+                let piece = remaining.min(64) as usize;
+                fill_payload(file.seed, offset, &mut buf[..piece]);
+                writer.write_all(&buf[..piece])?;
+                writer.flush()?;
+                offset += piece as u64;
+                remaining -= piece as u64;
+                sent_this_response += piece as u64;
+                std::thread::sleep(Duration::from_secs_f64(
+                    piece as f64 / dribble_rate as f64,
+                ));
+                continue;
             }
             let want = (buf.len() as u64).min(remaining) as usize;
             if let Some(b) = &per_conn_bucket {

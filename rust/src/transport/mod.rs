@@ -1,25 +1,33 @@
-//! Real-socket transport: an HTTP/1.1 range client, a throttled local
-//! test server, and a token-bucket rate limiter.
+//! Real-socket transport: an event-driven HTTP/1.1 reactor, a blocking
+//! range client, a throttled local test server, and a token-bucket
+//! rate limiter.
 //!
 //! The paper's system downloads over "standard HTTP or FTP"; this
 //! module is the standard-HTTP half, implemented directly on
-//! `std::net::TcpStream` (tokio is unavailable offline, and a
-//! thread-per-connection blocking design matches the paper's
-//! socket-per-worker architecture anyway).
+//! `std::net::TcpStream` (tokio is unavailable offline; a hand-rolled
+//! `poll(2)` reactor keeps the dependency surface at zero while still
+//! scaling to thousands of concurrent streams).
 //!
-//! * [`http_client`] — minimal HTTP/1.1 client: persistent connections,
-//!   `Range: bytes=…` GETs, status/headers parsing, chunked reads with
-//!   byte-count callbacks (the worker feeds the throughput recorder
-//!   from that callback).
+//! * [`reactor`] — the real session driver's scale-out engine: a small
+//!   fixed pool of reactor threads drives all slot sockets through
+//!   non-blocking connect/read state machines, with DNS + TCP setup on
+//!   a separate connector pool and a whole-chunk progress deadline so
+//!   dribbling servers cannot pin a chunk open forever.
+//! * [`http_client`] — minimal blocking HTTP/1.1 client: persistent
+//!   connections, `Range: bytes=…` GETs, status/headers parsing,
+//!   chunked reads with byte-count callbacks. Still used by the simple
+//!   one-connection paths and as the URL-parsing authority
+//!   ([`HttpConnection::split_url`]).
 //! * [`http_server`] — the local stand-in for an ENA/NCBI mirror:
 //!   serves deterministic synthetic payloads for registered paths,
-//!   honors range requests and keep-alive, and throttles per-connection
-//!   and globally through token buckets so the end-to-end example can
-//!   reproduce a bandwidth-limited archive on loopback.
-//! * [`fetcher`] — one worker's chunk data path (persistent
-//!   connection + sink writing + failure classification), the
-//!   real-socket implementation detail behind the unified session
-//!   engine's `Transport`.
+//!   honors range requests and keep-alive, throttles per-connection
+//!   and globally through token buckets, and can replay scheduled
+//!   fault windows (errors, stalls, byte-dribbling) so the end-to-end
+//!   tests can reproduce a misbehaving archive on loopback.
+//! * [`fetcher`] — the blocking chunk data path (persistent
+//!   connection + sink writing + failure classification); the reactor
+//!   reimplements the same classification non-blockingly, and parity
+//!   between the two is pinned by the fetcher's tests.
 //! * [`token_bucket`] — the shared rate limiter.
 //!
 //! The real session driver ([`crate::session::real`]) adapts this
@@ -30,9 +38,11 @@
 pub mod fetcher;
 pub mod http_client;
 pub mod http_server;
+pub mod reactor;
 pub mod token_bucket;
 
 pub use fetcher::ChunkFetcher;
 pub use http_client::{HttpConnection, HttpResponse};
 pub use http_server::{ServedFile, ServerFaultWindow, ThrottledHttpServer, ThrottleConfig};
+pub use reactor::{FetchSpec, KillSwitch, ProgressPolicy, Reactor};
 pub use token_bucket::TokenBucket;

@@ -1,0 +1,1147 @@
+//! Event-driven non-blocking socket reactor — the real transport's
+//! scale-out engine.
+//!
+//! The old real driver spawned one blocking OS thread per engine slot,
+//! which capped `c_max` at 512 (thread stacks) while the simulated path
+//! scaled to thousands of slots. This module replaces that pool with a
+//! small **fixed** reactor-thread pool that drives *all* slot sockets
+//! through non-blocking state machines over `poll(2)` — dependency-light
+//! (a single libc FFI declaration, no tokio/mio), so thousands of
+//! concurrent HTTP streams cost thousands of file descriptors, not
+//! thousands of stacks.
+//!
+//! ## Threads
+//!
+//! * **Reactor threads** (`dl-reactor-N`, `available_parallelism`
+//!   clamped to 2..=8): each owns the connections of the slots hashed
+//!   to it (`slot % n_reactors`), polls their sockets, and runs the
+//!   per-connection HTTP state machine. Payload bytes go straight into
+//!   the shared [`ThroughputRecorder`] — the byte hot path stays
+//!   atomics-only.
+//! * **Connector threads** (`dl-connect-N`, fixed small pool): perform
+//!   the *blocking* steps of connection setup — DNS resolution (now an
+//!   explicit step, mirrored by the simulator's DNS-outage fault class)
+//!   and `connect_timeout` — then hand the socket, flipped to
+//!   non-blocking, to the owning reactor thread for adoption.
+//!
+//! ## Per-connection state machine
+//!
+//! ```text
+//!             Cmd::Fetch (no conn)                Adopt(Ok)
+//! (absent) ───────────────────────► Connecting ─────────────► Sending
+//!                                       │                        │ request
+//!                                       │ Adopt(Err)             ▼ written
+//!   Idle ◄──────────────┐               ▼                     Headers
+//!    │ ▲                │        Failed{Transport}               │ blank line
+//!    │ │ Completed      │                                        ▼
+//!    │ └────────────────┼──────────────────────── Body ◄── 200/206, length ok
+//!    │ Cmd::Fetch       │ Failed{Reject|Fatal}     ▲
+//!    └─ (reuse) ────────┴──────── Drain ◄──────────┴── other status
+//! ```
+//!
+//! Every transition that fails classifies into the engine's
+//! [`FailureClass`] taxonomy exactly as the blocking
+//! [`crate::transport::fetcher::ChunkFetcher`] did, so
+//! `tests/engine_parity.rs` byte accounting is untouched.
+//!
+//! ## Progress deadline
+//!
+//! Non-blocking sockets have no per-`read()` timeout, so the reactor
+//! enforces a stronger guarantee the blocking path never had: every
+//! non-idle connection must move at least [`ProgressPolicy::min_bytes`]
+//! per [`ProgressPolicy::window_s`] window or it is failed as
+//! [`FailureClass::Transport`] and the chunk retried — a server
+//! dribbling one byte every few seconds can no longer pin a chunk
+//! forever.
+//!
+//! ## Per-mirror cap and slot generations
+//!
+//! The per-mirror connection gauge ([`Reactor::reserve`] /
+//! [`Reactor::release`] / [`Reactor::mirror_open`]) counts
+//! *reservations*: the engine thread is the only incrementer, sockets
+//! only exist under a reservation, and every teardown path decrements
+//! exactly once, so open sockets to a mirror never exceed the cap —
+//! strictly, not "momentarily softly" as the old thread-per-slot
+//! binding check did. Per-slot generation counters cancel in-flight
+//! connects that raced a release.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{ErrorKind, Read, Seek, SeekFrom, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::scheduler::Chunk;
+use crate::metrics::recorder::ThroughputRecorder;
+use crate::session::engine::{FailureClass, TransportEvent};
+use crate::transport::fetcher::CONNECT_TIMEOUT;
+use crate::{Error, Result};
+
+/// Raw `poll(2)` — the only system interface the reactor needs beyond
+/// `std::net`. Declared by hand to stay dependency-free.
+mod sys {
+    /// `nfds_t` on Linux.
+    pub type NfdsT = u64;
+
+    /// `struct pollfd`.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    }
+}
+
+/// Per-reactor-thread read buffer. Shared across that thread's
+/// connections (4096 conns × a per-conn buffer would be gigabytes).
+const SCRATCH_BYTES: usize = 256 * 1024;
+
+/// Response heads larger than this are a protocol error.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// `poll(2)` timeout: bounds command-pickup latency while sockets are
+/// registered.
+const POLL_TIMEOUT_MS: i32 = 1;
+
+/// Cooperative shutdown flag shared by every reactor/connector thread.
+/// Tests use a clone to simulate the whole event loop dying mid-session
+/// (the dead-worker-hang regression).
+#[derive(Clone, Default)]
+pub struct KillSwitch(Arc<AtomicBool>);
+
+impl KillSwitch {
+    /// Ask every reactor and connector thread to exit.
+    pub fn kill(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether [`KillSwitch::kill`] has been called.
+    pub fn is_killed(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Whole-chunk progress deadline (see the module docs). `window_s <= 0`
+/// disables the check.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressPolicy {
+    /// Measurement window length, seconds.
+    pub window_s: f64,
+    /// Minimum bytes (headers + payload) per window.
+    pub min_bytes: u64,
+}
+
+/// One fetch assignment: everything a reactor thread needs to issue the
+/// request and land the bytes.
+pub struct FetchSpec {
+    /// Engine worker slot.
+    pub slot: usize,
+    /// Server host (name or IP; resolution happens on a connector).
+    pub host: String,
+    /// Server port.
+    pub port: u16,
+    /// Request path.
+    pub path: String,
+    /// Output file (`None` = count and discard).
+    pub out: Option<PathBuf>,
+    /// Byte range to fetch.
+    pub chunk: Chunk,
+    /// Total object size (a chunk covering it all skips the `Range`
+    /// header, exactly like the blocking fetcher).
+    pub total_bytes: u64,
+    /// Mirror index the slot is bound to (reservation bookkeeping).
+    pub mirror: usize,
+}
+
+impl FetchSpec {
+    fn range(&self) -> Option<(u64, u64)> {
+        if self.chunk.offset == 0 && self.chunk.len == self.total_bytes {
+            None
+        } else {
+            Some((self.chunk.offset, self.chunk.len))
+        }
+    }
+}
+
+/// Commands a reactor thread processes between polls.
+enum Cmd {
+    /// Start fetching (reusing the slot's idle connection if it matches
+    /// the target endpoint, dialing a fresh one otherwise).
+    Fetch(Box<FetchSpec>),
+    /// The engine released the slot: close its socket and settle its
+    /// mirror reservation.
+    Release { slot: usize, mirror: usize },
+    /// A connector finished (or abandoned) a dial for this slot.
+    Adopt {
+        slot: usize,
+        gen: u64,
+        spec: Box<FetchSpec>,
+        result: std::result::Result<TcpStream, (FailureClass, String)>,
+    },
+}
+
+/// A dial request handed to a connector thread.
+struct ConnectJob {
+    slot: usize,
+    gen: u64,
+    spec: Box<FetchSpec>,
+}
+
+/// HTTP/1.1 request state over one non-blocking socket.
+enum HttpState {
+    /// Connected, no request in flight (keep-alive parking).
+    Idle,
+    /// Writing the request line + headers.
+    Sending { buf: Vec<u8>, sent: usize },
+    /// Accumulating the response head up to the blank line.
+    Headers { head: Vec<u8> },
+    /// Streaming a `Content-Length`-delimited payload.
+    Body { remaining: u64 },
+    /// Consuming an error body so the connection stays usable, then
+    /// reporting the stored failure.
+    Drain {
+        remaining: u64,
+        class: FailureClass,
+        error: String,
+    },
+}
+
+/// One live connection owned by a reactor thread.
+struct Conn {
+    stream: TcpStream,
+    host: String,
+    port: u16,
+    st: HttpState,
+    /// The fetch in flight (None while Idle).
+    spec: Option<Box<FetchSpec>>,
+    /// Output handle, positioned at the chunk offset.
+    file: Option<File>,
+    /// Progress-deadline window start.
+    window_start: Instant,
+    /// Bytes (head + payload) received since `window_start`.
+    window_bytes: u64,
+}
+
+/// What a reactor thread tracks per slot.
+enum SlotState {
+    /// A connector is dialing for this slot; `gen` cancels the adopt if
+    /// the engine released the slot meanwhile.
+    Connecting { gen: u64 },
+    /// A live socket.
+    Conn(Conn),
+}
+
+/// Outcome of driving one connection's state machine.
+enum Fate {
+    /// Nothing to report; keep the connection.
+    Keep,
+    /// Chunk fully delivered; connection back to Idle.
+    Completed,
+    /// Failure reported, connection survives (drained error body).
+    FailKeep(FailureClass, String),
+    /// Failure reported, connection closed.
+    FailClose(FailureClass, String),
+    /// Connection closed quietly (server dropped an idle keep-alive).
+    CloseSilent,
+}
+
+struct ReactorCtx {
+    cmd_rx: Receiver<Cmd>,
+    connector_tx: Vec<Sender<ConnectJob>>,
+    events_tx: Sender<TransportEvent>,
+    kill: KillSwitch,
+    gens: Arc<Vec<AtomicU64>>,
+    mirror_open: Arc<Vec<AtomicUsize>>,
+    recorder: Arc<ThroughputRecorder>,
+    progress: ProgressPolicy,
+}
+
+struct ConnectorCtx {
+    job_rx: Receiver<ConnectJob>,
+    reactor_tx: Vec<Sender<Cmd>>,
+    kill: KillSwitch,
+    gens: Arc<Vec<AtomicU64>>,
+}
+
+/// The reactor: fixed thread pool + channels. One instance serves all
+/// `capacity` engine slots.
+pub struct Reactor {
+    cmd_tx: Vec<Sender<Cmd>>,
+    connector_tx: Vec<Sender<ConnectJob>>,
+    events_rx: Receiver<TransportEvent>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    kill: KillSwitch,
+    /// Per-slot generation counters; bumped on release to cancel
+    /// in-flight dials.
+    gens: Arc<Vec<AtomicU64>>,
+    /// Per-mirror open-reservation gauges.
+    mirror_open: Arc<Vec<AtomicUsize>>,
+}
+
+impl Reactor {
+    /// Spawn the reactor + connector pools for `capacity` slots across
+    /// `mirror_count` mirrors, feeding payload bytes into `recorder`.
+    pub fn spawn(
+        capacity: usize,
+        mirror_count: usize,
+        recorder: Arc<ThroughputRecorder>,
+        progress: ProgressPolicy,
+    ) -> Result<Reactor> {
+        let n_reactors = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(2, 8);
+        let n_connectors = 4;
+        let kill = KillSwitch::default();
+        let gens: Arc<Vec<AtomicU64>> =
+            Arc::new((0..capacity).map(|_| AtomicU64::new(0)).collect());
+        let mirror_open: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..mirror_count.max(1)).map(|_| AtomicUsize::new(0)).collect());
+        let (events_tx, events_rx) = channel::<TransportEvent>();
+
+        let mut cmd_tx = Vec::with_capacity(n_reactors);
+        let mut cmd_rx = Vec::with_capacity(n_reactors);
+        for _ in 0..n_reactors {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_tx.push(tx);
+            cmd_rx.push(rx);
+        }
+        let mut connector_tx = Vec::with_capacity(n_connectors);
+        let mut connector_rx = Vec::with_capacity(n_connectors);
+        for _ in 0..n_connectors {
+            let (tx, rx) = channel::<ConnectJob>();
+            connector_tx.push(tx);
+            connector_rx.push(rx);
+        }
+
+        let mut joins = Vec::with_capacity(n_reactors + n_connectors);
+        for (i, rx) in cmd_rx.into_iter().enumerate() {
+            let ctx = ReactorCtx {
+                cmd_rx: rx,
+                connector_tx: connector_tx.clone(),
+                events_tx: events_tx.clone(),
+                kill: kill.clone(),
+                gens: gens.clone(),
+                mirror_open: mirror_open.clone(),
+                recorder: recorder.clone(),
+                progress,
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dl-reactor-{i}"))
+                    .spawn(move || reactor_loop(ctx))
+                    .map_err(|e| Error::Session(format!("spawn reactor {i}: {e}")))?,
+            );
+        }
+        // Only reactor threads hold event senders: when every reactor
+        // thread has exited, the engine's poll sees a disconnect and
+        // fails the session instead of spinning forever.
+        drop(events_tx);
+        for (i, rx) in connector_rx.into_iter().enumerate() {
+            let ctx = ConnectorCtx {
+                job_rx: rx,
+                reactor_tx: cmd_tx.clone(),
+                kill: kill.clone(),
+                gens: gens.clone(),
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dl-connect-{i}"))
+                    .spawn(move || connector_loop(ctx))
+                    .map_err(|e| Error::Session(format!("spawn connector {i}: {e}")))?,
+            );
+        }
+        Ok(Reactor {
+            cmd_tx,
+            connector_tx,
+            events_rx,
+            joins,
+            kill,
+            gens,
+            mirror_open,
+        })
+    }
+
+    /// A handle that can simulate the whole event loop dying.
+    pub fn kill_switch(&self) -> KillSwitch {
+        self.kill.clone()
+    }
+
+    /// Current open reservations against `mirror`.
+    pub fn mirror_open(&self, mirror: usize) -> usize {
+        self.mirror_open[gauge_idx(&self.mirror_open, mirror)].load(Ordering::SeqCst)
+    }
+
+    /// Take one reservation against `mirror`. The engine thread is the
+    /// only caller, so check-then-reserve via [`Reactor::mirror_open`]
+    /// is race-free (reactor threads only ever decrement).
+    pub fn reserve(&self, mirror: usize) {
+        self.mirror_open[gauge_idx(&self.mirror_open, mirror)].fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Release slot `slot`'s reservation against `mirror`: cancels any
+    /// in-flight dial, closes the slot's socket, and decrements the
+    /// gauge once the socket is actually gone.
+    pub fn release(&self, slot: usize, mirror: usize) {
+        self.gens[slot].fetch_add(1, Ordering::SeqCst);
+        let dest = slot % self.cmd_tx.len();
+        if self.cmd_tx[dest].send(Cmd::Release { slot, mirror }).is_err() {
+            // Reactor thread already gone (teardown): settle here.
+            dec_gauge(&self.mirror_open, mirror);
+        }
+    }
+
+    /// Queue a fetch on the slot's owning reactor thread.
+    pub fn fetch(&self, spec: FetchSpec) -> Result<()> {
+        let dest = spec.slot % self.cmd_tx.len();
+        self.cmd_tx[dest]
+            .send(Cmd::Fetch(Box::new(spec)))
+            .map_err(|_| Error::Session("real transport reactor is gone".into()))
+    }
+
+    /// Drain pending transport events. Errors when every reactor thread
+    /// has exited — the engine must fail the session rather than wait
+    /// for events that can never arrive.
+    pub fn drain_events(&self, out: &mut Vec<TransportEvent>) -> Result<()> {
+        loop {
+            match self.events_rx.try_recv() {
+                Ok(ev) => out.push(ev),
+                Err(TryRecvError::Empty) => return Ok(()),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(Error::Session(
+                        "real transport event loop died: all reactor threads exited".into(),
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Stop and join every thread (idempotent).
+    pub fn shutdown(&mut self) {
+        self.kill.kill();
+        self.cmd_tx.clear();
+        self.connector_tx.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn gauge_idx(gauges: &[AtomicUsize], mirror: usize) -> usize {
+    mirror.min(gauges.len() - 1)
+}
+
+fn dec_gauge(gauges: &[AtomicUsize], mirror: usize) {
+    let _ = gauges[gauge_idx(gauges, mirror)].fetch_update(
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+        |v| v.checked_sub(1),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Connector threads: the blocking half of connection setup.
+// ---------------------------------------------------------------------
+
+fn connector_loop(ctx: ConnectorCtx) {
+    loop {
+        if ctx.kill.is_killed() {
+            return;
+        }
+        let ConnectJob { slot, gen, spec } =
+            match ctx.job_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(j) => j,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return,
+            };
+        // Skip the dial when the slot was released meanwhile — but
+        // always send the adopt back so the reservation settles.
+        let result = if ctx.gens[slot].load(Ordering::SeqCst) != gen {
+            Err((FailureClass::Transport, "connect cancelled".to_string()))
+        } else {
+            dial(&spec)
+        };
+        let dest = slot % ctx.reactor_tx.len();
+        let _ = ctx.reactor_tx[dest].send(Cmd::Adopt {
+            slot,
+            gen,
+            spec,
+            result,
+        });
+    }
+}
+
+/// Resolve + connect + flip non-blocking. Resolution is the explicit
+/// blocking DNS step; its failures classify as retryable `Transport`
+/// errors (a resolution outage heals).
+fn dial(spec: &FetchSpec) -> std::result::Result<TcpStream, (FailureClass, String)> {
+    let mut addrs = (spec.host.as_str(), spec.port)
+        .to_socket_addrs()
+        .map_err(|e| (FailureClass::Transport, format!("resolve {}: {e}", spec.host)))?;
+    let addr = addrs.next().ok_or_else(|| {
+        (
+            FailureClass::Transport,
+            format!("resolve {}: no addresses", spec.host),
+        )
+    })?;
+    let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT).map_err(|e| {
+        (
+            FailureClass::Transport,
+            format!("connect {}:{}: {e}", spec.host, spec.port),
+        )
+    })?;
+    stream
+        .set_nodelay(true)
+        .and_then(|_| stream.set_nonblocking(true))
+        .map_err(|e| (FailureClass::Transport, format!("socket setup: {e}")))?;
+    Ok(stream)
+}
+
+// ---------------------------------------------------------------------
+// Reactor threads: poll loop + per-connection state machines.
+// ---------------------------------------------------------------------
+
+fn reactor_loop(ctx: ReactorCtx) {
+    let mut conns: HashMap<usize, SlotState> = HashMap::new();
+    let mut scratch = vec![0u8; SCRATCH_BYTES];
+    let mut pollfds: Vec<sys::PollFd> = Vec::new();
+    let mut poll_slots: Vec<usize> = Vec::new();
+    let mut stalled: Vec<(usize, u64)> = Vec::new();
+    loop {
+        if ctx.kill.is_killed() {
+            return;
+        }
+        loop {
+            match ctx.cmd_rx.try_recv() {
+                Ok(cmd) => handle_cmd(&mut conns, &ctx, cmd),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+
+        pollfds.clear();
+        poll_slots.clear();
+        for (&slot, st) in conns.iter() {
+            if let SlotState::Conn(c) = st {
+                let events = if matches!(c.st, HttpState::Sending { .. }) {
+                    sys::POLLOUT
+                } else {
+                    sys::POLLIN
+                };
+                pollfds.push(sys::PollFd {
+                    fd: c.stream.as_raw_fd(),
+                    events,
+                    revents: 0,
+                });
+                poll_slots.push(slot);
+            }
+        }
+
+        if pollfds.is_empty() {
+            // Nothing to poll: block briefly on the command channel.
+            match ctx.cmd_rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(cmd) => handle_cmd(&mut conns, &ctx, cmd),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+            continue;
+        }
+
+        // SAFETY: pollfds is a live, correctly sized `struct pollfd`
+        // array; poll(2) writes only `revents`. A failure (-1, e.g.
+        // EINTR) is treated as "no events this round".
+        let n = unsafe {
+            sys::poll(pollfds.as_mut_ptr(), pollfds.len() as sys::NfdsT, POLL_TIMEOUT_MS)
+        };
+        if n > 0 {
+            for (pfd, &slot) in pollfds.iter().zip(poll_slots.iter()) {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                let fate = match conns.get_mut(&slot) {
+                    Some(SlotState::Conn(c)) => drive_conn(c, &mut scratch, &ctx.recorder),
+                    _ => continue,
+                };
+                settle(&mut conns, &ctx, slot, fate);
+            }
+        }
+
+        // Progress deadline: every non-idle connection must move bytes.
+        if ctx.progress.window_s > 0.0 {
+            stalled.clear();
+            for (&slot, st) in conns.iter_mut() {
+                if let SlotState::Conn(c) = st {
+                    if matches!(c.st, HttpState::Idle) {
+                        continue;
+                    }
+                    if c.window_start.elapsed().as_secs_f64() >= ctx.progress.window_s {
+                        if c.window_bytes < ctx.progress.min_bytes {
+                            stalled.push((slot, c.window_bytes));
+                        } else {
+                            c.window_start = Instant::now();
+                            c.window_bytes = 0;
+                        }
+                    }
+                }
+            }
+            for (slot, bytes) in stalled.drain(..) {
+                conns.remove(&slot);
+                let _ = ctx.events_tx.send(TransportEvent::Failed {
+                    slot,
+                    class: FailureClass::Transport,
+                    error: format!(
+                        "stalled: {bytes} bytes in {:.1}s (progress deadline)",
+                        ctx.progress.window_s
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn handle_cmd(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, cmd: Cmd) {
+    match cmd {
+        Cmd::Fetch(spec) => handle_fetch(conns, ctx, spec),
+        Cmd::Release { slot, mirror } => match conns.get(&slot) {
+            // Dial still in flight: the (now stale) adopt settles the
+            // reservation when it lands.
+            Some(SlotState::Connecting { .. }) => {}
+            Some(SlotState::Conn(_)) => {
+                conns.remove(&slot); // closes the socket
+                dec_gauge(&ctx.mirror_open, mirror);
+            }
+            None => dec_gauge(&ctx.mirror_open, mirror),
+        },
+        Cmd::Adopt {
+            slot,
+            gen,
+            spec,
+            result,
+        } => {
+            if ctx.gens[slot].load(Ordering::SeqCst) != gen {
+                // The engine released this slot while the dial ran: the
+                // reservation the dial belonged to settles here.
+                if matches!(conns.get(&slot), Some(SlotState::Connecting { gen: g }) if *g == gen) {
+                    conns.remove(&slot);
+                }
+                dec_gauge(&ctx.mirror_open, spec.mirror);
+                return; // any fresh socket drops (closes) with `result`
+            }
+            conns.remove(&slot); // the Connecting placeholder
+            match result {
+                Ok(stream) => {
+                    let mut c = Conn {
+                        stream,
+                        host: spec.host.clone(),
+                        port: spec.port,
+                        st: HttpState::Idle,
+                        spec: None,
+                        file: None,
+                        window_start: Instant::now(),
+                        window_bytes: 0,
+                    };
+                    match arm_fetch(&mut c, spec) {
+                        None => {
+                            conns.insert(slot, SlotState::Conn(c));
+                        }
+                        Some((class, error)) => {
+                            // Local output failure: socket closes, the
+                            // reservation stays until the engine
+                            // releases the slot.
+                            let _ = ctx
+                                .events_tx
+                                .send(TransportEvent::Failed { slot, class, error });
+                        }
+                    }
+                }
+                Err((class, error)) => {
+                    let _ = ctx
+                        .events_tx
+                        .send(TransportEvent::Failed { slot, class, error });
+                }
+            }
+        }
+    }
+}
+
+fn handle_fetch(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: Box<FetchSpec>) {
+    let slot = spec.slot;
+    enum Route {
+        Reuse,
+        CloseAndDial,
+        Dial,
+        WhileConnecting,
+    }
+    let route = match conns.get(&slot) {
+        Some(SlotState::Conn(c))
+            if matches!(c.st, HttpState::Idle) && c.host == spec.host && c.port == spec.port =>
+        {
+            Route::Reuse
+        }
+        Some(SlotState::Conn(_)) => Route::CloseAndDial,
+        Some(SlotState::Connecting { .. }) => Route::WhileConnecting,
+        None => Route::Dial,
+    };
+    match route {
+        Route::Reuse => {
+            if let Some(SlotState::Conn(c)) = conns.get_mut(&slot) {
+                if let Some((class, error)) = arm_fetch(c, spec) {
+                    // Conn stays Idle and reusable; the failure (local
+                    // output open) reports as-is.
+                    let _ = ctx
+                        .events_tx
+                        .send(TransportEvent::Failed { slot, class, error });
+                }
+            }
+        }
+        Route::CloseAndDial => {
+            // Endpoint changed (mirror rebind) or the conn is in a bad
+            // phase: drop the old socket — the slot's reservation
+            // continues with the fresh dial.
+            conns.remove(&slot);
+            start_connect(conns, ctx, spec);
+        }
+        Route::Dial => start_connect(conns, ctx, spec),
+        Route::WhileConnecting => {
+            debug_assert!(false, "fetch on slot {slot} while a dial is in flight");
+            let _ = ctx.events_tx.send(TransportEvent::Failed {
+                slot,
+                class: FailureClass::Transport,
+                error: "fetch issued while the slot was still connecting".into(),
+            });
+        }
+    }
+}
+
+fn start_connect(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: Box<FetchSpec>) {
+    let slot = spec.slot;
+    let gen = ctx.gens[slot].load(Ordering::SeqCst);
+    conns.insert(slot, SlotState::Connecting { gen });
+    let dest = slot % ctx.connector_tx.len();
+    if ctx.connector_tx[dest].send(ConnectJob { slot, gen, spec }).is_err() {
+        conns.remove(&slot);
+        let _ = ctx.events_tx.send(TransportEvent::Failed {
+            slot,
+            class: FailureClass::Transport,
+            error: "connector pool is gone".into(),
+        });
+    }
+}
+
+fn settle(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, slot: usize, fate: Fate) {
+    match fate {
+        Fate::Keep => {}
+        Fate::Completed => {
+            let _ = ctx.events_tx.send(TransportEvent::Completed { slot });
+        }
+        Fate::FailKeep(class, error) => {
+            let _ = ctx
+                .events_tx
+                .send(TransportEvent::Failed { slot, class, error });
+        }
+        Fate::FailClose(class, error) => {
+            conns.remove(&slot);
+            let _ = ctx
+                .events_tx
+                .send(TransportEvent::Failed { slot, class, error });
+        }
+        Fate::CloseSilent => {
+            conns.remove(&slot);
+        }
+    }
+}
+
+/// Prepare `c` (an idle connection) for a fetch: open the output file at
+/// the chunk offset and queue the request bytes. Returns the classified
+/// failure on local I/O errors (the connection is left Idle).
+fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>) -> Option<(FailureClass, String)> {
+    let file = match &spec.out {
+        None => None,
+        Some(path) => {
+            let open = || -> std::io::Result<File> {
+                let mut f = std::fs::OpenOptions::new().write(true).open(path)?;
+                f.seek(SeekFrom::Start(spec.chunk.offset))?;
+                Ok(f)
+            };
+            match open() {
+                Ok(f) => Some(f),
+                Err(e) => {
+                    return Some((
+                        FailureClass::Fatal,
+                        format!("open {}: {e}", path.display()),
+                    ))
+                }
+            }
+        }
+    };
+    let mut req = format!(
+        "GET {} HTTP/1.1\r\nHost: {}:{}\r\n",
+        spec.path, spec.host, spec.port
+    );
+    if let Some((offset, len)) = spec.range() {
+        req.push_str(&format!("Range: bytes={}-{}\r\n", offset, offset + len - 1));
+    }
+    req.push_str("Connection: keep-alive\r\n\r\n");
+    c.file = file;
+    c.spec = Some(spec);
+    c.st = HttpState::Sending {
+        buf: req.into_bytes(),
+        sent: 0,
+    };
+    c.window_start = Instant::now();
+    c.window_bytes = 0;
+    None
+}
+
+/// Write payload bytes to the output file (if any) and the shared
+/// recorder — the atomics-only byte hot path.
+fn deliver(
+    c: &mut Conn,
+    data: &[u8],
+    recorder: &ThroughputRecorder,
+) -> std::result::Result<(), Fate> {
+    if let Some(f) = c.file.as_mut() {
+        if let Err(e) = f.write_all(data) {
+            let path = c
+                .spec
+                .as_ref()
+                .and_then(|s| s.out.as_ref())
+                .map(|p| p.display().to_string())
+                .unwrap_or_default();
+            return Err(Fate::FailClose(
+                FailureClass::Fatal,
+                format!("write {path}: {e}"),
+            ));
+        }
+    }
+    recorder.add_bytes(data.len() as u64);
+    Ok(())
+}
+
+/// Parse a response head (status line + headers, no trailing blank
+/// line) into `(status, content_length)`.
+fn parse_head(head: &[u8]) -> std::result::Result<(u16, u64), String> {
+    let text = String::from_utf8_lossy(head);
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line {status_line:?}"))?;
+    let mut content_length: Option<u64> = None;
+    for h in lines {
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let content_length =
+        content_length.ok_or_else(|| "response without Content-Length".to_string())?;
+    Ok((status, content_length))
+}
+
+/// Classify the parsed response head and move the connection into
+/// `Body`/`Drain`, feeding any bytes that arrived glued to the head.
+/// `None` means the state advanced and the drive loop continues.
+fn begin_body(
+    c: &mut Conn,
+    head: &[u8],
+    leftover: &[u8],
+    recorder: &ThroughputRecorder,
+) -> Option<Fate> {
+    let (status, content_length) = match parse_head(head) {
+        Ok(v) => v,
+        Err(msg) => return Some(Fate::FailClose(FailureClass::Transport, msg)),
+    };
+    let (chunk_len, path, range) = match c.spec.as_ref() {
+        Some(s) => (s.chunk.len, s.path.clone(), s.range()),
+        None => {
+            return Some(Fate::FailClose(
+                FailureClass::Transport,
+                "response without a fetch in flight".into(),
+            ))
+        }
+    };
+    if (leftover.len() as u64) > content_length {
+        return Some(Fate::FailClose(
+            FailureClass::Transport,
+            "server sent more bytes than advertised".into(),
+        ));
+    }
+    if status == 200 || status == 206 {
+        if content_length != chunk_len {
+            return Some(Fate::FailClose(
+                FailureClass::Transport,
+                format!("GET {path}: short body {content_length} of {chunk_len} bytes"),
+            ));
+        }
+        let mut remaining = content_length;
+        if !leftover.is_empty() {
+            if let Err(fate) = deliver(c, leftover, recorder) {
+                return Some(fate);
+            }
+            remaining -= leftover.len() as u64;
+        }
+        if remaining == 0 {
+            c.file = None;
+            c.spec = None;
+            c.st = HttpState::Idle;
+            return Some(Fate::Completed);
+        }
+        c.st = HttpState::Body { remaining };
+        None
+    } else {
+        let class = if status >= 500 {
+            // Transient server error: retryable, connection survives.
+            FailureClass::Reject
+        } else {
+            // 4xx and friends are deterministic: retrying cannot help.
+            FailureClass::Fatal
+        };
+        let error = format!("GET {path} range {range:?}: HTTP {status}");
+        c.file = None;
+        c.st = HttpState::Drain {
+            remaining: content_length - leftover.len() as u64,
+            class,
+            error,
+        };
+        None
+    }
+}
+
+/// Advance one connection's state machine until it would block.
+fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -> Fate {
+    loop {
+        let st = std::mem::replace(&mut c.st, HttpState::Idle);
+        match st {
+            HttpState::Idle => {
+                // Data or close on a parked keep-alive connection: the
+                // server is done with us; drop quietly (the next fetch
+                // redials under the same reservation).
+                return match c.stream.read(scratch) {
+                    Ok(_) => Fate::CloseSilent,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => Fate::Keep,
+                    Err(_) => Fate::CloseSilent,
+                };
+            }
+            HttpState::Sending { buf, mut sent } => match c.stream.write(&buf[sent..]) {
+                Ok(0) => {
+                    return Fate::FailClose(
+                        FailureClass::Transport,
+                        "send request: connection closed".into(),
+                    )
+                }
+                Ok(n) => {
+                    sent += n;
+                    if sent == buf.len() {
+                        c.st = HttpState::Headers { head: Vec::new() };
+                    } else {
+                        c.st = HttpState::Sending { buf, sent };
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    c.st = HttpState::Sending { buf, sent };
+                    return Fate::Keep;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {
+                    c.st = HttpState::Sending { buf, sent };
+                }
+                Err(e) => {
+                    return Fate::FailClose(FailureClass::Transport, format!("send request: {e}"))
+                }
+            },
+            HttpState::Headers { mut head } => match c.stream.read(scratch) {
+                Ok(0) => {
+                    return Fate::FailClose(
+                        FailureClass::Transport,
+                        "server closed connection".into(),
+                    )
+                }
+                Ok(n) => {
+                    c.window_bytes += n as u64;
+                    head.extend_from_slice(&scratch[..n]);
+                    if let Some(pos) = head.windows(4).position(|w| w == b"\r\n\r\n") {
+                        let leftover = head.split_off(pos + 4);
+                        if let Some(fate) = begin_body(c, &head[..pos], &leftover, recorder) {
+                            return fate;
+                        }
+                        // State advanced to Body/Drain: keep driving.
+                    } else if head.len() > MAX_HEAD_BYTES {
+                        return Fate::FailClose(
+                            FailureClass::Transport,
+                            "response head too large".into(),
+                        );
+                    } else {
+                        c.st = HttpState::Headers { head };
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    c.st = HttpState::Headers { head };
+                    return Fate::Keep;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {
+                    c.st = HttpState::Headers { head };
+                }
+                Err(e) => {
+                    return Fate::FailClose(FailureClass::Transport, format!("read head: {e}"))
+                }
+            },
+            HttpState::Body { mut remaining } => {
+                let want = scratch.len().min(remaining as usize);
+                match c.stream.read(&mut scratch[..want]) {
+                    Ok(0) => {
+                        return Fate::FailClose(
+                            FailureClass::Transport,
+                            format!("connection closed mid-body ({remaining} bytes left)"),
+                        )
+                    }
+                    Ok(n) => {
+                        c.window_bytes += n as u64;
+                        if let Err(fate) = deliver(c, &scratch[..n], recorder) {
+                            return fate;
+                        }
+                        remaining -= n as u64;
+                        if remaining == 0 {
+                            c.file = None;
+                            c.spec = None;
+                            c.st = HttpState::Idle;
+                            return Fate::Completed;
+                        }
+                        c.st = HttpState::Body { remaining };
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        c.st = HttpState::Body { remaining };
+                        return Fate::Keep;
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {
+                        c.st = HttpState::Body { remaining };
+                    }
+                    Err(e) => {
+                        return Fate::FailClose(
+                            FailureClass::Transport,
+                            format!("read body: {e}"),
+                        )
+                    }
+                }
+            }
+            HttpState::Drain {
+                mut remaining,
+                class,
+                error,
+            } => {
+                if remaining == 0 {
+                    c.file = None;
+                    c.spec = None;
+                    c.st = HttpState::Idle;
+                    return Fate::FailKeep(class, error);
+                }
+                let want = scratch.len().min(remaining as usize);
+                match c.stream.read(&mut scratch[..want]) {
+                    Ok(0) => return Fate::FailClose(class, error),
+                    Ok(n) => {
+                        c.window_bytes += n as u64;
+                        remaining -= n as u64;
+                        c.st = HttpState::Drain {
+                            remaining,
+                            class,
+                            error,
+                        };
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        c.st = HttpState::Drain {
+                            remaining,
+                            class,
+                            error,
+                        };
+                        return Fate::Keep;
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {
+                        c.st = HttpState::Drain {
+                            remaining,
+                            class,
+                            error,
+                        };
+                    }
+                    Err(_) => return Fate::FailClose(class, error),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_parsing() {
+        let head = b"HTTP/1.1 206 Partial\r\nContent-Length: 42\r\nContent-Range: bytes 0-41/84";
+        assert_eq!(parse_head(head).unwrap(), (206, 42));
+        let head = b"HTTP/1.1 503 Unavailable\r\ncontent-length: 9";
+        assert_eq!(parse_head(head).unwrap(), (503, 9));
+        assert!(parse_head(b"garbage").is_err());
+        assert!(parse_head(b"HTTP/1.1 200 OK\r\nX: y").is_err());
+    }
+
+    #[test]
+    fn range_header_skipped_for_whole_file() {
+        let chunk = Chunk {
+            file: 0,
+            index: 0,
+            offset: 0,
+            len: 100,
+            cold: true,
+        };
+        let spec = FetchSpec {
+            slot: 0,
+            host: "h".into(),
+            port: 80,
+            path: "/x".into(),
+            out: None,
+            chunk,
+            total_bytes: 100,
+            mirror: 0,
+        };
+        assert_eq!(spec.range(), None);
+        let spec = FetchSpec {
+            chunk: Chunk {
+                file: 0,
+                index: 1,
+                offset: 50,
+                len: 50,
+                cold: false,
+            },
+            ..spec
+        };
+        assert_eq!(spec.range(), Some((50, 50)));
+    }
+
+    #[test]
+    fn kill_switch_flips_once() {
+        let k = KillSwitch::default();
+        assert!(!k.is_killed());
+        let k2 = k.clone();
+        k2.kill();
+        assert!(k.is_killed());
+    }
+}

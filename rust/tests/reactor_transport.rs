@@ -1,0 +1,445 @@
+//! Regression suite for the event-driven reactor transport: stream
+//! scale past the old 512-thread cap, dead-event-loop teardown,
+//! dribble stalls against the progress deadline, disk-over-journal
+//! resume hygiene, and the strict socket-level per-mirror cap.
+//!
+//! Everything here is runtime-free (Fixed controller) so it runs in
+//! environments without compiled XLA artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::accession::RunRecord;
+use fastbiodl::config::{DownloadConfig, OptimizerKind};
+use fastbiodl::coordinator::resume::ProgressJournal;
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::metrics::recorder::ThroughputRecorder;
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::engine::{run_session, EngineParams, ToolBehavior};
+use fastbiodl::session::real::{
+    run_real_session, RealSessionParams, RealTransport, Sink, WallClock,
+};
+use fastbiodl::transport::http_server::{fill_payload, ServedFile, ThrottledHttpServer};
+use fastbiodl::transport::{ProgressPolicy, ServerFaultWindow, ThrottleConfig};
+
+/// Base config shared by the runtime-free tests: fixed controller,
+/// fast monitor, generous timeout.
+fn fixed_cfg(level: usize, c_max: usize, chunk_bytes: u64) -> DownloadConfig {
+    let mut cfg = DownloadConfig::default();
+    cfg.chunk_bytes = chunk_bytes;
+    cfg.optimizer.kind = OptimizerKind::Fixed;
+    cfg.optimizer.fixed_level = level;
+    cfg.optimizer.c_init = level.min(c_max);
+    cfg.optimizer.c_max = c_max;
+    cfg.optimizer.probe_interval_s = 0.5;
+    cfg.monitor_hz = 10.0;
+    cfg.timeout_s = 120.0;
+    cfg
+}
+
+/// Raise the process fd soft limit to its hard limit and return the
+/// resulting soft limit. The scale test needs ~4 fds per concurrent
+/// stream (client socket + server socket and its reader clone); CI
+/// default soft limits (1024) would otherwise cap the test well below
+/// the stream counts the reactor exists to reach.
+fn raise_fd_limit() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 1024;
+        }
+        if lim.cur < lim.max {
+            let want = RLimit {
+                cur: lim.max,
+                max: lim.max,
+            };
+            let _ = setrlimit(RLIMIT_NOFILE, &want);
+            if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+                return 1024;
+            }
+        }
+        lim.cur
+    }
+}
+
+#[test]
+fn reactor_sustains_a_thousand_concurrent_streams() {
+    // The tentpole acceptance check: the real driver accepts
+    // c_max >= 4096 (the old thread-per-slot driver refused anything
+    // past 512) and actually holds >= 1024 concurrent HTTP streams
+    // against loopback. Four 40 MB files in 64 KiB chunks give 2560
+    // chunks; a slow per-connection throttle keeps every chunk in
+    // flight long enough that the server's connection high-water mark
+    // must reach the fixed concurrency level.
+    let fds = raise_fd_limit();
+    let target = 1024.min((fds.saturating_sub(512) / 4) as usize).max(8);
+
+    let files: Vec<ServedFile> = (0..4)
+        .map(|i| ServedFile {
+            path: format!("/vol1/SRRBIG{i}"),
+            bytes: 40_000_000,
+            seed: 700 + i as u64,
+        })
+        .collect();
+    let server = ThrottledHttpServer::start(
+        files.clone(),
+        ThrottleConfig {
+            per_conn_bytes_per_s: 100_000.0,
+            max_connections: 2 * target + 64,
+            ..ThrottleConfig::default()
+        },
+    )
+    .unwrap();
+    let base = server.base_url();
+    let records: Vec<RunRecord> = files
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            RunRecord::new(
+                format!("SRRBIG{i}"),
+                "TEST",
+                f.bytes,
+                format!("{base}{}", f.path),
+            )
+        })
+        .collect();
+
+    let cfg = fixed_cfg(target, 4096, 64 * 1024);
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: None,
+        sink: Sink::Discard,
+        name: "reactor-scale".into(),
+    })
+    .unwrap();
+
+    println!(
+        "scale run (target {target}, fd limit {fds}): {} | server peak {}",
+        report.summary(),
+        server.peak_connections()
+    );
+    assert!(report.completed);
+    assert_eq!(report.files_completed, 4);
+    assert_eq!(report.total_bytes, 160_000_000);
+    assert!(
+        server.peak_connections() >= target,
+        "server saw only {} concurrent connections, wanted >= {target}",
+        server.peak_connections()
+    );
+}
+
+#[test]
+fn dead_reactor_pool_fails_the_session_instead_of_hanging() {
+    // Satellite 1 (the dead-worker hang): if every reactor thread dies
+    // mid-session, the engine must surface a session-fatal error. The
+    // old driver treated the disconnected event channel as "no events
+    // yet" and waited forever.
+    let file = ServedFile {
+        path: "/vol1/SRRKILL".into(),
+        bytes: 8_000_000,
+        seed: 12,
+    };
+    let server = ThrottledHttpServer::start(
+        vec![file.clone()],
+        ThrottleConfig {
+            per_conn_bytes_per_s: 1e6, // slow enough to kill mid-flight
+            ..ThrottleConfig::default()
+        },
+    )
+    .unwrap();
+    let records = vec![RunRecord::new(
+        "SRRKILL",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+
+    let mut cfg = fixed_cfg(2, 4, 512 * 1024);
+    cfg.timeout_s = 30.0; // a regression should fail fast, not hang
+    let recorder = Arc::new(ThroughputRecorder::new());
+    let mut transport = RealTransport::spawn(
+        cfg.optimizer.c_max,
+        Sink::Discard,
+        0,
+        1,
+        recorder.clone(),
+        ProgressPolicy {
+            window_s: 0.0,
+            min_bytes: 0,
+        },
+    )
+    .unwrap();
+    let kill = transport.kill_switch();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(400));
+        kill.kill();
+    });
+
+    let behavior = ToolBehavior {
+        name: "kill-test".into(),
+        mode: SchedulerMode::Chunked {
+            chunk_bytes: cfg.chunk_bytes,
+            max_open_files: cfg.max_open_files,
+        },
+        keep_alive: true,
+        resolution: ResolutionCost::Batch { latency_s: 0.0 },
+    };
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let clock = WallClock::start();
+    let result = run_session(
+        EngineParams {
+            download: cfg,
+            behavior,
+            records,
+            controller,
+            runtime: None,
+            recorder,
+            done_prefix: None,
+            checkpoint_after_s: None,
+            journal_dir: None,
+            give_up_after: 6,
+        },
+        &mut transport,
+        &clock,
+    );
+    killer.join().unwrap();
+
+    let err = result.expect_err("session must fail once the event loop is dead");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("event loop died") || msg.contains("reactor is gone"),
+        "expected a dead-transport error, got: {msg}"
+    );
+}
+
+#[test]
+fn progress_deadline_breaks_dribble_stalls() {
+    // Satellite 2 (the dribble stall): for its first 1.2 s the server
+    // trickles response bodies at 64 B/s — connections stay alive and
+    // technically move bytes, so no per-read timeout ever fires. The
+    // whole-chunk progress deadline (>= 10 kB per 0.4 s window) must
+    // fail those connections as Transport errors; once the window
+    // lifts, the retried chunks complete and the file is bit-exact.
+    let file = ServedFile {
+        path: "/vol1/SRRDRIB".into(),
+        bytes: 3_000_000,
+        seed: 44,
+    };
+    let server = ThrottledHttpServer::start(
+        vec![file.clone()],
+        ThrottleConfig {
+            fault_windows: vec![ServerFaultWindow {
+                from_s: 0.0,
+                until_s: 1.2,
+                dribble_bytes_per_s: 64,
+                ..ServerFaultWindow::default()
+            }],
+            ..ThrottleConfig::default()
+        },
+    )
+    .unwrap();
+    let records = vec![RunRecord::new(
+        "SRRDRIB",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+
+    let mut cfg = fixed_cfg(2, 4, 512 * 1024);
+    cfg.progress_window_s = 0.4;
+    cfg.progress_min_bytes = 10_000;
+
+    let dir = std::env::temp_dir().join(format!("fastbiodl-dribble-{}", std::process::id()));
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: None,
+        sink: Sink::Directory(dir.to_str().unwrap().into()),
+        name: "dribble-test".into(),
+    })
+    .unwrap();
+
+    println!("dribble run: {}", report.summary());
+    assert!(report.completed);
+    assert_eq!(report.files_completed, 1);
+    assert!(
+        report.chunk_retries >= 1,
+        "the dribbled chunk was never retried (retries {})",
+        report.chunk_retries
+    );
+    assert!(
+        report.connection_resets >= 1,
+        "the progress deadline never reset a connection (resets {})",
+        report.connection_resets
+    );
+
+    let got = std::fs::read(dir.join("SRRDRIB")).unwrap();
+    assert_eq!(got.len() as u64, file.bytes);
+    let mut expect = vec![0u8; file.bytes as usize];
+    fill_payload(44, 0, &mut expect);
+    assert_eq!(got, expect, "content mismatch after dribble recovery");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_trusts_disk_over_journal() {
+    // Satellite 3 (resume hygiene): the disk is the source of truth.
+    // SRRCLAMP's journal claims 4 MB done but only 2 MB exist on disk —
+    // the frontier must clamp to 2 MB and the missing 4 MB re-download.
+    // SRRBLOAT's on-disk file is *larger* than the record says the
+    // object is — the file must restart from scratch.
+    let files = vec![
+        ServedFile {
+            path: "/vol1/SRRCLAMP".into(),
+            bytes: 6_000_000,
+            seed: 91,
+        },
+        ServedFile {
+            path: "/vol1/SRRBLOAT".into(),
+            bytes: 3_000_000,
+            seed: 92,
+        },
+    ];
+    let server = ThrottledHttpServer::start(files.clone(), ThrottleConfig::default()).unwrap();
+    let base = server.base_url();
+    let records: Vec<RunRecord> = files
+        .iter()
+        .map(|f| {
+            let acc = f.path.rsplit('/').next().unwrap().to_string();
+            RunRecord::new(acc, "TEST", f.bytes, format!("{base}{}", f.path))
+        })
+        .collect();
+
+    let dir = std::env::temp_dir().join(format!("fastbiodl-diskresume-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    {
+        use std::io::Write;
+        // SRRCLAMP: a true 2 MB prefix on disk (journal will claim 4 MB).
+        let mut content = vec![0u8; 2_000_000];
+        fill_payload(91, 0, &mut content);
+        let mut f = std::fs::File::create(dir.join("SRRCLAMP")).unwrap();
+        f.write_all(&content).unwrap();
+        // SRRBLOAT: 4 MB of junk, more than the 3 MB record.
+        let junk = vec![0xABu8; 4_000_000];
+        let mut f = std::fs::File::create(dir.join("SRRBLOAT")).unwrap();
+        f.write_all(&junk).unwrap();
+    }
+    let chunk_bytes = 1_000_000;
+    ProgressJournal::capture(&records, &[4_000_000, 1_000_000], chunk_bytes)
+        .save(&dir)
+        .unwrap();
+
+    let mut cfg = fixed_cfg(2, 4, chunk_bytes);
+    cfg.timeout_s = 60.0;
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records: records.clone(),
+        controller,
+        runtime: None,
+        sink: Sink::Directory(dir.to_str().unwrap().into()),
+        name: "disk-resume".into(),
+    })
+    .unwrap();
+
+    println!("disk-resume run: {}", report.summary());
+    assert!(report.completed);
+    assert_eq!(report.files_completed, 2);
+    // Clamped frontier re-fetches 4 MB of SRRCLAMP; the oversized
+    // SRRBLOAT restarts and re-fetches all 3 MB.
+    assert_eq!(
+        report.total_bytes, 7_000_000,
+        "resume honored the journal over the disk"
+    );
+
+    for (f, r) in files.iter().zip(records.iter()) {
+        let got = std::fs::read(dir.join(&r.accession)).unwrap();
+        assert_eq!(got.len() as u64, r.bytes, "{} wrong size", r.accession);
+        let mut expect = vec![0u8; r.bytes as usize];
+        fill_payload(f.seed, 0, &mut expect);
+        assert_eq!(got, expect, "content mismatch in {}", r.accession);
+    }
+    assert!(ProgressJournal::load(&dir).unwrap().is_none());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn per_mirror_cap_is_enforced_at_socket_level() {
+    // Satellite 4 (strict per-mirror cap): two separate loopback
+    // servers stand in for two mirrors of the same 6 MB object. With
+    // `per_mirror_conns = 2` and a fixed concurrency of 4, the engine
+    // must spread 2+2 across the mirrors — and neither server may ever
+    // see more than 2 simultaneous connections, measured at the socket
+    // level by the server's own accept-loop high-water mark.
+    let payload: u64 = 6_000_000;
+    let served = |seed| ServedFile {
+        path: "/SRRCAP".into(),
+        bytes: payload,
+        seed,
+    };
+    let throttle = || ThrottleConfig {
+        per_conn_bytes_per_s: 1.5e6,
+        ..ThrottleConfig::default()
+    };
+    let a = ThrottledHttpServer::start(vec![served(21)], throttle()).unwrap();
+    let b = ThrottledHttpServer::start(vec![served(21)], throttle()).unwrap();
+    let record = RunRecord::new("SRRCAP", "TEST", payload, format!("{}/SRRCAP", a.base_url()))
+        .with_mirrors(vec![format!("{}/SRRCAP", b.base_url())]);
+    let records = vec![record];
+
+    let mut cfg = fixed_cfg(4, 8, 512 * 1024);
+    cfg.mirror.per_mirror_conns = 2;
+    cfg.timeout_s = 60.0;
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: None,
+        sink: Sink::Discard,
+        name: "mirror-cap".into(),
+    })
+    .unwrap();
+
+    println!(
+        "mirror-cap run: {} | peaks {}/{}",
+        report.summary(),
+        a.peak_connections(),
+        b.peak_connections()
+    );
+    assert!(report.completed);
+    assert_eq!(report.total_bytes, payload);
+    assert!(
+        a.peak_connections() <= 2,
+        "mirror 0 saw {} concurrent connections (cap 2)",
+        a.peak_connections()
+    );
+    assert!(
+        b.peak_connections() <= 2,
+        "mirror 1 saw {} concurrent connections (cap 2)",
+        b.peak_connections()
+    );
+    assert_eq!(report.mirror_bytes.len(), 2);
+    assert_eq!(report.mirror_bytes.iter().sum::<u64>(), payload);
+    assert!(
+        report.mirror_bytes.iter().all(|&m| m > 0),
+        "the cap should force both mirrors into use: {:?}",
+        report.mirror_bytes
+    );
+}

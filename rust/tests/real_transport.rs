@@ -296,7 +296,7 @@ fn real_session_rides_out_server_5xx_windows() {
                 until_s: 1.2,
                 reject_prob: 1.0,
                 added_latency_s: 0.05,
-                path_prefix: None,
+                ..ServerFaultWindow::default()
             }],
             fault_seed: 7,
             ..ThrottleConfig::default()
@@ -375,8 +375,8 @@ fn per_mirror_fault_window_degrades_one_mirror_only() {
                 from_s: 0.0,
                 until_s: 30.0,
                 reject_prob: 1.0,
-                added_latency_s: 0.0,
                 path_prefix: Some("/m0/".into()),
+                ..ServerFaultWindow::default()
             }],
             fault_seed: 3,
             ..ThrottleConfig::default()
