@@ -45,8 +45,12 @@ use crate::{Error, Result};
 /// Schema tag written into every report; bump on breaking layout
 /// changes so baseline diffing fails loudly instead of silently.
 /// v2 added the control-plane signal fields (`retry_rate`,
-/// `reject_rate`, `chunks_scaled`) to the `det` record.
-pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v2";
+/// `reject_rate`, `chunks_scaled`) to the `det` record. v3 added the
+/// disk-path fields (`write_syscalls_per_chunk`, `sink_queue_peak`,
+/// `reactor_stall_ns`) to the timing record — zero on the simulated
+/// grid, populated by real-transport runs through the same
+/// `EngineStats` plumbing.
+pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v3";
 
 /// Virtual-time cap per case (s): hostile cells (brownouts at
 /// `c_max = 16`) would otherwise run long; every case reports goodput
@@ -219,6 +223,13 @@ pub struct CaseResult {
     pub allocs_per_tick: f64,
     pub slots_scanned_per_tick: f64,
     pub max_probe_releases_per_tick: u64,
+    /// Positional disk writes per completed chunk (after sink
+    /// coalescing; 0 on the simulated grid, which has no disk path).
+    pub write_syscalls_per_chunk: f64,
+    /// High-water mark of bytes queued in the write-behind sink.
+    pub sink_queue_peak: u64,
+    /// Nanoseconds connections spent parked on sink backpressure.
+    pub reactor_stall_ns: f64,
 }
 
 /// Gradient-descent hyperparameter overrides for a sweep cell (see
@@ -268,6 +279,7 @@ pub fn run_case_tuned(
     }
     let controller = build_controller_with(&sc.download.optimizer, &sc.download.control, None)?;
     let behavior = ToolBehavior::fastbiodl(&sc.download);
+    let chunk_bytes = sc.download.chunk_bytes;
     let session = SimSession::new(SimSessionParams {
         download: sc.download,
         behavior,
@@ -312,6 +324,12 @@ pub fn run_case_tuned(
         allocs_per_tick: allocs as f64 / ticks as f64,
         slots_scanned_per_tick: stats.slots_scanned as f64 / ticks as f64,
         max_probe_releases_per_tick: stats.max_probe_releases_per_tick as u64,
+        // Chunk count is approximated from delivered bytes; exact on
+        // completed benign runs, a safe lower bound otherwise.
+        write_syscalls_per_chunk: stats.write_syscalls as f64
+            / (report.total_bytes / chunk_bytes).max(1) as f64,
+        sink_queue_peak: stats.sink_queue_peak,
+        reactor_stall_ns: stats.reactor_stall_ns as f64,
     })
 }
 
@@ -386,6 +404,12 @@ impl BenchReport {
                                 "max_probe_releases_per_tick",
                                 Json::Num(c.max_probe_releases_per_tick as f64),
                             ),
+                            (
+                                "write_syscalls_per_chunk",
+                                Json::Num(c.write_syscalls_per_chunk),
+                            ),
+                            ("sink_queue_peak", Json::Num(c.sink_queue_peak as f64)),
+                            ("reactor_stall_ns", Json::Num(c.reactor_stall_ns)),
                         ]),
                     ),
                 ])
@@ -457,6 +481,9 @@ impl BenchReport {
                 allocs_per_tick: req_f64(timing, "allocs_per_tick")?,
                 slots_scanned_per_tick: req_f64(timing, "slots_scanned_per_tick")?,
                 max_probe_releases_per_tick: req_u64(timing, "max_probe_releases_per_tick")?,
+                write_syscalls_per_chunk: req_f64(timing, "write_syscalls_per_chunk")?,
+                sink_queue_peak: req_u64(timing, "sink_queue_peak")?,
+                reactor_stall_ns: req_f64(timing, "reactor_stall_ns")?,
             });
         }
         Ok(BenchReport {
@@ -750,6 +777,9 @@ mod tests {
                 allocs_per_tick: 0.4,
                 slots_scanned_per_tick: 9.0,
                 max_probe_releases_per_tick: 1,
+                write_syscalls_per_chunk: 1.25,
+                sink_queue_peak: 524_288,
+                reactor_stall_ns: 1_500.0,
             }],
         }
     }
@@ -767,6 +797,9 @@ mod tests {
         assert_eq!(a.total_bytes, b.total_bytes);
         assert_eq!(a.ticks, b.ticks);
         assert!((a.goodput_mbps - b.goodput_mbps).abs() < 1e-9);
+        assert!((a.write_syscalls_per_chunk - b.write_syscalls_per_chunk).abs() < 1e-9);
+        assert_eq!(a.sink_queue_peak, b.sink_queue_peak);
+        assert!((a.reactor_stall_ns - b.reactor_stall_ns).abs() < 1e-9);
         assert!(a.completed);
     }
 

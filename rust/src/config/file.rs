@@ -16,6 +16,9 @@
 //! [download]
 //! chunk_bytes = 33554432
 //! max_open_files = 4
+//! sink_threads = 2          # 0 = inline writes on the reactor
+//! sink_queue_mb = 64        # pooled write-buffer budget
+//! coalesce_kb = 1024        # max bytes merged per positional write
 //!
 //! [mirror]
 //! strategy = "stripe"       # or "failover" (winner-take-all)
@@ -273,6 +276,9 @@ pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
             Error::Config("'download.progress_min_bytes' must be an integer".into())
         })?;
     }
+    usize_opt!("download.sink_threads", cfg.sink_threads);
+    usize_opt!("download.sink_queue_mb", cfg.sink_queue_mb);
+    usize_opt!("download.coalesce_kb", cfg.coalesce_kb);
     if let Some(v) = doc.get("download.output_dir") {
         cfg.output_dir = v
             .as_str()
@@ -365,6 +371,9 @@ mod tests {
             probe_interval_s = 3.0
             [download]
             max_open_files = 2
+            sink_threads = 4
+            sink_queue_mb = 16
+            coalesce_kb = 512
             "#,
         )
         .unwrap();
@@ -373,6 +382,9 @@ mod tests {
         assert_eq!(cfg.optimizer.k, 1.01);
         assert_eq!(cfg.optimizer.probe_interval_s, 3.0);
         assert_eq!(cfg.max_open_files, 2);
+        assert_eq!(cfg.sink_threads, 4);
+        assert_eq!(cfg.sink_queue_mb, 16);
+        assert_eq!(cfg.coalesce_kb, 512);
         cfg.validate().unwrap();
     }
 

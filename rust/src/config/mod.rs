@@ -369,6 +369,17 @@ pub struct DownloadConfig {
     pub progress_window_s: f64,
     /// Minimum bytes a connection must move per progress window.
     pub progress_min_bytes: u64,
+    /// Dedicated sink writer threads landing payload bytes with
+    /// coalesced positional writes (real transport only). 0 keeps
+    /// writes inline on the reactor threads (the pre-sink legacy
+    /// behaviour, also the measured baseline in perf tests).
+    pub sink_threads: usize,
+    /// Total pooled payload-buffer budget (MiB) — the bound on sink
+    /// memory; a dry pool parks connections (backpressure) instead of
+    /// queuing unbounded.
+    pub sink_queue_mb: usize,
+    /// Maximum bytes merged into one positional write (KiB).
+    pub coalesce_kb: usize,
 }
 
 impl Default for DownloadConfig {
@@ -385,6 +396,9 @@ impl Default for DownloadConfig {
             timeout_s: 0.0,
             progress_window_s: 30.0,
             progress_min_bytes: 64 * 1024,
+            sink_threads: 2,
+            sink_queue_mb: 64,
+            coalesce_kb: 1024,
         }
     }
 }
@@ -411,6 +425,21 @@ impl DownloadConfig {
         }
         if self.progress_window_s < 0.0 {
             return Err(Error::Config("progress_window_s must be >= 0".into()));
+        }
+        if self.sink_threads > 64 {
+            return Err(Error::Config(format!(
+                "sink_threads {} too large (max 64)",
+                self.sink_threads
+            )));
+        }
+        if self.sink_queue_mb == 0 {
+            return Err(Error::Config("sink_queue_mb must be >= 1".into()));
+        }
+        if !(256..=16384).contains(&self.coalesce_kb) {
+            return Err(Error::Config(format!(
+                "coalesce_kb {} outside [256, 16384]",
+                self.coalesce_kb
+            )));
         }
         Ok(())
     }
@@ -446,6 +475,24 @@ impl DownloadConfig {
         }
         if let Some(w) = env_f64("FASTBIODL_PROGRESS_WINDOW")? {
             self.progress_window_s = w;
+        }
+        fn env_usize(name: &str) -> Result<Option<usize>> {
+            match std::env::var(name) {
+                Ok(v) => v
+                    .parse()
+                    .map(Some)
+                    .map_err(|_| Error::Config(format!("{name}='{v}' is not an integer"))),
+                Err(_) => Ok(None),
+            }
+        }
+        if let Some(n) = env_usize("FASTBIODL_SINK_THREADS")? {
+            self.sink_threads = n;
+        }
+        if let Some(n) = env_usize("FASTBIODL_SINK_QUEUE_MB")? {
+            self.sink_queue_mb = n;
+        }
+        if let Some(n) = env_usize("FASTBIODL_COALESCE_KB")? {
+            self.coalesce_kb = n;
         }
         Ok(())
     }
@@ -525,6 +572,30 @@ mod tests {
         assert!(dl.validate().is_ok());
         dl.progress_window_s = -1.0;
         assert!(dl.validate().is_err());
+    }
+
+    #[test]
+    fn sink_knobs_validate() {
+        let dl = DownloadConfig::default();
+        assert_eq!(dl.sink_threads, 2);
+        assert_eq!(dl.sink_queue_mb, 64);
+        assert_eq!(dl.coalesce_kb, 1024);
+        assert!(dl.validate().is_ok());
+        let mut dl = DownloadConfig::default();
+        dl.sink_threads = 0; // inline legacy mode is a valid setting
+        assert!(dl.validate().is_ok());
+        dl.sink_threads = 65;
+        assert!(dl.validate().is_err());
+        dl = DownloadConfig::default();
+        dl.sink_queue_mb = 0;
+        assert!(dl.validate().is_err());
+        dl = DownloadConfig::default();
+        dl.coalesce_kb = 128;
+        assert!(dl.validate().is_err());
+        dl.coalesce_kb = 32768;
+        assert!(dl.validate().is_err());
+        dl.coalesce_kb = 256;
+        assert!(dl.validate().is_ok());
     }
 
     #[test]

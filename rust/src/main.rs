@@ -73,6 +73,12 @@ COMMANDS:
                               (default 30; 0 disables)
         --progress-min-bytes <n>  minimum bytes per progress window
                               (default 65536)
+        --sink-threads <n>    dedicated disk-writer threads (default 2;
+                              0 = write inline on the reactor threads)
+        --sink-queue-mb <n>   pooled write-buffer budget in MiB
+                              (default 64; full pool = backpressure)
+        --coalesce-kb <n>     max bytes merged into one positional
+                              write (default 1024)
     serve                     run the throttled loopback archive server
         --files <n>           number of synthetic files (default 4)
         --size-mb <n>         size of each file (default 64)
@@ -115,7 +121,8 @@ COMMANDS:
 ENVIRONMENT:
     FASTBIODL_ARTIFACTS       artifact directory (default ./artifacts)
     FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER,
-    FASTBIODL_MIRROR_STRATEGY, FASTBIODL_FAULT_PENALTY, FASTBIODL_PROGRESS_WINDOW
+    FASTBIODL_MIRROR_STRATEGY, FASTBIODL_FAULT_PENALTY, FASTBIODL_PROGRESS_WINDOW,
+    FASTBIODL_SINK_THREADS, FASTBIODL_SINK_QUEUE_MB, FASTBIODL_COALESCE_KB
                               config overrides (see config module docs)
 "#;
 
@@ -463,7 +470,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
         "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks", "progress-window",
-        "progress-min-bytes",
+        "progress-min-bytes", "sink-threads", "sink-queue-mb", "coalesce-kb",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));
@@ -477,6 +484,16 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     if let Some(b) = args.flag_u64("progress-min-bytes")? {
         cfg.progress_min_bytes = b;
     }
+    if let Some(n) = args.flag_usize("sink-threads")? {
+        cfg.sink_threads = n;
+    }
+    if let Some(n) = args.flag_usize("sink-queue-mb")? {
+        cfg.sink_queue_mb = n;
+    }
+    if let Some(n) = args.flag_usize("coalesce-kb")? {
+        cfg.coalesce_kb = n;
+    }
+    cfg.validate()?;
 
     // Resolve sizes: --size override or a HEAD request.
     let mut records = Vec::new();

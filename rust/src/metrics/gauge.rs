@@ -1,0 +1,80 @@
+//! Lock-free instrumentation gauges.
+//!
+//! [`PeakGauge`] tracks a current value plus its high-water mark with
+//! two atomics — the shape the transport's write-behind sink needs to
+//! report both "bytes queued right now" (backpressure) and "worst
+//! depth this session" (`sink_queue_peak` in the bench record) without
+//! taking a lock on the byte path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically-peaked up/down counter.
+///
+/// `add` and `sub` are wait-free; `peak` never decreases. Subtraction
+/// saturates at zero so double-release bugs cannot wrap the gauge.
+#[derive(Debug, Default)]
+pub struct PeakGauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl PeakGauge {
+    /// A zeroed gauge.
+    pub fn new() -> PeakGauge {
+        PeakGauge::default()
+    }
+
+    /// Add `n` to the current value, folding the result into the peak.
+    /// Returns the new current value.
+    pub fn add(&self, n: u64) -> u64 {
+        let now = self.current.fetch_add(n, Ordering::SeqCst) + n;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+        now
+    }
+
+    /// Subtract `n` from the current value (saturating at zero).
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .current
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    /// Current value.
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::SeqCst)
+    }
+
+    /// Highest value `add` ever produced.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let g = PeakGauge::new();
+        assert_eq!(g.add(10), 10);
+        assert_eq!(g.add(5), 15);
+        g.sub(12);
+        assert_eq!(g.current(), 3);
+        assert_eq!(g.peak(), 15);
+        g.add(4);
+        assert_eq!(g.current(), 7);
+        assert_eq!(g.peak(), 15);
+    }
+
+    #[test]
+    fn sub_saturates_at_zero() {
+        let g = PeakGauge::new();
+        g.add(3);
+        g.sub(100);
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 3);
+    }
+}

@@ -9,10 +9,12 @@
 //! and the monitor thread communicate through (the "Shared Throughput
 //! Logs" of the paper's Algorithm 1).
 
+pub mod gauge;
 pub mod recorder;
 pub mod summary;
 pub mod timeline;
 
+pub use gauge::PeakGauge;
 pub use recorder::ThroughputRecorder;
 pub use summary::{mean_std, MeanStd};
 pub use timeline::{ci68_band, per_second_bins, Timeline};

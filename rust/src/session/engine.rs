@@ -167,6 +167,20 @@ pub enum TransportEvent {
     },
 }
 
+/// Disk-path counters reported by a transport after shutdown. The
+/// real transport's write-behind sink fills these; the simulator (and
+/// any transport without a disk stage) returns the zeroed default.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportIoStats {
+    /// Positional disk writes issued (after coalescing).
+    pub write_syscalls: u64,
+    /// High-water mark of bytes queued in the sink.
+    pub sink_queue_peak: u64,
+    /// Total nanoseconds connections spent parked on sink
+    /// backpressure.
+    pub reactor_stall_ns: u64,
+}
+
 /// How bytes move. One implementation over the virtual-time network
 /// simulator, one over real sockets; the engine cannot tell them apart.
 ///
@@ -210,6 +224,12 @@ pub trait Transport {
     /// Stop background machinery (join worker threads). Called once
     /// after the control loop exits, before the report is assembled.
     fn shutdown(&mut self) {}
+
+    /// Disk-path counters for the session (read after [`Transport::shutdown`]).
+    /// Transports without a disk stage keep the zeroed default.
+    fn io_stats(&self) -> TransportIoStats {
+        TransportIoStats::default()
+    }
 }
 
 /// Tool-level behaviour knobs (what distinguishes FastBioDL from the
@@ -348,6 +368,15 @@ pub struct EngineStats {
     /// (zero unless [`crate::config::ControlConfig::adaptive_chunks`]
     /// is on and fault pressure or mirror degradation was observed).
     pub chunks_scaled: u64,
+    /// Positional disk writes the transport issued (after sink
+    /// coalescing; zero for the simulator).
+    pub write_syscalls: u64,
+    /// High-water mark of bytes queued in the transport's write-behind
+    /// sink (zero for the simulator and the inline write path).
+    pub sink_queue_peak: u64,
+    /// Total nanoseconds connections spent parked on sink
+    /// backpressure.
+    pub reactor_stall_ns: u64,
 }
 
 /// Persist the scheduler's frontiers if they changed since the last
@@ -905,6 +934,10 @@ pub fn run_session_with_stats(
     // Algorithm 1 line 9: stop workers, then tear the transport down.
     status.stop_all();
     transport.shutdown();
+    let io = transport.io_stats();
+    stats.write_syscalls = io.write_syscalls;
+    stats.sink_queue_peak = io.sink_queue_peak;
+    stats.reactor_stall_ns = io.reactor_stall_ns;
 
     if let Some(e) = fatal {
         // Leave the freshest journal behind for a resume.

@@ -38,6 +38,7 @@ pub mod sim;
 
 pub use engine::{
     Clock, EngineParams, EngineStats, FailureClass, ToolBehavior, Transport, TransportEvent,
+    TransportIoStats,
 };
 pub use mirrors::MirrorBoard;
 pub use sim::{run_simulated_download, SimSession, SimSessionParams};

@@ -11,9 +11,11 @@
 //!   pool of reactor threads drives *all* slot sockets through
 //!   non-blocking connect/read state machines, so `c_max` is bounded by
 //!   file descriptors, not OS thread stacks — thousands of concurrent
-//!   streams are real here, same as on the simulated path. The byte hot
-//!   path stays atomics-only: reactor threads feed the shared recorder
-//!   directly from the socket read loop.
+//!   streams are real here, same as on the simulated path. Disk I/O is
+//!   decoupled from the poll loop: output files are opened and
+//!   pre-sized **once** here, and reactor threads hand payload bytes to
+//!   the write-behind sink ([`crate::transport::sink`]), which lands
+//!   them with coalesced positional writes and acks completion.
 //! * The per-mirror connection cap is enforced strictly at socket
 //!   level via the reactor's reservation gauges — open sockets to one
 //!   mirror never exceed `per_mirror_conns` (the old thread-per-slot
@@ -33,10 +35,12 @@ use crate::metrics::recorder::ThroughputRecorder;
 use crate::runtime::XlaRuntime;
 use crate::session::engine::{
     run_session, Clock, EngineParams, FailureClass, ToolBehavior, Transport, TransportEvent,
+    TransportIoStats,
 };
 use crate::session::SessionReport;
 use crate::transport::http_client::HttpConnection;
 use crate::transport::reactor::{FetchSpec, KillSwitch, ProgressPolicy, Reactor};
+use crate::transport::sink::{SinkConfig, SinkFile};
 use crate::{Error, Result};
 
 /// A slot gives up (and fails the whole session) only after this many
@@ -110,6 +114,11 @@ pub struct RealTransport {
     /// Events raised on the engine thread itself (e.g. a malformed
     /// URL), delivered ahead of reactor events on the next poll.
     pending: Vec<TransportEvent>,
+    /// Preopened per-file output handles, indexed by record position
+    /// (empty in discard mode). Opened once by [`run_real_session`];
+    /// every chunk of file `i` writes positionally through
+    /// `files[i]`.
+    files: Vec<SinkFile>,
 }
 
 impl RealTransport {
@@ -124,15 +133,23 @@ impl RealTransport {
         mirror_count: usize,
         recorder: Arc<ThroughputRecorder>,
         progress: ProgressPolicy,
+        sink_cfg: SinkConfig,
     ) -> Result<RealTransport> {
-        let reactor = Reactor::spawn(capacity, mirror_count, recorder, progress)?;
+        let reactor = Reactor::spawn(capacity, mirror_count, recorder, progress, sink_cfg)?;
         Ok(RealTransport {
             reactor,
             sink,
             per_mirror_conns,
             slot_mirror: vec![None; capacity],
             pending: Vec::new(),
+            files: Vec::new(),
         })
+    }
+
+    /// Install the preopened output handles (one per record, in record
+    /// order). Directory mode only; discard mode leaves this empty.
+    pub fn set_output_handles(&mut self, files: Vec<SinkFile>) {
+        self.files = files;
     }
 
     /// Handle that can simulate the whole reactor dying mid-session
@@ -190,7 +207,19 @@ impl Transport for RealTransport {
         };
         let out = match &self.sink {
             Sink::Discard => None,
-            Sink::Directory(dir) => Some(std::path::Path::new(dir).join(&record.accession)),
+            Sink::Directory(_) => match self.files.get(chunk.file).cloned() {
+                Some(handle) => Some(handle),
+                None => {
+                    // Handles are preopened by the driver; a missing one
+                    // is a deterministic local failure.
+                    self.pending.push(TransportEvent::Failed {
+                        slot,
+                        class: FailureClass::Fatal,
+                        error: format!("no preopened output handle for file {}", chunk.file),
+                    });
+                    return Ok(());
+                }
+            },
         };
         self.reactor.fetch(FetchSpec {
             slot,
@@ -211,6 +240,10 @@ impl Transport for RealTransport {
 
     fn shutdown(&mut self) {
         self.reactor.shutdown();
+    }
+
+    fn io_stats(&self) -> TransportIoStats {
+        self.reactor.io_stats()
     }
 }
 
@@ -236,6 +269,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
     // the record restarts from scratch.
     let mut done_prefix: Option<Vec<u64>> = None;
     let mut journal_dir: Option<PathBuf> = None;
+    let mut handles: Vec<SinkFile> = Vec::new();
     if let Sink::Directory(dir) = &sink {
         std::fs::create_dir_all(dir)?;
         let dirp = std::path::Path::new(dir);
@@ -269,9 +303,12 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
                 done_prefix = Some(frontiers);
             }
         }
-        // Pre-size the output files so reactor threads can write ranges
-        // without coordinating. Existing files keep their contents
-        // (set_len only extends/truncates to the expected size).
+        // Open + pre-size every output file once, up front. The shared
+        // handles let sink writers (or reactor threads in inline mode)
+        // land ranges with positional writes — no per-chunk
+        // open/seek/close, no coordination. Existing files keep their
+        // contents (set_len only extends/truncates to the expected
+        // size).
         for r in &records {
             let path = dirp.join(&r.accession);
             let f = std::fs::OpenOptions::new()
@@ -280,6 +317,10 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
                 .write(true)
                 .open(&path)?;
             f.set_len(r.bytes)?;
+            handles.push(SinkFile {
+                file: Arc::new(f),
+                path: Arc::new(path),
+            });
         }
         journal_dir = Some(dirp.to_path_buf());
     }
@@ -306,7 +347,9 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         mirror_width(&records),
         recorder.clone(),
         progress,
+        SinkConfig::from_download(&download),
     )?;
+    transport.set_output_handles(handles);
     let clock = WallClock::start();
     run_session(
         EngineParams {

@@ -12,7 +12,13 @@
 //!   fixed pool of reactor threads drives all slot sockets through
 //!   non-blocking connect/read state machines, with DNS + TCP setup on
 //!   a separate connector pool and a whole-chunk progress deadline so
-//!   dribbling servers cannot pin a chunk open forever.
+//!   dribbling servers cannot pin a chunk open forever. Payload bytes
+//!   are handed to the [`sink`] rather than written on the poll loop.
+//! * [`sink`] — the write-behind disk stage: dedicated writer threads
+//!   drain pooled payload buffers with coalesced positional writes
+//!   against per-file handles opened once per session, acking chunk
+//!   completion only after the bytes land; a dry buffer pool parks the
+//!   feeding connection (bounded memory) instead of queuing unbounded.
 //! * [`http_client`] — minimal blocking HTTP/1.1 client: persistent
 //!   connections, `Range: bytes=…` GETs, status/headers parsing,
 //!   chunked reads with byte-count callbacks. Still used by the simple
@@ -39,10 +45,12 @@ pub mod fetcher;
 pub mod http_client;
 pub mod http_server;
 pub mod reactor;
+pub mod sink;
 pub mod token_bucket;
 
 pub use fetcher::ChunkFetcher;
 pub use http_client::{HttpConnection, HttpResponse};
 pub use http_server::{ServedFile, ServerFaultWindow, ThrottledHttpServer, ThrottleConfig};
 pub use reactor::{FetchSpec, KillSwitch, ProgressPolicy, Reactor};
+pub use sink::{SinkConfig, SinkFile};
 pub use token_bucket::TokenBucket;

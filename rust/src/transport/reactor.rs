@@ -15,9 +15,15 @@
 //! * **Reactor threads** (`dl-reactor-N`, `available_parallelism`
 //!   clamped to 2..=8): each owns the connections of the slots hashed
 //!   to it (`slot % n_reactors`), polls their sockets, and runs the
-//!   per-connection HTTP state machine. Payload bytes go straight into
-//!   the shared [`ThroughputRecorder`] — the byte hot path stays
-//!   atomics-only.
+//!   per-connection HTTP state machine. The poll loop never touches
+//!   the disk or the allocator: payload bytes are copied into pooled
+//!   buffers and handed to the write-behind sink
+//!   ([`crate::transport::sink`]); discard-mode bytes go straight into
+//!   the shared [`ThroughputRecorder`].
+//! * **Sink writer threads** (`dl-sink-N`): drain the pooled buffers
+//!   with coalesced positional writes and ack chunk completion once
+//!   the bytes have landed. With `sink_threads = 0` the reactor falls
+//!   back to inline synchronous writes (the measured legacy path).
 //! * **Connector threads** (`dl-connect-N`, fixed small pool): perform
 //!   the *blocking* steps of connection setup — DNS resolution (now an
 //!   explicit step, mirrored by the simulator's DNS-outage fault class)
@@ -35,9 +41,17 @@
 //!    │ ▲                │        Failed{Transport}               │ blank line
 //!    │ │ Completed      │                                        ▼
 //!    │ └────────────────┼──────────────────────── Body ◄── 200/206, length ok
-//!    │ Cmd::Fetch       │ Failed{Reject|Fatal}     ▲
-//!    └─ (reuse) ────────┴──────── Drain ◄──────────┴── other status
+//!    │ Cmd::Fetch       │ Failed{Reject|Fatal}     ▲  │
+//!    └─ (reuse) ────────┴──────── Drain ◄──────────┘  │ sink pool dry
+//!                                                     ▼
+//!                                  (deregistered) Blocked ── buffer freed ──► Body
 //! ```
+//!
+//! `Blocked` is sink backpressure: the buffer pool ran dry mid-body,
+//! so the connection parks (its socket drops out of the poll set —
+//! TCP flow control pushes back on the server) and carries the
+//! unhanded bytes until the writers recycle a buffer. Parked time is
+//! reported as `reactor_stall_ns`.
 //!
 //! Every transition that fails classifies into the engine's
 //! [`FailureClass`] taxonomy exactly as the blocking
@@ -66,11 +80,9 @@
 //! connects that raced a release.
 
 use std::collections::HashMap;
-use std::fs::File;
-use std::io::{ErrorKind, Read, Seek, SeekFrom, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::os::unix::io::AsRawFd;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -78,8 +90,9 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::scheduler::Chunk;
 use crate::metrics::recorder::ThroughputRecorder;
-use crate::session::engine::{FailureClass, TransportEvent};
+use crate::session::engine::{FailureClass, TransportEvent, TransportIoStats};
 use crate::transport::fetcher::CONNECT_TIMEOUT;
+use crate::transport::sink::{PooledBuf, Sink, SinkConfig, SinkFile, WriteJob};
 use crate::{Error, Result};
 
 /// Raw `poll(2)` — the only system interface the reactor needs beyond
@@ -154,8 +167,9 @@ pub struct FetchSpec {
     pub port: u16,
     /// Request path.
     pub path: String,
-    /// Output file (`None` = count and discard).
-    pub out: Option<PathBuf>,
+    /// Preopened output handle (`None` = count and discard). Opened
+    /// once per session by the driver — the reactor never opens files.
+    pub out: Option<SinkFile>,
     /// Byte range to fetch.
     pub chunk: Chunk,
     /// Total object size (a chunk covering it all skips the `Range`
@@ -203,12 +217,22 @@ struct ConnectJob {
 enum HttpState {
     /// Connected, no request in flight (keep-alive parking).
     Idle,
-    /// Writing the request line + headers.
-    Sending { buf: Vec<u8>, sent: usize },
+    /// Writing the request line + headers (bytes live in the
+    /// connection's reused `req_buf`).
+    Sending { sent: usize },
     /// Accumulating the response head up to the blank line.
     Headers { head: Vec<u8> },
     /// Streaming a `Content-Length`-delimited payload.
     Body { remaining: u64 },
+    /// Sink backpressure: the buffer pool ran dry mid-body. The socket
+    /// is deregistered from poll (TCP flow control pushes back on the
+    /// server); `carry` holds the already-read bytes that could not be
+    /// handed off, retried every loop iteration until a buffer frees.
+    Blocked {
+        remaining: u64,
+        carry: Vec<u8>,
+        since: Instant,
+    },
     /// Consuming an error body so the connection stays usable, then
     /// reporting the stored failure.
     Drain {
@@ -226,8 +250,18 @@ struct Conn {
     st: HttpState,
     /// The fetch in flight (None while Idle).
     spec: Option<Box<FetchSpec>>,
-    /// Output handle, positioned at the chunk offset.
-    file: Option<File>,
+    /// Preopened output handle for the fetch in flight (None = discard).
+    out: Option<SinkFile>,
+    /// Absolute file offset of the next payload byte.
+    write_off: u64,
+    /// Partially filled pooled buffer awaiting hand-off to the sink.
+    pending: Option<PooledBuf>,
+    /// Chunk generation stamped on this fetch's sink jobs (lets the
+    /// writers poison the remains of a failed chunk).
+    sink_gen: u64,
+    /// Reused request-build scratch: `arm_fetch` rewrites it in place,
+    /// so re-arming a keep-alive connection allocates nothing.
+    req_buf: Vec<u8>,
     /// Progress-deadline window start.
     window_start: Instant,
     /// Bytes (head + payload) received since `window_start`.
@@ -266,6 +300,7 @@ struct ReactorCtx {
     mirror_open: Arc<Vec<AtomicUsize>>,
     recorder: Arc<ThroughputRecorder>,
     progress: ProgressPolicy,
+    sink: Arc<Sink>,
 }
 
 struct ConnectorCtx {
@@ -288,16 +323,21 @@ pub struct Reactor {
     gens: Arc<Vec<AtomicU64>>,
     /// Per-mirror open-reservation gauges.
     mirror_open: Arc<Vec<AtomicUsize>>,
+    /// Write-behind disk sink shared by the reactor threads.
+    sink: Arc<Sink>,
 }
 
 impl Reactor {
-    /// Spawn the reactor + connector pools for `capacity` slots across
-    /// `mirror_count` mirrors, feeding payload bytes into `recorder`.
+    /// Spawn the reactor + connector + sink-writer pools for `capacity`
+    /// slots across `mirror_count` mirrors, feeding payload bytes into
+    /// `recorder`. `sink_cfg` shapes the write-behind disk stage
+    /// (`threads == 0` keeps writes inline on the reactor threads).
     pub fn spawn(
         capacity: usize,
         mirror_count: usize,
         recorder: Arc<ThroughputRecorder>,
         progress: ProgressPolicy,
+        sink_cfg: SinkConfig,
     ) -> Result<Reactor> {
         let n_reactors = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -310,6 +350,18 @@ impl Reactor {
         let mirror_open: Arc<Vec<AtomicUsize>> =
             Arc::new((0..mirror_count.max(1)).map(|_| AtomicUsize::new(0)).collect());
         let (events_tx, events_rx) = channel::<TransportEvent>();
+
+        // The sink writers hold event senders too (they ack completed
+        // chunks), and they obey the same kill switch — so a dead
+        // reactor pool still disconnects the engine's event channel.
+        let mut joins = Vec::with_capacity(n_reactors + n_connectors + sink_cfg.threads);
+        let sink = Arc::new(Sink::spawn(
+            sink_cfg,
+            events_tx.clone(),
+            recorder.clone(),
+            kill.clone(),
+            &mut joins,
+        )?);
 
         let mut cmd_tx = Vec::with_capacity(n_reactors);
         let mut cmd_rx = Vec::with_capacity(n_reactors);
@@ -326,7 +378,6 @@ impl Reactor {
             connector_rx.push(rx);
         }
 
-        let mut joins = Vec::with_capacity(n_reactors + n_connectors);
         for (i, rx) in cmd_rx.into_iter().enumerate() {
             let ctx = ReactorCtx {
                 cmd_rx: rx,
@@ -337,6 +388,7 @@ impl Reactor {
                 mirror_open: mirror_open.clone(),
                 recorder: recorder.clone(),
                 progress,
+                sink: sink.clone(),
             };
             joins.push(
                 std::thread::Builder::new()
@@ -345,9 +397,10 @@ impl Reactor {
                     .map_err(|e| Error::Session(format!("spawn reactor {i}: {e}")))?,
             );
         }
-        // Only reactor threads hold event senders: when every reactor
-        // thread has exited, the engine's poll sees a disconnect and
-        // fails the session instead of spinning forever.
+        // Only reactor and sink-writer threads hold event senders (all
+        // bound to the same kill switch): when they have exited, the
+        // engine's poll sees a disconnect and fails the session instead
+        // of spinning forever.
         drop(events_tx);
         for (i, rx) in connector_rx.into_iter().enumerate() {
             let ctx = ConnectorCtx {
@@ -371,7 +424,14 @@ impl Reactor {
             kill,
             gens,
             mirror_open,
+            sink,
         })
+    }
+
+    /// Disk-path counters (write syscalls after coalescing, sink queue
+    /// high-water mark, backpressure stall time).
+    pub fn io_stats(&self) -> TransportIoStats {
+        self.sink.io_stats()
     }
 
     /// A handle that can simulate the whole event loop dying.
@@ -525,6 +585,7 @@ fn reactor_loop(ctx: ReactorCtx) {
     let mut pollfds: Vec<sys::PollFd> = Vec::new();
     let mut poll_slots: Vec<usize> = Vec::new();
     let mut stalled: Vec<(usize, u64)> = Vec::new();
+    let mut blocked: Vec<usize> = Vec::new();
     loop {
         if ctx.kill.is_killed() {
             return;
@@ -537,10 +598,34 @@ fn reactor_loop(ctx: ReactorCtx) {
             }
         }
 
+        // Sink backpressure resume: connections parked in `Blocked`
+        // retry their carried payload before the poll set is built, so
+        // a round where *every* connection is parked still drains (the
+        // empty-poll branch below `continue`s past the rest of the
+        // loop).
+        blocked.clear();
+        for (&slot, st) in conns.iter() {
+            if let SlotState::Conn(c) = st {
+                if matches!(c.st, HttpState::Blocked { .. }) {
+                    blocked.push(slot);
+                }
+            }
+        }
+        for slot in blocked.drain(..) {
+            let fate = match conns.get_mut(&slot) {
+                Some(SlotState::Conn(c)) => resume_blocked(c, &ctx),
+                _ => continue,
+            };
+            settle(&mut conns, &ctx, slot, fate);
+        }
+
         pollfds.clear();
         poll_slots.clear();
         for (&slot, st) in conns.iter() {
             if let SlotState::Conn(c) = st {
+                if matches!(c.st, HttpState::Blocked { .. }) {
+                    continue; // parked: let TCP flow control back off
+                }
                 let events = if matches!(c.st, HttpState::Sending { .. }) {
                     sys::POLLOUT
                 } else {
@@ -577,7 +662,7 @@ fn reactor_loop(ctx: ReactorCtx) {
                     continue;
                 }
                 let fate = match conns.get_mut(&slot) {
-                    Some(SlotState::Conn(c)) => drive_conn(c, &mut scratch, &ctx.recorder),
+                    Some(SlotState::Conn(c)) => drive_conn(c, &mut scratch, &ctx),
                     _ => continue,
                 };
                 settle(&mut conns, &ctx, slot, fate);
@@ -589,7 +674,9 @@ fn reactor_loop(ctx: ReactorCtx) {
             stalled.clear();
             for (&slot, st) in conns.iter_mut() {
                 if let SlotState::Conn(c) = st {
-                    if matches!(c.st, HttpState::Idle) {
+                    // Blocked is *local* backpressure (our disk, not
+                    // the server) — it must not trip the deadline.
+                    if matches!(c.st, HttpState::Idle | HttpState::Blocked { .. }) {
                         continue;
                     }
                     if c.window_start.elapsed().as_secs_f64() >= ctx.progress.window_s {
@@ -654,23 +741,16 @@ fn handle_cmd(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, cmd: Cmd)
                         port: spec.port,
                         st: HttpState::Idle,
                         spec: None,
-                        file: None,
+                        out: None,
+                        write_off: 0,
+                        pending: None,
+                        sink_gen: 0,
+                        req_buf: Vec::new(),
                         window_start: Instant::now(),
                         window_bytes: 0,
                     };
-                    match arm_fetch(&mut c, spec) {
-                        None => {
-                            conns.insert(slot, SlotState::Conn(c));
-                        }
-                        Some((class, error)) => {
-                            // Local output failure: socket closes, the
-                            // reservation stays until the engine
-                            // releases the slot.
-                            let _ = ctx
-                                .events_tx
-                                .send(TransportEvent::Failed { slot, class, error });
-                        }
-                    }
+                    arm_fetch(&mut c, spec, ctx);
+                    conns.insert(slot, SlotState::Conn(c));
                 }
                 Err((class, error)) => {
                     let _ = ctx
@@ -703,13 +783,7 @@ fn handle_fetch(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: B
     match route {
         Route::Reuse => {
             if let Some(SlotState::Conn(c)) = conns.get_mut(&slot) {
-                if let Some((class, error)) = arm_fetch(c, spec) {
-                    // Conn stays Idle and reusable; the failure (local
-                    // output open) reports as-is.
-                    let _ = ctx
-                        .events_tx
-                        .send(TransportEvent::Failed { slot, class, error });
-                }
+                arm_fetch(c, spec, ctx);
             }
         }
         Route::CloseAndDial => {
@@ -769,89 +843,208 @@ fn settle(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, slot: usize, 
     }
 }
 
-/// Prepare `c` (an idle connection) for a fetch: open the output file at
-/// the chunk offset and queue the request bytes. Returns the classified
-/// failure on local I/O errors (the connection is left Idle).
-fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>) -> Option<(FailureClass, String)> {
-    let file = match &spec.out {
-        None => None,
-        Some(path) => {
-            let open = || -> std::io::Result<File> {
-                let mut f = std::fs::OpenOptions::new().write(true).open(path)?;
-                f.seek(SeekFrom::Start(spec.chunk.offset))?;
-                Ok(f)
-            };
-            match open() {
-                Ok(f) => Some(f),
-                Err(e) => {
-                    return Some((
-                        FailureClass::Fatal,
-                        format!("open {}: {e}", path.display()),
-                    ))
-                }
-            }
-        }
-    };
-    let mut req = format!(
-        "GET {} HTTP/1.1\r\nHost: {}:{}\r\n",
-        spec.path, spec.host, spec.port
-    );
+/// Prepare `c` (an idle connection) for a fetch: bind the preopened
+/// output handle and rebuild the request bytes in the connection's
+/// reused scratch — no file open, no allocation on the re-arm path.
+fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
+    c.req_buf.clear();
+    c.req_buf.extend_from_slice(b"GET ");
+    c.req_buf.extend_from_slice(spec.path.as_bytes());
+    c.req_buf.extend_from_slice(b" HTTP/1.1\r\nHost: ");
+    c.req_buf.extend_from_slice(spec.host.as_bytes());
+    c.req_buf.push(b':');
+    write_decimal(&mut c.req_buf, u64::from(spec.port));
+    c.req_buf.extend_from_slice(b"\r\n");
     if let Some((offset, len)) = spec.range() {
-        req.push_str(&format!("Range: bytes={}-{}\r\n", offset, offset + len - 1));
+        c.req_buf.extend_from_slice(b"Range: bytes=");
+        write_decimal(&mut c.req_buf, offset);
+        c.req_buf.push(b'-');
+        write_decimal(&mut c.req_buf, offset + len - 1);
+        c.req_buf.extend_from_slice(b"\r\n");
     }
-    req.push_str("Connection: keep-alive\r\n\r\n");
-    c.file = file;
+    c.req_buf.extend_from_slice(b"Connection: keep-alive\r\n\r\n");
+    c.out = spec.out.clone();
+    c.write_off = spec.chunk.offset;
+    c.pending = None;
+    c.sink_gen = ctx.sink.next_gen();
     c.spec = Some(spec);
-    c.st = HttpState::Sending {
-        buf: req.into_bytes(),
-        sent: 0,
-    };
+    c.st = HttpState::Sending { sent: 0 };
     c.window_start = Instant::now();
     c.window_bytes = 0;
-    None
 }
 
-/// Write payload bytes to the output file (if any) and the shared
-/// recorder — the atomics-only byte hot path.
-fn deliver(
-    c: &mut Conn,
-    data: &[u8],
-    recorder: &ThroughputRecorder,
-) -> std::result::Result<(), Fate> {
-    if let Some(f) = c.file.as_mut() {
-        if let Err(e) = f.write_all(data) {
-            let path = c
-                .spec
-                .as_ref()
-                .and_then(|s| s.out.as_ref())
-                .map(|p| p.display().to_string())
-                .unwrap_or_default();
-            return Err(Fate::FailClose(
-                FailureClass::Fatal,
-                format!("write {path}: {e}"),
-            ));
+/// Append `v` in decimal ASCII without allocating.
+fn write_decimal(buf: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
         }
     }
-    recorder.add_bytes(data.len() as u64);
-    Ok(())
+    buf.extend_from_slice(&tmp[i..]);
+}
+
+/// Outcome of handing payload bytes toward the disk path.
+enum Push {
+    /// Every byte accepted. `deferred` = the chunk's `Completed` ack
+    /// will come from a sink writer once the bytes land, not from the
+    /// reactor.
+    Done { deferred: bool },
+    /// Buffer pool dry after accepting `taken` bytes: backpressure —
+    /// park the connection in `Blocked` with the rest.
+    Full { taken: usize },
+}
+
+/// Hand payload bytes toward the disk path. Discard mode credits the
+/// recorder directly; inline mode (`sink_threads = 0`) writes
+/// synchronously on this reactor thread (the measured legacy path);
+/// sink mode copies into pooled buffers and hands full ones to the
+/// writers, which credit the recorder and ack after the write lands.
+/// `finish` marks the chunk's final bytes: the pending buffer is
+/// flushed with `last = true` so the writer sends the completion.
+fn push_payload(
+    c: &mut Conn,
+    data: &[u8],
+    finish: bool,
+    ctx: &ReactorCtx,
+) -> std::result::Result<Push, Fate> {
+    let Some(out) = c.out.clone() else {
+        ctx.recorder.add_bytes(data.len() as u64);
+        return Ok(Push::Done { deferred: false });
+    };
+    if ctx.sink.is_inline() {
+        if let Err(e) = ctx.sink.write_inline(&out, data, c.write_off) {
+            return Err(Fate::FailClose(
+                FailureClass::Fatal,
+                format!("write {}: {e}", out.path.display()),
+            ));
+        }
+        c.write_off += data.len() as u64;
+        ctx.recorder.add_bytes(data.len() as u64);
+        return Ok(Push::Done { deferred: false });
+    }
+    let mut taken = 0;
+    while taken < data.len() {
+        if c.pending.as_ref().is_some_and(|b| b.is_full()) {
+            flush_pending(c, ctx, false);
+        }
+        if c.pending.is_none() {
+            match ctx.sink.try_buffer() {
+                Some(b) => c.pending = Some(b),
+                None => return Ok(Push::Full { taken }),
+            }
+        }
+        taken += c.pending.as_mut().expect("buffer just ensured").push(&data[taken..]);
+    }
+    if finish && c.pending.is_some() {
+        flush_pending(c, ctx, true);
+        return Ok(Push::Done { deferred: true });
+    }
+    // `finish` with nothing pending can only mean a zero-length tail:
+    // nothing was queued, so the reactor acks directly.
+    Ok(Push::Done { deferred: false })
+}
+
+/// Hand `c`'s pending buffer to the sink writers. `last` marks the
+/// chunk's final job (the writer acks `Completed` once it lands).
+fn flush_pending(c: &mut Conn, ctx: &ReactorCtx, last: bool) {
+    let Some(buf) = c.pending.take() else { return };
+    if buf.is_empty() && !last {
+        c.pending = Some(buf);
+        return;
+    }
+    let len = buf.len() as u64;
+    let slot = match c.spec.as_ref() {
+        Some(s) => s.slot,
+        None => return, // unreachable: a body in flight implies a spec
+    };
+    let Some(out) = c.out.clone() else { return };
+    ctx.sink.submit(WriteJob {
+        slot,
+        gen: c.sink_gen,
+        file: out,
+        offset: c.write_off,
+        buf,
+        last,
+    });
+    c.write_off += len;
+}
+
+/// Chunk fully received (and, on the sink path, fully handed off):
+/// park the connection Idle for keep-alive reuse. `deferred` means a
+/// sink writer sends the `Completed` ack after the final write lands;
+/// otherwise the reactor acks now.
+fn finish_chunk(c: &mut Conn, deferred: bool) -> Fate {
+    c.out = None;
+    c.spec = None;
+    c.st = HttpState::Idle;
+    if deferred {
+        Fate::Keep
+    } else {
+        Fate::Completed
+    }
+}
+
+/// Retry a `Blocked` connection's carried payload. Progress means a
+/// buffer freed up: record the parked time as reactor stall, reset the
+/// progress window (the pause was our disk, not the server), and
+/// return to `Body` — or finish the chunk if the carry was its tail.
+fn resume_blocked(c: &mut Conn, ctx: &ReactorCtx) -> Fate {
+    let st = std::mem::replace(&mut c.st, HttpState::Idle);
+    let HttpState::Blocked {
+        remaining,
+        mut carry,
+        since,
+    } = st
+    else {
+        c.st = st;
+        return Fate::Keep;
+    };
+    let finish = remaining == 0;
+    match push_payload(c, &carry, finish, ctx) {
+        Ok(Push::Done { deferred }) => {
+            ctx.sink.note_stall(since.elapsed());
+            c.window_start = Instant::now();
+            c.window_bytes = 0;
+            if finish {
+                finish_chunk(c, deferred)
+            } else {
+                c.st = HttpState::Body { remaining };
+                Fate::Keep
+            }
+        }
+        Ok(Push::Full { taken }) => {
+            carry.drain(..taken);
+            c.st = HttpState::Blocked {
+                remaining,
+                carry,
+                since,
+            };
+            Fate::Keep
+        }
+        Err(fate) => fate,
+    }
 }
 
 /// Parse a response head (status line + headers, no trailing blank
-/// line) into `(status, content_length)`.
+/// line) into `(status, content_length)` — byte-level, so the hot path
+/// allocates only when building an error message.
 fn parse_head(head: &[u8]) -> std::result::Result<(u16, u64), String> {
-    let text = String::from_utf8_lossy(head);
-    let mut lines = text.split("\r\n");
-    let status_line = lines.next().unwrap_or("");
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| format!("bad status line {status_line:?}"))?;
+    let (status_line, mut rest) = split_line(head);
+    let status = parse_status(status_line).ok_or_else(|| {
+        format!("bad status line {:?}", String::from_utf8_lossy(status_line))
+    })?;
     let mut content_length: Option<u64> = None;
-    for h in lines {
-        if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().ok();
+    while !rest.is_empty() {
+        let (line, tail) = split_line(rest);
+        rest = tail;
+        if let Some(pos) = line.iter().position(|&b| b == b':') {
+            if trim_ascii(&line[..pos]).eq_ignore_ascii_case(b"content-length") {
+                content_length = parse_u64(trim_ascii(&line[pos + 1..]));
             }
         }
     }
@@ -860,15 +1053,62 @@ fn parse_head(head: &[u8]) -> std::result::Result<(u16, u64), String> {
     Ok((status, content_length))
 }
 
+/// Split at the first CRLF: `(line, rest-after-crlf)`. Without a CRLF
+/// the whole slice is the line.
+fn split_line(buf: &[u8]) -> (&[u8], &[u8]) {
+    match buf.windows(2).position(|w| w == b"\r\n") {
+        Some(pos) => (&buf[..pos], &buf[pos + 2..]),
+        None => (buf, &[]),
+    }
+}
+
+/// Second whitespace-separated token of the status line, as the HTTP
+/// status code.
+fn parse_status(line: &[u8]) -> Option<u16> {
+    let code = line
+        .split(|&b| b == b' ' || b == b'\t')
+        .filter(|f| !f.is_empty())
+        .nth(1)
+        .and_then(parse_u64)?;
+    u16::try_from(code).ok()
+}
+
+/// Decimal ASCII → `u64`; the whole slice must be digits.
+fn parse_u64(digits: &[u8]) -> Option<u64> {
+    if digits.is_empty() {
+        return None;
+    }
+    let mut v: u64 = 0;
+    for &b in digits {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v.checked_mul(10)?.checked_add(u64::from(b - b'0'))?;
+    }
+    Some(v)
+}
+
+/// Strip leading/trailing ASCII whitespace without allocating.
+fn trim_ascii(mut s: &[u8]) -> &[u8] {
+    while let [b, rest @ ..] = s {
+        if !b.is_ascii_whitespace() {
+            break;
+        }
+        s = rest;
+    }
+    while let [rest @ .., b] = s {
+        if !b.is_ascii_whitespace() {
+            break;
+        }
+        s = rest;
+    }
+    s
+}
+
 /// Classify the parsed response head and move the connection into
 /// `Body`/`Drain`, feeding any bytes that arrived glued to the head.
 /// `None` means the state advanced and the drive loop continues.
-fn begin_body(
-    c: &mut Conn,
-    head: &[u8],
-    leftover: &[u8],
-    recorder: &ThroughputRecorder,
-) -> Option<Fate> {
+fn begin_body(c: &mut Conn, head: &[u8], leftover: &[u8], ctx: &ReactorCtx) -> Option<Fate> {
     let (status, content_length) = match parse_head(head) {
         Ok(v) => v,
         Err(msg) => return Some(Fate::FailClose(FailureClass::Transport, msg)),
@@ -897,16 +1137,27 @@ fn begin_body(
         }
         let mut remaining = content_length;
         if !leftover.is_empty() {
-            if let Err(fate) = deliver(c, leftover, recorder) {
-                return Some(fate);
-            }
             remaining -= leftover.len() as u64;
+            let finish = remaining == 0;
+            match push_payload(c, leftover, finish, ctx) {
+                Ok(Push::Done { deferred }) => {
+                    if finish {
+                        return Some(finish_chunk(c, deferred));
+                    }
+                }
+                Ok(Push::Full { taken }) => {
+                    c.st = HttpState::Blocked {
+                        remaining,
+                        carry: leftover[taken..].to_vec(),
+                        since: Instant::now(),
+                    };
+                    return Some(Fate::Keep);
+                }
+                Err(fate) => return Some(fate),
+            }
         }
         if remaining == 0 {
-            c.file = None;
-            c.spec = None;
-            c.st = HttpState::Idle;
-            return Some(Fate::Completed);
+            return Some(finish_chunk(c, false));
         }
         c.st = HttpState::Body { remaining };
         None
@@ -919,7 +1170,8 @@ fn begin_body(
             FailureClass::Fatal
         };
         let error = format!("GET {path} range {range:?}: HTTP {status}");
-        c.file = None;
+        c.out = None;
+        c.pending = None;
         c.st = HttpState::Drain {
             remaining: content_length - leftover.len() as u64,
             class,
@@ -930,7 +1182,7 @@ fn begin_body(
 }
 
 /// Advance one connection's state machine until it would block.
-fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -> Fate {
+fn drive_conn(c: &mut Conn, scratch: &mut [u8], ctx: &ReactorCtx) -> Fate {
     loop {
         let st = std::mem::replace(&mut c.st, HttpState::Idle);
         match st {
@@ -944,7 +1196,7 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -
                     Err(_) => Fate::CloseSilent,
                 };
             }
-            HttpState::Sending { buf, mut sent } => match c.stream.write(&buf[sent..]) {
+            HttpState::Sending { mut sent } => match c.stream.write(&c.req_buf[sent..]) {
                 Ok(0) => {
                     return Fate::FailClose(
                         FailureClass::Transport,
@@ -953,18 +1205,18 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -
                 }
                 Ok(n) => {
                     sent += n;
-                    if sent == buf.len() {
+                    if sent == c.req_buf.len() {
                         c.st = HttpState::Headers { head: Vec::new() };
                     } else {
-                        c.st = HttpState::Sending { buf, sent };
+                        c.st = HttpState::Sending { sent };
                     }
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    c.st = HttpState::Sending { buf, sent };
+                    c.st = HttpState::Sending { sent };
                     return Fate::Keep;
                 }
                 Err(e) if e.kind() == ErrorKind::Interrupted => {
-                    c.st = HttpState::Sending { buf, sent };
+                    c.st = HttpState::Sending { sent };
                 }
                 Err(e) => {
                     return Fate::FailClose(FailureClass::Transport, format!("send request: {e}"))
@@ -982,7 +1234,7 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -
                     head.extend_from_slice(&scratch[..n]);
                     if let Some(pos) = head.windows(4).position(|w| w == b"\r\n\r\n") {
                         let leftover = head.split_off(pos + 4);
-                        if let Some(fate) = begin_body(c, &head[..pos], &leftover, recorder) {
+                        if let Some(fate) = begin_body(c, &head[..pos], &leftover, ctx) {
                             return fate;
                         }
                         // State advanced to Body/Drain: keep driving.
@@ -1017,17 +1269,25 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -
                     }
                     Ok(n) => {
                         c.window_bytes += n as u64;
-                        if let Err(fate) = deliver(c, &scratch[..n], recorder) {
-                            return fate;
-                        }
                         remaining -= n as u64;
-                        if remaining == 0 {
-                            c.file = None;
-                            c.spec = None;
-                            c.st = HttpState::Idle;
-                            return Fate::Completed;
+                        let finish = remaining == 0;
+                        match push_payload(c, &scratch[..n], finish, ctx) {
+                            Ok(Push::Done { deferred }) => {
+                                if finish {
+                                    return finish_chunk(c, deferred);
+                                }
+                                c.st = HttpState::Body { remaining };
+                            }
+                            Ok(Push::Full { taken }) => {
+                                c.st = HttpState::Blocked {
+                                    remaining,
+                                    carry: scratch[taken..n].to_vec(),
+                                    since: Instant::now(),
+                                };
+                                return Fate::Keep;
+                            }
+                            Err(fate) => return fate,
                         }
-                        c.st = HttpState::Body { remaining };
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {
                         c.st = HttpState::Body { remaining };
@@ -1044,13 +1304,28 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -
                     }
                 }
             }
+            HttpState::Blocked {
+                remaining,
+                carry,
+                since,
+            } => {
+                // Parked connections are excluded from the poll set;
+                // the resume sweep (not the poll path) drives them.
+                c.st = HttpState::Blocked {
+                    remaining,
+                    carry,
+                    since,
+                };
+                return Fate::Keep;
+            }
             HttpState::Drain {
                 mut remaining,
                 class,
                 error,
             } => {
                 if remaining == 0 {
-                    c.file = None;
+                    c.out = None;
+                    c.pending = None;
                     c.spec = None;
                     c.st = HttpState::Idle;
                     return Fate::FailKeep(class, error);
@@ -1059,7 +1334,10 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], recorder: &ThroughputRecorder) -
                 match c.stream.read(&mut scratch[..want]) {
                     Ok(0) => return Fate::FailClose(class, error),
                     Ok(n) => {
-                        c.window_bytes += n as u64;
+                        // Deliberately *not* counted toward the
+                        // progress window: a server dribbling an error
+                        // body must still trip the ProgressPolicy
+                        // deadline instead of pinning the slot.
                         remaining -= n as u64;
                         c.st = HttpState::Drain {
                             remaining,
@@ -1143,5 +1421,80 @@ mod tests {
         let k2 = k.clone();
         k2.kill();
         assert!(k.is_killed());
+    }
+
+    #[test]
+    fn decimal_formatting_matches_display() {
+        for v in [0u64, 7, 10, 80, 65535, 123_456_789, u64::MAX] {
+            let mut buf = Vec::new();
+            write_decimal(&mut buf, v);
+            assert_eq!(buf, v.to_string().into_bytes());
+        }
+    }
+
+    #[test]
+    fn drain_reads_do_not_count_as_progress() {
+        // A dribbling error body must not feed the progress window —
+        // otherwise a slow Drain pins the slot past every deadline.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+
+        let (_cmd_tx, cmd_rx) = channel::<Cmd>();
+        let (events_tx, _events_rx) = channel::<TransportEvent>();
+        let mut joins = Vec::new();
+        let sink = Sink::spawn(
+            SinkConfig {
+                threads: 0,
+                ..SinkConfig::default()
+            },
+            events_tx.clone(),
+            Arc::new(ThroughputRecorder::new()),
+            KillSwitch::default(),
+            &mut joins,
+        )
+        .unwrap();
+        let ctx = ReactorCtx {
+            cmd_rx,
+            connector_tx: Vec::new(),
+            events_tx,
+            kill: KillSwitch::default(),
+            gens: Arc::new(Vec::new()),
+            mirror_open: Arc::new(vec![AtomicUsize::new(0)]),
+            recorder: Arc::new(ThroughputRecorder::new()),
+            progress: ProgressPolicy {
+                window_s: 30.0,
+                min_bytes: 1,
+            },
+            sink: Arc::new(sink),
+        };
+        let mut c = Conn {
+            stream,
+            host: "127.0.0.1".into(),
+            port: addr.port(),
+            st: HttpState::Drain {
+                remaining: 1 << 20,
+                class: FailureClass::Reject,
+                error: "HTTP 503".into(),
+            },
+            spec: None,
+            out: None,
+            write_off: 0,
+            pending: None,
+            sink_gen: 0,
+            req_buf: Vec::new(),
+            window_start: Instant::now(),
+            window_bytes: 0,
+        };
+        peer.write_all(&[0u8; 4096]).unwrap();
+        peer.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let mut scratch = vec![0u8; SCRATCH_BYTES];
+        let fate = drive_conn(&mut c, &mut scratch, &ctx);
+        assert!(matches!(fate, Fate::Keep));
+        assert!(matches!(c.st, HttpState::Drain { .. }));
+        assert_eq!(c.window_bytes, 0, "drain bytes must not count as progress");
     }
 }

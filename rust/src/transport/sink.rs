@@ -1,0 +1,598 @@
+//! Write-behind disk sink: the reactor's asynchronous byte-landing
+//! stage.
+//!
+//! Before this module existed, every payload read on a reactor thread
+//! was followed by a blocking `write_all` into the output file, and
+//! every chunk re-opened and re-seeked that file — one slow disk write
+//! stalled every connection multiplexed on the reactor, exactly in the
+//! high-speed regime the adaptive controller is supposed to exploit.
+//! The sink decouples the two halves of the pipeline:
+//!
+//! * **Pooled buffers, no allocation on the poll loop** — reactor
+//!   threads copy socket payloads into recycled [`SINK_BUF_BYTES`]
+//!   buffers from a bounded [`BufferPool`] and hand them off; a
+//!   [`PooledBuf`] returns itself to the pool on drop, so every
+//!   teardown path recycles.
+//! * **Dedicated writer threads, positional writes** — a small pool of
+//!   `dl-sink-N` threads drains [`WriteJob`]s with
+//!   `FileExt::write_all_at` against per-file handles opened **once
+//!   per session** ([`SinkFile`]), killing the old per-chunk
+//!   open/seek/close triple. No disk syscall ever runs on a reactor
+//!   thread (unless `threads == 0` selects the inline legacy mode).
+//! * **Adjacent-range coalescing** — each drained batch is sorted by
+//!   `(file, offset)` and contiguous runs are merged into one
+//!   positional write (up to [`SinkConfig::coalesce_bytes`]), so many
+//!   small adaptive chunks become few large sequential writes.
+//! * **Explicit backpressure** — the pool *is* the queue bound: when no
+//!   buffer is free the reactor parks the connection in its `Blocked`
+//!   state instead of ballooning memory, and resumes when the writers
+//!   recycle buffers. [`SinkStats`] tracks the queue-depth high-water
+//!   mark and the total parked time.
+//! * **Durability-ordered acks** — a chunk's `Completed` event is sent
+//!   by the writer only after the chunk's **final** job (`last ==
+//!   true`) hits the page cache, and its bytes are credited to the
+//!   shared [`ThroughputRecorder`] write-side, so engine byte
+//!   accounting sees exactly what the disk holds. Write errors
+//!   (ENOSPC, permissions) surface as [`FailureClass::Fatal`] and
+//!   poison the chunk's remaining queued jobs so at most one terminal
+//!   event per chunk generation ever reaches the engine.
+
+use std::collections::HashSet;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SendError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::DownloadConfig;
+use crate::metrics::gauge::PeakGauge;
+use crate::metrics::recorder::ThroughputRecorder;
+use crate::session::engine::{FailureClass, TransportEvent, TransportIoStats};
+use crate::transport::reactor::KillSwitch;
+use crate::{Error, Result};
+
+/// Size of one pooled payload buffer. Matches the reactor's scratch
+/// size so a full socket read always fits in one buffer.
+pub const SINK_BUF_BYTES: usize = 256 * 1024;
+
+/// Most jobs a writer drains per wakeup (bounds the coalescing sort).
+const MAX_BATCH_JOBS: usize = 64;
+
+/// Writer-pool tuning, resolved from [`DownloadConfig`] (or built by
+/// hand in tests).
+#[derive(Clone, Copy, Debug)]
+pub struct SinkConfig {
+    /// Dedicated writer threads. `0` selects the inline legacy mode:
+    /// the reactor writes synchronously through [`Sink::write_inline`]
+    /// (kept selectable as the measured pre-sink reference path).
+    pub threads: usize,
+    /// Total pooled-buffer budget in bytes — the bound on sink memory
+    /// and therefore the backpressure threshold (floored at four
+    /// buffers).
+    pub queue_bytes: usize,
+    /// Maximum bytes merged into one positional write.
+    pub coalesce_bytes: usize,
+    /// Artificial per-write latency — the slow-disk test shim used by
+    /// the backpressure and goodput suites. Zero (the default and the
+    /// only value reachable from user config) is free.
+    pub write_latency: Duration,
+}
+
+impl Default for SinkConfig {
+    fn default() -> SinkConfig {
+        SinkConfig {
+            threads: 2,
+            queue_bytes: 64 * 1024 * 1024,
+            coalesce_bytes: 1024 * 1024,
+            write_latency: Duration::ZERO,
+        }
+    }
+}
+
+impl SinkConfig {
+    /// Resolve the user-facing knobs (`sink_threads`, `sink_queue_mb`,
+    /// `coalesce_kb`).
+    pub fn from_download(cfg: &DownloadConfig) -> SinkConfig {
+        SinkConfig {
+            threads: cfg.sink_threads,
+            queue_bytes: cfg.sink_queue_mb * 1024 * 1024,
+            coalesce_bytes: cfg.coalesce_kb * 1024,
+            write_latency: Duration::ZERO,
+        }
+    }
+}
+
+/// A per-session output handle: the file opened (and pre-sized) once
+/// by the session driver, shared by every chunk written into it.
+#[derive(Clone)]
+pub struct SinkFile {
+    /// Shared handle; all writes are positional, so no seeking and no
+    /// coordination between writers.
+    pub file: Arc<File>,
+    /// Destination path (error messages only).
+    pub path: Arc<PathBuf>,
+}
+
+/// A recycled payload buffer checked out of the [`BufferPool`].
+/// Returns its storage to the pool on drop — covering ack, error, and
+/// teardown paths alike.
+pub struct PooledBuf {
+    pool: Arc<Mutex<Vec<Vec<u8>>>>,
+    buf: Vec<u8>,
+}
+
+impl PooledBuf {
+    /// Copy as much of `data` as fits; returns the number of bytes
+    /// taken (never reallocates).
+    pub fn push(&mut self, data: &[u8]) -> usize {
+        let room = self.buf.capacity() - self.buf.len();
+        let n = room.min(data.len());
+        self.buf.extend_from_slice(&data[..n]);
+        n
+    }
+
+    /// Buffer is at capacity.
+    pub fn is_full(&self) -> bool {
+        self.buf.len() >= self.buf.capacity()
+    }
+
+    /// Bytes currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// No bytes held.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The held bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        let mut buf = std::mem::take(&mut self.buf);
+        buf.clear();
+        if let Ok(mut free) = self.pool.lock() {
+            free.push(buf);
+        }
+    }
+}
+
+/// Fixed set of [`SINK_BUF_BYTES`] buffers. Exhaustion is the
+/// backpressure signal: [`BufferPool::try_acquire`] never blocks and
+/// never allocates past the budget.
+#[derive(Clone)]
+pub struct BufferPool {
+    free: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl BufferPool {
+    /// A pool holding `total_bytes / SINK_BUF_BYTES` buffers (at least
+    /// four, so tiny budgets still make progress).
+    pub fn new(total_bytes: usize) -> BufferPool {
+        let count = (total_bytes / SINK_BUF_BYTES).max(4);
+        let free = (0..count)
+            .map(|_| Vec::with_capacity(SINK_BUF_BYTES))
+            .collect();
+        BufferPool {
+            free: Arc::new(Mutex::new(free)),
+        }
+    }
+
+    /// Check a buffer out, or `None` when the pool is dry.
+    pub fn try_acquire(&self) -> Option<PooledBuf> {
+        let buf = self.free.lock().ok()?.pop()?;
+        Some(PooledBuf {
+            pool: self.free.clone(),
+            buf,
+        })
+    }
+}
+
+/// One handed-off write: a pooled buffer bound for `file[offset..]`.
+pub struct WriteJob {
+    /// Engine worker slot (routes the job and keys terminal events).
+    pub slot: usize,
+    /// Chunk generation (distinguishes stale jobs of a failed fetch
+    /// from the slot's current chunk).
+    pub gen: u64,
+    /// Destination handle.
+    pub file: SinkFile,
+    /// Absolute file offset of the buffer's first byte.
+    pub offset: u64,
+    /// The payload.
+    pub buf: PooledBuf,
+    /// Final job of its chunk: the writer acks `Completed` after it
+    /// lands.
+    pub last: bool,
+}
+
+/// Shared sink counters (all wait-free).
+#[derive(Debug, Default)]
+pub struct SinkStats {
+    /// Positional writes issued (one per coalesced run).
+    pub write_syscalls: AtomicU64,
+    /// Total nanoseconds connections spent parked on backpressure.
+    pub stall_ns: AtomicU64,
+    /// Bytes queued in the sink right now / at peak.
+    pub queued: PeakGauge,
+}
+
+/// The writer pool plus its buffer pool — one per [`super::reactor::Reactor`].
+pub struct Sink {
+    txs: Vec<Sender<WriteJob>>,
+    pool: BufferPool,
+    stats: Arc<SinkStats>,
+    next_gen: AtomicU64,
+    write_latency: Duration,
+}
+
+struct WriterCtx {
+    job_rx: Receiver<WriteJob>,
+    events_tx: Sender<TransportEvent>,
+    recorder: Arc<ThroughputRecorder>,
+    stats: Arc<SinkStats>,
+    kill: KillSwitch,
+    coalesce_bytes: usize,
+    write_latency: Duration,
+}
+
+impl Sink {
+    /// Spawn `cfg.threads` writer threads (`dl-sink-N`), appending
+    /// their join handles to `joins` — the reactor owns thread
+    /// lifetime and joins them on shutdown. With `threads == 0` no
+    /// thread spawns and the reactor must use [`Sink::write_inline`].
+    pub fn spawn(
+        cfg: SinkConfig,
+        events_tx: Sender<TransportEvent>,
+        recorder: Arc<ThroughputRecorder>,
+        kill: KillSwitch,
+        joins: &mut Vec<std::thread::JoinHandle<()>>,
+    ) -> Result<Sink> {
+        let stats: Arc<SinkStats> = Arc::default();
+        let pool = BufferPool::new(cfg.queue_bytes);
+        let mut txs = Vec::with_capacity(cfg.threads);
+        for i in 0..cfg.threads {
+            let (tx, rx) = channel::<WriteJob>();
+            txs.push(tx);
+            let ctx = WriterCtx {
+                job_rx: rx,
+                events_tx: events_tx.clone(),
+                recorder: recorder.clone(),
+                stats: stats.clone(),
+                kill: kill.clone(),
+                coalesce_bytes: cfg.coalesce_bytes,
+                write_latency: cfg.write_latency,
+            };
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("dl-sink-{i}"))
+                    .spawn(move || writer_loop(ctx))
+                    .map_err(|e| Error::Session(format!("spawn sink writer {i}: {e}")))?,
+            );
+        }
+        Ok(Sink {
+            txs,
+            pool,
+            stats,
+            next_gen: AtomicU64::new(0),
+            write_latency: cfg.write_latency,
+        })
+    }
+
+    /// Whether writes happen inline on the reactor (`threads == 0`).
+    pub fn is_inline(&self) -> bool {
+        self.txs.is_empty()
+    }
+
+    /// A fresh chunk generation (assigned per armed fetch).
+    pub fn next_gen(&self) -> u64 {
+        self.next_gen.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Check a payload buffer out of the pool. `None` is the
+    /// backpressure signal: park the connection, retry after the
+    /// writers recycle.
+    pub fn try_buffer(&self) -> Option<PooledBuf> {
+        self.pool.try_acquire()
+    }
+
+    /// Queue a job on a writer. Jobs route by slot, so one chunk's
+    /// jobs stay ordered on one writer.
+    pub fn submit(&self, job: WriteJob) {
+        self.stats.queued.add(job.buf.len() as u64);
+        let dest = job.slot % self.txs.len();
+        if let Err(SendError(job)) = self.txs[dest].send(job) {
+            // Writer already gone (teardown): keep the gauge honest;
+            // the buffer recycles on drop and the engine sees the dead
+            // event channel.
+            self.stats.queued.sub(job.buf.len() as u64);
+        }
+    }
+
+    /// Inline legacy path (`threads == 0`): synchronous positional
+    /// write on the calling reactor thread — the measured pre-sink
+    /// reference the perf suites compare against.
+    pub fn write_inline(&self, file: &SinkFile, data: &[u8], offset: u64) -> std::io::Result<()> {
+        if !self.write_latency.is_zero() {
+            std::thread::sleep(self.write_latency);
+        }
+        self.stats.write_syscalls.fetch_add(1, Ordering::SeqCst);
+        file.file.write_all_at(data, offset)
+    }
+
+    /// Record time a connection spent parked on backpressure.
+    pub fn note_stall(&self, parked: Duration) {
+        self.stats
+            .stall_ns
+            .fetch_add(parked.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    /// Snapshot of the disk-path counters.
+    pub fn io_stats(&self) -> TransportIoStats {
+        TransportIoStats {
+            write_syscalls: self.stats.write_syscalls.load(Ordering::SeqCst),
+            sink_queue_peak: self.stats.queued.peak(),
+            reactor_stall_ns: self.stats.stall_ns.load(Ordering::SeqCst),
+        }
+    }
+}
+
+fn writer_loop(ctx: WriterCtx) {
+    let mut batch: Vec<WriteJob> = Vec::with_capacity(MAX_BATCH_JOBS);
+    let mut merged: Vec<u8> = Vec::with_capacity(ctx.coalesce_bytes);
+    let mut poisoned: HashSet<(usize, u64)> = HashSet::new();
+    loop {
+        if ctx.kill.is_killed() {
+            return;
+        }
+        match ctx.job_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(j) => batch.push(j),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        while batch.len() < MAX_BATCH_JOBS {
+            match ctx.job_rx.try_recv() {
+                Ok(j) => batch.push(j),
+                Err(_) => break,
+            }
+        }
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        batch.clear(); // drops the jobs → buffers recycle into the pool
+    }
+}
+
+/// Drain one batch: sort by `(file, offset)`, merge contiguous runs
+/// into single positional writes, credit + ack per job, poison chunks
+/// whose write failed.
+fn process_batch(
+    ctx: &WriterCtx,
+    batch: &mut Vec<WriteJob>,
+    merged: &mut Vec<u8>,
+    poisoned: &mut HashSet<(usize, u64)>,
+) {
+    let queued: u64 = batch.iter().map(|j| j.buf.len() as u64).sum();
+    batch.retain(|j| !poisoned.contains(&(j.slot, j.gen)));
+    batch.sort_by_key(|j| (Arc::as_ptr(&j.file.file) as usize, j.offset));
+    let mut i = 0;
+    while i < batch.len() {
+        let n = run_len(batch, i, ctx.coalesce_bytes);
+        flush_run(ctx, merged, &batch[i..i + n], poisoned);
+        i += n;
+    }
+    ctx.stats.queued.sub(queued);
+}
+
+/// Length of the contiguous run starting at `start`: same file,
+/// back-to-back offsets, merged size within the coalescing cap.
+fn run_len(batch: &[WriteJob], start: usize, coalesce_bytes: usize) -> usize {
+    let head = &batch[start];
+    let mut bytes = head.buf.len();
+    let mut n = 1;
+    while start + n < batch.len() {
+        let j = &batch[start + n];
+        if !Arc::ptr_eq(&j.file.file, &head.file.file)
+            || j.offset != head.offset + bytes as u64
+            || bytes + j.buf.len() > coalesce_bytes
+        {
+            break;
+        }
+        bytes += j.buf.len();
+        n += 1;
+    }
+    n
+}
+
+/// One coalesced positional write plus its per-job accounting.
+fn flush_run(
+    ctx: &WriterCtx,
+    merged: &mut Vec<u8>,
+    run: &[WriteJob],
+    poisoned: &mut HashSet<(usize, u64)>,
+) {
+    let head = &run[0];
+    if !ctx.write_latency.is_zero() {
+        std::thread::sleep(ctx.write_latency);
+    }
+    ctx.stats.write_syscalls.fetch_add(1, Ordering::SeqCst);
+    let result = if run.len() == 1 {
+        head.file.file.write_all_at(head.buf.as_slice(), head.offset)
+    } else {
+        merged.clear();
+        for j in run {
+            merged.extend_from_slice(j.buf.as_slice());
+        }
+        head.file.file.write_all_at(merged, head.offset)
+    };
+    match result {
+        Ok(()) => {
+            let total: u64 = run.iter().map(|j| j.buf.len() as u64).sum();
+            ctx.recorder.add_bytes(total);
+            for j in run {
+                if j.last {
+                    let _ = ctx
+                        .events_tx
+                        .send(TransportEvent::Completed { slot: j.slot });
+                }
+            }
+        }
+        Err(e) => {
+            // The whole run failed: fail every chunk it carried bytes
+            // for, once each, and drop that chunk's still-queued jobs.
+            for j in run {
+                if poisoned.insert((j.slot, j.gen)) {
+                    let _ = ctx.events_tx.send(TransportEvent::Failed {
+                        slot: j.slot,
+                        class: FailureClass::Fatal,
+                        error: format!("write {}: {e}", j.file.path.display()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fastbiodl-sink-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn writer_ctx(latency: Duration) -> (WriterCtx, Receiver<TransportEvent>) {
+        let (_job_tx, job_rx) = channel::<WriteJob>();
+        let (events_tx, events_rx) = channel::<TransportEvent>();
+        let ctx = WriterCtx {
+            job_rx,
+            events_tx,
+            recorder: Arc::new(ThroughputRecorder::new()),
+            stats: Arc::default(),
+            kill: KillSwitch::default(),
+            coalesce_bytes: 1024 * 1024,
+            write_latency: latency,
+        };
+        (ctx, events_rx)
+    }
+
+    fn job(
+        pool: &BufferPool,
+        file: &SinkFile,
+        slot: usize,
+        gen: u64,
+        offset: u64,
+        data: &[u8],
+        last: bool,
+    ) -> WriteJob {
+        let mut buf = pool.try_acquire().expect("pool dry in test");
+        assert_eq!(buf.push(data), data.len());
+        WriteJob {
+            slot,
+            gen,
+            file: file.clone(),
+            offset,
+            buf,
+            last,
+        }
+    }
+
+    #[test]
+    fn pool_bounds_and_recycles_buffers() {
+        let pool = BufferPool::new(2 * SINK_BUF_BYTES); // floored at 4
+        let held: Vec<PooledBuf> = (0..4).map(|_| pool.try_acquire().unwrap()).collect();
+        assert!(pool.try_acquire().is_none(), "budget must be hard");
+        drop(held);
+        assert!(pool.try_acquire().is_some(), "drop must recycle");
+    }
+
+    #[test]
+    fn adjacent_jobs_coalesce_into_one_write() {
+        let path = tmp("coalesce.bin");
+        let file = SinkFile {
+            file: Arc::new(File::create(&path).unwrap()),
+            path: Arc::new(path.clone()),
+        };
+        let pool = BufferPool::new(0);
+        let (ctx, events_rx) = writer_ctx(Duration::ZERO);
+        let mut batch = vec![
+            job(&pool, &file, 3, 7, 0, b"aaaa", false),
+            job(&pool, &file, 3, 7, 4, b"bbbb", false),
+            job(&pool, &file, 3, 7, 8, b"cc", true),
+        ];
+        let mut merged = Vec::new();
+        let mut poisoned = HashSet::new();
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        assert_eq!(ctx.stats.write_syscalls.load(Ordering::SeqCst), 1);
+        assert_eq!(std::fs::read(&path).unwrap(), b"aaaabbbbcc");
+        match events_rx.try_recv().unwrap() {
+            TransportEvent::Completed { slot } => assert_eq!(slot, 3),
+            other => panic!("expected Completed, got {other:?}"),
+        }
+        assert!(events_rx.try_recv().is_err(), "exactly one ack per chunk");
+    }
+
+    #[test]
+    fn gapped_offsets_split_the_run() {
+        let path = tmp("gap.bin");
+        let file = SinkFile {
+            file: Arc::new(File::create(&path).unwrap()),
+            path: Arc::new(path.clone()),
+        };
+        let pool = BufferPool::new(0);
+        let (ctx, _events_rx) = writer_ctx(Duration::ZERO);
+        let mut batch = vec![
+            job(&pool, &file, 0, 1, 0, b"xx", true),
+            job(&pool, &file, 1, 2, 6, b"yy", true),
+        ];
+        let mut merged = Vec::new();
+        let mut poisoned = HashSet::new();
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        assert_eq!(ctx.stats.write_syscalls.load(Ordering::SeqCst), 2);
+        let got = std::fs::read(&path).unwrap();
+        assert_eq!(&got[0..2], b"xx");
+        assert_eq!(&got[6..8], b"yy");
+    }
+
+    #[test]
+    fn write_failure_is_fatal_and_poisons_the_chunk() {
+        // A read-only handle makes every positional write fail the way
+        // a full or read-only filesystem would.
+        let path = tmp("readonly.bin");
+        std::fs::write(&path, b"seed").unwrap();
+        let file = SinkFile {
+            file: Arc::new(File::open(&path).unwrap()),
+            path: Arc::new(path.clone()),
+        };
+        let pool = BufferPool::new(0);
+        let (ctx, events_rx) = writer_ctx(Duration::ZERO);
+        let mut merged = Vec::new();
+        let mut poisoned = HashSet::new();
+        let mut batch = vec![job(&pool, &file, 5, 9, 0, b"zz", false)];
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        match events_rx.try_recv().unwrap() {
+            TransportEvent::Failed { slot, class, error } => {
+                assert_eq!(slot, 5);
+                assert_eq!(class, FailureClass::Fatal);
+                assert!(error.contains("write"), "got {error:?}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // The chunk's later jobs (same slot+gen) are dropped silently:
+        // no second terminal event, no Completed from the last job.
+        let mut batch = vec![job(&pool, &file, 5, 9, 2, b"zz", true)];
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        assert!(events_rx.try_recv().is_err());
+        assert_eq!(ctx.stats.write_syscalls.load(Ordering::SeqCst), 1);
+        // A fresh generation on the same slot writes normally again.
+        assert!(poisoned.contains(&(5, 9)));
+    }
+}

@@ -89,6 +89,7 @@ fn refresh_committed_smoke_baseline() {
         case.ns_per_tick = 0.0;
         case.ticks_per_sec = 0.0;
         case.allocs_per_tick = 0.0;
+        case.reactor_stall_ns = 0.0;
     }
     let mut text = report.to_json().to_string_compact();
     text.push('\n');

@@ -1,13 +1,26 @@
 //! Shared fixtures for the fault/recovery integration suites
 //! (`prop_faults.rs`, `fault_matrix.rs`): one small hostile-network
-//! topology, runtime-free download configs, and synthetic workloads.
+//! topology, runtime-free download configs, and synthetic workloads —
+//! plus a manual real-transport driver for the sink-pipeline suites
+//! (`reactor_transport.rs`, `engine_tick.rs`) that need a hand-built
+//! [`SinkConfig`].
 
 #![allow(dead_code)]
 
+use std::sync::Arc;
+
+use fastbiodl::accession::resolver::ResolutionCost;
 use fastbiodl::accession::RunRecord;
 use fastbiodl::config::{DownloadConfig, OptimizerKind};
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::metrics::recorder::ThroughputRecorder;
 use fastbiodl::netsim::engine::BackgroundConfig;
 use fastbiodl::netsim::{ClientProfile, FaultSchedule, NetSimConfig, ServerProfile};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::engine::{run_session_with_stats, EngineParams, ToolBehavior};
+use fastbiodl::session::real::{RealTransport, Sink, WallClock};
+use fastbiodl::session::{EngineStats, SessionReport};
+use fastbiodl::transport::{ProgressPolicy, SinkConfig, SinkFile};
 
 /// Bottleneck of the shared test topology (Mbps).
 pub const LINK_MBPS: f64 = 50.0;
@@ -80,4 +93,85 @@ pub fn fault_download_cfg(kind: OptimizerKind, timeout_s: f64) -> DownloadConfig
         cfg.optimizer.c_init = 3;
     }
     cfg
+}
+
+/// Open + pre-size one output handle per record under `dir`, exactly
+/// the way `run_real_session` does before installing them on the
+/// transport.
+pub fn open_output_handles(dir: &std::path::Path, records: &[RunRecord]) -> Vec<SinkFile> {
+    std::fs::create_dir_all(dir).unwrap();
+    records
+        .iter()
+        .map(|r| {
+            let path = dir.join(&r.accession);
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .truncate(false)
+                .write(true)
+                .open(&path)
+                .unwrap();
+            f.set_len(r.bytes).unwrap();
+            SinkFile {
+                file: Arc::new(f),
+                path: Arc::new(path),
+            }
+        })
+        .collect()
+}
+
+/// Drive a real-socket engine session through a manually spawned
+/// transport with a hand-built [`SinkConfig`] (the public driver never
+/// injects write latency), returning the engine's I/O counters
+/// alongside the report. `handles` overrides the preopened output
+/// files — write-fault suites swap in sabotaged ones; `None` opens
+/// them normally under `dir`.
+pub fn run_real_with_sink_cfg(
+    cfg: DownloadConfig,
+    records: Vec<RunRecord>,
+    dir: &std::path::Path,
+    sink_cfg: SinkConfig,
+    handles: Option<Vec<SinkFile>>,
+) -> fastbiodl::Result<(SessionReport, EngineStats)> {
+    let handles = handles.unwrap_or_else(|| open_output_handles(dir, &records));
+    let recorder = Arc::new(ThroughputRecorder::new());
+    let mut transport = RealTransport::spawn(
+        cfg.optimizer.c_max,
+        Sink::Directory(dir.to_str().unwrap().into()),
+        0,
+        1,
+        recorder.clone(),
+        ProgressPolicy {
+            window_s: cfg.progress_window_s,
+            min_bytes: cfg.progress_min_bytes,
+        },
+        sink_cfg,
+    )?;
+    transport.set_output_handles(handles);
+    let behavior = ToolBehavior {
+        name: "manual-sink".into(),
+        mode: SchedulerMode::Chunked {
+            chunk_bytes: cfg.chunk_bytes,
+            max_open_files: cfg.max_open_files,
+        },
+        keep_alive: true,
+        resolution: ResolutionCost::Batch { latency_s: 0.0 },
+    };
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let clock = WallClock::start();
+    run_session_with_stats(
+        EngineParams {
+            download: cfg,
+            behavior,
+            records,
+            controller,
+            runtime: None,
+            recorder,
+            done_prefix: None,
+            checkpoint_after_s: None,
+            journal_dir: None,
+            give_up_after: 6,
+        },
+        &mut transport,
+        &clock,
+    )
 }

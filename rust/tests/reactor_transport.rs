@@ -1,14 +1,20 @@
 //! Regression suite for the event-driven reactor transport: stream
 //! scale past the old 512-thread cap, dead-event-loop teardown,
 //! dribble stalls against the progress deadline, disk-over-journal
-//! resume hygiene, and the strict socket-level per-mirror cap.
+//! resume hygiene, the strict socket-level per-mirror cap, and the
+//! write-behind sink pipeline (inline/sink equivalence, write-fault
+//! classification, bounded backpressure memory, and the
+//! fast-net/slow-disk goodput win).
 //!
 //! Everything here is runtime-free (Fixed controller) so it runs in
 //! environments without compiled XLA artifacts.
 
-use std::sync::Arc;
-use std::time::Duration;
+mod common;
 
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::run_real_with_sink_cfg;
 use fastbiodl::accession::resolver::ResolutionCost;
 use fastbiodl::accession::RunRecord;
 use fastbiodl::config::{DownloadConfig, OptimizerKind};
@@ -21,7 +27,10 @@ use fastbiodl::session::real::{
     run_real_session, RealSessionParams, RealTransport, Sink, WallClock,
 };
 use fastbiodl::transport::http_server::{fill_payload, ServedFile, ThrottledHttpServer};
-use fastbiodl::transport::{ProgressPolicy, ServerFaultWindow, ThrottleConfig};
+use fastbiodl::transport::sink::SINK_BUF_BYTES;
+use fastbiodl::transport::{
+    ProgressPolicy, ServerFaultWindow, SinkConfig, SinkFile, ThrottleConfig,
+};
 
 /// Base config shared by the runtime-free tests: fixed controller,
 /// fast monitor, generous timeout.
@@ -181,6 +190,7 @@ fn dead_reactor_pool_fails_the_session_instead_of_hanging() {
             window_s: 0.0,
             min_bytes: 0,
         },
+        SinkConfig::default(),
     )
     .unwrap();
     let kill = transport.kill_switch();
@@ -441,5 +451,262 @@ fn per_mirror_cap_is_enforced_at_socket_level() {
         report.mirror_bytes.iter().all(|&m| m > 0),
         "the cap should force both mirrors into use: {:?}",
         report.mirror_bytes
+    );
+}
+
+#[test]
+fn sink_and_inline_paths_are_byte_identical() {
+    // Sink acceptance (equivalence half): on a benign run the
+    // write-behind sink must produce byte-identical output files and
+    // identical engine byte accounting to the pre-sink inline path
+    // (`sink_threads = 0`), through the public driver both times.
+    let files = vec![
+        ServedFile {
+            path: "/vol1/SRREQA".into(),
+            bytes: 3_000_000,
+            seed: 61,
+        },
+        ServedFile {
+            path: "/vol1/SRREQB".into(),
+            bytes: 2_500_000,
+            seed: 62,
+        },
+    ];
+    let server = ThrottledHttpServer::start(files.clone(), ThrottleConfig::default()).unwrap();
+    let base = server.base_url();
+    let records: Vec<RunRecord> = files
+        .iter()
+        .map(|f| {
+            let acc = f.path.rsplit('/').next().unwrap().to_string();
+            RunRecord::new(acc, "TEST", f.bytes, format!("{base}{}", f.path))
+        })
+        .collect();
+
+    let run = |sink_threads: usize, tag: &str| {
+        let dir =
+            std::env::temp_dir().join(format!("fastbiodl-equiv-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = fixed_cfg(4, 8, 512 * 1024);
+        cfg.sink_threads = sink_threads;
+        let controller = build_controller(&cfg.optimizer, None).unwrap();
+        let report = run_real_session(RealSessionParams {
+            download: cfg,
+            records: records.clone(),
+            controller,
+            runtime: None,
+            sink: Sink::Directory(dir.to_str().unwrap().into()),
+            name: format!("equiv-{tag}"),
+        })
+        .unwrap();
+        (dir, report)
+    };
+    let (sink_dir, sink_report) = run(2, "sink");
+    let (inline_dir, inline_report) = run(0, "inline");
+
+    assert!(sink_report.completed && inline_report.completed);
+    assert_eq!(sink_report.total_bytes, inline_report.total_bytes);
+    assert_eq!(sink_report.files_completed, inline_report.files_completed);
+    for (f, r) in files.iter().zip(records.iter()) {
+        let a = std::fs::read(sink_dir.join(&r.accession)).unwrap();
+        let b = std::fs::read(inline_dir.join(&r.accession)).unwrap();
+        assert_eq!(a, b, "{}: sink and inline outputs differ", r.accession);
+        let mut expect = vec![0u8; r.bytes as usize];
+        fill_payload(f.seed, 0, &mut expect);
+        assert_eq!(a, expect, "{}: content mismatch", r.accession);
+    }
+    std::fs::remove_dir_all(&sink_dir).unwrap();
+    std::fs::remove_dir_all(&inline_dir).unwrap();
+}
+
+#[test]
+fn write_faults_surface_as_fatal_and_abort_cleanly() {
+    // Satellite (write faults): a failing output file — read-only here,
+    // standing in for ENOSPC / EROFS — must fail the session as a
+    // Fatal error carrying the write diagnostics, promptly, on both
+    // the sink path and the inline legacy path.
+    for sink_threads in [2usize, 0] {
+        let file = ServedFile {
+            path: "/vol1/SRRDISK".into(),
+            bytes: 4_000_000,
+            seed: 17,
+        };
+        let server =
+            ThrottledHttpServer::start(vec![file.clone()], ThrottleConfig::default()).unwrap();
+        let records = vec![RunRecord::new(
+            "SRRDISK",
+            "TEST",
+            file.bytes,
+            format!("{}{}", server.base_url(), file.path),
+        )];
+        let dir = std::env::temp_dir().join(format!(
+            "fastbiodl-wfault{sink_threads}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SRRDISK");
+        std::fs::write(&path, b"").unwrap();
+        // A read-only handle makes every positional write fail the way
+        // a full or read-only filesystem would.
+        let sabotaged = vec![SinkFile {
+            file: Arc::new(std::fs::File::open(&path).unwrap()),
+            path: Arc::new(path),
+        }];
+
+        let mut cfg = fixed_cfg(2, 4, 512 * 1024);
+        cfg.timeout_s = 30.0; // a regression should fail fast, not retry forever
+        let started = Instant::now();
+        let err = run_real_with_sink_cfg(
+            cfg,
+            records,
+            &dir,
+            SinkConfig {
+                threads: sink_threads,
+                ..SinkConfig::default()
+            },
+            Some(sabotaged),
+        )
+        .expect_err("a read-only output must fail the session");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("write"),
+            "expected a Fatal write error (sink_threads {sink_threads}), got: {msg}"
+        );
+        assert!(
+            started.elapsed() < Duration::from_secs(20),
+            "write fault did not abort promptly (sink_threads {sink_threads})"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn sink_backpressure_bounds_memory_on_slow_disk() {
+    // Satellite (bounded memory): fast network + slow disk — 25 ms per
+    // write, one writer, the minimum buffer budget — must *park*
+    // connections instead of buffering the file: the queue high-water
+    // mark stays within the four-buffer pool floor, parked time is
+    // actually recorded, and the output is still bit-exact.
+    let file = ServedFile {
+        path: "/vol1/SRRBP".into(),
+        bytes: 8_000_000,
+        seed: 73,
+    };
+    let server = ThrottledHttpServer::start(vec![file.clone()], ThrottleConfig::default()).unwrap();
+    let records = vec![RunRecord::new(
+        "SRRBP",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+    let dir = std::env::temp_dir().join(format!("fastbiodl-backpressure-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let cfg = fixed_cfg(4, 8, 256 * 1024);
+    let (report, stats) = run_real_with_sink_cfg(
+        cfg,
+        records.clone(),
+        &dir,
+        SinkConfig {
+            threads: 1,
+            queue_bytes: SINK_BUF_BYTES, // floors to 4 buffers = 1 MiB
+            coalesce_bytes: 1024 * 1024,
+            write_latency: Duration::from_millis(25),
+        },
+        None,
+    )
+    .unwrap();
+
+    println!(
+        "backpressure run: {} | queue peak {} stall {:.1} ms",
+        report.summary(),
+        stats.sink_queue_peak,
+        stats.reactor_stall_ns as f64 / 1e6
+    );
+    assert!(report.completed);
+    assert_eq!(report.total_bytes, file.bytes);
+    assert!(stats.sink_queue_peak > 0, "nothing ever queued on the sink");
+    assert!(
+        stats.sink_queue_peak <= 4 * SINK_BUF_BYTES as u64,
+        "sink memory ballooned past the pool bound: {} bytes queued",
+        stats.sink_queue_peak
+    );
+    assert!(
+        stats.reactor_stall_ns > 0,
+        "fast-net/slow-disk never parked a connection"
+    );
+    let got = std::fs::read(dir.join("SRRBP")).unwrap();
+    let mut expect = vec![0u8; file.bytes as usize];
+    fill_payload(73, 0, &mut expect);
+    assert_eq!(got, expect, "content mismatch under backpressure");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sink_beats_inline_wall_clock_on_slow_disk() {
+    // Sink acceptance (perf half): with a 5 ms write-latency shim, the
+    // write-behind sink must beat the inline legacy path on wall-clock
+    // goodput — inline serializes every write onto the reactor threads
+    // (one slow write stalls every connection they multiplex); the
+    // sink overlaps writes with the network and coalesces adjacent
+    // chunks. Minimum of three runs per mode so scheduler noise on
+    // loaded CI runners hits both sides equally.
+    let files = vec![
+        ServedFile {
+            path: "/vol1/SRRGPA".into(),
+            bytes: 8_000_000,
+            seed: 81,
+        },
+        ServedFile {
+            path: "/vol1/SRRGPB".into(),
+            bytes: 8_000_000,
+            seed: 82,
+        },
+    ];
+    let server = ThrottledHttpServer::start(files.clone(), ThrottleConfig::default()).unwrap();
+    let base = server.base_url();
+    let records: Vec<RunRecord> = files
+        .iter()
+        .map(|f| {
+            let acc = f.path.rsplit('/').next().unwrap().to_string();
+            RunRecord::new(acc, "TEST", f.bytes, format!("{base}{}", f.path))
+        })
+        .collect();
+
+    let wall = |threads: usize, tag: &str| -> f64 {
+        (0..3)
+            .map(|i| {
+                let dir = std::env::temp_dir().join(format!(
+                    "fastbiodl-goodput-{tag}-{i}-{}",
+                    std::process::id()
+                ));
+                let _ = std::fs::remove_dir_all(&dir);
+                let cfg = fixed_cfg(4, 8, 128 * 1024);
+                let started = Instant::now();
+                let (report, _) = run_real_with_sink_cfg(
+                    cfg,
+                    records.clone(),
+                    &dir,
+                    SinkConfig {
+                        threads,
+                        write_latency: Duration::from_millis(5),
+                        ..SinkConfig::default()
+                    },
+                    None,
+                )
+                .unwrap();
+                let dt = started.elapsed().as_secs_f64();
+                assert!(report.completed);
+                assert_eq!(report.total_bytes, 16_000_000);
+                std::fs::remove_dir_all(&dir).unwrap();
+                dt
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let sink_wall = wall(4, "sink");
+    let inline_wall = wall(0, "inline");
+    println!("goodput wall: sink {sink_wall:.3}s vs inline {inline_wall:.3}s");
+    assert!(
+        sink_wall * 1.2 < inline_wall,
+        "sink should beat inline on fast-net/slow-disk: {sink_wall:.3}s vs {inline_wall:.3}s"
     );
 }
