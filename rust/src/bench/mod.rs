@@ -49,8 +49,10 @@ use crate::{Error, Result};
 /// disk-path fields (`write_syscalls_per_chunk`, `sink_queue_peak`,
 /// `reactor_stall_ns`) to the timing record — zero on the simulated
 /// grid, populated by real-transport runs through the same
-/// `EngineStats` plumbing.
-pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v3";
+/// `EngineStats` plumbing. v4 added the integrity dimension: a
+/// `verify` case flag and the measured `hash_ns_per_mb` timing field
+/// (SHA-256 cost per MiB of payload; 0 on non-verify cases).
+pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v4";
 
 /// Virtual-time cap per case (s): hostile cells (brownouts at
 /// `c_max = 16`) would otherwise run long; every case reports goodput
@@ -107,6 +109,9 @@ pub struct CaseSpec {
     pub optimizer: OptimizerKind,
     /// Worker-pool capacity.
     pub c_max: usize,
+    /// Per-chunk SHA-256 verification on (`--verify`): the case also
+    /// measures raw hashing cost as `hash_ns_per_mb`.
+    pub verify: bool,
 }
 
 /// Short controller tag used in case ids ("gd" | "bayes" | "fixed").
@@ -119,14 +124,17 @@ fn optimizer_tag(kind: OptimizerKind) -> &'static str {
 }
 
 impl CaseSpec {
-    /// Stable identifier used as the baseline-diff key.
+    /// Stable identifier used as the baseline-diff key. Verify cases
+    /// carry a `+verify` suffix so they never collide with (or shadow)
+    /// the plain cell of the same grid coordinates.
     pub fn id(&self) -> String {
         format!(
-            "{}/{}/{}/c{}",
+            "{}/{}/{}/c{}{}",
             self.dataset,
             self.profile.name(),
             optimizer_tag(self.optimizer),
-            self.c_max
+            self.c_max,
+            if self.verify { "+verify" } else { "" }
         )
     }
 }
@@ -143,6 +151,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                         profile,
                         optimizer: OptimizerKind::GradientDescent,
                         c_max,
+                        verify: false,
                     });
                 }
             }
@@ -154,6 +163,17 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                 profile: FaultProfile::None,
                 optimizer: OptimizerKind::GradientDescent,
                 c_max: 1024,
+                verify: false,
+            });
+            // One benign verify cell: per-chunk SHA-256 on, measuring
+            // raw hashing cost (hash_ns_per_mb) and guarding that
+            // verification does not perturb the simulated outcome.
+            cases.push(CaseSpec {
+                dataset: "Amplicon-Digester",
+                profile: FaultProfile::None,
+                optimizer: OptimizerKind::GradientDescent,
+                c_max: 16,
+                verify: true,
             });
         }
         Suite::Full => {
@@ -175,6 +195,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                                 profile,
                                 optimizer,
                                 c_max,
+                                verify: false,
                             });
                         }
                     }
@@ -230,6 +251,11 @@ pub struct CaseResult {
     pub sink_queue_peak: u64,
     /// Nanoseconds connections spent parked on sink backpressure.
     pub reactor_stall_ns: f64,
+    /// Measured SHA-256 cost per MiB of synthetic payload (verify
+    /// cases only; 0 otherwise). This is the raw per-byte price of the
+    /// integrity layer, measured on this machine with the same hasher
+    /// the transports feed.
+    pub hash_ns_per_mb: f64,
 }
 
 /// Gradient-descent hyperparameter overrides for a sweep cell (see
@@ -274,6 +300,7 @@ pub fn run_case_tuned(
         sc.download.optimizer.probe_interval_s = t.probe_interval_s;
     }
     sc.download.reconcile = reconcile;
+    sc.download.integrity.verify = spec.verify;
     if spec.profile != FaultProfile::None {
         sc = sc.with_fault_profile(spec.profile, seed, CASE_HORIZON_S);
     }
@@ -296,6 +323,28 @@ pub fn run_case_tuned(
     let (report, stats) = session.run_with_stats()?;
     let wall_s = t0.elapsed().as_secs_f64();
     let allocs = alloc::thread_allocations().saturating_sub(allocs_before);
+
+    // Verify cases also price the hasher itself: SHA-256 over 1 MiB of
+    // deterministic synthetic payload, best of a few reps. The virtual
+    // clock makes simulated goodput blind to real hashing time, so
+    // this measured figure is the honest per-byte cost the real
+    // transports pay on the writer/reactor threads.
+    let hash_ns_per_mb = if spec.verify {
+        let mut buf = vec![0u8; 1 << 20];
+        crate::transport::http_server::fill_payload(seed, 0, &mut buf);
+        let mut best = f64::INFINITY;
+        let mut fold = 0u8;
+        for _ in 0..4 {
+            let t = Instant::now();
+            let digest = crate::util::sha256::sha256(&buf);
+            best = best.min(t.elapsed().as_nanos() as f64);
+            fold ^= digest[0];
+        }
+        std::hint::black_box(fold);
+        best
+    } else {
+        0.0
+    };
 
     let ticks = stats.ticks.max(1);
     Ok(CaseResult {
@@ -330,6 +379,7 @@ pub fn run_case_tuned(
             / (report.total_bytes / chunk_bytes).max(1) as f64,
         sink_queue_peak: stats.sink_queue_peak,
         reactor_stall_ns: stats.reactor_stall_ns as f64,
+        hash_ns_per_mb,
     })
 }
 
@@ -410,6 +460,7 @@ impl BenchReport {
                             ),
                             ("sink_queue_peak", Json::Num(c.sink_queue_peak as f64)),
                             ("reactor_stall_ns", Json::Num(c.reactor_stall_ns)),
+                            ("hash_ns_per_mb", Json::Num(c.hash_ns_per_mb)),
                         ]),
                     ),
                 ])
@@ -484,6 +535,7 @@ impl BenchReport {
                 write_syscalls_per_chunk: req_f64(timing, "write_syscalls_per_chunk")?,
                 sink_queue_peak: req_u64(timing, "sink_queue_peak")?,
                 reactor_stall_ns: req_f64(timing, "reactor_stall_ns")?,
+                hash_ns_per_mb: req_f64(timing, "hash_ns_per_mb")?,
             });
         }
         Ok(BenchReport {
@@ -674,6 +726,7 @@ pub fn run_sweep_cell(
         profile,
         optimizer: OptimizerKind::GradientDescent,
         c_max: SWEEP_C_MAX,
+        verify: false,
     };
     let result = run_case_tuned(&spec, seed, reconcile, Some(&tune))?;
     Ok(SweepCell {
@@ -780,6 +833,7 @@ mod tests {
                 write_syscalls_per_chunk: 1.25,
                 sink_queue_peak: 524_288,
                 reactor_stall_ns: 1_500.0,
+                hash_ns_per_mb: 0.0,
             }],
         }
     }
@@ -851,8 +905,11 @@ mod tests {
     #[test]
     fn suites_have_the_advertised_shapes() {
         let smoke = suite_cases(Suite::Smoke);
-        assert_eq!(smoke.len(), 5, "4 grid cells + the c_max=1024 cell");
+        assert_eq!(smoke.len(), 6, "4 grid cells + the c_max=1024 cell + the verify cell");
         assert_eq!(smoke[4].c_max, 1024);
+        assert!(smoke[5].verify, "last smoke cell exercises integrity hashing");
+        assert!(smoke[5].id().ends_with("+verify"));
+        assert!(smoke[..5].iter().all(|s| !s.verify));
         let full = suite_cases(Suite::Full);
         assert_eq!(full.len(), 108, "full grid is 3 x 4 x 3 x 3");
         assert!(full.len() >= 30);
@@ -937,6 +994,7 @@ mod tests {
             profile: FaultProfile::SlowMirror,
             optimizer: OptimizerKind::GradientDescent,
             c_max: 16,
+            verify: false,
         };
         let a = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
         let b = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
@@ -951,5 +1009,33 @@ mod tests {
         assert_eq!(a.probes, b.probes);
         assert_eq!(a.ticks, b.ticks, "tick count is part of the replay");
         assert!(a.total_bytes > 0, "case moved no bytes");
+    }
+
+    #[test]
+    fn verify_case_matches_benign_outcome_and_reports_hash_cost() {
+        let plain = CaseSpec {
+            dataset: "Amplicon-Digester",
+            profile: FaultProfile::None,
+            optimizer: OptimizerKind::GradientDescent,
+            c_max: 16,
+            verify: false,
+        };
+        let verified = CaseSpec {
+            verify: true,
+            ..plain
+        };
+        assert!(verified.id().ends_with("+verify"));
+        let a = run_case(&plain, 7, ReconcileMode::Batched).unwrap();
+        let b = run_case(&verified, 7, ReconcileMode::Batched).unwrap();
+        // Hashing must not perturb the simulated run: same bytes, same
+        // schedule, goodput within the 5% noise budget the paper claims.
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.ticks, b.ticks, "verify changed the replay");
+        assert!(b.completed);
+        let delta = (a.goodput_mbps - b.goodput_mbps).abs() / a.goodput_mbps;
+        assert!(delta < 0.05, "verify cost {delta:.3} of goodput");
+        // The real hashing cost is surfaced out-of-band.
+        assert!(b.hash_ns_per_mb > 0.0, "verify case must measure hashing");
+        assert_eq!(a.hash_ns_per_mb, 0.0);
     }
 }

@@ -29,6 +29,10 @@
 //! fault_penalty = 0.0       # weight of the utility fault penalty
 //! adaptive_chunks = false   # striping-aware chunk sizing
 //! chunk_scale_min = 0.25    # floor of the adaptive chunk scale
+//!
+//! [integrity]
+//! verify = false            # per-chunk SHA-256 verification
+//! reuse_local = false       # delta resume: rehash + reuse disk chunks
 //! ```
 
 use std::collections::BTreeMap;
@@ -214,12 +218,12 @@ fn split_array_items(s: &str) -> Vec<String> {
 
 /// Overlay a parsed file onto a [`DownloadConfig`].
 pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
-    let known_prefixes = ["optimizer.", "download.", "mirror.", "control."];
+    let known_prefixes = ["optimizer.", "download.", "mirror.", "control.", "integrity."];
     for key in doc.keys() {
         if !known_prefixes.iter().any(|p| key.starts_with(p)) {
             return Err(Error::Config(format!(
                 "unknown config key '{key}' \
-                 (sections: [optimizer], [download], [mirror], [control])"
+                 (sections: [optimizer], [download], [mirror], [control], [integrity])"
             )));
         }
     }
@@ -307,6 +311,18 @@ pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
             }
         };
     }
+
+    let mut bool_opt = |key: &str, slot: &mut bool| -> Result<()> {
+        if let Some(v) = doc.get(key) {
+            *slot = match v {
+                Value::Bool(b) => *b,
+                _ => return Err(Error::Config(format!("'{key}' must be a boolean"))),
+            };
+        }
+        Ok(())
+    };
+    bool_opt("integrity.verify", &mut cfg.integrity.verify)?;
+    bool_opt("integrity.reuse_local", &mut cfg.integrity.reuse_local)?;
     Ok(())
 }
 
@@ -407,6 +423,20 @@ mod tests {
         cfg.validate().unwrap();
         // Type error: adaptive_chunks must be a boolean.
         let doc = TomlDoc::parse("[control]\nadaptive_chunks = 1.0").unwrap();
+        let mut cfg = DownloadConfig::default();
+        assert!(apply_to_config(&doc, &mut cfg).is_err());
+    }
+
+    #[test]
+    fn integrity_section_overlays() {
+        let doc = TomlDoc::parse("[integrity]\nverify = true\nreuse_local = true").unwrap();
+        let mut cfg = DownloadConfig::default();
+        apply_to_config(&doc, &mut cfg).unwrap();
+        assert!(cfg.integrity.verify);
+        assert!(cfg.integrity.reuse_local);
+        cfg.validate().unwrap();
+        // Type error: the knobs are booleans.
+        let doc = TomlDoc::parse("[integrity]\nverify = 1.0").unwrap();
         let mut cfg = DownloadConfig::default();
         assert!(apply_to_config(&doc, &mut cfg).is_err());
     }

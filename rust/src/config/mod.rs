@@ -205,6 +205,37 @@ impl ControlConfig {
     }
 }
 
+/// Chunk-integrity knobs (see [`crate::coordinator::manifest`]): per-chunk
+/// SHA-256 verification with a persisted manifest, and delta resume that
+/// harvests verified chunks from local partial files. Both default to
+/// **off**, which keeps every existing run bit-identical to the
+/// hash-free engine (pinned by `engine_parity` and the bench baseline).
+#[derive(Clone, Debug, Default)]
+pub struct IntegrityConfig {
+    /// Hash every completed chunk (sink writer threads on the real
+    /// path, the byte-stream model in the sim), verify against the
+    /// manifest, and re-fetch on mismatch. Persists
+    /// `.fastbiodl-manifest` next to the journal.
+    pub verify: bool,
+    /// At cold start, rehash candidate chunks of existing output files
+    /// against the manifest and reuse every verified chunk instead of
+    /// trusting the journal frontier (or discarding a foreign partial
+    /// file). Requires `verify`.
+    pub reuse_local: bool,
+}
+
+impl IntegrityConfig {
+    /// Parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if self.reuse_local && !self.verify {
+            return Err(Error::Config(
+                "reuse_local requires verify (chunk reuse is meaningless without hashes)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// How the session engine reconciles its worker-slot pool against the
 /// shared [`crate::coordinator::pool::StatusArray`] each control tick.
 ///
@@ -344,6 +375,10 @@ pub struct DownloadConfig {
     /// Fault-aware control-plane knobs (fault penalty, adaptive chunk
     /// sizing); defaults keep the fault-blind behaviour.
     pub control: ControlConfig,
+    /// Chunk-integrity knobs (per-chunk SHA-256 verification, delta
+    /// resume with local chunk reuse); defaults keep the hash-free
+    /// behaviour.
+    pub integrity: IntegrityConfig,
     /// Worker-slot pool reconciliation strategy (see [`ReconcileMode`];
     /// `FullScan` exists as the measured baseline for `fastbiodl bench`
     /// and the equivalence tests).
@@ -388,6 +423,7 @@ impl Default for DownloadConfig {
             optimizer: OptimizerConfig::default(),
             mirror: MirrorPolicy::default(),
             control: ControlConfig::default(),
+            integrity: IntegrityConfig::default(),
             reconcile: ReconcileMode::default(),
             chunk_bytes: 32 * 1024 * 1024,
             monitor_hz: 4.0,
@@ -408,6 +444,16 @@ impl DownloadConfig {
         self.optimizer.validate()?;
         self.mirror.validate()?;
         self.control.validate()?;
+        self.integrity.validate()?;
+        if self.integrity.verify && self.control.adaptive_chunks {
+            // Verification hashes the fixed chunk grid; adaptive chunk
+            // scaling cuts off-grid chunks that cannot be checked
+            // against (or reused from) a manifest.
+            return Err(Error::Config(
+                "verify is incompatible with adaptive_chunks (hashing needs a fixed chunk grid)"
+                    .into(),
+            ));
+        }
         if self.chunk_bytes < 64 * 1024 {
             return Err(Error::Config(format!(
                 "chunk_bytes {} too small (min 64 KiB)",
@@ -493,6 +539,22 @@ impl DownloadConfig {
         }
         if let Some(n) = env_usize("FASTBIODL_COALESCE_KB")? {
             self.coalesce_kb = n;
+        }
+        fn env_bool(name: &str) -> Result<Option<bool>> {
+            match std::env::var(name) {
+                Ok(v) => match v.to_ascii_lowercase().as_str() {
+                    "1" | "true" | "yes" | "on" => Ok(Some(true)),
+                    "0" | "false" | "no" | "off" => Ok(Some(false)),
+                    _ => Err(Error::Config(format!("{name}='{v}' is not a boolean"))),
+                },
+                Err(_) => Ok(None),
+            }
+        }
+        if let Some(b) = env_bool("FASTBIODL_VERIFY")? {
+            self.integrity.verify = b;
+        }
+        if let Some(b) = env_bool("FASTBIODL_REUSE_LOCAL")? {
+            self.integrity.reuse_local = b;
         }
         Ok(())
     }
@@ -651,6 +713,25 @@ mod tests {
         // The whole-transfer validate chain covers the control section.
         let mut dl = DownloadConfig::default();
         dl.control.chunk_scale_min = -0.1;
+        assert!(dl.validate().is_err());
+    }
+
+    #[test]
+    fn integrity_defaults_off_and_validates() {
+        let c = IntegrityConfig::default();
+        assert!(!c.verify && !c.reuse_local);
+        c.validate().unwrap();
+        // reuse_local without verify is meaningless.
+        let bad = IntegrityConfig {
+            verify: false,
+            reuse_local: true,
+        };
+        assert!(bad.validate().is_err());
+        // verify conflicts with adaptive chunk scaling (off-grid cuts).
+        let mut dl = DownloadConfig::default();
+        dl.integrity.verify = true;
+        assert!(dl.validate().is_ok());
+        dl.control.adaptive_chunks = true;
         assert!(dl.validate().is_err());
     }
 

@@ -1,0 +1,504 @@
+//! Chunk-integrity manifest: per-chunk SHA-256 + availability bitfield.
+//!
+//! The progress journal ([`super::resume`]) records how far each file
+//! got; it says nothing about whether the bytes on disk are *correct*.
+//! The manifest closes that gap: for every file it stores the chunk
+//! grid (`chunk_bytes`, `total_bytes`), one SHA-256 per grid chunk
+//! (learned as chunks complete — trust-on-first-use — or supplied up
+//! front by a previous run), and a **big-endian availability bitfield**
+//! (bit `i` of the field is `bits[i/8] & (0x80 >> (i % 8))`) marking
+//! which chunks have been verified against their hash.
+//!
+//! Persistence mirrors the journal: one JSON document
+//! (`<output_dir>/.fastbiodl-manifest`) written atomically (temp file +
+//! rename) alongside `.fastbiodl-journal`, and — unlike the journal —
+//! *kept* after a successful transfer, so a later delta resume can
+//! harvest verified chunks from partial or even foreign output files
+//! instead of trusting the journal frontier blindly.
+//!
+//! [`delta_scan`] is the resume-side half: it rehashes every on-disk
+//! grid chunk whose expected hash is known and flips the availability
+//! bits to match reality, so a corrupted tail or truncated write is
+//! detected and re-scheduled rather than resumed over.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{obj, Json};
+use crate::util::sha256::{from_hex, hex, Sha256};
+use crate::{Error, Result};
+
+/// Manifest file name inside the output directory.
+pub const MANIFEST_FILE: &str = ".fastbiodl-manifest";
+
+fn grid_count(total_bytes: u64, chunk_bytes: u64) -> usize {
+    if total_bytes == 0 {
+        0
+    } else {
+        ((total_bytes + chunk_bytes - 1) / chunk_bytes) as usize
+    }
+}
+
+/// Per-file chunk grid: hashes + availability bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkManifest {
+    /// File size the grid covers.
+    pub total_bytes: u64,
+    /// Grid chunk size (the transfer's `chunk_bytes`; the last chunk is
+    /// the remainder). Verification requires grid-aligned cuts, which
+    /// the config layer enforces by rejecting `verify` + adaptive chunk
+    /// scaling.
+    pub chunk_bytes: u64,
+    /// Expected SHA-256 per grid chunk; `None` until first observed.
+    hashes: Vec<Option<[u8; 32]>>,
+    /// Big-endian availability bitfield: bit `i` lives at
+    /// `bits[i / 8]`, mask `0x80 >> (i % 8)`.
+    bits: Vec<u8>,
+}
+
+impl ChunkManifest {
+    /// Empty manifest for a file: no hashes known, nothing available.
+    pub fn new(total_bytes: u64, chunk_bytes: u64) -> Self {
+        assert!(chunk_bytes > 0, "chunk_bytes must be positive");
+        let n = grid_count(total_bytes, chunk_bytes);
+        ChunkManifest {
+            total_bytes,
+            chunk_bytes,
+            hashes: vec![None; n],
+            bits: vec![0u8; (n + 7) / 8],
+        }
+    }
+
+    /// Number of grid chunks.
+    pub fn chunk_count(&self) -> usize {
+        self.hashes.len()
+    }
+
+    /// Byte length of grid chunk `idx` (the last one is the remainder).
+    pub fn chunk_len(&self, idx: usize) -> u64 {
+        let offset = idx as u64 * self.chunk_bytes;
+        self.chunk_bytes.min(self.total_bytes - offset)
+    }
+
+    /// Grid index of the chunk starting at `offset`.
+    pub fn chunk_index(&self, offset: u64) -> usize {
+        (offset / self.chunk_bytes) as usize
+    }
+
+    /// Expected hash of chunk `idx`, if known.
+    pub fn expected(&self, idx: usize) -> Option<&[u8; 32]> {
+        self.hashes.get(idx).and_then(|h| h.as_ref())
+    }
+
+    /// Record the expected hash of chunk `idx`.
+    pub fn record_hash(&mut self, idx: usize, digest: [u8; 32]) {
+        self.hashes[idx] = Some(digest);
+    }
+
+    /// Flip availability bit `idx`.
+    pub fn set_available(&mut self, idx: usize, avail: bool) {
+        assert!(idx < self.chunk_count(), "chunk index out of range");
+        let mask = 0x80u8 >> (idx % 8);
+        if avail {
+            self.bits[idx / 8] |= mask;
+        } else {
+            self.bits[idx / 8] &= !mask;
+        }
+    }
+
+    /// Is chunk `idx` verified-available?
+    pub fn is_available(&self, idx: usize) -> bool {
+        idx < self.chunk_count() && self.bits[idx / 8] & (0x80u8 >> (idx % 8)) != 0
+    }
+
+    /// How many chunks are verified-available.
+    pub fn available_count(&self) -> usize {
+        (0..self.chunk_count()).filter(|&i| self.is_available(i)).count()
+    }
+
+    /// Raw big-endian bitfield (for serialization and tests).
+    pub fn bitfield(&self) -> &[u8] {
+        &self.bits
+    }
+
+    /// Verified byte ranges, as merged `(offset, len)` spans of
+    /// consecutive available chunks — the shape the scheduler's
+    /// verified-span skip list consumes.
+    pub fn verified_spans(&self) -> Vec<(u64, u64)> {
+        let mut spans = Vec::new();
+        let n = self.chunk_count();
+        let mut i = 0;
+        while i < n {
+            if self.is_available(i) {
+                let start = i as u64 * self.chunk_bytes;
+                let mut len = self.chunk_len(i);
+                i += 1;
+                while i < n && self.is_available(i) {
+                    len += self.chunk_len(i);
+                    i += 1;
+                }
+                spans.push((start, len));
+            } else {
+                i += 1;
+            }
+        }
+        spans
+    }
+
+    /// Bytes covered by verified chunks.
+    pub fn verified_bytes(&self) -> u64 {
+        (0..self.chunk_count())
+            .filter(|&i| self.is_available(i))
+            .map(|i| self.chunk_len(i))
+            .sum()
+    }
+
+    fn to_json(&self, accession: &str) -> Json {
+        obj(vec![
+            ("accession", Json::Str(accession.to_string())),
+            ("bytes", Json::Num(self.total_bytes as f64)),
+            ("chunk_bytes", Json::Num(self.chunk_bytes as f64)),
+            (
+                // Hex strings, not numbers: JSON numbers are f64 and
+                // cannot carry 256 bits. Empty string = hash unknown.
+                "hashes",
+                Json::Arr(
+                    self.hashes
+                        .iter()
+                        .map(|h| Json::Str(h.as_ref().map(hex).unwrap_or_default()))
+                        .collect(),
+                ),
+            ),
+            (
+                "bits",
+                Json::Str(self.bits.iter().map(|b| format!("{b:02x}")).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<(String, ChunkManifest)> {
+        let bad = |what: &str| Error::Session(format!("manifest: bad {what}"));
+        let accession = j
+            .require("accession")?
+            .as_str()
+            .ok_or_else(|| bad("accession"))?
+            .to_string();
+        let total_bytes = j.require("bytes")?.as_u64().ok_or_else(|| bad("bytes"))?;
+        let chunk_bytes = j
+            .require("chunk_bytes")?
+            .as_u64()
+            .ok_or_else(|| bad("chunk_bytes"))?;
+        if chunk_bytes == 0 {
+            return Err(bad("chunk_bytes"));
+        }
+        let mut m = ChunkManifest::new(total_bytes, chunk_bytes);
+        let hashes = j.require("hashes")?.as_arr().ok_or_else(|| bad("hashes"))?;
+        if hashes.len() != m.chunk_count() {
+            return Err(bad("hash count"));
+        }
+        for (i, h) in hashes.iter().enumerate() {
+            let s = h.as_str().ok_or_else(|| bad("hash entry"))?;
+            if !s.is_empty() {
+                m.hashes[i] = Some(from_hex(s).ok_or_else(|| bad("hash hex"))?);
+            }
+        }
+        let bits_hex = j.require("bits")?.as_str().ok_or_else(|| bad("bits"))?;
+        if bits_hex.len() != m.bits.len() * 2 {
+            return Err(bad("bitfield length"));
+        }
+        for (i, pair) in bits_hex.as_bytes().chunks(2).enumerate() {
+            let hi = (pair[0] as char).to_digit(16).ok_or_else(|| bad("bitfield hex"))?;
+            let lo = (pair[1] as char).to_digit(16).ok_or_else(|| bad("bitfield hex"))?;
+            m.bits[i] = ((hi << 4) | lo) as u8;
+        }
+        // A set bit without its hash would mean "available but
+        // unverifiable" — reject rather than trust.
+        for i in 0..m.chunk_count() {
+            if m.is_available(i) && m.expected(i).is_none() {
+                return Err(bad("available chunk without hash"));
+            }
+        }
+        Ok((accession, m))
+    }
+}
+
+/// All per-file manifests of a transfer, keyed by accession, persisted
+/// as one JSON document next to the progress journal.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ManifestSet {
+    files: BTreeMap<String, ChunkManifest>,
+}
+
+impl ManifestSet {
+    pub fn new() -> Self {
+        ManifestSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn get(&self, accession: &str) -> Option<&ChunkManifest> {
+        self.files.get(accession)
+    }
+
+    pub fn get_mut(&mut self, accession: &str) -> Option<&mut ChunkManifest> {
+        self.files.get_mut(accession)
+    }
+
+    /// Manifest for `accession`, creating (or replacing, if the file
+    /// size or chunk grid changed — stale hashes must not survive a
+    /// reshape) an entry with the given grid.
+    pub fn entry(
+        &mut self,
+        accession: &str,
+        total_bytes: u64,
+        chunk_bytes: u64,
+    ) -> &mut ChunkManifest {
+        let stale = self
+            .files
+            .get(accession)
+            .map(|m| m.total_bytes != total_bytes || m.chunk_bytes != chunk_bytes)
+            .unwrap_or(true);
+        if stale {
+            self.files
+                .insert(accession.to_string(), ChunkManifest::new(total_bytes, chunk_bytes));
+        }
+        self.files.get_mut(accession).unwrap()
+    }
+
+    pub fn insert(&mut self, accession: &str, manifest: ChunkManifest) {
+        self.files.insert(accession.to_string(), manifest);
+    }
+
+    /// Manifest path for an output directory.
+    pub fn path_for(dir: &Path) -> PathBuf {
+        dir.join(MANIFEST_FILE)
+    }
+
+    /// Atomic write (temp + rename), same idiom as the journal.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let doc = obj(vec![
+            ("version", Json::Num(1.0)),
+            (
+                "files",
+                Json::Arr(self.files.iter().map(|(acc, m)| m.to_json(acc)).collect()),
+            ),
+        ]);
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, doc.to_string_compact())?;
+        std::fs::rename(&tmp, Self::path_for(dir))?;
+        Ok(())
+    }
+
+    /// Load a manifest set if one exists.
+    pub fn load(dir: &Path) -> Result<Option<ManifestSet>> {
+        let path = Self::path_for(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| Error::Session(format!("corrupt manifest {}: {e}", path.display())))?;
+        let mut set = ManifestSet::new();
+        for f in j
+            .require("files")?
+            .as_arr()
+            .ok_or_else(|| Error::Session("manifest: 'files' not an array".into()))?
+        {
+            let (acc, m) = ChunkManifest::from_json(f)?;
+            set.files.insert(acc, m);
+        }
+        Ok(Some(set))
+    }
+
+    /// Remove the manifest (only used by tests; real sessions keep it
+    /// after completion so later runs can delta-resume).
+    pub fn remove(dir: &Path) -> Result<()> {
+        match std::fs::remove_file(Self::path_for(dir)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// Rehash every on-disk grid chunk of `path` whose expected hash is
+/// known and set the availability bits to match reality: a chunk is
+/// available iff it is fully on disk *and* its bytes hash to the
+/// expected digest. Chunks without a recorded hash, beyond the disk
+/// length, or with mismatching bytes are cleared — they will be
+/// (re-)scheduled. Returns the number of chunks verified.
+///
+/// This is the delta-resume scan: it runs at cold start, so its cost is
+/// one sequential read of the partial file, not anything on the
+/// transfer hot path.
+pub fn delta_scan(path: &Path, m: &mut ChunkManifest) -> Result<usize> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut file = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            for i in 0..m.chunk_count() {
+                m.set_available(i, false);
+            }
+            return Ok(0);
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let disk_len = file.metadata()?.len();
+    let mut buf = vec![0u8; 256 * 1024];
+    let mut verified = 0usize;
+    for idx in 0..m.chunk_count() {
+        let offset = idx as u64 * m.chunk_bytes;
+        let len = m.chunk_len(idx);
+        if m.expected(idx).is_none() || offset + len > disk_len {
+            m.set_available(idx, false);
+            continue;
+        }
+        file.seek(SeekFrom::Start(offset))?;
+        let mut h = Sha256::new();
+        let mut left = len;
+        while left > 0 {
+            let take = (buf.len() as u64).min(left) as usize;
+            file.read_exact(&mut buf[..take])?;
+            h.update(&buf[..take]);
+            left -= take as u64;
+        }
+        let digest = h.finalize();
+        let ok = m.expected(idx) == Some(&digest);
+        m.set_available(idx, ok);
+        if ok {
+            verified += 1;
+        }
+    }
+    Ok(verified)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sha256::sha256;
+
+    #[test]
+    fn bitfield_is_big_endian() {
+        let mut m = ChunkManifest::new(10 * 100, 100); // 10 chunks
+        assert_eq!(m.bitfield().len(), 2);
+        m.set_available(0, true);
+        assert_eq!(m.bitfield()[0], 0x80);
+        m.set_available(7, true);
+        assert_eq!(m.bitfield()[0], 0x81);
+        m.set_available(8, true);
+        assert_eq!(m.bitfield()[1], 0x80);
+        m.set_available(0, false);
+        assert_eq!(m.bitfield()[0], 0x01);
+        assert!(!m.is_available(0) && m.is_available(7) && m.is_available(8));
+        assert_eq!(m.available_count(), 2);
+    }
+
+    #[test]
+    fn chunk_grid_covers_remainder() {
+        let m = ChunkManifest::new(250, 100);
+        assert_eq!(m.chunk_count(), 3);
+        assert_eq!(m.chunk_len(0), 100);
+        assert_eq!(m.chunk_len(2), 50);
+        assert_eq!(m.chunk_index(0), 0);
+        assert_eq!(m.chunk_index(200), 2);
+        assert_eq!(ChunkManifest::new(0, 100).chunk_count(), 0);
+    }
+
+    #[test]
+    fn verified_spans_merge_consecutive_chunks() {
+        let mut m = ChunkManifest::new(550, 100); // chunks 0..=5, last is 50 B
+        for i in [0usize, 1, 3, 5] {
+            m.record_hash(i, [i as u8; 32]);
+            m.set_available(i, true);
+        }
+        assert_eq!(m.verified_spans(), vec![(0, 200), (300, 100), (500, 50)]);
+        assert_eq!(m.verified_bytes(), 350);
+    }
+
+    #[test]
+    fn set_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("fbdl-manifest-{}", std::process::id()));
+        let mut set = ManifestSet::new();
+        let m = set.entry("SRR0000001", 250, 100);
+        m.record_hash(0, sha256(b"chunk0"));
+        m.set_available(0, true);
+        m.record_hash(2, sha256(b"chunk2"));
+        set.entry("SRR0000002", 90, 100); // single partial chunk, nothing known
+        set.save(&dir).unwrap();
+        let loaded = ManifestSet::load(&dir).unwrap().unwrap();
+        assert_eq!(loaded, set);
+        ManifestSet::remove(&dir).unwrap();
+        assert!(ManifestSet::load(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn entry_replaces_on_grid_reshape() {
+        let mut set = ManifestSet::new();
+        let m = set.entry("SRR0000001", 250, 100);
+        m.record_hash(0, sha256(b"x"));
+        m.set_available(0, true);
+        // Same grid: entry preserves state.
+        assert_eq!(set.entry("SRR0000001", 250, 100).available_count(), 1);
+        // Changed chunk size: stale hashes are discarded.
+        assert_eq!(set.entry("SRR0000001", 250, 50).available_count(), 0);
+        assert_eq!(set.get("SRR0000001").unwrap().chunk_count(), 5);
+    }
+
+    #[test]
+    fn corrupt_documents_are_rejected() {
+        let dir = std::env::temp_dir().join(format!("fbdl-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(ManifestSet::path_for(&dir), "not json").unwrap();
+        assert!(ManifestSet::load(&dir).is_err());
+        // A set availability bit without its hash must not load.
+        std::fs::write(
+            ManifestSet::path_for(&dir),
+            r#"{"files":[{"accession":"A","bytes":100,"chunk_bytes":100,"hashes":[""],"bits":"80"}],"version":1}"#,
+        )
+        .unwrap();
+        assert!(ManifestSet::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn delta_scan_verifies_good_chunks_and_rejects_corruption() {
+        let dir = std::env::temp_dir().join(format!("fbdl-deltascan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SRRX");
+        let payload: Vec<u8> = (0..250u32).map(|i| (i * 31 + 7) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let mut m = ChunkManifest::new(250, 100);
+        m.record_hash(0, sha256(&payload[0..100]));
+        m.record_hash(1, sha256(&payload[100..200]));
+        m.record_hash(2, sha256(&payload[200..250]));
+        assert_eq!(delta_scan(&path, &mut m).unwrap(), 3);
+        assert_eq!(m.verified_spans(), vec![(0, 250)]);
+
+        // Corrupt one byte in chunk 1: only that chunk drops out.
+        let mut corrupt = payload.clone();
+        corrupt[150] ^= 0xFF;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert_eq!(delta_scan(&path, &mut m).unwrap(), 2);
+        assert_eq!(m.verified_spans(), vec![(0, 100), (200, 50)]);
+
+        // Truncated tail: chunk 2 is incomplete, chunk 1 still corrupt.
+        std::fs::write(&path, &payload[..220]).unwrap();
+        assert_eq!(delta_scan(&path, &mut m).unwrap(), 1);
+        assert_eq!(m.verified_spans(), vec![(0, 100)]);
+
+        // Missing file: nothing survives.
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(delta_scan(&path, &mut m).unwrap(), 0);
+        assert!(m.verified_spans().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

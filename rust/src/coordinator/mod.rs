@@ -13,13 +13,19 @@
 //!   optimizer sets the first `C` slots to run, workers observe their
 //!   slot each iteration and park/resume accordingly;
 //! * [`probe`] — the per-probe sample window: raw monitor samples in,
-//!   XLA-aggregated `(mean, std, …)` out, feeding the controller.
+//!   XLA-aggregated `(mean, std, …)` out, feeding the controller;
+//! * [`resume`] / [`manifest`] — restart support: the progress journal
+//!   records each file's contiguous completed frontier, and the chunk
+//!   manifest (per-chunk SHA-256 + availability bitfield) upgrades it
+//!   to *verified* delta resume when `--verify` is on.
 
+pub mod manifest;
 pub mod pool;
 pub mod probe;
 pub mod resume;
 pub mod scheduler;
 
+pub use manifest::{ChunkManifest, ManifestSet};
 pub use pool::StatusArray;
 pub use resume::ProgressJournal;
 pub use probe::ProbeWindow;

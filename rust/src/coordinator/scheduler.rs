@@ -106,6 +106,10 @@ struct FileState {
     /// the contiguous-from-zero frontier is what the progress journal
     /// persists).
     spans: Vec<(u64, u64)>,
+    /// Verified-on-disk `(start, end)` ranges (delta resume): already
+    /// counted into `bytes_done`, never cut into chunks. Sorted,
+    /// disjoint. Empty unless integrity verification seeded reuse.
+    skip: Vec<(u64, u64)>,
 }
 
 impl FileState {
@@ -131,6 +135,18 @@ impl FileState {
         match self.spans.first() {
             Some(&(0, end)) => end,
             _ => 0,
+        }
+    }
+
+    /// Advance `next_offset` past any verified span covering it, so the
+    /// `next_offset < bytes` hand-out predicates stay exact with gaps
+    /// in the middle of a file. `skip` is sorted, so one pass chases
+    /// chains of spans.
+    fn skip_verified(&mut self) {
+        for &(s, e) in &self.skip {
+            if s <= self.next_offset && self.next_offset < e {
+                self.next_offset = e;
+            }
         }
     }
 }
@@ -207,6 +223,7 @@ impl ChunkScheduler {
                     } else {
                         Vec::new()
                     },
+                    skip: Vec::new(),
                 }
             })
             .collect();
@@ -221,6 +238,51 @@ impl ChunkScheduler {
             bytes_done: bytes_done_total,
             chunks_scaled: 0,
         }
+    }
+
+    /// Mark verified-on-disk byte ranges of file `file` (`(offset,
+    /// len)` chunk-grid spans from the integrity manifest's delta-resume
+    /// scan): they count as delivered, are never cut into chunks, and
+    /// complete the file outright when they cover it. Must be called
+    /// before any chunk of the file is handed out. Whole-file mode
+    /// cannot skip interior ranges, so there only full-file coverage
+    /// takes effect; partial spans are ignored.
+    pub fn set_verified_spans(&mut self, file: usize, spans: &[(u64, u64)]) {
+        let f = &mut self.files[file];
+        assert_eq!(f.chunks_issued, 0, "verified spans must be set before scheduling");
+        assert_eq!(f.outstanding, 0, "verified spans with chunks in flight");
+        let prefix = f.next_offset; // resume-journal done prefix, if any
+        let mut skip: Vec<(u64, u64)> = Vec::with_capacity(spans.len());
+        for &(off, len) in spans {
+            assert!(len > 0 && off + len <= f.bytes, "verified span out of range");
+            // Bytes under the done prefix are already accounted.
+            let (s, e) = (off.max(prefix), (off + len).max(prefix));
+            if s < e {
+                skip.push((s, e));
+            }
+        }
+        skip.sort_unstable();
+        for w in skip.windows(2) {
+            assert!(w[0].1 <= w[1].0, "verified spans overlap");
+        }
+        if matches!(self.mode, SchedulerMode::WholeFile) {
+            let covers_all = skip.first() == Some(&(prefix, f.bytes)) && skip.len() == 1;
+            if !covers_all {
+                return;
+            }
+        }
+        let mut added = 0u64;
+        for &(s, e) in &skip {
+            f.bytes_done += e - s;
+            f.add_span(s, e - s);
+            added += e - s;
+        }
+        f.skip = skip;
+        f.skip_verified();
+        if f.bytes_done >= f.bytes {
+            f.completed = true;
+        }
+        self.bytes_done += added;
     }
 
     /// Index of the first file that is neither opened nor completed,
@@ -310,13 +372,24 @@ impl ChunkScheduler {
         };
         let f = &mut self.files[idx];
         let offset = f.next_offset;
-        let full = chunk_bytes.min(f.bytes - offset);
-        let len = effective_chunk_bytes(chunk_bytes, scale).min(f.bytes - offset);
+        // Clip the cut at the next verified span (delta resume): reused
+        // bytes are never re-requested, so the chunk ends where the
+        // verified range begins. Span-clipped cuts are grid-aligned by
+        // construction (spans are chunk-grid multiples) and do not
+        // count as "scaled".
+        let mut limit = f.bytes - offset;
+        if let Some(&(s, _)) = f.skip.iter().find(|&&(s, _)| s > offset) {
+            limit = limit.min(s - offset);
+        }
+        let full = chunk_bytes.min(limit);
+        let len = effective_chunk_bytes(chunk_bytes, scale).min(limit);
         debug_assert!(len > 0);
         if len < full {
             self.chunks_scaled += 1;
         }
         f.next_offset += len;
+        // Jump the hand-out cursor over the verified range it landed on.
+        f.skip_verified();
         let index = f.chunks_issued;
         f.chunks_issued += 1;
         f.outstanding += 1;
@@ -618,6 +691,96 @@ mod tests {
         assert_eq!(effective_chunk_bytes(1 << 20, 1e-9), MIN_CHUNK_BYTES);
         // chunk_bytes already below the floor passes through.
         assert_eq!(effective_chunk_bytes(1024, 0.5), 1024);
+    }
+
+    #[test]
+    fn verified_spans_are_never_recut() {
+        // File of 600 with chunks of 100; chunks 1 and 3-4 verified on
+        // disk (delta resume) — only chunks 0, 2 and 5 may be cut.
+        let recs = records(&[600]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 100,
+                max_open_files: 1,
+            },
+        );
+        s.set_verified_spans(0, &[(100, 100), (300, 200)]);
+        assert_eq!(s.progress(), (300, 600));
+        let mut cuts = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            cuts.push((c.offset, c.len));
+            s.chunk_done(&c);
+        }
+        assert_eq!(cuts, vec![(0, 100), (200, 100), (500, 100)]);
+        assert!(s.all_done());
+        assert_eq!(s.progress(), (600, 600));
+        assert_eq!(s.frontiers(), vec![600]);
+        assert_eq!(s.chunks_scaled(), 0, "span clipping is not scaling");
+    }
+
+    #[test]
+    fn verified_spans_clip_wide_cuts_and_complete_files() {
+        // Chunk size larger than the gap before a verified span: the
+        // cut must stop at the span boundary.
+        let recs = records(&[1_000, 500]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 400,
+                max_open_files: 2,
+            },
+        );
+        s.set_verified_spans(0, &[(200, 400)]);
+        // A fully verified file completes without ever opening.
+        s.set_verified_spans(1, &[(0, 500)]);
+        assert_eq!(s.files_completed(), 1);
+        let a = s.next_chunk().unwrap();
+        assert_eq!((a.file, a.offset, a.len), (0, 0, 200));
+        let b = s.next_chunk().unwrap();
+        assert_eq!((b.file, b.offset, b.len), (0, 600, 400));
+        assert!(s.next_chunk().is_none());
+        s.chunk_done(&a);
+        s.chunk_done(&b);
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn verified_spans_respect_resume_prefix() {
+        // A journal prefix of 150 plus verified spans overlapping it:
+        // overlap bytes must not double-count.
+        let recs = records(&[400]);
+        let mut s = ChunkScheduler::new_with_progress(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 100,
+                max_open_files: 1,
+            },
+            Some(&[150]),
+        );
+        s.set_verified_spans(0, &[(100, 100), (300, 100)]);
+        // 150 prefix + 50 non-overlapping from span 1 + 100 from span 2.
+        assert_eq!(s.progress(), (300, 400));
+        let mut cuts = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            cuts.push((c.offset, c.len));
+            s.chunk_done(&c);
+        }
+        assert_eq!(cuts, vec![(200, 100)]);
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn whole_file_mode_only_reuses_full_files() {
+        let recs = records(&[500, 500]);
+        let mut s = ChunkScheduler::new(&recs, SchedulerMode::WholeFile);
+        s.set_verified_spans(0, &[(0, 250)]); // partial: ignored
+        s.set_verified_spans(1, &[(0, 500)]); // full: completed
+        assert_eq!(s.files_completed(), 1);
+        let a = s.next_chunk().unwrap();
+        assert_eq!((a.file, a.offset, a.len), (0, 0, 500));
+        s.chunk_done(&a);
+        assert!(s.all_done());
     }
 
     #[test]

@@ -47,8 +47,8 @@ COMMANDS:
         --seed <n>            simulation seed (default 1)
         --faults <profile>    hostile network variant: none|flaky|stalls|
                               errors|collapse|flashcrowd|brownout|
-                              slowmirror|burstloss|dnsoutage|chaos
-                              (seeded fault schedule; see netsim::fault)
+                              slowmirror|burstloss|dnsoutage|bitflip|
+                              chaos (seeded schedule; see netsim::fault)
         --mirror-strategy <s> stripe (score-weighted striping, default)
                               or failover (winner-take-all binding)
         --mirror-conns <n>    per-mirror connection cap (default 0 = off)
@@ -56,6 +56,9 @@ COMMANDS:
                               in the adaptive utility (default 0 = off)
         --adaptive-chunks     striping-aware chunk sizing: shrink chunks
                               under fault pressure / on degraded mirrors
+        --verify              per-chunk SHA-256 verification: corrupt
+                              chunks (e.g. --faults bitflip) are caught
+                              and re-fetched instead of shipped
         --reconcile <m>       engine slot reconciliation: batched
                               (default) or full-scan (naive reference)
     fetch <url...>            real-socket adaptive download over HTTP
@@ -79,6 +82,14 @@ COMMANDS:
                               (default 64; full pool = backpressure)
         --coalesce-kb <n>     max bytes merged into one positional
                               write (default 1024)
+        --verify              per-chunk SHA-256 verification against the
+                              .fastbiodl-manifest kept next to --out
+                              files (trust-on-first-use for unknown
+                              chunks; mismatches are re-fetched)
+        --reuse-local         delta resume: rehash partial files on disk
+                              at cold start and re-download only the
+                              chunks that fail verification (requires
+                              --verify)
     serve                     run the throttled loopback archive server
         --files <n>           number of synthetic files (default 4)
         --size-mb <n>         size of each file (default 64)
@@ -122,7 +133,8 @@ ENVIRONMENT:
     FASTBIODL_ARTIFACTS       artifact directory (default ./artifacts)
     FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER,
     FASTBIODL_MIRROR_STRATEGY, FASTBIODL_FAULT_PENALTY, FASTBIODL_PROGRESS_WINDOW,
-    FASTBIODL_SINK_THREADS, FASTBIODL_SINK_QUEUE_MB, FASTBIODL_COALESCE_KB
+    FASTBIODL_SINK_THREADS, FASTBIODL_SINK_QUEUE_MB, FASTBIODL_COALESCE_KB,
+    FASTBIODL_VERIFY, FASTBIODL_REUSE_LOCAL
                               config overrides (see config module docs)
 "#;
 
@@ -200,6 +212,12 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     }
     if args.flag_bool_strict("adaptive-chunks")? {
         cfg.control.adaptive_chunks = true;
+    }
+    if args.flag_bool_strict("verify")? {
+        cfg.integrity.verify = true;
+    }
+    if args.flag_bool_strict("reuse-local")? {
+        cfg.integrity.reuse_local = true;
     }
     if let Some(p) = args.flag_f64("probe")? {
         cfg.optimizer.probe_interval_s = p;
@@ -379,7 +397,7 @@ fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
         "faults", "mirror-strategy", "mirror-conns", "reconcile", "fault-penalty",
-        "adaptive-chunks",
+        "adaptive-chunks", "verify",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -470,7 +488,8 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
         "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks", "progress-window",
-        "progress-min-bytes", "sink-threads", "sink-queue-mb", "coalesce-kb",
+        "progress-min-bytes", "sink-threads", "sink-queue-mb", "coalesce-kb", "verify",
+        "reuse-local",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));

@@ -123,6 +123,12 @@ pub struct FlowEvent {
     /// 5xx). The connection survives and is Idle again; the work item
     /// must be retried, ideally after backoff.
     pub rejected: bool,
+    /// The request completed but its payload was silently corrupted in
+    /// flight ([`FaultKind::BitFlip`]). Only meaningful alongside
+    /// `request_done`; transports with verification enabled perturb the
+    /// chunk digest so the hash check fails, everything else ignores it
+    /// (the bytes count — that is the point of *silent* corruption).
+    pub corrupted: bool,
 }
 
 /// Aggregate step outcome.
@@ -178,6 +184,11 @@ pub struct NetSim {
     /// this time fail at setup (resolution errors only hit new
     /// connections; established flows are untouched).
     dns_outage_until_s: f64,
+    /// Silent corruption window ([`FaultKind::BitFlip`]): until
+    /// `bitflip_until_s`, each response delivering bytes draws once and
+    /// is marked corrupted with probability `bitflip_frac`.
+    bitflip_until_s: f64,
+    bitflip_frac: f64,
     /// Windowed mid-body drops ([`FaultKind::MidBodyDrop`]): until
     /// `drop_until_s`, a response crossing `drop_after_bytes` delivered
     /// bytes is reset with probability `drop_frac` at the crossing.
@@ -244,6 +255,8 @@ impl NetSim {
             crowd_extra_mbps: 0.0,
             brownout_until_s: 0.0,
             dns_outage_until_s: 0.0,
+            bitflip_until_s: 0.0,
+            bitflip_frac: 0.0,
             drop_until_s: 0.0,
             drop_after_bytes: 0.0,
             drop_frac: 0.0,
@@ -452,6 +465,7 @@ impl NetSim {
                     became_ready: false,
                     failed: false,
                     rejected: true,
+                    corrupted: false,
                 });
                 continue;
             }
@@ -465,6 +479,7 @@ impl NetSim {
                     became_ready: false,
                     failed: true,
                     rejected: false,
+                    corrupted: false,
                 });
                 continue;
             }
@@ -476,6 +491,7 @@ impl NetSim {
                     became_ready: true,
                     failed: false,
                     rejected: false,
+                    corrupted: false,
                 });
             }
         }
@@ -547,6 +563,15 @@ impl NetSim {
             }
             let f = &mut self.flows[i];
             let bytes = bytes.min(f.request_remaining);
+            // Silent corruption window: one Bernoulli draw per response
+            // per window, made at its first delivery step inside the
+            // window. The transfer proceeds — only the digest changes.
+            if self.now_s < self.bitflip_until_s && !f.corrupt_checked {
+                f.corrupt_checked = true;
+                if self.rng.next_f64() < self.bitflip_frac {
+                    f.corrupted = true;
+                }
+            }
             let done = f.deliver(bytes, dt);
             report.total_bytes += bytes;
             report.events.push(FlowEvent {
@@ -556,6 +581,7 @@ impl NetSim {
                 became_ready: false,
                 failed: false,
                 rejected: false,
+                corrupted: done && f.corrupted,
             });
             // Windowed mid-body drop: the response just crossed the
             // drop threshold inside an active window — reset the
@@ -578,6 +604,7 @@ impl NetSim {
                     became_ready: false,
                     failed: true,
                     rejected: false,
+                    corrupted: false,
                 });
             }
         }
@@ -613,6 +640,7 @@ impl NetSim {
                             became_ready: false,
                             failed: true,
                             rejected: false,
+                            corrupted: false,
                         });
                     }
                 }
@@ -634,6 +662,7 @@ impl NetSim {
                         became_ready: false,
                         failed: true,
                         rejected: false,
+                        corrupted: false,
                     });
                 }
             }
@@ -666,6 +695,7 @@ impl NetSim {
                         became_ready: false,
                         failed: true,
                         rejected: false,
+                        corrupted: false,
                     });
                 }
             }
@@ -773,6 +803,14 @@ impl NetSim {
             FaultKind::DnsOutage { duration_s } => {
                 self.dns_outage_until_s =
                     self.dns_outage_until_s.max(self.now_s + duration_s);
+            }
+            FaultKind::BitFlip { frac, duration_s } => {
+                self.bitflip_frac = if self.now_s < self.bitflip_until_s {
+                    self.bitflip_frac.max(frac)
+                } else {
+                    frac
+                };
+                self.bitflip_until_s = self.bitflip_until_s.max(self.now_s + duration_s);
             }
         }
     }
@@ -1257,6 +1295,62 @@ mod tests {
         }
         assert_eq!(failed, 0, "drop window must not outlive its duration");
         assert_eq!(done, 1);
+    }
+
+    #[test]
+    fn bitflip_corrupts_in_window_responses_silently() {
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 1.0,
+            kind: FaultKind::BitFlip {
+                frac: 1.0,
+                duration_s: 4.0,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 17).unwrap();
+        let f = sim.open_flow().unwrap();
+        while !sim.flow_ready(f) {
+            sim.step(None);
+        }
+        // Delivered inside the window: completes normally (silent!) but
+        // is flagged corrupted on its completion event.
+        while sim.now() < 1.5 {
+            sim.step(None);
+        }
+        sim.begin_request(f, 1e6, false, 0).unwrap();
+        let (mut done, mut corrupt, mut failed) = (0, 0, 0);
+        for _ in 0..200 {
+            let rep = sim.step(None);
+            for e in &rep.events {
+                done += e.request_done as usize;
+                corrupt += e.corrupted as usize;
+                failed += e.failed as usize;
+            }
+            if done > 0 {
+                break;
+            }
+        }
+        assert_eq!(done, 1, "corruption must not block completion");
+        assert_eq!(corrupt, 1, "in-window response must be flagged corrupted");
+        assert_eq!(failed, 0, "bit flips are silent: no connection failure");
+        assert!((sim.flow_delivered(f) - 1e6).abs() < 1.0, "every byte arrives");
+        // Past the window the same request pattern is clean.
+        while sim.now() < 6.0 {
+            sim.step(None);
+        }
+        sim.begin_request(f, 1e6, false, 1).unwrap();
+        let (mut done, mut corrupt) = (0, 0);
+        for _ in 0..200 {
+            let rep = sim.step(None);
+            for e in &rep.events {
+                done += e.request_done as usize;
+                corrupt += e.corrupted as usize;
+            }
+            if done > 0 {
+                break;
+            }
+        }
+        assert_eq!(done, 1);
+        assert_eq!(corrupt, 0, "corruption window must not outlive its duration");
     }
 
     #[test]

@@ -23,13 +23,14 @@
 //! | [`FaultKind::MidBodyDrop`] | time-windowed mid-body resets (flaky middlebox, response truncation) | while the window is active, responses crossing `after_bytes` delivered are reset with probability `frac` |
 //! | [`FaultKind::BurstLoss`] | Gilbert–Elliott-style correlated losses (flapping link, overloaded middlebox) | while the window is active, a two-state process alternates quiet spells and loss bursts; during a burst every busy flow is reset at `kill_prob`/s |
 //! | [`FaultKind::DnsOutage`] | resolver outage / NXDOMAIN storm | connections *opened* during the outage fail at setup (the real driver's explicit DNS step erroring); established flows are untouched |
+//! | [`FaultKind::BitFlip`] | silent payload corruption (bit-flip in transit, corrupted cache node) | while the window is active, responses delivering inside it are corrupted with probability `frac` — bytes arrive and count, but their content is wrong; only chunk-hash verification catches it |
 //!
 //! ## Profiles
 //!
 //! [`FaultProfile`] names ready-made hostile variants of any scenario —
 //! `flaky`, `stalls`, `errors`, `collapse`, `flashcrowd`, `brownout`,
-//! `slowmirror`, `burstloss`, `dnsoutage`, and `chaos` (all of the
-//! above interleaved). A profile expands to a
+//! `slowmirror`, `burstloss`, `dnsoutage`, `bitflip`, and `chaos` (all
+//! of the above interleaved). A profile expands to a
 //! concrete [`FaultSchedule`] via [`FaultProfile::schedule`], fully
 //! determined by `(profile, seed, horizon, link capacity)`. The CLI
 //! exposes this as `fastbiodl download … --faults <profile>`; tests use
@@ -124,6 +125,23 @@ pub enum FaultKind {
     /// that distinguishes this class from a brownout.
     DnsOutage {
         /// Outage length, seconds.
+        duration_s: f64,
+    },
+    /// **Windowed payload corruption** (bit-flip in transit, corrupted
+    /// cache node, mid-body swap): while the window is active
+    /// (`duration_s` from the event time), each response that delivers
+    /// bytes inside it is *silently corrupted* with probability `frac`
+    /// — the bytes arrive, count toward progress, and the request
+    /// completes normally, but the payload content is wrong. Unlike
+    /// every other class, nothing at the transport level signals a
+    /// problem; only per-chunk SHA-256 verification against the
+    /// integrity manifest detects it. Windowed like
+    /// [`FaultKind::MidBodyDrop`].
+    BitFlip {
+        /// Per-response corruption probability while the window is
+        /// active, in [0, 1].
+        frac: f64,
+        /// Window length, seconds.
         duration_s: f64,
     },
 }
@@ -226,6 +244,14 @@ impl FaultKind {
                     return Err("DnsOutage duration must be >= 0".into());
                 }
             }
+            FaultKind::BitFlip { frac, duration_s } => {
+                if !(0.0..=1.0).contains(frac) {
+                    return Err(format!("BitFlip frac {frac} outside [0, 1]"));
+                }
+                if *duration_s < 0.0 {
+                    return Err("BitFlip duration must be >= 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -243,6 +269,7 @@ impl FaultKind {
             FaultKind::MidBodyDrop { .. } => "mid-body-drop",
             FaultKind::BurstLoss { .. } => "burst-loss",
             FaultKind::DnsOutage { .. } => "dns-outage",
+            FaultKind::BitFlip { .. } => "bit-flip",
         }
     }
 }
@@ -336,12 +363,17 @@ pub enum FaultProfile {
     /// Recurring resolver outages: connections opened inside an outage
     /// window fail at setup, established flows keep streaming.
     DnsOutage,
+    /// Recurring silent-corruption windows: responses delivering inside
+    /// a window are corrupted at high probability. Needs `--verify` to
+    /// surface at all — with verification off the transfer "succeeds"
+    /// with wrong bytes.
+    BitFlip,
     /// Everything above, interleaved.
     Chaos,
 }
 
 /// Profiles exercised by the controller×fault test matrix.
-pub const MATRIX_PROFILES: [FaultProfile; 9] = [
+pub const MATRIX_PROFILES: [FaultProfile; 10] = [
     FaultProfile::Flaky,
     FaultProfile::Stalls,
     FaultProfile::ServerErrors,
@@ -351,6 +383,7 @@ pub const MATRIX_PROFILES: [FaultProfile; 9] = [
     FaultProfile::SlowMirror,
     FaultProfile::BurstLoss,
     FaultProfile::DnsOutage,
+    FaultProfile::BitFlip,
 ];
 
 impl FaultProfile {
@@ -367,10 +400,11 @@ impl FaultProfile {
             "slowmirror" | "slow-mirror" => Ok(FaultProfile::SlowMirror),
             "burstloss" | "burst-loss" | "bursts" => Ok(FaultProfile::BurstLoss),
             "dns" | "dnsoutage" | "dns-outage" => Ok(FaultProfile::DnsOutage),
+            "bitflip" | "bit-flip" | "corruption" => Ok(FaultProfile::BitFlip),
             "chaos" | "all" => Ok(FaultProfile::Chaos),
             other => Err(format!(
                 "unknown fault profile '{other}' (none|flaky|stalls|errors|collapse|\
-                 flashcrowd|brownout|slowmirror|burstloss|dnsoutage|chaos)"
+                 flashcrowd|brownout|slowmirror|burstloss|dnsoutage|bitflip|chaos)"
             )),
         }
     }
@@ -388,6 +422,7 @@ impl FaultProfile {
             FaultProfile::SlowMirror => "slowmirror",
             FaultProfile::BurstLoss => "burstloss",
             FaultProfile::DnsOutage => "dnsoutage",
+            FaultProfile::BitFlip => "bitflip",
             FaultProfile::Chaos => "chaos",
         }
     }
@@ -411,6 +446,7 @@ impl FaultProfile {
             FaultProfile::SlowMirror => gen_slowmirror(seed, horizon_s, &mut events),
             FaultProfile::BurstLoss => gen_burstloss(seed, horizon_s, &mut events),
             FaultProfile::DnsOutage => gen_dns(seed, horizon_s, &mut events),
+            FaultProfile::BitFlip => gen_bitflip(seed, horizon_s, &mut events),
             FaultProfile::Chaos => {
                 gen_flaky(seed, horizon_s, &mut events);
                 gen_stalls(seed, horizon_s, &mut events);
@@ -422,6 +458,7 @@ impl FaultProfile {
                 gen_bodydrops(seed, horizon_s, &mut events);
                 gen_burstloss(seed, horizon_s, &mut events);
                 gen_dns(seed, horizon_s, &mut events);
+                gen_bitflip(seed, horizon_s, &mut events);
             }
         }
         FaultSchedule::new(events)
@@ -574,6 +611,25 @@ fn gen_dns(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     }
 }
 
+fn gen_bitflip(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
+    let mut rng = profile_rng(seed, 0xB17);
+    // Recurring silent-corruption windows with a high per-response
+    // corruption probability: frequent enough that a multi-minute
+    // transfer is guaranteed to cross several, so a verified session
+    // must observe (and re-fetch) corrupt chunks.
+    let mut t = rng.range_f64(4.0, 10.0);
+    while t < horizon_s {
+        out.push(FaultEvent {
+            at_s: t,
+            kind: FaultKind::BitFlip {
+                frac: rng.range_f64(0.5, 0.9),
+                duration_s: rng.range_f64(4.0, 10.0),
+            },
+        });
+        t += rng.range_f64(20.0, 40.0);
+    }
+}
+
 fn gen_slowmirror(seed: u64, horizon_s: f64, out: &mut Vec<FaultEvent>) {
     let mut rng = profile_rng(seed, 0x510);
     // The primary mirror collapses early and stays degraded for the
@@ -617,10 +673,14 @@ mod tests {
         let mut names: Vec<&str> = s.events().iter().map(|e| e.kind.name()).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 10, "chaos missing classes: {names:?}");
+        assert_eq!(names.len(), 11, "chaos missing classes: {names:?}");
         assert!(
             names.contains(&"mid-body-drop"),
             "chaos should include the windowed mid-body drop: {names:?}"
+        );
+        assert!(
+            names.contains(&"bit-flip"),
+            "chaos should include silent corruption windows: {names:?}"
         );
         assert!(
             names.contains(&"burst-loss"),
@@ -641,6 +701,7 @@ mod tests {
             FaultProfile::SlowMirror,
             FaultProfile::BurstLoss,
             FaultProfile::DnsOutage,
+            FaultProfile::BitFlip,
             FaultProfile::Chaos,
         ] {
             assert_eq!(FaultProfile::parse(p.name()).unwrap(), p);
@@ -654,6 +715,18 @@ mod tests {
         assert!(FaultKind::Stall {
             frac: 1.5,
             duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::BitFlip {
+            frac: 1.5,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(FaultKind::BitFlip {
+            frac: 0.5,
+            duration_s: -1.0
         }
         .validate()
         .is_err());

@@ -76,6 +76,13 @@ pub struct SimFlow {
     /// (the simulated counterpart of the real connector's DNS step
     /// erroring).
     pub fail_on_setup: bool,
+    /// Injected silent corruption: the current response's payload is
+    /// wrong on the wire. The transfer itself proceeds normally — only
+    /// hash verification can notice (see [`super::fault::FaultKind::BitFlip`]).
+    pub corrupted: bool,
+    /// Whether the corruption draw for the current response has been
+    /// made yet (one Bernoulli trial per response per window).
+    pub corrupt_checked: bool,
 }
 
 /// Initial slow-start ramp fraction.
@@ -106,6 +113,8 @@ impl SimFlow {
             stalled_until_s: 0.0,
             reject_pending: false,
             fail_on_setup: false,
+            corrupted: false,
+            corrupt_checked: false,
         }
     }
 
@@ -138,6 +147,8 @@ impl SimFlow {
         self.request_delivered = 0.0;
         self.request_age_s = 0.0;
         self.reject_pending = false;
+        self.corrupted = false;
+        self.corrupt_checked = false;
         self.phase = FlowPhase::Idle;
     }
 
@@ -157,6 +168,8 @@ impl SimFlow {
         self.request_remaining = bytes;
         self.request_delivered = 0.0;
         self.request_age_s = 0.0;
+        self.corrupted = false;
+        self.corrupt_checked = false;
         // Keep-alive reuse keeps TCP's window mostly open: restart the
         // ramp only partially on subsequent requests.
         self.ramp = self.ramp.max(RAMP_START).min(1.0).max(0.5 * self.ramp);

@@ -96,6 +96,7 @@ use crate::accession::resolver::{mirror_width, ResolutionCost};
 use crate::accession::RunRecord;
 use crate::config::{DownloadConfig, MirrorStrategy, ReconcileMode};
 use crate::control::{ControlSignals, Controller, MirrorHealth};
+use crate::coordinator::manifest::ManifestSet;
 use crate::coordinator::pool::StatusArray;
 use crate::coordinator::probe::ProbeWindow;
 use crate::coordinator::resume::ProgressJournal;
@@ -147,6 +148,11 @@ pub enum FailureClass {
     /// Transient server rejection (HTTP 5xx / injected window): the
     /// connection survives, the chunk retries after backoff.
     Reject,
+    /// The chunk's bytes arrived but their SHA-256 does not match the
+    /// manifest (bit-flip in transit, corrupted cache, mid-body swap):
+    /// retryable — the connection survives and the chunk is re-fetched.
+    /// Only produced when `--verify` is on.
+    Corrupt,
     /// Deterministic failure (malformed URL, 4xx, local I/O): retrying
     /// cannot help; the session fails immediately.
     Fatal,
@@ -157,8 +163,14 @@ pub enum FailureClass {
 pub enum TransportEvent {
     /// The slot's connection finished its handshake and is idle.
     Ready { slot: usize },
-    /// The slot's in-flight fetch delivered every byte.
-    Completed { slot: usize },
+    /// The slot's in-flight fetch delivered every byte. `digest` is the
+    /// streaming SHA-256 of the chunk's payload when the transport
+    /// hashes (integrity verification on); `None` means the bytes were
+    /// not hashed and the engine skips verification for this chunk.
+    Completed {
+        slot: usize,
+        digest: Option<[u8; 32]>,
+    },
     /// The slot's in-flight fetch (or connection) failed.
     Failed {
         slot: usize,
@@ -290,6 +302,14 @@ pub struct EngineParams<'a> {
     /// Persist a [`ProgressJournal`] here on every fault event and
     /// probe boundary (removed again on successful completion).
     pub journal_dir: Option<PathBuf>,
+    /// Chunk-integrity manifest (`Some` iff `--verify` is on). Carries
+    /// any previously known hashes plus availability bits set by the
+    /// delta-resume scan; chunks covered by set bits are never
+    /// re-requested, completed chunks are verified against their
+    /// expected hash (mismatch → [`FailureClass::Corrupt`] re-fetch)
+    /// or recorded trust-on-first-use, and the live manifest is
+    /// persisted next to the journal — and *kept* after completion.
+    pub manifest: Option<ManifestSet>,
     /// A slot aborts the session after this many *consecutive* failed
     /// fetches. Real transfers use a small bound so persistent errors
     /// fail loudly; simulated hostile schedules use `usize::MAX`
@@ -399,6 +419,22 @@ fn save_journal(
     *last = Some(journal);
 }
 
+/// Persist the chunk manifest when it changed since the last save.
+/// Shares the journal's cadence and, like it, must not kill the
+/// transfer on I/O trouble.
+fn save_manifest(dir: &Option<PathBuf>, manifest: &Option<ManifestSet>, dirty: &mut bool) {
+    let (Some(dir), Some(ms)) = (dir, manifest) else {
+        return;
+    };
+    if !*dirty {
+        return;
+    }
+    if let Err(e) = ms.save(dir) {
+        log::warn!("manifest save failed: {e}");
+    }
+    *dirty = false;
+}
+
 /// A mirror whose striping weight falls below this share of the best
 /// mirror's is treated as *degraded* by adaptive chunk sizing; chunks
 /// cut for its slots shrink proportionally. Comparable healthy mirrors
@@ -455,6 +491,7 @@ pub fn run_session_with_stats(
         done_prefix,
         checkpoint_after_s,
         journal_dir,
+        mut manifest,
         give_up_after,
     } = params;
     download.validate()?;
@@ -470,6 +507,24 @@ pub fn run_session_with_stats(
     let mut mirror_conns: Vec<usize> = vec![0; mirror_count];
     let mut sched =
         ChunkScheduler::new_with_progress(&records, behavior.mode, done_prefix.as_deref());
+    // Delta resume: chunks the manifest marks verified-available are
+    // already correct on disk — hand the scheduler their spans so only
+    // the gaps are ever cut. Manifests whose grid does not match the
+    // current transfer contribute nothing (stale hashes are replaced
+    // lazily by the verification pass below).
+    if let Some(ms) = &manifest {
+        for (i, r) in records.iter().enumerate() {
+            if let Some(m) = ms.get(&r.accession) {
+                if m.total_bytes == r.bytes && m.chunk_bytes == download.chunk_bytes {
+                    let spans = m.verified_spans();
+                    if !spans.is_empty() {
+                        sched.set_verified_spans(i, &spans);
+                    }
+                }
+            }
+        }
+    }
+    let mut manifest_dirty = manifest.is_some();
     let capacity = download.optimizer.c_max;
     let status = StatusArray::new(capacity);
     let mut window = ProbeWindow::new(
@@ -529,6 +584,7 @@ pub fn run_session_with_stats(
     let mut chunk_retries = 0usize;
     let mut connection_resets = 0usize;
     let mut server_rejects = 0usize;
+    let mut hash_mismatches = 0usize;
     let mut mirror_switches = 0usize;
     let mut completed = true;
     let mut fatal: Option<Error> = None;
@@ -743,6 +799,46 @@ pub fn run_session_with_stats(
         target_time += target as f64 * (now - last_tick);
         last_tick = now;
 
+        // --- Integrity verification (verify on): a completed chunk
+        // whose digest mismatches the manifest's expected hash is
+        // reclassified as a retryable `Corrupt` failure before the
+        // accounting pass; a chunk without a recorded hash is adopted
+        // trust-on-first-use (the hash pins every later resume).
+        if let Some(ms) = manifest.as_mut() {
+            for ev in events.iter_mut() {
+                let (i, d) = match ev {
+                    TransportEvent::Completed {
+                        slot,
+                        digest: Some(d),
+                    } => (*slot, *d),
+                    _ => continue,
+                };
+                let Some(chunk) = slots.get(i).and_then(|s| s.chunk.as_ref()) else {
+                    continue;
+                };
+                let r = &records[chunk.file];
+                let m = ms.entry(&r.accession, r.bytes, download.chunk_bytes);
+                let idx = m.chunk_index(chunk.offset);
+                match m.expected(idx) {
+                    Some(expected) if *expected != d => {
+                        *ev = TransportEvent::Failed {
+                            slot: i,
+                            class: FailureClass::Corrupt,
+                            error: format!(
+                                "chunk hash mismatch: {} offset {}",
+                                r.accession, chunk.offset
+                            ),
+                        };
+                    }
+                    _ => {
+                        m.record_hash(idx, d);
+                        m.set_available(idx, true);
+                        manifest_dirty = true;
+                    }
+                }
+            }
+        }
+
         // --- Account outcomes. ---
         stats.transport_events += events.len() as u64;
         let mut had_fault = false;
@@ -759,7 +855,7 @@ pub fn run_session_with_stats(
                         board.note_rtt(slot.mirror, (now - slot.connected_at).max(0.0));
                     }
                 }
-                TransportEvent::Completed { slot: i } => {
+                TransportEvent::Completed { slot: i, .. } => {
                     let slot = &mut slots[*i];
                     let chunk = slot
                         .chunk
@@ -806,6 +902,12 @@ pub fn run_session_with_stats(
                         FailureClass::Reject => {
                             server_rejects += 1;
                         }
+                        FailureClass::Corrupt => {
+                            // The bytes arrived but failed verification:
+                            // the connection is fine, the chunk was
+                            // requeued above — just count the mismatch.
+                            hash_mismatches += 1;
+                        }
                         FailureClass::Fatal => {
                             // First fatal wins; finish accounting the
                             // rest of this event batch (completions on
@@ -839,6 +941,7 @@ pub fn run_session_with_stats(
                 download.chunk_bytes,
                 &mut last_journal,
             );
+            save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
         }
 
         // --- Monitor sampling. ---
@@ -923,6 +1026,7 @@ pub fn run_session_with_stats(
                 download.chunk_bytes,
                 &mut last_journal,
             );
+            save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
             next_probe += probe_dt;
         }
 
@@ -940,7 +1044,7 @@ pub fn run_session_with_stats(
     stats.reactor_stall_ns = io.reactor_stall_ns;
 
     if let Some(e) = fatal {
-        // Leave the freshest journal behind for a resume.
+        // Leave the freshest journal + manifest behind for a resume.
         save_journal(
             &journal_dir,
             &records,
@@ -948,13 +1052,17 @@ pub fn run_session_with_stats(
             download.chunk_bytes,
             &mut last_journal,
         );
+        save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
         return Err(e);
     }
     if completed {
         if let Some(dir) = &journal_dir {
-            // Transfer complete: the journal is obsolete.
+            // Transfer complete: the journal is obsolete. The manifest
+            // is *not* — it is what lets a future run delta-resume
+            // over (or harvest chunks from) the finished artifacts.
             ProgressJournal::remove(dir)?;
         }
+        save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
     } else {
         save_journal(
             &journal_dir,
@@ -963,6 +1071,7 @@ pub fn run_session_with_stats(
             download.chunk_bytes,
             &mut last_journal,
         );
+        save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
     }
 
     stats.chunks_scaled = sched.chunks_scaled() as u64;
@@ -986,6 +1095,7 @@ pub fn run_session_with_stats(
         chunk_retries,
         connection_resets,
         server_rejects,
+        hash_mismatches,
         mirror_bytes: board.bytes(),
         mirror_switches,
         completed,

@@ -87,6 +87,10 @@ pub struct SessionReport {
     /// Requests rejected by transient server errors (HTTP 5xx
     /// analogue); the connection survived, the chunk was retried.
     pub server_rejects: usize,
+    /// Completed chunks whose SHA-256 mismatched the integrity
+    /// manifest (`--verify` only); each was discarded and re-fetched
+    /// ([`FailureClass::Corrupt`]). Zero with verification off.
+    pub hash_mismatches: usize,
     /// Payload bytes credited to each mirror index (completed chunks
     /// only). Single-mirror transfers have length 1; a multi-mirror
     /// transfer that striped (or failed over) shows bytes on ≥ 2
@@ -124,6 +128,9 @@ impl SessionReport {
                 "  [{} retries: {} resets, {} 5xx]",
                 self.chunk_retries, self.connection_resets, self.server_rejects
             ));
+        }
+        if self.hash_mismatches > 0 {
+            s.push_str(&format!("  [{} corrupt chunks re-fetched]", self.hash_mismatches));
         }
         if self.mirror_bytes.len() > 1 {
             let shares: Vec<String> = self

@@ -30,6 +30,7 @@ use crate::accession::resolver::{mirror_width, ResolutionCost};
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
 use crate::control::Controller;
+use crate::coordinator::manifest::{delta_scan, ManifestSet};
 use crate::coordinator::scheduler::{Chunk, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::runtime::XlaRuntime;
@@ -269,6 +270,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
     // the record restarts from scratch.
     let mut done_prefix: Option<Vec<u64>> = None;
     let mut journal_dir: Option<PathBuf> = None;
+    let mut manifest: Option<ManifestSet> = None;
     let mut handles: Vec<SinkFile> = Vec::new();
     if let Sink::Directory(dir) = &sink {
         std::fs::create_dir_all(dir)?;
@@ -302,6 +304,36 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
                 );
                 done_prefix = Some(frontiers);
             }
+        }
+        // Integrity: load (or start) the chunk manifest when verifying.
+        // With `reuse_local` the partial files on disk are rehashed
+        // against the manifest's expected digests up front (one
+        // sequential cold-start read) and only unverified chunks are
+        // ever scheduled — the journal's blind byte frontier is
+        // superseded by that chunk-level evidence. Without it, nothing
+        // on disk is trusted as verified: the manifest keeps its
+        // expected hashes for in-flight checks but drops availability.
+        if download.integrity.verify {
+            let mut ms = ManifestSet::load(dirp)?.unwrap_or_default();
+            if download.integrity.reuse_local {
+                let mut reused = 0usize;
+                for r in &records {
+                    let m = ms.entry(&r.accession, r.bytes, download.chunk_bytes);
+                    reused += delta_scan(&dirp.join(&r.accession), m)?;
+                }
+                if reused > 0 {
+                    log::info!("delta resume: {reused} chunks verified on disk, reusing them");
+                }
+                done_prefix = None;
+            } else {
+                for r in &records {
+                    let m = ms.entry(&r.accession, r.bytes, download.chunk_bytes);
+                    for i in 0..m.chunk_count() {
+                        m.set_available(i, false);
+                    }
+                }
+            }
+            manifest = Some(ms);
         }
         // Open + pre-size every output file once, up front. The shared
         // handles let sink writers (or reactor threads in inline mode)
@@ -362,6 +394,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
             done_prefix,
             checkpoint_after_s: None,
             journal_dir,
+            manifest,
             give_up_after: MAX_CONSECUTIVE_FAILURES,
         },
         &mut transport,

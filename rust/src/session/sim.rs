@@ -21,6 +21,7 @@ use std::sync::Arc;
 use crate::accession::RunRecord;
 use crate::config::DownloadConfig;
 use crate::control::Controller;
+use crate::coordinator::manifest::ManifestSet;
 use crate::coordinator::scheduler::Chunk;
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::netsim::{FlowId, NetSim, NetSimConfig, StepReport};
@@ -33,6 +34,18 @@ use crate::session::SessionReport;
 use crate::{Error, Result};
 
 pub use crate::session::engine::ToolBehavior;
+
+/// Ground-truth digest of a simulated chunk.
+///
+/// The simulator moves byte *counts*, not byte *values*, so the
+/// canonical content of chunk `(accession, offset, len)` is defined as
+/// the SHA-256 of that triple. The transport computes it on completion
+/// and the session pre-records it in the expected manifest — playing
+/// the role of provider-published checksums — so a corrupted delivery
+/// (digest perturbed) mismatches exactly like a real flipped bit would.
+pub fn sim_chunk_digest(accession: &str, offset: u64, len: u64) -> [u8; 32] {
+    crate::util::sha256::sha256(format!("{accession}:{offset}+{len}").as_bytes())
+}
 
 /// Virtual session clock: a shared cell the simulated transport writes
 /// after every step. `park` is a no-op — stepping *is* time passing.
@@ -76,6 +89,14 @@ pub struct SimTransport {
     /// Reused step-report buffer ([`NetSim::step_into`]) so polling the
     /// simulator allocates nothing in steady state.
     scratch: StepReport,
+    /// Whether completions carry a chunk digest (`--verify`). Off by
+    /// default so unverified sessions skip the hashing work entirely
+    /// and stay bit-identical to pre-integrity behaviour.
+    verify: bool,
+    /// Per-slot in-flight chunk identity `(accession, offset, len)`,
+    /// recorded at `begin_fetch` so the completion digest can be
+    /// derived ([`sim_chunk_digest`]).
+    chunk_meta: Vec<Option<(String, u64, u64)>>,
 }
 
 impl SimTransport {
@@ -100,7 +121,14 @@ impl SimTransport {
             clock,
             per_mirror_conns,
             scratch: StepReport::default(),
+            verify: false,
+            chunk_meta: vec![None; capacity],
         })
+    }
+
+    /// Enable per-chunk digests on completion events (`--verify`).
+    pub fn set_verify(&mut self, on: bool) {
+        self.verify = on;
     }
 }
 
@@ -136,12 +164,15 @@ impl Transport for SimTransport {
     fn begin_fetch(
         &mut self,
         slot: usize,
-        _record: &RunRecord,
+        record: &RunRecord,
         chunk: &Chunk,
         _mirror: usize,
     ) -> Result<()> {
         let id = self.flows[slot]
             .ok_or_else(|| Error::Sim(format!("begin_fetch on disconnected slot {slot}")))?;
+        if self.verify {
+            self.chunk_meta[slot] = Some((record.accession.clone(), chunk.offset, chunk.len));
+        }
         self.sim
             .begin_request(id, chunk.len as f64, chunk.cold, slot as u64)
     }
@@ -176,7 +207,21 @@ impl Transport for SimTransport {
                 self.recorder.add_bytes(ev.bytes as u64);
             }
             if ev.request_done {
-                events.push(TransportEvent::Completed { slot });
+                let digest = if self.verify {
+                    self.chunk_meta[slot].as_ref().map(|(acc, off, len)| {
+                        let mut d = sim_chunk_digest(acc, *off, *len);
+                        if ev.corrupted {
+                            // Silent in-flight corruption: the payload
+                            // that arrived is not the payload that was
+                            // sent, so its digest differs.
+                            d[0] ^= 0xFF;
+                        }
+                        d
+                    })
+                } else {
+                    None
+                };
+                events.push(TransportEvent::Completed { slot, digest });
             } else if ev.became_ready {
                 events.push(TransportEvent::Ready { slot });
             }
@@ -214,6 +259,8 @@ pub struct SimSession<'a> {
     params: SimSessionParams<'a>,
     done_prefix: Option<Vec<u64>>,
     checkpoint_after_s: Option<f64>,
+    manifest: Option<ManifestSet>,
+    journal_dir: Option<std::path::PathBuf>,
 }
 
 impl<'a> SimSession<'a> {
@@ -223,6 +270,8 @@ impl<'a> SimSession<'a> {
             params,
             done_prefix: None,
             checkpoint_after_s: None,
+            manifest: None,
+            journal_dir: None,
         }
     }
 
@@ -242,6 +291,24 @@ impl<'a> SimSession<'a> {
         self
     }
 
+    /// Supply an explicit integrity manifest (e.g. one persisted by an
+    /// earlier checkpointed run) instead of the expected manifest the
+    /// session otherwise derives from its records when
+    /// `integrity.verify` is on. Chunks already marked available are
+    /// seeded into the scheduler as verified spans and never
+    /// re-requested.
+    pub fn with_manifest(mut self, manifest: ManifestSet) -> SimSession<'a> {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Persist checkpoint state (journal + manifest) into `dir`, the
+    /// way the real driver does in its output directory.
+    pub fn with_journal_dir(mut self, dir: std::path::PathBuf) -> SimSession<'a> {
+        self.journal_dir = Some(dir);
+        self
+    }
+
     /// Run to completion (or checkpoint); returns the report.
     pub fn run(self) -> Result<SessionReport> {
         self.run_with_stats().map(|(report, _)| report)
@@ -255,7 +322,31 @@ impl<'a> SimSession<'a> {
             params,
             done_prefix,
             checkpoint_after_s,
+            manifest,
+            journal_dir,
         } = self;
+        let verify = params.download.integrity.verify;
+        // With verification on and no caller-supplied manifest, derive
+        // the expected per-chunk hashes from the records — the
+        // simulated analogue of provider-published checksums. No chunk
+        // is marked available yet; availability is earned by verified
+        // completions (or carried in via [`SimSession::with_manifest`]).
+        let manifest = manifest.or_else(|| {
+            if !verify {
+                return None;
+            }
+            let mut ms = ManifestSet::new();
+            for r in &params.records {
+                let m = ms.entry(&r.accession, r.bytes, params.download.chunk_bytes);
+                for idx in 0..m.chunk_count() {
+                    let offset = idx as u64 * params.download.chunk_bytes;
+                    let len = m.chunk_len(idx);
+                    let d = sim_chunk_digest(&r.accession, offset, len);
+                    m.record_hash(idx, d);
+                }
+            }
+            Some(ms)
+        });
         let recorder = Arc::new(ThroughputRecorder::new());
         let clock = VirtualClock::new();
         let mut transport = SimTransport::new(
@@ -266,6 +357,7 @@ impl<'a> SimSession<'a> {
             recorder.clone(),
             clock.clone(),
         )?;
+        transport.set_verify(verify);
         run_session_with_stats(
             EngineParams {
                 download: params.download,
@@ -276,7 +368,8 @@ impl<'a> SimSession<'a> {
                 recorder,
                 done_prefix,
                 checkpoint_after_s,
-                journal_dir: None,
+                journal_dir,
+                manifest,
                 // Simulated fault schedules are adversarial by design;
                 // recovery must outlast them rather than give up.
                 give_up_after: usize::MAX,

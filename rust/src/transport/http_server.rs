@@ -66,6 +66,12 @@ pub struct ServerFaultWindow {
     /// This is the loopback reproduction of the pathological stall the
     /// client's whole-chunk progress deadline exists to catch.
     pub dribble_bytes_per_s: u64,
+    /// Silent corruption: probability a response starting inside the
+    /// window carries a flipped payload byte. The transfer itself
+    /// succeeds — correct status, correct length — so only client-side
+    /// hash verification can notice. The loopback counterpart of the
+    /// simulator's [`crate::netsim::FaultKind`] `BitFlip`.
+    pub corrupt_prob: f64,
 }
 
 /// Server throttling knobs.
@@ -194,6 +200,12 @@ pub fn fault_windows_from_schedule(
                 // of a rate collapse; capped so tests stay fast.
                 added_latency_s: (0.1 / factor.max(1e-3)).min(2.0),
                 path_prefix: Some(format!("/m{mirror}/")),
+                ..ServerFaultWindow::default()
+            }),
+            FaultKind::BitFlip { frac, duration_s } => out.push(ServerFaultWindow {
+                from_s: ev.at_s,
+                until_s: ev.at_s + duration_s,
+                corrupt_prob: *frac,
                 ..ServerFaultWindow::default()
             }),
             _ => {} // connection-level classes: see fault_drop_* knobs
@@ -511,6 +523,39 @@ fn serve_connection(
             continue;
         }
 
+        // Silent-corruption windows: decide once per response whether
+        // this body carries a flipped byte. The draw is deterministic
+        // in (fault_seed, window index, request ordinal) and seeded
+        // differently from the 503 draws so the two compose
+        // independently, matching the simulator's BitFlip semantics.
+        let mut corrupt_this_response = false;
+        if !shared.throttle.fault_windows.is_empty() {
+            let up_s = shared.started.elapsed().as_secs_f64();
+            for (wi, w) in shared.throttle.fault_windows.iter().enumerate() {
+                let applies = match &w.path_prefix {
+                    Some(prefix) => path.starts_with(prefix.as_str()),
+                    None => true,
+                };
+                if applies && w.corrupt_prob > 0.0 && up_s >= w.from_s && up_s < w.until_s {
+                    if w.corrupt_prob >= 1.0 {
+                        corrupt_this_response = true;
+                    } else {
+                        let mut draw = Prng::new(
+                            shared
+                                .throttle
+                                .fault_seed
+                                .wrapping_add(0xC0DE + wi as u64)
+                                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                                ^ req_no as u64,
+                        );
+                        if draw.next_f64() < w.corrupt_prob {
+                            corrupt_this_response = true;
+                        }
+                    }
+                }
+            }
+        }
+
         // --- Throttled body. ---
         let mut offset = start;
         let mut remaining = len;
@@ -563,6 +608,9 @@ fn serve_connection(
             if dribble_rate > 0 {
                 let piece = remaining.min(64) as usize;
                 fill_payload(file.seed, offset, &mut buf[..piece]);
+                if corrupt_this_response && sent_this_response == 0 && piece > 0 {
+                    buf[0] ^= 0xFF;
+                }
                 writer.write_all(&buf[..piece])?;
                 writer.flush()?;
                 offset += piece as u64;
@@ -581,6 +629,9 @@ fn serve_connection(
                 g.take_blocking(want);
             }
             fill_payload(file.seed, offset, &mut buf[..want]);
+            if corrupt_this_response && sent_this_response == 0 && want > 0 {
+                buf[0] ^= 0xFF;
+            }
             writer.write_all(&buf[..want])?;
             offset += want as u64;
             remaining -= want as u64;
@@ -706,9 +757,16 @@ mod tests {
                     duration_s: 5.0,
                 },
             },
+            FaultEvent {
+                at_s: 50.0,
+                kind: FaultKind::BitFlip {
+                    frac: 0.8,
+                    duration_s: 6.0,
+                },
+            },
         ]);
         let windows = fault_windows_from_schedule(&schedule);
-        assert_eq!(windows.len(), 4, "resets have no HTTP window analogue");
+        assert_eq!(windows.len(), 5, "resets have no HTTP window analogue");
         assert_eq!(windows[0].reject_prob, 0.7);
         assert_eq!((windows[0].from_s, windows[0].until_s), (1.0, 5.0));
         assert_eq!(windows[1].reject_prob, 1.0);
@@ -718,6 +776,11 @@ mod tests {
         assert_eq!(windows[3].path_prefix.as_deref(), Some("/m1/"));
         assert!((windows[3].added_latency_s - 1.0).abs() < 1e-9);
         assert_eq!(windows[3].reject_prob, 0.0);
+        // BitFlip maps to a silent-corruption window — no rejection,
+        // no latency, just corrupt_prob.
+        assert_eq!(windows[4].corrupt_prob, 0.8);
+        assert_eq!((windows[4].from_s, windows[4].until_s), (50.0, 56.0));
+        assert_eq!(windows[4].reject_prob, 0.0);
         // Profile overlay is deterministic and non-empty for 5xx-heavy
         // profiles.
         let a = ThrottleConfig::default().with_fault_profile(FaultProfile::ServerErrors, 9, 60.0);

@@ -93,6 +93,7 @@ use crate::metrics::recorder::ThroughputRecorder;
 use crate::session::engine::{FailureClass, TransportEvent, TransportIoStats};
 use crate::transport::fetcher::CONNECT_TIMEOUT;
 use crate::transport::sink::{PooledBuf, Sink, SinkConfig, SinkFile, WriteJob};
+use crate::util::sha256::Sha256;
 use crate::{Error, Result};
 
 /// Raw `poll(2)` — the only system interface the reactor needs beyond
@@ -266,6 +267,12 @@ struct Conn {
     window_start: Instant,
     /// Bytes (head + payload) received since `window_start`.
     window_bytes: u64,
+    /// Streaming chunk hasher (`--verify`) for the discard and inline
+    /// write modes, where the reactor itself sends the `Completed` ack.
+    /// Sink-mode chunks are hashed on the writer threads instead, so
+    /// this stays `None` there and the reactor hot path does no
+    /// hashing.
+    hasher: Option<Sha256>,
 }
 
 /// What a reactor thread tracks per slot.
@@ -281,8 +288,9 @@ enum SlotState {
 enum Fate {
     /// Nothing to report; keep the connection.
     Keep,
-    /// Chunk fully delivered; connection back to Idle.
-    Completed,
+    /// Chunk fully delivered (carrying its digest when the reactor
+    /// hashed it); connection back to Idle.
+    Completed(Option<[u8; 32]>),
     /// Failure reported, connection survives (drained error body).
     FailKeep(FailureClass, String),
     /// Failure reported, connection closed.
@@ -301,6 +309,8 @@ struct ReactorCtx {
     recorder: Arc<ThroughputRecorder>,
     progress: ProgressPolicy,
     sink: Arc<Sink>,
+    /// Per-chunk SHA-256 verification is on (`--verify`).
+    hash: bool,
 }
 
 struct ConnectorCtx {
@@ -389,6 +399,7 @@ impl Reactor {
                 recorder: recorder.clone(),
                 progress,
                 sink: sink.clone(),
+                hash: sink_cfg.hash,
             };
             joins.push(
                 std::thread::Builder::new()
@@ -748,6 +759,7 @@ fn handle_cmd(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, cmd: Cmd)
                         req_buf: Vec::new(),
                         window_start: Instant::now(),
                         window_bytes: 0,
+                        hasher: None,
                     };
                     arm_fetch(&mut c, spec, ctx);
                     conns.insert(slot, SlotState::Conn(c));
@@ -823,8 +835,8 @@ fn start_connect(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: 
 fn settle(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, slot: usize, fate: Fate) {
     match fate {
         Fate::Keep => {}
-        Fate::Completed => {
-            let _ = ctx.events_tx.send(TransportEvent::Completed { slot });
+        Fate::Completed(digest) => {
+            let _ = ctx.events_tx.send(TransportEvent::Completed { slot, digest });
         }
         Fate::FailKeep(class, error) => {
             let _ = ctx
@@ -867,6 +879,14 @@ fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
     c.write_off = spec.chunk.offset;
     c.pending = None;
     c.sink_gen = ctx.sink.next_gen();
+    // Reactor-side hashing only where the reactor also acks: discard
+    // mode (no output handle) and the inline legacy mode. Sink-mode
+    // chunks are hashed by the writer that acks them.
+    c.hasher = if ctx.hash && (spec.out.is_none() || ctx.sink.is_inline()) {
+        Some(Sha256::new())
+    } else {
+        None
+    };
     c.spec = Some(spec);
     c.st = HttpState::Sending { sent: 0 };
     c.window_start = Instant::now();
@@ -913,6 +933,9 @@ fn push_payload(
     ctx: &ReactorCtx,
 ) -> std::result::Result<Push, Fate> {
     let Some(out) = c.out.clone() else {
+        if let Some(h) = c.hasher.as_mut() {
+            h.update(data);
+        }
         ctx.recorder.add_bytes(data.len() as u64);
         return Ok(Push::Done { deferred: false });
     };
@@ -922,6 +945,9 @@ fn push_payload(
                 FailureClass::Fatal,
                 format!("write {}: {e}", out.path.display()),
             ));
+        }
+        if let Some(h) = c.hasher.as_mut() {
+            h.update(data);
         }
         c.write_off += data.len() as u64;
         ctx.recorder.add_bytes(data.len() as u64);
@@ -983,9 +1009,11 @@ fn finish_chunk(c: &mut Conn, deferred: bool) -> Fate {
     c.spec = None;
     c.st = HttpState::Idle;
     if deferred {
+        // The sink writer acks (and carries the digest it streamed).
+        c.hasher = None;
         Fate::Keep
     } else {
-        Fate::Completed
+        Fate::Completed(c.hasher.take().map(|h| h.finalize()))
     }
 }
 
@@ -1469,6 +1497,7 @@ mod tests {
                 min_bytes: 1,
             },
             sink: Arc::new(sink),
+            hash: false,
         };
         let mut c = Conn {
             stream,
@@ -1487,6 +1516,7 @@ mod tests {
             req_buf: Vec::new(),
             window_start: Instant::now(),
             window_bytes: 0,
+            hasher: None,
         };
         peer.write_all(&[0u8; 4096]).unwrap();
         peer.flush().unwrap();

@@ -37,7 +37,7 @@
 //!   poison the chunk's remaining queued jobs so at most one terminal
 //!   event per chunk generation ever reaches the engine.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::fs::File;
 use std::os::unix::fs::FileExt;
 use std::path::PathBuf;
@@ -51,6 +51,7 @@ use crate::metrics::gauge::PeakGauge;
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::session::engine::{FailureClass, TransportEvent, TransportIoStats};
 use crate::transport::reactor::KillSwitch;
+use crate::util::sha256::Sha256;
 use crate::{Error, Result};
 
 /// Size of one pooled payload buffer. Matches the reactor's scratch
@@ -78,6 +79,11 @@ pub struct SinkConfig {
     /// the backpressure and goodput suites. Zero (the default and the
     /// only value reachable from user config) is free.
     pub write_latency: Duration,
+    /// Stream each chunk's payload through SHA-256 on the writer
+    /// threads (`--verify`): the `Completed` ack then carries the
+    /// chunk digest for the engine's manifest check. Off by default —
+    /// unverified sessions skip the hashing work entirely.
+    pub hash: bool,
 }
 
 impl Default for SinkConfig {
@@ -87,19 +93,21 @@ impl Default for SinkConfig {
             queue_bytes: 64 * 1024 * 1024,
             coalesce_bytes: 1024 * 1024,
             write_latency: Duration::ZERO,
+            hash: false,
         }
     }
 }
 
 impl SinkConfig {
     /// Resolve the user-facing knobs (`sink_threads`, `sink_queue_mb`,
-    /// `coalesce_kb`).
+    /// `coalesce_kb`, `integrity.verify`).
     pub fn from_download(cfg: &DownloadConfig) -> SinkConfig {
         SinkConfig {
             threads: cfg.sink_threads,
             queue_bytes: cfg.sink_queue_mb * 1024 * 1024,
             coalesce_bytes: cfg.coalesce_kb * 1024,
             write_latency: Duration::ZERO,
+            hash: cfg.integrity.verify,
         }
     }
 }
@@ -241,6 +249,7 @@ struct WriterCtx {
     kill: KillSwitch,
     coalesce_bytes: usize,
     write_latency: Duration,
+    hash: bool,
 }
 
 impl Sink {
@@ -269,6 +278,7 @@ impl Sink {
                 kill: kill.clone(),
                 coalesce_bytes: cfg.coalesce_bytes,
                 write_latency: cfg.write_latency,
+                hash: cfg.hash,
             };
             joins.push(
                 std::thread::Builder::new()
@@ -344,10 +354,22 @@ impl Sink {
     }
 }
 
+/// Per-writer streaming-hash state (`SinkConfig::hash`): one running
+/// [`Sha256`] per in-flight chunk generation, fed in arrival order,
+/// finalized on the chunk's last job.
+#[derive(Default)]
+struct HashState {
+    /// Running hashers keyed by `(slot, gen)`.
+    hashers: HashMap<(usize, u64), Sha256>,
+    /// Finalized digests awaiting their last job's flush ack.
+    digests: HashMap<(usize, u64), [u8; 32]>,
+}
+
 fn writer_loop(ctx: WriterCtx) {
     let mut batch: Vec<WriteJob> = Vec::with_capacity(MAX_BATCH_JOBS);
     let mut merged: Vec<u8> = Vec::with_capacity(ctx.coalesce_bytes);
     let mut poisoned: HashSet<(usize, u64)> = HashSet::new();
+    let mut hashes = HashState::default();
     loop {
         if ctx.kill.is_killed() {
             return;
@@ -363,7 +385,7 @@ fn writer_loop(ctx: WriterCtx) {
                 Err(_) => break,
             }
         }
-        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
         batch.clear(); // drops the jobs → buffers recycle into the pool
     }
 }
@@ -376,14 +398,42 @@ fn process_batch(
     batch: &mut Vec<WriteJob>,
     merged: &mut Vec<u8>,
     poisoned: &mut HashSet<(usize, u64)>,
+    hashes: &mut HashState,
 ) {
     let queued: u64 = batch.iter().map(|j| j.buf.len() as u64).sum();
+    // Feed the streaming hashers in *arrival* order, before the
+    // coalescing sort below reorders the batch: one chunk's jobs route
+    // to one writer in submit order, so arrival order is offset order
+    // within a (slot, gen) — exactly the byte order of the payload.
+    if ctx.hash {
+        for j in batch.iter() {
+            let key = (j.slot, j.gen);
+            if poisoned.contains(&key) {
+                continue;
+            }
+            if !hashes.hashers.contains_key(&key) {
+                // A slot carries one chunk at a time, so any older
+                // generation on this slot is dead — drop its state
+                // instead of leaking it (abandoned fetches never send
+                // a `last` job).
+                hashes.hashers.retain(|&(s, g), _| s != j.slot || g == j.gen);
+                hashes.digests.retain(|&(s, g), _| s != j.slot || g == j.gen);
+                hashes.hashers.insert(key, Sha256::new());
+            }
+            let h = hashes.hashers.get_mut(&key).expect("hasher just ensured");
+            h.update(j.buf.as_slice());
+            if j.last {
+                let h = hashes.hashers.remove(&key).expect("hasher present");
+                hashes.digests.insert(key, h.finalize());
+            }
+        }
+    }
     batch.retain(|j| !poisoned.contains(&(j.slot, j.gen)));
     batch.sort_by_key(|j| (Arc::as_ptr(&j.file.file) as usize, j.offset));
     let mut i = 0;
     while i < batch.len() {
         let n = run_len(batch, i, ctx.coalesce_bytes);
-        flush_run(ctx, merged, &batch[i..i + n], poisoned);
+        flush_run(ctx, merged, &batch[i..i + n], poisoned, hashes);
         i += n;
     }
     ctx.stats.queued.sub(queued);
@@ -415,6 +465,7 @@ fn flush_run(
     merged: &mut Vec<u8>,
     run: &[WriteJob],
     poisoned: &mut HashSet<(usize, u64)>,
+    hashes: &mut HashState,
 ) {
     let head = &run[0];
     if !ctx.write_latency.is_zero() {
@@ -436,16 +487,21 @@ fn flush_run(
             ctx.recorder.add_bytes(total);
             for j in run {
                 if j.last {
+                    let digest = hashes.digests.remove(&(j.slot, j.gen));
                     let _ = ctx
                         .events_tx
-                        .send(TransportEvent::Completed { slot: j.slot });
+                        .send(TransportEvent::Completed { slot: j.slot, digest });
                 }
             }
         }
         Err(e) => {
             // The whole run failed: fail every chunk it carried bytes
-            // for, once each, and drop that chunk's still-queued jobs.
+            // for, once each, and drop that chunk's still-queued jobs
+            // (and any streaming-hash state — the re-fetch rehashes
+            // from scratch under a fresh generation).
             for j in run {
+                hashes.hashers.remove(&(j.slot, j.gen));
+                hashes.digests.remove(&(j.slot, j.gen));
                 if poisoned.insert((j.slot, j.gen)) {
                     let _ = ctx.events_tx.send(TransportEvent::Failed {
                         slot: j.slot,
@@ -470,6 +526,13 @@ mod tests {
     }
 
     fn writer_ctx(latency: Duration) -> (WriterCtx, Receiver<TransportEvent>) {
+        writer_ctx_hashing(latency, false)
+    }
+
+    fn writer_ctx_hashing(
+        latency: Duration,
+        hash: bool,
+    ) -> (WriterCtx, Receiver<TransportEvent>) {
         let (_job_tx, job_rx) = channel::<WriteJob>();
         let (events_tx, events_rx) = channel::<TransportEvent>();
         let ctx = WriterCtx {
@@ -480,6 +543,7 @@ mod tests {
             kill: KillSwitch::default(),
             coalesce_bytes: 1024 * 1024,
             write_latency: latency,
+            hash,
         };
         (ctx, events_rx)
     }
@@ -530,14 +594,51 @@ mod tests {
         ];
         let mut merged = Vec::new();
         let mut poisoned = HashSet::new();
-        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        let mut hashes = HashState::default();
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
         assert_eq!(ctx.stats.write_syscalls.load(Ordering::SeqCst), 1);
         assert_eq!(std::fs::read(&path).unwrap(), b"aaaabbbbcc");
         match events_rx.try_recv().unwrap() {
-            TransportEvent::Completed { slot } => assert_eq!(slot, 3),
+            TransportEvent::Completed { slot, digest } => {
+                assert_eq!(slot, 3);
+                assert!(digest.is_none(), "no digest with hashing off");
+            }
             other => panic!("expected Completed, got {other:?}"),
         }
         assert!(events_rx.try_recv().is_err(), "exactly one ack per chunk");
+    }
+
+    #[test]
+    fn hashing_writer_acks_with_the_chunk_digest() {
+        let path = tmp("hashed.bin");
+        let file = SinkFile {
+            file: Arc::new(File::create(&path).unwrap()),
+            path: Arc::new(path.clone()),
+        };
+        let pool = BufferPool::new(0);
+        let (ctx, events_rx) = writer_ctx_hashing(Duration::ZERO, true);
+        let mut merged = Vec::new();
+        let mut poisoned = HashSet::new();
+        let mut hashes = HashState::default();
+        // The chunk's jobs arrive across two batches; the digest must
+        // cover the whole payload in arrival (= offset) order.
+        let mut batch = vec![job(&pool, &file, 2, 11, 0, b"hello ", false)];
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
+        assert!(events_rx.try_recv().is_err(), "no ack before the last job");
+        let mut batch = vec![job(&pool, &file, 2, 11, 6, b"world", true)];
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
+        match events_rx.try_recv().unwrap() {
+            TransportEvent::Completed { slot, digest } => {
+                assert_eq!(slot, 2);
+                assert_eq!(
+                    digest,
+                    Some(crate::util::sha256::sha256(b"hello world")),
+                    "digest must cover the streamed payload"
+                );
+            }
+            other => panic!("expected Completed, got {other:?}"),
+        }
+        assert!(hashes.hashers.is_empty() && hashes.digests.is_empty());
     }
 
     #[test]
@@ -555,7 +656,8 @@ mod tests {
         ];
         let mut merged = Vec::new();
         let mut poisoned = HashSet::new();
-        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        let mut hashes = HashState::default();
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
         assert_eq!(ctx.stats.write_syscalls.load(Ordering::SeqCst), 2);
         let got = std::fs::read(&path).unwrap();
         assert_eq!(&got[0..2], b"xx");
@@ -576,8 +678,9 @@ mod tests {
         let (ctx, events_rx) = writer_ctx(Duration::ZERO);
         let mut merged = Vec::new();
         let mut poisoned = HashSet::new();
+        let mut hashes = HashState::default();
         let mut batch = vec![job(&pool, &file, 5, 9, 0, b"zz", false)];
-        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
         match events_rx.try_recv().unwrap() {
             TransportEvent::Failed { slot, class, error } => {
                 assert_eq!(slot, 5);
@@ -589,7 +692,7 @@ mod tests {
         // The chunk's later jobs (same slot+gen) are dropped silently:
         // no second terminal event, no Completed from the last job.
         let mut batch = vec![job(&pool, &file, 5, 9, 2, b"zz", true)];
-        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned);
+        process_batch(&ctx, &mut batch, &mut merged, &mut poisoned, &mut hashes);
         assert!(events_rx.try_recv().is_err());
         assert_eq!(ctx.stats.write_syscalls.load(Ordering::SeqCst), 1);
         // A fresh generation on the same slot writes normally again.

@@ -6,12 +6,14 @@
 //! replacing `serde_json` — used for the artifact manifest and metric
 //! dumps), a CSV writer ([`csv`]), and a property-based-testing
 //! micro-framework ([`prop`], replacing `proptest`) used by the test
-//! suite for coordinator/netsim invariants.
+//! suite for coordinator/netsim invariants, and a streaming SHA-256
+//! ([`sha256`], replacing `sha2`) backing the chunk-integrity layer.
 
 pub mod csv;
 pub mod json;
 pub mod prng;
 pub mod prop;
+pub mod sha256;
 
 /// Clamp a float into `[lo, hi]` (total-order, NaN maps to `lo`).
 pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {

@@ -83,13 +83,14 @@ fn committed_smoke_baseline_stays_consistent() {
 #[ignore = "explicitly refreshes the committed baseline file"]
 fn refresh_committed_smoke_baseline() {
     let mut report = run_smoke();
-    assert_eq!(report.cases.len(), 5, "smoke suite changed shape");
+    assert_eq!(report.cases.len(), 6, "smoke suite changed shape");
     for case in &mut report.cases {
         case.wall_s = 0.0;
         case.ns_per_tick = 0.0;
         case.ticks_per_sec = 0.0;
         case.allocs_per_tick = 0.0;
         case.reactor_stall_ns = 0.0;
+        case.hash_ns_per_mb = 0.0;
     }
     let mut text = report.to_json().to_string_compact();
     text.push('\n');

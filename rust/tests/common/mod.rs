@@ -169,6 +169,7 @@ pub fn run_real_with_sink_cfg(
             done_prefix: None,
             checkpoint_after_s: None,
             journal_dir: None,
+            manifest: None,
             give_up_after: 6,
         },
         &mut transport,

@@ -32,7 +32,17 @@ use fastbiodl::session::SessionReport;
 const SIZES: [u64; 3] = [60_000_000, 50_000_000, 40_000_000];
 
 fn run_cell(kind: OptimizerKind, profile: FaultProfile, seed: u64) -> SessionReport {
-    let cfg = fault_download_cfg(kind, 1_800.0);
+    run_cell_with(kind, profile, seed, false)
+}
+
+fn run_cell_with(
+    kind: OptimizerKind,
+    profile: FaultProfile,
+    seed: u64,
+    verify: bool,
+) -> SessionReport {
+    let mut cfg = fault_download_cfg(kind, 1_800.0);
+    cfg.integrity.verify = verify;
     let controller = build_controller(&cfg.optimizer, None).unwrap();
     let faults = profile.schedule(seed, 600.0, LINK_MBPS);
     let params = SimSessionParams {
@@ -100,6 +110,34 @@ fn controller_fault_matrix_completes_with_invariants() {
             println!("matrix cell: {}", rep.summary());
             assert_cell_invariants(&rep);
         }
+    }
+}
+
+#[test]
+fn bitflip_cells_converge_hash_verified_under_every_controller() {
+    // The silent-corruption column of the matrix, run with chunk-hash
+    // verification on: every controller must detect the flipped chunks
+    // (hash mismatch -> Corrupt retry) and still converge to a fully
+    // verified download. Without `--verify` the same profile is
+    // invisible by design — bytes arrive and count — so this cell is
+    // the one place the matrix proves corruption is survivable rather
+    // than merely unnoticed.
+    for kind in CONTROLLERS {
+        let rep = run_cell_with(kind, FaultProfile::BitFlip, 1234, true);
+        println!("bitflip cell: {}", rep.summary());
+        assert_cell_invariants(&rep);
+        assert!(
+            rep.hash_mismatches > 0,
+            "{}: bitflip profile corrupted nothing — cell is vacuous",
+            rep.tool
+        );
+        assert!(
+            rep.chunk_retries >= rep.hash_mismatches,
+            "{}: {} mismatches but only {} retries — corrupt chunks kept",
+            rep.tool,
+            rep.hash_mismatches,
+            rep.chunk_retries
+        );
     }
 }
 

@@ -1,0 +1,379 @@
+//! Property-based tests for the chunk-integrity layer: availability
+//! bitfield semantics, manifest persistence round-trips, and the
+//! headline equivalence — a verified resume (interrupt, persist,
+//! lose/corrupt some chunks, resume) must converge to the same fully
+//! verified end state as an uninterrupted verified download, under
+//! random seeded corruption/drop schedules on the virtual clock.
+//! Runtime-free.
+//!
+//! Replay a failure with `PROP_SEED=<seed> cargo test --test prop_integrity`.
+
+mod common;
+
+use common::{fault_download_cfg, fault_netsim, fault_records, CHUNK_BYTES};
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::config::OptimizerKind;
+use fastbiodl::coordinator::manifest::{ChunkManifest, ManifestSet};
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::netsim::{FaultEvent, FaultKind, FaultSchedule};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::SessionReport;
+use fastbiodl::util::prng::Prng;
+use fastbiodl::util::prop::{check, Config};
+
+#[test]
+fn bitfield_semantics_hold_for_arbitrary_grids() {
+    // Random grids — including chunk counts that are not a multiple of
+    // 8, where the final bitfield byte is only partially used — with a
+    // random set of available chunks. Every read-side view (single
+    // bits, counts, byte totals, merged spans) must agree with the set
+    // we wrote.
+    check(
+        Config {
+            cases: 64,
+            ..Config::default()
+        },
+        "availability bitfield semantics",
+        |g| {
+            let chunk_bytes = g.range_u64(1, 1_000);
+            // 1..=41 chunks: exercises 1-byte, partial-byte, and
+            // multi-byte bitfields.
+            let n = g.range_u64(1, 41);
+            // Random tail: total is NOT forced to a chunk multiple.
+            let total = (n - 1) * chunk_bytes + g.range_u64(1, chunk_bytes);
+            let mask = g.next_u64();
+            (total, chunk_bytes, mask)
+        },
+        |(total, chunk_bytes, mask)| {
+            let mut m = ChunkManifest::new(*total, *chunk_bytes);
+            let n = m.chunk_count();
+            if m.bitfield().len() != (n + 7) / 8 {
+                return Err(format!("bitfield {} bytes for {n} chunks", m.bitfield().len()));
+            }
+            let set: Vec<usize> = (0..n).filter(|i| (mask >> (i % 64)) & 1 == 1).collect();
+            for &i in &set {
+                m.record_hash(i, [i as u8; 32]);
+                m.set_available(i, true);
+            }
+            for i in 0..n {
+                if m.is_available(i) != set.contains(&i) {
+                    return Err(format!("bit {i} disagrees with the written set"));
+                }
+            }
+            if m.available_count() != set.len() {
+                return Err(format!(
+                    "available_count {} != {} set bits",
+                    m.available_count(),
+                    set.len()
+                ));
+            }
+            let expect_bytes: u64 = set.iter().map(|&i| m.chunk_len(i)).sum();
+            if m.verified_bytes() != expect_bytes {
+                return Err(format!(
+                    "verified_bytes {} != {expect_bytes}",
+                    m.verified_bytes()
+                ));
+            }
+            // Spans tile exactly the available chunks: disjoint, sorted,
+            // chunk-aligned, summing to verified_bytes.
+            let spans = m.verified_spans();
+            let mut covered = 0u64;
+            let mut last_end = 0u64;
+            for &(off, len) in &spans {
+                if off < last_end {
+                    return Err(format!("span ({off},{len}) overlaps/unsorted"));
+                }
+                if off % chunk_bytes != 0 {
+                    return Err(format!("span offset {off} not grid-aligned"));
+                }
+                last_end = off + len;
+                covered += len;
+            }
+            if covered != expect_bytes {
+                return Err(format!("spans cover {covered} != {expect_bytes}"));
+            }
+            // Clearing every bit empties all views.
+            for &i in &set {
+                m.set_available(i, false);
+            }
+            if m.available_count() != 0 || !m.verified_spans().is_empty() {
+                return Err("cleared bitfield still reports availability".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn manifest_set_roundtrips_through_json_for_arbitrary_contents() {
+    // Random multi-file manifest sets — random grids, a random subset
+    // of hashes known, availability only where a hash exists (the load
+    // path rejects the converse by design) — must survive the
+    // save/load JSON round trip bit-for-bit.
+    check(
+        Config {
+            cases: 32,
+            ..Config::default()
+        },
+        "manifest JSON persistence round-trip",
+        |g| (g.next_u64(), g.range_u64(1, 4) as usize),
+        |(seed, n_files)| {
+            let mut g = Prng::new(*seed);
+            let mut set = ManifestSet::new();
+            for f in 0..*n_files {
+                let chunk_bytes = g.range_u64(1, 4_096);
+                let n = g.range_u64(1, 30);
+                let total = (n - 1) * chunk_bytes + g.range_u64(1, chunk_bytes);
+                let m = set.entry(&format!("SRRP{f:04}"), total, chunk_bytes);
+                for i in 0..m.chunk_count() {
+                    match g.below(3) {
+                        0 => {} // hash unknown, bit clear
+                        1 => {
+                            let mut d = [0u8; 32];
+                            for b in d.iter_mut() {
+                                *b = g.below(256) as u8;
+                            }
+                            m.record_hash(i, d);
+                        }
+                        _ => {
+                            let mut d = [0u8; 32];
+                            for b in d.iter_mut() {
+                                *b = g.below(256) as u8;
+                            }
+                            m.record_hash(i, d);
+                            m.set_available(i, true);
+                        }
+                    }
+                }
+            }
+            let dir = std::env::temp_dir().join(format!(
+                "fbdl-prop-manifest-{}-{seed:x}",
+                std::process::id()
+            ));
+            set.save(&dir).map_err(|e| e.to_string())?;
+            let loaded = ManifestSet::load(&dir)
+                .map_err(|e| e.to_string())?
+                .ok_or("manifest vanished after save")?;
+            std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
+            if loaded != set {
+                return Err("manifest set changed across the JSON round trip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random hostile schedule biased toward the integrity-relevant fault
+/// classes: silent corruption, mid-body truncation, resets.
+fn integrity_schedule(g: &mut Prng) -> FaultSchedule {
+    let n = g.range_u64(1, 7) as usize;
+    let mut events = Vec::new();
+    for _ in 0..n {
+        let at_s = g.range_f64(0.5, 30.0);
+        let kind = match g.below(4) {
+            0 | 1 => FaultKind::BitFlip {
+                frac: g.range_f64(0.1, 1.0),
+                duration_s: g.range_f64(0.5, 6.0),
+            },
+            2 => FaultKind::MidBodyDrop {
+                after_bytes: g.range_f64(50_000.0, 1_500_000.0),
+                frac: g.range_f64(0.0, 1.0),
+                duration_s: g.range_f64(0.5, 6.0),
+            },
+            _ => FaultKind::ConnectionReset {
+                count: 1 + g.below(3) as usize,
+            },
+        };
+        events.push(FaultEvent { at_s, kind });
+    }
+    FaultSchedule::new(events)
+}
+
+fn run_verified(
+    faults: FaultSchedule,
+    sizes: &[u64],
+    seed: u64,
+    manifest: Option<ManifestSet>,
+    journal_dir: Option<std::path::PathBuf>,
+    checkpoint_s: Option<f64>,
+) -> Result<SessionReport, String> {
+    let mut cfg = fault_download_cfg(OptimizerKind::GradientDescent, 1_200.0);
+    cfg.integrity.verify = true;
+    let controller = build_controller(&cfg.optimizer, None).map_err(|e| e.to_string())?;
+    let behavior = ToolBehavior {
+        name: "integrity-prop".into(),
+        mode: SchedulerMode::Chunked {
+            chunk_bytes: cfg.chunk_bytes,
+            max_open_files: cfg.max_open_files,
+        },
+        keep_alive: true,
+        resolution: ResolutionCost::Batch { latency_s: 0.5 },
+    };
+    let params = SimSessionParams {
+        download: cfg,
+        behavior,
+        netsim: fault_netsim(faults),
+        records: fault_records("SRRI", sizes),
+        controller,
+        runtime: None,
+        seed,
+    };
+    let mut session = SimSession::new(params);
+    if let Some(ms) = manifest {
+        session = session.with_manifest(ms);
+    }
+    if let Some(dir) = journal_dir {
+        session = session.with_journal_dir(dir);
+    }
+    if let Some(s) = checkpoint_s {
+        session = session.with_checkpoint_after(s);
+    }
+    session.run().map_err(|e| e.to_string())
+}
+
+/// A completed verified run must end fully verified: every chunk of
+/// every file available, hashes all known.
+fn assert_fully_verified(dir: &std::path::Path, sizes: &[u64]) -> Result<(), String> {
+    let ms = ManifestSet::load(dir)
+        .map_err(|e| e.to_string())?
+        .ok_or("completed verified run left no manifest")?;
+    for (i, &size) in sizes.iter().enumerate() {
+        let m = ms
+            .get(&format!("SRRI{i:04}"))
+            .ok_or_else(|| format!("file {i} missing from manifest"))?;
+        if m.available_count() != m.chunk_count() {
+            return Err(format!(
+                "file {i}: {}/{} chunks verified after completion",
+                m.available_count(),
+                m.chunk_count()
+            ));
+        }
+        if m.verified_bytes() != size {
+            return Err(format!(
+                "file {i}: verified {} of {size} bytes",
+                m.verified_bytes()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn assert_completion(rep: &SessionReport, sizes: &[u64], resumed: u64) -> Result<(), String> {
+    if !rep.completed {
+        return Err("session reported incomplete".into());
+    }
+    if rep.frontiers != sizes {
+        return Err(format!(
+            "frontiers {:?} != sizes {:?} (tiling broken)",
+            rep.frontiers, sizes
+        ));
+    }
+    let payload: u64 = sizes.iter().sum();
+    let need = payload - resumed;
+    if rep.total_bytes < need {
+        return Err(format!("delivered {} < required {need}", rep.total_bytes));
+    }
+    let bound = need + rep.chunk_retries as u64 * CHUNK_BYTES;
+    if rep.total_bytes > bound {
+        return Err(format!(
+            "delivered {} > bound {bound}: double delivery?",
+            rep.total_bytes
+        ));
+    }
+    if rep.chunk_retries < rep.hash_mismatches {
+        return Err(format!(
+            "{} mismatches but only {} retries: corrupt chunk kept",
+            rep.hash_mismatches, rep.chunk_retries
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn verified_resume_converges_like_a_fresh_download_under_random_faults() {
+    // Phase 1 runs with verification under a random corruption-heavy
+    // schedule and is interrupted at a random checkpoint; the journal
+    // dir then holds the persisted manifest. Phase 2 simulates disk
+    // damage after the crash (delta_scan finding truncated or rotted
+    // chunks) by clearing a random subset of availability bits, then
+    // resumes from the manifest alone. The resumed run must schedule
+    // only the unverified remainder and converge to the exact end
+    // state of an uninterrupted verified download: complete, frontiers
+    // == sizes, every chunk of every file hash-verified.
+    check(
+        Config {
+            cases: 12,
+            ..Config::default()
+        },
+        "verified resume == fresh download",
+        |g| {
+            let n_files = g.range_u64(1, 2) as usize;
+            let sizes: Vec<u64> = (0..n_files)
+                .map(|_| g.range_u64(2_000_000, 6_000_000))
+                .collect();
+            let sched_seed = g.next_u64();
+            let sim_seed = g.next_u64();
+            let checkpoint_s = g.range_f64(2.0, 12.0);
+            let damage_mask = g.next_u64();
+            (sizes, sched_seed, sim_seed, checkpoint_s, damage_mask)
+        },
+        |(sizes, sched_seed, sim_seed, checkpoint_s, damage_mask)| {
+            let faults = integrity_schedule(&mut Prng::new(*sched_seed));
+            faults.validate()?;
+            let dir = std::env::temp_dir().join(format!(
+                "fbdl-prop-resume-{}-{sim_seed:x}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let first = run_verified(
+                faults.clone(),
+                sizes,
+                *sim_seed,
+                None,
+                Some(dir.clone()),
+                Some(*checkpoint_s),
+            )?;
+            if first.completed {
+                assert_completion(&first, sizes, 0)?;
+                assert_fully_verified(&dir, sizes)?;
+                std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
+                return Ok(());
+            }
+            // Crash state: the persisted manifest knows which chunks
+            // were verified. Damage a random subset of them — the sim
+            // analogue of delta_scan discovering truncated/corrupt
+            // data under the journal frontier.
+            let mut ms = ManifestSet::load(&dir)
+                .map_err(|e| e.to_string())?
+                .ok_or("checkpoint persisted no manifest")?;
+            for i in 0..sizes.len() {
+                let m = ms
+                    .get_mut(&format!("SRRI{i:04}"))
+                    .ok_or_else(|| format!("file {i} missing from checkpoint manifest"))?;
+                for idx in 0..m.chunk_count() {
+                    if m.is_available(idx) && (damage_mask >> (idx % 64)) & 1 == 1 {
+                        m.set_available(idx, false);
+                    }
+                }
+            }
+            let resumed: u64 = (0..sizes.len())
+                .map(|i| ms.get(&format!("SRRI{i:04}")).unwrap().verified_bytes())
+                .sum();
+            // Resume from the (damaged) manifest; only unverified
+            // chunks may be scheduled.
+            let second = run_verified(
+                faults.clone(),
+                sizes,
+                sim_seed.wrapping_add(1),
+                Some(ms),
+                Some(dir.clone()),
+                None,
+            )?;
+            assert_completion(&second, sizes, resumed)?;
+            assert_fully_verified(&dir, sizes)?;
+            std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}

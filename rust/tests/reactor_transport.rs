@@ -18,6 +18,7 @@ use common::run_real_with_sink_cfg;
 use fastbiodl::accession::resolver::ResolutionCost;
 use fastbiodl::accession::RunRecord;
 use fastbiodl::config::{DownloadConfig, OptimizerKind};
+use fastbiodl::coordinator::manifest::{ChunkManifest, ManifestSet};
 use fastbiodl::coordinator::resume::ProgressJournal;
 use fastbiodl::coordinator::scheduler::SchedulerMode;
 use fastbiodl::metrics::recorder::ThroughputRecorder;
@@ -31,6 +32,7 @@ use fastbiodl::transport::sink::SINK_BUF_BYTES;
 use fastbiodl::transport::{
     ProgressPolicy, ServerFaultWindow, SinkConfig, SinkFile, ThrottleConfig,
 };
+use fastbiodl::util::sha256::sha256;
 
 /// Base config shared by the runtime-free tests: fixed controller,
 /// fast monitor, generous timeout.
@@ -221,6 +223,7 @@ fn dead_reactor_pool_fails_the_session_instead_of_hanging() {
             done_prefix: None,
             checkpoint_after_s: None,
             journal_dir: None,
+            manifest: None,
             give_up_after: 6,
         },
         &mut transport,
@@ -386,6 +389,98 @@ fn resume_trusts_disk_over_journal() {
         assert_eq!(got, expect, "content mismatch in {}", r.accession);
     }
     assert!(ProgressJournal::load(&dir).unwrap().is_none());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_detects_corrupt_tail() {
+    // Integrity satellite (verified resume): a 6 MB file has 4 MB on
+    // disk, but one byte inside its second 1 MB chunk is flipped — and
+    // the journal optimistically claims 5 MB done. A blind resume would
+    // trust the frontier and ship the corrupt byte. With
+    // `--verify --reuse-local` the cold-start delta scan rehashes the
+    // partial file against the manifest: chunks 0, 2 and 3 verify and
+    // are reused (3 MB — half the file never re-downloads), the corrupt
+    // chunk 1 plus the missing tail (chunks 4–5) are re-fetched, and
+    // the finished file is bit-exact.
+    let file = ServedFile {
+        path: "/vol1/SRRTAINT".into(),
+        bytes: 6_000_000,
+        seed: 93,
+    };
+    let chunk_bytes: u64 = 1_000_000;
+    let server = ThrottledHttpServer::start(vec![file.clone()], ThrottleConfig::default()).unwrap();
+    let records = vec![RunRecord::new(
+        "SRRTAINT",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+
+    let mut expect = vec![0u8; file.bytes as usize];
+    fill_payload(file.seed, 0, &mut expect);
+
+    let dir = std::env::temp_dir().join(format!("fastbiodl-taint-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    {
+        use std::io::Write;
+        // A 4 MB prefix, correct except for one flipped byte at 1.5 MB
+        // (inside chunk 1).
+        let mut partial = expect[..4_000_000].to_vec();
+        partial[1_500_000] ^= 0x01;
+        let mut f = std::fs::File::create(dir.join("SRRTAINT")).unwrap();
+        f.write_all(&partial).unwrap();
+    }
+    // Manifest with the true per-chunk digests (as a prior verified run
+    // would have left behind, or a provider-published checksum list).
+    let mut m = ChunkManifest::new(file.bytes, chunk_bytes);
+    for idx in 0..m.chunk_count() {
+        let off = idx as u64 * chunk_bytes;
+        let len = m.chunk_len(idx);
+        m.record_hash(idx, sha256(&expect[off as usize..(off + len) as usize]));
+    }
+    let mut ms = ManifestSet::new();
+    ms.insert("SRRTAINT", m);
+    ms.save(&dir).unwrap();
+    // The journal overstates progress: 5 MB claimed, 4 MB on disk, and
+    // one of those claimed chunks is silently wrong.
+    ProgressJournal::capture(&records, &[5_000_000], chunk_bytes)
+        .save(&dir)
+        .unwrap();
+
+    let mut cfg = fixed_cfg(2, 4, chunk_bytes);
+    cfg.timeout_s = 60.0;
+    cfg.integrity.verify = true;
+    cfg.integrity.reuse_local = true;
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records: records.clone(),
+        controller,
+        runtime: None,
+        sink: Sink::Directory(dir.to_str().unwrap().into()),
+        name: "taint-resume".into(),
+    })
+    .unwrap();
+
+    println!("taint-resume run: {}", report.summary());
+    assert!(report.completed);
+    assert_eq!(report.files_completed, 1);
+    // Exactly the corrupt chunk and the missing tail were re-fetched —
+    // the three verified chunks (>= 50% of what was on disk) never
+    // moved over the network again.
+    assert_eq!(
+        report.total_bytes, 3_000_000,
+        "verified resume should re-fetch only chunks 1, 4 and 5"
+    );
+    let got = std::fs::read(dir.join("SRRTAINT")).unwrap();
+    assert_eq!(got, expect, "corrupt tail survived the verified resume");
+    assert!(ProgressJournal::load(&dir).unwrap().is_none());
+    // The manifest outlives the transfer (it is the artifact a future
+    // delta resume verifies against).
+    let after = ManifestSet::load(&dir).unwrap().expect("manifest kept");
+    assert_eq!(after.get("SRRTAINT").unwrap().available_count(), 6);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

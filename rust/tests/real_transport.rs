@@ -345,6 +345,112 @@ fn real_session_rides_out_server_5xx_windows() {
 }
 
 #[test]
+fn real_session_refetches_chunks_corrupted_by_server_window() {
+    // Silent-corruption window (the real-socket analogue of the
+    // simulator's BitFlip fault): every response starting in the first
+    // 1.2 s of uptime carries one flipped payload byte. The bytes
+    // arrive, parse, and hit the disk — only the per-chunk SHA-256
+    // check can notice. With `--verify` on and the expected hashes
+    // pre-seeded (provider-published checksums), the engine must
+    // classify each flipped chunk as Corrupt, re-fetch it after the
+    // window lifts, and assemble a bit-exact file. Runtime-free.
+    use fastbiodl::config::OptimizerKind;
+    use fastbiodl::coordinator::manifest::{ChunkManifest, ManifestSet};
+    use fastbiodl::coordinator::resume::ProgressJournal;
+    use fastbiodl::util::sha256::sha256;
+
+    let file = ServedFile {
+        path: "/vol1/SRRCORR".into(),
+        bytes: 4_000_000,
+        seed: 88,
+    };
+    let server = serve(
+        vec![file.clone()],
+        ThrottleConfig {
+            fault_windows: vec![ServerFaultWindow {
+                from_s: 0.0,
+                until_s: 1.2,
+                corrupt_prob: 1.0,
+                ..ServerFaultWindow::default()
+            }],
+            fault_seed: 7,
+            ..ThrottleConfig::default()
+        },
+    );
+    let records = vec![RunRecord::new(
+        "SRRCORR",
+        "TEST",
+        file.bytes,
+        format!("{}{}", server.base_url(), file.path),
+    )];
+
+    let chunk_bytes: u64 = 512 * 1024;
+    let mut expect = vec![0u8; file.bytes as usize];
+    fill_payload(88, 0, &mut expect);
+
+    // Pre-seed the manifest with the true chunk hashes — without them
+    // trust-on-first-use would adopt the corrupted chunks as truth.
+    let dir = std::env::temp_dir().join(format!("fastbiodl-corr-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut m = ChunkManifest::new(file.bytes, chunk_bytes);
+    for idx in 0..m.chunk_count() {
+        let off = idx as u64 * chunk_bytes;
+        let len = m.chunk_len(idx) as usize;
+        m.record_hash(idx, sha256(&expect[off as usize..off as usize + len]));
+    }
+    let mut ms = ManifestSet::new();
+    ms.insert("SRRCORR", m);
+    ms.save(&dir).unwrap();
+
+    let mut cfg = DownloadConfig::default();
+    cfg.chunk_bytes = chunk_bytes;
+    cfg.optimizer.kind = OptimizerKind::Fixed;
+    cfg.optimizer.fixed_level = 2;
+    cfg.optimizer.c_init = 2;
+    cfg.optimizer.c_max = 4;
+    cfg.optimizer.probe_interval_s = 0.5;
+    cfg.monitor_hz = 10.0;
+    cfg.timeout_s = 60.0;
+    cfg.integrity.verify = true;
+
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let report = run_real_session(RealSessionParams {
+        download: cfg,
+        records,
+        controller,
+        runtime: None,
+        sink: Sink::Directory(dir.to_str().unwrap().into()),
+        name: "corrupt-window".into(),
+    })
+    .unwrap();
+
+    println!("corrupt-window run: {}", report.summary());
+    assert!(report.completed);
+    assert_eq!(report.files_completed, 1);
+    assert!(
+        report.hash_mismatches >= 1,
+        "window corrupted nothing (mismatches {})",
+        report.hash_mismatches
+    );
+    assert!(report.chunk_retries >= report.hash_mismatches);
+    // Corrupted responses DO stream payload, so more than the file's
+    // bytes crossed the wire.
+    assert!(report.total_bytes >= file.bytes);
+    assert_eq!(report.frontiers, vec![file.bytes]);
+
+    // The assembled file is bit-exact: every flipped chunk was
+    // overwritten by a verified re-fetch.
+    let got = std::fs::read(dir.join("SRRCORR")).unwrap();
+    assert_eq!(got, expect, "corrupt bytes survived verification");
+    // Journal gone, manifest retained fully verified.
+    assert!(ProgressJournal::load(&dir).unwrap().is_none());
+    let kept = ManifestSet::load(&dir).unwrap().expect("manifest kept");
+    let m = kept.get("SRRCORR").unwrap();
+    assert_eq!(m.available_count(), m.chunk_count());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn per_mirror_fault_window_degrades_one_mirror_only() {
     // One loopback server stands in for two mirrors of the same object
     // (`/m0/...` and `/m1/...`). A 503 window scoped to the `/m0/`
