@@ -39,6 +39,7 @@ use crate::experiments::scenario;
 use crate::netsim::FaultProfile;
 use crate::optimizer::build_controller_with;
 use crate::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use crate::trace::{Tracer, DEFAULT_CAPACITY};
 use crate::util::json::{obj, Json};
 use crate::{Error, Result};
 
@@ -51,8 +52,11 @@ use crate::{Error, Result};
 /// grid, populated by real-transport runs through the same
 /// `EngineStats` plumbing. v4 added the integrity dimension: a
 /// `verify` case flag and the measured `hash_ns_per_mb` timing field
-/// (SHA-256 cost per MiB of payload; 0 on non-verify cases).
-pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v4";
+/// (SHA-256 cost per MiB of payload; 0 on non-verify cases). v5 added
+/// the observability dimension: a `trace` case flag (the case ran with
+/// the flight recorder attached) and the deterministic `trace_events`
+/// det field (events recorded; 0 on non-trace cases).
+pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v5";
 
 /// Virtual-time cap per case (s): hostile cells (brownouts at
 /// `c_max = 16`) would otherwise run long; every case reports goodput
@@ -112,6 +116,10 @@ pub struct CaseSpec {
     /// Per-chunk SHA-256 verification on (`--verify`): the case also
     /// measures raw hashing cost as `hash_ns_per_mb`.
     pub verify: bool,
+    /// Flight recorder attached (`--trace-out`): the case runs with a
+    /// live [`crate::trace::Tracer`] and reports the deterministic
+    /// event count, guarding that tracing never perturbs the sim.
+    pub trace: bool,
 }
 
 /// Short controller tag used in case ids ("gd" | "bayes" | "fixed").
@@ -124,17 +132,19 @@ fn optimizer_tag(kind: OptimizerKind) -> &'static str {
 }
 
 impl CaseSpec {
-    /// Stable identifier used as the baseline-diff key. Verify cases
-    /// carry a `+verify` suffix so they never collide with (or shadow)
-    /// the plain cell of the same grid coordinates.
+    /// Stable identifier used as the baseline-diff key. Verify and
+    /// trace cases carry a `+verify` / `+trace` suffix so they never
+    /// collide with (or shadow) the plain cell of the same grid
+    /// coordinates.
     pub fn id(&self) -> String {
         format!(
-            "{}/{}/{}/c{}{}",
+            "{}/{}/{}/c{}{}{}",
             self.dataset,
             self.profile.name(),
             optimizer_tag(self.optimizer),
             self.c_max,
-            if self.verify { "+verify" } else { "" }
+            if self.verify { "+verify" } else { "" },
+            if self.trace { "+trace" } else { "" }
         )
     }
 }
@@ -152,6 +162,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                         optimizer: OptimizerKind::GradientDescent,
                         c_max,
                         verify: false,
+                        trace: false,
                     });
                 }
             }
@@ -164,6 +175,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                 optimizer: OptimizerKind::GradientDescent,
                 c_max: 1024,
                 verify: false,
+                trace: false,
             });
             // One benign verify cell: per-chunk SHA-256 on, measuring
             // raw hashing cost (hash_ns_per_mb) and guarding that
@@ -174,6 +186,19 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                 optimizer: OptimizerKind::GradientDescent,
                 c_max: 16,
                 verify: true,
+                trace: false,
+            });
+            // One benign trace cell: the flight recorder attached,
+            // guarding that tracing perturbs neither the simulated
+            // outcome nor the engine hot path, and pinning the
+            // deterministic event count.
+            cases.push(CaseSpec {
+                dataset: "Amplicon-Digester",
+                profile: FaultProfile::None,
+                optimizer: OptimizerKind::GradientDescent,
+                c_max: 16,
+                verify: false,
+                trace: true,
             });
         }
         Suite::Full => {
@@ -196,6 +221,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                                 optimizer,
                                 c_max,
                                 verify: false,
+                                trace: false,
                             });
                         }
                     }
@@ -236,6 +262,10 @@ pub struct CaseResult {
     /// Chunks cut below full size by adaptive chunk sizing (0 with the
     /// default fault-blind config the grid runs under).
     pub chunks_scaled: u64,
+    /// Flight-recorder events recorded (trace cases only; 0 otherwise).
+    /// Deterministic per (suite, seed) like every other det field —
+    /// replay drift shows up here before it shows up in goodput.
+    pub trace_events: u64,
     // --- Timing (varies run to run): ---
     pub wall_s: f64,
     pub ticks: u64,
@@ -307,7 +337,10 @@ pub fn run_case_tuned(
     let controller = build_controller_with(&sc.download.optimizer, &sc.download.control, None)?;
     let behavior = ToolBehavior::fastbiodl(&sc.download);
     let chunk_bytes = sc.download.chunk_bytes;
-    let session = SimSession::new(SimSessionParams {
+    let tracer = spec
+        .trace
+        .then(|| std::sync::Arc::new(Tracer::with_capacity(DEFAULT_CAPACITY)));
+    let mut session = SimSession::new(SimSessionParams {
         download: sc.download,
         behavior,
         netsim: sc.netsim,
@@ -317,6 +350,9 @@ pub fn run_case_tuned(
         seed,
     })
     .with_checkpoint_after(CASE_HORIZON_S);
+    if let Some(tr) = &tracer {
+        session = session.with_tracer(tr.clone());
+    }
 
     let allocs_before = alloc::thread_allocations();
     let t0 = Instant::now();
@@ -366,6 +402,7 @@ pub fn run_case_tuned(
         retry_rate: report.chunk_retries as f64 / report.duration_s.max(f64::EPSILON),
         reject_rate: report.server_rejects as f64 / report.duration_s.max(f64::EPSILON),
         chunks_scaled: stats.chunks_scaled,
+        trace_events: tracer.as_ref().map_or(0, |t| t.events_recorded()),
         wall_s,
         ticks: stats.ticks,
         ns_per_tick: wall_s * 1e9 / ticks as f64,
@@ -439,6 +476,7 @@ impl BenchReport {
                             ("retry_rate", Json::Num(c.retry_rate)),
                             ("reject_rate", Json::Num(c.reject_rate)),
                             ("chunks_scaled", Json::Num(c.chunks_scaled as f64)),
+                            ("trace_events", Json::Num(c.trace_events as f64)),
                         ]),
                     ),
                     (
@@ -525,6 +563,7 @@ impl BenchReport {
                 retry_rate: req_f64(det, "retry_rate")?,
                 reject_rate: req_f64(det, "reject_rate")?,
                 chunks_scaled: req_u64(det, "chunks_scaled")?,
+                trace_events: req_u64(det, "trace_events")?,
                 wall_s: req_f64(timing, "wall_s")?,
                 ticks: req_u64(timing, "ticks")?,
                 ns_per_tick: req_f64(timing, "ns_per_tick")?,
@@ -604,6 +643,7 @@ pub fn diff(current: &BenchReport, baseline: &BenchReport, tolerance: f64) -> Ve
                 || cur.files_completed != base.files_completed
                 || cur.completed != base.completed
                 || cur.chunks_scaled != base.chunks_scaled
+                || cur.trace_events != base.trace_events
                 || (cur.goodput_mbps - base.goodput_mbps).abs() > base.goodput_mbps.abs() * 1e-9;
             if det_drift {
                 out.push(Regression {
@@ -727,6 +767,7 @@ pub fn run_sweep_cell(
         optimizer: OptimizerKind::GradientDescent,
         c_max: SWEEP_C_MAX,
         verify: false,
+        trace: false,
     };
     let result = run_case_tuned(&spec, seed, reconcile, Some(&tune))?;
     Ok(SweepCell {
@@ -823,6 +864,7 @@ mod tests {
                 retry_rate: 0.0,
                 reject_rate: 0.0,
                 chunks_scaled: 0,
+                trace_events: 0,
                 wall_s: 0.02,
                 ticks: 400,
                 ns_per_tick: 50_000.0,
@@ -905,11 +947,18 @@ mod tests {
     #[test]
     fn suites_have_the_advertised_shapes() {
         let smoke = suite_cases(Suite::Smoke);
-        assert_eq!(smoke.len(), 6, "4 grid cells + the c_max=1024 cell + the verify cell");
+        assert_eq!(
+            smoke.len(),
+            7,
+            "4 grid cells + the c_max=1024 cell + the verify cell + the trace cell"
+        );
         assert_eq!(smoke[4].c_max, 1024);
-        assert!(smoke[5].verify, "last smoke cell exercises integrity hashing");
+        assert!(smoke[5].verify, "smoke cell 5 exercises integrity hashing");
         assert!(smoke[5].id().ends_with("+verify"));
+        assert!(smoke[6].trace, "last smoke cell runs with the flight recorder");
+        assert!(smoke[6].id().ends_with("+trace"));
         assert!(smoke[..5].iter().all(|s| !s.verify));
+        assert!(smoke[..6].iter().all(|s| !s.trace));
         let full = suite_cases(Suite::Full);
         assert_eq!(full.len(), 108, "full grid is 3 x 4 x 3 x 3");
         assert!(full.len() >= 30);
@@ -995,6 +1044,7 @@ mod tests {
             optimizer: OptimizerKind::GradientDescent,
             c_max: 16,
             verify: false,
+            trace: false,
         };
         let a = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
         let b = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
@@ -1019,6 +1069,7 @@ mod tests {
             optimizer: OptimizerKind::GradientDescent,
             c_max: 16,
             verify: false,
+            trace: false,
         };
         let verified = CaseSpec {
             verify: true,
@@ -1037,5 +1088,33 @@ mod tests {
         // The real hashing cost is surfaced out-of-band.
         assert!(b.hash_ns_per_mb > 0.0, "verify case must measure hashing");
         assert_eq!(a.hash_ns_per_mb, 0.0);
+    }
+
+    #[test]
+    fn trace_case_matches_plain_outcome_and_counts_events() {
+        let plain = CaseSpec {
+            dataset: "Amplicon-Digester",
+            profile: FaultProfile::None,
+            optimizer: OptimizerKind::GradientDescent,
+            c_max: 16,
+            verify: false,
+            trace: false,
+        };
+        let traced = CaseSpec {
+            trace: true,
+            ..plain
+        };
+        assert!(traced.id().ends_with("+trace"));
+        let a = run_case(&plain, 7, ReconcileMode::Batched).unwrap();
+        let b = run_case(&traced, 7, ReconcileMode::Batched).unwrap();
+        // The flight recorder must not perturb the simulated run.
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.ticks, b.ticks, "tracing changed the replay");
+        assert_eq!(a.goodput_mbps.to_bits(), b.goodput_mbps.to_bits());
+        assert_eq!(a.trace_events, 0, "plain case records nothing");
+        assert!(b.trace_events > 0, "trace case recorded no events");
+        // And the event count itself is part of the deterministic replay.
+        let c = run_case(&traced, 7, ReconcileMode::Batched).unwrap();
+        assert_eq!(b.trace_events, c.trace_events);
     }
 }

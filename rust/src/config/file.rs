@@ -33,12 +33,17 @@
 //! [integrity]
 //! verify = false            # per-chunk SHA-256 verification
 //! reuse_local = false       # delta resume: rehash + reuse disk chunks
+//!
+//! [trace]
+//! out = "run.jsonl"         # flight-recorder export path (unset = off)
+//! format = "ndjson"         # or "chrome" (Perfetto / chrome://tracing)
+//! capacity = 65536          # ring-buffer capacity, in records
 //! ```
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::config::{DownloadConfig, MirrorStrategy, OptimizerKind};
+use crate::config::{DownloadConfig, MirrorStrategy, OptimizerKind, TraceFormat};
 use crate::{Error, Result};
 
 /// A scalar config value.
@@ -218,12 +223,19 @@ fn split_array_items(s: &str) -> Vec<String> {
 
 /// Overlay a parsed file onto a [`DownloadConfig`].
 pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
-    let known_prefixes = ["optimizer.", "download.", "mirror.", "control.", "integrity."];
+    let known_prefixes = [
+        "optimizer.",
+        "download.",
+        "mirror.",
+        "control.",
+        "integrity.",
+        "trace.",
+    ];
     for key in doc.keys() {
         if !known_prefixes.iter().any(|p| key.starts_with(p)) {
             return Err(Error::Config(format!(
                 "unknown config key '{key}' \
-                 (sections: [optimizer], [download], [mirror], [control], [integrity])"
+                 (sections: [optimizer], [download], [mirror], [control], [integrity], [trace])"
             )));
         }
     }
@@ -323,6 +335,21 @@ pub fn apply_to_config(doc: &TomlDoc, cfg: &mut DownloadConfig) -> Result<()> {
     };
     bool_opt("integrity.verify", &mut cfg.integrity.verify)?;
     bool_opt("integrity.reuse_local", &mut cfg.integrity.reuse_local)?;
+
+    if let Some(v) = doc.get("trace.out") {
+        cfg.trace.out = Some(
+            v.as_str()
+                .ok_or_else(|| Error::Config("'trace.out' must be a string".into()))?
+                .to_string(),
+        );
+    }
+    if let Some(v) = doc.get("trace.format") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| Error::Config("'trace.format' must be a string".into()))?;
+        cfg.trace.format = TraceFormat::parse(s)?;
+    }
+    usize_opt!("trace.capacity", cfg.trace.capacity);
     Ok(())
 }
 
@@ -437,6 +464,35 @@ mod tests {
         cfg.validate().unwrap();
         // Type error: the knobs are booleans.
         let doc = TomlDoc::parse("[integrity]\nverify = 1.0").unwrap();
+        let mut cfg = DownloadConfig::default();
+        assert!(apply_to_config(&doc, &mut cfg).is_err());
+    }
+
+    #[test]
+    fn trace_section_overlays() {
+        let doc = TomlDoc::parse(
+            r#"
+            [trace]
+            out = "run.jsonl"
+            format = "chrome"
+            capacity = 1024
+            "#,
+        )
+        .unwrap();
+        let mut cfg = DownloadConfig::default();
+        apply_to_config(&doc, &mut cfg).unwrap();
+        assert_eq!(cfg.trace.out.as_deref(), Some("run.jsonl"));
+        assert_eq!(cfg.trace.format, TraceFormat::Chrome);
+        assert_eq!(cfg.trace.capacity, 1024);
+        cfg.validate().unwrap();
+        // Type errors: out/format are strings, capacity an integer.
+        let doc = TomlDoc::parse("[trace]\nout = true").unwrap();
+        let mut cfg = DownloadConfig::default();
+        assert!(apply_to_config(&doc, &mut cfg).is_err());
+        let doc = TomlDoc::parse("[trace]\nformat = \"svg\"").unwrap();
+        let mut cfg = DownloadConfig::default();
+        assert!(apply_to_config(&doc, &mut cfg).is_err());
+        let doc = TomlDoc::parse("[trace]\ncapacity = \"big\"").unwrap();
         let mut cfg = DownloadConfig::default();
         assert!(apply_to_config(&doc, &mut cfg).is_err());
     }

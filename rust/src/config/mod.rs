@@ -236,6 +236,87 @@ impl IntegrityConfig {
     }
 }
 
+/// Trace export format (see [`crate::trace`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Versioned NDJSON (`fastbiodl-trace-v1`): one header line, one
+    /// compact JSON object per event. The default.
+    #[default]
+    Ndjson,
+    /// Chrome `trace_event` JSON, viewable in Perfetto or
+    /// `chrome://tracing`.
+    Chrome,
+}
+
+impl TraceFormat {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ndjson" | "jsonl" => Ok(TraceFormat::Ndjson),
+            "chrome" | "trace-event" | "perfetto" => Ok(TraceFormat::Chrome),
+            other => Err(Error::Config(format!(
+                "unknown trace format '{other}' (expected ndjson | chrome)"
+            ))),
+        }
+    }
+
+    /// Canonical name (the `--trace-format` spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceFormat::Ndjson => "ndjson",
+            TraceFormat::Chrome => "chrome",
+        }
+    }
+}
+
+/// Flight-recorder knobs (see [`crate::trace`]). Default is **off**
+/// (`out: None`): no recorder is constructed and every session is
+/// bit-identical to the untraced engine (pinned by
+/// `rust/tests/trace_events.rs`).
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Trace output path (`--trace-out`). `None` disables tracing.
+    pub out: Option<String>,
+    /// Export format for the file at [`Self::out`].
+    pub format: TraceFormat,
+    /// Ring-buffer capacity in records; the oldest records are
+    /// overwritten (and counted) once the session exceeds it.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            out: None,
+            format: TraceFormat::Ndjson,
+            capacity: crate::trace::DEFAULT_CAPACITY,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Whether a recorder should be constructed.
+    pub fn enabled(&self) -> bool {
+        self.out.is_some()
+    }
+
+    /// Parameter sanity.
+    pub fn validate(&self) -> Result<()> {
+        if !(16..=16_777_216).contains(&self.capacity) {
+            return Err(Error::Config(format!(
+                "trace capacity {} outside [16, 16777216]",
+                self.capacity
+            )));
+        }
+        if let Some(out) = &self.out {
+            if out.is_empty() {
+                return Err(Error::Config("trace out path must not be empty".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// How the session engine reconciles its worker-slot pool against the
 /// shared [`crate::coordinator::pool::StatusArray`] each control tick.
 ///
@@ -379,6 +460,9 @@ pub struct DownloadConfig {
     /// resume with local chunk reuse); defaults keep the hash-free
     /// behaviour.
     pub integrity: IntegrityConfig,
+    /// Flight-recorder knobs (event tracing); default off keeps every
+    /// session bit-identical to the untraced engine.
+    pub trace: TraceConfig,
     /// Worker-slot pool reconciliation strategy (see [`ReconcileMode`];
     /// `FullScan` exists as the measured baseline for `fastbiodl bench`
     /// and the equivalence tests).
@@ -424,6 +508,7 @@ impl Default for DownloadConfig {
             mirror: MirrorPolicy::default(),
             control: ControlConfig::default(),
             integrity: IntegrityConfig::default(),
+            trace: TraceConfig::default(),
             reconcile: ReconcileMode::default(),
             chunk_bytes: 32 * 1024 * 1024,
             monitor_hz: 4.0,
@@ -445,6 +530,7 @@ impl DownloadConfig {
         self.mirror.validate()?;
         self.control.validate()?;
         self.integrity.validate()?;
+        self.trace.validate()?;
         if self.integrity.verify && self.control.adaptive_chunks {
             // Verification hashes the fixed chunk grid; adaptive chunk
             // scaling cuts off-grid chunks that cannot be checked
@@ -555,6 +641,15 @@ impl DownloadConfig {
         }
         if let Some(b) = env_bool("FASTBIODL_REUSE_LOCAL")? {
             self.integrity.reuse_local = b;
+        }
+        if let Ok(out) = std::env::var("FASTBIODL_TRACE_OUT") {
+            self.trace.out = Some(out);
+        }
+        if let Ok(format) = std::env::var("FASTBIODL_TRACE_FORMAT") {
+            self.trace.format = TraceFormat::parse(&format)?;
+        }
+        if let Some(n) = env_usize("FASTBIODL_TRACE_CAPACITY")? {
+            self.trace.capacity = n;
         }
         Ok(())
     }
@@ -732,6 +827,29 @@ mod tests {
         dl.integrity.verify = true;
         assert!(dl.validate().is_ok());
         dl.control.adaptive_chunks = true;
+        assert!(dl.validate().is_err());
+    }
+
+    #[test]
+    fn trace_defaults_off_and_validates() {
+        let c = TraceConfig::default();
+        assert!(!c.enabled());
+        assert_eq!(c.format, TraceFormat::Ndjson);
+        assert_eq!(c.capacity, crate::trace::DEFAULT_CAPACITY);
+        c.validate().unwrap();
+        let mut bad = TraceConfig::default();
+        bad.capacity = 4;
+        assert!(bad.validate().is_err());
+        bad = TraceConfig::default();
+        bad.out = Some(String::new());
+        assert!(bad.validate().is_err());
+        assert_eq!(TraceFormat::parse("chrome").unwrap(), TraceFormat::Chrome);
+        assert_eq!(TraceFormat::parse("JSONL").unwrap(), TraceFormat::Ndjson);
+        assert!(TraceFormat::parse("svg").is_err());
+        assert_eq!(TraceFormat::Chrome.name(), "chrome");
+        // The whole-transfer validate chain covers the trace section.
+        let mut dl = DownloadConfig::default();
+        dl.trace.capacity = 0;
         assert!(dl.validate().is_err());
     }
 

@@ -11,8 +11,10 @@ use crate::metrics::summary::{mean_std, MeanStd};
 use crate::optimizer::build_controller_with;
 use crate::runtime::SharedRuntime;
 use crate::session::sim::{SimSession, SimSessionParams, ToolBehavior};
-use crate::session::SessionReport;
+use crate::session::{EngineStats, SessionReport};
+use crate::trace::Tracer;
 use crate::Result;
+use std::sync::Arc;
 
 /// Which tool to run in a scenario.
 #[derive(Clone, Debug)]
@@ -74,6 +76,18 @@ pub fn run_tool_once(
     runtime: &SharedRuntime,
     seed: u64,
 ) -> Result<SessionReport> {
+    run_tool_once_with_stats(scenario, tool, runtime, seed, None).map(|(report, _)| report)
+}
+
+/// [`run_tool_once`] keeping the engine-internal counters, optionally
+/// with a flight recorder attached (`--trace-out` on the sim command).
+pub fn run_tool_once_with_stats(
+    scenario: &Scenario,
+    tool: &Tool,
+    runtime: &SharedRuntime,
+    seed: u64,
+    tracer: Option<Arc<Tracer>>,
+) -> Result<(SessionReport, EngineStats)> {
     let (download, behavior, controller) = match tool {
         Tool::FastBioDl { download } => {
             // The download config carries the control-plane knobs
@@ -111,7 +125,11 @@ pub fn run_tool_once(
         runtime: Some(runtime),
         seed,
     };
-    SimSession::new(params).run()
+    let mut session = SimSession::new(params);
+    if let Some(tr) = tracer {
+        session = session.with_tracer(tr);
+    }
+    session.run_with_stats()
 }
 
 /// Summarize a report list into the paper's mean ± std columns.

@@ -37,6 +37,7 @@ pub mod optimizer;
 pub mod report;
 pub mod runtime;
 pub mod session;
+pub mod trace;
 pub mod transport;
 pub mod util;
 

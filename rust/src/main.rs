@@ -21,21 +21,28 @@ use std::sync::Arc;
 
 use fastbiodl::accession::{Accession, Catalog, Resolver};
 use fastbiodl::config::cli::Args;
-use fastbiodl::config::{DownloadConfig, OptimizerKind};
-use fastbiodl::experiments::runner::{run_tool_once, Tool};
+use fastbiodl::config::{DownloadConfig, OptimizerKind, TraceConfig, TraceFormat};
+use fastbiodl::experiments::runner::{run_tool_once_with_stats, Tool};
 use fastbiodl::experiments::{fig1, fig2, fig4, fig5, fig6, scenario, table1, table3};
 use fastbiodl::optimizer::build_controller_with;
 use fastbiodl::report::{sparkline, Table};
 use fastbiodl::runtime::{SharedRuntime, XlaRuntime};
-use fastbiodl::session::real::{run_real_session, RealSessionParams, Sink};
+use fastbiodl::session::real::{run_real_session_with_stats, RealSessionParams, Sink};
 use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::{session_report_json, EngineStats, SessionReport};
+use fastbiodl::trace::Tracer;
 use fastbiodl::transport::{ServedFile, ThrottleConfig, ThrottledHttpServer};
-use fastbiodl::{Error, Result};
+use fastbiodl::util::logger;
+use fastbiodl::{out, vlog, Error, Result};
 
 const HELP: &str = r#"fastbiodl — adaptive parallel downloader for large genomic datasets
 
 USAGE:
     fastbiodl <command> [args] [--flags]
+
+GLOBAL FLAGS (any command):
+    -q, --quiet               errors and warnings only; stdout stays clean
+    -v, --verbose             extra diagnostics on stderr
 
 COMMANDS:
     download <accession...>   simulated adaptive download (Table 2 catalog)
@@ -61,6 +68,15 @@ COMMANDS:
                               and re-fetched instead of shipped
         --reconcile <m>       engine slot reconciliation: batched
                               (default) or full-scan (naive reference)
+        --report-json <path>  write the machine-readable session record
+                              (schema fastbiodl-report-v1)
+        --trace-out <path>    flight recorder: export the session's
+                              event trace here (default off; tracing
+                              never alters a session's behaviour)
+        --trace-format <f>    ndjson (default; schema fastbiodl-trace-v1)
+                              or chrome (trace_event JSON for Perfetto)
+        --trace-capacity <n>  trace ring-buffer capacity in events
+                              (default 65536; oldest overwritten)
     fetch <url...>            real-socket adaptive download over HTTP
         --out <dir>           write payloads here (default: discard)
         --chunk-mb <n>        range-request size (default 32)
@@ -90,6 +106,13 @@ COMMANDS:
                               at cold start and re-download only the
                               chunks that fail verification (requires
                               --verify)
+        --report-json <path>  machine-readable session record
+        --trace-out <path>    flight-recorder trace (see download)
+        --trace-format <f>    ndjson (default) or chrome
+        --trace-capacity <n>  trace ring capacity (default 65536)
+    trace-validate <path>     check an NDJSON trace against the
+                              fastbiodl-trace-v1 schema (exit non-zero
+                              on any malformed line)
     serve                     run the throttled loopback archive server
         --files <n>           number of synthetic files (default 4)
         --size-mb <n>         size of each file (default 64)
@@ -134,7 +157,8 @@ ENVIRONMENT:
     FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER,
     FASTBIODL_MIRROR_STRATEGY, FASTBIODL_FAULT_PENALTY, FASTBIODL_PROGRESS_WINDOW,
     FASTBIODL_SINK_THREADS, FASTBIODL_SINK_QUEUE_MB, FASTBIODL_COALESCE_KB,
-    FASTBIODL_VERIFY, FASTBIODL_REUSE_LOCAL
+    FASTBIODL_VERIFY, FASTBIODL_REUSE_LOCAL,
+    FASTBIODL_TRACE_OUT, FASTBIODL_TRACE_FORMAT, FASTBIODL_TRACE_CAPACITY
                               config overrides (see config module docs)
 "#;
 
@@ -149,7 +173,25 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env()?;
+    // Strip the global verbosity flags before command parsing so they
+    // work in any argv position; the last one wins.
+    let mut level = logger::Level::Normal;
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| match a.as_str() {
+            "-q" | "--quiet" => {
+                level = logger::Level::Quiet;
+                false
+            }
+            "-v" | "--verbose" => {
+                level = logger::Level::Verbose;
+                false
+            }
+            _ => true,
+        })
+        .collect();
+    logger::init(level);
+    let args = Args::parse(argv)?;
     match args.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -160,6 +202,7 @@ fn run() -> Result<()> {
         "bench" => cmd_bench(&args),
         "download" => cmd_download(&args),
         "fetch" => cmd_fetch(&args),
+        "trace-validate" => cmd_trace_validate(&args),
         "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "utility-surface" => cmd_utility_surface(&args),
@@ -174,22 +217,22 @@ fn load_runtime() -> Result<SharedRuntime> {
 }
 
 fn cmd_datasets() -> Result<()> {
-    println!("Table 2 — evaluation datasets:");
+    out!("Table 2 — evaluation datasets:");
     for p in &fastbiodl::accession::TABLE2_PRESETS {
-        println!("  {}", p.describe());
-        println!("    organism: {}", p.organism);
+        out!("  {}", p.describe());
+        out!("    organism: {}", p.organism);
     }
     Ok(())
 }
 
 fn cmd_info() -> Result<()> {
     let dir = XlaRuntime::default_dir();
-    println!("artifact dir : {}", dir.display());
+    out!("artifact dir : {}", dir.display());
     let rt = load_runtime()?;
-    println!("platform     : {}", rt.platform());
-    println!("constants    : {:?}", rt.constants());
+    out!("platform     : {}", rt.platform());
+    out!("constants    : {:?}", rt.constants());
     for name in fastbiodl::runtime::REQUIRED_ARTIFACTS {
-        println!("artifact     : {name} (compiled)");
+        out!("artifact     : {name} (compiled)");
     }
     Ok(())
 }
@@ -235,7 +278,80 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     if let Some(mb) = args.flag_usize("chunk-mb")? {
         cfg.chunk_bytes = (mb as u64) * 1024 * 1024;
     }
+    if let Some(path) = args.flag("trace-out") {
+        cfg.trace.out = Some(path.to_string());
+    }
+    if let Some(f) = args.flag("trace-format") {
+        cfg.trace.format = TraceFormat::parse(f)?;
+    }
+    if let Some(n) = args.flag_usize("trace-capacity")? {
+        cfg.trace.capacity = n;
+    }
     cfg.apply_env()?;
+    Ok(())
+}
+
+/// Build the flight recorder when `--trace-out` (or the matching env
+/// var) asked for one; `None` keeps every hot path untraced.
+fn build_tracer(cfg: &TraceConfig) -> Result<Option<Arc<Tracer>>> {
+    let Some(out) = cfg.out.as_ref() else {
+        return Ok(None);
+    };
+    cfg.validate()?;
+    let tracer = Tracer::with_capacity(cfg.capacity).with_blackbox(format!("{out}.blackbox"));
+    Ok(Some(Arc::new(tracer)))
+}
+
+/// Export the recorded trace in the configured format. Called even
+/// when the session itself failed: a post-mortem trace is the point.
+fn write_trace(tracer: &Tracer, cfg: &TraceConfig) -> Result<()> {
+    let Some(out) = cfg.out.as_ref() else {
+        return Ok(());
+    };
+    let snap = tracer.snapshot();
+    let text = match cfg.format {
+        TraceFormat::Ndjson => snap.to_ndjson(),
+        TraceFormat::Chrome => snap.to_chrome_json(),
+    };
+    std::fs::write(out, text)?;
+    out!(
+        "wrote {out} ({} events, {} dropped, format {})",
+        snap.records.len(),
+        snap.dropped,
+        cfg.format.name()
+    );
+    Ok(())
+}
+
+/// Write the versioned machine-readable session record
+/// (`--report-json`).
+fn write_report_json(
+    path: &str,
+    report: &SessionReport,
+    stats: Option<&EngineStats>,
+) -> Result<()> {
+    let mut text = session_report_json(report, stats).to_string_compact();
+    text.push('\n');
+    std::fs::write(path, &text)?;
+    out!("wrote {path} (schema {})", fastbiodl::session::REPORT_SCHEMA);
+    Ok(())
+}
+
+fn cmd_trace_validate(args: &Args) -> Result<()> {
+    args.expect_flags(&[])?;
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("trace-validate needs a trace file path".into()))?;
+    let text = std::fs::read_to_string(path)?;
+    let stats = fastbiodl::trace::validate_ndjson(&text)?;
+    out!(
+        "{path}: valid {} ({} events, ring capacity {}, {} dropped)",
+        fastbiodl::trace::TRACE_SCHEMA,
+        stats.events,
+        stats.capacity,
+        stats.dropped
+    );
     Ok(())
 }
 
@@ -279,7 +395,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         let out_path = args.flag("out").unwrap_or("BENCH_sweep.json");
         let grid = bench::sweep_grid();
-        println!(
+        out!(
             "bench sweep: {} cells over {} hostile profiles (seed {seed}, dataset {})",
             grid.len(),
             bench::SWEEP_PROFILES.len(),
@@ -288,7 +404,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut cells = Vec::with_capacity(grid.len());
         for (profile, tune) in grid {
             let cell = bench::run_sweep_cell(profile, tune, seed, reconcile)?;
-            println!(
+            out!(
                 "  {:<34} {:>8.1} Mbps  {:>7.1}s  {:>4} retries{}",
                 cell.id(),
                 cell.result.goodput_mbps,
@@ -298,9 +414,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             );
             cells.push(cell);
         }
-        println!("best cell per profile:");
+        out!("best cell per profile:");
         for best in bench::best_per_profile(&cells) {
-            println!(
+            out!(
                 "  {:<12} k={:<5} lr={:<4} probe={:<4} -> {:.1} Mbps",
                 best.profile.name(),
                 best.tune.k,
@@ -312,14 +428,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let mut text = bench::sweep_to_json(&cells, seed, reconcile).to_string_compact();
         text.push('\n');
         std::fs::write(out_path, &text)?;
-        println!("wrote {out_path} ({} cells)", cells.len());
+        out!("wrote {out_path} ({} cells)", cells.len());
         return Ok(());
     }
 
     let out_path = args.flag("out").unwrap_or("BENCH_engine.json");
 
     let specs = bench::suite_cases(suite);
-    println!(
+    out!(
         "bench suite '{}' ({} cases, seed {seed}, reconcile {})",
         suite.name(),
         specs.len(),
@@ -328,7 +444,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut cases = Vec::with_capacity(specs.len());
     for spec in &specs {
         let case = bench::run_case(spec, seed, reconcile)?;
-        println!(
+        out!(
             "  {:<42} {:>8.1} Mbps  {:>7} ticks  {:>9.0} ns/tick  {:>6.2} alloc/tick  scan {:>6.1}/tick{}",
             case.id,
             case.goodput_mbps,
@@ -349,7 +465,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut text = report.to_json().to_string_compact();
     text.push('\n');
     std::fs::write(out_path, &text)?;
-    println!(
+    out!(
         "wrote {out_path} ({} cases, schema {})",
         report.cases.len(),
         bench::SCHEMA_VERSION
@@ -362,7 +478,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             // values are frozen yet. Freeze them by replacing the file
             // with a real report from the same suite+seed (e.g. the
             // one this run just wrote).
-            println!(
+            out!(
                 "baseline {baseline_path} is a bootstrap (no cases): nothing to diff. \
                  Freeze it by committing {out_path} as the new baseline."
             );
@@ -370,17 +486,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         let regressions = bench::diff(&report, &baseline, tolerance);
         if regressions.is_empty() {
-            println!(
+            out!(
                 "baseline {baseline_path}: no regressions (ns/tick tolerance {:.0}%)",
                 tolerance * 100.0
             );
         } else {
-            println!(
+            // Regression details go through the warn channel so they
+            // survive --quiet (CI runs want the findings, not just the
+            // non-zero exit).
+            log::warn!(
                 "baseline {baseline_path}: {} regression(s):",
                 regressions.len()
             );
             for r in &regressions {
-                println!("  [{}] {}: {}", r.kind.name(), r.case_id, r.detail);
+                log::warn!("  [{}] {}: {}", r.kind.name(), r.case_id, r.detail);
             }
             // Baseline mode is an explicit gate: scripts and CI must
             // see a non-zero exit, not have to scrape stdout.
@@ -397,7 +516,8 @@ fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
         "faults", "mirror-strategy", "mirror-conns", "reconcile", "fault-penalty",
-        "adaptive-chunks", "verify",
+        "adaptive-chunks", "verify", "report-json", "trace-out", "trace-format",
+        "trace-capacity",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -438,7 +558,7 @@ fn cmd_download(args: &Args) -> Result<()> {
         };
         sc = sc.with_fault_profile(profile, seed, horizon);
         if !sc.netsim.faults.is_empty() {
-            println!(
+            out!(
                 "fault profile '{}': {} scheduled events",
                 profile.name(),
                 sc.netsim.faults.len()
@@ -452,23 +572,24 @@ fn cmd_download(args: &Args) -> Result<()> {
     let (records, _) = resolver.resolve(&accessions)?;
     sc.records = records;
 
-    println!(
+    out!(
         "downloading {} files ({}) on scenario '{}' with {} optimizer",
         sc.records.len(),
         fastbiodl::util::fmt_bytes(Catalog::total_bytes(&sc.records)),
         sc.name,
         sc.download.optimizer.kind.name(),
     );
+    let tracer = build_tracer(&sc.download.trace)?;
     // Prefer the compiled XLA artifacts; fall back to the pure-Rust
     // mirror controllers when they are unavailable so the simulated
     // path (including --faults) works on a bare checkout.
-    let report = match load_runtime() {
-        Ok(rt) => run_tool_once(&sc, &Tool::fastbiodl(&sc), &rt, seed)?,
+    let outcome = match load_runtime() {
+        Ok(rt) => run_tool_once_with_stats(&sc, &Tool::fastbiodl(&sc), &rt, seed, tracer.clone()),
         Err(e) => {
-            eprintln!("note: XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
+            log::warn!("XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
             let controller =
                 build_controller_with(&sc.download.optimizer, &sc.download.control, None)?;
-            SimSession::new(SimSessionParams {
+            let mut session = SimSession::new(SimSessionParams {
                 download: sc.download.clone(),
                 behavior: ToolBehavior::fastbiodl(&sc.download),
                 netsim: sc.netsim.clone(),
@@ -476,11 +597,23 @@ fn cmd_download(args: &Args) -> Result<()> {
                 controller,
                 runtime: None,
                 seed,
-            })
-            .run()?
+            });
+            if let Some(tr) = &tracer {
+                session = session.with_tracer(tr.clone());
+            }
+            session.run_with_stats()
         }
     };
-    print_report(&report);
+    // Export the trace before propagating a session error: the
+    // post-mortem record matters most on the failing runs.
+    if let Some(tr) = &tracer {
+        write_trace(tr, &sc.download.trace)?;
+    }
+    let (report, stats) = outcome?;
+    if let Some(path) = args.flag("report-json") {
+        write_report_json(path, &report, Some(&stats))?;
+    }
+    print_report(&report, Some(&stats));
     Ok(())
 }
 
@@ -489,7 +622,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
         "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks", "progress-window",
         "progress-min-bytes", "sink-threads", "sink-queue-mb", "coalesce-kb", "verify",
-        "reuse-local",
+        "reuse-local", "report-json", "trace-out", "trace-format", "trace-capacity",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));
@@ -521,6 +654,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
             Some(b) => b,
             None => head_content_length(url)?,
         };
+        vlog!("resolved {url}: {bytes} bytes");
         records.push(fastbiodl::accession::RunRecord::new(
             format!("URL{i:03}"),
             "fetch",
@@ -531,7 +665,7 @@ fn cmd_fetch(args: &Args) -> Result<()> {
     let rt = match load_runtime() {
         Ok(rt) => Some(rt),
         Err(e) => {
-            eprintln!("note: XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
+            log::warn!("XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
             None
         }
     };
@@ -540,15 +674,27 @@ fn cmd_fetch(args: &Args) -> Result<()> {
         Some(dir) => Sink::Directory(dir.to_string()),
         None => Sink::Discard,
     };
-    let report = run_real_session(RealSessionParams {
+    let trace_cfg = cfg.trace.clone();
+    let tracer = build_tracer(&trace_cfg)?;
+    let outcome = run_real_session_with_stats(RealSessionParams {
         download: cfg,
         records,
         controller,
         runtime: rt.as_deref(),
         sink,
         name: "fastbiodl".into(),
-    })?;
-    print_report(&report);
+        tracer: tracer.clone(),
+    });
+    // Export the trace before propagating a session error: the
+    // post-mortem record matters most on the failing runs.
+    if let Some(tr) = &tracer {
+        write_trace(tr, &trace_cfg)?;
+    }
+    let (report, stats) = outcome?;
+    if let Some(path) = args.flag("report-json") {
+        write_report_json(path, &report, Some(&stats))?;
+    }
+    print_report(&report, Some(&stats));
     Ok(())
 }
 
@@ -601,7 +747,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let seed = args.flag_u64("seed")?.unwrap_or(1);
         let horizon = args.flag_f64("horizon")?.unwrap_or(600.0);
         throttle = throttle.with_fault_profile(profile, seed, horizon);
-        println!(
+        out!(
             "fault profile '{}': {} server-side windows over {horizon}s",
             profile.name(),
             throttle.fault_windows.len()
@@ -615,16 +761,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let server = ThrottledHttpServer::start(served.clone(), throttle)?;
-    println!(
+    out!(
         "serving {} files of {} MiB at {}",
         files,
         size_mb,
         server.base_url()
     );
     for f in &served {
-        println!("  {}{}", server.base_url(), f.path);
+        out!("  {}{}", server.base_url(), f.path);
     }
-    println!("press Ctrl-C to stop");
+    out!("press Ctrl-C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -642,13 +788,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let rt = load_runtime()?;
 
     let run_one = |id: &str| -> Result<()> {
-        println!("\n=== {id} ===");
+        out!("\n=== {id} ===");
         match id {
             "fig1" => {
                 let r = fig1::run(120.0, seed)?;
-                println!("available  {}", sparkline(&r.available_mbps, 64));
-                println!("single     {}", sparkline(&r.single_stream_mbps, 64));
-                println!(
+                out!("available  {}", sparkline(&r.available_mbps, 64));
+                out!("single     {}", sparkline(&r.single_stream_mbps, 64));
+                out!(
                     "single stream {:.0} / available {:.0} Mbps ({:.0}% used)",
                     r.mean_single,
                     r.mean_available,
@@ -657,8 +803,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             }
             "fig2" => {
                 let r = fig2::run(120.0, seed)?;
-                println!("available  {}", sparkline(&r.available_mbps, 64));
-                println!(
+                out!("available  {}", sparkline(&r.available_mbps, 64));
+                out!(
                     "mean {:.0} ± {:.0} Mbps, range {:.0}–{:.0}",
                     r.mean, r.std, r.min, r.max
                 );
@@ -673,7 +819,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         r.summary.concurrency.to_string(),
                     ]);
                 }
-                println!("{}", t.render());
+                out!("{}", t.render());
                 table1::check_shape(&rows).map_err(Error::Session)?;
             }
             "table3" => {
@@ -689,12 +835,12 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                         ]);
                     }
                 }
-                println!("{}", t.render());
+                out!("{}", t.render());
                 table3::check_shape(&rows).map_err(Error::Session)?;
             }
             "fig4" => {
                 let r = fig4::run(&rt, runs, seed)?;
-                println!(
+                out!(
                     "gd {:.1}s vs bayes {:.1}s -> bayes {:.0}% slower",
                     r.gd.duration_s.mean,
                     r.bayes.duration_s.mean,
@@ -705,7 +851,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "fig5" => {
                 let r = fig5::run(&rt, runs, seed)?;
                 for band in [&r.fastbiodl, &r.prefetch, &r.pysradb] {
-                    println!(
+                    out!(
                         "{:<10} peak {:>6.0} Mbps  done {:>6.1}s  {}",
                         band.tool,
                         band.peak(),
@@ -718,7 +864,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "fig6" => {
                 let rows = fig6::run(&rt, runs, seed)?;
                 for r in &rows {
-                    println!(
+                    out!(
                         "{:<9} C*={:>5.1}  adaptive {:.0} Mbps  vs fixed-5 {:.2}x  vs fixed-3 {:.2}x",
                         r.scenario,
                         r.c_star,
@@ -759,33 +905,39 @@ fn cmd_utility_surface(args: &Args) -> Result<()> {
     let t_grid: Vec<f32> = (0..g).map(|i| 100.0 * (i + 1) as f32).collect();
     let c_grid: Vec<f32> = (1..=g).map(|i| i as f32).collect();
     let surf = rt.utility_surface(&t_grid, &c_grid, k as f32)?;
-    println!(
+    out!(
         "U(T, C) = T / {k}^C    (C* = 1/ln k = {:.1})",
         1.0 / k.ln()
     );
     for &row in &[7usize, 15, 31, 63] {
         let vals: Vec<f64> = (0..g).map(|j| surf[row * g + j] as f64).collect();
-        println!("T={:<6} {}", t_grid[row], sparkline(&vals, 64));
+        out!("T={:<6} {}", t_grid[row], sparkline(&vals, 64));
     }
     Ok(())
 }
 
-fn print_report(r: &fastbiodl::session::SessionReport) {
-    println!();
-    println!("tool            : {}", r.tool);
-    println!("duration        : {}", fastbiodl::util::fmt_secs(r.duration_s));
-    println!("bytes           : {}", fastbiodl::util::fmt_bytes(r.total_bytes));
-    println!("mean throughput : {:.1} Mbps", r.mean_throughput_mbps);
-    println!("peak throughput : {:.1} Mbps", r.peak_mbps);
-    println!(
+fn print_report(r: &SessionReport, stats: Option<&EngineStats>) {
+    out!();
+    out!("tool            : {}", r.tool);
+    out!("duration        : {}", fastbiodl::util::fmt_secs(r.duration_s));
+    out!("bytes           : {}", fastbiodl::util::fmt_bytes(r.total_bytes));
+    out!("mean throughput : {:.1} Mbps", r.mean_throughput_mbps);
+    out!("peak throughput : {:.1} Mbps", r.peak_mbps);
+    out!(
         "mean concurrency: {:.2} (in-flight {:.2})",
         r.mean_concurrency, r.mean_inflight
     );
-    println!("files completed : {}", r.files_completed);
+    out!("files completed : {}", r.files_completed);
     if r.chunk_retries > 0 {
-        println!(
+        out!(
             "recovery        : {} chunk retries ({} connection resets, {} server errors)",
             r.chunk_retries, r.connection_resets, r.server_rejects
+        );
+    }
+    if r.hash_mismatches > 0 {
+        out!(
+            "integrity       : {} corrupt chunks discarded and re-fetched",
+            r.hash_mismatches
         );
     }
     if r.mirror_bytes.len() > 1 {
@@ -795,16 +947,24 @@ fn print_report(r: &fastbiodl::session::SessionReport) {
             .enumerate()
             .map(|(m, b)| format!("m{m}={}", fastbiodl::util::fmt_bytes(*b)))
             .collect();
-        println!(
+        out!(
             "mirrors         : {} ({} failovers)",
             shares.join(", "),
             r.mirror_switches
         );
     }
-    println!("optimizer probes: {}", r.probes);
-    println!("throughput      : {}", sparkline(&r.timeline.values, 64));
+    if let Some(st) = stats {
+        out!(
+            "disk path       : {} write syscalls, sink queue peak {}, reactor stalls {:.1} ms",
+            st.write_syscalls,
+            fastbiodl::util::fmt_bytes(st.sink_queue_peak),
+            st.reactor_stall_ns as f64 / 1e6
+        );
+    }
+    out!("optimizer probes: {}", r.probes);
+    out!("throughput      : {}", sparkline(&r.timeline.values, 64));
     if r.concurrency_trace.len() > 1 {
         let cs: Vec<f64> = r.concurrency_trace.iter().map(|&(_, c)| c as f64).collect();
-        println!("concurrency     : {}", sparkline(&cs, 64));
+        out!("concurrency     : {}", sparkline(&cs, 64));
     }
 }

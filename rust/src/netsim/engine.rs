@@ -211,6 +211,10 @@ pub struct NetSim {
     /// their per-connection cap multiplied by `mirror_slow[m].1` until
     /// `mirror_slow[m].0` (grown lazily; unlisted mirrors are healthy).
     mirror_slow: Vec<(f64, f64)>,
+    /// Flight recorder (session-shared): fault injections are recorded
+    /// as they fire, stamped with the simulator's virtual now. `None`
+    /// (the default) skips the hook entirely.
+    tracer: Option<std::sync::Arc<crate::trace::Tracer>>,
     // §Perf: scratch buffers reused across steps so the hot loop is
     // allocation-free (see EXPERIMENTS.md §Perf, optimization 1).
     scratch_active: Vec<usize>,
@@ -267,6 +271,7 @@ impl NetSim {
             burst_burst_s: 0.0,
             burst_gap_s: 0.0,
             mirror_slow: Vec::new(),
+            tracer: None,
             scratch_active: Vec::new(),
             scratch_demands: Vec::new(),
             scratch_alloc: Vec::new(),
@@ -283,6 +288,12 @@ impl NetSim {
     /// Engine configuration (read-only).
     pub fn config(&self) -> &NetSimConfig {
         &self.cfg
+    }
+
+    /// Attach a flight recorder; scheduled fault injections are
+    /// recorded as [`crate::trace::TraceEvent::Fault`] when they fire.
+    pub fn set_tracer(&mut self, tracer: std::sync::Arc<crate::trace::Tracer>) {
+        self.tracer = Some(tracer);
     }
 
     /// Open a new connection to the primary mirror; returns its id.
@@ -448,6 +459,12 @@ impl NetSim {
                 _ => break,
             };
             self.fault_cursor += 1;
+            if let Some(tr) = self.tracer.as_deref() {
+                tr.record(
+                    self.now_s,
+                    crate::trace::TraceEvent::Fault { kind: kind.name() },
+                );
+            }
             self.apply_fault(kind, report);
         }
 

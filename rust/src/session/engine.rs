@@ -106,6 +106,7 @@ use crate::metrics::timeline::per_second_bins;
 use crate::runtime::XlaRuntime;
 use crate::session::mirrors::MirrorBoard;
 use crate::session::SessionReport;
+use crate::trace::{TraceEvent, Tracer};
 use crate::{Error, Result};
 
 /// Minimum slot backoff (seconds, virtual or wall) after a failed or
@@ -156,6 +157,18 @@ pub enum FailureClass {
     /// Deterministic failure (malformed URL, 4xx, local I/O): retrying
     /// cannot help; the session fails immediately.
     Fatal,
+}
+
+impl FailureClass {
+    /// Stable tag used in trace records and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureClass::Transport => "transport",
+            FailureClass::Reject => "reject",
+            FailureClass::Corrupt => "corrupt",
+            FailureClass::Fatal => "fatal",
+        }
+    }
 }
 
 /// What a transport observed since the last poll, keyed by worker slot.
@@ -315,6 +328,14 @@ pub struct EngineParams<'a> {
     /// fail loudly; simulated hostile schedules use `usize::MAX`
     /// because their fault storms are adversarial by construction.
     pub give_up_after: usize,
+    /// Flight recorder (`None` = tracing off, the default). When set,
+    /// the engine records chunk dispatch/complete/retry/corrupt, mirror
+    /// switches, and one [`TraceEvent::Probe`] per controller step —
+    /// timestamped through this session's [`Clock`], so simulated
+    /// traces are deterministic per seed. Tracing never alters control
+    /// flow; with `None` every hook is a skipped branch and the session
+    /// is bit-identical to the untraced engine.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 /// Per-worker-slot engine state.
@@ -493,6 +514,7 @@ pub fn run_session_with_stats(
         journal_dir,
         mut manifest,
         give_up_after,
+        tracer,
     } = params;
     download.validate()?;
     if records.is_empty() {
@@ -705,7 +727,13 @@ pub fn run_session_with_stats(
                     continue;
                 }
                 let release = match policy.strategy {
-                    MirrorStrategy::Failover => board.should_failover(slot.mirror, now),
+                    MirrorStrategy::Failover => {
+                        if board.should_failover(slot.mirror, now) {
+                            Some("failover")
+                        } else {
+                            None
+                        }
+                    }
                     MirrorStrategy::WeightedStripe => {
                         if now - slot.connected_at < STRIPE_GRACE_S {
                             continue; // fresh (probe) connection
@@ -719,20 +747,35 @@ pub fn run_session_with_stats(
                             && board.probe_due(now, &mirror_conns).is_some();
                         probe_released |= probe;
                         probe_releases_this_tick += probe as u32;
-                        probe
-                            || board.should_restripe(
-                                slot.mirror,
-                                &mirror_conns,
-                                policy.per_mirror_conns,
-                                &stripe_w,
-                            )
+                        if probe {
+                            Some("probe")
+                        } else if board.should_restripe(
+                            slot.mirror,
+                            &mirror_conns,
+                            policy.per_mirror_conns,
+                            &stripe_w,
+                        ) {
+                            Some("restripe")
+                        } else {
+                            None
+                        }
                     }
                 };
-                if release {
+                if let Some(reason) = release {
                     transport.disconnect(i);
                     slot.connected = false;
                     mirror_conns[slot.mirror] = mirror_conns[slot.mirror].saturating_sub(1);
                     mirror_switches += 1;
+                    if let Some(tr) = tracer.as_deref() {
+                        tr.record(
+                            now,
+                            TraceEvent::MirrorSwitch {
+                                slot: i as u32,
+                                mirror: slot.mirror as u32,
+                                reason,
+                            },
+                        );
+                    }
                     // The next reconcile pass reconnects via the
                     // strategy's pick.
                 }
@@ -787,6 +830,18 @@ pub fn run_session_with_stats(
                 transport.begin_fetch(i, &records[chunk.file], &chunk, slot.mirror)?;
                 slot.in_flight = true;
                 slot.fetch_started = now;
+                if let Some(tr) = tracer.as_deref() {
+                    tr.record(
+                        now,
+                        TraceEvent::ChunkDispatch {
+                            slot: i as u32,
+                            mirror: slot.mirror as u32,
+                            file: chunk.file as u32,
+                            offset: chunk.offset,
+                            len: chunk.len,
+                        },
+                    );
+                }
             }
         }
 
@@ -855,13 +910,22 @@ pub fn run_session_with_stats(
                         board.note_rtt(slot.mirror, (now - slot.connected_at).max(0.0));
                     }
                 }
-                TransportEvent::Completed { slot: i, .. } => {
+                TransportEvent::Completed { slot: i, digest } => {
                     let slot = &mut slots[*i];
                     let chunk = slot
                         .chunk
                         .take()
                         .expect("fetch completed with no chunk assigned");
                     board.on_success(slot.mirror, chunk.len, now - slot.fetch_started);
+                    if let Some(tr) = tracer.as_deref() {
+                        tr.record(
+                            now,
+                            TraceEvent::ChunkComplete {
+                                slot: *i as u32,
+                                verified: digest.is_some() && manifest.is_some(),
+                            },
+                        );
+                    }
                     sched.chunk_done(&chunk);
                     slot.in_flight = false;
                     slot.fails = 0;
@@ -919,6 +983,23 @@ pub fn run_session_with_stats(
                         }
                     }
                     slot.fails += 1;
+                    if let Some(tr) = tracer.as_deref() {
+                        match class {
+                            FailureClass::Corrupt => {
+                                tr.record(now, TraceEvent::ChunkCorrupt { slot: *i as u32 });
+                            }
+                            _ => {
+                                tr.record(
+                                    now,
+                                    TraceEvent::ChunkRetry {
+                                        slot: *i as u32,
+                                        class: class.name(),
+                                        fails: slot.fails as u32,
+                                    },
+                                );
+                            }
+                        }
+                    }
                     if slot.fails >= give_up_after && fatal.is_none() {
                         fatal = Some(Error::Session(format!(
                             "worker {i} gave up after {} consecutive failures: {error}",
@@ -1008,6 +1089,20 @@ pub fn run_session_with_stats(
             let action = controller.on_signals(&signals)?;
             action_chunk_scale = action.chunk_scale.clamp(chunk_scale_min, 1.0);
             let new_target = action.concurrency;
+            if let Some(tr) = tracer.as_deref() {
+                tr.record(
+                    now,
+                    TraceEvent::Probe {
+                        concurrency: target as u32,
+                        goodput_mbps: signals.goodput_mbps,
+                        retry_rate: signals.retry_rate,
+                        reset_rate: signals.reset_rate,
+                        reject_rate: signals.reject_rate,
+                        target: new_target as u32,
+                        chunk_scale: action_chunk_scale,
+                    },
+                );
+            }
             if new_target != target {
                 let old = target;
                 target = status.set_target(new_target);
@@ -1053,6 +1148,10 @@ pub fn run_session_with_stats(
             &mut last_journal,
         );
         save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
+        if let Some(tr) = tracer.as_deref() {
+            tr.record(clock.now(), TraceEvent::SessionFatal);
+            tr.blackbox(&e.to_string());
+        }
         return Err(e);
     }
     if completed {

@@ -45,6 +45,12 @@ pub use sim::{run_simulated_download, SimSession, SimSessionParams};
 
 use crate::metrics::recorder::Sample;
 use crate::metrics::timeline::Timeline;
+use crate::util::json::{obj, Json};
+
+/// Schema tag of the machine-readable session record written by
+/// `--report-json` ([`session_report_json`]); bump on breaking layout
+/// changes so downstream parsers fail loudly.
+pub const REPORT_SCHEMA: &str = "fastbiodl-report-v1";
 
 /// Outcome of one complete transfer session.
 #[derive(Clone, Debug)]
@@ -148,5 +154,106 @@ impl SessionReport {
             s.push_str("  [checkpointed]");
         }
         s
+    }
+}
+
+/// The versioned machine-readable session record (`--report-json`):
+/// the [`SessionReport`] outcome fields plus, when the driver kept
+/// them, the [`EngineStats`] internals (control-loop and disk-path
+/// counters). Deterministic key order via the sorted-map JSON writer;
+/// for the same simulated seed the document is byte-identical across
+/// runs (timelines and samples are part of the replay).
+pub fn session_report_json(report: &SessionReport, stats: Option<&EngineStats>) -> Json {
+    let mut fields = vec![
+        ("schema", Json::Str(REPORT_SCHEMA.into())),
+        ("tool", Json::Str(report.tool.clone())),
+        ("duration_s", Json::Num(report.duration_s)),
+        ("total_bytes", Json::Num(report.total_bytes as f64)),
+        ("mean_throughput_mbps", Json::Num(report.mean_throughput_mbps)),
+        ("mean_concurrency", Json::Num(report.mean_concurrency)),
+        ("mean_inflight", Json::Num(report.mean_inflight)),
+        ("peak_mbps", Json::Num(report.peak_mbps)),
+        ("probes", Json::Num(report.probes as f64)),
+        ("files_completed", Json::Num(report.files_completed as f64)),
+        ("chunk_retries", Json::Num(report.chunk_retries as f64)),
+        ("connection_resets", Json::Num(report.connection_resets as f64)),
+        ("server_rejects", Json::Num(report.server_rejects as f64)),
+        ("hash_mismatches", Json::Num(report.hash_mismatches as f64)),
+        ("mirror_switches", Json::Num(report.mirror_switches as f64)),
+        ("completed", Json::Bool(report.completed)),
+        (
+            "mirror_bytes",
+            Json::Arr(report.mirror_bytes.iter().map(|b| Json::Num(*b as f64)).collect()),
+        ),
+        (
+            "frontiers",
+            Json::Arr(report.frontiers.iter().map(|f| Json::Num(*f as f64)).collect()),
+        ),
+    ];
+    if let Some(st) = stats {
+        fields.push((
+            "engine",
+            obj(vec![
+                ("ticks", Json::Num(st.ticks as f64)),
+                ("slots_scanned", Json::Num(st.slots_scanned as f64)),
+                (
+                    "max_probe_releases_per_tick",
+                    Json::Num(st.max_probe_releases_per_tick as f64),
+                ),
+                ("probe_releases", Json::Num(st.probe_releases as f64)),
+                ("transport_events", Json::Num(st.transport_events as f64)),
+                ("chunks_scaled", Json::Num(st.chunks_scaled as f64)),
+                ("write_syscalls", Json::Num(st.write_syscalls as f64)),
+                ("sink_queue_peak", Json::Num(st.sink_queue_peak as f64)),
+                ("reactor_stall_ns", Json::Num(st.reactor_stall_ns as f64)),
+            ]),
+        ));
+    }
+    obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_versioned_and_carries_engine_stats() {
+        let report = SessionReport {
+            tool: "fastbiodl".into(),
+            duration_s: 12.5,
+            total_bytes: 1_000_000,
+            mean_throughput_mbps: 640.0,
+            mean_concurrency: 7.5,
+            mean_inflight: 6.9,
+            peak_mbps: 900.0,
+            timeline: Timeline::default(),
+            samples: Vec::new(),
+            concurrency_trace: Vec::new(),
+            probes: 3,
+            files_completed: 2,
+            chunk_retries: 1,
+            connection_resets: 1,
+            server_rejects: 0,
+            hash_mismatches: 0,
+            mirror_bytes: vec![600_000, 400_000],
+            mirror_switches: 4,
+            completed: true,
+            frontiers: vec![500_000, 500_000],
+        };
+        let bare = session_report_json(&report, None).to_string_compact();
+        assert!(bare.contains(REPORT_SCHEMA));
+        assert!(bare.contains("\"hash_mismatches\":0"));
+        assert!(!bare.contains("\"engine\""), "no stats block without stats");
+
+        let stats = EngineStats {
+            ticks: 42,
+            ..EngineStats::default()
+        };
+        let full = session_report_json(&report, Some(&stats)).to_string_compact();
+        assert!(full.contains("\"engine\":{"));
+        assert!(full.contains("\"ticks\":42"));
+        // The document parses back and keeps the deterministic key order.
+        let parsed = Json::parse(&full).unwrap();
+        assert_eq!(parsed.to_string_compact(), full);
     }
 }

@@ -35,10 +35,11 @@ use crate::coordinator::scheduler::{Chunk, SchedulerMode};
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::runtime::XlaRuntime;
 use crate::session::engine::{
-    run_session, Clock, EngineParams, FailureClass, ToolBehavior, Transport, TransportEvent,
-    TransportIoStats,
+    run_session_with_stats, Clock, EngineParams, EngineStats, FailureClass, ToolBehavior,
+    Transport, TransportEvent, TransportIoStats,
 };
 use crate::session::SessionReport;
+use crate::trace::{Tracer, WallTracer};
 use crate::transport::http_client::HttpConnection;
 use crate::transport::reactor::{FetchSpec, KillSwitch, ProgressPolicy, Reactor};
 use crate::transport::sink::{SinkConfig, SinkFile};
@@ -72,6 +73,10 @@ pub struct RealSessionParams<'a> {
     pub sink: Sink,
     /// Tool label for the report.
     pub name: String,
+    /// Flight recorder (`None` = tracing off). The engine stamps its
+    /// events through [`WallClock`]; reactor and sink threads stamp
+    /// theirs through a [`WallTracer`] handle sharing this recorder.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 /// Wall-time session clock.
@@ -127,6 +132,8 @@ impl RealTransport {
     /// `mirror_count` mirrors. `per_mirror_conns` caps how many slots
     /// may hold a connection to the same mirror at once (0 =
     /// unlimited); `progress` is the whole-chunk progress deadline.
+    /// `trace` (when tracing) lets reactor and sink threads record
+    /// connection-state and write-batch events.
     pub fn spawn(
         capacity: usize,
         sink: Sink,
@@ -135,8 +142,9 @@ impl RealTransport {
         recorder: Arc<ThroughputRecorder>,
         progress: ProgressPolicy,
         sink_cfg: SinkConfig,
+        trace: Option<WallTracer>,
     ) -> Result<RealTransport> {
-        let reactor = Reactor::spawn(capacity, mirror_count, recorder, progress, sink_cfg)?;
+        let reactor = Reactor::spawn(capacity, mirror_count, recorder, progress, sink_cfg, trace)?;
         Ok(RealTransport {
             reactor,
             sink,
@@ -250,6 +258,15 @@ impl Transport for RealTransport {
 
 /// Run a real-socket transfer to completion.
 pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> {
+    run_real_session_with_stats(params).map(|(report, _)| report)
+}
+
+/// [`run_real_session`], additionally returning the engine's
+/// control-loop cost counters (the `--report-json` measurement path;
+/// see [`EngineStats`]).
+pub fn run_real_session_with_stats(
+    params: RealSessionParams<'_>,
+) -> Result<(SessionReport, EngineStats)> {
     let RealSessionParams {
         download,
         records,
@@ -257,6 +274,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         runtime,
         sink,
         name,
+        tracer,
     } = params;
     download.validate()?;
     if records.is_empty() {
@@ -372,6 +390,10 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         window_s: download.progress_window_s,
         min_bytes: download.progress_min_bytes,
     };
+    // The wall tracer's origin and the wall clock's start are created
+    // back to back, so reactor/sink timestamps share the engine's
+    // timeline to within spawn latency.
+    let wall_trace = tracer.as_ref().map(|t| WallTracer::new(t.clone()));
     let mut transport = RealTransport::spawn(
         download.optimizer.c_max,
         sink,
@@ -380,10 +402,11 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
         recorder.clone(),
         progress,
         SinkConfig::from_download(&download),
+        wall_trace,
     )?;
     transport.set_output_handles(handles);
     let clock = WallClock::start();
-    run_session(
+    run_session_with_stats(
         EngineParams {
             download,
             behavior,
@@ -396,6 +419,7 @@ pub fn run_real_session(params: RealSessionParams<'_>) -> Result<SessionReport> 
             journal_dir,
             manifest,
             give_up_after: MAX_CONSECUTIVE_FAILURES,
+            tracer,
         },
         &mut transport,
         &clock,

@@ -31,6 +31,7 @@ use crate::session::engine::{
     TransportEvent,
 };
 use crate::session::SessionReport;
+use crate::trace::Tracer;
 use crate::{Error, Result};
 
 pub use crate::session::engine::ToolBehavior;
@@ -261,6 +262,7 @@ pub struct SimSession<'a> {
     checkpoint_after_s: Option<f64>,
     manifest: Option<ManifestSet>,
     journal_dir: Option<std::path::PathBuf>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl<'a> SimSession<'a> {
@@ -272,6 +274,7 @@ impl<'a> SimSession<'a> {
             checkpoint_after_s: None,
             manifest: None,
             journal_dir: None,
+            tracer: None,
         }
     }
 
@@ -309,6 +312,15 @@ impl<'a> SimSession<'a> {
         self
     }
 
+    /// Attach a flight recorder ([`crate::trace`]): the engine records
+    /// lifecycle events and the simulator records fault injections,
+    /// all stamped with virtual time — so a trace of the same
+    /// `(params, seed)` replays byte-identically.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> SimSession<'a> {
+        self.tracer = Some(tracer);
+        self
+    }
+
     /// Run to completion (or checkpoint); returns the report.
     pub fn run(self) -> Result<SessionReport> {
         self.run_with_stats().map(|(report, _)| report)
@@ -324,6 +336,7 @@ impl<'a> SimSession<'a> {
             checkpoint_after_s,
             manifest,
             journal_dir,
+            tracer,
         } = self;
         let verify = params.download.integrity.verify;
         // With verification on and no caller-supplied manifest, derive
@@ -358,6 +371,11 @@ impl<'a> SimSession<'a> {
             clock.clone(),
         )?;
         transport.set_verify(verify);
+        if let Some(tr) = &tracer {
+            // Fault injections are stamped with the simulator's own
+            // virtual now — the same timeline the engine's clock reads.
+            transport.sim.set_tracer(tr.clone());
+        }
         run_session_with_stats(
             EngineParams {
                 download: params.download,
@@ -373,6 +391,7 @@ impl<'a> SimSession<'a> {
                 // Simulated fault schedules are adversarial by design;
                 // recovery must outlast them rather than give up.
                 give_up_after: usize::MAX,
+                tracer,
             },
             &mut transport,
             &clock,

@@ -1,0 +1,890 @@
+//! `trace` — the flight recorder: deterministic structured event
+//! traces across engine, control plane, reactor, and sink.
+//!
+//! The paper's entire evidence base is throughput timelines; every
+//! other decision the stack makes — controller probes, mirror
+//! switches, reactor state transitions, sink backpressure, fault
+//! injections — was previously invisible except as end-of-run
+//! aggregate counters. The flight recorder records *typed lifecycle
+//! events* from every layer into a fixed-capacity ring buffer:
+//!
+//! * **Allocation-free hot path** — [`TraceEvent`] is a `Copy` enum of
+//!   fixed-size records (tags are `&'static str`), and the ring buffer
+//!   is preallocated at construction, so recording an event in steady
+//!   state is a mutex lock plus a struct store. The counting-allocator
+//!   bench gates (`allocs_per_tick`) hold with tracing on.
+//! * **Deterministic timestamps** — events are stamped through the
+//!   engine's `Clock` abstraction: under the virtual clock a sim trace
+//!   is a pure function of the seed, byte-identical across replays
+//!   (pinned by `rust/tests/trace_events.rs`). Real sessions stamp
+//!   reactor/sink events with wall time via [`WallTracer`].
+//! * **Bounded memory** — the ring holds [`Tracer::capacity`] records;
+//!   once full, the oldest record is overwritten and counted in
+//!   `dropped`, so a week-long session cannot balloon.
+//!
+//! Exports:
+//!
+//! * [`TraceSnapshot::to_ndjson`] — the versioned [`TRACE_SCHEMA`]
+//!   NDJSON document (`--trace-out run.jsonl`): one header line, then
+//!   one compact JSON object per event, suitable for offline analysis
+//!   and as per-probe signal→action training data for learned control.
+//! * [`TraceSnapshot::to_chrome_json`] — Chrome `trace_event` JSON
+//!   (`--trace-format chrome`): opens in Perfetto / `chrome://tracing`
+//!   with one track per engine slot and sink writer, chunk lifetimes
+//!   as spans, concurrency target and sink queue depth as counters.
+//! * [`Tracer::blackbox`] — on fatal session errors the engine dumps
+//!   the last [`BLACKBOX_STDERR_TAIL`] events to stderr and the full
+//!   ring to `<trace-out>.blackbox` on disk, so post-mortems of
+//!   sessions that never reached the export path still have evidence.
+//!
+//! Tracing is default-off and a bit-level identity when off (the
+//! `--fault-penalty` precedent): no `Tracer` is constructed, every
+//! hook is an `Option` check, and reports/journals/manifests are
+//! byte-identical — pinned by test.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+use crate::{Error, Result};
+
+/// Schema tag on the NDJSON header line; bump on breaking changes so
+/// offline consumers fail loudly instead of misparsing.
+pub const TRACE_SCHEMA: &str = "fastbiodl-trace-v1";
+
+/// Default ring capacity (records). At the engine's ~20 Hz tick rate
+/// with a handful of events per tick this holds many minutes of tail.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Events echoed to stderr by the fatal-error black-box dump (the full
+/// ring still goes to disk).
+pub const BLACKBOX_STDERR_TAIL: usize = 32;
+
+/// One typed lifecycle event. Every variant is `Copy` with fixed-size
+/// fields — string-ish payloads are `&'static str` tags — so recording
+/// never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Engine: a chunk was handed to the transport on `slot`.
+    ChunkDispatch {
+        slot: u32,
+        mirror: u32,
+        file: u32,
+        offset: u64,
+        len: u64,
+    },
+    /// Engine: the slot's in-flight chunk landed (and, when
+    /// verification is on, hash-checked clean).
+    ChunkComplete { slot: u32, verified: bool },
+    /// Engine: the slot's chunk failed and was requeued. `class` is
+    /// the [`crate::session::FailureClass`] tag, `fails` the slot's
+    /// consecutive-failure count after this one.
+    ChunkRetry {
+        slot: u32,
+        class: &'static str,
+        fails: u32,
+    },
+    /// Engine: a completed chunk failed its SHA-256 check and was
+    /// requeued (the integrity layer's rewrite of `Completed`).
+    ChunkCorrupt { slot: u32 },
+    /// Control plane: one probe — the [`crate::control::ControlSignals`]
+    /// the controller saw and the [`crate::control::ControlAction`] it
+    /// returned.
+    Probe {
+        concurrency: u32,
+        goodput_mbps: f64,
+        retry_rate: f64,
+        reset_rate: f64,
+        reject_rate: f64,
+        target: u32,
+        chunk_scale: f64,
+    },
+    /// Engine/mirror board: `slot` released its connection to `mirror`
+    /// so the next reconcile pass rebinds it. `reason` is `"probe"`
+    /// (re-probe of a drained mirror), `"restripe"` (weighted-stripe
+    /// rebalance), or `"failover"` (winner-take-all switch).
+    MirrorSwitch {
+        slot: u32,
+        mirror: u32,
+        reason: &'static str,
+    },
+    /// Reactor: the connection serving `slot` changed HTTP state.
+    /// `state` ∈ {sending, body, drain, blocked, idle} — `blocked` is
+    /// the sink-backpressure park, `blocked`→`body` the resume.
+    ConnState { slot: u32, state: &'static str },
+    /// Sink: one writer drained a batch — `jobs` write jobs carrying
+    /// `bytes` payload bytes landed in `writes` coalesced positional
+    /// writes.
+    SinkBatch {
+        writer: u32,
+        jobs: u32,
+        bytes: u64,
+        writes: u32,
+    },
+    /// Sink: bytes queued across the pool after a batch drained (the
+    /// backpressure gauge; its peak is `sink_queue_peak`).
+    SinkQueue { queued_bytes: u64 },
+    /// Netsim: a scheduled fault fired (`kind` is the
+    /// [`crate::netsim::FaultKind`] tag). Sim sessions only.
+    Fault { kind: &'static str },
+    /// Engine: the session is aborting on a fatal error (black-box
+    /// dump follows).
+    SessionFatal,
+}
+
+impl TraceEvent {
+    /// Stable `type` tag written into every exported record.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::ChunkDispatch { .. } => "chunk_dispatch",
+            TraceEvent::ChunkComplete { .. } => "chunk_complete",
+            TraceEvent::ChunkRetry { .. } => "chunk_retry",
+            TraceEvent::ChunkCorrupt { .. } => "chunk_corrupt",
+            TraceEvent::Probe { .. } => "probe",
+            TraceEvent::MirrorSwitch { .. } => "mirror_switch",
+            TraceEvent::ConnState { .. } => "conn_state",
+            TraceEvent::SinkBatch { .. } => "sink_batch",
+            TraceEvent::SinkQueue { .. } => "sink_queue",
+            TraceEvent::Fault { .. } => "fault",
+            TraceEvent::SessionFatal => "session_fatal",
+        }
+    }
+}
+
+/// One recorded event: a global sequence number, a timestamp in
+/// seconds since session start (virtual or wall, per the session's
+/// clock), and the event itself.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub seq: u64,
+    pub t_s: f64,
+    pub event: TraceEvent,
+}
+
+/// The preallocated circular store behind the mutex.
+struct Ring {
+    buf: Vec<TraceRecord>,
+    /// Oldest record's index once the ring has wrapped.
+    head: usize,
+    /// Next sequence number (= total events ever recorded).
+    seq: u64,
+    /// Records overwritten after the ring filled.
+    dropped: u64,
+}
+
+/// The flight recorder. Shared across threads as `Arc<Tracer>`;
+/// recording takes the ring mutex for the duration of one struct
+/// store, so contention is negligible at engine event rates.
+pub struct Tracer {
+    capacity: usize,
+    ring: Mutex<Ring>,
+    /// Where [`Tracer::blackbox`] writes the on-disk dump.
+    blackbox_path: Option<PathBuf>,
+}
+
+impl Tracer {
+    /// A recorder with the given ring capacity (floored at 16 so the
+    /// black-box tail is never empty).
+    pub fn with_capacity(capacity: usize) -> Tracer {
+        let capacity = capacity.max(16);
+        Tracer {
+            capacity,
+            ring: Mutex::new(Ring {
+                buf: Vec::with_capacity(capacity),
+                head: 0,
+                seq: 0,
+                dropped: 0,
+            }),
+            blackbox_path: None,
+        }
+    }
+
+    /// Set the on-disk destination of the fatal-error black-box dump.
+    pub fn with_blackbox<P: Into<PathBuf>>(mut self, path: P) -> Tracer {
+        self.blackbox_path = Some(path.into());
+        self
+    }
+
+    /// Ring capacity in records.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn events_recorded(&self) -> u64 {
+        self.lock_ring().seq
+    }
+
+    fn lock_ring(&self) -> MutexGuard<'_, Ring> {
+        // A panicking writer cannot corrupt a Copy record store; keep
+        // recording rather than poisoning the whole trace.
+        self.ring.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Record one event at `t_s` seconds. Allocation-free: the ring
+    /// was preallocated and the record is `Copy`.
+    pub fn record(&self, t_s: f64, event: TraceEvent) {
+        let mut ring = self.lock_ring();
+        let seq = ring.seq;
+        ring.seq += 1;
+        let rec = TraceRecord { seq, t_s, event };
+        if ring.buf.len() < self.capacity {
+            ring.buf.push(rec);
+        } else {
+            let head = ring.head;
+            ring.buf[head] = rec;
+            ring.head = (head + 1) % self.capacity;
+            ring.dropped += 1;
+        }
+    }
+
+    /// Copy the ring out in chronological order.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let ring = self.lock_ring();
+        let mut records = Vec::with_capacity(ring.buf.len());
+        records.extend_from_slice(&ring.buf[ring.head..]);
+        records.extend_from_slice(&ring.buf[..ring.head]);
+        TraceSnapshot {
+            capacity: self.capacity,
+            dropped: ring.dropped,
+            records,
+        }
+    }
+
+    /// Fatal-error black box: echo the last [`BLACKBOX_STDERR_TAIL`]
+    /// events to stderr and write the full ring as NDJSON to the
+    /// configured path (if any). Called by the engine right before it
+    /// propagates a session-fatal error.
+    pub fn blackbox(&self, reason: &str) {
+        let snap = self.snapshot();
+        let tail_from = snap.records.len().saturating_sub(BLACKBOX_STDERR_TAIL);
+        eprintln!(
+            "trace black box ({reason}): last {} of {} recorded events:",
+            snap.records.len() - tail_from,
+            snap.dropped + snap.records.len() as u64,
+        );
+        for rec in &snap.records[tail_from..] {
+            eprintln!("  {}", record_json(rec).to_string_compact());
+        }
+        if let Some(path) = &self.blackbox_path {
+            match std::fs::write(path, snap.to_ndjson()) {
+                Ok(()) => eprintln!("trace black box written to {}", path.display()),
+                Err(e) => eprintln!("trace black box write to {} failed: {e}", path.display()),
+            }
+        }
+    }
+}
+
+/// A wall-clock handle for threads outside the engine loop (reactor
+/// and sink): stamps events with seconds since the handle was created,
+/// which the session driver aligns with its `WallClock` start.
+#[derive(Clone)]
+pub struct WallTracer {
+    tracer: Arc<Tracer>,
+    origin: Instant,
+}
+
+impl WallTracer {
+    /// Wrap a shared recorder; `origin` is "now".
+    pub fn new(tracer: Arc<Tracer>) -> WallTracer {
+        WallTracer {
+            tracer,
+            origin: Instant::now(),
+        }
+    }
+
+    /// Record one event stamped with wall time since the origin.
+    pub fn record(&self, event: TraceEvent) {
+        self.tracer
+            .record(self.origin.elapsed().as_secs_f64(), event);
+    }
+}
+
+/// A chronological copy of the ring, ready for export.
+#[derive(Clone, Debug)]
+pub struct TraceSnapshot {
+    /// Ring capacity the trace was recorded under.
+    pub capacity: usize,
+    /// Records overwritten after the ring filled (oldest-first loss).
+    pub dropped: u64,
+    /// Surviving records, oldest first.
+    pub records: Vec<TraceRecord>,
+}
+
+impl TraceSnapshot {
+    /// Serialize as the versioned NDJSON document: one header line
+    /// (`schema`, `capacity`, `dropped`, `events`), then one compact
+    /// JSON object per record. Key order is deterministic (sorted), so
+    /// same-seed sim traces are byte-identical.
+    pub fn to_ndjson(&self) -> String {
+        let mut out = String::new();
+        let header = obj(vec![
+            ("schema", Json::Str(TRACE_SCHEMA.into())),
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("events", Json::Num(self.records.len() as f64)),
+        ]);
+        out.push_str(&header.to_string_compact());
+        out.push('\n');
+        for rec in &self.records {
+            out.push_str(&record_json(rec).to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialize as Chrome `trace_event` JSON (the "JSON object
+    /// format": `{"traceEvents": [...]}`), viewable in Perfetto or
+    /// `chrome://tracing`. Layout: one named thread per engine slot
+    /// and per sink writer, chunk lifetimes as `X` (complete) spans
+    /// from dispatch to the slot's next terminal event, instants (`i`)
+    /// for switches/retries/faults, counters (`C`) for the concurrency
+    /// target and the sink queue depth.
+    pub fn to_chrome_json(&self) -> String {
+        // Track ids: 0 = control plane, 1 + slot = engine slots,
+        // SINK_TID_BASE + writer = sink writers.
+        const SINK_TID_BASE: u64 = 100_000;
+        let tid_slot = |slot: u32| 1 + slot as u64;
+        let us = |t_s: f64| t_s * 1e6;
+        let mut events: Vec<Json> = Vec::new();
+        let mut named: Vec<(u64, String)> = Vec::new();
+        let mut name_track = |tid: u64, name: String| {
+            if !named.iter().any(|(t, _)| *t == tid) {
+                named.push((tid, name));
+            }
+        };
+        let base = |ph: &str, name: &str, tid: u64, t_s: f64| {
+            vec![
+                ("ph", Json::Str(ph.into())),
+                ("name", Json::Str(name.into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("ts", Json::Num(us(t_s))),
+            ]
+        };
+        // Open chunk span per slot: (dispatch time, mirror, file, offset).
+        let mut open: Vec<Option<(f64, u32, u32, u64)>> = Vec::new();
+        let mut close_span = |events: &mut Vec<Json>,
+                              open: &mut Vec<Option<(f64, u32, u32, u64)>>,
+                              slot: u32,
+                              t_s: f64,
+                              outcome: &str| {
+            let Some(started) = open.get_mut(slot as usize).and_then(Option::take) else {
+                return;
+            };
+            let (t0, mirror, file, offset) = started;
+            let mut pairs = base("X", &format!("chunk f{file}@{offset}"), tid_slot(slot), t0);
+            pairs.push(("dur", Json::Num(us(t_s - t0).max(0.0))));
+            pairs.push((
+                "args",
+                obj(vec![
+                    ("mirror", Json::Num(mirror as f64)),
+                    ("outcome", Json::Str(outcome.into())),
+                ]),
+            ));
+            events.push(obj(pairs));
+        };
+        for rec in &self.records {
+            let t = rec.t_s;
+            match rec.event {
+                TraceEvent::ChunkDispatch {
+                    slot,
+                    mirror,
+                    file,
+                    offset,
+                    ..
+                } => {
+                    name_track(tid_slot(slot), format!("slot {slot}"));
+                    if open.len() <= slot as usize {
+                        open.resize(slot as usize + 1, None);
+                    }
+                    // A dispatch while a span is open (lost terminal
+                    // event at a ring wrap) closes the old span first.
+                    close_span(&mut events, &mut open, slot, t, "unknown");
+                    open[slot as usize] = Some((t, mirror, file, offset));
+                }
+                TraceEvent::ChunkComplete { slot, .. } => {
+                    close_span(&mut events, &mut open, slot, t, "complete");
+                }
+                TraceEvent::ChunkRetry { slot, class, .. } => {
+                    close_span(&mut events, &mut open, slot, t, class);
+                }
+                TraceEvent::ChunkCorrupt { slot } => {
+                    close_span(&mut events, &mut open, slot, t, "corrupt");
+                }
+                TraceEvent::Probe {
+                    concurrency,
+                    goodput_mbps,
+                    target,
+                    ..
+                } => {
+                    name_track(0, "control".into());
+                    let mut pairs = base("C", "concurrency", 0, t);
+                    pairs.push((
+                        "args",
+                        obj(vec![
+                            ("current", Json::Num(concurrency as f64)),
+                            ("target", Json::Num(target as f64)),
+                        ]),
+                    ));
+                    events.push(obj(pairs));
+                    let mut pairs = base("C", "goodput_mbps", 0, t);
+                    pairs.push(("args", obj(vec![("mbps", Json::Num(goodput_mbps))])));
+                    events.push(obj(pairs));
+                }
+                TraceEvent::MirrorSwitch {
+                    slot,
+                    mirror,
+                    reason,
+                } => {
+                    name_track(tid_slot(slot), format!("slot {slot}"));
+                    let mut pairs = base("i", &format!("mirror -> m{mirror}"), tid_slot(slot), t);
+                    pairs.push(("s", Json::Str("t".into())));
+                    pairs.push(("args", obj(vec![("reason", Json::Str(reason.into()))])));
+                    events.push(obj(pairs));
+                }
+                TraceEvent::ConnState { slot, state } => {
+                    name_track(tid_slot(slot), format!("slot {slot}"));
+                    let mut pairs = base("i", &format!("conn {state}"), tid_slot(slot), t);
+                    pairs.push(("s", Json::Str("t".into())));
+                    events.push(obj(pairs));
+                }
+                TraceEvent::SinkBatch {
+                    writer,
+                    jobs,
+                    bytes,
+                    writes,
+                } => {
+                    let tid = SINK_TID_BASE + writer as u64;
+                    name_track(tid, format!("sink-{writer}"));
+                    let mut pairs = base("i", "batch", tid, t);
+                    pairs.push(("s", Json::Str("t".into())));
+                    pairs.push((
+                        "args",
+                        obj(vec![
+                            ("jobs", Json::Num(jobs as f64)),
+                            ("bytes", Json::Num(bytes as f64)),
+                            ("writes", Json::Num(writes as f64)),
+                        ]),
+                    ));
+                    events.push(obj(pairs));
+                }
+                TraceEvent::SinkQueue { queued_bytes } => {
+                    name_track(0, "control".into());
+                    let mut pairs = base("C", "sink_queue_bytes", 0, t);
+                    pairs.push(("args", obj(vec![("bytes", Json::Num(queued_bytes as f64))])));
+                    events.push(obj(pairs));
+                }
+                TraceEvent::Fault { kind } => {
+                    name_track(0, "control".into());
+                    let mut pairs = base("i", &format!("fault {kind}"), 0, t);
+                    pairs.push(("s", Json::Str("g".into())));
+                    events.push(obj(pairs));
+                }
+                TraceEvent::SessionFatal => {
+                    name_track(0, "control".into());
+                    let mut pairs = base("i", "session fatal", 0, t);
+                    pairs.push(("s", Json::Str("g".into())));
+                    events.push(obj(pairs));
+                }
+            }
+        }
+        // Thread-name metadata first, so viewers label tracks up front.
+        let mut all: Vec<Json> = named
+            .iter()
+            .map(|(tid, name)| {
+                obj(vec![
+                    ("ph", Json::Str("M".into())),
+                    ("name", Json::Str("thread_name".into())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(*tid as f64)),
+                    ("args", obj(vec![("name", Json::Str(name.clone()))])),
+                ])
+            })
+            .collect();
+        all.extend(events);
+        obj(vec![
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("traceEvents", Json::Arr(all)),
+        ])
+        .to_string_compact()
+    }
+}
+
+/// Serialize one record as a flat JSON object (sorted keys).
+fn record_json(rec: &TraceRecord) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("seq", Json::Num(rec.seq as f64)),
+        ("t_s", Json::Num(rec.t_s)),
+        ("type", Json::Str(rec.event.kind().into())),
+    ];
+    match rec.event {
+        TraceEvent::ChunkDispatch {
+            slot,
+            mirror,
+            file,
+            offset,
+            len,
+        } => {
+            pairs.push(("slot", Json::Num(slot as f64)));
+            pairs.push(("mirror", Json::Num(mirror as f64)));
+            pairs.push(("file", Json::Num(file as f64)));
+            pairs.push(("offset", Json::Num(offset as f64)));
+            pairs.push(("len", Json::Num(len as f64)));
+        }
+        TraceEvent::ChunkComplete { slot, verified } => {
+            pairs.push(("slot", Json::Num(slot as f64)));
+            pairs.push(("verified", Json::Bool(verified)));
+        }
+        TraceEvent::ChunkRetry { slot, class, fails } => {
+            pairs.push(("slot", Json::Num(slot as f64)));
+            pairs.push(("class", Json::Str(class.into())));
+            pairs.push(("fails", Json::Num(fails as f64)));
+        }
+        TraceEvent::ChunkCorrupt { slot } => {
+            pairs.push(("slot", Json::Num(slot as f64)));
+        }
+        TraceEvent::Probe {
+            concurrency,
+            goodput_mbps,
+            retry_rate,
+            reset_rate,
+            reject_rate,
+            target,
+            chunk_scale,
+        } => {
+            pairs.push(("concurrency", Json::Num(concurrency as f64)));
+            pairs.push(("goodput_mbps", Json::Num(goodput_mbps)));
+            pairs.push(("retry_rate", Json::Num(retry_rate)));
+            pairs.push(("reset_rate", Json::Num(reset_rate)));
+            pairs.push(("reject_rate", Json::Num(reject_rate)));
+            pairs.push(("target", Json::Num(target as f64)));
+            pairs.push(("chunk_scale", Json::Num(chunk_scale)));
+        }
+        TraceEvent::MirrorSwitch {
+            slot,
+            mirror,
+            reason,
+        } => {
+            pairs.push(("slot", Json::Num(slot as f64)));
+            pairs.push(("mirror", Json::Num(mirror as f64)));
+            pairs.push(("reason", Json::Str(reason.into())));
+        }
+        TraceEvent::ConnState { slot, state } => {
+            pairs.push(("slot", Json::Num(slot as f64)));
+            pairs.push(("state", Json::Str(state.into())));
+        }
+        TraceEvent::SinkBatch {
+            writer,
+            jobs,
+            bytes,
+            writes,
+        } => {
+            pairs.push(("writer", Json::Num(writer as f64)));
+            pairs.push(("jobs", Json::Num(jobs as f64)));
+            pairs.push(("bytes", Json::Num(bytes as f64)));
+            pairs.push(("writes", Json::Num(writes as f64)));
+        }
+        TraceEvent::SinkQueue { queued_bytes } => {
+            pairs.push(("queued_bytes", Json::Num(queued_bytes as f64)));
+        }
+        TraceEvent::Fault { kind } => {
+            pairs.push(("kind", Json::Str(kind.into())));
+        }
+        TraceEvent::SessionFatal => {}
+    }
+    obj(pairs)
+}
+
+/// Every `type` tag [`validate_ndjson`] accepts, with the fields each
+/// record must carry (beyond `seq`/`t_s`/`type`).
+const EVENT_FIELDS: &[(&str, &[&str])] = &[
+    ("chunk_dispatch", &["slot", "mirror", "file", "offset", "len"]),
+    ("chunk_complete", &["slot", "verified"]),
+    ("chunk_retry", &["slot", "class", "fails"]),
+    ("chunk_corrupt", &["slot"]),
+    (
+        "probe",
+        &[
+            "concurrency",
+            "goodput_mbps",
+            "retry_rate",
+            "reset_rate",
+            "reject_rate",
+            "target",
+            "chunk_scale",
+        ],
+    ),
+    ("mirror_switch", &["slot", "mirror", "reason"]),
+    ("conn_state", &["slot", "state"]),
+    ("sink_batch", &["writer", "jobs", "bytes", "writes"]),
+    ("sink_queue", &["queued_bytes"]),
+    ("fault", &["kind"]),
+    ("session_fatal", &[]),
+];
+
+/// Summary a successful [`validate_ndjson`] returns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceFileStats {
+    /// Ring capacity declared in the header.
+    pub capacity: u64,
+    /// Overwritten records declared in the header.
+    pub dropped: u64,
+    /// Event records in the file.
+    pub events: u64,
+}
+
+/// Validate an NDJSON trace document against [`TRACE_SCHEMA`]: header
+/// schema/shape, per-line JSON, known `type` tags with their required
+/// fields, and strictly increasing `seq`. The CI trace step runs this
+/// (`fastbiodl trace-validate run.jsonl`) against a fresh smoke trace.
+pub fn validate_ndjson(text: &str) -> Result<TraceFileStats> {
+    let mut lines = text.lines().enumerate();
+    let (_, header_line) = lines
+        .next()
+        .ok_or_else(|| Error::Config("empty trace file".into()))?;
+    let header = Json::parse(header_line)
+        .map_err(|e| Error::Config(format!("trace header is not JSON: {e}")))?;
+    let schema = header
+        .require("schema")?
+        .as_str()
+        .ok_or_else(|| Error::Config("trace header 'schema' must be a string".into()))?;
+    if schema != TRACE_SCHEMA {
+        return Err(Error::Config(format!(
+            "trace schema mismatch: file is '{schema}', this binary reads '{TRACE_SCHEMA}'"
+        )));
+    }
+    let req_u64 = |v: &Json, k: &str| -> Result<u64> {
+        v.require(k)?
+            .as_u64()
+            .ok_or_else(|| Error::Config(format!("trace field '{k}' must be an integer")))
+    };
+    let capacity = req_u64(&header, "capacity")?;
+    let declared = req_u64(&header, "events")?;
+    let dropped = req_u64(&header, "dropped")?;
+    let mut events = 0u64;
+    let mut last_seq: Option<u64> = None;
+    for (lineno, line) in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let rec = Json::parse(line)
+            .map_err(|e| Error::Config(format!("trace line {}: not JSON: {e}", lineno + 1)))?;
+        let seq = req_u64(&rec, "seq")
+            .map_err(|e| Error::Config(format!("trace line {}: {e}", lineno + 1)))?;
+        if rec.require("t_s").ok().and_then(Json::as_f64).is_none() {
+            return Err(Error::Config(format!(
+                "trace line {}: missing numeric 't_s'",
+                lineno + 1
+            )));
+        }
+        if let Some(prev) = last_seq {
+            if seq <= prev {
+                return Err(Error::Config(format!(
+                    "trace line {}: seq {seq} not after {prev}",
+                    lineno + 1
+                )));
+            }
+        }
+        last_seq = Some(seq);
+        let ty = rec
+            .require("type")
+            .ok()
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                Error::Config(format!("trace line {}: missing 'type' tag", lineno + 1))
+            })?;
+        let Some((_, fields)) = EVENT_FIELDS.iter().find(|(t, _)| *t == ty) else {
+            return Err(Error::Config(format!(
+                "trace line {}: unknown event type '{ty}'",
+                lineno + 1
+            )));
+        };
+        for field in *fields {
+            if rec.get(field).is_none() {
+                return Err(Error::Config(format!(
+                    "trace line {}: '{ty}' record missing field '{field}'",
+                    lineno + 1
+                )));
+            }
+        }
+        events += 1;
+    }
+    if events != declared {
+        return Err(Error::Config(format!(
+            "trace header declares {declared} events but the file has {events}"
+        )));
+    }
+    Ok(TraceFileStats {
+        capacity,
+        dropped,
+        events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<(f64, TraceEvent)> {
+        vec![
+            (
+                0.05,
+                TraceEvent::ChunkDispatch {
+                    slot: 0,
+                    mirror: 1,
+                    file: 0,
+                    offset: 0,
+                    len: 1 << 20,
+                },
+            ),
+            (
+                0.10,
+                TraceEvent::Probe {
+                    concurrency: 4,
+                    goodput_mbps: 812.5,
+                    retry_rate: 0.0,
+                    reset_rate: 0.0,
+                    reject_rate: 0.0,
+                    target: 6,
+                    chunk_scale: 1.0,
+                },
+            ),
+            (0.20, TraceEvent::ConnState { slot: 0, state: "blocked" }),
+            (0.25, TraceEvent::SinkQueue { queued_bytes: 512 }),
+            (
+                0.30,
+                TraceEvent::SinkBatch {
+                    writer: 0,
+                    jobs: 3,
+                    bytes: 512,
+                    writes: 1,
+                },
+            ),
+            (0.40, TraceEvent::ChunkComplete { slot: 0, verified: true }),
+            (
+                0.50,
+                TraceEvent::MirrorSwitch {
+                    slot: 0,
+                    mirror: 0,
+                    reason: "restripe",
+                },
+            ),
+            (0.60, TraceEvent::Fault { kind: "brownout" }),
+            (
+                0.70,
+                TraceEvent::ChunkRetry {
+                    slot: 0,
+                    class: "transport",
+                    fails: 1,
+                },
+            ),
+            (0.80, TraceEvent::ChunkCorrupt { slot: 0 }),
+            (0.90, TraceEvent::SessionFatal),
+        ]
+    }
+
+    fn recorded(capacity: usize) -> Tracer {
+        let t = Tracer::with_capacity(capacity);
+        for (t_s, ev) in sample_events() {
+            t.record(t_s, ev);
+        }
+        t
+    }
+
+    #[test]
+    fn ring_preserves_order_and_overwrites_oldest() {
+        let t = Tracer::with_capacity(16);
+        for i in 0..40u64 {
+            t.record(i as f64, TraceEvent::ChunkCorrupt { slot: i as u32 });
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.records.len(), 16, "ring holds exactly its capacity");
+        assert_eq!(snap.dropped, 24);
+        assert_eq!(snap.records.first().unwrap().seq, 24, "oldest surviving");
+        assert_eq!(snap.records.last().unwrap().seq, 39);
+        let seqs: Vec<u64> = snap.records.iter().map(|r| r.seq).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "snapshot must be chronological");
+        assert_eq!(t.events_recorded(), 40);
+    }
+
+    #[test]
+    fn ndjson_export_is_deterministic_and_validates() {
+        let a = recorded(64).snapshot().to_ndjson();
+        let b = recorded(64).snapshot().to_ndjson();
+        assert_eq!(a, b, "identical event sequences must serialize identically");
+        let stats = validate_ndjson(&a).unwrap();
+        assert_eq!(stats.events, sample_events().len() as u64);
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.capacity, 64);
+    }
+
+    #[test]
+    fn validator_rejects_corrupt_documents() {
+        let good = recorded(64).snapshot().to_ndjson();
+        // Wrong schema tag.
+        let bad = good.replace(TRACE_SCHEMA, "fastbiodl-trace-v999");
+        assert!(validate_ndjson(&bad).is_err());
+        // A record with an unknown type tag.
+        let bad = good.replace("\"type\":\"probe\"", "\"type\":\"mystery\"");
+        assert!(validate_ndjson(&bad).is_err());
+        // A probe record missing a required field.
+        let bad = good.replace("\"chunk_scale\":", "\"chonk_scale\":");
+        assert!(validate_ndjson(&bad).is_err());
+        // Header/body event-count mismatch.
+        let mut lines: Vec<&str> = good.lines().collect();
+        lines.pop();
+        assert!(validate_ndjson(&lines.join("\n")).is_err());
+        assert!(validate_ndjson("").is_err());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let text = recorded(64).snapshot().to_chrome_json();
+        let j = Json::parse(&text).expect("chrome export must parse");
+        let events = j
+            .require("traceEvents")
+            .unwrap()
+            .as_arr()
+            .expect("traceEvents must be an array");
+        assert!(!events.is_empty());
+        for ev in events {
+            let ph = ev.require("ph").unwrap().as_str().unwrap();
+            assert!(
+                matches!(ph, "M" | "X" | "i" | "C"),
+                "unexpected phase {ph:?}"
+            );
+            assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+            if ph != "M" {
+                assert!(ev.require("ts").unwrap().as_f64().is_some());
+            }
+            if ph == "X" {
+                assert!(ev.require("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        // The dispatch..complete pair became one span on the slot track.
+        assert!(text.contains("\"ph\":\"X\""), "no chunk span emitted");
+        assert!(text.contains("slot 0"), "slot track not named");
+        assert!(text.contains("sink-0"), "sink track not named");
+    }
+
+    #[test]
+    fn blackbox_writes_the_full_ring_to_disk() {
+        let dir = std::env::temp_dir().join(format!("fastbiodl-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bb.jsonl");
+        let t = recorded(64);
+        let t = Tracer {
+            blackbox_path: Some(path.clone()),
+            ..t
+        };
+        t.blackbox("test fatal");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stats = validate_ndjson(&text).unwrap();
+        assert_eq!(stats.events, sample_events().len() as u64);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -92,6 +92,7 @@ use crate::coordinator::scheduler::Chunk;
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::session::engine::{FailureClass, TransportEvent, TransportIoStats};
 use crate::transport::fetcher::CONNECT_TIMEOUT;
+use crate::trace::{TraceEvent, WallTracer};
 use crate::transport::sink::{PooledBuf, Sink, SinkConfig, SinkFile, WriteJob};
 use crate::util::sha256::Sha256;
 use crate::{Error, Result};
@@ -311,6 +312,19 @@ struct ReactorCtx {
     sink: Arc<Sink>,
     /// Per-chunk SHA-256 verification is on (`--verify`).
     hash: bool,
+    /// Flight recorder for connection state transitions (`--trace-out`).
+    trace: Option<WallTracer>,
+}
+
+/// Record a connection state transition for the slot whose fetch is in
+/// flight. No-op when tracing is off or the connection carries no spec.
+fn trace_conn(ctx: &ReactorCtx, spec: Option<&FetchSpec>, state: &'static str) {
+    if let (Some(tr), Some(spec)) = (ctx.trace.as_ref(), spec) {
+        tr.record(TraceEvent::ConnState {
+            slot: spec.slot as u32,
+            state,
+        });
+    }
 }
 
 struct ConnectorCtx {
@@ -348,6 +362,7 @@ impl Reactor {
         recorder: Arc<ThroughputRecorder>,
         progress: ProgressPolicy,
         sink_cfg: SinkConfig,
+        trace: Option<WallTracer>,
     ) -> Result<Reactor> {
         let n_reactors = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -370,6 +385,7 @@ impl Reactor {
             events_tx.clone(),
             recorder.clone(),
             kill.clone(),
+            trace.clone(),
             &mut joins,
         )?);
 
@@ -400,6 +416,7 @@ impl Reactor {
                 progress,
                 sink: sink.clone(),
                 hash: sink_cfg.hash,
+                trace: trace.clone(),
             };
             joins.push(
                 std::thread::Builder::new()
@@ -889,6 +906,7 @@ fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
     };
     c.spec = Some(spec);
     c.st = HttpState::Sending { sent: 0 };
+    trace_conn(ctx, c.spec.as_deref(), "sending");
     c.window_start = Instant::now();
     c.window_bytes = 0;
 }
@@ -1004,7 +1022,8 @@ fn flush_pending(c: &mut Conn, ctx: &ReactorCtx, last: bool) {
 /// park the connection Idle for keep-alive reuse. `deferred` means a
 /// sink writer sends the `Completed` ack after the final write lands;
 /// otherwise the reactor acks now.
-fn finish_chunk(c: &mut Conn, deferred: bool) -> Fate {
+fn finish_chunk(c: &mut Conn, deferred: bool, ctx: &ReactorCtx) -> Fate {
+    trace_conn(ctx, c.spec.as_deref(), "idle");
     c.out = None;
     c.spec = None;
     c.st = HttpState::Idle;
@@ -1039,9 +1058,10 @@ fn resume_blocked(c: &mut Conn, ctx: &ReactorCtx) -> Fate {
             c.window_start = Instant::now();
             c.window_bytes = 0;
             if finish {
-                finish_chunk(c, deferred)
+                finish_chunk(c, deferred, ctx)
             } else {
                 c.st = HttpState::Body { remaining };
+                trace_conn(ctx, c.spec.as_deref(), "body");
                 Fate::Keep
             }
         }
@@ -1170,7 +1190,7 @@ fn begin_body(c: &mut Conn, head: &[u8], leftover: &[u8], ctx: &ReactorCtx) -> O
             match push_payload(c, leftover, finish, ctx) {
                 Ok(Push::Done { deferred }) => {
                     if finish {
-                        return Some(finish_chunk(c, deferred));
+                        return Some(finish_chunk(c, deferred, ctx));
                     }
                 }
                 Ok(Push::Full { taken }) => {
@@ -1179,15 +1199,17 @@ fn begin_body(c: &mut Conn, head: &[u8], leftover: &[u8], ctx: &ReactorCtx) -> O
                         carry: leftover[taken..].to_vec(),
                         since: Instant::now(),
                     };
+                    trace_conn(ctx, c.spec.as_deref(), "blocked");
                     return Some(Fate::Keep);
                 }
                 Err(fate) => return Some(fate),
             }
         }
         if remaining == 0 {
-            return Some(finish_chunk(c, false));
+            return Some(finish_chunk(c, false, ctx));
         }
         c.st = HttpState::Body { remaining };
+        trace_conn(ctx, c.spec.as_deref(), "body");
         None
     } else {
         let class = if status >= 500 {
@@ -1205,6 +1227,7 @@ fn begin_body(c: &mut Conn, head: &[u8], leftover: &[u8], ctx: &ReactorCtx) -> O
             class,
             error,
         };
+        trace_conn(ctx, c.spec.as_deref(), "drain");
         None
     }
 }
@@ -1302,7 +1325,7 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], ctx: &ReactorCtx) -> Fate {
                         match push_payload(c, &scratch[..n], finish, ctx) {
                             Ok(Push::Done { deferred }) => {
                                 if finish {
-                                    return finish_chunk(c, deferred);
+                                    return finish_chunk(c, deferred, ctx);
                                 }
                                 c.st = HttpState::Body { remaining };
                             }
@@ -1312,6 +1335,7 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], ctx: &ReactorCtx) -> Fate {
                                     carry: scratch[taken..n].to_vec(),
                                     since: Instant::now(),
                                 };
+                                trace_conn(ctx, c.spec.as_deref(), "blocked");
                                 return Fate::Keep;
                             }
                             Err(fate) => return fate,
@@ -1352,6 +1376,7 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], ctx: &ReactorCtx) -> Fate {
                 error,
             } => {
                 if remaining == 0 {
+                    trace_conn(ctx, c.spec.as_deref(), "idle");
                     c.out = None;
                     c.pending = None;
                     c.spec = None;
@@ -1481,6 +1506,7 @@ mod tests {
             events_tx.clone(),
             Arc::new(ThroughputRecorder::new()),
             KillSwitch::default(),
+            None,
             &mut joins,
         )
         .unwrap();
@@ -1498,6 +1524,7 @@ mod tests {
             },
             sink: Arc::new(sink),
             hash: false,
+            trace: None,
         };
         let mut c = Conn {
             stream,

@@ -50,6 +50,7 @@ use crate::config::DownloadConfig;
 use crate::metrics::gauge::PeakGauge;
 use crate::metrics::recorder::ThroughputRecorder;
 use crate::session::engine::{FailureClass, TransportEvent, TransportIoStats};
+use crate::trace::{TraceEvent, WallTracer};
 use crate::transport::reactor::KillSwitch;
 use crate::util::sha256::Sha256;
 use crate::{Error, Result};
@@ -242,6 +243,8 @@ pub struct Sink {
 }
 
 struct WriterCtx {
+    /// Writer index (`dl-sink-N`), stamped on trace batch events.
+    writer: u32,
     job_rx: Receiver<WriteJob>,
     events_tx: Sender<TransportEvent>,
     recorder: Arc<ThroughputRecorder>,
@@ -250,6 +253,8 @@ struct WriterCtx {
     coalesce_bytes: usize,
     write_latency: Duration,
     hash: bool,
+    /// Flight recorder for batch drains and queue depth (`--trace-out`).
+    trace: Option<WallTracer>,
 }
 
 impl Sink {
@@ -262,6 +267,7 @@ impl Sink {
         events_tx: Sender<TransportEvent>,
         recorder: Arc<ThroughputRecorder>,
         kill: KillSwitch,
+        trace: Option<WallTracer>,
         joins: &mut Vec<std::thread::JoinHandle<()>>,
     ) -> Result<Sink> {
         let stats: Arc<SinkStats> = Arc::default();
@@ -271,6 +277,7 @@ impl Sink {
             let (tx, rx) = channel::<WriteJob>();
             txs.push(tx);
             let ctx = WriterCtx {
+                writer: i as u32,
                 job_rx: rx,
                 events_tx: events_tx.clone(),
                 recorder: recorder.clone(),
@@ -279,6 +286,7 @@ impl Sink {
                 coalesce_bytes: cfg.coalesce_bytes,
                 write_latency: cfg.write_latency,
                 hash: cfg.hash,
+                trace: trace.clone(),
             };
             joins.push(
                 std::thread::Builder::new()
@@ -401,6 +409,7 @@ fn process_batch(
     hashes: &mut HashState,
 ) {
     let queued: u64 = batch.iter().map(|j| j.buf.len() as u64).sum();
+    let jobs = batch.len() as u32;
     // Feed the streaming hashers in *arrival* order, before the
     // coalescing sort below reorders the batch: one chunk's jobs route
     // to one writer in submit order, so arrival order is offset order
@@ -431,12 +440,25 @@ fn process_batch(
     batch.retain(|j| !poisoned.contains(&(j.slot, j.gen)));
     batch.sort_by_key(|j| (Arc::as_ptr(&j.file.file) as usize, j.offset));
     let mut i = 0;
+    let mut writes = 0u32;
     while i < batch.len() {
         let n = run_len(batch, i, ctx.coalesce_bytes);
         flush_run(ctx, merged, &batch[i..i + n], poisoned, hashes);
+        writes += 1;
         i += n;
     }
     ctx.stats.queued.sub(queued);
+    if let Some(tr) = ctx.trace.as_ref() {
+        tr.record(TraceEvent::SinkBatch {
+            writer: ctx.writer,
+            jobs,
+            bytes: queued,
+            writes,
+        });
+        tr.record(TraceEvent::SinkQueue {
+            queued_bytes: ctx.stats.queued.current(),
+        });
+    }
 }
 
 /// Length of the contiguous run starting at `start`: same file,
@@ -536,6 +558,7 @@ mod tests {
         let (_job_tx, job_rx) = channel::<WriteJob>();
         let (events_tx, events_rx) = channel::<TransportEvent>();
         let ctx = WriterCtx {
+            writer: 0,
             job_rx,
             events_tx,
             recorder: Arc::new(ThroughputRecorder::new()),
@@ -544,6 +567,7 @@ mod tests {
             coalesce_bytes: 1024 * 1024,
             write_latency: latency,
             hash,
+            trace: None,
         };
         (ctx, events_rx)
     }

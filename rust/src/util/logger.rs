@@ -1,0 +1,145 @@
+//! Leveled CLI output facade.
+//!
+//! The binary used to print everything through bare `println!`, which
+//! made scripted use (piping a report JSON to another tool) impossible
+//! without scraping banners out of stdout. This module centralizes the
+//! policy:
+//!
+//! * **stdout** is for the primary human narrative (suppressed by
+//!   `--quiet`); machine-readable artifacts go to files via `--*-out`
+//!   flags, never interleaved with chatter.
+//! * **stderr** is for diagnostics: errors and warnings always, info
+//!   at the default level, debug/trace only under `--verbose` (the
+//!   [`log`] crate's macros route here through [`init`]).
+//! * **Disabled levels cost nothing**: the [`crate::out!`] /
+//!   [`crate::vlog!`] macros check the level *before* evaluating their
+//!   format arguments, so `--quiet` runs never format strings.
+//!
+//! The level lives in a process-global atomic: resolved once from the
+//! CLI flags (`-q`/`--quiet`, `-v`/`--verbose`), read everywhere.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Output verbosity, lowest to highest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Errors and warnings only (`--quiet`): scripted stdout stays
+    /// clean.
+    Quiet = 0,
+    /// The default human narrative.
+    Normal = 1,
+    /// Everything, including per-step diagnostics (`--verbose`).
+    Verbose = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Normal as u8);
+
+/// Set the process-wide output level (once, from the CLI flags).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+    log::set_max_level(match level {
+        Level::Quiet => log::LevelFilter::Warn,
+        Level::Normal => log::LevelFilter::Info,
+        Level::Verbose => log::LevelFilter::Trace,
+    });
+}
+
+/// The current process-wide output level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        1 => Level::Normal,
+        _ => Level::Verbose,
+    }
+}
+
+/// Whether messages at `at` are currently emitted.
+pub fn enabled(at: Level) -> bool {
+    level() >= at
+}
+
+/// The [`log::Log`] bridge: `log::error!`/`warn!` always print to
+/// stderr, `info!` at the default level, `debug!`/`trace!` only under
+/// `--verbose`.
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata<'_>) -> bool {
+        match metadata.level() {
+            log::Level::Error | log::Level::Warn => true,
+            log::Level::Info => level() >= Level::Normal,
+            log::Level::Debug | log::Level::Trace => level() >= Level::Verbose,
+        }
+    }
+
+    fn log(&self, record: &log::Record<'_>) {
+        if self.enabled(record.metadata()) {
+            eprintln!("{}: {}", record.level().as_str().to_ascii_lowercase(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger and apply `level`. Safe to call once at
+/// startup; a second call (tests running in one process) keeps the
+/// already-installed logger and just updates the level.
+pub fn init(level: Level) {
+    static LOGGER: StderrLogger = StderrLogger;
+    let _ = log::set_logger(&LOGGER);
+    set_level(level);
+}
+
+/// Print a line of the primary narrative to stdout unless `--quiet`.
+/// Format arguments are not evaluated when suppressed.
+#[macro_export]
+macro_rules! out {
+    ($($arg:tt)*) => {
+        if $crate::util::logger::enabled($crate::util::logger::Level::Normal) {
+            println!($($arg)*);
+        }
+    };
+}
+
+/// Print a verbose diagnostic line to stderr under `--verbose` only.
+/// Format arguments are not evaluated when suppressed.
+#[macro_export]
+macro_rules! vlog {
+    ($($arg:tt)*) => {
+        if $crate::util::logger::enabled($crate::util::logger::Level::Verbose) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_gate() {
+        // Serialized through one test: the level is process-global.
+        set_level(Level::Quiet);
+        assert!(!enabled(Level::Normal));
+        assert!(!enabled(Level::Verbose));
+        assert!(enabled(Level::Quiet));
+
+        set_level(Level::Normal);
+        assert!(enabled(Level::Normal));
+        assert!(!enabled(Level::Verbose));
+
+        set_level(Level::Verbose);
+        assert!(enabled(Level::Verbose));
+
+        // The gating macro must not evaluate its arguments when the
+        // level suppresses the line.
+        set_level(Level::Quiet);
+        let mut evaluated = false;
+        out!("{}", {
+            evaluated = true;
+            "never formatted"
+        });
+        assert!(!evaluated, "suppressed out! evaluated its arguments");
+        set_level(Level::Normal);
+    }
+}

@@ -11,6 +11,7 @@
 
 pub mod csv;
 pub mod json;
+pub mod logger;
 pub mod prng;
 pub mod prop;
 pub mod sha256;

@@ -145,6 +145,7 @@ pub fn run_real_with_sink_cfg(
             min_bytes: cfg.progress_min_bytes,
         },
         sink_cfg,
+        None,
     )?;
     transport.set_output_handles(handles);
     let behavior = ToolBehavior {
@@ -171,6 +172,7 @@ pub fn run_real_with_sink_cfg(
             journal_dir: None,
             manifest: None,
             give_up_after: 6,
+            tracer: None,
         },
         &mut transport,
         &clock,

@@ -108,6 +108,7 @@ fn run_real(name: &str) -> SessionReport {
         runtime: None,
         sink: Sink::Discard,
         name: name.into(),
+        tracer: None,
     })
     .unwrap()
 }

@@ -228,6 +228,8 @@ fn batched_reconciliation_improves_ns_per_tick_at_c_max_256() {
         profile: FaultProfile::None,
         optimizer: OptimizerKind::GradientDescent,
         c_max: 256,
+        verify: false,
+        trace: false,
     };
     let batched = run_case(&spec, 11, ReconcileMode::Batched).unwrap();
     let full = run_case(&spec, 11, ReconcileMode::FullScan).unwrap();
@@ -282,6 +284,8 @@ fn batched_steady_state_tick_is_nearly_allocation_free() {
         profile: FaultProfile::None,
         optimizer: OptimizerKind::GradientDescent,
         c_max: 64,
+        verify: false,
+        trace: false,
     };
     let case = run_case(&spec, 5, ReconcileMode::Batched).unwrap();
     assert!(case.ticks > 200, "too few ticks to average: {}", case.ticks);
@@ -289,6 +293,58 @@ fn batched_steady_state_tick_is_nearly_allocation_free() {
         case.allocs_per_tick < 3.0,
         "steady-state tick allocates too much: {:.2} allocs/tick",
         case.allocs_per_tick
+    );
+}
+
+/// The flight recorder's steady-state cost model, pinned on the same
+/// benign case: with tracing on, the per-tick allocation budget holds
+/// (the ring is preallocated before the bench alloc counter starts),
+/// and the *incremental* allocations per recorded event are
+/// essentially zero — each record is a fixed-size copy into the ring,
+/// never a heap allocation.
+#[test]
+fn traced_steady_state_records_events_without_allocating() {
+    let spec = |trace: bool| CaseSpec {
+        dataset: "Amplicon-Digester",
+        profile: FaultProfile::None,
+        optimizer: OptimizerKind::GradientDescent,
+        c_max: 64,
+        verify: false,
+        trace,
+    };
+    let plain = run_case(&spec(false), 5, ReconcileMode::Batched).unwrap();
+    let traced = run_case(&spec(true), 5, ReconcileMode::Batched).unwrap();
+
+    assert_eq!(plain.trace_events, 0, "untraced case recorded events");
+    assert!(
+        traced.trace_events > 100,
+        "traced case recorded too few events to measure: {}",
+        traced.trace_events
+    );
+    // Tracing must not perturb the simulated outcome at all.
+    assert_eq!(traced.total_bytes, plain.total_bytes);
+    assert_eq!(traced.ticks, plain.ticks);
+    assert_eq!(traced.duration_s.to_bits(), plain.duration_s.to_bits());
+
+    assert!(
+        traced.allocs_per_tick < 3.0,
+        "traced steady-state tick allocates too much: {:.2} allocs/tick",
+        traced.allocs_per_tick
+    );
+    let plain_allocs = plain.allocs_per_tick * plain.ticks as f64;
+    let traced_allocs = traced.allocs_per_tick * traced.ticks as f64;
+    let per_event = (traced_allocs - plain_allocs) / traced.trace_events as f64;
+    println!(
+        "trace alloc overhead: {:.4} allocs/event over {} events",
+        per_event, traced.trace_events
+    );
+    // A small absolute slack (64 allocations) absorbs one-time lazy
+    // setup; beyond that, recording must be allocation-free.
+    assert!(
+        traced_allocs <= plain_allocs + traced.trace_events as f64 * 0.01 + 64.0,
+        "trace recording allocates per event: {plain_allocs:.0} -> {traced_allocs:.0} \
+         over {} events",
+        traced.trace_events
     );
 }
 

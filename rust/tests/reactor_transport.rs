@@ -135,6 +135,7 @@ fn reactor_sustains_a_thousand_concurrent_streams() {
         runtime: None,
         sink: Sink::Discard,
         name: "reactor-scale".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -193,6 +194,7 @@ fn dead_reactor_pool_fails_the_session_instead_of_hanging() {
             min_bytes: 0,
         },
         SinkConfig::default(),
+        None,
     )
     .unwrap();
     let kill = transport.kill_switch();
@@ -225,6 +227,7 @@ fn dead_reactor_pool_fails_the_session_instead_of_hanging() {
             journal_dir: None,
             manifest: None,
             give_up_after: 6,
+            tracer: None,
         },
         &mut transport,
         &clock,
@@ -285,6 +288,7 @@ fn progress_deadline_breaks_dribble_stalls() {
         runtime: None,
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "dribble-test".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -368,6 +372,7 @@ fn resume_trusts_disk_over_journal() {
         runtime: None,
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "disk-resume".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -461,6 +466,7 @@ fn resume_detects_corrupt_tail() {
         runtime: None,
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "taint-resume".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -519,6 +525,7 @@ fn per_mirror_cap_is_enforced_at_socket_level() {
         runtime: None,
         sink: Sink::Discard,
         name: "mirror-cap".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -591,6 +598,7 @@ fn sink_and_inline_paths_are_byte_identical() {
             runtime: None,
             sink: Sink::Directory(dir.to_str().unwrap().into()),
             name: format!("equiv-{tag}"),
+            tracer: None,
         })
         .unwrap();
         (dir, report)

@@ -114,6 +114,7 @@ fn full_real_session_downloads_and_verifies() {
         runtime: Some(&rt),
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "fastbiodl-real".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -185,6 +186,7 @@ fn real_session_recovers_from_mid_transfer_disconnects() {
         runtime: None,
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "disconnect-test".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -263,6 +265,7 @@ fn drop_window_outside_its_span_suppresses_mid_body_drops() {
         runtime: None,
         sink: Sink::Discard,
         name: "drop-window-test".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -327,6 +330,7 @@ fn real_session_rides_out_server_5xx_windows() {
         runtime: None,
         sink: Sink::Discard,
         name: "5xx-window".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -421,6 +425,7 @@ fn real_session_refetches_chunks_corrupted_by_server_window() {
         runtime: None,
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "corrupt-window".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -531,6 +536,7 @@ fn per_mirror_fault_window_degrades_one_mirror_only() {
         runtime: None,
         sink: Sink::Discard,
         name: "per-mirror-window".into(),
+        tracer: None,
     })
     .unwrap();
 
@@ -607,6 +613,7 @@ fn resume_skips_already_downloaded_bytes() {
         runtime: Some(&rt),
         sink: Sink::Directory(dir.to_str().unwrap().into()),
         name: "resume-test".into(),
+        tracer: None,
     })
     .unwrap();
 

@@ -1,0 +1,243 @@
+//! Flight-recorder acceptance suite:
+//!
+//! * **Deterministic traces** — two sim sessions with the same seed
+//!   (benign and chaos-profile) must export byte-identical NDJSON
+//!   traces, and the traces must pass the schema validator.
+//! * **Cross-layer coverage** — injected faults and the recovery they
+//!   force (retries) show up as typed events alongside the engine's
+//!   chunk lifecycle and the controller's probes.
+//! * **Off = identity** — running the same seed with tracing disabled
+//!   must leave the `SessionReport` and every persisted checkpoint
+//!   artifact (journal, manifest) byte-identical to the traced run.
+//! * **Chrome export** — a real session's `trace_event` JSON parses
+//!   and is structurally valid.
+//!
+//! Runtime-free: all controllers run their pure-Rust mirrors.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{fault_download_cfg, fault_netsim, mirrored_records, LINK_MBPS};
+use fastbiodl::accession::resolver::ResolutionCost;
+use fastbiodl::config::OptimizerKind;
+use fastbiodl::coordinator::scheduler::SchedulerMode;
+use fastbiodl::netsim::{FaultEvent, FaultKind, FaultProfile, FaultSchedule};
+use fastbiodl::optimizer::build_controller;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::{EngineStats, SessionReport};
+use fastbiodl::trace::{validate_ndjson, Tracer, DEFAULT_CAPACITY, TRACE_SCHEMA};
+use fastbiodl::util::json::Json;
+
+/// One simulated two-file, two-mirror session on the shared hostile
+/// topology; every knob that could perturb the replay is pinned so the
+/// only free variables are the ones a test passes in.
+fn run_one(
+    seed: u64,
+    faults: FaultSchedule,
+    verify: bool,
+    checkpoint_after: Option<f64>,
+    journal_dir: Option<std::path::PathBuf>,
+    tracer: Option<Arc<Tracer>>,
+) -> (SessionReport, EngineStats) {
+    let mut cfg = fault_download_cfg(OptimizerKind::GradientDescent, 2_400.0);
+    cfg.optimizer.c_max = 16;
+    cfg.integrity.verify = verify;
+    let controller = build_controller(&cfg.optimizer, None).unwrap();
+    let mut session = SimSession::new(SimSessionParams {
+        behavior: ToolBehavior {
+            name: "trace-test".into(),
+            mode: SchedulerMode::Chunked {
+                chunk_bytes: cfg.chunk_bytes,
+                max_open_files: cfg.max_open_files,
+            },
+            keep_alive: true,
+            resolution: ResolutionCost::Batch { latency_s: 0.5 },
+        },
+        download: cfg,
+        netsim: fault_netsim(faults),
+        records: mirrored_records("SRRTR", &[8_000_000, 12_000_000], 2),
+        controller,
+        runtime: None,
+        seed,
+    });
+    if let Some(t) = checkpoint_after {
+        session = session.with_checkpoint_after(t);
+    }
+    if let Some(d) = journal_dir {
+        session = session.with_journal_dir(d);
+    }
+    if let Some(tr) = tracer {
+        session = session.with_tracer(tr);
+    }
+    session.run_with_stats().unwrap()
+}
+
+#[test]
+fn same_seed_sim_traces_are_byte_identical() {
+    for profile in [FaultProfile::None, FaultProfile::Chaos] {
+        for seed in [3u64, 17] {
+            let faults = profile.schedule(seed, 60.0, LINK_MBPS);
+            let run = || {
+                let tracer = Arc::new(Tracer::with_capacity(DEFAULT_CAPACITY));
+                let (report, _) =
+                    run_one(seed, faults.clone(), false, None, None, Some(tracer.clone()));
+                (format!("{report:?}"), tracer.snapshot().to_ndjson())
+            };
+            let (rep_a, trace_a) = run();
+            let (rep_b, trace_b) = run();
+            assert_eq!(
+                rep_a,
+                rep_b,
+                "reports diverged across same-seed runs ({} seed {seed})",
+                profile.name()
+            );
+            assert_eq!(
+                trace_a,
+                trace_b,
+                "traces diverged across same-seed runs ({} seed {seed})",
+                profile.name()
+            );
+            let stats = validate_ndjson(&trace_a).unwrap();
+            assert!(stats.events > 0, "trace recorded nothing");
+            assert!(
+                trace_a.lines().next().unwrap().contains(TRACE_SCHEMA),
+                "header must carry the schema tag"
+            );
+        }
+    }
+}
+
+#[test]
+fn injected_faults_and_recovery_appear_in_the_trace() {
+    let faults = FaultSchedule::new(vec![
+        FaultEvent {
+            at_s: 0.8,
+            kind: FaultKind::ConnectionReset { count: 2 },
+        },
+        FaultEvent {
+            at_s: 1.2,
+            kind: FaultKind::ServerError {
+                reject_prob: 0.9,
+                duration_s: 1.0,
+            },
+        },
+    ]);
+    let tracer = Arc::new(Tracer::with_capacity(DEFAULT_CAPACITY));
+    let (report, _) = run_one(5, faults, false, None, None, Some(tracer.clone()));
+    assert!(report.completed);
+    assert!(report.chunk_retries > 0, "faults never forced a retry");
+
+    let trace = tracer.snapshot().to_ndjson();
+    validate_ndjson(&trace).unwrap();
+    for needle in [
+        "\"type\":\"chunk_dispatch\"",
+        "\"type\":\"chunk_complete\"",
+        "\"type\":\"probe\"",
+        "\"type\":\"fault\"",
+        "\"type\":\"chunk_retry\"",
+    ] {
+        assert!(trace.contains(needle), "trace is missing {needle}");
+    }
+}
+
+#[test]
+fn tracing_off_is_a_bit_level_identity() {
+    // A verified, checkpoint-interrupted run persists both checkpoint
+    // artifacts (journal + manifest); the traced and untraced replays
+    // of the same seed must agree on the full report (f64 bit patterns
+    // via Debug) and on every persisted byte.
+    let faults = || {
+        FaultSchedule::new(vec![FaultEvent {
+            at_s: 0.8,
+            kind: FaultKind::ConnectionReset { count: 1 },
+        }])
+    };
+    let dir = |tag: &str| {
+        let d = std::env::temp_dir().join(format!("fbdl-traceoff-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    };
+    let dir_traced = dir("on");
+    let dir_plain = dir("off");
+
+    let tracer = Arc::new(Tracer::with_capacity(DEFAULT_CAPACITY));
+    let (traced, _) = run_one(
+        9,
+        faults(),
+        true,
+        Some(2.0),
+        Some(dir_traced.clone()),
+        Some(tracer.clone()),
+    );
+    let (plain, _) = run_one(9, faults(), true, Some(2.0), Some(dir_plain.clone()), None);
+
+    assert!(tracer.events_recorded() > 0, "traced run recorded nothing");
+    assert!(!traced.completed, "checkpoint never fired");
+    assert_eq!(
+        format!("{traced:?}"),
+        format!("{plain:?}"),
+        "tracing changed the session outcome"
+    );
+
+    // Every persisted checkpoint artifact must match byte for byte.
+    let listing = |d: &std::path::Path| -> Vec<(String, Vec<u8>)> {
+        let mut entries: Vec<(String, Vec<u8>)> = std::fs::read_dir(d)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (
+                    e.file_name().to_string_lossy().into_owned(),
+                    std::fs::read(e.path()).unwrap(),
+                )
+            })
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        entries
+    };
+    let a = listing(&dir_traced);
+    let b = listing(&dir_plain);
+    assert!(!a.is_empty(), "checkpoint persisted no artifacts");
+    assert_eq!(
+        a.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        b.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        "traced and untraced runs persisted different artifact sets"
+    );
+    for ((name, bytes_a), (_, bytes_b)) in a.iter().zip(b.iter()) {
+        assert_eq!(bytes_a, bytes_b, "{name} differs between traced/untraced runs");
+    }
+    std::fs::remove_dir_all(&dir_traced).unwrap();
+    std::fs::remove_dir_all(&dir_plain).unwrap();
+}
+
+#[test]
+fn chrome_export_of_a_sim_session_parses() {
+    let tracer = Arc::new(Tracer::with_capacity(DEFAULT_CAPACITY));
+    let faults = FaultProfile::Chaos.schedule(11, 60.0, LINK_MBPS);
+    let (report, _) = run_one(11, faults, false, None, None, Some(tracer.clone()));
+    assert!(report.completed);
+
+    let text = tracer.snapshot().to_chrome_json();
+    let j = Json::parse(&text).expect("chrome export must be valid JSON");
+    let events = j
+        .require("traceEvents")
+        .unwrap()
+        .as_arr()
+        .expect("traceEvents must be an array");
+    assert!(!events.is_empty());
+    let mut spans = 0usize;
+    for ev in events {
+        let ph = ev.require("ph").unwrap().as_str().unwrap().to_string();
+        assert!(
+            matches!(ph.as_str(), "M" | "X" | "i" | "C"),
+            "unexpected phase {ph:?}"
+        );
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        if ph == "X" {
+            assert!(ev.require("dur").unwrap().as_f64().unwrap() >= 0.0);
+            spans += 1;
+        }
+    }
+    assert!(spans > 0, "no chunk spans in the chrome export");
+}
