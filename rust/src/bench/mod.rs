@@ -55,8 +55,12 @@ use crate::{Error, Result};
 /// (SHA-256 cost per MiB of payload; 0 on non-verify cases). v5 added
 /// the observability dimension: a `trace` case flag (the case ran with
 /// the flight recorder attached) and the deterministic `trace_events`
-/// det field (events recorded; 0 on non-trace cases).
-pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v5";
+/// det field (events recorded; 0 on non-trace cases). v6 added the
+/// campaign dimension: the `campaign` suite (many-small / mixed /
+/// many-large synthetic presets run in campaign mode with request
+/// trains and pipelining) and the deterministic `files_per_sec` det
+/// field (files completed per simulated second) on every case.
+pub const SCHEMA_VERSION: &str = "fastbiodl-bench-v6";
 
 /// Virtual-time cap per case (s): hostile cells (brownouts at
 /// `c_max = 16`) would otherwise run long; every case reports goodput
@@ -78,6 +82,11 @@ pub enum Suite {
     Smoke,
     /// The full 108-case grid (see module docs).
     Full,
+    /// The 3 many-file campaign presets (many-small / mixed /
+    /// many-large; see [`crate::experiments::scenario::campaign`]) run
+    /// in campaign mode — request trains + pipelining — with files/sec
+    /// as the headline deterministic metric.
+    Campaign,
 }
 
 impl Suite {
@@ -86,8 +95,9 @@ impl Suite {
         match s.to_ascii_lowercase().as_str() {
             "smoke" => Ok(Suite::Smoke),
             "full" => Ok(Suite::Full),
+            "campaign" => Ok(Suite::Campaign),
             other => Err(Error::Config(format!(
-                "unknown bench suite '{other}' (expected smoke | full)"
+                "unknown bench suite '{other}' (expected smoke | full | campaign)"
             ))),
         }
     }
@@ -97,6 +107,7 @@ impl Suite {
         match self {
             Suite::Smoke => "smoke",
             Suite::Full => "full",
+            Suite::Campaign => "campaign",
         }
     }
 }
@@ -120,6 +131,11 @@ pub struct CaseSpec {
     /// live [`crate::trace::Tracer`] and reports the deterministic
     /// event count, guarding that tracing never perturbs the sim.
     pub trace: bool,
+    /// Campaign mode: `dataset` names a
+    /// [`crate::experiments::scenario::campaign`] preset (many-small |
+    /// mixed | many-large) instead of a Table-2 alias, and the case
+    /// runs with request trains + pipelining enabled.
+    pub campaign: bool,
 }
 
 /// Short controller tag used in case ids ("gd" | "bayes" | "fixed").
@@ -138,7 +154,8 @@ impl CaseSpec {
     /// coordinates.
     pub fn id(&self) -> String {
         format!(
-            "{}/{}/{}/c{}{}{}",
+            "{}{}/{}/{}/c{}{}{}",
+            if self.campaign { "campaign/" } else { "" },
             self.dataset,
             self.profile.name(),
             optimizer_tag(self.optimizer),
@@ -163,6 +180,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                         c_max,
                         verify: false,
                         trace: false,
+                        campaign: false,
                     });
                 }
             }
@@ -176,6 +194,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                 c_max: 1024,
                 verify: false,
                 trace: false,
+                campaign: false,
             });
             // One benign verify cell: per-chunk SHA-256 on, measuring
             // raw hashing cost (hash_ns_per_mb) and guarding that
@@ -187,6 +206,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                 c_max: 16,
                 verify: true,
                 trace: false,
+                campaign: false,
             });
             // One benign trace cell: the flight recorder attached,
             // guarding that tracing perturbs neither the simulated
@@ -199,7 +219,21 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                 c_max: 16,
                 verify: false,
                 trace: true,
+                campaign: false,
             });
+        }
+        Suite::Campaign => {
+            for preset in ["many-small", "mixed", "many-large"] {
+                cases.push(CaseSpec {
+                    dataset: preset,
+                    profile: FaultProfile::None,
+                    optimizer: OptimizerKind::GradientDescent,
+                    c_max: 16,
+                    verify: false,
+                    trace: false,
+                    campaign: true,
+                });
+            }
         }
         Suite::Full => {
             for dataset in ["Breast-RNA-seq", "HiFi-WGS", "Amplicon-Digester"] {
@@ -222,6 +256,7 @@ pub fn suite_cases(suite: Suite) -> Vec<CaseSpec> {
                                 c_max,
                                 verify: false,
                                 trace: false,
+                                campaign: false,
                             });
                         }
                     }
@@ -252,6 +287,11 @@ pub struct CaseResult {
     pub mirror_switches: u64,
     pub probes: u64,
     pub files_completed: u64,
+    /// Files completed per simulated second — the campaign suite's
+    /// headline metric, deterministic like every other det field
+    /// (derived from `files_completed / duration_s` on the virtual
+    /// clock).
+    pub files_per_sec: f64,
     pub completed: bool,
     /// Chunk requeues per simulated second (the control plane's
     /// `retry_rate` signal, averaged over the whole case).
@@ -318,7 +358,11 @@ pub fn run_case_tuned(
     reconcile: ReconcileMode,
     tune: Option<&GdTune>,
 ) -> Result<CaseResult> {
-    let mut sc = scenario::colab_dataset(spec.dataset, seed)?;
+    let mut sc = if spec.campaign {
+        scenario::campaign(spec.dataset, seed)?
+    } else {
+        scenario::colab_dataset(spec.dataset, seed)?
+    };
     sc.download.optimizer.kind = spec.optimizer;
     sc.download.optimizer.c_max = spec.c_max;
     if spec.optimizer == OptimizerKind::Fixed {
@@ -398,6 +442,7 @@ pub fn run_case_tuned(
         mirror_switches: report.mirror_switches as u64,
         probes: report.probes as u64,
         files_completed: report.files_completed as u64,
+        files_per_sec: report.files_completed as f64 / report.duration_s.max(f64::EPSILON),
         completed: report.completed,
         retry_rate: report.chunk_retries as f64 / report.duration_s.max(f64::EPSILON),
         reject_rate: report.server_rejects as f64 / report.duration_s.max(f64::EPSILON),
@@ -472,6 +517,7 @@ impl BenchReport {
                             ("mirror_switches", Json::Num(c.mirror_switches as f64)),
                             ("probes", Json::Num(c.probes as f64)),
                             ("files_completed", Json::Num(c.files_completed as f64)),
+                            ("files_per_sec", Json::Num(c.files_per_sec)),
                             ("completed", Json::Bool(c.completed)),
                             ("retry_rate", Json::Num(c.retry_rate)),
                             ("reject_rate", Json::Num(c.reject_rate)),
@@ -559,6 +605,7 @@ impl BenchReport {
                 mirror_switches: req_u64(det, "mirror_switches")?,
                 probes: req_u64(det, "probes")?,
                 files_completed: req_u64(det, "files_completed")?,
+                files_per_sec: req_f64(det, "files_per_sec")?,
                 completed: matches!(*det.require("completed")?, Json::Bool(true)),
                 retry_rate: req_f64(det, "retry_rate")?,
                 reject_rate: req_f64(det, "reject_rate")?,
@@ -641,6 +688,8 @@ pub fn diff(current: &BenchReport, baseline: &BenchReport, tolerance: f64) -> Ve
                 || cur.mirror_switches != base.mirror_switches
                 || cur.probes != base.probes
                 || cur.files_completed != base.files_completed
+                || (cur.files_per_sec - base.files_per_sec).abs()
+                    > base.files_per_sec.abs() * 1e-9
                 || cur.completed != base.completed
                 || cur.chunks_scaled != base.chunks_scaled
                 || cur.trace_events != base.trace_events
@@ -768,6 +817,7 @@ pub fn run_sweep_cell(
         c_max: SWEEP_C_MAX,
         verify: false,
         trace: false,
+        campaign: false,
     };
     let result = run_case_tuned(&spec, seed, reconcile, Some(&tune))?;
     Ok(SweepCell {
@@ -860,6 +910,7 @@ mod tests {
                 mirror_switches: 2,
                 probes: 4,
                 files_completed: 43,
+                files_per_sec: 43.0 / 19.0,
                 completed: true,
                 retry_rate: 0.0,
                 reject_rate: 0.0,
@@ -893,6 +944,7 @@ mod tests {
         assert_eq!(a.total_bytes, b.total_bytes);
         assert_eq!(a.ticks, b.ticks);
         assert!((a.goodput_mbps - b.goodput_mbps).abs() < 1e-9);
+        assert!((a.files_per_sec - b.files_per_sec).abs() < 1e-9);
         assert!((a.write_syscalls_per_chunk - b.write_syscalls_per_chunk).abs() < 1e-9);
         assert_eq!(a.sink_queue_peak, b.sink_queue_peak);
         assert!((a.reactor_stall_ns - b.reactor_stall_ns).abs() < 1e-9);
@@ -962,6 +1014,11 @@ mod tests {
         let full = suite_cases(Suite::Full);
         assert_eq!(full.len(), 108, "full grid is 3 x 4 x 3 x 3");
         assert!(full.len() >= 30);
+        let camp = suite_cases(Suite::Campaign);
+        assert_eq!(camp.len(), 3, "many-small, mixed, many-large");
+        assert!(camp.iter().all(|c| c.campaign));
+        assert_eq!(camp[0].id(), "campaign/many-small/none/gd/c16");
+        assert!(smoke.iter().chain(&full).all(|c| !c.campaign));
         // Ids are unique (they key the baseline diff).
         let mut ids: Vec<String> = full.iter().map(CaseSpec::id).collect();
         ids.sort_unstable();
@@ -1045,6 +1102,7 @@ mod tests {
             c_max: 16,
             verify: false,
             trace: false,
+            campaign: false,
         };
         let a = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
         let b = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
@@ -1062,6 +1120,19 @@ mod tests {
     }
 
     #[test]
+    fn campaign_case_is_deterministic_and_reports_files_per_sec() {
+        let spec = suite_cases(Suite::Campaign)[0]; // many-small
+        let a = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
+        let b = run_case(&spec, 7, ReconcileMode::Batched).unwrap();
+        assert_eq!(a.goodput_mbps.to_bits(), b.goodput_mbps.to_bits());
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!(a.files_per_sec.to_bits(), b.files_per_sec.to_bits());
+        assert!(a.completed, "many-small must finish inside the horizon");
+        assert_eq!(a.files_completed, 96);
+        assert!(a.files_per_sec > 0.0);
+    }
+
+    #[test]
     fn verify_case_matches_benign_outcome_and_reports_hash_cost() {
         let plain = CaseSpec {
             dataset: "Amplicon-Digester",
@@ -1070,6 +1141,7 @@ mod tests {
             c_max: 16,
             verify: false,
             trace: false,
+            campaign: false,
         };
         let verified = CaseSpec {
             verify: true,
@@ -1099,9 +1171,11 @@ mod tests {
             c_max: 16,
             verify: false,
             trace: false,
+            campaign: false,
         };
         let traced = CaseSpec {
             trace: true,
+            campaign: false,
             ..plain
         };
         assert!(traced.id().ends_with("+trace"));

@@ -499,6 +499,21 @@ pub struct DownloadConfig {
     pub sink_queue_mb: usize,
     /// Maximum bytes merged into one positional write (KiB).
     pub coalesce_kb: usize,
+    /// Campaign mode: schedule the record set through
+    /// [`crate::coordinator::scheduler::SchedulerMode::Campaign`] —
+    /// files at or below [`Self::coalesce_files_kb`] coalesce into
+    /// pipelined whole-file request trains while larger files keep
+    /// chunked striping. Off by default (byte-identical to the
+    /// pre-campaign engine).
+    pub campaign: bool,
+    /// Max HTTP/1.1 requests on the wire per connection
+    /// (`--pipeline-depth`). 1 = no pipelining, today's behaviour;
+    /// higher depths amortize request round-trips and cold-staging
+    /// latency across a train of small files.
+    pub pipeline_depth: usize,
+    /// Campaign coalescing threshold (KiB): files at or below this size
+    /// become whole-file train requests (`--coalesce-files-kb`).
+    pub coalesce_files_kb: u64,
 }
 
 impl Default for DownloadConfig {
@@ -520,6 +535,9 @@ impl Default for DownloadConfig {
             sink_threads: 2,
             sink_queue_mb: 64,
             coalesce_kb: 1024,
+            campaign: false,
+            pipeline_depth: 1,
+            coalesce_files_kb: 4096,
         }
     }
 }
@@ -573,6 +591,17 @@ impl DownloadConfig {
                 self.coalesce_kb
             )));
         }
+        if !(1..=64).contains(&self.pipeline_depth) {
+            return Err(Error::Config(format!(
+                "pipeline_depth {} outside [1, 64]",
+                self.pipeline_depth
+            )));
+        }
+        if self.campaign && self.coalesce_files_kb == 0 {
+            return Err(Error::Config(
+                "coalesce_files_kb must be >= 1 in campaign mode".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -625,6 +654,9 @@ impl DownloadConfig {
         }
         if let Some(n) = env_usize("FASTBIODL_COALESCE_KB")? {
             self.coalesce_kb = n;
+        }
+        if let Some(n) = env_usize("FASTBIODL_PIPELINE_DEPTH")? {
+            self.pipeline_depth = n;
         }
         fn env_bool(name: &str) -> Result<Option<bool>> {
             match std::env::var(name) {
@@ -850,6 +882,26 @@ mod tests {
         // The whole-transfer validate chain covers the trace section.
         let mut dl = DownloadConfig::default();
         dl.trace.capacity = 0;
+        assert!(dl.validate().is_err());
+    }
+
+    #[test]
+    fn campaign_knobs_default_off_and_validate() {
+        let dl = DownloadConfig::default();
+        assert!(!dl.campaign);
+        assert_eq!(dl.pipeline_depth, 1);
+        assert_eq!(dl.coalesce_files_kb, 4096);
+        assert!(dl.validate().is_ok());
+        let mut dl = DownloadConfig::default();
+        dl.pipeline_depth = 0;
+        assert!(dl.validate().is_err());
+        dl.pipeline_depth = 65;
+        assert!(dl.validate().is_err());
+        dl.pipeline_depth = 8;
+        assert!(dl.validate().is_ok());
+        dl.campaign = true;
+        assert!(dl.validate().is_ok());
+        dl.coalesce_files_kb = 0;
         assert!(dl.validate().is_err());
     }
 

@@ -224,9 +224,30 @@ impl ChunkManifest {
 
 /// All per-file manifests of a transfer, keyed by accession, persisted
 /// as one JSON document next to the progress journal.
-#[derive(Clone, Debug, PartialEq, Default)]
+///
+/// Persistence is incremental: each entry's compact serialization is
+/// cached, and every mutable access (`get_mut`, `entry`, `insert`)
+/// invalidates only that entry's cache, so [`ManifestSet::save`]
+/// re-serializes the changed entries and splices the rest from cache.
+/// On a many-file campaign a probe/fault checkpoint touching one file
+/// costs one entry serialization, not O(files) — the document itself
+/// is still written whole (atomic temp + rename).
+#[derive(Clone, Debug, Default)]
 pub struct ManifestSet {
     files: BTreeMap<String, ChunkManifest>,
+    /// Compact per-entry JSON, present iff the entry is clean (in sync
+    /// with `files`). Never holds keys absent from `files`.
+    cache: BTreeMap<String, String>,
+    /// Cumulative entry serializations performed by `save` — the
+    /// observable the batching satellite's upper-bound test pins.
+    serialized: u64,
+}
+
+impl PartialEq for ManifestSet {
+    fn eq(&self, other: &Self) -> bool {
+        // The serialization cache is a performance detail, not state.
+        self.files == other.files
+    }
 }
 
 impl ManifestSet {
@@ -247,7 +268,18 @@ impl ManifestSet {
     }
 
     pub fn get_mut(&mut self, accession: &str) -> Option<&mut ChunkManifest> {
+        // Handing out &mut means the entry may change: drop its cached
+        // serialization (conservative — a no-op mutation re-serializes
+        // once, which is still O(1) entries, not O(files)).
+        self.cache.remove(accession);
         self.files.get_mut(accession)
+    }
+
+    /// Entry serializations performed by [`ManifestSet::save`] so far
+    /// (cumulative). With the dirty-entry cache this grows by the
+    /// number of *changed* entries per save, not by `len()`.
+    pub fn entries_serialized(&self) -> u64 {
+        self.serialized
     }
 
     /// Manifest for `accession`, creating (or replacing, if the file
@@ -268,10 +300,12 @@ impl ManifestSet {
             self.files
                 .insert(accession.to_string(), ChunkManifest::new(total_bytes, chunk_bytes));
         }
+        self.cache.remove(accession);
         self.files.get_mut(accession).unwrap()
     }
 
     pub fn insert(&mut self, accession: &str, manifest: ChunkManifest) {
+        self.cache.remove(accession);
         self.files.insert(accession.to_string(), manifest);
     }
 
@@ -281,17 +315,31 @@ impl ManifestSet {
     }
 
     /// Atomic write (temp + rename), same idiom as the journal.
-    pub fn save(&self, dir: &Path) -> Result<()> {
+    /// Incremental: only entries whose cached serialization was
+    /// invalidated since the last save are re-serialized; the document
+    /// is assembled by splicing per-entry buffers (byte-identical to
+    /// serializing the whole set through the JSON printer).
+    pub fn save(&mut self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
-        let doc = obj(vec![
-            ("version", Json::Num(1.0)),
-            (
-                "files",
-                Json::Arr(self.files.iter().map(|(acc, m)| m.to_json(acc)).collect()),
-            ),
-        ]);
+        // Key order matches the JSON printer's BTreeMap order
+        // ("files" < "version"), keeping the document byte-identical
+        // to a whole-set serialization.
+        let mut body = String::with_capacity(self.files.len() * 64 + 32);
+        body.push_str("{\"files\":[");
+        for (i, (acc, m)) in self.files.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            if !self.cache.contains_key(acc) {
+                self.cache
+                    .insert(acc.clone(), m.to_json(acc).to_string_compact());
+                self.serialized += 1;
+            }
+            body.push_str(&self.cache[acc]);
+        }
+        body.push_str("],\"version\":1}");
         let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
-        std::fs::write(&tmp, doc.to_string_compact())?;
+        std::fs::write(&tmp, body)?;
         std::fs::rename(&tmp, Self::path_for(dir))?;
         Ok(())
     }
@@ -437,6 +485,30 @@ mod tests {
         assert_eq!(loaded, set);
         ManifestSet::remove(&dir).unwrap();
         assert!(ManifestSet::load(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_reserializes_only_dirty_entries() {
+        let dir = std::env::temp_dir().join(format!("fbdl-manifest-dirty-{}", std::process::id()));
+        let mut set = ManifestSet::new();
+        for i in 0..20 {
+            set.entry(&format!("SRR{i:07}"), 250, 100);
+        }
+        set.save(&dir).unwrap();
+        assert_eq!(set.entries_serialized(), 20, "cold save serializes everything");
+        set.save(&dir).unwrap();
+        assert_eq!(set.entries_serialized(), 20, "clean save serializes nothing");
+        // Touch one file (the per-probe checkpoint pattern): exactly
+        // one entry re-serializes, regardless of set size.
+        let m = set.get_mut("SRR0000003").unwrap();
+        m.record_hash(0, sha256(b"x"));
+        m.set_available(0, true);
+        set.save(&dir).unwrap();
+        assert_eq!(set.entries_serialized(), 21, "one dirty entry, one serialization");
+        // The spliced incremental document round-trips like a full one.
+        let loaded = ManifestSet::load(&dir).unwrap().unwrap();
+        assert_eq!(loaded, set);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

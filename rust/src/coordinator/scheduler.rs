@@ -1,6 +1,7 @@
 //! Chunk scheduling: files → range requests → workers.
 //!
-//! Two modes mirror the two tool families in the paper:
+//! Three modes; the first two mirror the two tool families in the
+//! paper:
 //!
 //! * [`SchedulerMode::Chunked`] — FastBioDL: every file is cut into
 //!   fixed-size range requests; at most `max_open_files` distinct files
@@ -11,6 +12,14 @@
 //!   latency); subsequent chunks of the same file are warm.
 //! * [`SchedulerMode::WholeFile`] — prefetch/pysradb: one request per
 //!   file, as many files open as there are workers.
+//! * [`SchedulerMode::Campaign`] — many-file campaigns: files at or
+//!   below `coalesce_bytes` become whole-file *train* chunks
+//!   ([`Chunk::train`]) that the engine may pipeline back to back on
+//!   one keep-alive connection ([`ChunkScheduler::next_train_chunk`]),
+//!   amortizing request setup and cold staging; larger files keep the
+//!   chunked striping semantics. One scheduler instance is the single
+//!   global chunk pool for the whole manifest, so controllers and the
+//!   resume journal see one campaign, not N sessions.
 //!
 //! Chunked mode additionally supports **striping-aware chunk sizing**
 //! ([`ChunkScheduler::next_chunk_scaled`]): the session engine passes a
@@ -75,6 +84,11 @@ pub struct Chunk {
     pub len: u64,
     /// First chunk of its file (pays cold first-byte latency).
     pub cold: bool,
+    /// Train-eligible whole-file request (Campaign mode, small files):
+    /// the engine may pipeline further train chunks behind this one on
+    /// the same connection. Always `false` in the other modes, so
+    /// depth-1 behavior is byte-identical.
+    pub train: bool,
 }
 
 /// Scheduling policy.
@@ -87,6 +101,16 @@ pub enum SchedulerMode {
     },
     /// One request per file (baseline tools).
     WholeFile,
+    /// Many-file campaign: files at or below `coalesce_bytes` become
+    /// whole-file train chunks (pipelinable back to back); larger files
+    /// keep chunked striping under the same `chunk_bytes` /
+    /// `max_open_files` bounds. Train files do not count against
+    /// `max_open_files` — coalescing many small files is the point.
+    Campaign {
+        chunk_bytes: u64,
+        max_open_files: usize,
+        coalesce_bytes: u64,
+    },
 }
 
 #[derive(Clone, Debug)]
@@ -102,6 +126,10 @@ struct FileState {
     chunks_issued: usize,
     opened: bool,
     completed: bool,
+    /// Campaign mode: file is at or below the coalesce threshold and is
+    /// handed out as one train-eligible whole-file chunk. Always
+    /// `false` in the other modes.
+    small: bool,
     /// Completed byte spans, kept merged and sorted (resume support:
     /// the contiguous-from-zero frontier is what the progress journal
     /// persists).
@@ -165,8 +193,12 @@ pub struct ChunkScheduler {
     /// cursor is monotone — it turns the "next file to open" lookup
     /// from an O(files) rescan per idle worker per tick into amortized
     /// O(1) (43-file workloads at c_max = 256 hit this hard; see the
-    /// `bench` subsystem).
+    /// `bench` subsystem). In Campaign mode this cursor serves the
+    /// large (chunked) files only.
     first_unopened: usize,
+    /// Campaign mode's second monotone cursor, over the small (train)
+    /// files; unused in the other modes.
+    first_unopened_small: usize,
     total_bytes: u64,
     bytes_done: u64,
     /// Chunks cut below their full size because of a scale < 1 (tail
@@ -190,17 +222,28 @@ impl ChunkScheduler {
         mode: SchedulerMode,
         done_prefix: Option<&[u64]>,
     ) -> ChunkScheduler {
-        if let SchedulerMode::Chunked {
-            chunk_bytes,
-            max_open_files,
-        } = mode
-        {
-            assert!(chunk_bytes > 0, "chunk_bytes must be > 0");
-            assert!(max_open_files > 0, "max_open_files must be > 0");
+        match mode {
+            SchedulerMode::Chunked {
+                chunk_bytes,
+                max_open_files,
+            }
+            | SchedulerMode::Campaign {
+                chunk_bytes,
+                max_open_files,
+                ..
+            } => {
+                assert!(chunk_bytes > 0, "chunk_bytes must be > 0");
+                assert!(max_open_files > 0, "max_open_files must be > 0");
+            }
+            SchedulerMode::WholeFile => {}
         }
         if let Some(p) = done_prefix {
             assert_eq!(p.len(), records.len(), "done_prefix arity mismatch");
         }
+        let coalesce = match mode {
+            SchedulerMode::Campaign { coalesce_bytes, .. } => coalesce_bytes,
+            _ => 0,
+        };
         let mut bytes_done_total = 0u64;
         let files: Vec<FileState> = records
             .iter()
@@ -218,6 +261,7 @@ impl ChunkScheduler {
                     chunks_issued: 0,
                     opened: false,
                     completed: prefix >= r.bytes,
+                    small: r.bytes <= coalesce,
                     spans: if prefix > 0 {
                         vec![(0, prefix)]
                     } else {
@@ -234,6 +278,7 @@ impl ChunkScheduler {
             open: Vec::new(),
             requeued: Vec::new(),
             first_unopened: 0,
+            first_unopened_small: 0,
             total_bytes,
             bytes_done: bytes_done_total,
             chunks_scaled: 0,
@@ -265,7 +310,12 @@ impl ChunkScheduler {
         for w in skip.windows(2) {
             assert!(w[0].1 <= w[1].0, "verified spans overlap");
         }
-        if matches!(self.mode, SchedulerMode::WholeFile) {
+        // Whole-file requests (WholeFile mode, and Campaign's small
+        // train files) cannot skip interior ranges: only full coverage
+        // takes effect.
+        let whole_file_only = matches!(self.mode, SchedulerMode::WholeFile)
+            || (matches!(self.mode, SchedulerMode::Campaign { .. }) && f.small);
+        if whole_file_only {
             let covers_all = skip.first() == Some(&(prefix, f.bytes)) && skip.len() == 1;
             if !covers_all {
                 return;
@@ -286,13 +336,27 @@ impl ChunkScheduler {
     }
 
     /// Index of the first file that is neither opened nor completed,
-    /// advancing the monotone cursor past settled files.
+    /// advancing the monotone cursor past settled files. In Campaign
+    /// mode this is the *large-file* cursor (small files are skipped —
+    /// they have their own cursor in [`ChunkScheduler::next_unopened_small`]).
     fn next_unopened(&mut self) -> Option<usize> {
         while let Some(f) = self.files.get(self.first_unopened) {
-            if !f.opened && !f.completed {
+            if !f.opened && !f.completed && !f.small {
                 return Some(self.first_unopened);
             }
             self.first_unopened += 1;
+        }
+        None
+    }
+
+    /// Campaign mode: first small (train) file neither opened nor
+    /// completed, via its own monotone cursor.
+    fn next_unopened_small(&mut self) -> Option<usize> {
+        while let Some(f) = self.files.get(self.first_unopened_small) {
+            if !f.opened && !f.completed && f.small {
+                return Some(self.first_unopened_small);
+            }
+            self.first_unopened_small += 1;
         }
         None
     }
@@ -321,29 +385,64 @@ impl ChunkScheduler {
             return Some(c);
         }
         match self.mode {
-            SchedulerMode::WholeFile => self.next_whole_file(),
+            SchedulerMode::WholeFile => {
+                let idx = self.next_unopened()?;
+                Some(self.issue_whole_file(idx, false))
+            }
             SchedulerMode::Chunked {
                 chunk_bytes,
                 max_open_files,
             } => self.next_chunked(chunk_bytes, max_open_files, scale),
+            SchedulerMode::Campaign {
+                chunk_bytes,
+                max_open_files,
+                ..
+            } => {
+                // Large (chunked) work first, then small train files.
+                if let Some(c) = self.next_chunked(chunk_bytes, max_open_files, scale) {
+                    return Some(c);
+                }
+                let idx = self.next_unopened_small()?;
+                Some(self.issue_whole_file(idx, true))
+            }
         }
     }
 
-    fn next_whole_file(&mut self) -> Option<Chunk> {
-        let idx = self.next_unopened()?;
+    /// Campaign mode: pull the next *train-eligible* chunk — a requeued
+    /// train chunk, else the next unopened small file as a whole-file
+    /// request. The engine uses this to extend a request train behind a
+    /// train head already in flight on the same connection; `None` in
+    /// the other modes (nothing is ever train-eligible there).
+    pub fn next_train_chunk(&mut self) -> Option<Chunk> {
+        if !matches!(self.mode, SchedulerMode::Campaign { .. }) {
+            return None;
+        }
+        // Requeued train chunks first (LIFO among trains, matching the
+        // requeue order of next_chunk_scaled).
+        if let Some(pos) = self.requeued.iter().rposition(|c| c.train) {
+            let c = self.requeued.remove(pos);
+            self.files[c.file].outstanding += 1;
+            return Some(c);
+        }
+        let idx = self.next_unopened_small()?;
+        Some(self.issue_whole_file(idx, true))
+    }
+
+    fn issue_whole_file(&mut self, idx: usize, train: bool) -> Chunk {
         let f = &mut self.files[idx];
         f.opened = true;
         let offset = f.next_offset; // 0, or the resume frontier
         f.next_offset = f.bytes;
         f.outstanding = 1;
         f.chunks_issued = 1;
-        Some(Chunk {
+        Chunk {
             file: idx,
             index: 0,
             offset,
             len: f.bytes - offset,
             cold: true,
-        })
+            train,
+        }
     }
 
     fn next_chunked(
@@ -399,6 +498,7 @@ impl ChunkScheduler {
             offset,
             len,
             cold: index == 0,
+            train: false,
         })
     }
 
@@ -440,6 +540,15 @@ impl ChunkScheduler {
                 .iter()
                 .filter(|f| f.opened && !f.completed)
                 .count(),
+            // Large chunked files plus every small file in flight.
+            SchedulerMode::Campaign { .. } => {
+                self.open.len()
+                    + self
+                        .files
+                        .iter()
+                        .filter(|f| f.small && f.opened && !f.completed)
+                        .count()
+            }
         }
     }
 
@@ -458,6 +567,22 @@ impl ChunkScheduler {
                 let can_open_new = self.open.len() < max_open_files
                     && self.files.iter().any(|f| !f.opened && !f.completed);
                 open_has_work || can_open_new
+            }
+            SchedulerMode::Campaign { max_open_files, .. } => {
+                let open_has_work = self
+                    .open
+                    .iter()
+                    .any(|&i| self.files[i].next_offset < self.files[i].bytes);
+                let can_open_large = self.open.len() < max_open_files
+                    && self
+                        .files
+                        .iter()
+                        .any(|f| !f.small && !f.opened && !f.completed);
+                let small_waiting = self
+                    .files
+                    .iter()
+                    .any(|f| f.small && !f.opened && !f.completed);
+                open_has_work || can_open_large || small_waiting
             }
         }
     }
@@ -797,6 +922,156 @@ mod tests {
         while let Some(c) = s.next_chunk() {
             s.chunk_done(&c);
         }
+        assert!(s.all_done());
+    }
+
+    #[test]
+    fn campaign_splits_trains_from_chunked_and_tiles_exactly() {
+        // Files ≤ 200 become whole-file train chunks; the 1000-byte
+        // file keeps chunked striping. Everything must tile exactly.
+        let recs = records(&[150, 1_000, 200, 50]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Campaign {
+                chunk_bytes: 300,
+                max_open_files: 2,
+                coalesce_bytes: 200,
+            },
+        );
+        let mut per_file: Vec<Vec<(u64, u64)>> = vec![Vec::new(); 4];
+        let mut pulled = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            per_file[c.file].push((c.offset, c.len));
+            pulled.push(c.clone());
+            s.chunk_done(&c);
+        }
+        assert!(s.all_done());
+        for (i, spans) in per_file.iter().enumerate() {
+            let mut sorted = spans.clone();
+            sorted.sort();
+            let mut cursor = 0;
+            for (off, len) in sorted {
+                assert_eq!(off, cursor, "file {i} has a gap/overlap");
+                cursor = off + len;
+            }
+            assert_eq!(cursor, recs[i].bytes, "file {i} not fully tiled");
+        }
+        // Small files arrive as single train chunks, large ones as
+        // plain chunked cuts.
+        for c in &pulled {
+            let small = recs[c.file].bytes <= 200;
+            assert_eq!(c.train, small, "train flag wrong on file {}", c.file);
+            if small {
+                assert_eq!((c.offset, c.len), (0, recs[c.file].bytes));
+                assert!(c.cold);
+            }
+        }
+        assert_eq!(s.progress(), (1_400, 1_400));
+    }
+
+    #[test]
+    fn campaign_trains_do_not_count_against_open_files() {
+        // One large file slot available, but all small files may open
+        // concurrently as trains regardless of max_open_files.
+        let recs = records(&[1_000, 1_000, 10, 10, 10]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Campaign {
+                chunk_bytes: 500,
+                max_open_files: 1,
+                coalesce_bytes: 100,
+            },
+        );
+        let mut pulled = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            pulled.push(c);
+        }
+        // File 0 fully handed out (2 chunks), file 1 blocked behind
+        // max_open_files, all three small files issued as trains.
+        let large: Vec<usize> = pulled.iter().filter(|c| !c.train).map(|c| c.file).collect();
+        assert_eq!(large, vec![0, 0]);
+        assert_eq!(pulled.iter().filter(|c| c.train).count(), 3);
+        assert!(!s.has_ready_work());
+        // Completing file 0 unblocks file 1.
+        for c in pulled.iter().filter(|c| c.file == 0) {
+            s.chunk_done(c);
+        }
+        assert!(s.has_ready_work());
+        let c = s.next_chunk().expect("large file 1 should open");
+        assert_eq!((c.file, c.train), (1, false));
+    }
+
+    #[test]
+    fn campaign_train_requeue_is_served_by_next_train_chunk() {
+        let recs = records(&[40, 40, 40]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Campaign {
+                chunk_bytes: 100,
+                max_open_files: 1,
+                coalesce_bytes: 100,
+            },
+        );
+        let a = s.next_train_chunk().unwrap();
+        let b = s.next_train_chunk().unwrap();
+        assert!(a.train && b.train);
+        assert_eq!((a.file, b.file), (0, 1));
+        // A mid-train failure requeues; the retry is train-eligible
+        // again and served before fresh small files.
+        s.chunk_failed(b.clone());
+        let again = s.next_train_chunk().unwrap();
+        assert_eq!(again, b);
+        s.chunk_done(&a);
+        s.chunk_done(&again);
+        let c = s.next_train_chunk().unwrap();
+        assert_eq!(c.file, 2);
+        s.chunk_done(&c);
+        assert!(s.all_done());
+        assert!(s.next_train_chunk().is_none());
+        assert_eq!(s.progress(), (120, 120));
+    }
+
+    #[test]
+    fn next_train_chunk_is_inert_outside_campaign_mode() {
+        let recs = records(&[100]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Chunked {
+                chunk_bytes: 64,
+                max_open_files: 1,
+            },
+        );
+        assert!(s.next_train_chunk().is_none());
+        let c = s.next_chunk().unwrap();
+        assert!(!c.train);
+    }
+
+    #[test]
+    fn campaign_resume_prefix_and_verified_files_skip_trains() {
+        // A small file fully verified on disk never becomes a train;
+        // a partial verified span on a small file is ignored (whole-
+        // file requests cannot skip interior ranges).
+        let recs = records(&[80, 80, 900]);
+        let mut s = ChunkScheduler::new(
+            &recs,
+            SchedulerMode::Campaign {
+                chunk_bytes: 300,
+                max_open_files: 2,
+                coalesce_bytes: 100,
+            },
+        );
+        s.set_verified_spans(0, &[(0, 80)]); // full: completed
+        s.set_verified_spans(1, &[(0, 40)]); // partial: ignored
+        assert_eq!(s.files_completed(), 1);
+        let mut train_files = Vec::new();
+        while let Some(c) = s.next_chunk() {
+            if c.train {
+                train_files.push(c.file);
+                assert_eq!((c.offset, c.len), (0, 80));
+            }
+            s.chunk_done(&c);
+        }
+        assert_eq!(train_files, vec![1]);
         assert!(s.all_done());
     }
 

@@ -143,6 +143,70 @@ pub fn colab_dataset(alias: &str, seed: u64) -> Result<Scenario> {
     })
 }
 
+/// Many-file campaign presets (the `bench --suite campaign` cells and
+/// the directional campaign tests): the Amplicon-style cold-staging
+/// network — ≈8 s to first byte on deep-archive objects, client
+/// pressure negligible — carrying a synthetic file set at one of three
+/// size mixes. This is the regime where per-request latency, not
+/// bandwidth, dominates wall time, so request trains and pipelining
+/// are what the preset measures.
+///
+/// * `many-small` — 96 × 2 MiB: every file sits below the default
+///   coalesce threshold and rides a request train.
+/// * `mixed` — 32 × 2 MiB + 4 × 256 MiB: trains and chunked striping
+///   share one connection pool and one global chunk queue.
+/// * `many-large` — 6 × 512 MiB: nothing coalesces; guards that
+///   campaign mode does not regress pure large-file workloads.
+pub fn campaign(preset: &str, seed: u64) -> Result<Scenario> {
+    let (name, small, large): (&'static str, usize, usize) = match preset {
+        "many-small" => ("many-small", 96, 0),
+        "mixed" => ("mixed", 32, 4),
+        "many-large" => ("many-large", 0, 6),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown campaign preset '{other}' (many-small | mixed | many-large)"
+            )))
+        }
+    };
+    const SMALL_BYTES: u64 = 2 * 1024 * 1024;
+    let large_bytes: u64 = if preset == "many-large" {
+        512 * 1024 * 1024
+    } else {
+        256 * 1024 * 1024
+    };
+    let mut netsim = colab_netsim();
+    netsim.server.first_byte_latency_s = 8.0;
+    netsim.client.write_cap_mbps = 0.0;
+    netsim.client.file_overhead_beta = 0.0;
+    let mut catalog = Catalog::empty();
+    let mut records = Vec::new();
+    if small > 0 {
+        catalog.register_synthetic("CAMP-S", small, SMALL_BYTES);
+        records.extend_from_slice(catalog.project_runs("CAMP-S")?);
+    }
+    if large > 0 {
+        catalog.register_synthetic("CAMP-L", large, large_bytes);
+        records.extend_from_slice(catalog.project_runs("CAMP-L")?);
+    }
+    let _ = seed;
+    let download = DownloadConfig {
+        campaign: true,
+        pipeline_depth: 4,
+        optimizer: crate::config::OptimizerConfig {
+            probe_interval_s: 5.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    Ok(Scenario {
+        name,
+        netsim,
+        download,
+        records,
+        c_star_theoretical: None,
+    })
+}
+
 /// §5.2 FABRIC-style throttled high-speed profiles.
 ///
 /// * `a`: 10 Gbps link, 500 Mbps per thread  → C* = 20
@@ -220,6 +284,26 @@ mod tests {
             assert!(!s.records.is_empty());
         }
         assert!(colab_dataset("nope", 1).is_err());
+    }
+
+    #[test]
+    fn campaign_presets_build_with_advertised_mixes() {
+        let small = campaign("many-small", 1).unwrap();
+        small.netsim.validate().unwrap();
+        small.download.validate().unwrap();
+        assert!(small.download.campaign);
+        assert!(small.download.pipeline_depth > 1);
+        assert_eq!(small.records.len(), 96);
+        let threshold = small.download.coalesce_files_kb * 1024;
+        assert!(small.records.iter().all(|r| r.bytes < threshold));
+
+        let mixed = campaign("mixed", 1).unwrap();
+        assert!(mixed.records.iter().any(|r| r.bytes < threshold));
+        assert!(mixed.records.iter().any(|r| r.bytes >= threshold));
+
+        let large = campaign("many-large", 1).unwrap();
+        assert!(large.records.iter().all(|r| r.bytes >= threshold));
+        assert!(campaign("tiny", 1).is_err());
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!
 //! * `download <accession...>` — simulated adaptive download of one or
 //!   more accessions/BioProjects on a named scenario profile.
+//! * `campaign <manifest|accession...>` — many-file campaign run:
+//!   small files coalesced into pipelined request trains, large files
+//!   chunk-striped, one global chunk pool.
 //! * `fetch <url...>` — real-socket adaptive download of HTTP URLs
 //!   (pair with `serve`).
 //! * `serve` — run the throttled local HTTP server with synthetic
@@ -75,8 +78,22 @@ COMMANDS:
                               never alters a session's behaviour)
         --trace-format <f>    ndjson (default; schema fastbiodl-trace-v1)
                               or chrome (trace_event JSON for Perfetto)
+        --pipeline-depth <n>  in-flight requests per keep-alive
+                              connection (default 1 = no pipelining)
         --trace-capacity <n>  trace ring-buffer capacity in events
                               (default 65536; oldest overwritten)
+    campaign <manifest|accession...>
+                              many-file campaign through one engine run:
+                              files below the coalesce threshold become
+                              pipelined whole-file request trains, large
+                              files keep chunked striping. A positional
+                              that names an existing file is read as a
+                              manifest (one accession per line, # = comment).
+                              Takes the download flags, plus:
+        --pipeline-depth <n>  in-flight requests per connection
+                              (campaign default 4)
+        --coalesce-files-kb <n>  files smaller than this join request
+                              trains (default 4096; larger = chunked)
     fetch <url...>            real-socket adaptive download over HTTP
         --out <dir>           write payloads here (default: discard)
         --chunk-mb <n>        range-request size (default 32)
@@ -102,6 +119,8 @@ COMMANDS:
                               .fastbiodl-manifest kept next to --out
                               files (trust-on-first-use for unknown
                               chunks; mismatches are re-fetched)
+        --pipeline-depth <n>  in-flight requests per keep-alive
+                              connection (default 1 = no pipelining)
         --reuse-local         delta resume: rehash partial files on disk
                               at cold start and re-download only the
                               chunks that fail verification (requires
@@ -130,7 +149,10 @@ COMMANDS:
                               the virtual-clock netsim, measuring real
                               control-loop cost (ns/tick, allocs/tick,
                               reconcile scan) alongside simulated goodput
-        --suite <s>           smoke (5 cases, default) or full (108)
+        --suite <s>           smoke (7 cases, default), full (108), or
+                              campaign (3 many-file presets: many-small
+                              / mixed / many-large in campaign mode,
+                              files/sec per cell)
         --out <path>          output JSON (default BENCH_engine.json)
         --baseline <path>     diff against a stored BENCH_engine.json
                               and print regressions
@@ -157,7 +179,7 @@ ENVIRONMENT:
     FASTBIODL_K, FASTBIODL_PROBE_INTERVAL, FASTBIODL_LR, FASTBIODL_OPTIMIZER,
     FASTBIODL_MIRROR_STRATEGY, FASTBIODL_FAULT_PENALTY, FASTBIODL_PROGRESS_WINDOW,
     FASTBIODL_SINK_THREADS, FASTBIODL_SINK_QUEUE_MB, FASTBIODL_COALESCE_KB,
-    FASTBIODL_VERIFY, FASTBIODL_REUSE_LOCAL,
+    FASTBIODL_PIPELINE_DEPTH, FASTBIODL_VERIFY, FASTBIODL_REUSE_LOCAL,
     FASTBIODL_TRACE_OUT, FASTBIODL_TRACE_FORMAT, FASTBIODL_TRACE_CAPACITY
                               config overrides (see config module docs)
 "#;
@@ -201,6 +223,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(),
         "bench" => cmd_bench(&args),
         "download" => cmd_download(&args),
+        "campaign" => cmd_campaign(&args),
         "fetch" => cmd_fetch(&args),
         "trace-validate" => cmd_trace_validate(&args),
         "serve" => cmd_serve(&args),
@@ -277,6 +300,12 @@ fn apply_optimizer_flags(cfg: &mut DownloadConfig, args: &Args) -> Result<()> {
     }
     if let Some(mb) = args.flag_usize("chunk-mb")? {
         cfg.chunk_bytes = (mb as u64) * 1024 * 1024;
+    }
+    if let Some(d) = args.flag_usize("pipeline-depth")? {
+        cfg.pipeline_depth = d;
+    }
+    if let Some(kb) = args.flag_u64("coalesce-files-kb")? {
+        cfg.coalesce_files_kb = kb;
     }
     if let Some(path) = args.flag("trace-out") {
         cfg.trace.out = Some(path.to_string());
@@ -445,9 +474,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     for spec in &specs {
         let case = bench::run_case(spec, seed, reconcile)?;
         out!(
-            "  {:<42} {:>8.1} Mbps  {:>7} ticks  {:>9.0} ns/tick  {:>6.2} alloc/tick  scan {:>6.1}/tick{}",
+            "  {:<42} {:>8.1} Mbps  {:>7.2} f/s  {:>7} ticks  {:>9.0} ns/tick  {:>6.2} alloc/tick  scan {:>6.1}/tick{}",
             case.id,
             case.goodput_mbps,
+            case.files_per_sec,
             case.ticks,
             case.ns_per_tick,
             case.allocs_per_tick,
@@ -516,8 +546,8 @@ fn cmd_download(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
         "faults", "mirror-strategy", "mirror-conns", "reconcile", "fault-penalty",
-        "adaptive-chunks", "verify", "report-json", "trace-out", "trace-format",
-        "trace-capacity",
+        "adaptive-chunks", "verify", "pipeline-depth", "report-json", "trace-out",
+        "trace-format", "trace-capacity",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config(
@@ -617,12 +647,147 @@ fn cmd_download(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Campaign mode: many accessions scheduled through one engine run,
+/// with small files coalesced into pipelined request trains
+/// (`SchedulerMode::Campaign`) while large files keep chunked striping.
+fn cmd_campaign(args: &Args) -> Result<()> {
+    args.expect_flags(&[
+        "scenario", "optimizer", "k", "probe", "fixed-level", "seed", "c-max", "chunk-mb",
+        "faults", "mirror-strategy", "mirror-conns", "reconcile", "fault-penalty",
+        "adaptive-chunks", "verify", "pipeline-depth", "coalesce-files-kb", "report-json",
+        "trace-out", "trace-format", "trace-capacity",
+    ])?;
+    if args.positional.is_empty() {
+        return Err(Error::Config(
+            "campaign needs a manifest file or accession list \
+             (e.g. `fastbiodl campaign runs.txt` or `fastbiodl campaign PRJNA762469`)"
+                .into(),
+        ));
+    }
+    let seed = args.flag_u64("seed")?.unwrap_or(1);
+
+    // Manifest: each positional is either a file of accessions (one
+    // per line, '#' comments) or an accession literal — so a
+    // thousand-run campaign is a text file, not a shell line.
+    let mut names: Vec<String> = Vec::new();
+    for arg in &args.positional {
+        if std::path::Path::new(arg).is_file() {
+            for line in std::fs::read_to_string(arg)?.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                names.push(line.to_string());
+            }
+        } else {
+            names.push(arg.clone());
+        }
+    }
+    if names.is_empty() {
+        return Err(Error::Config("campaign manifest resolved to zero accessions".into()));
+    }
+    let accessions: Vec<Accession> = names
+        .iter()
+        .map(|s| Accession::parse(s))
+        .collect::<Result<_>>()?;
+
+    let mut sc = match args.flag("scenario") {
+        Some(name) if name.starts_with("fabric-") => {
+            scenario::fabric(name.chars().last().unwrap(), seed)?
+        }
+        Some(name) => scenario::colab_dataset(name, seed)?,
+        None => scenario::colab_dataset(
+            accessions
+                .iter()
+                .find(|a| a.is_project())
+                .map(|a| a.as_str())
+                .unwrap_or("Breast-RNA-seq"),
+            seed,
+        )?,
+    };
+    // Campaign defaults: trains on, pipelining deep enough to amortize
+    // staging latency. `--pipeline-depth`/env still override.
+    sc.download.campaign = true;
+    sc.download.pipeline_depth = 4;
+    apply_optimizer_flags(&mut sc.download, args)?;
+    sc.download.validate()?;
+
+    if let Some(profile) = args.flag("faults") {
+        let profile = fastbiodl::netsim::FaultProfile::parse(profile).map_err(Error::Config)?;
+        let horizon = if sc.download.timeout_s > 0.0 {
+            sc.download.timeout_s
+        } else {
+            1_800.0
+        };
+        sc = sc.with_fault_profile(profile, seed, horizon);
+        if !sc.netsim.faults.is_empty() {
+            out!(
+                "fault profile '{}': {} scheduled events",
+                profile.name(),
+                sc.netsim.faults.len()
+            );
+        }
+    }
+
+    let catalog = Catalog::with_table2(seed);
+    let resolver = Resolver::batch(&catalog);
+    let (records, _) = resolver.resolve(&accessions)?;
+    sc.records = records;
+
+    out!(
+        "campaign: {} files ({}) on scenario '{}', coalesce < {} KiB, pipeline depth {}",
+        sc.records.len(),
+        fastbiodl::util::fmt_bytes(Catalog::total_bytes(&sc.records)),
+        sc.name,
+        sc.download.coalesce_files_kb,
+        sc.download.pipeline_depth,
+    );
+    let tracer = build_tracer(&sc.download.trace)?;
+    let outcome = match load_runtime() {
+        Ok(rt) => run_tool_once_with_stats(&sc, &Tool::fastbiodl(&sc), &rt, seed, tracer.clone()),
+        Err(e) => {
+            log::warn!("XLA runtime unavailable ({e}); using pure-Rust mirror controllers");
+            let controller =
+                build_controller_with(&sc.download.optimizer, &sc.download.control, None)?;
+            let mut session = SimSession::new(SimSessionParams {
+                download: sc.download.clone(),
+                behavior: ToolBehavior::fastbiodl(&sc.download),
+                netsim: sc.netsim.clone(),
+                records: sc.records.clone(),
+                controller,
+                runtime: None,
+                seed,
+            });
+            if let Some(tr) = &tracer {
+                session = session.with_tracer(tr.clone());
+            }
+            session.run_with_stats()
+        }
+    };
+    if let Some(tr) = &tracer {
+        write_trace(tr, &sc.download.trace)?;
+    }
+    let (report, stats) = outcome?;
+    if let Some(path) = args.flag("report-json") {
+        write_report_json(path, &report, Some(&stats))?;
+    }
+    print_report(&report, Some(&stats));
+    if report.duration_s > 0.0 {
+        out!(
+            "files/sec       : {:.3}",
+            report.files_completed as f64 / report.duration_s
+        );
+    }
+    Ok(())
+}
+
 fn cmd_fetch(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "out", "chunk-mb", "probe", "c-max", "size", "optimizer", "k", "mirror-strategy",
         "mirror-conns", "reconcile", "fault-penalty", "adaptive-chunks", "progress-window",
         "progress-min-bytes", "sink-threads", "sink-queue-mb", "coalesce-kb", "verify",
-        "reuse-local", "report-json", "trace-out", "trace-format", "trace-capacity",
+        "reuse-local", "pipeline-depth", "report-json", "trace-out", "trace-format",
+        "trace-capacity",
     ])?;
     if args.positional.is_empty() {
         return Err(Error::Config("fetch needs at least one http:// URL".into()));

@@ -14,7 +14,7 @@
 
 use crate::netsim::client::ClientProfile;
 use crate::netsim::fault::{FaultKind, FaultSchedule};
-use crate::netsim::flow::{FlowId, FlowPhase, SimFlow};
+use crate::netsim::flow::{FlowId, FlowPhase, PendingRequest, SimFlow};
 use crate::netsim::link::Link;
 use crate::netsim::server::ServerProfile;
 use crate::netsim::traffic::OuProcess;
@@ -395,6 +395,72 @@ impl NetSim {
         Ok(())
     }
 
+    /// Issue a request on flow `id`, pipelining it behind the in-flight
+    /// one if the flow is busy (HTTP/1.1 request pipelining). On an
+    /// idle flow this is exactly [`NetSim::begin_request`]; on a busy
+    /// flow the request is queued and promoted FIFO when its
+    /// predecessor completes or aborts. A connection that dies drops
+    /// its queue silently — the coordinator requeues the unanswered
+    /// tail, mirroring the real transport's retry contract.
+    pub fn queue_request(&mut self, id: FlowId, bytes: f64, cold: bool, tag: u64) -> Result<()> {
+        let busy = self
+            .flow(id)
+            .map(|f| f.is_busy())
+            .ok_or_else(|| Error::Sim(format!("no such flow {id:?}")))?;
+        if !busy {
+            return self.begin_request(id, bytes, cold, tag);
+        }
+        assert!(bytes > 0.0, "request must move at least one byte");
+        let now = self.now_s;
+        let f = self.flow_mut(id).expect("flow checked above");
+        f.pending.push_back(PendingRequest {
+            bytes,
+            cold,
+            tag,
+            enqueued_s: now,
+        });
+        Ok(())
+    }
+
+    /// Promote the next pipelined request on flow-table index `i`, if
+    /// any. The flow must be Idle (its previous request just finished
+    /// or aborted). Returns whether a request was promoted.
+    ///
+    /// A pipelined request hit the wire when it was queued, so the
+    /// server has been staging its object while the wire was busy with
+    /// the predecessor: only the staging time not already hidden
+    /// remains, floored at the warm keep-alive constant (the response
+    /// head still costs a request round-trip). This overlap is the
+    /// mechanism that makes request trains amortize cold staging in
+    /// campaign mode — and it is symmetric with real HTTP/1.1
+    /// pipelining, where the server works on queued requests in order.
+    fn promote_pending(&mut self, i: usize) -> bool {
+        let Some(req) = self.flows[i].pending.pop_front() else {
+            return false;
+        };
+        let fbl_total = if req.cold {
+            self.cfg.server.first_byte_latency_s
+        } else {
+            self.cfg.server.first_byte_latency_s.min(0.02)
+        };
+        let warm_floor = self.cfg.server.first_byte_latency_s.min(0.02);
+        let waited = (self.now_s - req.enqueued_s).max(0.0);
+        let mut fbl = (fbl_total - waited).max(warm_floor);
+        // The reject draw happens when the response is produced, same
+        // as begin_request: a request promoted inside a 5xx window is
+        // doomed even if it was queued before the window opened.
+        let reject = self.now_s < self.brownout_until_s
+            || (self.now_s < self.reject_until_s && self.rng.next_f64() < self.reject_prob);
+        if reject {
+            fbl = fbl.max(0.05);
+        }
+        let f = &mut self.flows[i];
+        f.tag = req.tag;
+        f.begin_request(req.bytes, fbl);
+        f.reject_pending = reject;
+        true
+    }
+
     /// Tell the engine how many distinct files are currently being
     /// written (drives the client's distinct-file penalty).
     pub fn set_open_files(&mut self, n: usize) {
@@ -471,12 +537,16 @@ impl NetSim {
         // Phase timers (setup / first-byte). A flow whose first-byte
         // timer fires with a pending injected rejection aborts back to
         // Idle and reports `rejected` instead of going Active.
-        for f in &mut self.flows {
+        // (Indexed loop: the rejected path promotes the next pipelined
+        // request, which needs `&mut self`.)
+        for i in 0..self.flows.len() {
+            let f = &mut self.flows[i];
             let fired = f.tick_phase(dt);
             if fired && f.is_active() && f.reject_pending {
+                let id = f.id;
                 f.abort_request();
                 report.events.push(FlowEvent {
-                    id: f.id,
+                    id,
                     bytes: 0.0,
                     request_done: false,
                     became_ready: false,
@@ -484,6 +554,10 @@ impl NetSim {
                     rejected: true,
                     corrupted: false,
                 });
+                // The rejected head does not take its pipelined
+                // successors down with it: promote the next queued
+                // request on the surviving connection.
+                self.promote_pending(i);
                 continue;
             }
             if fired && f.is_idle() && f.fail_on_setup {
@@ -623,6 +697,12 @@ impl NetSim {
                     rejected: false,
                     corrupted: false,
                 });
+            }
+            if done {
+                // The head of a pipelined train finished: promote its
+                // successor on the spot, crediting the staging time it
+                // already spent queued.
+                self.promote_pending(i);
             }
         }
 
@@ -1458,6 +1538,123 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn pipelined_requests_overlap_staging_latency() {
+        let mut cfg = quiet_cfg();
+        cfg.server.first_byte_latency_s = 4.0;
+        let mut sim = NetSim::new(cfg, 18).unwrap();
+        let f = sim.open_flow().unwrap();
+        while !sim.flow_ready(f) {
+            sim.step(None);
+        }
+        // Two cold 1 MB objects: head begun, successor pipelined.
+        sim.queue_request(f, 1e6, true, 0).unwrap(); // idle → begins
+        sim.queue_request(f, 1e6, true, 1).unwrap(); // busy → queued
+        let start = sim.now();
+        let mut done = 0;
+        while done < 2 && sim.now() < 60.0 {
+            done += sim
+                .step(None)
+                .events
+                .iter()
+                .filter(|e| e.request_done)
+                .count();
+        }
+        assert_eq!(done, 2, "both pipelined requests must complete");
+        let elapsed = sim.now() - start;
+        // The server staged object 2 while object 1 transferred: total
+        // is ~one staging latency + two short transfers, not two
+        // latencies (~8 s sequential).
+        assert!(
+            elapsed < 6.0,
+            "pipelining must overlap staging: {elapsed}"
+        );
+        assert!((sim.flow_delivered(f) - 2e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn queue_request_on_idle_flow_is_begin_request() {
+        let mut sim = NetSim::new(quiet_cfg(), 19).unwrap();
+        let f = sim.open_flow().unwrap();
+        while !sim.flow_ready(f) {
+            sim.step(None);
+        }
+        sim.queue_request(f, 1e6, false, 5).unwrap();
+        assert_eq!(sim.flow_tag(f), Some(5));
+        let mut done = 0;
+        for _ in 0..200 {
+            done += sim
+                .step(None)
+                .events
+                .iter()
+                .filter(|e| e.request_done)
+                .count();
+            if done > 0 {
+                break;
+            }
+        }
+        assert_eq!(done, 1);
+    }
+
+    #[test]
+    fn rejected_head_promotes_its_pipelined_successor() {
+        // 5xx window covers the head request's issue time only (it
+        // closes before the error response lands): the head rejects,
+        // the queued successor is promoted outside the window on the
+        // surviving connection and completes.
+        let cfg = faulted_cfg(vec![FaultEvent {
+            at_s: 0.5,
+            kind: FaultKind::ServerError {
+                reject_prob: 1.0,
+                duration_s: 0.52,
+            },
+        }]);
+        let mut sim = NetSim::new(cfg, 20).unwrap();
+        let f = sim.open_flow().unwrap();
+        while sim.now() < 1.0 {
+            sim.step(None);
+        }
+        assert!(sim.flow_ready(f));
+        sim.queue_request(f, 1e6, false, 0).unwrap(); // in-window: doomed
+        sim.queue_request(f, 1e6, false, 1).unwrap(); // queued behind it
+        let (mut rejected, mut done) = (0, 0);
+        for _ in 0..400 {
+            let rep = sim.step(None);
+            rejected += rep.events.iter().filter(|e| e.rejected).count();
+            done += rep.events.iter().filter(|e| e.request_done).count();
+            if done > 0 {
+                break;
+            }
+        }
+        assert_eq!(rejected, 1, "head must be rejected");
+        assert_eq!(done, 1, "successor must be promoted and complete");
+        assert_eq!(sim.flow_tag(f), Some(1));
+    }
+
+    #[test]
+    fn pipelining_preserves_determinism() {
+        let run = |seed| {
+            let mut cfg = quiet_cfg();
+            cfg.server.first_byte_latency_s = 1.0;
+            let mut sim = NetSim::new(cfg, seed).unwrap();
+            let f = sim.open_flow().unwrap();
+            while !sim.flow_ready(f) {
+                sim.step(None);
+            }
+            for t in 0..4 {
+                sim.queue_request(f, 5e5, true, t).unwrap();
+            }
+            let mut trace = Vec::new();
+            for _ in 0..500 {
+                let rep = sim.step(None);
+                trace.push((rep.total_bytes, rep.events.len()));
+            }
+            trace
+        };
+        assert_eq!(run(23), run(23));
+        assert_ne!(run(23), run(24));
     }
 
     #[test]

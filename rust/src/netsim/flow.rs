@@ -13,6 +13,13 @@
 //! close_flow() at any point ──► Closed
 //! ```
 //!
+//! With HTTP/1.1 request pipelining ([`SimFlow::pending`]), further
+//! requests may be queued while one is in flight; the engine promotes
+//! them FIFO when the head request completes, crediting the time the
+//! pipelined request already spent waiting against its first-byte
+//! staging latency (the server stages the next object while the wire
+//! is busy).
+//!
 //! While `Active`, the flow's demand each step is
 //! `per_conn_cap × slow_start_ramp × jitter × long_request_decay`; the
 //! link then water-fills actual rates across all active flows. The
@@ -20,11 +27,32 @@
 //! interval until it reaches 1.0, modelling TCP congestion-window
 //! growth without simulating packets.
 
+use std::collections::VecDeque;
+
 use crate::util::prng::Prng;
 
 /// Opaque flow identifier (index into the engine's flow table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
+
+/// A pipelined request queued behind the one currently in flight on
+/// this connection (HTTP/1.1 request pipelining). Promoted FIFO when
+/// the in-flight request finishes or aborts; dropped silently if the
+/// connection dies (the coordinator requeues the unanswered tail).
+#[derive(Clone, Copy, Debug)]
+pub struct PendingRequest {
+    /// Payload size (bytes).
+    pub bytes: f64,
+    /// Whether the object pays cold first-byte staging.
+    pub cold: bool,
+    /// Coordinator tag identifying the work item.
+    pub tag: u64,
+    /// Absolute sim time the request was queued. The server stages a
+    /// pipelined object while the wire is busy with its predecessor,
+    /// so time already spent waiting is credited against the staging
+    /// latency at promotion.
+    pub enqueued_s: f64,
+}
 
 /// Connection lifecycle phase.
 #[derive(Clone, Debug, PartialEq)]
@@ -83,6 +111,9 @@ pub struct SimFlow {
     /// Whether the corruption draw for the current response has been
     /// made yet (one Bernoulli trial per response per window).
     pub corrupt_checked: bool,
+    /// Pipelined requests queued behind the in-flight one (HTTP/1.1
+    /// request pipelining; empty at pipeline depth 1).
+    pub pending: VecDeque<PendingRequest>,
 }
 
 /// Initial slow-start ramp fraction.
@@ -115,6 +146,7 @@ impl SimFlow {
             fail_on_setup: false,
             corrupted: false,
             corrupt_checked: false,
+            pending: VecDeque::new(),
         }
     }
 

@@ -274,13 +274,25 @@ pub struct ToolBehavior {
 
 impl ToolBehavior {
     /// FastBioDL: chunked, keep-alive, batch resolution (paper §4).
+    /// With `cfg.campaign` set, small files coalesce into pipelined
+    /// request trains ([`SchedulerMode::Campaign`]) while large files
+    /// keep chunked striping.
     pub fn fastbiodl(cfg: &DownloadConfig) -> ToolBehavior {
-        ToolBehavior {
-            name: "fastbiodl".into(),
-            mode: SchedulerMode::Chunked {
+        let mode = if cfg.campaign {
+            SchedulerMode::Campaign {
                 chunk_bytes: cfg.chunk_bytes,
                 max_open_files: cfg.max_open_files,
-            },
+                coalesce_bytes: cfg.coalesce_files_kb.saturating_mul(1024),
+            }
+        } else {
+            SchedulerMode::Chunked {
+                chunk_bytes: cfg.chunk_bytes,
+                max_open_files: cfg.max_open_files,
+            }
+        };
+        ToolBehavior {
+            name: "fastbiodl".into(),
+            mode,
             keep_alive: true,
             resolution: ResolutionCost::Batch { latency_s: 1.5 },
         }
@@ -351,6 +363,12 @@ struct Slot {
     /// resolution / failure backoff); issued when `now >= wait_until`.
     chunk: Option<Chunk>,
     wait_until: f64,
+    /// Pipelined train chunks issued behind the in-flight head on the
+    /// same connection (campaign mode, `--pipeline-depth` > 1).
+    /// Responses arrive FIFO: a completion promotes the front to
+    /// `chunk`; a dead connection requeues the whole unanswered tail.
+    /// Always empty at depth 1.
+    train: std::collections::VecDeque<Chunk>,
     /// Fetch currently in flight.
     in_flight: bool,
     /// When the in-flight fetch was issued (mirror goodput samples).
@@ -371,6 +389,7 @@ impl Default for Slot {
             connected_at: 0.0,
             chunk: None,
             wait_until: 0.0,
+            train: std::collections::VecDeque::new(),
             in_flight: false,
             fetch_started: 0.0,
             next_allowed: 0.0,
@@ -443,7 +462,7 @@ fn save_journal(
 /// Persist the chunk manifest when it changed since the last save.
 /// Shares the journal's cadence and, like it, must not kill the
 /// transfer on I/O trouble.
-fn save_manifest(dir: &Option<PathBuf>, manifest: &Option<ManifestSet>, dirty: &mut bool) {
+fn save_manifest(dir: &Option<PathBuf>, manifest: &mut Option<ManifestSet>, dirty: &mut bool) {
     let (Some(dir), Some(ms)) = (dir, manifest) else {
         return;
     };
@@ -596,6 +615,18 @@ pub fn run_session_with_stats(
     // the chunk-cutting path is byte-identical to the unscaled engine.
     let adaptive_chunks = download.control.adaptive_chunks;
     let chunk_scale_min = download.control.chunk_scale_min.clamp(f64::MIN_POSITIVE, 1.0);
+    // Request pipelining (campaign trains): only meaningful past depth
+    // 1, and only when resolution is not serialized per cold file —
+    // pipelined requests go on the wire immediately, which would bypass
+    // the serialized-resolution cost model. Depth 1 (the default) makes
+    // every pipelining branch below a no-op, byte-identical to the
+    // unpipelined engine.
+    let per_file_latency = behavior.resolution.per_file_latency();
+    let pipeline_depth = if per_file_latency == 0.0 {
+        download.pipeline_depth.max(1)
+    } else {
+        1
+    };
     let mut action_chunk_scale = 1.0f64;
     let mut last_probe_s = start;
     let mut probe_mark = (0usize, 0usize, 0usize);
@@ -812,7 +843,7 @@ pub fn run_session_with_stats(
                 } else {
                     1.0
                 };
-                let per_file = behavior.resolution.per_file_latency();
+                let per_file = per_file_latency;
                 if let Some(chunk) = sched.next_chunk_scaled(scale) {
                     let mut wait = now.max(slot.next_allowed);
                     if chunk.cold && per_file > 0.0 {
@@ -845,6 +876,47 @@ pub fn run_session_with_stats(
             }
         }
 
+        // --- Extend request trains (campaign pipelining). A slot whose
+        // in-flight head is a train chunk may pipeline further
+        // train-eligible whole-file requests behind it on the same
+        // connection, up to `pipeline_depth` requests on the wire at
+        // once. Each pipelined chunk is fetched immediately — the
+        // transport queues it behind the in-flight response — and the
+        // scheduler has already marked it outstanding.
+        if pipeline_depth > 1 {
+            for (i, slot) in slots.iter_mut().enumerate().take(live) {
+                let running = match reconcile {
+                    ReconcileMode::FullScan => status.is_running(i),
+                    ReconcileMode::Batched => i < target,
+                };
+                if !running || !slot.in_flight || !slot.connected || now < slot.next_allowed {
+                    continue;
+                }
+                if !slot.chunk.as_ref().map(|c| c.train).unwrap_or(false) {
+                    continue; // head is not train-eligible
+                }
+                while slot.train.len() + 1 < pipeline_depth {
+                    let Some(chunk) = sched.next_train_chunk() else {
+                        break;
+                    };
+                    transport.begin_fetch(i, &records[chunk.file], &chunk, slot.mirror)?;
+                    if let Some(tr) = tracer.as_deref() {
+                        tr.record(
+                            now,
+                            TraceEvent::ChunkDispatch {
+                                slot: i as u32,
+                                mirror: slot.mirror as u32,
+                                file: chunk.file as u32,
+                                offset: chunk.offset,
+                                len: chunk.len,
+                            },
+                        );
+                    }
+                    slot.train.push_back(chunk);
+                }
+            }
+        }
+
         transport.set_open_files(sched.open_files());
 
         // --- Advance the world / collect chunk-level outcomes. ---
@@ -860,15 +932,40 @@ pub fn run_session_with_stats(
         // accounting pass; a chunk without a recorded hash is adopted
         // trust-on-first-use (the hash pins every later resume).
         if let Some(ms) = manifest.as_mut() {
-            for ev in events.iter_mut() {
-                let (i, d) = match ev {
+            for idx in 0..events.len() {
+                let (i, d) = match &events[idx] {
                     TransportEvent::Completed {
                         slot,
                         digest: Some(d),
                     } => (*slot, *d),
                     _ => continue,
                 };
-                let Some(chunk) = slots.get(i).and_then(|s| s.chunk.as_ref()) else {
+                // Pipelined slots can land several FIFO responses in
+                // one poll batch: the first verifies against the head
+                // chunk, the k-th against the (k-1)-th train chunk.
+                // Rewritten corrupt completions earlier in this pass
+                // still consumed their queue position. At depth 1 the
+                // prior count is always 0 (one chunk per slot in
+                // flight) and this is exactly the head lookup.
+                let prior = events[..idx]
+                    .iter()
+                    .filter(|e| match e {
+                        TransportEvent::Completed { slot, .. } => *slot == i,
+                        TransportEvent::Failed {
+                            slot,
+                            class: FailureClass::Corrupt,
+                            ..
+                        } => *slot == i,
+                        _ => false,
+                    })
+                    .count();
+                let Some(chunk) = slots.get(i).and_then(|s| {
+                    if prior == 0 {
+                        s.chunk.as_ref()
+                    } else {
+                        s.train.get(prior - 1)
+                    }
+                }) else {
                     continue;
                 };
                 let r = &records[chunk.file];
@@ -927,14 +1024,24 @@ pub fn run_session_with_stats(
                         );
                     }
                     sched.chunk_done(&chunk);
-                    slot.in_flight = false;
                     slot.fails = 0;
                     slot.backoff_s = BACKOFF_MIN_S;
-                    if !behavior.keep_alive {
-                        // Baselines: fresh connection per request.
-                        transport.disconnect(*i);
-                        slot.connected = false;
-                        mirror_conns[slot.mirror] = mirror_conns[slot.mirror].saturating_sub(1);
+                    if let Some(next) = slot.train.pop_front() {
+                        // FIFO promotion: the next pipelined response on
+                        // this connection answers the next train chunk.
+                        // The request was already issued, so the slot
+                        // stays in flight.
+                        slot.chunk = Some(next);
+                        slot.fetch_started = now;
+                    } else {
+                        slot.in_flight = false;
+                        if !behavior.keep_alive {
+                            // Baselines: fresh connection per request.
+                            transport.disconnect(*i);
+                            slot.connected = false;
+                            mirror_conns[slot.mirror] =
+                                mirror_conns[slot.mirror].saturating_sub(1);
+                        }
                     }
                 }
                 TransportEvent::Failed {
@@ -951,7 +1058,26 @@ pub fn run_session_with_stats(
                         sched.chunk_failed(chunk);
                         chunk_retries += 1;
                     }
-                    slot.in_flight = false;
+                    // A dead connection takes the whole unanswered
+                    // train with it; a per-request failure (reject,
+                    // hash mismatch) consumed exactly one FIFO
+                    // response, so the successor is promoted and the
+                    // connection keeps draining. Empty train at depth
+                    // 1: both branches reduce to `in_flight = false`.
+                    let connection_lost =
+                        matches!(class, FailureClass::Transport | FailureClass::Fatal);
+                    if connection_lost {
+                        while let Some(queued) = slot.train.pop_front() {
+                            sched.chunk_failed(queued);
+                            chunk_retries += 1;
+                        }
+                        slot.in_flight = false;
+                    } else if let Some(next) = slot.train.pop_front() {
+                        slot.chunk = Some(next);
+                        slot.fetch_started = now;
+                    } else {
+                        slot.in_flight = false;
+                    }
                     slot.next_allowed = now + slot.backoff_s;
                     slot.backoff_s = (slot.backoff_s * 2.0).min(BACKOFF_MAX_S);
                     board.on_failure(slot.mirror, now);
@@ -1022,7 +1148,7 @@ pub fn run_session_with_stats(
                 download.chunk_bytes,
                 &mut last_journal,
             );
-            save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
+            save_manifest(&journal_dir, &mut manifest, &mut manifest_dirty);
         }
 
         // --- Monitor sampling. ---
@@ -1121,7 +1247,7 @@ pub fn run_session_with_stats(
                 download.chunk_bytes,
                 &mut last_journal,
             );
-            save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
+            save_manifest(&journal_dir, &mut manifest, &mut manifest_dirty);
             next_probe += probe_dt;
         }
 
@@ -1147,7 +1273,7 @@ pub fn run_session_with_stats(
             download.chunk_bytes,
             &mut last_journal,
         );
-        save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
+        save_manifest(&journal_dir, &mut manifest, &mut manifest_dirty);
         if let Some(tr) = tracer.as_deref() {
             tr.record(clock.now(), TraceEvent::SessionFatal);
             tr.blackbox(&e.to_string());
@@ -1161,7 +1287,7 @@ pub fn run_session_with_stats(
             // over (or harvest chunks from) the finished artifacts.
             ProgressJournal::remove(dir)?;
         }
-        save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
+        save_manifest(&journal_dir, &mut manifest, &mut manifest_dirty);
     } else {
         save_journal(
             &journal_dir,
@@ -1170,7 +1296,7 @@ pub fn run_session_with_stats(
             download.chunk_bytes,
             &mut last_journal,
         );
-        save_manifest(&journal_dir, &manifest, &mut manifest_dirty);
+        save_manifest(&journal_dir, &mut manifest, &mut manifest_dirty);
     }
 
     stats.chunks_scaled = sched.chunks_scaled() as u64;

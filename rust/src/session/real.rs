@@ -41,7 +41,9 @@ use crate::session::engine::{
 use crate::session::SessionReport;
 use crate::trace::{Tracer, WallTracer};
 use crate::transport::http_client::HttpConnection;
-use crate::transport::reactor::{FetchSpec, KillSwitch, ProgressPolicy, Reactor};
+use crate::transport::reactor::{
+    FetchSpec, KillSwitch, ProgressPolicy, Reactor, IDLE_REAP_DEFAULT_S,
+};
 use crate::transport::sink::{SinkConfig, SinkFile};
 use crate::{Error, Result};
 
@@ -134,6 +136,9 @@ impl RealTransport {
     /// unlimited); `progress` is the whole-chunk progress deadline.
     /// `trace` (when tracing) lets reactor and sink threads record
     /// connection-state and write-batch events.
+    /// `pipeline_depth` caps HTTP/1.1 requests on the wire per
+    /// connection (1 = no pipelining, the pre-campaign behavior).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         capacity: usize,
         sink: Sink,
@@ -142,9 +147,19 @@ impl RealTransport {
         recorder: Arc<ThroughputRecorder>,
         progress: ProgressPolicy,
         sink_cfg: SinkConfig,
+        pipeline_depth: usize,
         trace: Option<WallTracer>,
     ) -> Result<RealTransport> {
-        let reactor = Reactor::spawn(capacity, mirror_count, recorder, progress, sink_cfg, trace)?;
+        let reactor = Reactor::spawn(
+            capacity,
+            mirror_count,
+            recorder,
+            progress,
+            sink_cfg,
+            pipeline_depth,
+            IDLE_REAP_DEFAULT_S,
+            trace,
+        )?;
         Ok(RealTransport {
             reactor,
             sink,
@@ -377,9 +392,17 @@ pub fn run_real_session_with_stats(
 
     let behavior = ToolBehavior {
         name,
-        mode: SchedulerMode::Chunked {
-            chunk_bytes: download.chunk_bytes,
-            max_open_files: download.max_open_files,
+        mode: if download.campaign {
+            SchedulerMode::Campaign {
+                chunk_bytes: download.chunk_bytes,
+                max_open_files: download.max_open_files,
+                coalesce_bytes: download.coalesce_files_kb.saturating_mul(1024),
+            }
+        } else {
+            SchedulerMode::Chunked {
+                chunk_bytes: download.chunk_bytes,
+                max_open_files: download.max_open_files,
+            }
         },
         keep_alive: true,
         // The caller's resolver has already waited in real time.
@@ -402,6 +425,7 @@ pub fn run_real_session_with_stats(
         recorder.clone(),
         progress,
         SinkConfig::from_download(&download),
+        download.pipeline_depth,
         wall_trace,
     )?;
     transport.set_output_handles(handles);

@@ -14,7 +14,7 @@
 //!   determinism is total given `(params, seed)`.
 
 use std::cell::Cell;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::Arc;
 
@@ -94,10 +94,13 @@ pub struct SimTransport {
     /// default so unverified sessions skip the hashing work entirely
     /// and stay bit-identical to pre-integrity behaviour.
     verify: bool,
-    /// Per-slot in-flight chunk identity `(accession, offset, len)`,
+    /// Per-slot in-flight chunk identities `(accession, offset, len)`,
     /// recorded at `begin_fetch` so the completion digest can be
-    /// derived ([`sim_chunk_digest`]).
-    chunk_meta: Vec<Option<(String, u64, u64)>>,
+    /// derived ([`sim_chunk_digest`]). A queue because a pipelined slot
+    /// carries several requests on the wire at once; responses resolve
+    /// FIFO, so each completion (or rejection) pops the front. Depth 1
+    /// keeps at most one entry — identical to the old single cell.
+    chunk_meta: Vec<VecDeque<(String, u64, u64)>>,
 }
 
 impl SimTransport {
@@ -123,7 +126,7 @@ impl SimTransport {
             per_mirror_conns,
             scratch: StepReport::default(),
             verify: false,
-            chunk_meta: vec![None; capacity],
+            chunk_meta: vec![VecDeque::new(); capacity],
         })
     }
 
@@ -154,6 +157,7 @@ impl Transport for SimTransport {
             self.flow_slots.remove(&id);
             self.sim.close_flow(id);
         }
+        self.chunk_meta[slot].clear();
     }
 
     fn is_ready(&self, slot: usize) -> bool {
@@ -172,10 +176,13 @@ impl Transport for SimTransport {
         let id = self.flows[slot]
             .ok_or_else(|| Error::Sim(format!("begin_fetch on disconnected slot {slot}")))?;
         if self.verify {
-            self.chunk_meta[slot] = Some((record.accession.clone(), chunk.offset, chunk.len));
+            self.chunk_meta[slot].push_back((record.accession.clone(), chunk.offset, chunk.len));
         }
+        // `queue_request` is `begin_request` when the flow is idle, and
+        // enqueues behind the in-flight response when the engine
+        // pipelines a train chunk onto a busy connection.
         self.sim
-            .begin_request(id, chunk.len as f64, chunk.cold, slot as u64)
+            .queue_request(id, chunk.len as f64, chunk.cold, slot as u64)
     }
 
     fn poll(&mut self, events: &mut Vec<TransportEvent>) -> Result<()> {
@@ -186,9 +193,11 @@ impl Transport for SimTransport {
                 continue; // flow already released by the engine
             };
             if ev.failed {
-                // The simulator killed the flow.
+                // The simulator killed the flow, and any pipelined
+                // requests queued behind the head died with it.
                 self.flows[slot] = None;
                 self.flow_slots.remove(&ev.id);
+                self.chunk_meta[slot].clear();
                 events.push(TransportEvent::Failed {
                     slot,
                     class: FailureClass::Transport,
@@ -197,6 +206,9 @@ impl Transport for SimTransport {
                 continue;
             }
             if ev.rejected {
+                // The rejected head consumed its FIFO position (the
+                // simulator promotes the next queued request itself).
+                self.chunk_meta[slot].pop_front();
                 events.push(TransportEvent::Failed {
                     slot,
                     class: FailureClass::Reject,
@@ -209,8 +221,8 @@ impl Transport for SimTransport {
             }
             if ev.request_done {
                 let digest = if self.verify {
-                    self.chunk_meta[slot].as_ref().map(|(acc, off, len)| {
-                        let mut d = sim_chunk_digest(acc, *off, *len);
+                    self.chunk_meta[slot].pop_front().map(|(acc, off, len)| {
+                        let mut d = sim_chunk_digest(&acc, off, len);
                         if ev.corrupted {
                             // Silent in-flight corruption: the payload
                             // that arrived is not the payload that was

@@ -79,7 +79,7 @@
 //! binding check did. Per-slot generation counters cancel in-flight
 //! connects that raced a release.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::os::unix::io::AsRawFd;
@@ -129,6 +129,14 @@ const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// `poll(2)` timeout: bounds command-pickup latency while sockets are
 /// registered.
 const POLL_TIMEOUT_MS: i32 = 1;
+
+/// Default idle keep-alive deadline: a parked `Idle` connection that
+/// has not been re-armed within this window is closed by the reactor's
+/// reap sweep, so a long campaign does not hoard file descriptors
+/// against capped mirrors. The engine never notices — the next fetch
+/// on the slot simply redials under the same reservation, exactly like
+/// a server-side keep-alive drop.
+pub const IDLE_REAP_DEFAULT_S: f64 = 60.0;
 
 /// Cooperative shutdown flag shared by every reactor/connector thread.
 /// Tests use a clone to simulate the whole event loop dying mid-session
@@ -264,6 +272,21 @@ struct Conn {
     /// Reused request-build scratch: `arm_fetch` rewrites it in place,
     /// so re-arming a keep-alive connection allocates nothing.
     req_buf: Vec<u8>,
+    /// HTTP/1.1 pipelining: fetches queued behind the in-flight one on
+    /// this connection. Their request bytes are already serialized into
+    /// `pipe_buf`; their responses resolve FIFO — each head completion
+    /// (or drained error) binds the front of the queue as the next
+    /// expected response. Always empty at `--pipeline-depth 1`.
+    queue: VecDeque<Box<FetchSpec>>,
+    /// Serialized request bytes for `queue` not yet fully written to
+    /// the socket (`pipe_sent` marks the flushed prefix). Never
+    /// interleaved with `req_buf`: the flush only runs outside the
+    /// `Sending` state, after the head request is fully on the wire.
+    pipe_buf: Vec<u8>,
+    pipe_sent: usize,
+    /// When the connection last went `Idle` (keep-alive parking); the
+    /// reap sweep closes it after the idle deadline.
+    idle_since: Instant,
     /// Progress-deadline window start.
     window_start: Instant,
     /// Bytes (head + payload) received since `window_start`.
@@ -312,6 +335,12 @@ struct ReactorCtx {
     sink: Arc<Sink>,
     /// Per-chunk SHA-256 verification is on (`--verify`).
     hash: bool,
+    /// Max requests on the wire per connection (1 = no pipelining; the
+    /// enqueue route in `handle_fetch` is dead code at depth 1, so the
+    /// default is byte-identical to the pre-pipelining reactor).
+    pipeline_depth: usize,
+    /// Idle keep-alive deadline for the reap sweep (<= 0 disables).
+    idle_reap: Duration,
     /// Flight recorder for connection state transitions (`--trace-out`).
     trace: Option<WallTracer>,
 }
@@ -356,12 +385,18 @@ impl Reactor {
     /// slots across `mirror_count` mirrors, feeding payload bytes into
     /// `recorder`. `sink_cfg` shapes the write-behind disk stage
     /// (`threads == 0` keeps writes inline on the reactor threads).
+    /// `pipeline_depth` caps requests on the wire per connection
+    /// (1 = no pipelining); `idle_reap_s` closes keep-alive connections
+    /// parked longer than that many seconds (<= 0 disables the sweep).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         capacity: usize,
         mirror_count: usize,
         recorder: Arc<ThroughputRecorder>,
         progress: ProgressPolicy,
         sink_cfg: SinkConfig,
+        pipeline_depth: usize,
+        idle_reap_s: f64,
         trace: Option<WallTracer>,
     ) -> Result<Reactor> {
         let n_reactors = std::thread::available_parallelism()
@@ -416,6 +451,12 @@ impl Reactor {
                 progress,
                 sink: sink.clone(),
                 hash: sink_cfg.hash,
+                pipeline_depth: pipeline_depth.max(1),
+                idle_reap: if idle_reap_s > 0.0 {
+                    Duration::from_secs_f64(idle_reap_s)
+                } else {
+                    Duration::ZERO
+                },
                 trace: trace.clone(),
             };
             joins.push(
@@ -614,6 +655,7 @@ fn reactor_loop(ctx: ReactorCtx) {
     let mut poll_slots: Vec<usize> = Vec::new();
     let mut stalled: Vec<(usize, u64)> = Vec::new();
     let mut blocked: Vec<usize> = Vec::new();
+    let mut stale_idle: Vec<usize> = Vec::new();
     loop {
         if ctx.kill.is_killed() {
             return;
@@ -729,6 +771,25 @@ fn reactor_loop(ctx: ReactorCtx) {
                 });
             }
         }
+
+        // Idle reap: keep-alive connections parked past the deadline
+        // are closed silently — same semantics as the server dropping
+        // an idle keep-alive, so the slot's next fetch just redials
+        // under its existing reservation. Bounds the fds a long
+        // campaign parks against capped mirrors.
+        if ctx.idle_reap > Duration::ZERO {
+            stale_idle.clear();
+            for (&slot, st) in conns.iter() {
+                if let SlotState::Conn(c) = st {
+                    if matches!(c.st, HttpState::Idle) && c.idle_since.elapsed() >= ctx.idle_reap {
+                        stale_idle.push(slot);
+                    }
+                }
+            }
+            for slot in stale_idle.drain(..) {
+                conns.remove(&slot);
+            }
+        }
     }
 }
 
@@ -774,6 +835,10 @@ fn handle_cmd(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, cmd: Cmd)
                         pending: None,
                         sink_gen: 0,
                         req_buf: Vec::new(),
+                        queue: VecDeque::new(),
+                        pipe_buf: Vec::new(),
+                        pipe_sent: 0,
+                        idle_since: Instant::now(),
                         window_start: Instant::now(),
                         window_bytes: 0,
                         hasher: None,
@@ -795,6 +860,7 @@ fn handle_fetch(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: B
     let slot = spec.slot;
     enum Route {
         Reuse,
+        Enqueue,
         CloseAndDial,
         Dial,
         WhileConnecting,
@@ -805,6 +871,21 @@ fn handle_fetch(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: B
         {
             Route::Reuse
         }
+        // Pipelining: a fetch for the endpoint a busy connection is
+        // already talking to rides the same socket — its request goes
+        // on the wire now, its response is matched FIFO behind the
+        // in-flight one. Checked before CloseAndDial so a train
+        // extension can never tear down the connection carrying its
+        // own head. Dead route at depth 1 (the engine never issues a
+        // second fetch on an in-flight slot without pipelining).
+        Some(SlotState::Conn(c))
+            if ctx.pipeline_depth > 1
+                && c.spec.is_some()
+                && c.host == spec.host
+                && c.port == spec.port =>
+        {
+            Route::Enqueue
+        }
         Some(SlotState::Conn(_)) => Route::CloseAndDial,
         Some(SlotState::Connecting { .. }) => Route::WhileConnecting,
         None => Route::Dial,
@@ -813,6 +894,11 @@ fn handle_fetch(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, spec: B
         Route::Reuse => {
             if let Some(SlotState::Conn(c)) = conns.get_mut(&slot) {
                 arm_fetch(c, spec, ctx);
+            }
+        }
+        Route::Enqueue => {
+            if let Some(SlotState::Conn(c)) = conns.get_mut(&slot) {
+                enqueue_pipelined(c, spec, ctx);
             }
         }
         Route::CloseAndDial => {
@@ -877,21 +963,36 @@ fn settle(conns: &mut HashMap<usize, SlotState>, ctx: &ReactorCtx, slot: usize, 
 /// reused scratch — no file open, no allocation on the re-arm path.
 fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
     c.req_buf.clear();
-    c.req_buf.extend_from_slice(b"GET ");
-    c.req_buf.extend_from_slice(spec.path.as_bytes());
-    c.req_buf.extend_from_slice(b" HTTP/1.1\r\nHost: ");
-    c.req_buf.extend_from_slice(spec.host.as_bytes());
-    c.req_buf.push(b':');
-    write_decimal(&mut c.req_buf, u64::from(spec.port));
-    c.req_buf.extend_from_slice(b"\r\n");
+    build_request(&mut c.req_buf, &spec);
+    bind_response(c, spec, ctx);
+    c.st = HttpState::Sending { sent: 0 };
+    trace_conn(ctx, c.spec.as_deref(), "sending");
+}
+
+/// Serialize `spec`'s request line + headers onto `buf`.
+fn build_request(buf: &mut Vec<u8>, spec: &FetchSpec) {
+    buf.extend_from_slice(b"GET ");
+    buf.extend_from_slice(spec.path.as_bytes());
+    buf.extend_from_slice(b" HTTP/1.1\r\nHost: ");
+    buf.extend_from_slice(spec.host.as_bytes());
+    buf.push(b':');
+    write_decimal(buf, u64::from(spec.port));
+    buf.extend_from_slice(b"\r\n");
     if let Some((offset, len)) = spec.range() {
-        c.req_buf.extend_from_slice(b"Range: bytes=");
-        write_decimal(&mut c.req_buf, offset);
-        c.req_buf.push(b'-');
-        write_decimal(&mut c.req_buf, offset + len - 1);
-        c.req_buf.extend_from_slice(b"\r\n");
+        buf.extend_from_slice(b"Range: bytes=");
+        write_decimal(buf, offset);
+        buf.push(b'-');
+        write_decimal(buf, offset + len - 1);
+        buf.extend_from_slice(b"\r\n");
     }
-    c.req_buf.extend_from_slice(b"Connection: keep-alive\r\n\r\n");
+    buf.extend_from_slice(b"Connection: keep-alive\r\n\r\n");
+}
+
+/// Bind `spec` as the response the connection expects next: output
+/// handle, write cursor, sink generation, hasher, progress window. The
+/// caller sets the HTTP state (`Sending` for a fresh request,
+/// `Headers` when the request is already on the wire).
+fn bind_response(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
     c.out = spec.out.clone();
     c.write_off = spec.chunk.offset;
     c.pending = None;
@@ -905,10 +1006,39 @@ fn arm_fetch(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
         None
     };
     c.spec = Some(spec);
-    c.st = HttpState::Sending { sent: 0 };
-    trace_conn(ctx, c.spec.as_deref(), "sending");
     c.window_start = Instant::now();
     c.window_bytes = 0;
+}
+
+/// Pipeline a fetch behind the connection's in-flight request: its
+/// request bytes are serialized and (opportunistically) written now,
+/// its spec queued for FIFO response matching.
+fn enqueue_pipelined(c: &mut Conn, spec: Box<FetchSpec>, ctx: &ReactorCtx) {
+    build_request(&mut c.pipe_buf, &spec);
+    trace_conn(ctx, Some(&spec), "pipelined");
+    c.queue.push_back(spec);
+    // Never interleave with the head request still being written.
+    if !matches!(c.st, HttpState::Sending { .. }) {
+        flush_pipelined(c);
+    }
+}
+
+/// Write as much of the queued pipelined request bytes as the socket
+/// accepts. Hard write errors are left for the read path to surface
+/// (the state machine classifies them against the in-flight fetch).
+fn flush_pipelined(c: &mut Conn) {
+    while c.pipe_sent < c.pipe_buf.len() {
+        match c.stream.write(&c.pipe_buf[c.pipe_sent..]) {
+            Ok(0) => break,
+            Ok(n) => c.pipe_sent += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    if c.pipe_sent == c.pipe_buf.len() {
+        c.pipe_buf.clear();
+        c.pipe_sent = 0;
+    }
 }
 
 /// Append `v` in decimal ASCII without allocating.
@@ -1023,17 +1153,28 @@ fn flush_pending(c: &mut Conn, ctx: &ReactorCtx, last: bool) {
 /// sink writer sends the `Completed` ack after the final write lands;
 /// otherwise the reactor acks now.
 fn finish_chunk(c: &mut Conn, deferred: bool, ctx: &ReactorCtx) -> Fate {
-    trace_conn(ctx, c.spec.as_deref(), "idle");
-    c.out = None;
-    c.spec = None;
-    c.st = HttpState::Idle;
-    if deferred {
+    let fate = if deferred {
         // The sink writer acks (and carries the digest it streamed).
         c.hasher = None;
         Fate::Keep
     } else {
         Fate::Completed(c.hasher.take().map(|h| h.finalize()))
+    };
+    c.out = None;
+    if let Some(next) = c.queue.pop_front() {
+        // The next pipelined request is already on the wire: its
+        // response head is what this socket delivers next.
+        c.spec = None;
+        bind_response(c, next, ctx);
+        c.st = HttpState::Headers { head: Vec::new() };
+        trace_conn(ctx, c.spec.as_deref(), "headers");
+    } else {
+        trace_conn(ctx, c.spec.as_deref(), "idle");
+        c.spec = None;
+        c.st = HttpState::Idle;
+        c.idle_since = Instant::now();
     }
+    fate
 }
 
 /// Retry a `Blocked` connection's carried payload. Progress means a
@@ -1235,6 +1376,12 @@ fn begin_body(c: &mut Conn, head: &[u8], leftover: &[u8], ctx: &ReactorCtx) -> O
 /// Advance one connection's state machine until it would block.
 fn drive_conn(c: &mut Conn, scratch: &mut [u8], ctx: &ReactorCtx) -> Fate {
     loop {
+        // Push any queued pipelined request bytes that did not fit at
+        // enqueue time — but never before the head request is fully
+        // written, or the streams would interleave.
+        if !c.pipe_buf.is_empty() && !matches!(c.st, HttpState::Sending { .. }) {
+            flush_pipelined(c);
+        }
         let st = std::mem::replace(&mut c.st, HttpState::Idle);
         match st {
             HttpState::Idle => {
@@ -1376,11 +1523,22 @@ fn drive_conn(c: &mut Conn, scratch: &mut [u8], ctx: &ReactorCtx) -> Fate {
                 error,
             } => {
                 if remaining == 0 {
-                    trace_conn(ctx, c.spec.as_deref(), "idle");
                     c.out = None;
                     c.pending = None;
-                    c.spec = None;
-                    c.st = HttpState::Idle;
+                    if let Some(next) = c.queue.pop_front() {
+                        // The drained error consumed one FIFO response;
+                        // the next pipelined request's response follows
+                        // on the same socket.
+                        c.spec = None;
+                        bind_response(c, next, ctx);
+                        c.st = HttpState::Headers { head: Vec::new() };
+                        trace_conn(ctx, c.spec.as_deref(), "headers");
+                    } else {
+                        trace_conn(ctx, c.spec.as_deref(), "idle");
+                        c.spec = None;
+                        c.st = HttpState::Idle;
+                        c.idle_since = Instant::now();
+                    }
                     return Fate::FailKeep(class, error);
                 }
                 let want = scratch.len().min(remaining as usize);
@@ -1442,6 +1600,7 @@ mod tests {
             offset: 0,
             len: 100,
             cold: true,
+            train: false,
         };
         let spec = FetchSpec {
             slot: 0,
@@ -1461,6 +1620,7 @@ mod tests {
                 offset: 50,
                 len: 50,
                 cold: false,
+                train: false,
             },
             ..spec
         };
@@ -1524,6 +1684,8 @@ mod tests {
             },
             sink: Arc::new(sink),
             hash: false,
+            pipeline_depth: 1,
+            idle_reap: Duration::from_secs_f64(IDLE_REAP_DEFAULT_S),
             trace: None,
         };
         let mut c = Conn {
@@ -1541,6 +1703,10 @@ mod tests {
             pending: None,
             sink_gen: 0,
             req_buf: Vec::new(),
+            queue: VecDeque::new(),
+            pipe_buf: Vec::new(),
+            pipe_sent: 0,
+            idle_since: Instant::now(),
             window_start: Instant::now(),
             window_bytes: 0,
             hasher: None,
@@ -1553,5 +1719,113 @@ mod tests {
         assert!(matches!(fate, Fate::Keep));
         assert!(matches!(c.st, HttpState::Drain { .. }));
         assert_eq!(c.window_bytes, 0, "drain bytes must not count as progress");
+    }
+
+    #[test]
+    fn completed_head_binds_next_pipelined_response() {
+        // A pipelined connection whose head finishes must flip straight
+        // to `Headers` for the queued spec — the next response on the
+        // socket belongs to it, not to an idle keep-alive.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+
+        let (_cmd_tx, cmd_rx) = channel::<Cmd>();
+        let (events_tx, _events_rx) = channel::<TransportEvent>();
+        let mut joins = Vec::new();
+        let sink = Sink::spawn(
+            SinkConfig {
+                threads: 0,
+                ..SinkConfig::default()
+            },
+            events_tx.clone(),
+            Arc::new(ThroughputRecorder::new()),
+            KillSwitch::default(),
+            None,
+            &mut joins,
+        )
+        .unwrap();
+        let ctx = ReactorCtx {
+            cmd_rx,
+            connector_tx: Vec::new(),
+            events_tx,
+            kill: KillSwitch::default(),
+            gens: Arc::new(Vec::new()),
+            mirror_open: Arc::new(vec![AtomicUsize::new(0)]),
+            recorder: Arc::new(ThroughputRecorder::new()),
+            progress: ProgressPolicy {
+                window_s: 30.0,
+                min_bytes: 1,
+            },
+            sink: Arc::new(sink),
+            hash: false,
+            pipeline_depth: 4,
+            idle_reap: Duration::from_secs_f64(IDLE_REAP_DEFAULT_S),
+            trace: None,
+        };
+        let head = FetchSpec {
+            slot: 0,
+            host: "127.0.0.1".into(),
+            port: addr.port(),
+            path: "/a".into(),
+            out: None,
+            chunk: Chunk {
+                file: 0,
+                index: 0,
+                offset: 0,
+                len: 4,
+                cold: true,
+                train: true,
+            },
+            total_bytes: 4,
+            mirror: 0,
+        };
+        let next = FetchSpec {
+            slot: 0,
+            host: "127.0.0.1".into(),
+            port: addr.port(),
+            path: "/b".into(),
+            out: None,
+            chunk: Chunk {
+                file: 1,
+                index: 0,
+                offset: 0,
+                len: 8,
+                cold: true,
+                train: true,
+            },
+            total_bytes: 8,
+            mirror: 0,
+        };
+        let mut c = Conn {
+            stream,
+            host: "127.0.0.1".into(),
+            port: addr.port(),
+            st: HttpState::Body { remaining: 4 },
+            spec: Some(Box::new(head)),
+            out: None,
+            write_off: 0,
+            pending: None,
+            sink_gen: 0,
+            req_buf: Vec::new(),
+            queue: VecDeque::from([Box::new(next)]),
+            pipe_buf: Vec::new(),
+            pipe_sent: 0,
+            idle_since: Instant::now(),
+            window_start: Instant::now(),
+            window_bytes: 0,
+            hasher: None,
+        };
+        peer.write_all(b"DATA").unwrap();
+        peer.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let mut scratch = vec![0u8; SCRATCH_BYTES];
+        let fate = drive_conn(&mut c, &mut scratch, &ctx);
+        assert!(matches!(fate, Fate::Completed(None)));
+        assert!(matches!(c.st, HttpState::Headers { .. }));
+        assert_eq!(c.spec.as_ref().unwrap().path, "/b");
+        assert!(c.queue.is_empty());
     }
 }

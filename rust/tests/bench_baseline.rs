@@ -83,7 +83,7 @@ fn committed_smoke_baseline_stays_consistent() {
 #[ignore = "explicitly refreshes the committed baseline file"]
 fn refresh_committed_smoke_baseline() {
     let mut report = run_smoke();
-    assert_eq!(report.cases.len(), 6, "smoke suite changed shape");
+    assert_eq!(report.cases.len(), 7, "smoke suite changed shape");
     for case in &mut report.cases {
         case.wall_s = 0.0;
         case.ns_per_tick = 0.0;

@@ -1,0 +1,93 @@
+//! Directional campaign-mode performance tests: one pipelined
+//! many-file engine session over the many-small preset must deliver at
+//! least 2x the files/sec of the classic workflow — N sequential
+//! single-file sessions — under both a benign network and the
+//! slowmirror fault profile. Runtime-free (virtual clock); these pin
+//! the headline claim of campaign mode, so a regression here means the
+//! train scheduler or the pipelining path stopped paying for itself.
+
+use fastbiodl::experiments::scenario::{self, Scenario};
+use fastbiodl::netsim::FaultProfile;
+use fastbiodl::optimizer::build_controller_with;
+use fastbiodl::session::sim::{SimSession, SimSessionParams, ToolBehavior};
+use fastbiodl::session::SessionReport;
+
+/// Generous virtual cap: the benign campaign finishes in well under a
+/// minute; even the hostile sequential baseline stays far below this.
+const HORIZON_S: f64 = 3_600.0;
+
+fn scenario_for(profile: FaultProfile, seed: u64) -> Scenario {
+    let mut sc = scenario::campaign("many-small", seed).unwrap();
+    if profile != FaultProfile::None {
+        sc = sc.with_fault_profile(profile, seed, HORIZON_S);
+    }
+    sc
+}
+
+fn run_one(sc: Scenario, seed: u64) -> SessionReport {
+    let controller =
+        build_controller_with(&sc.download.optimizer, &sc.download.control, None).unwrap();
+    let behavior = ToolBehavior::fastbiodl(&sc.download);
+    SimSession::new(SimSessionParams {
+        download: sc.download,
+        behavior,
+        netsim: sc.netsim,
+        records: sc.records,
+        controller,
+        runtime: None,
+        seed,
+    })
+    .with_checkpoint_after(HORIZON_S)
+    .run()
+    .unwrap()
+}
+
+/// Campaign engine: one session, small-file trains, pipelined requests.
+fn campaign_files_per_sec(profile: FaultProfile, seed: u64) -> f64 {
+    let sc = scenario_for(profile, seed);
+    let n = sc.records.len();
+    let rep = run_one(sc, seed);
+    assert!(rep.completed, "campaign run must finish under {profile:?}");
+    assert_eq!(rep.files_completed, n, "campaign must complete every file");
+    assert!(rep.duration_s > 0.0);
+    n as f64 / rep.duration_s
+}
+
+/// Baseline: the same manifest fetched one accession at a time, each
+/// in its own fresh session with campaign mode off and no pipelining —
+/// the shape of a shell loop over a classic single-file downloader.
+fn sequential_files_per_sec(profile: FaultProfile, seed: u64) -> f64 {
+    let manifest = scenario_for(profile, seed).records;
+    let mut total_s = 0.0;
+    for (i, rec) in manifest.iter().enumerate() {
+        let mut one = scenario_for(profile, seed);
+        one.download.campaign = false;
+        one.download.pipeline_depth = 1;
+        one.records = vec![rec.clone()];
+        let rep = run_one(one, seed.wrapping_add(i as u64));
+        assert!(rep.completed, "sequential file {i} must finish");
+        total_s += rep.duration_s;
+    }
+    assert!(total_s > 0.0);
+    manifest.len() as f64 / total_s
+}
+
+fn assert_at_least_2x(profile: FaultProfile, seed: u64) {
+    let camp = campaign_files_per_sec(profile, seed);
+    let seq = sequential_files_per_sec(profile, seed);
+    assert!(
+        camp >= 2.0 * seq,
+        "{profile:?}: campaign {camp:.3} files/sec is below 2x the \
+         sequential baseline {seq:.3} files/sec"
+    );
+}
+
+#[test]
+fn campaign_at_least_doubles_files_per_sec_on_benign_network() {
+    assert_at_least_2x(FaultProfile::None, 7);
+}
+
+#[test]
+fn campaign_at_least_doubles_files_per_sec_under_slowmirror() {
+    assert_at_least_2x(FaultProfile::SlowMirror, 7);
+}

@@ -145,6 +145,7 @@ pub fn run_real_with_sink_cfg(
             min_bytes: cfg.progress_min_bytes,
         },
         sink_cfg,
+        1,
         None,
     )?;
     transport.set_output_handles(handles);

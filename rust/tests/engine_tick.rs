@@ -230,6 +230,7 @@ fn batched_reconciliation_improves_ns_per_tick_at_c_max_256() {
         c_max: 256,
         verify: false,
         trace: false,
+        campaign: false,
     };
     let batched = run_case(&spec, 11, ReconcileMode::Batched).unwrap();
     let full = run_case(&spec, 11, ReconcileMode::FullScan).unwrap();
@@ -286,6 +287,7 @@ fn batched_steady_state_tick_is_nearly_allocation_free() {
         c_max: 64,
         verify: false,
         trace: false,
+        campaign: false,
     };
     let case = run_case(&spec, 5, ReconcileMode::Batched).unwrap();
     assert!(case.ticks > 200, "too few ticks to average: {}", case.ticks);
@@ -311,6 +313,7 @@ fn traced_steady_state_records_events_without_allocating() {
         c_max: 64,
         verify: false,
         trace,
+        campaign: false,
     };
     let plain = run_case(&spec(false), 5, ReconcileMode::Batched).unwrap();
     let traced = run_case(&spec(true), 5, ReconcileMode::Batched).unwrap();

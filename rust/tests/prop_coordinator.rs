@@ -110,6 +110,121 @@ fn chunked_scheduler_tiles_exactly_under_chaos() {
 }
 
 #[test]
+fn campaign_scheduler_tiles_exactly_and_flags_trains() {
+    check(
+        cfg(),
+        "campaign tiling + train flags under random interleaving",
+        |g| {
+            let n_files = g.range_u64(1, 14) as usize;
+            // Mix of tiny (train candidates) and large (chunked) files
+            // so random coalesce thresholds cut through the middle.
+            let sizes: Vec<u64> = (0..n_files)
+                .map(|_| {
+                    if g.below(2) == 0 {
+                        g.range_u64(0, 300)
+                    } else {
+                        g.range_u64(1_000, 6_000)
+                    }
+                })
+                .collect();
+            let chunk = g.range_u64(64, 1_024);
+            let coalesce = g.range_u64(0, 1_500);
+            let open = g.range_u64(1, 5) as usize;
+            (sizes, chunk, coalesce, open, g.next_u64())
+        },
+        |(sizes, chunk, coalesce, open, seed)| {
+            let recs = records(sizes);
+            let mut sched = ChunkScheduler::new(
+                &recs,
+                SchedulerMode::Campaign {
+                    chunk_bytes: *chunk,
+                    max_open_files: *open,
+                    coalesce_bytes: *coalesce,
+                },
+            );
+            let mut rng = Prng::new(*seed);
+            // Like `drive`, but also pulling through the train path the
+            // way the engine's pipelining extension pass does, so both
+            // issue paths interleave with completions and failures.
+            let mut outstanding: Vec<Chunk> = Vec::new();
+            let mut completed: Vec<Chunk> = Vec::new();
+            let mut steps = 0usize;
+            while !sched.all_done() {
+                steps += 1;
+                if steps > 1_000_000 {
+                    return Err("scheduler did not terminate".into());
+                }
+                let action = rng.below(12);
+                if action < 4 {
+                    if let Some(c) = sched.next_chunk() {
+                        outstanding.push(c);
+                    }
+                } else if action < 6 {
+                    if let Some(c) = sched.next_train_chunk() {
+                        if !c.train {
+                            return Err(format!("next_train_chunk gave non-train {c:?}"));
+                        }
+                        outstanding.push(c);
+                    }
+                } else if action < 11 {
+                    if !outstanding.is_empty() {
+                        let i = rng.below(outstanding.len() as u64) as usize;
+                        let c = outstanding.swap_remove(i);
+                        sched.chunk_done(&c);
+                        completed.push(c);
+                    }
+                } else if !outstanding.is_empty() {
+                    let i = rng.below(outstanding.len() as u64) as usize;
+                    let c = outstanding.swap_remove(i);
+                    sched.chunk_failed(c);
+                }
+            }
+            // Every file's completed chunks tile [0, size) exactly once.
+            for (i, &size) in sizes.iter().enumerate() {
+                let mut spans: Vec<(u64, u64)> = completed
+                    .iter()
+                    .filter(|c| c.file == i)
+                    .map(|c| (c.offset, c.len))
+                    .collect();
+                spans.sort_unstable();
+                let mut cursor = 0u64;
+                for (off, len) in &spans {
+                    if *off != cursor {
+                        return Err(format!(
+                            "file {i}: gap/overlap at {off} (expected {cursor})"
+                        ));
+                    }
+                    cursor = off + len;
+                }
+                if cursor != size {
+                    return Err(format!("file {i}: tiled {cursor} of {size} bytes"));
+                }
+            }
+            // Train flags split exactly at the coalesce threshold:
+            // small files arrive as single whole-file train chunks,
+            // large ones as plain chunked work.
+            for c in &completed {
+                let small = sizes[c.file] <= *coalesce;
+                if c.train != small {
+                    return Err(format!(
+                        "file {} ({} B, coalesce {coalesce}): train={}",
+                        c.file, sizes[c.file], c.train
+                    ));
+                }
+                if c.train && (c.offset != 0 || c.len != sizes[c.file]) {
+                    return Err(format!("partial train chunk {c:?}"));
+                }
+            }
+            let (done, total) = sched.progress();
+            if done != total {
+                return Err(format!("progress {done}/{total} at completion"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn whole_file_scheduler_is_one_chunk_per_file() {
     check(
         cfg(),

@@ -197,16 +197,32 @@ fn run_verified(
     manifest: Option<ManifestSet>,
     journal_dir: Option<std::path::PathBuf>,
     checkpoint_s: Option<f64>,
+    campaign: bool,
 ) -> Result<SessionReport, String> {
     let mut cfg = fault_download_cfg(OptimizerKind::GradientDescent, 1_200.0);
     cfg.integrity.verify = true;
+    // Campaign runs pipeline small-file trains; coalesce at one chunk
+    // so every train file sits on a single-chunk grid and the manifest
+    // byte accounting below stays exact (whole-file verification is
+    // then the same thing as chunk verification).
+    let mode = if campaign {
+        cfg.campaign = true;
+        cfg.pipeline_depth = 4;
+        SchedulerMode::Campaign {
+            chunk_bytes: cfg.chunk_bytes,
+            max_open_files: cfg.max_open_files,
+            coalesce_bytes: CHUNK_BYTES,
+        }
+    } else {
+        SchedulerMode::Chunked {
+            chunk_bytes: cfg.chunk_bytes,
+            max_open_files: cfg.max_open_files,
+        }
+    };
     let controller = build_controller(&cfg.optimizer, None).map_err(|e| e.to_string())?;
     let behavior = ToolBehavior {
         name: "integrity-prop".into(),
-        mode: SchedulerMode::Chunked {
-            chunk_bytes: cfg.chunk_bytes,
-            max_open_files: cfg.max_open_files,
-        },
+        mode,
         keep_alive: true,
         resolution: ResolutionCost::Batch { latency_s: 0.5 },
     };
@@ -290,6 +306,78 @@ fn assert_completion(rep: &SessionReport, sizes: &[u64], resumed: u64) -> Result
     Ok(())
 }
 
+/// Shared body of the resume-equivalence properties: verified phase 1
+/// interrupted at a checkpoint, random post-crash bit damage, verified
+/// resume from the manifest alone — must converge to the exact end
+/// state of an uninterrupted verified download.
+fn resume_converges(
+    sizes: &[u64],
+    sched_seed: u64,
+    sim_seed: u64,
+    checkpoint_s: f64,
+    damage_mask: u64,
+    campaign: bool,
+) -> Result<(), String> {
+    let faults = integrity_schedule(&mut Prng::new(sched_seed));
+    faults.validate()?;
+    let dir = std::env::temp_dir().join(format!(
+        "fbdl-prop-resume-{}-{}{sim_seed:x}",
+        std::process::id(),
+        if campaign { "c" } else { "" }
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let first = run_verified(
+        faults.clone(),
+        sizes,
+        sim_seed,
+        None,
+        Some(dir.clone()),
+        Some(checkpoint_s),
+        campaign,
+    )?;
+    if first.completed {
+        assert_completion(&first, sizes, 0)?;
+        assert_fully_verified(&dir, sizes)?;
+        std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
+        return Ok(());
+    }
+    // Crash state: the persisted manifest knows which chunks
+    // were verified. Damage a random subset of them — the sim
+    // analogue of delta_scan discovering truncated/corrupt
+    // data under the journal frontier.
+    let mut ms = ManifestSet::load(&dir)
+        .map_err(|e| e.to_string())?
+        .ok_or("checkpoint persisted no manifest")?;
+    for i in 0..sizes.len() {
+        let m = ms
+            .get_mut(&format!("SRRI{i:04}"))
+            .ok_or_else(|| format!("file {i} missing from checkpoint manifest"))?;
+        for idx in 0..m.chunk_count() {
+            if m.is_available(idx) && (damage_mask >> (idx % 64)) & 1 == 1 {
+                m.set_available(idx, false);
+            }
+        }
+    }
+    let resumed: u64 = (0..sizes.len())
+        .map(|i| ms.get(&format!("SRRI{i:04}")).unwrap().verified_bytes())
+        .sum();
+    // Resume from the (damaged) manifest; only unverified
+    // chunks may be scheduled.
+    let second = run_verified(
+        faults.clone(),
+        sizes,
+        sim_seed.wrapping_add(1),
+        Some(ms),
+        Some(dir.clone()),
+        None,
+        campaign,
+    )?;
+    assert_completion(&second, sizes, resumed)?;
+    assert_fully_verified(&dir, sizes)?;
+    std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
 #[test]
 fn verified_resume_converges_like_a_fresh_download_under_random_faults() {
     // Phase 1 runs with verification under a random corruption-heavy
@@ -319,61 +407,54 @@ fn verified_resume_converges_like_a_fresh_download_under_random_faults() {
             (sizes, sched_seed, sim_seed, checkpoint_s, damage_mask)
         },
         |(sizes, sched_seed, sim_seed, checkpoint_s, damage_mask)| {
-            let faults = integrity_schedule(&mut Prng::new(*sched_seed));
-            faults.validate()?;
-            let dir = std::env::temp_dir().join(format!(
-                "fbdl-prop-resume-{}-{sim_seed:x}",
-                std::process::id()
-            ));
-            let _ = std::fs::remove_dir_all(&dir);
-            let first = run_verified(
-                faults.clone(),
+            resume_converges(
                 sizes,
+                *sched_seed,
                 *sim_seed,
-                None,
-                Some(dir.clone()),
-                Some(*checkpoint_s),
-            )?;
-            if first.completed {
-                assert_completion(&first, sizes, 0)?;
-                assert_fully_verified(&dir, sizes)?;
-                std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
-                return Ok(());
-            }
-            // Crash state: the persisted manifest knows which chunks
-            // were verified. Damage a random subset of them — the sim
-            // analogue of delta_scan discovering truncated/corrupt
-            // data under the journal frontier.
-            let mut ms = ManifestSet::load(&dir)
-                .map_err(|e| e.to_string())?
-                .ok_or("checkpoint persisted no manifest")?;
-            for i in 0..sizes.len() {
-                let m = ms
-                    .get_mut(&format!("SRRI{i:04}"))
-                    .ok_or_else(|| format!("file {i} missing from checkpoint manifest"))?;
-                for idx in 0..m.chunk_count() {
-                    if m.is_available(idx) && (damage_mask >> (idx % 64)) & 1 == 1 {
-                        m.set_available(idx, false);
-                    }
-                }
-            }
-            let resumed: u64 = (0..sizes.len())
-                .map(|i| ms.get(&format!("SRRI{i:04}")).unwrap().verified_bytes())
-                .sum();
-            // Resume from the (damaged) manifest; only unverified
-            // chunks may be scheduled.
-            let second = run_verified(
-                faults.clone(),
+                *checkpoint_s,
+                *damage_mask,
+                false,
+            )
+        },
+    );
+}
+
+#[test]
+fn campaign_resume_converges_like_a_fresh_download_under_random_faults() {
+    // Same equivalence, but in Campaign mode with pipelined trains: a
+    // random mix of sub-coalesce train files (each a single-chunk grid)
+    // and one chunked large file, interrupted mid-campaign and resumed
+    // from the persisted manifest under the same fault schedule class.
+    // Mid-train failures (reset collapses the train, corruption
+    // promotes past the bad response) must never break the exactly-once
+    // accounting or leave an unverified chunk behind.
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        "campaign resume == fresh campaign",
+        |g| {
+            let n_small = g.range_u64(2, 6) as usize;
+            let mut sizes: Vec<u64> = (0..n_small)
+                .map(|_| g.range_u64(10_000, 1_000_000))
+                .collect();
+            sizes.push(g.range_u64(2_000_000, 6_000_000));
+            let sched_seed = g.next_u64();
+            let sim_seed = g.next_u64();
+            let checkpoint_s = g.range_f64(2.0, 12.0);
+            let damage_mask = g.next_u64();
+            (sizes, sched_seed, sim_seed, checkpoint_s, damage_mask)
+        },
+        |(sizes, sched_seed, sim_seed, checkpoint_s, damage_mask)| {
+            resume_converges(
                 sizes,
-                sim_seed.wrapping_add(1),
-                Some(ms),
-                Some(dir.clone()),
-                None,
-            )?;
-            assert_completion(&second, sizes, resumed)?;
-            assert_fully_verified(&dir, sizes)?;
-            std::fs::remove_dir_all(&dir).map_err(|e| e.to_string())?;
-            Ok(())
+                *sched_seed,
+                *sim_seed,
+                *checkpoint_s,
+                *damage_mask,
+                true,
+            )
         },
     );
 }

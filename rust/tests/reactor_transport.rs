@@ -194,6 +194,7 @@ fn dead_reactor_pool_fails_the_session_instead_of_hanging() {
             min_bytes: 0,
         },
         SinkConfig::default(),
+        1,
         None,
     )
     .unwrap();
